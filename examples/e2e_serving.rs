@@ -1,0 +1,122 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end validation).
+//!
+//! Proves all three layers compose on a real small workload:
+//!   L1/L2  JAX+Pallas artifacts (fw_step / eig_topd / project), AOT-
+//!          lowered by `make artifacts`, executed from rust via PJRT
+//!          during projection training and database projection;
+//!   L3     the rust coordinator serving batched requests over the
+//!          Vamana + LVQ search-and-rerank index.
+//!
+//! Workload: a synthetic rqa-768-style question-answering dataset
+//! (OOD queries), 20k x 768 by default. Reports build breakdown,
+//! QPS / p50 / p99 latency and recall@10; the run is recorded in
+//! EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Flags: --n N --queries Q --workers W --no-pjrt
+
+use leanvec::config::{Compression, ProjectionKind};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QueryProjectorKind};
+use leanvec::data::gt::ground_truth;
+use leanvec::data::synth::{generate, SynthSpec};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use leanvec::leanvec::model::TrainBackends;
+use leanvec::runtime::{default_artifacts_dir, PjrtFwStepper, PjrtProjector, PjrtTopd};
+use leanvec::util::cli::Args;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let n = args.usize("n", 20_000);
+    let n_queries = args.usize("queries", 4_000);
+    let workers = args.usize("workers", 0);
+    let use_pjrt = !args.switch("no-pjrt");
+    let k = 10;
+
+    // ---- dataset: rqa-768-style OOD (question vs answer encoders)
+    let mut spec = SynthSpec::ood("rqa-768-e2e", 768, n, 1_000);
+    spec.seed = 0xE2E;
+    let ds = generate(&spec);
+    println!(
+        "[e2e] dataset {}: {} x {} ({}), OOD queries",
+        ds.name,
+        ds.database.len(),
+        ds.dim,
+        ds.similarity.name()
+    );
+
+    // ---- build through the PJRT artifacts (L1+L2 on the build path)
+    let mut builder = IndexBuilder::new()
+        .projection(ProjectionKind::OodEigSearch)
+        .target_dim(160)
+        .primary(Compression::Lvq8)
+        .secondary(Compression::F16);
+    let mut pjrt_used = false;
+    if use_pjrt {
+        match leanvec::runtime::executor::open_shared(&default_artifacts_dir()) {
+            Ok(rt) => {
+                builder = builder
+                    .backends(TrainBackends {
+                        fw: Box::new(PjrtFwStepper::new(rt.clone())),
+                        topd: Box::new(PjrtTopd::new(rt.clone())),
+                    })
+                    .projector(Box::new(PjrtProjector::new(rt)));
+                pjrt_used = true;
+                println!("[e2e] training + projection through PJRT artifacts");
+            }
+            Err(e) => println!("[e2e] PJRT unavailable ({e}); native build path"),
+        }
+    }
+    let t_build = std::time::Instant::now();
+    let index = Arc::new(builder.build(&ds.database, Some(&ds.learn_queries), ds.similarity));
+    let b = index.build_breakdown;
+    println!(
+        "[e2e] built in {:.1}s: train {:.1}s | project {:.1}s | quantize {:.1}s | graph {:.1}s",
+        t_build.elapsed().as_secs_f64(),
+        b.train_seconds,
+        b.project_seconds,
+        b.quantize_seconds,
+        b.graph_seconds
+    );
+    println!(
+        "[e2e] primary: {} B/vec -> {:.1}x compression vs FP16 full-D (paper: 9.6x at 768->160)",
+        index.primary.bytes_per_vector(),
+        index.primary_compression_vs_fp16()
+    );
+
+    // ---- ground truth for the test queries
+    println!("[e2e] computing exact ground truth...");
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+
+    // ---- serve a batched workload through the coordinator
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
+        .collect();
+    let truth_rep: Vec<Vec<u32>> = (0..n_queries)
+        .map(|i| truth[i % truth.len()].clone())
+        .collect();
+    let cfg = EngineConfig {
+        workers: if workers == 0 { 1 } else { workers },
+        batch: BatchPolicy {
+            max_batch: 64,
+            max_wait: std::time::Duration::from_micros(300),
+        },
+        search: SearchParams {
+            window: 60,
+            rerank_window: 60,
+        },
+        projector: QueryProjectorKind::Native,
+    };
+    println!("[e2e] serving {n_queries} requests...");
+    let (_responses, report) =
+        Engine::run_workload(Arc::clone(&index), cfg, &queries, k, Some(&truth_rep));
+    println!("[e2e] {}", report.metrics);
+    println!("[e2e] recall@{k} = {:.3}", report.recall_at_k);
+    println!(
+        "[e2e] layers composed: artifacts({}) -> index -> coordinator OK",
+        if pjrt_used { "pjrt" } else { "native-fallback" }
+    );
+    anyhow::ensure!(report.recall_at_k > 0.8, "e2e recall too low");
+    Ok(())
+}

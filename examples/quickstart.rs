@@ -1,0 +1,58 @@
+//! Quickstart: build a LeanVec index over a synthetic OOD dataset,
+//! search it, and print recall — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use leanvec::config::{Compression, ProjectionKind};
+use leanvec::data::gt::{ground_truth, recall_at_k};
+use leanvec::data::synth::{generate, SynthSpec};
+use leanvec::index::builder::IndexBuilder;
+
+fn main() {
+    // 1. A synthetic cross-modal-style dataset: 5k database vectors in
+    //    256 dims, out-of-distribution queries (text-vs-image style).
+    let ds = generate(&SynthSpec::ood("quickstart", 256, 5_000, 200));
+    println!(
+        "dataset: {} vectors x {} dims, {} learn + {} test queries ({})",
+        ds.database.len(),
+        ds.dim,
+        ds.learn_queries.len(),
+        ds.test_queries.len(),
+        ds.similarity.name()
+    );
+
+    // 2. Build: LeanVec-OOD projection 256 -> 96, LVQ8 primaries for
+    //    graph traversal, FP16 secondaries for re-ranking.
+    let index = IndexBuilder::new()
+        .projection(ProjectionKind::OodEigSearch)
+        .target_dim(96)
+        .primary(Compression::Lvq8)
+        .secondary(Compression::F16)
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+    let b = index.build_breakdown;
+    println!(
+        "built in {:.2}s (train {:.2}s, graph {:.2}s); primary {} B/vec = {:.1}x vs FP16",
+        b.total(),
+        b.train_seconds,
+        b.graph_seconds,
+        index.primary.bytes_per_vector(),
+        index.primary_compression_vs_fp16()
+    );
+
+    // 3. Search with re-ranking and measure recall against brute force.
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let got: Vec<Vec<u32>> = ds
+        .test_queries
+        .iter()
+        .map(|q| index.search(q, k, 60).0)
+        .collect();
+    let recall = recall_at_k(&got, &truth, k);
+    println!("recall@{k} = {recall:.3} at search window 60");
+    assert!(recall > 0.8, "quickstart recall unexpectedly low: {recall}");
+
+    // 4. One query end to end.
+    let (ids, scores) = index.search(&ds.test_queries[0], 5, 60);
+    println!("top-5 for query 0: {ids:?}");
+    println!("scores:           {scores:?}");
+}

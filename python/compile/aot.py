@@ -1,0 +1,181 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the rust runtime.
+
+Run once at build time (`make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one `<name>.hlo.txt` per (computation, shape) pair plus
+`manifest.json` describing inputs/outputs so the rust runtime
+(rust/src/runtime/) can pick the right artifact and build literals.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` crate) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (D, d) projection shapes lowered by default. These cover the synthetic
+# stand-ins for the paper's datasets (Table 1): rqa-768, open-images-512 /
+# wit-512, deep-256, t2i-200.
+DEFAULT_SHAPES = [(768, 160), (512, 128), (256, 96), (200, 128)]
+PROJECT_DB_BATCH = 1024  # columns per database-projection dispatch
+PROJECT_Q_BATCH = 64  # columns per query-projection dispatch
+SCORE_BLOCK = 1024  # candidates per scoring dispatch
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dt(dtype):
+    return {"float32": "f32", "uint8": "u8"}[jnp.dtype(dtype).name]
+
+
+def _io_entry(spec):
+    return {"shape": list(spec.shape), "dtype": _dt(spec.dtype)}
+
+
+def build_plan(shapes):
+    """Yield (name, fn, arg_specs, meta) for every artifact to lower."""
+    for D, d in shapes:
+        dd = _spec((d, D))
+        DD = _spec((D, D))
+        one = _spec((1,))
+
+        def fw(a, b, kq, kx, gamma):
+            return model.fw_step(a, b, kq, kx, gamma[0])
+
+        yield (
+            f"fw_step_D{D}_d{d}",
+            fw,
+            [dd, dd, DD, DD, one],
+            {"fn": "fw_step", "D": D, "d": d},
+        )
+
+        def fw_xla(a, b, kq, kx, gamma):
+            return model.fw_step_xla(a, b, kq, kx, gamma[0])
+
+        # Same math, jnp.dot lowering: XLA-CPU fuses it, so this is the
+        # variant the rust runtime prefers on this testbed (the pallas
+        # variant is the TPU kernel; interpret-mode HLO is slow on CPU).
+        yield (
+            f"fw_step_xla_D{D}_d{d}",
+            fw_xla,
+            [dd, dd, DD, DD, one],
+            {"fn": "fw_step_xla", "D": D, "d": d},
+        )
+
+        def eig(k, v0):
+            return (model.eig_topd(k, v0),)
+
+        yield (
+            f"eig_topd_D{D}_d{d}",
+            eig,
+            [DD, _spec((D, d))],
+            {"fn": "eig_topd", "D": D, "d": d},
+        )
+
+        def eig_xla(k, v0):
+            return (model.eig_topd_xla(k, v0),)
+
+        yield (
+            f"eig_topd_xla_D{D}_d{d}",
+            eig_xla,
+            [DD, _spec((D, d))],
+            {"fn": "eig_topd_xla", "D": D, "d": d},
+        )
+
+        def proj(p, x):
+            return (model.project(p, x),)
+
+        yield (
+            f"project_db_D{D}_d{d}",
+            proj,
+            [dd, _spec((D, PROJECT_DB_BATCH))],
+            {"fn": "project", "D": D, "d": d, "batch": PROJECT_DB_BATCH},
+        )
+        yield (
+            f"project_q_D{D}_d{d}",
+            proj,
+            [dd, _spec((D, PROJECT_Q_BATCH))],
+            {"fn": "project", "D": D, "d": d, "batch": PROJECT_Q_BATCH},
+        )
+
+        def score(codes, delta, lo, q, qstats):
+            return (model.score_batch(codes, delta, lo, q, qstats),)
+
+        yield (
+            f"score_D{D}_d{d}",
+            score,
+            [
+                _spec((SCORE_BLOCK, d), jnp.uint8),
+                _spec((SCORE_BLOCK,)),
+                _spec((SCORE_BLOCK,)),
+                _spec((d, 1)),
+                _spec((2,)),
+            ],
+            {"fn": "score_batch", "D": D, "d": d, "batch": SCORE_BLOCK},
+        )
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument(
+        "--shapes",
+        default=",".join(f"{D}x{d}" for D, d in DEFAULT_SHAPES),
+        help="comma-separated DxD_low pairs, e.g. 768x160,512x128",
+    )
+    args = parser.parse_args()
+
+    shapes = []
+    for tok in args.shapes.split(","):
+        D, d = tok.lower().split("x")
+        shapes.append((int(D), int(d)))
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for name, fn, specs, meta in build_plan(shapes):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [_io_entry(s) for s in specs],
+            "outputs": [_io_entry(s) for s in out_specs],
+        }
+        entry.update(meta)
+        manifest["artifacts"].append(entry)
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

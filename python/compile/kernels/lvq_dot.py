@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: fused LVQ dequantization + batched inner product.
+
+This is the paper's search hot-spot (Section 2, Eq. 1): scoring a block of
+LVQ-compressed database vectors against one projected query. LVQ stores,
+per database vector i, a u8/u4 code vector c_i plus two scalars
+(delta_i, lo_i) such that
+
+    x_i  ~  mu + c_i * delta_i + lo_i          (componentwise)
+
+so the inner product factorizes into a single u8xf32 dot plus two scalar
+fixups (the trick that makes LVQ fast on any hardware):
+
+    <q, x_i>  ~  delta_i * <q, c_i>  +  lo_i * sum(q)  +  <q, mu>.
+
+The kernel fuses the dequantization into the dot: codes stream in
+(block_n x d) tiles, are widened to f32 on the VPU, and hit the MXU as a
+(block_n x d) @ (d x 1) matmul. The query tile (plus its precomputed sum
+and <q, mu>) is replicated across the grid via a constant index_map.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's AVX-512
+VPMADDUBSW-style inner loop becomes a VMEM-tiled dequant feeding the
+systolic array; block_n=256, d<=512 keeps the code tile under
+256*512 = 128 KiB of VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lvq_dot_kernel(codes_ref, delta_ref, lo_ref, q_ref, qstats_ref, o_ref):
+    codes = codes_ref[...].astype(jnp.float32)  # (bn, d) u8 -> f32 on VPU
+    q = q_ref[...]  # (d, 1)
+    dots = jnp.dot(codes, q, preferred_element_type=jnp.float32)[:, 0]
+    q_sum = qstats_ref[0]
+    q_mu = qstats_ref[1]
+    o_ref[...] = delta_ref[...] * dots + lo_ref[...] * q_sum + q_mu
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def lvq_dot(codes, delta, lo, q, qstats, *, block_n=256):
+    """Fused LVQ scores for a block of vectors.
+
+    Args:
+      codes:  (n, d) uint8 LVQ codes, n a multiple of block_n.
+      delta:  (n,) f32 per-vector quantization step.
+      lo:     (n,) f32 per-vector lower bound.
+      q:      (d, 1) f32 projected query.
+      qstats: (2,) f32 = [sum(q), <q, mu>].
+
+    Returns:
+      (n,) f32 approximate inner products <q, x_i>.
+    """
+    n, d = codes.shape
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        _lvq_dot_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(codes, delta, lo, q, qstats)

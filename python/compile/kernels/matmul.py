@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: tiled matrix multiplication.
+
+This is the MXU-shaped workhorse for every L2 computation (Frank-Wolfe
+gradients, subspace iteration, batch projection). The kernel follows the
+canonical Pallas accumulate-over-k pattern: the grid is
+(M/bm, N/bn, K/bk); the output block (whose index map is independent of
+the k grid axis, so the same VMEM tile is revisited) is zeroed on the
+first k-step and accumulated into on every step.
+
+TPU adaptation notes (see DESIGN.md §Hardware-Adaptation):
+  * block sizes default to 128x128x128 — one MXU systolic pass per step,
+    3 * 128*128*4 B = 192 KiB of VMEM, far below the ~16 MiB budget, which
+    leaves room for double-buffered HBM->VMEM prefetch.
+  * `pmatmul` pads arbitrary shapes up to the block grid; padding with
+    zeros is exact for matmul.
+
+The kernel MUST run with interpret=True in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel
+to plain HLO (while-loop over the grid) that the rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output tile; accumulates over the k grid axis."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulate; on real TPU the operands would be bf16 feeding the
+    # MXU, but the CPU interpret path keeps f32 end to end.
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=128, bn=128, bk=128):
+    """`x @ y` for shapes that are exact multiples of the block sizes."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (x.shape, y.shape)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _pad_to(x, rows, cols):
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def _ceil_to(v, b):
+    return -(-v // b) * b
+
+
+def pmatmul(x, y, *, block=128):
+    """Padded Pallas matmul for arbitrary (m, k) x (k, n) f32 operands.
+
+    Zero-pads every dimension up to a multiple of the block size (exact
+    for matmul), runs the tiled kernel, and slices the result back. This
+    is the matmul primitive the L2 model uses for its large products.
+    """
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(block, _ceil_to(m, 8))
+    bn = min(block, _ceil_to(n, 8))
+    bk = min(block, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = _pad_to(x.astype(jnp.float32), mp, kp)
+    yp = _pad_to(y.astype(jnp.float32), kp, np_)
+    out = matmul(xp, yp, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]

@@ -1,0 +1,53 @@
+"""Layer-2: the JAX computation graphs that get AOT-lowered to artifacts.
+
+Every function here is a jit-able composition of the Layer-1 Pallas
+kernels (python/compile/kernels/). aot.py lowers them for a fixed set of
+(D, d, batch) shapes and the rust runtime executes the resulting HLO via
+PJRT — Python never runs at serve time.
+
+Exported computations (names match artifacts/manifest.json entries):
+  fw_step     — one LeanVec-OOD Frank-Wolfe BCD iteration (Algorithm 1)
+  eig_topd    — top-d eigenbasis of K_beta (Algorithm 2 inner step)
+  project     — batch projection Y = P X (database or query batches)
+  score_batch — fused LVQ dequant+dot scoring for a candidate block
+"""
+
+import jax.numpy as jnp
+
+from .kernels.fw_step import (
+    eig_topd,
+    eig_topd_xla,
+    fw_step,
+    fw_step_xla,
+    loss,
+    polar,
+)
+from .kernels.lvq_dot import lvq_dot
+from .kernels.matmul import pmatmul
+
+__all__ = [
+    "fw_step",
+    "fw_step_xla",
+    "eig_topd",
+    "eig_topd_xla",
+    "project",
+    "score_batch",
+    "loss_full",
+    "polar",
+]
+
+
+def project(p, x):
+    """Y = P X. p: (d, D); x: (D, B) column-stacked vectors."""
+    return pmatmul(p, x)
+
+
+def score_batch(codes, delta, lo, q, qstats):
+    """Fused LVQ scores for one query against a block of primary vectors."""
+    return lvq_dot(codes, delta, lo, q, qstats)
+
+
+def loss_full(a, b, kq, kx):
+    """Absolute LeanVec-OOD loss ||Q^T A^T B X - Q^T X||_F^2 (Eq. 8)."""
+    const = jnp.sum(kq * kx.T)  # Tr(Kq Kx)
+    return loss(a, b, kq, kx) + const

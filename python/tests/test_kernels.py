@@ -1,0 +1,218 @@
+"""Kernel vs pure-jnp-reference correctness — the core L1 signal.
+
+hypothesis sweeps shapes/values; every Pallas kernel must match ref.py.
+Interpret-mode Pallas is slow, so example counts are kept moderate but
+the shape ranges cover the padding/tiling edge cases (non-multiples of
+the block, tiny dims, tall/wide).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fw_step import fw_step, grad_a, grad_b, loss, polar
+from compile.kernels.lvq_dot import lvq_dot
+from compile.kernels.matmul import pmatmul
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- matmul
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31),
+)
+def test_pmatmul_matches_ref(m, k, n, seed):
+    r = _rng(seed)
+    x = r.normal(size=(m, k)).astype(np.float32)
+    y = r.normal(size=(k, n)).astype(np.float32)
+    got = np.asarray(pmatmul(jnp.asarray(x), jnp.asarray(y)))
+    want = np.asarray(ref.ref_matmul(x, y))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_pmatmul_exact_blocks():
+    """Shapes that are exact multiples of 128 take the unpadded path."""
+    r = _rng(7)
+    x = r.normal(size=(256, 128)).astype(np.float32)
+    y = r.normal(size=(128, 384)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(pmatmul(jnp.asarray(x), jnp.asarray(y))),
+        x @ y,
+        rtol=2e-5,
+        atol=2e-4,
+    )
+
+
+def test_pmatmul_identity():
+    x = np.eye(50, dtype=np.float32)
+    y = _rng(3).normal(size=(50, 77)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(pmatmul(jnp.asarray(x), jnp.asarray(y))), y, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------- lvq_dot
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 3),
+    d=st.integers(2, 160),
+    seed=st.integers(0, 2**31),
+)
+def test_lvq_dot_matches_ref(nblocks, d, seed):
+    r = _rng(seed)
+    n = 256 * nblocks
+    codes = r.integers(0, 256, size=(n, d)).astype(np.uint8)
+    delta = r.uniform(1e-4, 1e-2, n).astype(np.float32)
+    lo = (r.normal(size=n) * 0.01).astype(np.float32)
+    q = r.normal(size=(d, 1)).astype(np.float32)
+    qstats = np.array([q.sum(), r.normal()], dtype=np.float32)
+    got = np.asarray(lvq_dot(*(jnp.asarray(v) for v in (codes, delta, lo, q, qstats))))
+    want = np.asarray(ref.ref_lvq_dot(codes, delta, lo, q, qstats))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-4)
+
+
+def test_lvq_dot_zero_codes():
+    """All-zero codes reduce to lo*sum(q) + <q,mu>."""
+    n, d = 256, 32
+    codes = np.zeros((n, d), dtype=np.uint8)
+    delta = np.full(n, 0.5, dtype=np.float32)
+    lo = np.linspace(-1, 1, n).astype(np.float32)
+    q = np.ones((d, 1), dtype=np.float32)
+    qstats = np.array([float(d), 2.5], dtype=np.float32)
+    got = np.asarray(lvq_dot(*(jnp.asarray(v) for v in (codes, delta, lo, q, qstats))))
+    np.testing.assert_allclose(got, lo * d + 2.5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- polar
+@settings(**SETTINGS)
+@given(d=st.integers(2, 48), D=st.integers(48, 160), seed=st.integers(0, 2**31))
+def test_polar_orthonormal_rows(d, D, seed):
+    c = _rng(seed).normal(size=(d, D)).astype(np.float32)
+    # the production iteration count gives a loose bound (ill-conditioned
+    # draws converge slowly; an inexact LMO is fine for Frank-Wolfe) ...
+    p = np.asarray(polar(jnp.asarray(c)))
+    np.testing.assert_allclose(p @ p.T, np.eye(d), atol=5e-2)
+    # ... and more iterations must tighten it (convergence property)
+    p = np.asarray(polar(jnp.asarray(c), iters=28))
+    np.testing.assert_allclose(p @ p.T, np.eye(d), atol=5e-3)
+
+
+@settings(**SETTINGS)
+@given(d=st.integers(2, 32), D=st.integers(32, 128), seed=st.integers(0, 2**31))
+def test_polar_is_lmo_over_spectral_ball(d, D, seed):
+    """The Newton-Schulz polar factor must be a near-exact linear
+    minimization oracle: <S, C> within 1% of the nuclear norm of C
+    (the optimum over the spectral-norm unit ball, Jaggi 2013)."""
+    c = _rng(seed).normal(size=(d, D)).astype(np.float32)
+    s = np.asarray(polar(jnp.asarray(c)))
+    nuc = np.linalg.svd(c.astype(np.float64), compute_uv=False).sum()
+    assert float((s * c).sum()) >= 0.99 * nuc
+
+
+def test_polar_of_orthonormal_is_identity_map():
+    r = _rng(11)
+    q, _ = np.linalg.qr(r.normal(size=(64, 24)))
+    c = q.T.astype(np.float32)  # already row-orthonormal
+    p = np.asarray(polar(jnp.asarray(c)))
+    np.testing.assert_allclose(p, c, atol=5e-3)
+
+
+# ---------------------------------------------------------------- gradients / loss
+def _problem(seed, D=96, d=24, n=500, m=300):
+    r = _rng(seed)
+    X = r.normal(size=(D, n)).astype(np.float32)
+    Q = r.normal(size=(D, m)).astype(np.float32)
+    kx = (X @ X.T / n).astype(np.float32)
+    kq = (Q @ Q.T / m).astype(np.float32)
+    a = np.linalg.qr(r.normal(size=(D, d)))[0].T.astype(np.float32)
+    b = np.linalg.qr(r.normal(size=(D, d)))[0].T.astype(np.float32)
+    return a, b, kq, kx
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_grads_match_ref(seed):
+    a, b, kq, kx = _problem(seed)
+    np.testing.assert_allclose(
+        np.asarray(grad_a(*map(jnp.asarray, (a, b, kq, kx)))),
+        np.asarray(ref.ref_grad_a(a, b, kq, kx)),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(grad_b(*map(jnp.asarray, (a, b, kq, kx)))),
+        np.asarray(ref.ref_grad_b(a, b, kq, kx)),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31))
+def test_loss_matches_ref(seed):
+    a, b, kq, kx = _problem(seed)
+    got = float(loss(*map(jnp.asarray, (a, b, kq, kx))))
+    const = float(np.trace(kq @ kx))
+    want = float(ref.ref_loss(a, b, kq, kx))
+    np.testing.assert_allclose(got + const, want, rtol=2e-3)
+
+
+def test_loss_is_frobenius_norm():
+    """Eq. (8) trace form == the direct ||Q^T A^T B X - Q^T X||_F^2 / (nm) form."""
+    r = _rng(5)
+    D, d, n, m = 48, 12, 200, 100
+    X = r.normal(size=(D, n)).astype(np.float32)
+    Q = r.normal(size=(D, m)).astype(np.float32)
+    a = np.linalg.qr(r.normal(size=(D, d)))[0].T.astype(np.float32)
+    b = np.linalg.qr(r.normal(size=(D, d)))[0].T.astype(np.float32)
+    kq, kx = Q @ Q.T, X @ X.T
+    direct = np.linalg.norm(Q.T @ a.T @ b @ X - Q.T @ X) ** 2
+    got = float(loss(*map(jnp.asarray, (a, b, kq, kx)))) + float(np.trace(kq @ kx))
+    np.testing.assert_allclose(got, direct, rtol=2e-3)
+
+
+# ---------------------------------------------------------------- fw_step
+def test_fw_step_descends():
+    a, b, kq, kx = _problem(17)
+    A, B = jnp.asarray(a), jnp.asarray(b)
+    kq, kx = jnp.asarray(kq), jnp.asarray(kx)
+    losses = []
+    for t in range(10):
+        A, B, l = fw_step(A, B, kq, kx, jnp.float32(1.0 / (t + 2) ** 0.7))
+        losses.append(float(l))
+    assert losses[-1] < losses[0], losses
+
+
+def test_fw_step_iterates_stay_in_spectral_ball():
+    a, b, kq, kx = _problem(23)
+    A, B = jnp.asarray(a), jnp.asarray(b)
+    kq, kx = jnp.asarray(kq), jnp.asarray(kx)
+    for t in range(5):
+        A, B, _ = fw_step(A, B, kq, kx, jnp.float32(1.0 / (t + 1) ** 0.7))
+    for M in (A, B):
+        top = np.linalg.svd(np.asarray(M), compute_uv=False)[0]
+        assert top <= 1.0 + 1e-2, top
+
+
+def test_fw_step_matches_ref_one_step():
+    """Against the exact-SVD-LMO reference for a well-conditioned gradient."""
+    a, b, kq, kx = _problem(29)
+    ga, gb, gl = (
+        np.asarray(v)
+        for v in fw_step(*map(jnp.asarray, (a, b, kq, kx)), jnp.float32(0.5))
+    )
+    ra, rb, rl = ref.ref_fw_step(*map(jnp.asarray, (a, b, kq, kx)), 0.5)
+    np.testing.assert_allclose(ga, np.asarray(ra), atol=2e-2)
+    np.testing.assert_allclose(gb, np.asarray(rb), atol=2e-2)
+    const = float(np.trace(kq @ kx))
+    np.testing.assert_allclose(gl + const, float(rl), rtol=5e-3)

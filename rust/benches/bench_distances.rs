@@ -1,0 +1,56 @@
+//! Micro-benchmarks for the scoring hot path (custom harness; criterion
+//! is unavailable offline). This is the Fig.-1 mechanism at micro scale:
+//! score time tracks bytes/vector, so LVQ8 < FP16 < F32 per-score cost
+//! on a memory-bound loop.
+
+use leanvec::config::Similarity;
+use leanvec::index::leanvec_index::make_store;
+use leanvec::util::rng::Rng;
+use leanvec::util::stats::bench;
+use std::time::Duration;
+
+fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+        .collect()
+}
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    println!("== bench_distances: fused scoring, one vector per call ==");
+    for d in [160usize, 512, 768] {
+        let data = rows(4096, d, 42);
+        let q: Vec<f32> = rows(1, d, 7).pop().unwrap();
+        let mut rng = Rng::new(9);
+        let ids: Vec<u32> = (0..4096).map(|_| rng.below(4096) as u32).collect();
+
+        for comp in ["f32", "f16", "lvq8", "lvq4", "lvq4x8"] {
+            let store = make_store(&data, leanvec::config::Compression::parse(comp).unwrap());
+            let pq = store.prepare(&q, Similarity::InnerProduct);
+            let mut i = 0usize;
+            let r = bench(&format!("score/{comp}/d{d}"), budget, || {
+                let id = ids[i & 4095];
+                i = i.wrapping_add(1);
+                std::hint::black_box(store.score(&pq, id));
+            });
+            println!(
+                "{r}  [{} B/vec -> {:.2} GB/s effective]",
+                store.bytes_per_vector(),
+                store.bytes_per_vector() as f64 / r.mean_ns
+            );
+        }
+        println!();
+    }
+
+    println!("== prepare (once per query) ==");
+    for d in [160usize, 768] {
+        let data = rows(256, d, 3);
+        let store = make_store(&data, leanvec::config::Compression::Lvq8);
+        let q: Vec<f32> = rows(1, d, 8).pop().unwrap();
+        let r = bench(&format!("prepare/lvq8/d{d}"), budget, || {
+            std::hint::black_box(store.prepare(&q, Similarity::InnerProduct));
+        });
+        println!("{r}");
+    }
+}

@@ -1,0 +1,82 @@
+//! End-to-end bench: the paper's headline comparison (Fig. 1 / Fig. 5)
+//! at bench scale — QPS at matched recall across representations, plus
+//! the serving engine's throughput.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig};
+use leanvec::data::gt::ground_truth;
+use leanvec::data::synth::{generate, SynthSpec};
+use leanvec::experiments::harness::{qps_at_recall, qps_recall_curve};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use std::sync::Arc;
+
+fn main() {
+    let mut spec = SynthSpec::ood("bench-e2e", 768, 6_000, 256);
+    spec.seed = 0xBE;
+    let ds = generate(&spec);
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let mut gp = GraphParams::for_similarity(ds.similarity);
+    gp.max_degree = 32;
+    gp.build_window = 64;
+    println!("== bench_e2e: rqa-768-style, {} vectors ==", ds.database.len());
+
+    let windows = [10usize, 20, 40, 80, 160, 300];
+    let mut qps_ref: Option<f64> = None;
+    for (name, proj, d, comp) in [
+        ("fp16", ProjectionKind::None, 0usize, Compression::F16),
+        ("lvq4x8", ProjectionKind::None, 0, Compression::Lvq4x8),
+        ("leanvec-ood-d160", ProjectionKind::OodEigSearch, 160, Compression::Lvq8),
+    ] {
+        let index = IndexBuilder::new()
+            .projection(proj)
+            .target_dim(d)
+            .primary(comp)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+        let curve = qps_recall_curve(&index, &ds.test_queries, &truth, k, &windows);
+        let q90 = qps_at_recall(&curve, 0.9);
+        let speedup = match (q90, qps_ref) {
+            (Some(q), Some(r)) => format!("{:.1}x vs fp16", q / r),
+            _ => String::new(),
+        };
+        if name == "fp16" {
+            qps_ref = q90;
+        }
+        println!(
+            "{name:<18} QPS@0.9recall = {}  {speedup}",
+            q90.map(|q| format!("{q:.0}")).unwrap_or("-".into())
+        );
+        for p in &curve {
+            println!(
+                "    w={:<4} recall {:.3}  {:>8.0} QPS  {:>8.0} B/query",
+                p.window, p.recall, p.qps, p.bytes_per_query
+            );
+        }
+    }
+
+    // serving engine throughput (closed loop)
+    let index = Arc::new(
+        IndexBuilder::new()
+            .projection(ProjectionKind::OodEigSearch)
+            .target_dim(160)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity),
+    );
+    let queries: Vec<Vec<f32>> = (0..2_000)
+        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
+        .collect();
+    let cfg = EngineConfig {
+        workers: 1,
+        batch: BatchPolicy::default(),
+        search: SearchParams {
+            window: 60,
+            rerank_window: 60,
+        },
+        ..Default::default()
+    };
+    let (_r, report) = Engine::run_workload(index, cfg, &queries, k, None);
+    println!("\nserving engine: {}", report.metrics);
+}

@@ -1,0 +1,53 @@
+//! Graph benches: per-search cost vs window and vs representation
+//! (the end-to-end mechanism behind figs 4/5 at micro scale).
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind};
+use leanvec::data::synth::{generate, SynthSpec};
+use leanvec::graph::beam::SearchCtx;
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use leanvec::util::rng::Rng;
+use leanvec::util::stats::bench;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let ds = generate(&SynthSpec::ood("bench-graph", 256, 6_000, 128));
+    println!(
+        "== bench_graph: {} x {} OOD dataset ==",
+        ds.database.len(),
+        ds.dim
+    );
+
+    let mut gp = GraphParams::for_similarity(ds.similarity);
+    gp.max_degree = 32;
+    gp.build_window = 64;
+
+    for (name, proj, d, comp) in [
+        ("fp16-fullD", ProjectionKind::None, 0usize, Compression::F16),
+        ("lvq8-fullD", ProjectionKind::None, 0, Compression::Lvq8),
+        ("leanvec-d64", ProjectionKind::OodEigSearch, 64, Compression::Lvq8),
+    ] {
+        let index = IndexBuilder::new()
+            .projection(proj)
+            .target_dim(d)
+            .primary(comp)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+        let mut ctx = SearchCtx::new(index.len());
+        let mut rng = Rng::new(5);
+        for window in [20usize, 50, 100] {
+            let params = SearchParams {
+                window,
+                rerank_window: window,
+            };
+            let r = bench(&format!("search/{name}/w{window}"), budget, || {
+                let q = &ds.test_queries[rng.below(ds.test_queries.len())];
+                std::hint::black_box(index.search_with_ctx(&mut ctx, q, 10, params));
+            });
+            println!("{r}");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,104 @@
+//! Runtime benches: PJRT artifact dispatch vs native — quantifies (a)
+//! why batched projection can go through PJRT, (b) why per-vector
+//! scoring stays native (dispatch overhead dwarfs a single fused dot —
+//! the same argument the paper makes against batched-ADC methods for
+//! graph search), and (c) the pallas-interpret vs jnp-XLA lowering gap
+//! (EXPERIMENTS.md §Perf).
+
+use leanvec::index::builder::{BatchProjector, NativeProjector};
+use leanvec::leanvec::fw::{FwStepper, NativeStepper};
+use leanvec::linalg::Matrix;
+use leanvec::runtime::client::{lit_from_f32s, lit_from_matrix, lit_from_u8};
+use leanvec::runtime::default_artifacts_dir;
+use leanvec::util::rng::Rng;
+use leanvec::util::stats::bench;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let Ok(rt) = leanvec::runtime::executor::open_shared(&default_artifacts_dir()) else {
+        println!("bench_runtime: artifacts not built; skipping");
+        return;
+    };
+    println!("== bench_runtime: PJRT vs native ==");
+    let mut rng = Rng::new(1);
+    let (dd, d) = (256usize, 96usize);
+
+    // ---- batch projection: PJRT vs native (1024-column batches)
+    let p = Matrix::randn(d, dd, &mut rng);
+    let rows: Vec<Vec<f32>> = (0..1024)
+        .map(|_| (0..dd).map(|_| rng.gaussian_f32()).collect())
+        .collect();
+    let mut pjrt_proj = leanvec::runtime::PjrtProjector::new(rt.clone());
+    let r = bench("project-1024/pjrt", budget, || {
+        std::hint::black_box(pjrt_proj.project(&p, &rows));
+    });
+    println!("{r}  ({:.1} ns/vector)", r.mean_ns / 1024.0);
+    let mut native_proj = NativeProjector;
+    let r = bench("project-1024/native", budget, || {
+        std::hint::black_box(native_proj.project(&p, &rows));
+    });
+    println!("{r}  ({:.1} ns/vector)", r.mean_ns / 1024.0);
+
+    // ---- fw_step: PJRT (xla lowering) vs native
+    let kq = Matrix::randn(600, dd, &mut rng).second_moment();
+    let kx = Matrix::randn(600, dd, &mut rng).second_moment();
+    let a0 = leanvec::linalg::qr::random_orthonormal(d, dd, &mut rng);
+    let mut pjrt_fw = leanvec::runtime::PjrtFwStepper::new(rt.clone());
+    let r = bench("fw_step/pjrt-xla", budget, || {
+        std::hint::black_box(pjrt_fw.step(&a0, &a0, &kq, &kx, 0.5));
+    });
+    println!("{r}");
+    let r = bench("fw_step/native", budget, || {
+        std::hint::black_box(NativeStepper.step(&a0, &a0, &kq, &kx, 0.5));
+    });
+    println!("{r}");
+
+    // ---- fused LVQ scoring: one PJRT dispatch of a 1024-block vs the
+    //      native per-vector loop over the same block
+    let spec = {
+        let b = rt.borrow();
+        b.manifest().find("score_batch", dd, d).cloned()
+    };
+    if let Some(spec) = spec {
+        let n = spec.batch.unwrap();
+        let codes: Vec<u8> = (0..n * d).map(|_| rng.below(256) as u8).collect();
+        let delta: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.01 + 1e-4).collect();
+        let lo: Vec<f32> = (0..n).map(|_| rng.gaussian_f32() * 0.01).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        let qstats = [q.iter().sum::<f32>(), 0.0f32];
+        let q_col = Matrix::from_vec(d, 1, q.clone());
+
+        let r = bench(&format!("score-{n}/pjrt-pallas"), budget, || {
+            let mut b = rt.borrow_mut();
+            let out = b
+                .execute(
+                    &spec.name,
+                    &[
+                        lit_from_u8(n, d, &codes).unwrap(),
+                        lit_from_f32s(&delta).unwrap(),
+                        lit_from_f32s(&lo).unwrap(),
+                        lit_from_matrix(&q_col).unwrap(),
+                        lit_from_f32s(&qstats).unwrap(),
+                    ],
+                )
+                .unwrap();
+            std::hint::black_box(out);
+        });
+        println!("{r}  ({:.1} ns/vector)", r.mean_ns / n as f64);
+
+        let r = bench(&format!("score-{n}/native"), budget, || {
+            let mut acc = 0.0f32;
+            for i in 0..n {
+                let code_dot: f32 = codes[i * d..(i + 1) * d]
+                    .iter()
+                    .zip(q.iter())
+                    .map(|(&c, &qv)| c as f32 * qv)
+                    .sum();
+                acc += delta[i] * code_dot + lo[i] * qstats[0];
+            }
+            std::hint::black_box(acc);
+        });
+        println!("{r}  ({:.1} ns/vector)", r.mean_ns / n as f64);
+    }
+}

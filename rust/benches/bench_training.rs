@@ -1,0 +1,64 @@
+//! Projection-learning benches: PCA vs eigsearch vs Frank-Wolfe at the
+//! paper's (D, d) shapes (Fig. 2 / Fig. 13 runtimes at bench scale).
+
+use leanvec::leanvec::eigsearch::{eigsearch, NativeTopd, TopdBackend};
+use leanvec::leanvec::fw::{frank_wolfe, FwParams, NativeStepper};
+use leanvec::leanvec::pca::pca;
+use leanvec::linalg::Matrix;
+use leanvec::util::rng::Rng;
+use leanvec::util::stats::bench;
+use std::time::Duration;
+
+fn psd(dd: usize, n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut x = Matrix::randn(n, dd, &mut rng);
+    for row in x.data.chunks_mut(dd) {
+        for (c, v) in row.iter_mut().enumerate() {
+            *v *= 1.0 / (1.0 + c as f32 * 0.1);
+        }
+    }
+    x.second_moment()
+}
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    println!("== bench_training ==");
+    for (dd, d) in [(200usize, 128usize), (256, 96), (512, 128)] {
+        let kx = psd(dd, 800, 1);
+        let kq = psd(dd, 400, 2);
+
+        let r = bench(&format!("pca/D{dd}_d{d}"), budget, || {
+            std::hint::black_box(pca(&kx, d));
+        });
+        println!("{r}");
+
+        let r = bench(&format!("topd-subspace/D{dd}_d{d}"), budget, || {
+            std::hint::black_box(NativeTopd.topd(&kx, d));
+        });
+        println!("{r}");
+
+        let r = bench(&format!("eigsearch/D{dd}_d{d}"), budget, || {
+            std::hint::black_box(eigsearch(&kq, &kx, d, &mut NativeTopd));
+        });
+        println!("{r}");
+
+        let mut rng = Rng::new(3);
+        let p0 = leanvec::linalg::qr::random_orthonormal(d, dd, &mut rng);
+        let r = bench(&format!("fw-10iters/D{dd}_d{d}"), budget, || {
+            std::hint::black_box(frank_wolfe(
+                &mut NativeStepper,
+                p0.clone(),
+                p0.clone(),
+                &kq,
+                &kx,
+                FwParams {
+                    max_iters: 10,
+                    tol: 0.0,
+                    ..FwParams::default()
+                },
+            ));
+        });
+        println!("{r}");
+        println!();
+    }
+}

@@ -1,0 +1,210 @@
+//! Shared configuration types + JSON-backed experiment configs.
+
+use crate::util::json::Json;
+
+/// Similarity function. Maximum-inner-product is the native metric
+/// (Section 2); Euclidean and cosine are mapped onto it:
+/// * Cosine: vectors are L2-normalized at ingestion, then IP == cosine.
+/// * L2: ranking by `-||q - x||^2 = 2<q,x> - ||x||^2 - ||q||^2`, so a
+///   store only needs `<q,x>` plus per-vector squared norms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Similarity {
+    InnerProduct,
+    L2,
+    Cosine,
+}
+
+impl Similarity {
+    pub fn parse(s: &str) -> Option<Similarity> {
+        match s.to_ascii_lowercase().as_str() {
+            "ip" | "inner_product" | "innerproduct" | "mips" => Some(Similarity::InnerProduct),
+            "l2" | "euclidean" => Some(Similarity::L2),
+            "cos" | "cosine" => Some(Similarity::Cosine),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Similarity::InnerProduct => "inner_product",
+            Similarity::L2 => "l2",
+            Similarity::Cosine => "cosine",
+        }
+    }
+}
+
+/// Quantization scheme for a vector store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// 32-bit float (uncompressed reference)
+    F32,
+    /// 16-bit float (the paper's FP16 baseline / secondary default)
+    F16,
+    /// LVQ with 8 bits per component
+    Lvq8,
+    /// LVQ with 4 bits per component
+    Lvq4,
+    /// two-level LVQ: 4-bit primary + 8-bit residual
+    Lvq4x8,
+}
+
+impl Compression {
+    pub fn parse(s: &str) -> Option<Compression> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Some(Compression::F32),
+            "f16" | "fp16" => Some(Compression::F16),
+            "lvq8" => Some(Compression::Lvq8),
+            "lvq4" => Some(Compression::Lvq4),
+            "lvq4x8" => Some(Compression::Lvq4x8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compression::F32 => "f32",
+            Compression::F16 => "f16",
+            Compression::Lvq8 => "lvq8",
+            Compression::Lvq4 => "lvq4",
+            Compression::Lvq4x8 => "lvq4x8",
+        }
+    }
+}
+
+/// Projection learner for the primary vectors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionKind {
+    /// no dimensionality reduction (d == D)
+    None,
+    /// LeanVec-ID: PCA on K_X (Section 2.1)
+    Id,
+    /// LeanVec-OOD via Frank-Wolfe BCD (Algorithm 1)
+    OodFrankWolfe,
+    /// LeanVec-OOD via eigenvector search (Algorithm 2)
+    OodEigSearch,
+    /// random orthonormal projection (ablation baseline, Fig. 11)
+    Random,
+}
+
+impl ProjectionKind {
+    pub fn parse(s: &str) -> Option<ProjectionKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(ProjectionKind::None),
+            "id" | "pca" | "leanvec-id" => Some(ProjectionKind::Id),
+            "ood" | "fw" | "ood-fw" | "leanvec-ood" => Some(ProjectionKind::OodFrankWolfe),
+            "es" | "ood-es" | "eigsearch" => Some(ProjectionKind::OodEigSearch),
+            "random" | "rand" => Some(ProjectionKind::Random),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjectionKind::None => "none",
+            ProjectionKind::Id => "leanvec-id",
+            ProjectionKind::OodFrankWolfe => "leanvec-ood-fw",
+            ProjectionKind::OodEigSearch => "leanvec-ood-es",
+            ProjectionKind::Random => "random",
+        }
+    }
+}
+
+/// Vamana graph-construction parameters (Appendix D defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct GraphParams {
+    /// max out-degree R
+    pub max_degree: usize,
+    /// construction search window L
+    pub build_window: usize,
+    /// pruning slack alpha (1.2 for L2, 0.95 for IP per the paper)
+    pub alpha: f32,
+}
+
+impl GraphParams {
+    pub fn for_similarity(sim: Similarity) -> GraphParams {
+        GraphParams {
+            // Scaled-down defaults (paper: R=128, L=200 at n=1M+; the
+            // synthetic datasets here are 10k-200k where R=32..64 is the
+            // regime-equivalent choice).
+            max_degree: 48,
+            build_window: 100,
+            alpha: match sim {
+                Similarity::L2 | Similarity::Cosine => 1.2,
+                Similarity::InnerProduct => 0.95,
+            },
+        }
+    }
+}
+
+/// Persistable run description, serialized next to experiment outputs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub projection: ProjectionKind,
+    pub target_dim: usize,
+    pub primary: Compression,
+    pub secondary: Compression,
+    pub graph: GraphParams,
+}
+
+impl RunConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&self.dataset)),
+            ("projection", Json::str(self.projection.name())),
+            ("target_dim", Json::num(self.target_dim as f64)),
+            ("primary", Json::str(self.primary.name())),
+            ("secondary", Json::str(self.secondary.name())),
+            ("max_degree", Json::num(self.graph.max_degree as f64)),
+            ("build_window", Json::num(self.graph.build_window as f64)),
+            ("alpha", Json::num(self.graph.alpha as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for sim in [Similarity::InnerProduct, Similarity::L2, Similarity::Cosine] {
+            assert_eq!(Similarity::parse(sim.name()), Some(sim));
+        }
+        for c in [
+            Compression::F32,
+            Compression::F16,
+            Compression::Lvq8,
+            Compression::Lvq4,
+            Compression::Lvq4x8,
+        ] {
+            assert_eq!(Compression::parse(c.name()), Some(c));
+        }
+        assert_eq!(ProjectionKind::parse("pca"), Some(ProjectionKind::Id));
+        assert_eq!(Similarity::parse("bogus"), None);
+    }
+
+    #[test]
+    fn alpha_depends_on_similarity() {
+        assert_eq!(GraphParams::for_similarity(Similarity::L2).alpha, 1.2);
+        assert_eq!(
+            GraphParams::for_similarity(Similarity::InnerProduct).alpha,
+            0.95
+        );
+    }
+
+    #[test]
+    fn run_config_serializes() {
+        let rc = RunConfig {
+            dataset: "rqa-768".into(),
+            projection: ProjectionKind::OodFrankWolfe,
+            target_dim: 160,
+            primary: Compression::Lvq8,
+            secondary: Compression::F16,
+            graph: GraphParams::for_similarity(Similarity::InnerProduct),
+        };
+        let j = rc.to_json();
+        assert_eq!(j.get("target_dim").unwrap().as_usize(), Some(160));
+        assert_eq!(j.get("projection").unwrap().as_str(), Some("leanvec-ood-fw"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Dynamic batching policy: collect requests until the batch is full or
+//! the oldest request has waited long enough.
+
+use super::protocol::Request;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_micros(500),
+        }
+    }
+}
+
+/// Pulls requests off a channel according to the policy.
+pub struct Batcher {
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed and drained (shutdown).
+    pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
+        // block for the first request
+        let first = rx.recv().ok()?;
+        let deadline = Instant::now() + self.policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![0.0], 1)
+    }
+
+    #[test]
+    fn full_batch_returned_immediately() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_empty_channel_yields_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let b = Batcher::new(BatchPolicy::default());
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn disconnect_mid_wait_flushes() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        drop(tx);
+        let b = Batcher::new(BatchPolicy {
+            max_batch: 10,
+            max_wait: Duration::from_secs(5),
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,361 @@
+//! The serving engine: batcher thread + worker pool over a shared
+//! [`LeanVecIndex`].
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::{Metrics, ServeReport};
+use super::protocol::{Request, Response};
+use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
+use crate::graph::beam::SearchCtx;
+use crate::leanvec::model::rows_to_matrix;
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// How the batcher projects query batches.
+#[derive(Clone, Debug)]
+pub enum QueryProjectorKind {
+    /// native matmul on the batcher thread
+    Native,
+    /// PJRT `project_q` artifact from this directory (the runtime is
+    /// constructed *on the batcher thread* — PJRT handles are not Send)
+    Pjrt(std::path::PathBuf),
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub workers: usize,
+    pub batch: BatchPolicy,
+    pub search: SearchParams,
+    pub projector: QueryProjectorKind,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            batch: BatchPolicy::default(),
+            search: SearchParams::default(),
+            projector: QueryProjectorKind::Native,
+        }
+    }
+}
+
+/// A running engine. Submit requests, then `drain` responses.
+pub struct Engine {
+    req_tx: Option<Sender<Request>>,
+    resp_rx: Receiver<Response>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    started: Instant,
+}
+
+/// Work item: one request plus its projected query.
+struct WorkItem {
+    req: Request,
+    q_proj: Vec<f32>,
+    batch_size: usize,
+}
+
+impl Engine {
+    pub fn start(index: Arc<LeanVecIndex>, cfg: EngineConfig) -> Engine {
+        let (req_tx, req_rx) = channel::<Request>();
+        let (work_tx, work_rx) = channel::<WorkItem>();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let work_rx = Arc::new(Mutex::new(work_rx));
+
+        // --- batcher thread: batch, project, fan out
+        let bindex = Arc::clone(&index);
+        let bcfg = cfg.clone();
+        let batcher = std::thread::Builder::new()
+            .name("leanvec-batcher".into())
+            .spawn(move || {
+                batcher_loop(bindex, bcfg, req_rx, work_tx);
+            })
+            .expect("spawn batcher");
+
+        // --- workers: search + rerank
+        let workers = (0..cfg.workers.max(1))
+            .map(|w| {
+                let windex = Arc::clone(&index);
+                let wrx = Arc::clone(&work_rx);
+                let wtx = resp_tx.clone();
+                let search = cfg.search;
+                std::thread::Builder::new()
+                    .name(format!("leanvec-search-{w}"))
+                    .spawn(move || {
+                        let mut ctx = SearchCtx::new(windex.len());
+                        loop {
+                            let item = { wrx.lock().unwrap().recv() };
+                            let item = match item {
+                                Ok(i) => i,
+                                Err(_) => break,
+                            };
+                            let (ids, scores, _) = windex.search_projected(
+                                &mut ctx,
+                                &item.q_proj,
+                                &item.req.query,
+                                item.req.k,
+                                search,
+                            );
+                            let latency_s = item
+                                .req
+                                .submitted
+                                .map(|t| t.elapsed().as_secs_f64())
+                                .unwrap_or(0.0);
+                            let _ = wtx.send(Response {
+                                id: item.req.id,
+                                ids,
+                                scores,
+                                latency_s,
+                                batch_size: item.batch_size,
+                            });
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Engine {
+            req_tx: Some(req_tx),
+            resp_rx,
+            batcher: Some(batcher),
+            workers,
+            next_id: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit one query; returns its request id.
+    pub fn submit(&self, query: Vec<f32>, k: usize) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = Request::new(id, query, k);
+        req.submitted = Some(Instant::now());
+        self.req_tx
+            .as_ref()
+            .expect("engine running")
+            .send(req)
+            .expect("batcher alive");
+        id
+    }
+
+    /// Blockingly collect `n` responses.
+    pub fn drain(&self, n: usize) -> Vec<Response> {
+        (0..n)
+            .map(|_| self.resp_rx.recv().expect("workers alive"))
+            .collect()
+    }
+
+    /// Stop accepting requests, join all threads.
+    pub fn shutdown(mut self) -> Vec<Response> {
+        drop(self.req_tx.take());
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // collect any leftover responses
+        let mut rest = Vec::new();
+        while let Ok(r) = self.resp_rx.try_recv() {
+            rest.push(r);
+        }
+        rest
+    }
+
+    pub fn uptime(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Convenience: run a closed-loop workload and report (used by the
+    /// e2e example and the serving benches).
+    pub fn run_workload(
+        index: Arc<LeanVecIndex>,
+        cfg: EngineConfig,
+        queries: &[Vec<f32>],
+        k: usize,
+        truth: Option<&[Vec<u32>]>,
+    ) -> (Vec<Response>, ServeReport) {
+        let engine = Engine::start(index, cfg);
+        let t0 = Instant::now();
+        for q in queries {
+            engine.submit(q.clone(), k);
+        }
+        let mut responses = engine.drain(queries.len());
+        let wall = t0.elapsed().as_secs_f64();
+        let mut leftovers = engine.shutdown();
+        responses.append(&mut leftovers);
+        responses.sort_by_key(|r| r.id);
+        let report = match truth {
+            Some(t) => ServeReport::new(&responses, t, k, wall),
+            None => ServeReport {
+                metrics: Metrics::from_responses(&responses, wall),
+                recall_at_k: f64::NAN,
+                k,
+            },
+        };
+        (responses, report)
+    }
+}
+
+fn batcher_loop(
+    index: Arc<LeanVecIndex>,
+    cfg: EngineConfig,
+    req_rx: Receiver<Request>,
+    work_tx: Sender<WorkItem>,
+) {
+    let batcher = Batcher::new(cfg.batch);
+    // PJRT runtime (if requested) must be constructed on this thread.
+    let mut pjrt = match &cfg.projector {
+        QueryProjectorKind::Pjrt(dir) => match crate::runtime::executor::open_shared(dir) {
+            Ok(rt) => Some(crate::runtime::PjrtProjector::new(rt)),
+            Err(e) => {
+                eprintln!("engine: pjrt projector unavailable ({e}); using native");
+                None
+            }
+        },
+        QueryProjectorKind::Native => None,
+    };
+
+    while let Some(batch) = batcher.next_batch(&req_rx) {
+        let bs = batch.len();
+        // project the whole batch as one matmul: (d, D) x (D, B)
+        let queries: Vec<Vec<f32>> = batch.iter().map(|r| r.query.clone()).collect();
+        let projected: Vec<Vec<f32>> = match pjrt.as_mut() {
+            Some(p) => {
+                use crate::index::builder::BatchProjector;
+                p.project(&index.model.a, &queries)
+            }
+            None => {
+                // single matmul on the batcher thread: Q (B, D) x A^T
+                let qm = rows_to_matrix(&queries);
+                let proj: Matrix = qm.matmul_nt(&index.model.a); // (B, d)
+                (0..bs).map(|i| proj.row(i).to_vec()).collect()
+            }
+        };
+        for (req, q_proj) in batch.into_iter().zip(projected.into_iter()) {
+            if work_tx
+                .send(WorkItem {
+                    req,
+                    q_proj,
+                    batch_size: bs,
+                })
+                .is_err()
+            {
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, ProjectionKind, Similarity};
+    use crate::index::builder::IndexBuilder;
+    use crate::util::rng::Rng;
+
+    fn build_index_sim(n: usize, dd: usize, d: usize, sim: Similarity) -> Arc<LeanVecIndex> {
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dd).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut gp = GraphParams::for_similarity(sim);
+        gp.max_degree = 12;
+        gp.build_window = 30;
+        Arc::new(
+            IndexBuilder::new()
+                .projection(ProjectionKind::Id)
+                .target_dim(d)
+                .graph_params(gp)
+                .build(&rows, None, sim),
+        )
+    }
+
+    fn build_index(n: usize, dd: usize, d: usize) -> Arc<LeanVecIndex> {
+        build_index_sim(n, dd, d, Similarity::InnerProduct)
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let index = build_index(300, 16, 8);
+        let engine = Engine::start(
+            index,
+            EngineConfig {
+                workers: 2,
+                ..EngineConfig::default()
+            },
+        );
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+            engine.submit(q, 5);
+        }
+        let responses = engine.drain(50);
+        assert_eq!(responses.len(), 50);
+        for r in &responses {
+            assert_eq!(r.ids.len(), 5);
+            assert!(r.latency_s >= 0.0);
+            assert!(r.batch_size >= 1);
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn run_workload_reports_recall_one() {
+        // self-queries under L2 (self is always the true top-1; under IP
+        // a higher-norm vector could legitimately outscore it)
+        let index = build_index_sim(200, 12, 12, Similarity::L2); // d == D
+        let queries: Vec<Vec<f32>> = (0..20u32).map(|i| index.secondary.decode(i)).collect();
+        let truth: Vec<Vec<u32>> = (0..20u32).map(|i| vec![i]).collect();
+        let (responses, report) = Engine::run_workload(
+            index,
+            EngineConfig {
+                workers: 2,
+                ..EngineConfig::default()
+            },
+            &queries,
+            1,
+            Some(&truth),
+        );
+        assert_eq!(responses.len(), 20);
+        assert!(report.recall_at_k >= 0.95, "{}", report.recall_at_k);
+        assert!(report.metrics.qps > 0.0);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let index = build_index(100, 8, 4);
+        let engine = Engine::start(index, EngineConfig::default());
+        engine.submit(vec![0.0; 8], 3);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let rest = engine.shutdown();
+        // the one response may have been drained here or not at all
+        assert!(rest.len() <= 1);
+    }
+
+    #[test]
+    fn responses_match_direct_search() {
+        let index = build_index(250, 16, 8);
+        let mut rng = Rng::new(11);
+        let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let direct = index.search(&q, 5, SearchParams::default().window);
+        let (responses, _) = Engine::run_workload(
+            Arc::clone(&index),
+            EngineConfig {
+                workers: 1,
+                ..EngineConfig::default()
+            },
+            &[q],
+            5,
+            None,
+        );
+        assert_eq!(responses[0].ids, direct.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Serving metrics: QPS, latency percentiles, recall.
+
+use super::protocol::Response;
+use crate::util::stats::Summary;
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    pub queries: usize,
+    pub wall_seconds: f64,
+    pub qps: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub latency_mean_ms: f64,
+    pub mean_batch: f64,
+}
+
+impl Metrics {
+    pub fn from_responses(responses: &[Response], wall_seconds: f64) -> Metrics {
+        let mut lat = Summary::new();
+        let mut batch = 0.0f64;
+        for r in responses {
+            lat.push(r.latency_s * 1e3);
+            batch += r.batch_size as f64;
+        }
+        let n = responses.len();
+        Metrics {
+            queries: n,
+            wall_seconds,
+            qps: if wall_seconds > 0.0 {
+                n as f64 / wall_seconds
+            } else {
+                0.0
+            },
+            latency_p50_ms: lat.p50(),
+            latency_p99_ms: lat.p99(),
+            latency_mean_ms: lat.mean(),
+            mean_batch: if n > 0 { batch / n as f64 } else { 0.0 },
+        }
+    }
+}
+
+impl std::fmt::Display for Metrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} queries in {:.3}s -> {:.0} QPS | lat p50 {:.3} ms p99 {:.3} ms | mean batch {:.1}",
+            self.queries,
+            self.wall_seconds,
+            self.qps,
+            self.latency_p50_ms,
+            self.latency_p99_ms,
+            self.mean_batch
+        )
+    }
+}
+
+/// Full report for one serve run: metrics + recall vs ground truth.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub metrics: Metrics,
+    pub recall_at_k: f64,
+    pub k: usize,
+}
+
+impl ServeReport {
+    /// Compute recall by matching response ids against per-query truth.
+    /// `truth[i]` corresponds to the request with `id == i`.
+    pub fn new(responses: &[Response], truth: &[Vec<u32>], k: usize, wall_seconds: f64) -> ServeReport {
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for r in responses {
+            let t = &truth[r.id as usize];
+            let tk = &t[..k.min(t.len())];
+            hits += r.ids.iter().take(k).filter(|id| tk.contains(id)).count();
+            total += k;
+        }
+        ServeReport {
+            metrics: Metrics::from_responses(responses, wall_seconds),
+            recall_at_k: if total > 0 {
+                hits as f64 / total as f64
+            } else {
+                0.0
+            },
+            k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64, ids: Vec<u32>, lat: f64, batch: usize) -> Response {
+        Response {
+            id,
+            scores: vec![0.0; ids.len()],
+            ids,
+            latency_s: lat,
+            batch_size: batch,
+        }
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let rs = vec![
+            resp(0, vec![1], 0.001, 2),
+            resp(1, vec![2], 0.003, 2),
+            resp(2, vec![3], 0.002, 4),
+        ];
+        let m = Metrics::from_responses(&rs, 0.5);
+        assert_eq!(m.queries, 3);
+        assert!((m.qps - 6.0).abs() < 1e-9);
+        assert!((m.latency_p50_ms - 2.0).abs() < 1e-9);
+        assert!((m.mean_batch - 8.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_recall() {
+        let truth = vec![vec![1u32, 2], vec![3u32, 4]];
+        let rs = vec![
+            resp(0, vec![1, 9], 0.001, 1),
+            resp(1, vec![3, 4], 0.001, 1),
+        ];
+        let rep = ServeReport::new(&rs, &truth, 2, 1.0);
+        assert!((rep.recall_at_k - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_responses() {
+        let m = Metrics::from_responses(&[], 1.0);
+        assert_eq!(m.queries, 0);
+        assert_eq!(m.qps, 0.0);
+    }
+}

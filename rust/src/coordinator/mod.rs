@@ -1,0 +1,30 @@
+//! The serving coordinator: a batching query engine over a
+//! [`crate::index::LeanVecIndex`].
+//!
+//! Request path (Python never runs here):
+//!
+//! ```text
+//! clients --> request channel --> batcher thread --> worker pool --> responses
+//!                                  (collects up to     (graph search +
+//!                                   max_batch or        rerank, one
+//!                                   max_wait, projects  SearchCtx per
+//!                                   queries A q as one  worker, zero
+//!                                   batched matmul —    steady-state
+//!                                   natively or through  allocations)
+//!                                   the PJRT project_q
+//!                                   artifact)
+//! ```
+//!
+//! Batching exists to amortize the query projection (a batched matmul —
+//! exactly the granularity where PJRT dispatch pays off) and to give the
+//! workers cache-friendly runs; per-query state stays on the workers.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod protocol;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{Engine, EngineConfig, QueryProjectorKind};
+pub use metrics::{Metrics, ServeReport};
+pub use protocol::{Request, Response};

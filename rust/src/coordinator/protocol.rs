@@ -1,0 +1,49 @@
+//! Request/response types for the serving engine.
+
+use std::time::Instant;
+
+/// One similarity-search request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub query: Vec<f32>,
+    pub k: usize,
+    /// submission timestamp (set by `Engine::submit`)
+    pub submitted: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(id: u64, query: Vec<f32>, k: usize) -> Request {
+        Request {
+            id,
+            query,
+            k,
+            submitted: None,
+        }
+    }
+}
+
+/// The engine's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub ids: Vec<u32>,
+    pub scores: Vec<f32>,
+    /// end-to-end latency (submit -> response ready), seconds
+    pub latency_s: f64,
+    /// batch this request was served in (observability)
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_fields() {
+        let r = Request::new(7, vec![1.0, 2.0], 10);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.k, 10);
+        assert!(r.submitted.is_none());
+    }
+}

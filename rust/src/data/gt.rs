@@ -1,0 +1,98 @@
+//! Exact ground truth + recall metrics (Appendix D.3: k-recall@k).
+
+use crate::config::Similarity;
+use crate::index::flat::FlatIndex;
+use crate::util::threadpool::parallel_map;
+
+/// Exact top-k ids for every query (brute force over the database).
+pub fn ground_truth(
+    database: &[Vec<f32>],
+    queries: &[Vec<f32>],
+    k: usize,
+    sim: Similarity,
+) -> Vec<Vec<u32>> {
+    // cosine == IP on normalized data; FlatIndex scores raw IP, so
+    // normalize database copies when needed
+    let flat = match sim {
+        Similarity::Cosine => {
+            let normed: Vec<Vec<f32>> = database
+                .iter()
+                .map(|r| {
+                    let mut v = r.clone();
+                    crate::linalg::matrix::normalize(&mut v);
+                    v
+                })
+                .collect();
+            FlatIndex::new(&normed, Similarity::InnerProduct)
+        }
+        s => FlatIndex::new(database, s),
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    parallel_map(queries.len(), threads, |i| flat.search(&queries[i], k).0)
+}
+
+/// `|got ∩ truth| / k` averaged over queries (k-recall@k).
+pub fn recall_at_k(got: &[Vec<u32>], truth: &[Vec<u32>], k: usize) -> f64 {
+    assert_eq!(got.len(), truth.len());
+    if got.is_empty() {
+        return 0.0;
+    }
+    let mut hits = 0usize;
+    for (g, t) in got.iter().zip(truth.iter()) {
+        let tk = &t[..k.min(t.len())];
+        hits += g.iter().take(k).filter(|id| tk.contains(id)).count();
+    }
+    hits as f64 / (k * got.len()) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn self_queries_have_perfect_recall_l2() {
+        let db = rows(100, 8, 1);
+        let gt = ground_truth(&db, &db[..10].to_vec(), 1, Similarity::L2);
+        for (i, t) in gt.iter().enumerate() {
+            assert_eq!(t[0], i as u32);
+        }
+    }
+
+    #[test]
+    fn recall_metric_boundaries() {
+        let truth = vec![vec![0u32, 1, 2], vec![3, 4, 5]];
+        assert_eq!(recall_at_k(&truth, &truth, 3), 1.0);
+        let miss = vec![vec![9u32, 10, 11], vec![12, 13, 14]];
+        assert_eq!(recall_at_k(&miss, &truth, 3), 0.0);
+        let half = vec![vec![0u32, 10, 11], vec![3, 13, 14]];
+        assert!((recall_at_k(&half, &truth, 3) - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_gt_ignores_scale() {
+        let mut db = rows(50, 8, 2);
+        // duplicate vector 0 scaled by 100 at slot 1
+        db[1] = db[0].iter().map(|&x| x * 100.0).collect();
+        let q = vec![db[0].clone()];
+        let gt = ground_truth(&db, &q, 2, Similarity::Cosine);
+        // both the original and the scaled copy are perfect cosine matches
+        assert!(gt[0].contains(&0) && gt[0].contains(&1));
+    }
+
+    #[test]
+    fn recall_with_k_smaller_than_lists() {
+        let truth = vec![vec![0u32, 1, 2, 3, 4]];
+        let got = vec![vec![0u32, 9, 9, 9, 9]];
+        assert_eq!(recall_at_k(&got, &truth, 1), 1.0);
+    }
+}

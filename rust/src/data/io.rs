@@ -1,0 +1,214 @@
+//! Vector-file I/O: fvecs/ivecs (the TexMex/ANN-benchmarks formats) and
+//! a minimal npy (v1.0, C-order f32) reader/writer for interchange with
+//! the Python side.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write fvecs: per vector, a little-endian u32 dim then dim f32s.
+pub fn write_fvecs(path: &Path, rows: &[Vec<f32>]) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for r in rows {
+        w.write_all(&(r.len() as u32).to_le_bytes())?;
+        for &v in r {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read fvecs.
+pub fn read_fvecs(path: &Path) -> std::io::Result<Vec<Vec<f32>>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut rows = Vec::new();
+    let mut dim_buf = [0u8; 4];
+    loop {
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let dim = u32::from_le_bytes(dim_buf) as usize;
+        let mut buf = vec![0u8; dim * 4];
+        r.read_exact(&mut buf)?;
+        rows.push(
+            buf.chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+        );
+    }
+    Ok(rows)
+}
+
+/// Write ivecs (u32 payloads, same framing as fvecs).
+pub fn write_ivecs(path: &Path, rows: &[Vec<u32>]) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for r in rows {
+        w.write_all(&(r.len() as u32).to_le_bytes())?;
+        for &v in r {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read ivecs.
+pub fn read_ivecs(path: &Path) -> std::io::Result<Vec<Vec<u32>>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut rows = Vec::new();
+    let mut dim_buf = [0u8; 4];
+    loop {
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e),
+        }
+        let dim = u32::from_le_bytes(dim_buf) as usize;
+        let mut buf = vec![0u8; dim * 4];
+        r.read_exact(&mut buf)?;
+        rows.push(
+            buf.chunks_exact(4)
+                .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect(),
+        );
+    }
+    Ok(rows)
+}
+
+/// Write a 2-D f32 array as npy v1.0 (little-endian, C order).
+pub fn write_npy_f32(path: &Path, rows: usize, cols: usize, data: &[f32]) -> std::io::Result<()> {
+    assert_eq!(data.len(), rows * cols);
+    let mut w = BufWriter::new(File::create(path)?);
+    let header_body = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({rows}, {cols}), }}"
+    );
+    // pad so that 10 + len(header) is a multiple of 64, newline-terminated
+    let unpadded = 10 + header_body.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    let header = format!("{header_body}{}\n", " ".repeat(pad));
+    w.write_all(b"\x93NUMPY\x01\x00")?;
+    w.write_all(&(header.len() as u16).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    for &v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read a 2-D f32 npy (v1.x, little-endian, C order only).
+pub fn read_npy_f32(path: &Path) -> std::io::Result<(usize, usize, Vec<f32>)> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic[..6] != b"\x93NUMPY" {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "not an npy file",
+        ));
+    }
+    let mut len_buf = [0u8; 2];
+    r.read_exact(&mut len_buf)?;
+    let hlen = u16::from_le_bytes(len_buf) as usize;
+    let mut header = vec![0u8; hlen];
+    r.read_exact(&mut header)?;
+    let header = String::from_utf8_lossy(&header);
+    if !header.contains("'<f4'") || header.contains("'fortran_order': True") {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "only little-endian C-order f32 npy supported",
+        ));
+    }
+    // parse "(rows, cols)"
+    let shape_part = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "bad npy shape")
+        })?;
+    let dims: Vec<usize> = shape_part
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let (rows, cols) = match dims.len() {
+        1 => (dims[0], 1),
+        2 => (dims[0], dims[1]),
+        _ => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "only 1-D/2-D npy supported",
+            ))
+        }
+    };
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    if buf.len() < rows * cols * 4 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "npy payload truncated",
+        ));
+    }
+    let data = buf[..rows * cols * 4]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok((rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("leanvec-io-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let rows = vec![vec![1.0f32, 2.0, 3.0], vec![-4.5, 0.0, 9.25]];
+        let p = tmp("a.fvecs");
+        write_fvecs(&p, &rows).unwrap();
+        assert_eq!(read_fvecs(&p).unwrap(), rows);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let rows = vec![vec![1u32, 2, 3], vec![7, 8]];
+        let p = tmp("b.ivecs");
+        write_ivecs(&p, &rows).unwrap();
+        assert_eq!(read_ivecs(&p).unwrap(), rows);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_roundtrip() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let p = tmp("c.npy");
+        write_npy_f32(&p, 3, 4, &data).unwrap();
+        let (r, c, d) = read_npy_f32(&p).unwrap();
+        assert_eq!((r, c), (3, 4));
+        assert_eq!(d, data);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn npy_rejects_garbage() {
+        let p = tmp("d.npy");
+        std::fs::write(&p, b"not-an-npy").unwrap();
+        assert!(read_npy_f32(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_fvecs_reads_empty() {
+        let p = tmp("e.fvecs");
+        std::fs::write(&p, b"").unwrap();
+        assert!(read_fvecs(&p).unwrap().is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+}

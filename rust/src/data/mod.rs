@@ -1,0 +1,10 @@
+//! Datasets: synthetic embedding generators (stand-ins for the paper's
+//! Table-1 roster — see DESIGN.md §Substitutions), exact ground truth,
+//! recall metrics, and fvecs/ivecs/npy-lite I/O.
+
+pub mod gt;
+pub mod io;
+pub mod synth;
+
+pub use gt::{ground_truth, recall_at_k};
+pub use synth::{generate, paper_datasets, Dataset, SynthSpec};

@@ -1,0 +1,346 @@
+//! Synthetic embedding generators.
+//!
+//! The paper's datasets (gist-960-1M, rqa-768-10M, ...) are large
+//! downloads/proprietary; these generators reproduce the property that
+//! drives every LeanVec result: the *spectral shape* of the database and
+//! query second moments, and their mismatch in the OOD case.
+//!
+//! Database: `x = U diag(s) z`, `z ~ N(0, I)`, `U` random orthogonal,
+//! `s_j = (1 + j)^-decay` (power-law spectrum like real deep-learning
+//! embeddings). ID queries repeat the process with fresh samples. OOD
+//! queries re-weight the spectrum toward the database's *tail*
+//! directions and mix in a rotated basis — modeling text-vs-image
+//! encoders (t2i/wit/laion) and question-vs-answer encoders (rqa), whose
+//! second moments disagree exactly this way.
+
+use crate::config::Similarity;
+use crate::linalg::matrix::normalize;
+use crate::linalg::qr::random_orthonormal;
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// How queries relate to the database distribution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QueryDist {
+    /// identical generative process (fresh samples)
+    InDistribution,
+    /// OOD with the given strength in [0, 1]: 0 = ID, 1 = fully
+    /// tail-concentrated + rotated
+    OutOfDistribution(f32),
+}
+
+/// Generator specification.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: String,
+    pub dim: usize,
+    pub n: usize,
+    pub n_learn_queries: usize,
+    pub n_test_queries: usize,
+    pub similarity: Similarity,
+    pub queries: QueryDist,
+    /// power-law spectrum exponent
+    pub decay: f64,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// In-distribution dataset shorthand.
+    pub fn id(name: &str, dim: usize, n: usize, n_queries: usize) -> SynthSpec {
+        SynthSpec {
+            name: name.to_string(),
+            dim,
+            n,
+            n_learn_queries: n_queries,
+            n_test_queries: n_queries,
+            similarity: Similarity::L2,
+            queries: QueryDist::InDistribution,
+            decay: 0.6,
+            seed: 0xDA7A,
+        }
+    }
+
+    /// Out-of-distribution dataset shorthand (inner product, the
+    /// cross-modal default).
+    pub fn ood(name: &str, dim: usize, n: usize, n_queries: usize) -> SynthSpec {
+        SynthSpec {
+            name: name.to_string(),
+            dim,
+            n,
+            n_learn_queries: n_queries,
+            n_test_queries: n_queries,
+            similarity: Similarity::InnerProduct,
+            queries: QueryDist::OutOfDistribution(0.7),
+            decay: 0.6,
+            seed: 0xDA7A,
+        }
+    }
+}
+
+/// A generated dataset with disjoint learn/test query splits
+/// (the paper's protocol: learn for LeanVec-OOD + calibration, test for
+/// reported numbers).
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    pub similarity: Similarity,
+    pub database: Vec<Vec<f32>>,
+    pub learn_queries: Vec<Vec<f32>>,
+    pub test_queries: Vec<Vec<f32>>,
+}
+
+fn sample_rows(
+    n: usize,
+    basis: &Matrix,
+    spectrum: &[f32],
+    rng: &mut Rng,
+    normalize_rows: bool,
+) -> Vec<Vec<f32>> {
+    let dd = basis.rows;
+    (0..n)
+        .map(|_| {
+            // v = U^T (s .* z): basis rows are the directions
+            let mut v = vec![0.0f32; dd];
+            for (j, &s) in spectrum.iter().enumerate() {
+                let c = s * rng.gaussian_f32();
+                if c.abs() < 1e-12 {
+                    continue;
+                }
+                let dir = basis.row(j);
+                for (x, &b) in v.iter_mut().zip(dir.iter()) {
+                    *x += c * b;
+                }
+            }
+            if normalize_rows {
+                normalize(&mut v);
+            }
+            v
+        })
+        .collect()
+}
+
+/// Generate a dataset from a spec.
+pub fn generate(spec: &SynthSpec) -> Dataset {
+    let mut rng = Rng::new(spec.seed ^ spec.dim as u64 ^ (spec.n as u64).rotate_left(17));
+    let dd = spec.dim;
+    let basis = random_orthonormal(dd, dd, &mut rng); // rows = directions
+    let spectrum: Vec<f32> = (0..dd)
+        .map(|j| (1.0 + j as f64).powf(-spec.decay) as f32)
+        .collect();
+    let norm_rows = spec.similarity == Similarity::Cosine;
+
+    let database = sample_rows(spec.n, &basis, &spectrum, &mut rng, norm_rows);
+
+    let (q_basis, q_spectrum) = match spec.queries {
+        QueryDist::InDistribution => (basis.clone(), spectrum.clone()),
+        QueryDist::OutOfDistribution(strength) => {
+            // tail-concentrated spectrum: queries put energy where the
+            // database has little (what breaks database-only PCA)
+            let mut rev = spectrum.clone();
+            rev.reverse();
+            let q_spec: Vec<f32> = spectrum
+                .iter()
+                .zip(rev.iter())
+                .map(|(&s, &r)| (1.0 - strength) * s + strength * r)
+                .collect();
+            // partially rotated basis (different encoder)
+            let g = random_orthonormal(dd, dd, &mut rng);
+            let mut mixed = basis.clone();
+            mixed.lerp(&g, 1.0 - 0.5 * strength, 0.5 * strength);
+            // re-orthonormalize the mixture
+            let q_basis = crate::linalg::qr::qr_orthonormal_columns(&mixed.transpose())
+                .transpose();
+            (q_basis, q_spec)
+        }
+    };
+
+    let learn_queries = sample_rows(
+        spec.n_learn_queries,
+        &q_basis,
+        &q_spectrum,
+        &mut rng,
+        norm_rows,
+    );
+    let test_queries = sample_rows(
+        spec.n_test_queries,
+        &q_basis,
+        &q_spectrum,
+        &mut rng,
+        norm_rows,
+    );
+
+    Dataset {
+        name: spec.name.clone(),
+        dim: dd,
+        similarity: spec.similarity,
+        database,
+        learn_queries,
+        test_queries,
+    }
+}
+
+/// The Table-1 roster scaled to this testbed (`scale` multiplies the
+/// database sizes; 1.0 -> 20k vectors per dataset, queries 500+500).
+pub fn paper_datasets(scale: f64) -> Vec<SynthSpec> {
+    let n = |base: usize| ((base as f64 * scale) as usize).max(500);
+    let q = 500usize;
+    let mk = |name: &str,
+              dim: usize,
+              sim: Similarity,
+              queries: QueryDist,
+              nn: usize| SynthSpec {
+        name: name.to_string(),
+        dim,
+        n: nn,
+        n_learn_queries: q,
+        n_test_queries: q,
+        similarity: sim,
+        queries,
+        decay: 0.6,
+        seed: 0xDA7A ^ dim as u64,
+    };
+    vec![
+        // ID (Table 1, top)
+        mk("gist-960", 960, Similarity::L2, QueryDist::InDistribution, n(20_000)),
+        mk("deep-256", 256, Similarity::L2, QueryDist::InDistribution, n(20_000)),
+        mk(
+            "open-images-512",
+            512,
+            Similarity::Cosine,
+            QueryDist::InDistribution,
+            n(20_000),
+        ),
+        // OOD (Table 1, bottom)
+        mk(
+            "t2i-200",
+            200,
+            Similarity::InnerProduct,
+            QueryDist::OutOfDistribution(0.5),
+            n(20_000),
+        ),
+        mk(
+            "wit-512",
+            512,
+            Similarity::InnerProduct,
+            QueryDist::OutOfDistribution(0.7),
+            n(20_000),
+        ),
+        mk(
+            "laion-512",
+            512,
+            Similarity::InnerProduct,
+            QueryDist::OutOfDistribution(0.9),
+            n(20_000),
+        ),
+        mk(
+            "rqa-768",
+            768,
+            Similarity::InnerProduct,
+            QueryDist::OutOfDistribution(0.7),
+            n(20_000),
+        ),
+    ]
+}
+
+/// Paper Table-1 target dimensionality per dataset (d column).
+pub fn paper_target_dim(name: &str) -> usize {
+    match name {
+        "gist-960" => 160,
+        "deep-256" => 96,
+        "open-images-512" => 160,
+        "t2i-200" => 192,
+        "wit-512" => 256,
+        "laion-512" => 320,
+        "rqa-768" => 160,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::leanvec::model::rows_to_matrix;
+
+    fn small_spec(queries: QueryDist) -> SynthSpec {
+        SynthSpec {
+            name: "test".into(),
+            dim: 32,
+            n: 400,
+            n_learn_queries: 200,
+            n_test_queries: 100,
+            similarity: Similarity::InnerProduct,
+            queries,
+            decay: 0.8,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn shapes_and_splits() {
+        let ds = generate(&small_spec(QueryDist::InDistribution));
+        assert_eq!(ds.database.len(), 400);
+        assert_eq!(ds.learn_queries.len(), 200);
+        assert_eq!(ds.test_queries.len(), 100);
+        assert!(ds.database.iter().all(|r| r.len() == 32));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(&small_spec(QueryDist::InDistribution));
+        let b = generate(&small_spec(QueryDist::InDistribution));
+        assert_eq!(a.database[17], b.database[17]);
+        assert_eq!(a.test_queries[3], b.test_queries[3]);
+    }
+
+    #[test]
+    fn database_spectrum_decays() {
+        let ds = generate(&small_spec(QueryDist::InDistribution));
+        let kx = rows_to_matrix(&ds.database).second_moment();
+        let (w, _) = crate::linalg::eigen::eigh(&kx);
+        assert!(w[0] > 5.0 * w[16], "top {} vs mid {}", w[0], w[16]);
+    }
+
+    #[test]
+    fn ood_moments_mismatch_id_moments_match() {
+        let id = generate(&small_spec(QueryDist::InDistribution));
+        let ood = generate(&small_spec(QueryDist::OutOfDistribution(0.9)));
+        let mismatch = |ds: &Dataset| {
+            let kx = rows_to_matrix(&ds.database).second_moment();
+            let kq = rows_to_matrix(&ds.learn_queries).second_moment();
+            let mut diff = kx.clone();
+            diff.lerp(&kq, 1.0, -1.0);
+            (diff.frobenius_norm() / kx.frobenius_norm()) as f64
+        };
+        let m_id = mismatch(&id);
+        let m_ood = mismatch(&ood);
+        assert!(m_ood > 2.0 * m_id, "ood {m_ood} vs id {m_id}");
+    }
+
+    #[test]
+    fn cosine_datasets_are_normalized() {
+        let mut spec = small_spec(QueryDist::InDistribution);
+        spec.similarity = Similarity::Cosine;
+        let ds = generate(&spec);
+        for r in ds.database.iter().take(10) {
+            let n: f32 = r.iter().map(|x| x * x).sum();
+            assert!((n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn roster_matches_table1_signature() {
+        let specs = paper_datasets(0.05);
+        assert_eq!(specs.len(), 7);
+        let by_name: std::collections::HashMap<_, _> =
+            specs.iter().map(|s| (s.name.clone(), s)).collect();
+        assert_eq!(by_name["gist-960"].dim, 960);
+        assert_eq!(by_name["gist-960"].similarity, Similarity::L2);
+        assert_eq!(by_name["rqa-768"].dim, 768);
+        assert!(matches!(
+            by_name["rqa-768"].queries,
+            QueryDist::OutOfDistribution(_)
+        ));
+        assert_eq!(by_name["open-images-512"].similarity, Similarity::Cosine);
+        assert!(paper_target_dim("gist-960") == 160);
+    }
+}

@@ -1,0 +1,408 @@
+//! Search-performance experiments: figs 1, 4, 5, 6, 7, 8, 9, 10, 14.
+
+use super::harness::{
+    build_arm, curve_json, dataset_truth, default_windows, print_table, qps_at_recall,
+    qps_recall_curve, standard_arms, Arm, ExpContext,
+};
+use crate::config::{Compression, ProjectionKind, Similarity};
+use crate::data::synth::{paper_datasets, paper_target_dim, Dataset, SynthSpec};
+use crate::graph::vamana::VamanaBuilder;
+use crate::index::builder::build_hnsw_baseline;
+use crate::index::ivfpq::{IvfPqIndex, IvfPqParams};
+use crate::index::leanvec_index::make_store;
+use crate::util::json::Json;
+use std::time::Instant;
+
+const K: usize = 10;
+const TARGET_RECALL: f64 = 0.9;
+
+fn spec_by_name(ctx: &ExpContext, name: &str) -> SynthSpec {
+    paper_datasets(ctx.scale)
+        .into_iter()
+        .find(|s| s.name == name)
+        .expect("known dataset")
+}
+
+fn curves_for_arms(
+    ds: &Dataset,
+    arms: &[Arm],
+    truth: &[Vec<u32>],
+) -> Vec<(String, Vec<super::harness::CurvePoint>)> {
+    let windows = default_windows(K);
+    arms.iter()
+        .map(|arm| {
+            (
+                arm.name.clone(),
+                qps_recall_curve(&arm.index, &ds.test_queries, truth, K, &windows),
+            )
+        })
+        .collect()
+}
+
+fn report_curves(
+    ctx: &ExpContext,
+    exp: &str,
+    dataset: &str,
+    curves: &[(String, Vec<super::harness::CurvePoint>)],
+    extra: Vec<(&str, Json)>,
+) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    for (name, curve) in curves {
+        let q90 = qps_at_recall(curve, TARGET_RECALL);
+        let best = curve.last().map(|p| p.recall).unwrap_or(0.0);
+        rows.push(vec![
+            name.clone(),
+            q90.map(|q| format!("{q:.0}")).unwrap_or("-".into()),
+            format!("{best:.3}"),
+            format!(
+                "{:.0}",
+                curve.first().map(|p| p.bytes_per_query).unwrap_or(0.0)
+            ),
+        ]);
+    }
+    println!("\n[{exp}] dataset {dataset} (k={K}, target recall {TARGET_RECALL}):");
+    print_table(
+        &["method", "QPS@0.9", "max recall", "bytes/query@w=k"],
+        &rows,
+    );
+    let mut obj = vec![
+        ("dataset", Json::str(dataset)),
+        (
+            "curves",
+            Json::obj(
+                curves
+                    .iter()
+                    .map(|(n, c)| (n.as_str(), curve_json(c)))
+                    .collect(),
+            ),
+        ),
+    ];
+    obj.extend(extra);
+    ctx.save(&format!("{exp}_{dataset}"), &Json::obj(obj))
+}
+
+/// Fig. 1/12: search throughput scales with compression level.
+pub fn fig1(ctx: &ExpContext) -> anyhow::Result<()> {
+    let ds = ctx.dataset(&spec_by_name(ctx, "rqa-768"));
+    let d = paper_target_dim("rqa-768");
+    let truth = dataset_truth(&ds, K);
+    let arms = vec![
+        build_arm(ctx, "fp16", &ds, ProjectionKind::None, 0, Compression::F16, Compression::F16),
+        build_arm(ctx, "lvq8", &ds, ProjectionKind::None, 0, Compression::Lvq8, Compression::F16),
+        build_arm(
+            ctx,
+            "lvq4x8",
+            &ds,
+            ProjectionKind::None,
+            0,
+            Compression::Lvq4x8,
+            Compression::F16,
+        ),
+        build_arm(
+            ctx,
+            "leanvec",
+            &ds,
+            ProjectionKind::OodEigSearch,
+            d,
+            Compression::Lvq8,
+            Compression::F16,
+        ),
+    ];
+    // compression factors vs FP16 full-D (paper: lvq8 2x, lvq4x8 ~4x,
+    // leanvec 9.6x at D=768,d=160)
+    let fp16_bytes = (ds.dim * 2) as f64;
+    let mut rows = Vec::new();
+    for arm in &arms {
+        rows.push(vec![
+            arm.name.clone(),
+            format!("{}", arm.index.primary.bytes_per_vector()),
+            format!("{:.1}x", fp16_bytes / arm.index.primary.bytes_per_vector() as f64),
+        ]);
+    }
+    println!("[fig1] primary-vector compression (D={} FP16 = {fp16_bytes} B):", ds.dim);
+    print_table(&["method", "bytes/vector", "compression vs FP16"], &rows);
+
+    let curves = curves_for_arms(&ds, &arms, &truth);
+    report_curves(
+        ctx,
+        "fig1",
+        &ds.name,
+        &curves,
+        vec![("fp16_bytes_per_vector", Json::num(fp16_bytes))],
+    )
+}
+
+/// Figs. 4 (ID) and 5 (OOD): QPS-recall across the standard arms.
+fn fig45(ctx: &ExpContext, exp: &str, names: &[&str]) -> anyhow::Result<()> {
+    for name in names {
+        let ds = ctx.dataset(&spec_by_name(ctx, name));
+        let d = paper_target_dim(name);
+        let truth = dataset_truth(&ds, K);
+        let arms = standard_arms(ctx, &ds, d);
+        let curves = curves_for_arms(&ds, &arms, &truth);
+        report_curves(ctx, exp, name, &curves, vec![])?;
+    }
+    Ok(())
+}
+
+pub fn fig4(ctx: &ExpContext) -> anyhow::Result<()> {
+    fig45(ctx, "fig4", &["gist-960", "deep-256", "open-images-512"])
+}
+
+pub fn fig5(ctx: &ExpContext) -> anyhow::Result<()> {
+    fig45(ctx, "fig5", &["t2i-200", "wit-512", "rqa-768", "laion-512"])
+}
+
+/// Fig. 6: graph-construction time across representations.
+pub fn fig6(ctx: &ExpContext) -> anyhow::Result<()> {
+    let mut json_rows = Vec::new();
+    let mut rows = Vec::new();
+    for name in ["rqa-768", "open-images-512"] {
+        let ds = ctx.dataset(&spec_by_name(ctx, name));
+        let d = paper_target_dim(name);
+        let arms = standard_arms(ctx, &ds, d);
+        for arm in &arms {
+            let b = arm.index.build_breakdown;
+            rows.push(vec![
+                name.to_string(),
+                arm.name.clone(),
+                format!("{:.2}", b.graph_seconds),
+                format!("{:.2}", b.train_seconds),
+                format!("{:.2}", b.total()),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("dataset", Json::str(name)),
+                ("method", Json::str(&arm.name)),
+                ("graph_seconds", Json::num(b.graph_seconds)),
+                ("train_seconds", Json::num(b.train_seconds)),
+                ("project_seconds", Json::num(b.project_seconds)),
+                ("quantize_seconds", Json::num(b.quantize_seconds)),
+                ("total_seconds", Json::num(b.total())),
+            ]));
+        }
+    }
+    println!("[fig6] index-construction time:");
+    print_table(
+        &["dataset", "method", "graph s", "train s", "total s"],
+        &rows,
+    );
+    ctx.save("fig6", &Json::arr(json_rows))
+}
+
+/// Fig. 7: LeanVec vs HNSW / Vamana / IVF-PQ.
+pub fn fig7(ctx: &ExpContext) -> anyhow::Result<()> {
+    for name in ["deep-256", "rqa-768"] {
+        let ds = ctx.dataset(&spec_by_name(ctx, name));
+        let d = paper_target_dim(name);
+        let truth = dataset_truth(&ds, K);
+        let windows = default_windows(K);
+
+        // SVS-LeanVec + SVS-LVQ arms
+        let arms = vec![
+            build_arm(
+                ctx,
+                "svs-leanvec",
+                &ds,
+                ProjectionKind::OodEigSearch,
+                d,
+                Compression::Lvq8,
+                Compression::F16,
+            ),
+            build_arm(
+                ctx,
+                "svs-lvq",
+                &ds,
+                ProjectionKind::None,
+                0,
+                Compression::Lvq4x8,
+                Compression::F16,
+            ),
+            // "vamana" baseline: vamana graph over uncompressed f32
+            build_arm(ctx, "vamana-f32", &ds, ProjectionKind::None, 0, Compression::F32, Compression::F32),
+        ];
+        let mut curves = curves_for_arms(&ds, &arms, &truth);
+
+        // HNSW baseline
+        let graph_sim = if ds.similarity == Similarity::Cosine {
+            Similarity::InnerProduct
+        } else {
+            ds.similarity
+        };
+        let hnsw = build_hnsw_baseline(&ds.database, graph_sim, Compression::F16, ctx.seed);
+        let mut hnsw_curve = Vec::new();
+        for &w in &windows {
+            let t0 = Instant::now();
+            let got: Vec<Vec<u32>> = ds
+                .test_queries
+                .iter()
+                .map(|q| hnsw.search(q, K, w))
+                .collect();
+            let wall = t0.elapsed().as_secs_f64();
+            hnsw_curve.push(super::harness::CurvePoint {
+                window: w,
+                recall: crate::data::gt::recall_at_k(&got, &truth, K),
+                qps: ds.test_queries.len() as f64 / wall,
+                bytes_per_query: 0.0,
+            });
+        }
+        curves.push(("hnsw".to_string(), hnsw_curve));
+
+        // IVF-PQ baseline (nprobe sweep instead of window sweep)
+        if ds.dim % 8 == 0 {
+            let ivf = IvfPqIndex::build(
+                &ds.database,
+                IvfPqParams {
+                    nlist: (ds.database.len() as f64).sqrt() as usize,
+                    m: 8,
+                    ksub: 256,
+                    kmeans_iters: 6,
+                },
+                graph_sim,
+                ctx.seed,
+            );
+            let mut curve = Vec::new();
+            for nprobe in [1usize, 2, 4, 8, 16, 32, 64] {
+                let t0 = Instant::now();
+                let got: Vec<Vec<u32>> = ds
+                    .test_queries
+                    .iter()
+                    .map(|q| ivf.search(q, K, nprobe).0)
+                    .collect();
+                let wall = t0.elapsed().as_secs_f64();
+                curve.push(super::harness::CurvePoint {
+                    window: nprobe,
+                    recall: crate::data::gt::recall_at_k(&got, &truth, K),
+                    qps: ds.test_queries.len() as f64 / wall,
+                    bytes_per_query: ivf.bytes_per_vector() as f64,
+                });
+            }
+            curves.push(("faiss-ivfpq".to_string(), curve));
+        }
+        report_curves(ctx, "fig7", name, &curves, vec![])?;
+    }
+    Ok(())
+}
+
+/// Fig. 8: scaling with database size.
+pub fn fig8(ctx: &ExpContext) -> anyhow::Result<()> {
+    let base = spec_by_name(ctx, "rqa-768");
+    for mult in [1usize, 4] {
+        let mut spec = base.clone();
+        spec.n *= mult;
+        spec.name = format!("rqa-768-{}k", spec.n / 1000);
+        let ds = ctx.dataset(&spec);
+        let truth = dataset_truth(&ds, K);
+        let d = paper_target_dim("rqa-768");
+        let arms = vec![
+            build_arm(
+                ctx,
+                "svs-leanvec",
+                &ds,
+                ProjectionKind::OodEigSearch,
+                d,
+                Compression::Lvq8,
+                Compression::F16,
+            ),
+            build_arm(
+                ctx,
+                "svs-lvq",
+                &ds,
+                ProjectionKind::None,
+                0,
+                Compression::Lvq4x8,
+                Compression::F16,
+            ),
+        ];
+        let curves = curves_for_arms(&ds, &arms, &truth);
+        report_curves(ctx, "fig8", &ds.name, &curves, vec![])?;
+    }
+    Ok(())
+}
+
+/// Fig. 9: target-dimensionality ablation.
+pub fn fig9(ctx: &ExpContext) -> anyhow::Result<()> {
+    let ds = ctx.dataset(&spec_by_name(ctx, "rqa-768"));
+    let truth = dataset_truth(&ds, K);
+    let dims = [64usize, 96, 128, 160, 256, 320];
+    let mut curves = Vec::new();
+    for &d in &dims {
+        let arm = build_arm(
+            ctx,
+            &format!("d={d}"),
+            &ds,
+            ProjectionKind::OodEigSearch,
+            d,
+            Compression::Lvq8,
+            Compression::F16,
+        );
+        curves.push((
+            arm.name.clone(),
+            qps_recall_curve(&arm.index, &ds.test_queries, &truth, K, &default_windows(K)),
+        ));
+    }
+    report_curves(ctx, "fig9", &ds.name, &curves, vec![])
+}
+
+/// Fig. 10: quantization-level ablation (primary x secondary).
+pub fn fig10(ctx: &ExpContext) -> anyhow::Result<()> {
+    let ds = ctx.dataset(&spec_by_name(ctx, "wit-512"));
+    let d = paper_target_dim("wit-512");
+    let truth = dataset_truth(&ds, K);
+    let combos: [(&str, Compression, Compression); 5] = [
+        ("lvq8+fp16", Compression::Lvq8, Compression::F16),
+        ("lvq8+lvq8", Compression::Lvq8, Compression::Lvq8),
+        ("lvq4+fp16", Compression::Lvq4, Compression::F16),
+        ("fp16+fp16", Compression::F16, Compression::F16),
+        ("lvq8+fp32", Compression::Lvq8, Compression::F32),
+    ];
+    let mut curves = Vec::new();
+    for (name, prim, sec) in combos {
+        let arm = build_arm(ctx, name, &ds, ProjectionKind::OodEigSearch, d, prim, sec);
+        curves.push((
+            arm.name.clone(),
+            qps_recall_curve(&arm.index, &ds.test_queries, &truth, K, &default_windows(K)),
+        ));
+    }
+    report_curves(ctx, "fig10", &ds.name, &curves, vec![])
+}
+
+/// Fig. 14: graphs built with vs without dimensionality reduction have
+/// the same search quality.
+pub fn fig14(ctx: &ExpContext) -> anyhow::Result<()> {
+    let ds = ctx.dataset(&spec_by_name(ctx, "wit-512"));
+    let d = paper_target_dim("wit-512");
+    let truth = dataset_truth(&ds, K);
+
+    // arm A: everything standard (graph built over reduced primaries)
+    let arm_a = build_arm(
+        ctx,
+        "graph-on-reduced",
+        &ds,
+        ProjectionKind::OodEigSearch,
+        d,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    // arm B: same primaries, but the graph is built over the FULL-D
+    // LVQ8 store and transplanted
+    let mut arm_b = build_arm(
+        ctx,
+        "graph-on-full",
+        &ds,
+        ProjectionKind::OodEigSearch,
+        d,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    let full_store = make_store(&ds.database, Compression::Lvq8);
+    let graph_sim = if ds.similarity == Similarity::Cosine {
+        Similarity::InnerProduct
+    } else {
+        ds.similarity
+    };
+    let gp = ctx.graph_params(ds.similarity);
+    arm_b.index.graph = VamanaBuilder::new(gp, graph_sim).build(full_store.as_ref());
+
+    let curves = curves_for_arms(&ds, &[arm_a, arm_b], &truth);
+    report_curves(ctx, "fig14", &ds.name, &curves, vec![])
+}

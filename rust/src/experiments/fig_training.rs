@@ -1,0 +1,283 @@
+//! Projection-learning experiments: figs 2, 3, 13, 15 and Prop. 1.
+
+use super::harness::{print_table, ExpContext};
+use crate::data::synth::{generate, paper_datasets, paper_target_dim, SynthSpec};
+use crate::leanvec::eigsearch::{beta_sweep, eigsearch, NativeTopd, TopdBackend};
+use crate::leanvec::fw::{frank_wolfe, FwParams, FwStepper, NativeStepper};
+use crate::leanvec::loss::ood_loss;
+use crate::leanvec::model::rows_to_matrix;
+use crate::leanvec::pca::pca;
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use std::time::Instant;
+
+fn spec_by_name(ctx: &ExpContext, name: &str) -> SynthSpec {
+    paper_datasets(ctx.scale)
+        .into_iter()
+        .find(|s| s.name == name)
+        .expect("known dataset")
+}
+
+fn moments(ctx: &ExpContext, name: &str) -> (Matrix, Matrix, usize) {
+    let ds = ctx.dataset(&spec_by_name(ctx, name));
+    let kx = rows_to_matrix(&ds.database).second_moment();
+    let kq = rows_to_matrix(&ds.learn_queries).second_moment();
+    let d = paper_target_dim(name);
+    (kq, kx, d)
+}
+
+/// Pick the FW stepper: PJRT artifact when requested + available.
+fn make_stepper(ctx: &ExpContext) -> Box<dyn FwStepper> {
+    if ctx.use_pjrt {
+        if let Ok(rt) = crate::runtime::executor::open_shared(
+            &crate::runtime::default_artifacts_dir(),
+        ) {
+            return Box::new(crate::runtime::PjrtFwStepper::new(rt));
+        }
+        eprintln!("[warn] pjrt requested but unavailable; native stepper");
+    }
+    Box::new(NativeStepper)
+}
+
+fn make_topd(ctx: &ExpContext) -> Box<dyn TopdBackend> {
+    if ctx.use_pjrt {
+        if let Ok(rt) = crate::runtime::executor::open_shared(
+            &crate::runtime::default_artifacts_dir(),
+        ) {
+            return Box::new(crate::runtime::PjrtTopd::new(rt));
+        }
+    }
+    Box::new(NativeTopd)
+}
+
+/// Fig. 2: Frank-Wolfe convergence (loss vs iteration, runtime).
+pub fn fig2(ctx: &ExpContext) -> anyhow::Result<()> {
+    let (kq, kx, d) = moments(ctx, "wit-512");
+    let init = eigsearch(&kq, &kx, d, make_topd(ctx).as_mut());
+    let mut stepper = make_stepper(ctx);
+    let t0 = Instant::now();
+    let res = frank_wolfe(
+        stepper.as_mut(),
+        init.p.clone(),
+        init.p.clone(),
+        &kq,
+        &kx,
+        FwParams {
+            max_iters: 100,
+            alpha: 0.7,
+            tol: 1e-3,
+        },
+    );
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[fig2] FW ({}) converged in {} iterations, {:.2}s (early-stop |Δf|/f <= 1e-3)",
+        stepper.name(),
+        res.iterations,
+        secs
+    );
+    let show = res.losses.len().min(8);
+    for (t, l) in res.losses.iter().take(show).enumerate() {
+        println!("  iter {t:>3}: loss {l:.6e}");
+    }
+    println!("  ...    best: {:.6e}", res.best_loss);
+    ctx.save(
+        "fig2",
+        &Json::obj(vec![
+            ("backend", Json::str(stepper.name())),
+            ("iterations", Json::num(res.iterations as f64)),
+            ("seconds", Json::num(secs)),
+            ("converged", Json::Bool(res.converged)),
+            (
+                "losses",
+                Json::arr(res.losses.iter().map(|&l| Json::num(l))),
+            ),
+        ]),
+    )
+}
+
+/// Fig. 3/17: the eigsearch loss is a smooth function of beta with a
+/// (unique) interior minimizer per d.
+pub fn fig3(ctx: &ExpContext) -> anyhow::Result<()> {
+    let (kq, kx, _) = moments(ctx, "wit-512");
+    let betas: Vec<f64> = (0..=20).map(|i| i as f64 / 20.0).collect();
+    let mut out = Vec::new();
+    for d in [64usize, 128, 192, 256] {
+        let sweep = beta_sweep(&kq, &kx, d, &betas, make_topd(ctx).as_mut());
+        let (bmin, lmin) = sweep
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        println!("[fig3] d={d}: argmin beta = {bmin:.2} (loss {lmin:.4e})");
+        out.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("argmin_beta", Json::num(bmin)),
+            (
+                "curve",
+                Json::arr(sweep.iter().map(|&(b, l)| {
+                    Json::obj(vec![("beta", Json::num(b)), ("loss", Json::num(l))])
+                })),
+            ),
+        ]));
+    }
+    ctx.save("fig3", &Json::arr(out))
+}
+
+/// Fig. 13/18: FW vs ES vs ES-initialized-FW, loss + runtime.
+pub fn fig13(ctx: &ExpContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    for name in ["t2i-200", "wit-512", "rqa-768"] {
+        let (kq, kx, d) = moments(ctx, name);
+
+        let t0 = Instant::now();
+        let es = eigsearch(&kq, &kx, d, make_topd(ctx).as_mut());
+        let es_s = t0.elapsed().as_secs_f64();
+
+        // FW from random init
+        let mut rng = crate::util::rng::Rng::new(ctx.seed);
+        let r0 = crate::linalg::qr::random_orthonormal(d, kx.rows, &mut rng);
+        let t0 = Instant::now();
+        let fw = frank_wolfe(
+            make_stepper(ctx).as_mut(),
+            r0.clone(),
+            r0,
+            &kq,
+            &kx,
+            FwParams::default(),
+        );
+        let fw_s = t0.elapsed().as_secs_f64();
+
+        // ES + FW (paper's Fig. 18 composite)
+        let t0 = Instant::now();
+        let esfw = frank_wolfe(
+            make_stepper(ctx).as_mut(),
+            es.p.clone(),
+            es.p.clone(),
+            &kq,
+            &kx,
+            FwParams::default(),
+        );
+        let esfw_s = es_s + t0.elapsed().as_secs_f64();
+
+        for (m, loss, secs) in [
+            ("leanvec-es", es.loss, es_s),
+            ("leanvec-fw", fw.best_loss, fw_s),
+            ("leanvec-es+fw", esfw.best_loss.min(es.loss), esfw_s),
+        ] {
+            rows.push(vec![
+                name.to_string(),
+                m.to_string(),
+                format!("{loss:.4e}"),
+                format!("{secs:.2}"),
+            ]);
+            json.push(Json::obj(vec![
+                ("dataset", Json::str(name)),
+                ("method", Json::str(m)),
+                ("loss", Json::num(loss)),
+                ("seconds", Json::num(secs)),
+            ]));
+        }
+    }
+    println!("[fig13] OOD-loss by optimizer:");
+    print_table(&["dataset", "method", "loss", "train s"], &rows);
+    ctx.save("fig13", &Json::arr(json))
+}
+
+/// Fig. 15/16: subsampling robustness of K_Q / K_X.
+pub fn fig15(ctx: &ExpContext) -> anyhow::Result<()> {
+    let mut spec = spec_by_name(ctx, "wit-512");
+    // the sweep needs up to 8D learn queries / database samples
+    spec.n_learn_queries = spec.dim * 8;
+    spec.n = spec.n.max(spec.dim * 8);
+    let ds = generate(&spec);
+    let d = paper_target_dim("wit-512");
+    let dd = ds.dim;
+    let full_kx = rows_to_matrix(&ds.database).second_moment();
+    let full_kq = rows_to_matrix(&ds.learn_queries).second_moment();
+    let p_full = eigsearch(&full_kq, &full_kx, d, &mut NativeTopd).p;
+    let loss_full = ood_loss(&p_full, &p_full, &full_kq, &full_kx);
+
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    for frac_d in [1usize, 2, 4, 8] {
+        let ns = (dd * frac_d).min(ds.database.len()).min(ds.learn_queries.len());
+        let kx = rows_to_matrix(&ds.database[..ns]).second_moment();
+        let kq = rows_to_matrix(&ds.learn_queries[..ns.min(ds.learn_queries.len())])
+            .second_moment();
+        let p = eigsearch(&kq, &kx, d, &mut NativeTopd).p;
+        // evaluate the subsampled solution on the FULL moments
+        let loss = ood_loss(&p, &p, &full_kq, &full_kx);
+        let rel = (loss - loss_full) / loss_full.abs().max(1e-30);
+        rows.push(vec![
+            format!("{frac_d}D = {ns}"),
+            format!("{loss:.4e}"),
+            format!("{rel:+.3}"),
+        ]);
+        out.push(Json::obj(vec![
+            ("samples", Json::num(ns as f64)),
+            ("loss_on_full", Json::num(loss)),
+            ("relative_excess", Json::num(rel)),
+        ]));
+    }
+    println!("[fig15] subsampled training vs full (full loss {loss_full:.4e}):");
+    print_table(&["samples", "loss on full moments", "rel. excess"], &rows);
+    ctx.save("fig15", &Json::arr(out))
+}
+
+/// Prop. 1: the OOD learners' loss never exceeds the PCA (SVD) bound.
+pub fn prop1(ctx: &ExpContext) -> anyhow::Result<()> {
+    let mut rows = Vec::new();
+    let mut json = Vec::new();
+    let mut all_hold = true;
+    for name in ["deep-256", "t2i-200", "wit-512", "rqa-768"] {
+        let (kq, kx, d) = moments(ctx, name);
+        let p = pca(&kx, d);
+        let bound = ood_loss(&p, &p, &kq, &kx);
+        let es = eigsearch(&kq, &kx, d, &mut NativeTopd);
+        let holds = es.loss <= bound * (1.0 + 1e-6);
+        all_hold &= holds;
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.4e}", es.loss),
+            format!("{bound:.4e}"),
+            holds.to_string(),
+        ]);
+        json.push(Json::obj(vec![
+            ("dataset", Json::str(name)),
+            ("ood_loss", Json::num(es.loss)),
+            ("pca_bound", Json::num(bound)),
+            ("holds", Json::Bool(holds)),
+        ]));
+    }
+    println!("[prop1] LeanVec-OOD loss <= PCA upper bound (Proposition 1):");
+    print_table(&["dataset", "OOD loss", "PCA bound", "holds"], &rows);
+    anyhow::ensure!(all_hold, "Proposition 1 violated");
+    ctx.save("prop1", &Json::arr(json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Prop. 1 at unit-test scale: the eigsearch loss never exceeds the
+    /// PCA bound, on small synthetic OOD moments (the full-scale check
+    /// runs as `repro experiment prop1`).
+    #[test]
+    fn prop1_property_small_moments() {
+        let mut rng = Rng::new(3);
+        let dd = 40;
+        let ub = crate::linalg::qr::random_orthonormal(dd, dd, &mut rng);
+        let uq = crate::linalg::qr::random_orthonormal(dd, dd, &mut rng);
+        let x = Matrix::randn(300, dd, &mut rng).matmul(&ub);
+        let q = Matrix::randn(200, dd, &mut rng).matmul(&uq);
+        let (kx, kq) = (x.second_moment(), q.second_moment());
+        for d in [5usize, 10, 20] {
+            let p = pca(&kx, d);
+            let bound = ood_loss(&p, &p, &kq, &kx);
+            let es = eigsearch(&kq, &kx, d, &mut NativeTopd);
+            assert!(es.loss <= bound * (1.0 + 1e-6), "d={d}: {} > {bound}", es.loss);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Shared experiment plumbing: contexts, QPS-recall sweeps, table
+//! printing, JSON output.
+
+use crate::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use crate::data::gt::{ground_truth, recall_at_k};
+use crate::data::synth::{generate, Dataset, SynthSpec};
+use crate::graph::beam::SearchCtx;
+use crate::index::builder::IndexBuilder;
+use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Experiment context (CLI flags).
+#[derive(Clone, Debug)]
+pub struct ExpContext {
+    pub out_dir: PathBuf,
+    /// multiplies dataset sizes (1.0 -> 20k vectors/dataset)
+    pub scale: f64,
+    /// use the PJRT artifacts for training/projection when available
+    pub use_pjrt: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext {
+            out_dir: PathBuf::from("results"),
+            scale: 0.35,
+            use_pjrt: false,
+            seed: 7,
+        }
+    }
+}
+
+impl ExpContext {
+    pub fn save(&self, name: &str, json: &Json) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(format!("{name}.json"));
+        std::fs::write(&path, json.to_pretty())?;
+        println!("[saved {path:?}]");
+        Ok(())
+    }
+
+    /// Graph parameters scaled for the testbed.
+    pub fn graph_params(&self, sim: Similarity) -> GraphParams {
+        let mut gp = GraphParams::for_similarity(sim);
+        gp.max_degree = 32;
+        gp.build_window = 64;
+        gp
+    }
+
+    pub fn dataset(&self, spec: &SynthSpec) -> Dataset {
+        let mut s = spec.clone();
+        s.n = ((s.n as f64) as usize).max(500);
+        generate(&s)
+    }
+}
+
+/// One method arm in a search comparison.
+pub struct Arm {
+    pub name: String,
+    pub index: LeanVecIndex,
+}
+
+/// Build one LeanVec-index arm.
+pub fn build_arm(
+    ctx: &ExpContext,
+    name: &str,
+    ds: &Dataset,
+    projection: ProjectionKind,
+    d: usize,
+    primary: Compression,
+    secondary: Compression,
+) -> Arm {
+    let gp = ctx.graph_params(ds.similarity);
+    let index = IndexBuilder::new()
+        .projection(projection)
+        .target_dim(d)
+        .primary(primary)
+        .secondary(secondary)
+        .graph_params(gp)
+        .seed(ctx.seed)
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+    Arm {
+        name: name.to_string(),
+        index,
+    }
+}
+
+/// The standard arms of figs 4/5: FP16 (no reduction), LVQ (4x8, no
+/// reduction), LeanVec-ID, LeanVec-OOD — all sharing graph params.
+pub fn standard_arms(ctx: &ExpContext, ds: &Dataset, d: usize) -> Vec<Arm> {
+    vec![
+        build_arm(ctx, "fp16", ds, ProjectionKind::None, 0, Compression::F16, Compression::F16),
+        build_arm(
+            ctx,
+            "lvq4x8",
+            ds,
+            ProjectionKind::None,
+            0,
+            Compression::Lvq4x8,
+            Compression::F16,
+        ),
+        build_arm(ctx, "leanvec-id", ds, ProjectionKind::Id, d, Compression::Lvq8, Compression::F16),
+        build_arm(
+            ctx,
+            "leanvec-ood",
+            ds,
+            ProjectionKind::OodEigSearch,
+            d,
+            Compression::Lvq8,
+            Compression::F16,
+        ),
+    ]
+}
+
+/// One point on a QPS-recall curve.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub window: usize,
+    pub recall: f64,
+    pub qps: f64,
+    pub bytes_per_query: f64,
+}
+
+/// Sweep the search window, measuring recall and single-thread QPS.
+pub fn qps_recall_curve(
+    index: &LeanVecIndex,
+    queries: &[Vec<f32>],
+    truth: &[Vec<u32>],
+    k: usize,
+    windows: &[usize],
+) -> Vec<CurvePoint> {
+    let mut ctx = SearchCtx::new(index.len());
+    let mut out = Vec::with_capacity(windows.len());
+    for &w in windows {
+        let params = SearchParams {
+            window: w,
+            rerank_window: w.max(k),
+        };
+        let mut got: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
+        let mut bytes = 0usize;
+        let t0 = Instant::now();
+        for q in queries {
+            let (ids, _, stats) = index.search_with_ctx(&mut ctx, q, k, params);
+            bytes += stats.bytes_touched;
+            got.push(ids);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        out.push(CurvePoint {
+            window: w,
+            recall: recall_at_k(&got, truth, k),
+            qps: queries.len() as f64 / wall,
+            bytes_per_query: bytes as f64 / queries.len() as f64,
+        });
+    }
+    out
+}
+
+/// The paper's headline metric: QPS at the first window reaching the
+/// recall target (linear interpolation between bracketing points).
+pub fn qps_at_recall(curve: &[CurvePoint], target: f64) -> Option<f64> {
+    let mut prev: Option<&CurvePoint> = None;
+    for p in curve {
+        if p.recall >= target {
+            return Some(match prev {
+                Some(lo) if p.recall > lo.recall => {
+                    let t = (target - lo.recall) / (p.recall - lo.recall);
+                    lo.qps + t * (p.qps - lo.qps)
+                }
+                _ => p.qps,
+            });
+        }
+        prev = Some(p);
+    }
+    None
+}
+
+/// Default window sweep.
+pub fn default_windows(k: usize) -> Vec<usize> {
+    let mut w: Vec<usize> = vec![k, k * 2, k * 3, k * 5, k * 8, k * 12, k * 20, k * 30];
+    w.dedup();
+    w
+}
+
+/// Ground truth for the test queries of a dataset.
+pub fn dataset_truth(ds: &Dataset, k: usize) -> Vec<Vec<u32>> {
+    ground_truth(&ds.database, &ds.test_queries, k, ds.similarity)
+}
+
+/// Pretty-print a table.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(
+        &widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>(),
+    );
+    for row in rows {
+        line(row);
+    }
+}
+
+/// Curve points -> JSON.
+pub fn curve_json(curve: &[CurvePoint]) -> Json {
+    Json::arr(curve.iter().map(|p| {
+        Json::obj(vec![
+            ("window", Json::num(p.window as f64)),
+            ("recall", Json::num(p.recall)),
+            ("qps", Json::num(p.qps)),
+            ("bytes_per_query", Json::num(p.bytes_per_query)),
+        ])
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::QueryDist;
+
+    fn tiny_ctx() -> ExpContext {
+        ExpContext {
+            out_dir: std::env::temp_dir().join(format!("leanvec-exp-{}", std::process::id())),
+            scale: 1.0,
+            use_pjrt: false,
+            seed: 1,
+        }
+    }
+
+    fn tiny_ds() -> Dataset {
+        generate(&SynthSpec {
+            name: "tiny".into(),
+            dim: 24,
+            n: 600,
+            n_learn_queries: 100,
+            n_test_queries: 60,
+            similarity: Similarity::InnerProduct,
+            queries: QueryDist::InDistribution,
+            decay: 0.7,
+            seed: 5,
+        })
+    }
+
+    #[test]
+    fn curve_is_monotone_in_recall() {
+        let ctx = tiny_ctx();
+        let ds = tiny_ds();
+        let arm = build_arm(
+            &ctx,
+            "t",
+            &ds,
+            ProjectionKind::Id,
+            8,
+            Compression::Lvq8,
+            Compression::F16,
+        );
+        let truth = dataset_truth(&ds, 10);
+        let curve = qps_recall_curve(&arm.index, &ds.test_queries, &truth, 10, &[10, 30, 80]);
+        assert_eq!(curve.len(), 3);
+        assert!(curve[2].recall >= curve[0].recall - 0.02);
+        assert!(curve.iter().all(|p| p.qps > 0.0));
+    }
+
+    #[test]
+    fn qps_at_recall_interpolates() {
+        let curve = vec![
+            CurvePoint {
+                window: 10,
+                recall: 0.5,
+                qps: 1000.0,
+                bytes_per_query: 0.0,
+            },
+            CurvePoint {
+                window: 20,
+                recall: 0.9,
+                qps: 500.0,
+                bytes_per_query: 0.0,
+            },
+        ];
+        let q = qps_at_recall(&curve, 0.7).unwrap();
+        assert!(q < 1000.0 && q > 500.0);
+        assert!(qps_at_recall(&curve, 0.95).is_none());
+    }
+
+    #[test]
+    fn save_writes_json() {
+        let ctx = tiny_ctx();
+        ctx.save("unit", &Json::obj(vec![("x", Json::num(1.0))]))
+            .unwrap();
+        let path = ctx.out_dir.join("unit.json");
+        assert!(path.exists());
+        std::fs::remove_file(path).ok();
+    }
+}

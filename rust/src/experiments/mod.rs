@@ -1,0 +1,48 @@
+//! Experiment harness: one entry per paper table/figure (DESIGN.md's
+//! experiment index). Each experiment prints the paper-style rows and
+//! writes machine-readable JSON under the output directory.
+//!
+//! Run via the CLI: `repro experiment <id> [--out results] [--scale S]`
+//! where `<id>` is one of: table1, fig1, fig2, fig3, fig4, fig5, fig6,
+//! fig7, fig8, fig9, fig10, fig11, fig13, fig14, fig15, prop1, all.
+
+pub mod fig_rerank;
+pub mod fig_search;
+pub mod fig_training;
+pub mod harness;
+pub mod table1;
+
+use harness::ExpContext;
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> anyhow::Result<()> {
+    match id {
+        "table1" => table1::run(ctx),
+        "fig1" => fig_search::fig1(ctx),
+        "fig2" => fig_training::fig2(ctx),
+        "fig3" => fig_training::fig3(ctx),
+        "fig4" => fig_search::fig4(ctx),
+        "fig5" => fig_search::fig5(ctx),
+        "fig6" => fig_search::fig6(ctx),
+        "fig7" => fig_search::fig7(ctx),
+        "fig8" => fig_search::fig8(ctx),
+        "fig9" => fig_search::fig9(ctx),
+        "fig10" => fig_search::fig10(ctx),
+        "fig11" => fig_rerank::fig11(ctx),
+        "fig13" => fig_training::fig13(ctx),
+        "fig14" => fig_search::fig14(ctx),
+        "fig15" => fig_training::fig15(ctx),
+        "prop1" => fig_training::prop1(ctx),
+        "all" => {
+            for id in [
+                "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8",
+                "fig9", "fig10", "fig11", "fig13", "fig14", "fig15", "prop1",
+            ] {
+                println!("\n================ {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown experiment '{other}'")),
+    }
+}

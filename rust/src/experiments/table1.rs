@@ -1,0 +1,35 @@
+//! Table 1: the dataset roster (synthetic stand-ins; see DESIGN.md
+//! §Substitutions) with the target dimensionality d per dataset.
+
+use super::harness::{print_table, ExpContext};
+use crate::data::synth::{paper_datasets, paper_target_dim, QueryDist};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpContext) -> anyhow::Result<()> {
+    let specs = paper_datasets(ctx.scale);
+    let mut rows = Vec::new();
+    let mut json_rows = Vec::new();
+    for s in &specs {
+        let ood = matches!(s.queries, QueryDist::OutOfDistribution(_));
+        let d = paper_target_dim(&s.name);
+        rows.push(vec![
+            s.name.clone(),
+            s.dim.to_string(),
+            s.n.to_string(),
+            s.similarity.name().to_string(),
+            if ood { "OOD" } else { "ID" }.to_string(),
+            d.to_string(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("name", Json::str(&s.name)),
+            ("D", Json::num(s.dim as f64)),
+            ("n", Json::num(s.n as f64)),
+            ("similarity", Json::str(s.similarity.name())),
+            ("ood", Json::Bool(ood)),
+            ("d", Json::num(d as f64)),
+        ]));
+    }
+    println!("Table 1 — evaluated datasets (synthetic stand-ins, scale {}):", ctx.scale);
+    print_table(&["dataset", "D", "n", "similarity", "queries", "d"], &rows);
+    ctx.save("table1", &Json::arr(json_rows))
+}

@@ -1,0 +1,312 @@
+//! Greedy best-first graph traversal with backtracking ("beam search"
+//! with a bounded search buffer), shared by Vamana and HNSW.
+//!
+//! This is the request-path hot loop. All state lives in a reusable
+//! [`SearchCtx`] so steady-state searches allocate nothing: the search
+//! buffer is a fixed-capacity sorted array (insertion into a ~100-entry
+//! window is cheaper than heap churn at these sizes — the same call the
+//! SVS library makes), and the visited set is an epoch-stamped array.
+
+/// One search-buffer entry.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    pub id: u32,
+    pub score: f32,
+    pub expanded: bool,
+}
+
+/// Reusable search state.
+pub struct SearchCtx {
+    /// sorted by score descending; capacity = window
+    buffer: Vec<Candidate>,
+    /// epoch-stamped visited marks, one per node
+    visited: Vec<u32>,
+    epoch: u32,
+    pub stats: SearchStats,
+}
+
+/// Per-search counters (hops, score evaluations) — these drive the
+/// bytes/query memory-traffic model of Fig. 1.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SearchStats {
+    pub hops: usize,
+    pub scored: usize,
+}
+
+impl SearchCtx {
+    pub fn new(n: usize) -> SearchCtx {
+        SearchCtx {
+            buffer: Vec::new(),
+            visited: vec![0; n],
+            epoch: 0,
+            stats: SearchStats::default(),
+        }
+    }
+
+    /// Grow the visited array if the graph grew.
+    pub fn ensure(&mut self, n: usize) {
+        if self.visited.len() < n {
+            self.visited.resize(n, 0);
+        }
+    }
+
+    fn begin(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // epoch wrapped: clear stamps and restart at 1
+            self.visited.iter_mut().for_each(|v| *v = 0);
+            self.epoch = 1;
+        }
+        self.buffer.clear();
+        self.stats = SearchStats::default();
+    }
+
+    #[inline]
+    fn mark_visited(&mut self, id: u32) -> bool {
+        let slot = &mut self.visited[id as usize];
+        if *slot == self.epoch {
+            false
+        } else {
+            *slot = self.epoch;
+            true
+        }
+    }
+
+    /// Insert into the sorted buffer, keeping at most `window` entries.
+    /// Returns true if inserted.
+    #[inline]
+    fn insert(&mut self, c: Candidate, window: usize) -> bool {
+        // find insertion point (descending by score)
+        let pos = self
+            .buffer
+            .partition_point(|e| e.score >= c.score);
+        if pos >= window {
+            return false;
+        }
+        if self.buffer.len() == window {
+            self.buffer.pop();
+        }
+        self.buffer.insert(pos, c);
+        true
+    }
+
+    /// index of the best unexpanded candidate
+    #[inline]
+    fn next_unexpanded(&self) -> Option<usize> {
+        self.buffer.iter().position(|c| !c.expanded)
+    }
+
+    /// The final candidates, best first.
+    pub fn results(&self) -> &[Candidate] {
+        &self.buffer
+    }
+}
+
+/// Greedy traversal: start from `entries`, repeatedly expand the best
+/// unexpanded candidate, scoring its out-neighbors with `score_fn` and
+/// fetching them with `neighbors_fn`.
+///
+/// `window` is the search-buffer width L; the returned slice holds up to
+/// `window` candidates, best first.
+pub fn greedy_search<'a, S, N>(
+    ctx: &'a mut SearchCtx,
+    entries: &[u32],
+    window: usize,
+    mut score_fn: S,
+    mut neighbors_fn: N,
+) -> &'a [Candidate]
+where
+    S: FnMut(u32) -> f32,
+    N: FnMut(u32, &mut Vec<u32>),
+{
+    ctx.begin();
+    let mut nbuf: Vec<u32> = Vec::with_capacity(64);
+    for &e in entries {
+        if ctx.mark_visited(e) {
+            let s = score_fn(e);
+            ctx.stats.scored += 1;
+            ctx.insert(
+                Candidate {
+                    id: e,
+                    score: s,
+                    expanded: false,
+                },
+                window,
+            );
+        }
+    }
+    while let Some(pos) = ctx.next_unexpanded() {
+        ctx.buffer[pos].expanded = true;
+        let node = ctx.buffer[pos].id;
+        ctx.stats.hops += 1;
+        neighbors_fn(node, &mut nbuf);
+        for &nb in nbuf.iter() {
+            if ctx.mark_visited(nb) {
+                let s = score_fn(nb);
+                ctx.stats.scored += 1;
+                ctx.insert(
+                    Candidate {
+                        id: nb,
+                        score: s,
+                        expanded: false,
+                    },
+                    window,
+                );
+            }
+        }
+    }
+    ctx.results()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path graph 0-1-2-...-9 with scores peaking at node 7.
+    fn path_graph() -> (Vec<Vec<u32>>, Vec<f32>) {
+        let n = 10;
+        let adj: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let mut v = Vec::new();
+                if i > 0 {
+                    v.push((i - 1) as u32);
+                }
+                if i + 1 < n {
+                    v.push((i + 1) as u32);
+                }
+                v
+            })
+            .collect();
+        let scores: Vec<f32> = (0..n).map(|i| -((i as f32) - 7.0).abs()).collect();
+        (adj, scores)
+    }
+
+    #[test]
+    fn finds_global_best_on_path() {
+        let (adj, scores) = path_graph();
+        let mut ctx = SearchCtx::new(10);
+        let res = greedy_search(
+            &mut ctx,
+            &[0],
+            4,
+            |id| scores[id as usize],
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&adj[id as usize]);
+            },
+        );
+        assert_eq!(res[0].id, 7);
+    }
+
+    #[test]
+    fn window_one_greedy_can_get_stuck_but_wider_does_not() {
+        // two-peak score over a path: local max at 1, global at 8
+        let n = 10;
+        let adj: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let mut v = Vec::new();
+                if i > 0 {
+                    v.push((i - 1) as u32);
+                }
+                if i + 1 < n {
+                    v.push((i + 1) as u32);
+                }
+                v
+            })
+            .collect();
+        let scores = [0.5f32, 0.9, 0.1, 0.0, 0.0, 0.2, 0.4, 0.6, 1.0, 0.3];
+        let run = |window: usize| {
+            let mut ctx = SearchCtx::new(n);
+            let res = greedy_search(
+                &mut ctx,
+                &[0],
+                window,
+                |id| scores[id as usize],
+                |id, out| {
+                    out.clear();
+                    out.extend_from_slice(&adj[id as usize]);
+                },
+            );
+            res[0].id
+        };
+        assert_eq!(run(10), 8, "wide window explores past the dip");
+    }
+
+    #[test]
+    fn never_scores_a_node_twice() {
+        let (adj, scores) = path_graph();
+        let mut count = vec![0usize; 10];
+        let mut ctx = SearchCtx::new(10);
+        let counter = std::cell::RefCell::new(&mut count);
+        greedy_search(
+            &mut ctx,
+            &[5, 5, 5],
+            10,
+            |id| {
+                counter.borrow_mut()[id as usize] += 1;
+                scores[id as usize]
+            },
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&adj[id as usize]);
+            },
+        );
+        assert!(count.iter().all(|&c| c <= 1), "{count:?}");
+    }
+
+    #[test]
+    fn results_sorted_descending() {
+        let (adj, scores) = path_graph();
+        let mut ctx = SearchCtx::new(10);
+        let res = greedy_search(
+            &mut ctx,
+            &[0],
+            8,
+            |id| scores[id as usize],
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&adj[id as usize]);
+            },
+        );
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn ctx_reuse_across_epochs() {
+        let (adj, scores) = path_graph();
+        let mut ctx = SearchCtx::new(10);
+        for _ in 0..5 {
+            let res = greedy_search(
+                &mut ctx,
+                &[0],
+                4,
+                |id| scores[id as usize],
+                |id, out| {
+                    out.clear();
+                    out.extend_from_slice(&adj[id as usize]);
+                },
+            );
+            assert_eq!(res[0].id, 7);
+        }
+        assert!(ctx.stats.hops > 0);
+    }
+
+    #[test]
+    fn buffer_respects_window() {
+        let (adj, scores) = path_graph();
+        let mut ctx = SearchCtx::new(10);
+        let res = greedy_search(
+            &mut ctx,
+            &[0],
+            3,
+            |id| scores[id as usize],
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&adj[id as usize]);
+            },
+        );
+        assert!(res.len() <= 3);
+    }
+}

@@ -1,0 +1,320 @@
+//! HNSW baseline (Malkov & Yashunin, 2018) — the HNSWlib stand-in for
+//! the Fig. 7/8 comparisons. Layered navigable-small-world graph with
+//! exponentially sampled levels, greedy descent through the upper
+//! layers and beam search at layer 0.
+
+use crate::config::Similarity;
+use crate::graph::beam::{greedy_search, SearchCtx};
+use crate::quant::ScoreStore;
+use crate::util::rng::Rng;
+
+pub struct HnswParams {
+    /// max neighbors per node at layers > 0 (layer 0 gets 2M)
+    pub m: usize,
+    /// construction beam width
+    pub ef_construction: usize,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams {
+            m: 16,
+            ef_construction: 100,
+        }
+    }
+}
+
+pub struct HnswGraph {
+    /// layers[l][node] = neighbor list; layer 0 covers all nodes
+    layers: Vec<Vec<Vec<u32>>>,
+    /// highest layer per node
+    node_level: Vec<u8>,
+    entry: u32,
+    pub sim: Similarity,
+    pub build_seconds: f64,
+}
+
+impl HnswGraph {
+    /// Insert-at-a-time construction over `store`.
+    pub fn build(store: &dyn ScoreStore, params: &HnswParams, sim: Similarity, seed: u64) -> HnswGraph {
+        let t0 = std::time::Instant::now();
+        let n = store.len();
+        assert!(n > 0);
+        let mut rng = Rng::new(seed);
+        let ml = 1.0 / (params.m as f64).ln();
+        let max_level_cap = 16usize;
+
+        let mut node_level = vec![0u8; n];
+        for lvl in node_level.iter_mut() {
+            let u = rng.next_f64().max(1e-12);
+            *lvl = ((-u.ln() * ml).floor() as usize).min(max_level_cap) as u8;
+        }
+        let top = node_level.iter().copied().max().unwrap_or(0) as usize;
+        let mut layers: Vec<Vec<Vec<u32>>> = (0..=top)
+            .map(|_| vec![Vec::new(); n])
+            .collect();
+        let mut entry = 0u32;
+        let mut entry_level = node_level[0] as usize;
+        let mut ctx = SearchCtx::new(n);
+
+        for node in 0..n as u32 {
+            if node == 0 {
+                continue; // first node is the initial entry point
+            }
+            let vec = store.decode(node);
+            let pq = store.prepare(&vec, sim);
+            let lvl = node_level[node as usize] as usize;
+
+            // greedy descent from the top entry to lvl+1
+            let mut ep = entry;
+            for l in (lvl + 1..=entry_level).rev() {
+                ep = Self::greedy_layer(store, &layers[l], &pq, ep);
+            }
+            // insert at layers min(lvl, entry_level)..0
+            for l in (0..=lvl.min(entry_level)).rev() {
+                let max_deg = if l == 0 { params.m * 2 } else { params.m };
+                let res = greedy_search(
+                    &mut ctx,
+                    &[ep],
+                    params.ef_construction,
+                    |id| store.score(&pq, id),
+                    |id, out| {
+                        out.clear();
+                        out.extend_from_slice(&layers[l][id as usize]);
+                    },
+                );
+                // Algorithm-4 neighbor-selection heuristic: take e only
+                // if it is closer to the new node than to every already
+                // selected neighbor (diversified edges).
+                let cand_ids: Vec<u32> =
+                    res.iter().map(|c| c.id).filter(|&id| id != node).collect();
+                let selected =
+                    Self::select_neighbors_heuristic(store, sim, &vec, &cand_ids, max_deg);
+                if let Some(&first) = selected.first() {
+                    ep = first;
+                }
+                for &nb in &selected {
+                    layers[l][node as usize].push(nb);
+                    let nb_list = &mut layers[l][nb as usize];
+                    nb_list.push(node);
+                    if nb_list.len() > max_deg {
+                        // shrink nb's list with the same diversification
+                        let nb_vec = store.decode(nb);
+                        let pool = nb_list.clone();
+                        *nb_list = Self::select_neighbors_heuristic(
+                            store, sim, &nb_vec, &pool, max_deg,
+                        );
+                    }
+                }
+            }
+            if lvl > entry_level {
+                entry = node;
+                entry_level = lvl;
+            }
+        }
+
+        HnswGraph {
+            layers,
+            node_level,
+            entry,
+            sim,
+            build_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// HNSW Algorithm 4: greedy diversified neighbor selection in
+    /// Euclidean geometry on decoded vectors (see the Vamana prune for
+    /// why geometry-based diversification is used for MIPS too).
+    fn select_neighbors_heuristic(
+        store: &dyn ScoreStore,
+        _sim: Similarity,
+        base: &[f32],
+        pool: &[u32],
+        max_deg: usize,
+    ) -> Vec<u32> {
+        use crate::linalg::matrix::l2_sq;
+        let mut cands: Vec<(f32, u32, Vec<f32>)> = pool
+            .iter()
+            .map(|&id| {
+                let v = store.decode(id);
+                (l2_sq(base, &v), id, v)
+            })
+            .collect();
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out: Vec<(u32, Vec<f32>)> = Vec::with_capacity(max_deg);
+        let mut pruned: Vec<u32> = Vec::new();
+        for (d_base, id, v) in cands {
+            if out.len() >= max_deg {
+                break;
+            }
+            let diverse = out.iter().all(|(_, s)| l2_sq(s, &v) >= d_base);
+            if diverse {
+                out.push((id, v));
+            } else {
+                pruned.push(id);
+            }
+        }
+        let mut ids: Vec<u32> = out.into_iter().map(|(id, _)| id).collect();
+        // keepPrunedConnections: refill remaining slots from the pruned
+        // pool (closest first) so nodes keep full degree/connectivity
+        for id in pruned {
+            if ids.len() >= max_deg {
+                break;
+            }
+            ids.push(id);
+        }
+        ids
+    }
+
+    fn greedy_layer(
+        store: &dyn ScoreStore,
+        layer: &[Vec<u32>],
+        pq: &crate::quant::PreparedQuery,
+        start: u32,
+    ) -> u32 {
+        let mut cur = start;
+        let mut cur_score = store.score(pq, cur);
+        loop {
+            let mut improved = false;
+            for &nb in &layer[cur as usize] {
+                let s = store.score(pq, nb);
+                if s > cur_score {
+                    cur = nb;
+                    cur_score = s;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return cur;
+            }
+        }
+    }
+
+    /// Search: greedy descent through upper layers, beam at layer 0.
+    pub fn search<'c>(
+        &self,
+        ctx: &'c mut SearchCtx,
+        store: &dyn ScoreStore,
+        pq: &crate::quant::PreparedQuery,
+        ef: usize,
+    ) -> &'c [crate::graph::beam::Candidate] {
+        ctx.ensure(store.len());
+        let mut ep = self.entry;
+        for l in (1..self.layers.len()).rev() {
+            ep = Self::greedy_layer(store, &self.layers[l], pq, ep);
+        }
+        greedy_search(
+            ctx,
+            &[ep],
+            ef,
+            |id| store.score(pq, id),
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&self.layers[0][id as usize]);
+            },
+        )
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn max_level_of(&self, node: u32) -> usize {
+        self.node_level[node as usize] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::{dot, l2_sq};
+    use crate::quant::F32Store;
+
+    fn clustered_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32() * 4.0).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                centers[i % 5]
+                    .iter()
+                    .map(|&x| x + rng.gaussian_f32() * 0.3)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn builds_with_multiple_layers() {
+        let rows = clustered_rows(500, 8, 1);
+        let store = F32Store::from_rows(&rows);
+        let g = HnswGraph::build(&store, &HnswParams::default(), Similarity::L2, 1);
+        assert!(g.num_layers() >= 2, "{}", g.num_layers());
+        assert!(g.build_seconds > 0.0);
+    }
+
+    #[test]
+    fn recall_l2() {
+        let rows = clustered_rows(400, 8, 2);
+        let store = F32Store::from_rows(&rows);
+        let g = HnswGraph::build(&store, &HnswParams::default(), Similarity::L2, 2);
+        let mut rng = Rng::new(50);
+        let mut ctx = SearchCtx::new(400);
+        let mut hits = 0;
+        let trials = 30;
+        for _ in 0..trials {
+            let q: Vec<f32> = rows[rng.below(400)]
+                .iter()
+                .map(|&x| x + rng.gaussian_f32() * 0.05)
+                .collect();
+            let mut truth: Vec<u32> = (0..400u32).collect();
+            truth.sort_by(|&a, &b| {
+                l2_sq(&q, &rows[a as usize])
+                    .partial_cmp(&l2_sq(&q, &rows[b as usize]))
+                    .unwrap()
+            });
+            let pq = store.prepare(&q, Similarity::L2);
+            let res = g.search(&mut ctx, &store, &pq, 50);
+            let got: Vec<u32> = res.iter().take(10).map(|c| c.id).collect();
+            hits += truth[..10].iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = hits as f64 / (10 * trials) as f64;
+        assert!(recall >= 0.85, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn recall_ip() {
+        let rows = clustered_rows(300, 8, 3);
+        let store = F32Store::from_rows(&rows);
+        let g = HnswGraph::build(&store, &HnswParams::default(), Similarity::InnerProduct, 3);
+        let mut rng = Rng::new(51);
+        let mut ctx = SearchCtx::new(300);
+        let mut hits = 0;
+        let trials = 30;
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            let mut truth: Vec<u32> = (0..300u32).collect();
+            truth.sort_by(|&a, &b| {
+                dot(&q, &rows[b as usize])
+                    .partial_cmp(&dot(&q, &rows[a as usize]))
+                    .unwrap()
+            });
+            let pq = store.prepare(&q, Similarity::InnerProduct);
+            let res = g.search(&mut ctx, &store, &pq, 50);
+            let got: Vec<u32> = res.iter().take(10).map(|c| c.id).collect();
+            hits += truth[..10].iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = hits as f64 / (10 * trials) as f64;
+        assert!(recall >= 0.8, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn node_levels_mostly_zero() {
+        let rows = clustered_rows(1000, 4, 4);
+        let store = F32Store::from_rows(&rows);
+        let g = HnswGraph::build(&store, &HnswParams::default(), Similarity::L2, 5);
+        let zeros = (0..1000u32).filter(|&i| g.max_level_of(i) == 0).count();
+        assert!(zeros > 800, "{zeros} of 1000 at level 0");
+    }
+}

@@ -1,0 +1,10 @@
+//! Graph indices: the Vamana graph (Jayaram Subramanya et al., 2019)
+//! used by LeanVec/SVS, a greedy best-first search with backtracking
+//! (Fu et al., 2019), and an HNSW baseline (Malkov & Yashunin, 2018).
+
+pub mod beam;
+pub mod hnsw;
+pub mod vamana;
+
+pub use beam::{SearchCtx, SearchStats};
+pub use vamana::{Adjacency, VamanaBuilder, VamanaGraph};

@@ -1,0 +1,465 @@
+//! Vamana graph construction (Jayaram Subramanya et al., 2019) — the
+//! graph used by SVS/LeanVec — with the α-slack robust-prune rule and
+//! the two-pass build schedule (Appendix A of the paper).
+//!
+//! Build works directly on a compressed [`ScoreStore`] (the paper's key
+//! observation: construction is robust to LVQ *and* to dimensionality
+//! reduction, Fig. 14), so building on LeanVec primaries is exactly as
+//! fast as searching them.
+
+use crate::config::{GraphParams, Similarity};
+use crate::graph::beam::{greedy_search, SearchCtx};
+use crate::linalg::matrix::l2_sq;
+use crate::quant::ScoreStore;
+
+/// Fixed-max-degree adjacency stored as one flat u32 block per node.
+pub struct Adjacency {
+    n: usize,
+    max_degree: usize,
+    flat: Vec<u32>,
+    len: Vec<u32>,
+}
+
+impl Adjacency {
+    pub fn new(n: usize, max_degree: usize) -> Adjacency {
+        Adjacency {
+            n,
+            max_degree,
+            flat: vec![0; n * max_degree],
+            len: vec![0; n],
+        }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, id: u32) -> &[u32] {
+        let i = id as usize;
+        &self.flat[i * self.max_degree..i * self.max_degree + self.len[i] as usize]
+    }
+
+    pub fn set_neighbors(&mut self, id: u32, list: &[u32]) {
+        let i = id as usize;
+        let k = list.len().min(self.max_degree);
+        self.flat[i * self.max_degree..i * self.max_degree + k].copy_from_slice(&list[..k]);
+        self.len[i] = k as u32;
+    }
+
+    /// Append one neighbor; returns false when full.
+    pub fn push_neighbor(&mut self, id: u32, nb: u32) -> bool {
+        let i = id as usize;
+        let l = self.len[i] as usize;
+        if l >= self.max_degree {
+            return false;
+        }
+        self.flat[i * self.max_degree + l] = nb;
+        self.len[i] = (l + 1) as u32;
+        true
+    }
+
+    pub fn degree(&self, id: u32) -> usize {
+        self.len[id as usize] as usize
+    }
+
+    pub fn len_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.max_degree
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        self.len.iter().map(|&l| l as f64).sum::<f64>() / self.n.max(1) as f64
+    }
+}
+
+/// A built Vamana graph: adjacency + entry point.
+pub struct VamanaGraph {
+    pub adj: Adjacency,
+    pub medoid: u32,
+    pub params: GraphParams,
+    pub sim: Similarity,
+    /// wall-clock seconds spent in `build` (Fig. 6 data)
+    pub build_seconds: f64,
+}
+
+impl VamanaGraph {
+    /// Beam search for a prepared query over `store`. Returns candidates
+    /// best-first (up to `window`).
+    pub fn search<'c>(
+        &self,
+        ctx: &'c mut SearchCtx,
+        store: &dyn ScoreStore,
+        pq: &crate::quant::PreparedQuery,
+        window: usize,
+    ) -> &'c [crate::graph::beam::Candidate] {
+        ctx.ensure(self.adj.len_nodes());
+        greedy_search(
+            ctx,
+            &[self.medoid],
+            window,
+            |id| store.score(pq, id),
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(self.adj.neighbors(id));
+            },
+        )
+    }
+}
+
+/// Candidate record used during pruning.
+struct PruneCand {
+    id: u32,
+    /// squared L2 distance to the node being pruned
+    dist_to_p: f32,
+    vec: Vec<f32>,
+    alive: bool,
+}
+
+/// Vamana builder.
+pub struct VamanaBuilder {
+    pub params: GraphParams,
+    pub sim: Similarity,
+    pub seed: u64,
+}
+
+impl VamanaBuilder {
+    pub fn new(params: GraphParams, sim: Similarity) -> VamanaBuilder {
+        VamanaBuilder {
+            params,
+            sim,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Build the graph over the vectors in `store`.
+    pub fn build(&self, store: &dyn ScoreStore) -> VamanaGraph {
+        let t0 = std::time::Instant::now();
+        let n = store.len();
+        assert!(n > 0, "cannot build an empty graph");
+        let r = self.params.max_degree.min(n - 1);
+        let mut adj = Adjacency::new(n, self.params.max_degree);
+        let mut rng = crate::util::rng::Rng::new(self.seed);
+
+        // --- random initial graph (R/2 out-edges per node)
+        let init_deg = (r / 2).max(1).min(n - 1);
+        for i in 0..n {
+            let mut picked = Vec::with_capacity(init_deg);
+            while picked.len() < init_deg {
+                let j = rng.below(n) as u32;
+                if j as usize != i && !picked.contains(&j) {
+                    picked.push(j);
+                }
+            }
+            adj.set_neighbors(i as u32, &picked);
+        }
+
+        let medoid = self.find_medoid(store);
+        let mut ctx = SearchCtx::new(n);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+
+        // --- two passes: relaxed alpha then target alpha (DiskANN recipe)
+        let alphas = match self.sim {
+            Similarity::L2 | Similarity::Cosine => vec![1.0f32, self.params.alpha],
+            Similarity::InnerProduct => vec![1.0f32, self.params.alpha],
+        };
+        for &alpha in &alphas {
+            rng.shuffle(&mut order);
+            for &node in &order {
+                self.insert_node(store, &mut adj, &mut ctx, medoid, node, alpha);
+            }
+        }
+
+        VamanaGraph {
+            adj,
+            medoid,
+            params: self.params,
+            sim: self.sim,
+            build_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// One Vamana insertion round for `node`.
+    fn insert_node(
+        &self,
+        store: &dyn ScoreStore,
+        adj: &mut Adjacency,
+        ctx: &mut SearchCtx,
+        medoid: u32,
+        node: u32,
+        alpha: f32,
+    ) {
+        let node_vec = store.decode(node);
+        let pq = store.prepare(&node_vec, self.sim);
+        // search the current graph with the node itself as query
+        let window = self.params.build_window;
+        let results = greedy_search(
+            ctx,
+            &[medoid],
+            window,
+            |id| store.score(&pq, id),
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(adj.neighbors(id));
+            },
+        );
+        // candidate pool = search results + current out-neighbors
+        let mut ids: Vec<u32> = results.iter().map(|c| c.id).collect();
+        ids.extend_from_slice(adj.neighbors(node));
+        ids.sort_unstable();
+        ids.dedup();
+        ids.retain(|&id| id != node);
+
+        let selected = self.robust_prune(store, node, &node_vec, &ids, alpha);
+        adj.set_neighbors(node, &selected);
+
+        // reverse edges
+        for &nb in &selected {
+            if adj.degree(nb) < adj.max_degree() {
+                if !adj.neighbors(nb).contains(&node) {
+                    adj.push_neighbor(nb, node);
+                }
+            } else {
+                // overflow: re-prune nb's list including the new edge
+                let nb_vec = store.decode(nb);
+                let mut pool: Vec<u32> = adj.neighbors(nb).to_vec();
+                if !pool.contains(&node) {
+                    pool.push(node);
+                }
+                let pruned = self.robust_prune(store, nb, &nb_vec, &pool, alpha);
+                adj.set_neighbors(nb, &pruned);
+            }
+        }
+    }
+
+    /// α-slack robust prune (DiskANN convention, squared distances):
+    /// greedily keep the closest candidate, drop everything it "covers":
+    /// `s` covers `c` when `alpha_l2 * d(s, c) <= d(p, c)`.
+    ///
+    /// Pruning geometry is always Euclidean on the decoded vectors —
+    /// for MIPS the navigation scores stay inner-product, but edge
+    /// diversification over a *proximity* structure is the robust choice
+    /// (the paper's alpha = 0.95 for IP expresses the same slack; we map
+    /// it to the equivalent L2 slack 1/alpha).
+    fn robust_prune(
+        &self,
+        store: &dyn ScoreStore,
+        p: u32,
+        p_vec: &[f32],
+        pool: &[u32],
+        alpha: f32,
+    ) -> Vec<u32> {
+        let r = self.params.max_degree;
+        let alpha_l2 = if alpha >= 1.0 { alpha } else { 1.0 / alpha };
+        let mut cands: Vec<PruneCand> = pool
+            .iter()
+            .filter(|&&id| id != p)
+            .map(|&id| {
+                let vec = store.decode(id);
+                PruneCand {
+                    id,
+                    dist_to_p: l2_sq(p_vec, &vec),
+                    vec,
+                    alive: true,
+                }
+            })
+            .collect();
+        cands.sort_by(|a, b| a.dist_to_p.partial_cmp(&b.dist_to_p).unwrap());
+
+        let mut out: Vec<u32> = Vec::with_capacity(r);
+        for i in 0..cands.len() {
+            if !cands[i].alive {
+                continue;
+            }
+            out.push(cands[i].id);
+            if out.len() >= r {
+                break;
+            }
+            // deactivate covered candidates
+            let (head, tail) = cands.split_at_mut(i + 1);
+            let s = &head[i];
+            for c in tail.iter_mut().filter(|c| c.alive) {
+                if alpha_l2 * l2_sq(&s.vec, &c.vec) <= c.dist_to_p {
+                    c.alive = false;
+                }
+            }
+        }
+        out
+    }
+
+    /// Medoid: the stored vector most similar to the dataset centroid.
+    fn find_medoid(&self, store: &dyn ScoreStore) -> u32 {
+        let n = store.len();
+        let dim = store.dim();
+        let mut mean = vec![0.0f64; dim];
+        // sample up to 2048 vectors for the centroid
+        let step = (n / 2048).max(1);
+        let mut count = 0usize;
+        let mut i = 0usize;
+        while i < n {
+            let v = store.decode(i as u32);
+            for (m, &x) in mean.iter_mut().zip(v.iter()) {
+                *m += x as f64;
+            }
+            count += 1;
+            i += step;
+        }
+        let mean_f32: Vec<f32> = mean.iter().map(|&m| (m / count as f64) as f32).collect();
+        let pq = store.prepare(&mean_f32, Similarity::L2);
+        let mut best = (0u32, f32::NEG_INFINITY);
+        i = 0;
+        while i < n {
+            let s = store.score(&pq, i as u32);
+            if s > best.1 {
+                best = (i as u32, s);
+            }
+            i += step;
+        }
+        best.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::dot;
+    use crate::quant::F32Store;
+    use crate::util::rng::Rng;
+
+    fn clustered_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        // a few well-separated Gaussian blobs — easy recall target
+        let mut rng = Rng::new(seed);
+        let k = 5;
+        let centers: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32() * 4.0).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                let c = &centers[i % k];
+                c.iter().map(|&x| x + rng.gaussian_f32() * 0.3).collect()
+            })
+            .collect()
+    }
+
+    fn build_graph(rows: &[Vec<f32>], sim: Similarity) -> (VamanaGraph, F32Store) {
+        let store = F32Store::from_rows(rows);
+        let mut params = GraphParams::for_similarity(sim);
+        params.max_degree = 16;
+        params.build_window = 32;
+        let g = VamanaBuilder::new(params, sim).build(&store);
+        (g, store)
+    }
+
+    fn brute_force_topk(rows: &[Vec<f32>], q: &[f32], k: usize, sim: Similarity) -> Vec<u32> {
+        let mut ids: Vec<u32> = (0..rows.len() as u32).collect();
+        ids.sort_by(|&a, &b| {
+            let (sa, sb) = match sim {
+                Similarity::L2 => (
+                    -l2_sq(q, &rows[a as usize]),
+                    -l2_sq(q, &rows[b as usize]),
+                ),
+                _ => (dot(q, &rows[a as usize]), dot(q, &rows[b as usize])),
+            };
+            sb.partial_cmp(&sa).unwrap()
+        });
+        ids.truncate(k);
+        ids
+    }
+
+    #[test]
+    fn adjacency_basics() {
+        let mut adj = Adjacency::new(4, 3);
+        adj.set_neighbors(0, &[1, 2, 3]);
+        assert_eq!(adj.neighbors(0), &[1, 2, 3]);
+        assert_eq!(adj.degree(0), 3);
+        assert!(!adj.push_neighbor(0, 2));
+        assert!(adj.push_neighbor(1, 0));
+        assert_eq!(adj.neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn degrees_bounded_by_r() {
+        let rows = clustered_rows(300, 8, 1);
+        let (g, _) = build_graph(&rows, Similarity::L2);
+        for i in 0..300u32 {
+            assert!(g.adj.degree(i) <= g.adj.max_degree());
+        }
+        assert!(g.adj.avg_degree() >= 2.0, "{}", g.adj.avg_degree());
+    }
+
+    #[test]
+    fn high_recall_l2() {
+        let rows = clustered_rows(400, 8, 2);
+        let (g, store) = build_graph(&rows, Similarity::L2);
+        let mut rng = Rng::new(99);
+        let mut ctx = SearchCtx::new(400);
+        let mut hits = 0usize;
+        let trials = 40;
+        for _ in 0..trials {
+            let q: Vec<f32> = rows[rng.below(400)]
+                .iter()
+                .map(|&x| x + rng.gaussian_f32() * 0.05)
+                .collect();
+            let truth = brute_force_topk(&rows, &q, 10, Similarity::L2);
+            let pq = store.prepare(&q, Similarity::L2);
+            let res = g.search(&mut ctx, &store, &pq, 40);
+            let got: Vec<u32> = res.iter().take(10).map(|c| c.id).collect();
+            hits += truth.iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = hits as f64 / (10 * trials) as f64;
+        assert!(recall >= 0.9, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn high_recall_inner_product() {
+        let rows = clustered_rows(400, 8, 3);
+        let (g, store) = build_graph(&rows, Similarity::InnerProduct);
+        let mut rng = Rng::new(77);
+        let mut ctx = SearchCtx::new(400);
+        let mut hits = 0usize;
+        let trials = 40;
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..8).map(|_| rng.gaussian_f32()).collect();
+            let truth = brute_force_topk(&rows, &q, 10, Similarity::InnerProduct);
+            let pq = store.prepare(&q, Similarity::InnerProduct);
+            let res = g.search(&mut ctx, &store, &pq, 40);
+            let got: Vec<u32> = res.iter().take(10).map(|c| c.id).collect();
+            hits += truth.iter().filter(|t| got.contains(t)).count();
+        }
+        let recall = hits as f64 / (10 * trials) as f64;
+        assert!(recall >= 0.85, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let rows = clustered_rows(200, 6, 4);
+        let (g, _) = build_graph(&rows, Similarity::L2);
+        for i in 0..200u32 {
+            assert!(!g.adj.neighbors(i).contains(&i), "self loop at {i}");
+        }
+    }
+
+    #[test]
+    fn build_records_time() {
+        let rows = clustered_rows(100, 6, 5);
+        let (g, _) = build_graph(&rows, Similarity::L2);
+        assert!(g.build_seconds > 0.0);
+    }
+
+    #[test]
+    fn medoid_is_central() {
+        // one tight blob: the medoid must be near the mean
+        let mut rng = Rng::new(6);
+        let rows: Vec<Vec<f32>> = (0..100)
+            .map(|_| (0..4).map(|_| 5.0 + rng.gaussian_f32() * 0.1).collect())
+            .collect();
+        let store = F32Store::from_rows(&rows);
+        let params = GraphParams::for_similarity(Similarity::L2);
+        let b = VamanaBuilder::new(params, Similarity::L2);
+        let m = b.find_medoid(&store);
+        let v = &rows[m as usize];
+        // medoid vector close to (5, 5, 5, 5)
+        for &x in v {
+            assert!((x - 5.0).abs() < 0.5);
+        }
+    }
+}

@@ -1,0 +1,358 @@
+//! Index construction front-end + the unified index enum used by the
+//! experiment harness.
+
+use crate::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use crate::graph::hnsw::{HnswGraph, HnswParams};
+use crate::graph::vamana::VamanaBuilder;
+use crate::index::flat::FlatIndex;
+use crate::index::ivfpq::IvfPqIndex;
+use crate::index::leanvec_index::{make_store, BuildBreakdown, LeanVecIndex};
+use crate::leanvec::model::{train_projection, LeanVecModel, TrainBackends};
+use crate::linalg::matrix::normalize;
+use crate::linalg::Matrix;
+
+/// Pluggable batch projector (`rows -> B rows`): native matvec by
+/// default; the runtime swaps in the PJRT `project_db` artifact.
+pub trait BatchProjector {
+    fn project(&mut self, p: &Matrix, rows: &[Vec<f32>]) -> Vec<Vec<f32>>;
+    fn name(&self) -> &'static str;
+}
+
+/// Native projector.
+pub struct NativeProjector;
+
+impl BatchProjector for NativeProjector {
+    fn project(&mut self, p: &Matrix, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        rows.iter().map(|r| p.matvec(r)).collect()
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Builder for [`LeanVecIndex`].
+pub struct IndexBuilder {
+    projection: ProjectionKind,
+    target_dim: usize,
+    primary: Compression,
+    secondary: Compression,
+    graph_params: Option<GraphParams>,
+    /// max rows used to estimate K_X (subsampling is safe — Fig. 15/16)
+    train_subsample: usize,
+    seed: u64,
+    backends: Option<TrainBackends>,
+    projector: Option<Box<dyn BatchProjector>>,
+    /// pre-trained model overrides the learner (e.g. shared across
+    /// ablation arms)
+    model: Option<LeanVecModel>,
+}
+
+impl Default for IndexBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl IndexBuilder {
+    pub fn new() -> IndexBuilder {
+        IndexBuilder {
+            projection: ProjectionKind::OodEigSearch,
+            target_dim: 0,
+            primary: Compression::Lvq8,
+            secondary: Compression::F16,
+            graph_params: None,
+            train_subsample: 20_000,
+            seed: 0xACE,
+            backends: None,
+            projector: None,
+            model: None,
+        }
+    }
+
+    pub fn projection(mut self, kind: ProjectionKind) -> Self {
+        self.projection = kind;
+        self
+    }
+
+    /// `0` means no reduction (d = D).
+    pub fn target_dim(mut self, d: usize) -> Self {
+        self.target_dim = d;
+        self
+    }
+
+    pub fn primary(mut self, c: Compression) -> Self {
+        self.primary = c;
+        self
+    }
+
+    pub fn secondary(mut self, c: Compression) -> Self {
+        self.secondary = c;
+        self
+    }
+
+    pub fn graph_params(mut self, p: GraphParams) -> Self {
+        self.graph_params = Some(p);
+        self
+    }
+
+    pub fn train_subsample(mut self, n: usize) -> Self {
+        self.train_subsample = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn backends(mut self, b: TrainBackends) -> Self {
+        self.backends = Some(b);
+        self
+    }
+
+    pub fn projector(mut self, p: Box<dyn BatchProjector>) -> Self {
+        self.projector = Some(p);
+        self
+    }
+
+    pub fn model(mut self, m: LeanVecModel) -> Self {
+        self.model = Some(m);
+        self
+    }
+
+    /// Build the index over `rows`; `learn_queries` is required for the
+    /// OOD learners. Cosine similarity normalizes a copy of the data.
+    pub fn build(
+        mut self,
+        rows: &[Vec<f32>],
+        learn_queries: Option<&[Vec<f32>]>,
+        sim: Similarity,
+    ) -> LeanVecIndex {
+        assert!(!rows.is_empty());
+        let dd = rows[0].len();
+        let d = if self.target_dim == 0 { dd } else { self.target_dim };
+        let mut breakdown = BuildBreakdown::default();
+
+        // cosine -> normalize once, then treat as IP
+        let owned_rows: Option<Vec<Vec<f32>>> = if sim == Similarity::Cosine {
+            Some(
+                rows.iter()
+                    .map(|r| {
+                        let mut v = r.clone();
+                        normalize(&mut v);
+                        v
+                    })
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        let rows: &[Vec<f32>] = owned_rows.as_deref().unwrap_or(rows);
+
+        // --- (1) train the projection
+        let t = std::time::Instant::now();
+        let model = match self.model.take() {
+            Some(m) => {
+                assert_eq!(m.input_dim(), dd);
+                m
+            }
+            None if d >= dd => LeanVecModel::identity(dd),
+            None => {
+                let sub = self.train_subsample.min(rows.len());
+                let train_rows = &rows[..sub];
+                let mut default_backends = TrainBackends::default();
+                let backends = self.backends.as_mut().unwrap_or(&mut default_backends);
+                train_projection(
+                    self.projection,
+                    train_rows,
+                    learn_queries,
+                    d,
+                    backends,
+                    self.seed,
+                )
+            }
+        };
+        breakdown.train_seconds = t.elapsed().as_secs_f64();
+
+        // --- (2) project the database
+        let t = std::time::Instant::now();
+        let projected: Vec<Vec<f32>> = if model.target_dim() == dd && model.kind == ProjectionKind::None {
+            rows.to_vec()
+        } else {
+            let mut native = NativeProjector;
+            let projector: &mut dyn BatchProjector = match self.projector.as_deref_mut() {
+                Some(p) => p,
+                None => &mut native,
+            };
+            projector.project(&model.b, rows)
+        };
+        breakdown.project_seconds = t.elapsed().as_secs_f64();
+
+        // --- (3) quantize primary + secondary stores
+        let t = std::time::Instant::now();
+        let primary = make_store(&projected, self.primary);
+        let secondary = make_store(rows, self.secondary);
+        breakdown.quantize_seconds = t.elapsed().as_secs_f64();
+
+        // --- (4) build the graph over the primary store
+        let graph_sim = if sim == Similarity::Cosine {
+            Similarity::InnerProduct
+        } else {
+            sim
+        };
+        let gp = self
+            .graph_params
+            .unwrap_or_else(|| GraphParams::for_similarity(graph_sim));
+        let graph = VamanaBuilder::new(gp, graph_sim).build(primary.as_ref());
+        breakdown.graph_seconds = graph.build_seconds;
+
+        LeanVecIndex {
+            model,
+            primary,
+            secondary,
+            graph,
+            sim: graph_sim,
+            primary_compression: self.primary,
+            secondary_compression: self.secondary,
+            build_breakdown: breakdown,
+        }
+    }
+}
+
+/// Unified index for the experiment harness (Fig. 7/8 comparisons).
+pub enum SearchIndex {
+    LeanVec(LeanVecIndex),
+    Flat(FlatIndex),
+    IvfPq(IvfPqIndex, usize), // (index, nprobe)
+    Hnsw(HnswGraph, Box<dyn crate::quant::ScoreStore>),
+}
+
+impl SearchIndex {
+    /// Search with a per-call context (harness convenience).
+    pub fn search(&self, q: &[f32], k: usize, window: usize) -> Vec<u32> {
+        match self {
+            SearchIndex::LeanVec(ix) => ix.search(q, k, window).0,
+            SearchIndex::Flat(ix) => ix.search(q, k).0,
+            SearchIndex::IvfPq(ix, nprobe) => ix.search(q, k, window.max(*nprobe)).0,
+            SearchIndex::Hnsw(g, store) => {
+                let mut ctx = crate::graph::beam::SearchCtx::new(store.len());
+                let pq = store.prepare(q, g.sim);
+                g.search(&mut ctx, store.as_ref(), &pq, window)
+                    .iter()
+                    .take(k)
+                    .map(|c| c.id)
+                    .collect()
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchIndex::LeanVec(_) => "leanvec",
+            SearchIndex::Flat(_) => "flat",
+            SearchIndex::IvfPq(_, _) => "ivfpq",
+            SearchIndex::Hnsw(_, _) => "hnsw",
+        }
+    }
+}
+
+/// Convenience constructor for the HNSW baseline arm.
+pub fn build_hnsw_baseline(
+    rows: &[Vec<f32>],
+    sim: Similarity,
+    compression: Compression,
+    seed: u64,
+) -> SearchIndex {
+    let store = make_store(rows, compression);
+    let g = HnswGraph::build(store.as_ref(), &HnswParams::default(), sim, seed);
+    SearchIndex::Hnsw(g, store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn builds_all_projection_kinds() {
+        let x = rows(250, 16, 1);
+        let q = rows(50, 16, 2);
+        for kind in [
+            ProjectionKind::None,
+            ProjectionKind::Id,
+            ProjectionKind::OodEigSearch,
+            ProjectionKind::Random,
+        ] {
+            let ix = IndexBuilder::new()
+                .projection(kind)
+                .target_dim(if kind == ProjectionKind::None { 0 } else { 8 })
+                .build(&x, Some(&q), Similarity::InnerProduct);
+            assert_eq!(ix.len(), 250, "{kind:?}");
+            let (ids, _) = ix.search(&q[0], 5, 20);
+            assert_eq!(ids.len(), 5);
+        }
+    }
+
+    #[test]
+    fn build_breakdown_accounted() {
+        let x = rows(200, 12, 3);
+        let ix = IndexBuilder::new()
+            .projection(ProjectionKind::Id)
+            .target_dim(6)
+            .build(&x, None, Similarity::L2);
+        let b = ix.build_breakdown;
+        assert!(b.total() > 0.0);
+        assert!(b.graph_seconds > 0.0);
+    }
+
+    #[test]
+    fn cosine_normalizes() {
+        let x = rows(150, 8, 4);
+        let ix = IndexBuilder::new()
+            .projection(ProjectionKind::None)
+            .target_dim(0)
+            .build(&x, None, Similarity::Cosine);
+        // secondary store holds normalized vectors
+        let v = ix.secondary.decode(0);
+        let n: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n - 1.0).abs() < 0.01, "{n}");
+    }
+
+    #[test]
+    fn unified_enum_search_shapes() {
+        let x = rows(300, 16, 5);
+        let lv = IndexBuilder::new()
+            .projection(ProjectionKind::Id)
+            .target_dim(8)
+            .build(&x, None, Similarity::L2);
+        let flat = FlatIndex::new(&x, Similarity::L2);
+        let ivf = IvfPqIndex::build(
+            &x,
+            crate::index::ivfpq::IvfPqParams {
+                nlist: 8,
+                m: 4,
+                ksub: 32,
+                kmeans_iters: 4,
+            },
+            Similarity::L2,
+            6,
+        );
+        let hnsw = build_hnsw_baseline(&x, Similarity::L2, Compression::F16, 7);
+        for ix in [
+            SearchIndex::LeanVec(lv),
+            SearchIndex::Flat(flat),
+            SearchIndex::IvfPq(ivf, 4),
+            hnsw,
+        ] {
+            let ids = ix.search(&x[0], 5, 20);
+            assert_eq!(ids.len(), 5, "{}", ix.name());
+        }
+    }
+}

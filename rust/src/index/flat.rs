@@ -1,0 +1,125 @@
+//! Flat (exhaustive) index — the accuracy oracle, the ground-truth
+//! generator, and the brute-force baseline in Fig. 11.
+
+use crate::config::Similarity;
+use crate::quant::{F32Store, ScoreStore};
+
+pub struct FlatIndex {
+    store: F32Store,
+    sim: Similarity,
+}
+
+impl FlatIndex {
+    pub fn new(rows: &[Vec<f32>], sim: Similarity) -> FlatIndex {
+        FlatIndex {
+            store: F32Store::from_rows(rows),
+            sim,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.store.len() == 0
+    }
+
+    /// Exact score ("bigger is better") of one database vector.
+    pub fn score_one(&self, q: &[f32], id: u32) -> f32 {
+        let pq = self.store.prepare(q, self.sim);
+        self.store.score(&pq, id)
+    }
+
+    /// Exact top-k by full scan. Returns (ids, scores) best-first.
+    pub fn search(&self, q: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+        let pq = self.store.prepare(q, self.sim);
+        let n = self.store.len();
+        let k = k.min(n);
+        // bounded selection: keep a sorted top-k vector (k is small)
+        let mut top: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+        for id in 0..n as u32 {
+            let s = self.store.score(&pq, id);
+            if top.len() < k {
+                top.push((s, id));
+                top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            } else if s > top[k - 1].0 {
+                top[k - 1] = (s, id);
+                let mut i = k - 1;
+                while i > 0 && top[i].0 > top[i - 1].0 {
+                    top.swap(i, i - 1);
+                    i -= 1;
+                }
+            }
+        }
+        (
+            top.iter().map(|&(_, id)| id).collect(),
+            top.iter().map(|&(s, _)| s).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::{dot, l2_sq};
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_naive_argsort_ip() {
+        let rs = rows(100, 8, 1);
+        let idx = FlatIndex::new(&rs, Similarity::InnerProduct);
+        let q: Vec<f32> = rows(1, 8, 2).pop().unwrap();
+        let (ids, scores) = idx.search(&q, 10);
+        let mut want: Vec<u32> = (0..100).collect();
+        want.sort_by(|&a, &b| {
+            dot(&q, &rs[b as usize])
+                .partial_cmp(&dot(&q, &rs[a as usize]))
+                .unwrap()
+        });
+        assert_eq!(ids, want[..10].to_vec());
+        for w in scores.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+
+    #[test]
+    fn matches_naive_argsort_l2() {
+        let rs = rows(80, 6, 3);
+        let idx = FlatIndex::new(&rs, Similarity::L2);
+        let q: Vec<f32> = rows(1, 6, 4).pop().unwrap();
+        let (ids, _) = idx.search(&q, 5);
+        let mut want: Vec<u32> = (0..80).collect();
+        want.sort_by(|&a, &b| {
+            l2_sq(&q, &rs[a as usize])
+                .partial_cmp(&l2_sq(&q, &rs[b as usize]))
+                .unwrap()
+        });
+        assert_eq!(ids, want[..5].to_vec());
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let rs = rows(5, 4, 5);
+        let idx = FlatIndex::new(&rs, Similarity::InnerProduct);
+        let (ids, _) = idx.search(&rs[0], 50);
+        assert_eq!(ids.len(), 5);
+    }
+
+    #[test]
+    fn self_query_is_top1_l2() {
+        let rs = rows(50, 8, 6);
+        let idx = FlatIndex::new(&rs, Similarity::L2);
+        for probe in [0usize, 17, 49] {
+            let (ids, _) = idx.search(&rs[probe], 1);
+            assert_eq!(ids[0], probe as u32);
+        }
+    }
+}

@@ -1,0 +1,443 @@
+//! IVF-PQ baseline (Jégou et al., 2011; FAISS-IVFPQfs stand-in):
+//! k-means coarse quantizer + product quantization with an ADC
+//! lookup table per query.
+//!
+//! Implemented exactly because the paper argues *against* it for graph
+//! search: the LUT-gather access pattern is great for inverted lists
+//! and poor for random access — Fig. 7 reproduces that comparison.
+
+use crate::config::Similarity;
+use crate::linalg::matrix::{dot, l2_sq};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct IvfPqParams {
+    /// number of coarse (IVF) clusters
+    pub nlist: usize,
+    /// PQ subspaces
+    pub m: usize,
+    /// centroids per subspace (<= 256 so codes fit a byte)
+    pub ksub: usize,
+    /// k-means iterations
+    pub kmeans_iters: usize,
+}
+
+impl Default for IvfPqParams {
+    fn default() -> Self {
+        IvfPqParams {
+            nlist: 64,
+            m: 8,
+            ksub: 256,
+            kmeans_iters: 10,
+        }
+    }
+}
+
+pub struct IvfPqIndex {
+    params: IvfPqParams,
+    sim: Similarity,
+    dim: usize,
+    dsub: usize,
+    /// (nlist, dim) coarse centroids
+    coarse: Vec<Vec<f32>>,
+    /// inverted lists of database ids
+    lists: Vec<Vec<u32>>,
+    /// PQ codebooks: m * ksub * dsub (codebooks trained on residuals)
+    codebooks: Vec<f32>,
+    /// PQ codes per vector: n * m bytes (indexed by database id)
+    codes: Vec<u8>,
+    /// coarse assignment per vector
+    assign: Vec<u32>,
+    pub build_seconds: f64,
+}
+
+fn kmeans(rows: &[Vec<f32>], k: usize, iters: usize, seed: u64) -> Vec<Vec<f32>> {
+    let n = rows.len();
+    let dim = rows[0].len();
+    let k = k.min(n);
+    let mut rng = Rng::new(seed);
+    // k-means++ seeding: first pick uniform, then proportional to the
+    // squared distance from the nearest chosen centroid.
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(rows[rng.below(n)].clone());
+    let mut d2: Vec<f32> = rows.iter().map(|r| l2_sq(r, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.push(rows[pick].clone());
+        let c = centroids.last().unwrap().clone();
+        for (i, r) in rows.iter().enumerate() {
+            let d = l2_sq(r, &c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        // assignment
+        for (i, r) in rows.iter().enumerate() {
+            let mut best = (0usize, f32::INFINITY);
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = l2_sq(r, cent);
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            assign[i] = best.0;
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, r) in rows.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, &x) in sums[assign[i]].iter_mut().zip(r.iter()) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster
+                centroids[c] = rows[rng.below(n)].clone();
+            } else {
+                for (j, s) in sums[c].iter().enumerate() {
+                    centroids[c][j] = (*s / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    centroids
+}
+
+impl IvfPqIndex {
+    pub fn build(rows: &[Vec<f32>], params: IvfPqParams, sim: Similarity, seed: u64) -> IvfPqIndex {
+        let t0 = std::time::Instant::now();
+        let n = rows.len();
+        let dim = rows[0].len();
+        assert!(dim % params.m == 0, "dim {dim} not divisible by m {}", params.m);
+        let dsub = dim / params.m;
+        let ksub = params.ksub.min(256).min(n);
+
+        // --- coarse quantizer
+        let train_n = n.min(10_000);
+        let coarse = kmeans(&rows[..train_n], params.nlist, params.kmeans_iters, seed);
+        let nlist = coarse.len();
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); nlist];
+        let mut assign = vec![0u32; n];
+        let mut residuals: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for (i, r) in rows.iter().enumerate() {
+            let mut best = (0usize, f32::INFINITY);
+            for (c, cent) in coarse.iter().enumerate() {
+                let d = l2_sq(r, cent);
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            assign[i] = best.0 as u32;
+            lists[best.0].push(i as u32);
+            residuals.push(
+                r.iter()
+                    .zip(coarse[best.0].iter())
+                    .map(|(x, c)| x - c)
+                    .collect(),
+            );
+        }
+
+        // --- PQ codebooks on residual subspaces
+        let mut codebooks = vec![0.0f32; params.m * ksub * dsub];
+        let sub_train = residuals.len().min(5_000);
+        for sub in 0..params.m {
+            let sub_rows: Vec<Vec<f32>> = residuals[..sub_train]
+                .iter()
+                .map(|r| r[sub * dsub..(sub + 1) * dsub].to_vec())
+                .collect();
+            let cents = kmeans(&sub_rows, ksub, params.kmeans_iters, seed ^ sub as u64);
+            for (c, cent) in cents.iter().enumerate() {
+                let off = (sub * ksub + c) * dsub;
+                codebooks[off..off + dsub].copy_from_slice(cent);
+            }
+        }
+
+        // --- encode all vectors
+        let mut codes = vec![0u8; n * params.m];
+        for (i, r) in residuals.iter().enumerate() {
+            for sub in 0..params.m {
+                let seg = &r[sub * dsub..(sub + 1) * dsub];
+                let mut best = (0usize, f32::INFINITY);
+                for c in 0..ksub {
+                    let off = (sub * ksub + c) * dsub;
+                    let d = l2_sq(seg, &codebooks[off..off + dsub]);
+                    if d < best.1 {
+                        best = (c, d);
+                    }
+                }
+                codes[i * params.m + sub] = best.0 as u8;
+            }
+        }
+
+        IvfPqIndex {
+            params: IvfPqParams { ksub, ..params },
+            sim,
+            dim,
+            dsub,
+            coarse,
+            lists,
+            codebooks,
+            codes,
+            assign,
+            build_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// ADC search probing `nprobe` coarse lists. Returns (ids, scores)
+    /// best-first with "bigger is better" scores.
+    pub fn search(&self, q: &[f32], k: usize, nprobe: usize) -> (Vec<u32>, Vec<f32>) {
+        assert_eq!(q.len(), self.dim);
+        let nprobe = nprobe.max(1).min(self.coarse.len());
+        // rank coarse cells
+        let mut cells: Vec<(f32, usize)> = self
+            .coarse
+            .iter()
+            .enumerate()
+            .map(|(c, cent)| {
+                let s = match self.sim {
+                    Similarity::L2 | Similarity::Cosine => -l2_sq(q, cent),
+                    Similarity::InnerProduct => dot(q, cent),
+                };
+                (s, c)
+            })
+            .collect();
+        cells.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+        let m = self.params.m;
+        let ksub = self.params.ksub;
+        let mut top: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+        let mut lut = vec![0.0f32; m * ksub];
+        for &(_, cell) in cells.iter().take(nprobe) {
+            // Build the ADC LUT for this cell: per subspace, the score
+            // contribution of each codebook centroid.
+            let cent = &self.coarse[cell];
+            match self.sim {
+                Similarity::L2 | Similarity::Cosine => {
+                    // score = -||q - (cent + cb)||^2 accumulated per subspace
+                    for sub in 0..m {
+                        let qs = &q[sub * self.dsub..(sub + 1) * self.dsub];
+                        let cs = &cent[sub * self.dsub..(sub + 1) * self.dsub];
+                        for c in 0..ksub {
+                            let off = (sub * ksub + c) * self.dsub;
+                            let cb = &self.codebooks[off..off + self.dsub];
+                            let mut acc = 0.0f32;
+                            for j in 0..self.dsub {
+                                let diff = qs[j] - (cs[j] + cb[j]);
+                                acc += diff * diff;
+                            }
+                            lut[sub * ksub + c] = -acc;
+                        }
+                    }
+                }
+                Similarity::InnerProduct => {
+                    for sub in 0..m {
+                        let qs = &q[sub * self.dsub..(sub + 1) * self.dsub];
+                        let cs = &cent[sub * self.dsub..(sub + 1) * self.dsub];
+                        let q_cent = dot(qs, cs);
+                        for c in 0..ksub {
+                            let off = (sub * ksub + c) * self.dsub;
+                            let cb = &self.codebooks[off..off + self.dsub];
+                            lut[sub * ksub + c] = q_cent + dot(qs, cb);
+                        }
+                    }
+                }
+            }
+            // scan the list with LUT gathers
+            for &id in &self.lists[cell] {
+                let code = &self.codes[id as usize * m..id as usize * m + m];
+                let mut s = 0.0f32;
+                for (sub, &c) in code.iter().enumerate() {
+                    s += lut[sub * ksub + c as usize];
+                }
+                if top.len() < k {
+                    top.push((s, id));
+                    if top.len() == k {
+                        top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                    }
+                } else if s > top[k - 1].0 {
+                    top[k - 1] = (s, id);
+                    let mut i = k - 1;
+                    while i > 0 && top[i].0 > top[i - 1].0 {
+                        top.swap(i, i - 1);
+                        i -= 1;
+                    }
+                }
+            }
+        }
+        if top.len() < k {
+            top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        }
+        (
+            top.iter().map(|&(_, id)| id).collect(),
+            top.iter().map(|&(s, _)| s).collect(),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assign.is_empty()
+    }
+
+    /// bytes touched per scanned vector (PQ codes only)
+    pub fn bytes_per_vector(&self) -> usize {
+        self.params.m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clustered_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32() * 3.0).collect())
+            .collect();
+        (0..n)
+            .map(|i| {
+                centers[i % 8]
+                    .iter()
+                    .map(|&x| x + rng.gaussian_f32() * 0.4)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn recall_at_10(index: &IvfPqIndex, rows: &[Vec<f32>], sim: Similarity, nprobe: usize) -> f64 {
+        let mut rng = Rng::new(123);
+        let trials = 25;
+        let mut hits = 0usize;
+        for _ in 0..trials {
+            let q: Vec<f32> = rows[rng.below(rows.len())]
+                .iter()
+                .map(|&x| x + rng.gaussian_f32() * 0.05)
+                .collect();
+            let mut truth: Vec<u32> = (0..rows.len() as u32).collect();
+            truth.sort_by(|&a, &b| {
+                let (sa, sb) = match sim {
+                    Similarity::L2 | Similarity::Cosine => {
+                        (-l2_sq(&q, &rows[a as usize]), -l2_sq(&q, &rows[b as usize]))
+                    }
+                    Similarity::InnerProduct => {
+                        (dot(&q, &rows[a as usize]), dot(&q, &rows[b as usize]))
+                    }
+                };
+                sb.partial_cmp(&sa).unwrap()
+            });
+            let (ids, _) = index.search(&q, 10, nprobe);
+            hits += truth[..10].iter().filter(|t| ids.contains(t)).count();
+        }
+        hits as f64 / (10 * trials) as f64
+    }
+
+    #[test]
+    fn kmeans_reduces_distortion() {
+        let rows = clustered_rows(200, 8, 1);
+        let cents = kmeans(&rows, 8, 12, 7);
+        // mean distance to nearest centroid must be << data scale
+        let mean_d: f32 = rows
+            .iter()
+            .map(|r| {
+                cents
+                    .iter()
+                    .map(|c| l2_sq(r, c))
+                    .fold(f32::INFINITY, f32::min)
+            })
+            .sum::<f32>()
+            / rows.len() as f32;
+        // within-cluster expectation is 8 dims * 0.4^2 = 1.28; allow 3x
+        assert!(mean_d < 4.0, "{mean_d}");
+    }
+
+    #[test]
+    fn recall_reasonable_l2() {
+        let rows = clustered_rows(600, 16, 2);
+        let idx = IvfPqIndex::build(
+            &rows,
+            IvfPqParams {
+                nlist: 16,
+                m: 4,
+                ksub: 64,
+                kmeans_iters: 8,
+            },
+            Similarity::L2,
+            3,
+        );
+        let r = recall_at_10(&idx, &rows, Similarity::L2, 8);
+        assert!(r >= 0.6, "recall {r}");
+    }
+
+    #[test]
+    fn more_probes_more_recall() {
+        let rows = clustered_rows(600, 16, 4);
+        let idx = IvfPqIndex::build(
+            &rows,
+            IvfPqParams {
+                nlist: 32,
+                m: 4,
+                ksub: 64,
+                kmeans_iters: 8,
+            },
+            Similarity::L2,
+            5,
+        );
+        let r1 = recall_at_10(&idx, &rows, Similarity::L2, 1);
+        let r16 = recall_at_10(&idx, &rows, Similarity::L2, 16);
+        assert!(r16 >= r1, "{r16} vs {r1}");
+    }
+
+    #[test]
+    fn ip_search_runs() {
+        let rows = clustered_rows(300, 8, 6);
+        let idx = IvfPqIndex::build(
+            &rows,
+            IvfPqParams {
+                nlist: 8,
+                m: 2,
+                ksub: 32,
+                kmeans_iters: 5,
+            },
+            Similarity::InnerProduct,
+            7,
+        );
+        let r = recall_at_10(&idx, &rows, Similarity::InnerProduct, 8);
+        assert!(r >= 0.5, "recall {r}");
+    }
+
+    #[test]
+    fn every_vector_in_exactly_one_list() {
+        let rows = clustered_rows(200, 8, 8);
+        let idx = IvfPqIndex::build(&rows, IvfPqParams::default(), Similarity::L2, 9);
+        let total: usize = idx.lists.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 200);
+        let mut seen = vec![false; 200];
+        for l in &idx.lists {
+            for &id in l {
+                assert!(!seen[id as usize]);
+                seen[id as usize] = true;
+            }
+        }
+    }
+}

@@ -1,0 +1,304 @@
+//! The LeanVec index: Vamana graph over dimensionality-reduced +
+//! LVQ-quantized *primary* vectors, re-ranked with full-dimensional
+//! *secondary* vectors (Fig. 1b).
+//!
+//! Search = (1) project the query once (`A q` — negligible, Section 2),
+//! (2) traverse the graph scoring primaries, (3) re-rank the top
+//! `rerank_window` candidates with the secondary store, (4) return top-k.
+
+use crate::config::{Compression, Similarity};
+use crate::graph::beam::SearchCtx;
+use crate::graph::vamana::VamanaGraph;
+use crate::leanvec::model::LeanVecModel;
+use crate::quant::{Lvq4x8Store, LvqStore, PreparedQuery, ScoreStore, F16Store, F32Store};
+
+/// Runtime search knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SearchParams {
+    /// graph search-buffer width L
+    pub window: usize,
+    /// candidates re-scored with the secondary store (>= k)
+    pub rerank_window: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams {
+            window: 50,
+            rerank_window: 50,
+        }
+    }
+}
+
+/// Per-query traffic/latency accounting (drives Fig. 1's bandwidth
+/// model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryStats {
+    pub primary_scored: usize,
+    pub reranked: usize,
+    pub bytes_touched: usize,
+    pub hops: usize,
+}
+
+/// Build a store of the requested compression over rows.
+pub fn make_store(rows: &[Vec<f32>], compression: Compression) -> Box<dyn ScoreStore> {
+    match compression {
+        Compression::F32 => Box::new(F32Store::from_rows(rows)),
+        Compression::F16 => Box::new(F16Store::from_rows(rows)),
+        Compression::Lvq8 => Box::new(LvqStore::new(rows, 8)),
+        Compression::Lvq4 => Box::new(LvqStore::new(rows, 4)),
+        Compression::Lvq4x8 => Box::new(Lvq4x8Store::new(rows)),
+    }
+}
+
+pub struct LeanVecIndex {
+    pub model: LeanVecModel,
+    pub primary: Box<dyn ScoreStore>,
+    pub secondary: Box<dyn ScoreStore>,
+    pub graph: VamanaGraph,
+    pub sim: Similarity,
+    pub primary_compression: Compression,
+    pub secondary_compression: Compression,
+    /// wall-clock seconds: projection training + database projection +
+    /// quantization + graph build (Fig. 6 decomposition)
+    pub build_breakdown: BuildBreakdown,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildBreakdown {
+    pub train_seconds: f64,
+    pub project_seconds: f64,
+    pub quantize_seconds: f64,
+    pub graph_seconds: f64,
+}
+
+impl BuildBreakdown {
+    pub fn total(&self) -> f64 {
+        self.train_seconds + self.project_seconds + self.quantize_seconds + self.graph_seconds
+    }
+}
+
+impl LeanVecIndex {
+    pub fn len(&self) -> usize {
+        self.primary.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.primary.len() == 0
+    }
+
+    /// Search with a fresh context (convenience; allocates).
+    pub fn search(&self, q: &[f32], k: usize, window: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut ctx = SearchCtx::new(self.len());
+        let params = SearchParams {
+            window,
+            rerank_window: window.max(k),
+        };
+        let (ids, scores, _) = self.search_with_ctx(&mut ctx, q, k, params);
+        (ids, scores)
+    }
+
+    /// Hot-path search with a reusable context. Returns (ids, scores,
+    /// stats), best-first.
+    pub fn search_with_ctx(
+        &self,
+        ctx: &mut SearchCtx,
+        q: &[f32],
+        k: usize,
+        params: SearchParams,
+    ) -> (Vec<u32>, Vec<f32>, QueryStats) {
+        // (1) project the query once
+        let q_proj = self.model.project_query(q);
+        let pq = self.primary.prepare(&q_proj, self.sim);
+        // (2) graph traversal over primaries
+        let cands = self.graph.search(ctx, self.primary.as_ref(), &pq, params.window);
+        let take = params.rerank_window.max(k).min(cands.len());
+        let ids: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
+        let stats = QueryStats {
+            primary_scored: ctx.stats.scored,
+            reranked: take,
+            bytes_touched: ctx.stats.scored * self.primary.bytes_per_vector()
+                + take * self.secondary.bytes_per_vector(),
+            hops: ctx.stats.hops,
+        };
+        // (3) re-rank with secondary vectors in the original space
+        let (ids, scores) = self.rerank(q, &ids, k);
+        (ids, scores, stats)
+    }
+
+    /// Search with an externally projected query (the coordinator
+    /// projects whole batches at once — natively or through the PJRT
+    /// `project_q` artifact — then fans the searches out to workers).
+    pub fn search_projected(
+        &self,
+        ctx: &mut SearchCtx,
+        q_proj: &[f32],
+        q_orig: &[f32],
+        k: usize,
+        params: SearchParams,
+    ) -> (Vec<u32>, Vec<f32>, QueryStats) {
+        let pq = self.primary.prepare(q_proj, self.sim);
+        let cands = self.graph.search(ctx, self.primary.as_ref(), &pq, params.window);
+        let take = params.rerank_window.max(k).min(cands.len());
+        let ids: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
+        let stats = QueryStats {
+            primary_scored: ctx.stats.scored,
+            reranked: take,
+            bytes_touched: ctx.stats.scored * self.primary.bytes_per_vector()
+                + take * self.secondary.bytes_per_vector(),
+            hops: ctx.stats.hops,
+        };
+        let (ids, scores) = self.rerank(q_orig, &ids, k);
+        (ids, scores, stats)
+    }
+
+    /// Re-score `ids` with the secondary store and return the top-k.
+    pub fn rerank(&self, q: &[f32], ids: &[u32], k: usize) -> (Vec<u32>, Vec<f32>) {
+        let pq: PreparedQuery = self.secondary.prepare(q, self.sim);
+        let mut scored: Vec<(f32, u32)> = ids
+            .iter()
+            .map(|&id| (self.secondary.score(&pq, id), id))
+            .collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        scored.truncate(k);
+        (
+            scored.iter().map(|&(_, id)| id).collect(),
+            scored.iter().map(|&(s, _)| s).collect(),
+        )
+    }
+
+    /// Primary-only search (no re-ranking) — the Fig. 11 ablation arm.
+    pub fn search_no_rerank(
+        &self,
+        ctx: &mut SearchCtx,
+        q: &[f32],
+        k: usize,
+        window: usize,
+    ) -> Vec<u32> {
+        let q_proj = self.model.project_query(q);
+        let pq = self.primary.prepare(&q_proj, self.sim);
+        let cands = self.graph.search(ctx, self.primary.as_ref(), &pq, window);
+        cands.iter().take(k).map(|c| c.id).collect()
+    }
+
+    /// Compression ratio of the primary representation vs FP16 full-D
+    /// (the Fig. 1 headline number, e.g. 9.6x for rqa-768 at d=160).
+    pub fn primary_compression_vs_fp16(&self) -> f64 {
+        let full_fp16 = self.model.input_dim() * 2;
+        full_fp16 as f64 / self.primary.bytes_per_vector() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, ProjectionKind};
+    use crate::index::builder::IndexBuilder;
+    use crate::index::flat::FlatIndex;
+    use crate::util::rng::Rng;
+
+    /// low-rank data so a d=8 projection preserves structure
+    fn lowrank_rows(n: usize, dd: usize, rank: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let basis: Vec<Vec<f32>> = (0..rank)
+            .map(|_| (0..dd).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        (0..n)
+            .map(|_| {
+                let coef: Vec<f32> = (0..rank).map(|_| rng.gaussian_f32()).collect();
+                let mut v = vec![0.0f32; dd];
+                for (c, b) in coef.iter().zip(basis.iter()) {
+                    for (x, &bv) in v.iter_mut().zip(b.iter()) {
+                        *x += c * bv;
+                    }
+                }
+                for x in v.iter_mut() {
+                    *x += 0.01 * rng.gaussian_f32();
+                }
+                v
+            })
+            .collect()
+    }
+
+    fn build_small(rows: &[Vec<f32>], d: usize) -> LeanVecIndex {
+        let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+        gp.max_degree = 16;
+        gp.build_window = 40;
+        IndexBuilder::new()
+            .projection(ProjectionKind::Id)
+            .target_dim(d)
+            .graph_params(gp)
+            .build(rows, None, Similarity::InnerProduct)
+    }
+
+    #[test]
+    fn recall_with_rerank_beats_no_rerank() {
+        let rows = lowrank_rows(500, 32, 6, 1);
+        let index = build_small(&rows, 8);
+        let flat = FlatIndex::new(&rows, Similarity::InnerProduct);
+        let mut rng = Rng::new(42);
+        let mut ctx = SearchCtx::new(rows.len());
+        let trials = 30;
+        let (mut hit_rr, mut hit_nr) = (0usize, 0usize);
+        for _ in 0..trials {
+            let q: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
+            let (truth, _) = flat.search(&q, 10);
+            let (ids, _, _) = index.search_with_ctx(
+                &mut ctx,
+                &q,
+                10,
+                SearchParams {
+                    window: 50,
+                    rerank_window: 50,
+                },
+            );
+            hit_rr += truth.iter().filter(|t| ids.contains(t)).count();
+            let ids_nr = index.search_no_rerank(&mut ctx, &q, 10, 50);
+            hit_nr += truth.iter().filter(|t| ids_nr.contains(t)).count();
+        }
+        let (r_rr, r_nr) = (
+            hit_rr as f64 / (trials * 10) as f64,
+            hit_nr as f64 / (trials * 10) as f64,
+        );
+        assert!(r_rr >= r_nr - 0.02, "rerank {r_rr} vs none {r_nr}");
+        assert!(r_rr >= 0.8, "rerank recall {r_rr}");
+    }
+
+    #[test]
+    fn stats_populate() {
+        let rows = lowrank_rows(200, 16, 4, 2);
+        let index = build_small(&rows, 6);
+        let mut ctx = SearchCtx::new(rows.len());
+        let (_, _, stats) = index.search_with_ctx(
+            &mut ctx,
+            &rows[0],
+            5,
+            SearchParams {
+                window: 20,
+                rerank_window: 20,
+            },
+        );
+        assert!(stats.primary_scored > 0);
+        assert!(stats.reranked > 0);
+        assert!(stats.bytes_touched > 0);
+        assert!(stats.hops > 0);
+    }
+
+    #[test]
+    fn compression_ratio_reported() {
+        let rows = lowrank_rows(150, 32, 4, 3);
+        let index = build_small(&rows, 8);
+        // full fp16 = 64 B; primary lvq8 at d=8 = 8 + 8 = 16 B -> 4x
+        assert!(index.primary_compression_vs_fp16() > 2.0);
+    }
+
+    #[test]
+    fn scores_descend() {
+        let rows = lowrank_rows(150, 16, 4, 4);
+        let index = build_small(&rows, 6);
+        let (_, scores) = index.search(&rows[3], 10, 30);
+        for w in scores.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Search indices: the LeanVec search-and-rerank index (the paper's
+//! system), the flat exhaustive baseline/oracle, and an IVF-PQ baseline
+//! (FAISS-IVFPQfs stand-in).
+
+pub mod builder;
+pub mod flat;
+pub mod ivfpq;
+pub mod leanvec_index;
+
+pub use builder::{IndexBuilder, SearchIndex};
+pub use flat::FlatIndex;
+pub use ivfpq::{IvfPqIndex, IvfPqParams};
+pub use leanvec_index::{LeanVecIndex, SearchParams};

@@ -1,0 +1,254 @@
+//! Algorithm 2: eigenvector-search optimization of the LeanVec-OOD loss.
+//!
+//! With `A = B = P`, the loss becomes a function of the blend
+//! `K_beta = (1 - beta) Kq + beta Kx` (the 1/m, 1/n normalizations are
+//! already inside our second-moment matrices): `P(beta)` = top-d
+//! eigenvectors of `K_beta`, and `beta` is found by a derivative-free
+//! scalar minimization (Brent 2013). `beta = 1` recovers PCA on the
+//! database, `beta = 0` PCA on the queries; in the ID case the loss is
+//! flat in `beta` and any value falls back to Eq. (4) — Prop. 1 seamless
+//! fallback.
+
+use crate::leanvec::loss::ood_loss;
+use crate::linalg::{top_eigvecs, Matrix};
+
+/// Pluggable top-d eigenbasis backend (native Jacobi or the PJRT
+/// `eig_topd` artifact).
+pub trait TopdBackend {
+    fn topd(&mut self, k: &Matrix, d: usize) -> Matrix;
+    fn name(&self) -> &'static str;
+}
+
+/// Native backend. Full Jacobi eigendecomposition is O(D^3) per sweep —
+/// fine for small D but dominates eigsearch at D >= 512, so for
+/// d << D this switches to orthogonal (subspace) iteration, the same
+/// matmul-only algorithm the PJRT `eig_topd` artifact runs.
+pub struct NativeTopd;
+
+/// Orthogonal iteration: V <- orth(K V) with QR orthonormalization.
+fn subspace_topd(k: &Matrix, d: usize, iters: usize) -> Matrix {
+    let dd = k.rows;
+    let mut rng = crate::util::rng::Rng::new(0x70BD ^ (dd as u64) << 8 ^ d as u64);
+    let mut v = Matrix::randn(dd, d, &mut rng); // (D, d) columns = basis
+    for _ in 0..iters {
+        let kv = k.matmul(&v);
+        v = crate::linalg::qr::qr_orthonormal_columns(&kv);
+    }
+    v.transpose() // rows = eigenvectors
+}
+
+impl TopdBackend for NativeTopd {
+    fn topd(&mut self, k: &Matrix, d: usize) -> Matrix {
+        // QR-orthonormalized subspace iteration is robust up to
+        // moderate d/D ratios; full Jacobi remains the fallback for
+        // small problems and aggressive ratios.
+        if d * 2 <= k.rows && k.rows >= 192 {
+            subspace_topd(k, d, 30)
+        } else {
+            top_eigvecs(k, d)
+        }
+    }
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Result of the eigenvector search.
+pub struct EigSearchResult {
+    pub p: Matrix,
+    pub beta: f64,
+    pub loss: f64,
+    /// (beta, loss) pairs evaluated during the search (Fig. 3 data)
+    pub trace: Vec<(f64, f64)>,
+}
+
+fn blend(kq: &Matrix, kx: &Matrix, beta: f64) -> Matrix {
+    let mut k = kq.clone();
+    k.scale((1.0 - beta) as f32);
+    let mut kx2 = kx.clone();
+    kx2.scale(beta as f32);
+    k.add_assign(&kx2);
+    k
+}
+
+/// Algorithm 2 with a golden-section (Brent-style derivative-free)
+/// search over `beta in [0, 1]`.
+pub fn eigsearch(kq: &Matrix, kx: &Matrix, d: usize, backend: &mut dyn TopdBackend) -> EigSearchResult {
+    // The beta curve is smooth with one interior minimum (Fig. 3): a
+    // 0.03 bracket is far below the sampling noise of the moments, and
+    // golden section reaches it in <= 14 evaluations.
+    eigsearch_with_tol(kq, kx, d, backend, 0.03, 14)
+}
+
+/// The search evaluates `loss(P(beta))`; `tol` is the bracket width at
+/// which to stop, `max_evals` bounds eigendecompositions.
+pub fn eigsearch_with_tol(
+    kq: &Matrix,
+    kx: &Matrix,
+    d: usize,
+    backend: &mut dyn TopdBackend,
+    tol: f64,
+    max_evals: usize,
+) -> EigSearchResult {
+    let mut trace: Vec<(f64, f64)> = Vec::new();
+    let mut evals = 0usize;
+    let mut best: Option<(f64, f64, Matrix)> = None;
+
+    let mut eval = |beta: f64,
+                    trace: &mut Vec<(f64, f64)>,
+                    best: &mut Option<(f64, f64, Matrix)>,
+                    evals: &mut usize|
+     -> f64 {
+        // reuse any previously evaluated beta (golden-section revisits)
+        if let Some(&(_, l)) = trace.iter().find(|(b, _)| (b - beta).abs() < 1e-12) {
+            return l;
+        }
+        *evals += 1;
+        let p = backend.topd(&blend(kq, kx, beta), d);
+        let l = ood_loss(&p, &p, kq, kx);
+        trace.push((beta, l));
+        if best.as_ref().map(|(_, bl, _)| l < *bl).unwrap_or(true) {
+            *best = Some((beta, l, p));
+        }
+        l
+    };
+
+    // golden-section search on [0, 1]
+    let phi = (5.0f64.sqrt() - 1.0) / 2.0; // 0.618...
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    // include the endpoints (beta=0: query PCA; beta=1: database PCA)
+    eval(0.0, &mut trace, &mut best, &mut evals);
+    eval(1.0, &mut trace, &mut best, &mut evals);
+    let mut x1 = hi - phi * (hi - lo);
+    let mut x2 = lo + phi * (hi - lo);
+    let mut f1 = eval(x1, &mut trace, &mut best, &mut evals);
+    let mut f2 = eval(x2, &mut trace, &mut best, &mut evals);
+    while hi - lo > tol && evals < max_evals {
+        if f1 <= f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - phi * (hi - lo);
+            f1 = eval(x1, &mut trace, &mut best, &mut evals);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + phi * (hi - lo);
+            f2 = eval(x2, &mut trace, &mut best, &mut evals);
+        }
+    }
+
+    let (beta, loss, p) = best.expect("at least one evaluation");
+    EigSearchResult {
+        p,
+        beta,
+        loss,
+        trace,
+    }
+}
+
+/// Dense beta sweep — regenerates the Fig. 3 / Fig. 17 loss-vs-beta
+/// curves.
+pub fn beta_sweep(
+    kq: &Matrix,
+    kx: &Matrix,
+    d: usize,
+    betas: &[f64],
+    backend: &mut dyn TopdBackend,
+) -> Vec<(f64, f64)> {
+    betas
+        .iter()
+        .map(|&beta| {
+            let p = backend.topd(&blend(kq, kx, beta), d);
+            (beta, ood_loss(&p, &p, kq, kx))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::random_orthonormal;
+    use crate::util::rng::Rng;
+
+    fn ood_problem(seed: u64, dd: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let ub = random_orthonormal(dd, dd, &mut rng);
+        let uq = random_orthonormal(dd, dd, &mut rng);
+        let shape = |m: &mut Matrix, decay: f32| {
+            for row in m.data.chunks_mut(dd) {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v *= 1.0 / (1.0 + c as f32 * decay);
+                }
+            }
+        };
+        let mut xc = Matrix::randn(500, dd, &mut rng);
+        shape(&mut xc, 0.4);
+        let x = xc.matmul(&ub);
+        let mut qc = Matrix::randn(300, dd, &mut rng);
+        shape(&mut qc, 0.4);
+        let q = qc.matmul(&uq);
+        (q.second_moment(), x.second_moment())
+    }
+
+    #[test]
+    fn result_is_orthonormal_and_not_worse_than_endpoints() {
+        let (kq, kx) = ood_problem(1, 20);
+        let res = eigsearch(&kq, &kx, 6, &mut NativeTopd);
+        assert!(res.p.row_orthonormality_defect() < 1e-4);
+        let ends: Vec<f64> = res
+            .trace
+            .iter()
+            .filter(|(b, _)| *b == 0.0 || *b == 1.0)
+            .map(|(_, l)| *l)
+            .collect();
+        assert_eq!(ends.len(), 2);
+        assert!(res.loss <= ends[0] + 1e-9 && res.loss <= ends[1] + 1e-9);
+    }
+
+    #[test]
+    fn id_case_is_flat_in_beta() {
+        // same distribution for X and Q -> loss(beta) ~ constant (Fig 3
+        // discussion: eigenvectors invariant to beta in expectation)
+        let mut rng = Rng::new(2);
+        let dd = 16;
+        let basis = random_orthonormal(dd, dd, &mut rng);
+        let x = Matrix::randn(2000, dd, &mut rng).matmul(&basis);
+        let q = Matrix::randn(2000, dd, &mut rng).matmul(&basis);
+        let (kq, kx) = (q.second_moment(), x.second_moment());
+        let sweep = beta_sweep(&kq, &kx, 6, &[0.1, 0.5, 0.9], &mut NativeTopd);
+        let losses: Vec<f64> = sweep.iter().map(|(_, l)| *l).collect();
+        let max = losses.iter().cloned().fold(f64::MIN, f64::max);
+        let min = losses.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            (max - min) / max.abs().max(1e-12) < 0.25,
+            "ID beta curve should be nearly flat: {losses:?}"
+        );
+    }
+
+    #[test]
+    fn beta_interior_wins_on_ood() {
+        let (kq, kx) = ood_problem(3, 24);
+        let res = eigsearch(&kq, &kx, 8, &mut NativeTopd);
+        // the optimum must strictly beat pure database PCA (beta = 1)
+        let pca_loss = res
+            .trace
+            .iter()
+            .find(|(b, _)| *b == 1.0)
+            .map(|(_, l)| *l)
+            .unwrap();
+        assert!(res.loss <= pca_loss, "{} vs {pca_loss}", res.loss);
+    }
+
+    #[test]
+    fn trace_records_unique_betas() {
+        let (kq, kx) = ood_problem(4, 12);
+        let res = eigsearch(&kq, &kx, 4, &mut NativeTopd);
+        for i in 0..res.trace.len() {
+            for j in i + 1..res.trace.len() {
+                assert!((res.trace[i].0 - res.trace[j].0).abs() > 1e-12);
+            }
+        }
+    }
+}

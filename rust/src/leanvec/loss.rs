@@ -1,0 +1,175 @@
+//! The LeanVec-OOD loss (Eq. 8) in its second-moment trace form, plus
+//! the Proposition-1 PCA upper bound used by tests and experiments.
+
+use crate::linalg::Matrix;
+
+/// `f(A, B) = Tr(A Kq A^T B Kx B^T) + Tr(Kq Kx) - 2 Tr(Kq A^T B Kx)`.
+///
+/// `kq`/`kx` are the (D, D) second moments `Q Q^T / m` and `X X^T / n`
+/// (any consistent scaling works — the optimizers are scale-invariant).
+/// Cost is O(d D^2): only (d, D) intermediates are formed.
+pub fn ood_loss(a: &Matrix, b: &Matrix, kq: &Matrix, kx: &Matrix) -> f64 {
+    let (t1, t3, constant) = ood_loss_parts(a, b, kq, kx);
+    t1 + constant - 2.0 * t3
+}
+
+/// The three trace terms of Eq. (8): `(Tr(AKqA^T BKxB^T), Tr(Kq A^T B Kx),
+/// Tr(Kq Kx))`. Exposed so the FW driver can reuse intermediates.
+pub fn ood_loss_parts(a: &Matrix, b: &Matrix, kq: &Matrix, kx: &Matrix) -> (f64, f64, f64) {
+    let akq = a.matmul(kq); // (d, D)
+    let bkx = b.matmul(kx); // (d, D)
+    let m1 = akq.matmul_nt(a); // (d, d) = A Kq A^T
+    let m2 = bkx.matmul_nt(b); // (d, d) = B Kx B^T
+    // Tr(M1 M2) = sum(M1 .* M2^T); both symmetric so plain elementwise
+    let t1: f64 = m1
+        .data
+        .iter()
+        .zip(m2.transpose().data.iter())
+        .map(|(x, y)| *x as f64 * *y as f64)
+        .sum();
+    // Tr(Kq A^T B Kx) = sum((A Kq) .* (B Kx))
+    let t3: f64 = akq
+        .data
+        .iter()
+        .zip(bkx.data.iter())
+        .map(|(x, y)| *x as f64 * *y as f64)
+        .sum();
+    let constant: f64 = kq
+        .data
+        .iter()
+        .zip(kx.transpose().data.iter())
+        .map(|(x, y)| *x as f64 * *y as f64)
+        .sum();
+    (t1, t3, constant)
+}
+
+/// Gradient wrt A (Eq. 13): `2 B Kx B^T A Kq - 2 B Kx Kq`.
+pub fn grad_a(a: &Matrix, b: &Matrix, kq: &Matrix, kx: &Matrix) -> Matrix {
+    let bkx = b.matmul(kx); // (d, D)
+    let bkxbt = bkx.matmul_nt(b); // (d, d)
+    let mut g = bkxbt.matmul(&a.matmul(kq)); // (d, D)
+    let rhs = bkx.matmul(kq);
+    g.lerp(&rhs, 2.0, -2.0);
+    g
+}
+
+/// Gradient wrt B (Eq. 13): `2 A Kq A^T B Kx - 2 A Kq Kx`.
+pub fn grad_b(a: &Matrix, b: &Matrix, kq: &Matrix, kx: &Matrix) -> Matrix {
+    let akq = a.matmul(kq);
+    let akqat = akq.matmul_nt(a);
+    let mut g = akqat.matmul(&b.matmul(kx));
+    let rhs = akq.matmul(kx);
+    g.lerp(&rhs, 2.0, -2.0);
+    g
+}
+
+/// Proposition 1 upper bound: the PCA solution's loss, computed as
+/// `Tr(Kq) * Tr((I - P^T P) Kx (I - P^T P))`-free direct evaluation —
+/// i.e. just `ood_loss(P, P, ...)` for the PCA `P`. Provided for the
+/// prop1 experiment/test to compare learner outputs against.
+pub fn pca_bound(p: &Matrix, kq: &Matrix, kx: &Matrix) -> f64 {
+    ood_loss(p, p, kq, kx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::random_orthonormal;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, dd: usize, d: usize, n: usize, m: usize) -> (Matrix, Matrix, Matrix, Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(n, dd, &mut rng); // rows = vectors
+        let q = Matrix::randn(m, dd, &mut rng);
+        let kx = x.second_moment();
+        let kq = q.second_moment();
+        let a = random_orthonormal(d, dd, &mut rng);
+        let b = random_orthonormal(d, dd, &mut rng);
+        (x, q, kx, kq, a, b)
+    }
+
+    #[test]
+    fn loss_matches_direct_frobenius() {
+        let (x, q, kx, kq, a, b) = setup(1, 24, 6, 200, 100);
+        // direct: ||Q^T A^T B X - Q^T X||_F^2 / (n*m)
+        let ab = a.matmul_tn(&b); // wait: A^T B is (D, D); a is (d,D) so A^T B = a^T b
+        let atb = a.transpose().matmul(&b); // (D, D)
+        let xt = x.transpose(); // (D, n)
+        let proj = atb.matmul(&xt); // (D, n)
+        let qproj = q.matmul(&proj); // (m, n) = Q^T A^T B X (rows of q are queries)
+        let qx = q.matmul(&xt); // (m, n)
+        let mut acc = 0.0f64;
+        for (u, v) in qproj.data.iter().zip(qx.data.iter()) {
+            let e = (*u - *v) as f64;
+            acc += e * e;
+        }
+        let direct = acc / (200.0 * 100.0);
+        let got = ood_loss(&a, &b, &kq, &kx);
+        let _ = ab;
+        assert!(
+            (got - direct).abs() < 1e-3 * direct.abs().max(1e-9),
+            "{got} vs {direct}"
+        );
+    }
+
+    #[test]
+    fn loss_zero_for_identity_at_full_rank() {
+        let mut rng = Rng::new(2);
+        let dd = 16;
+        let x = Matrix::randn(100, dd, &mut rng);
+        let q = Matrix::randn(60, dd, &mut rng);
+        let eye = Matrix::eye(dd);
+        let l = ood_loss(&eye, &eye, &q.second_moment(), &x.second_moment());
+        let scale = ood_loss(
+            &Matrix::zeros(dd, dd),
+            &Matrix::zeros(dd, dd),
+            &q.second_moment(),
+            &x.second_moment(),
+        );
+        assert!(l.abs() < 1e-5 * scale.abs().max(1e-9), "{l} vs {scale}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (_, _, kx, kq, a, b) = setup(3, 12, 4, 100, 80);
+        let ga = grad_a(&a, &b, &kq, &kx);
+        let gb = grad_b(&a, &b, &kq, &kx);
+        let eps = 1e-3f32;
+        let mut worst = 0.0f64;
+        for idx in [0usize, 5, 17, 33] {
+            // A direction
+            let mut ap = a.clone();
+            ap.data[idx] += eps;
+            let mut am = a.clone();
+            am.data[idx] -= eps;
+            let fd = (ood_loss(&ap, &b, &kq, &kx) - ood_loss(&am, &b, &kq, &kx))
+                / (2.0 * eps as f64);
+            worst = worst.max((fd - ga.data[idx] as f64).abs() / fd.abs().max(1e-6));
+            // B direction
+            let mut bp = b.clone();
+            bp.data[idx] += eps;
+            let mut bm = b.clone();
+            bm.data[idx] -= eps;
+            let fd = (ood_loss(&a, &bp, &kq, &kx) - ood_loss(&a, &bm, &kq, &kx))
+                / (2.0 * eps as f64);
+            worst = worst.max((fd - gb.data[idx] as f64).abs() / fd.abs().max(1e-6));
+        }
+        assert!(worst < 0.05, "finite-difference mismatch {worst}");
+    }
+
+    #[test]
+    fn proposition1_holds_for_learned_pairs() {
+        // any (A, B) in the ball evaluated by the learners must respect
+        // the *existence* of the PCA bound: loss(PCA) <= loss(random)
+        // in the ID case where Kq ~ Kx.
+        let mut rng = Rng::new(4);
+        let dd = 20;
+        let basis = Matrix::randn(dd, dd, &mut rng);
+        let x = Matrix::randn(300, dd, &mut rng).matmul(&basis);
+        let q = Matrix::randn(200, dd, &mut rng).matmul(&basis);
+        let (kx, kq) = (x.second_moment(), q.second_moment());
+        let p = crate::linalg::eigen::top_eigvecs(&kx, 5);
+        let r = random_orthonormal(5, dd, &mut rng);
+        assert!(pca_bound(&p, &kq, &kx) <= ood_loss(&r, &r, &kq, &kx));
+    }
+}

@@ -1,0 +1,21 @@
+//! The paper's core contribution: LeanVec projection learning.
+//!
+//! * [`loss`] — the LeanVec-OOD objective (Eq. 7/8) and Prop. 1 bound.
+//! * [`pca`] — LeanVec-ID (Section 2.1).
+//! * [`fw`] — Algorithm 1: Frank-Wolfe block-coordinate descent over the
+//!   spectral-norm ball, with a pluggable step backend (native linalg or
+//!   the AOT-compiled PJRT artifact).
+//! * [`eigsearch`] — Algorithm 2: Brent search over the `K_beta` blend.
+//! * [`model`] — the learned `(A, B)` pair + apply/save/load.
+
+pub mod eigsearch;
+pub mod fw;
+pub mod loss;
+pub mod model;
+pub mod pca;
+
+pub use eigsearch::eigsearch;
+pub use fw::{FwParams, FwStepper, NativeStepper};
+pub use loss::{ood_loss, ood_loss_parts};
+pub use model::LeanVecModel;
+pub use pca::pca;

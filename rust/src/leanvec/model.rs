@@ -1,0 +1,304 @@
+//! The learned LeanVec projection pair `(A, B)` and the training
+//! front-end that dispatches across learners/backends.
+
+use crate::config::ProjectionKind;
+use crate::leanvec::eigsearch::{eigsearch, NativeTopd, TopdBackend};
+use crate::leanvec::fw::{frank_wolfe, FwParams, FwStepper, NativeStepper};
+use crate::leanvec::loss::ood_loss;
+use crate::leanvec::pca::pca;
+use crate::linalg::qr::random_orthonormal;
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// A trained LeanVec model: `x -> B x` for database vectors,
+/// `q -> A q` for queries (Eq. 1). For ID/eigsearch learners `A == B`.
+#[derive(Clone, Debug)]
+pub struct LeanVecModel {
+    /// query projection (d, D)
+    pub a: Matrix,
+    /// database projection (d, D)
+    pub b: Matrix,
+    pub kind: ProjectionKind,
+    /// training diagnostics: final OOD loss (Eq. 8 form)
+    pub train_loss: f64,
+}
+
+impl LeanVecModel {
+    pub fn input_dim(&self) -> usize {
+        self.a.cols
+    }
+
+    pub fn target_dim(&self) -> usize {
+        self.a.rows
+    }
+
+    /// Project one query: `A q`.
+    pub fn project_query(&self, q: &[f32]) -> Vec<f32> {
+        self.a.matvec(q)
+    }
+
+    /// Project one database vector: `B x`.
+    pub fn project_database_vector(&self, x: &[f32]) -> Vec<f32> {
+        self.b.matvec(x)
+    }
+
+    /// Project a batch of database rows.
+    pub fn project_database(&self, rows: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        rows.iter()
+            .map(|r| self.project_database_vector(r))
+            .collect()
+    }
+
+    /// Identity model (no reduction) for the `ProjectionKind::None` path.
+    pub fn identity(dim: usize) -> LeanVecModel {
+        LeanVecModel {
+            a: Matrix::eye(dim),
+            b: Matrix::eye(dim),
+            kind: ProjectionKind::None,
+            train_loss: 0.0,
+        }
+    }
+
+    // ------------------------------------------------------------ persistence
+    pub fn to_json(&self) -> Json {
+        let mat = |m: &Matrix| {
+            Json::obj(vec![
+                ("rows", Json::num(m.rows as f64)),
+                ("cols", Json::num(m.cols as f64)),
+                (
+                    "data",
+                    Json::arr(m.data.iter().map(|&v| Json::num(v as f64))),
+                ),
+            ])
+        };
+        Json::obj(vec![
+            ("kind", Json::str(self.kind.name())),
+            ("train_loss", Json::num(self.train_loss)),
+            ("a", mat(&self.a)),
+            ("b", mat(&self.b)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<LeanVecModel> {
+        let mat = |j: &Json| -> Option<Matrix> {
+            let rows = j.get("rows")?.as_usize()?;
+            let cols = j.get("cols")?.as_usize()?;
+            let data: Vec<f32> = j
+                .get("data")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().unwrap_or(f64::NAN) as f32)
+                .collect();
+            if data.len() != rows * cols {
+                return None;
+            }
+            Some(Matrix::from_vec(rows, cols, data))
+        };
+        Some(LeanVecModel {
+            a: mat(j.get("a")?)?,
+            b: mat(j.get("b")?)?,
+            kind: ProjectionKind::parse(j.get("kind")?.as_str()?)?,
+            train_loss: j.get("train_loss")?.as_f64()?,
+        })
+    }
+}
+
+/// Backends for the two heavy training computations; the defaults are
+/// the native implementations, the runtime swaps in PJRT executors.
+pub struct TrainBackends {
+    pub fw: Box<dyn FwStepper>,
+    pub topd: Box<dyn TopdBackend>,
+}
+
+impl Default for TrainBackends {
+    fn default() -> Self {
+        TrainBackends {
+            fw: Box::new(NativeStepper),
+            topd: Box::new(NativeTopd),
+        }
+    }
+}
+
+/// Train a projection of the requested kind.
+///
+/// `x_rows` are database vectors (the learn split), `q_rows` a
+/// representative query learn set (ignored by ID/Random). Second moments
+/// are computed here; subsample upstream if the sets are large (the
+/// covariance concentrates at a sqrt(n) rate — Fig. 15/16).
+pub fn train_projection(
+    kind: ProjectionKind,
+    x_rows: &[Vec<f32>],
+    q_rows: Option<&[Vec<f32>]>,
+    d: usize,
+    backends: &mut TrainBackends,
+    seed: u64,
+) -> LeanVecModel {
+    let dd = x_rows.first().map(|r| r.len()).unwrap_or(0);
+    assert!(d <= dd, "target dim {d} exceeds input dim {dd}");
+    let x = rows_to_matrix(x_rows);
+    let kx = x.second_moment();
+
+    match kind {
+        ProjectionKind::None => LeanVecModel::identity(dd),
+        ProjectionKind::Random => {
+            let mut rng = Rng::new(seed);
+            let p = random_orthonormal(d, dd, &mut rng);
+            let kq = q_rows
+                .map(|q| rows_to_matrix(q).second_moment())
+                .unwrap_or_else(|| kx.clone());
+            let train_loss = ood_loss(&p, &p, &kq, &kx);
+            LeanVecModel {
+                a: p.clone(),
+                b: p,
+                kind,
+                train_loss,
+            }
+        }
+        ProjectionKind::Id => {
+            let p = pca(&kx, d);
+            let kq = q_rows
+                .map(|q| rows_to_matrix(q).second_moment())
+                .unwrap_or_else(|| kx.clone());
+            let train_loss = ood_loss(&p, &p, &kq, &kx);
+            LeanVecModel {
+                a: p.clone(),
+                b: p,
+                kind,
+                train_loss,
+            }
+        }
+        ProjectionKind::OodEigSearch => {
+            let q = q_rows.expect("LeanVec-OOD requires a query learn set");
+            let kq = rows_to_matrix(q).second_moment();
+            let res = eigsearch(&kq, &kx, d, backends.topd.as_mut());
+            LeanVecModel {
+                a: res.p.clone(),
+                b: res.p,
+                kind,
+                train_loss: res.loss,
+            }
+        }
+        ProjectionKind::OodFrankWolfe => {
+            let q = q_rows.expect("LeanVec-OOD requires a query learn set");
+            let kq = rows_to_matrix(q).second_moment();
+            // Init from the eigsearch solution (the paper's ES+FW variant,
+            // Fig. 18): it is never worse than either method alone and
+            // avoids the zero-gradient degeneracy of the NS oracle.
+            let init = eigsearch(&kq, &kx, d, backends.topd.as_mut());
+            let res = frank_wolfe(
+                backends.fw.as_mut(),
+                init.p.clone(),
+                init.p.clone(),
+                &kq,
+                &kx,
+                FwParams::default(),
+            );
+            let (a, b, loss) = if res.best_loss <= init.loss {
+                (res.a, res.b, res.best_loss)
+            } else {
+                (init.p.clone(), init.p, init.loss)
+            };
+            LeanVecModel {
+                a,
+                b,
+                kind,
+                train_loss: loss,
+            }
+        }
+    }
+}
+
+/// Rows (n x D) into a Matrix.
+pub fn rows_to_matrix(rows: &[Vec<f32>]) -> Matrix {
+    let dd = rows.first().map(|r| r.len()).unwrap_or(0);
+    let mut m = Matrix::zeros(rows.len(), dd);
+    for (i, r) in rows.iter().enumerate() {
+        m.row_mut(i).copy_from_slice(r);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn projection_shapes() {
+        let x = gaussian_rows(200, 16, 1);
+        let mut b = TrainBackends::default();
+        let m = train_projection(ProjectionKind::Id, &x, None, 6, &mut b, 0);
+        assert_eq!(m.target_dim(), 6);
+        assert_eq!(m.input_dim(), 16);
+        assert_eq!(m.project_query(&x[0]).len(), 6);
+        assert_eq!(m.project_database(&x[..3]).len(), 3);
+    }
+
+    #[test]
+    fn all_kinds_train() {
+        let x = gaussian_rows(150, 12, 2);
+        let q = gaussian_rows(100, 12, 3);
+        let mut b = TrainBackends::default();
+        for kind in [
+            ProjectionKind::Id,
+            ProjectionKind::Random,
+            ProjectionKind::OodEigSearch,
+            ProjectionKind::OodFrankWolfe,
+        ] {
+            let m = train_projection(kind, &x, Some(&q), 4, &mut b, 7);
+            assert_eq!(m.kind, kind);
+            // FW iterates live in the *convex hull* of St(D, d) (Eq. 2),
+            // not on the manifold itself — check the spectral ball there
+            // and exact orthonormality for the manifold-valued learners.
+            if kind == ProjectionKind::OodFrankWolfe {
+                assert!(
+                    crate::linalg::svd::spectral_norm(&m.a) <= 1.01,
+                    "{kind:?}"
+                );
+            } else {
+                assert!(m.a.row_orthonormality_defect() < 0.05, "{kind:?}");
+            }
+            assert!(m.train_loss.is_finite());
+        }
+    }
+
+    #[test]
+    fn ood_learners_not_worse_than_pca_by_loss() {
+        let x = gaussian_rows(300, 16, 4);
+        let q = gaussian_rows(200, 16, 5);
+        let mut b = TrainBackends::default();
+        let id = train_projection(ProjectionKind::Id, &x, Some(&q), 6, &mut b, 0);
+        let es = train_projection(ProjectionKind::OodEigSearch, &x, Some(&q), 6, &mut b, 0);
+        let fw = train_projection(ProjectionKind::OodFrankWolfe, &x, Some(&q), 6, &mut b, 0);
+        assert!(es.train_loss <= id.train_loss * 1.001);
+        assert!(fw.train_loss <= es.train_loss * 1.001);
+    }
+
+    #[test]
+    fn identity_model_is_identity() {
+        let m = LeanVecModel::identity(8);
+        let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        assert_eq!(m.project_query(&v), v);
+        assert_eq!(m.project_database_vector(&v), v);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let x = gaussian_rows(100, 10, 6);
+        let mut b = TrainBackends::default();
+        let m = train_projection(ProjectionKind::Id, &x, None, 4, &mut b, 0);
+        let j = m.to_json();
+        let m2 = LeanVecModel::from_json(&j).expect("parse back");
+        assert_eq!(m.kind, m2.kind);
+        assert!(m.a.max_abs_diff(&m2.a) < 1e-5);
+        assert!(m.b.max_abs_diff(&m2.b) < 1e-5);
+    }
+}

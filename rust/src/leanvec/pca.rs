@@ -1,0 +1,57 @@
+//! LeanVec-ID (Section 2.1): PCA on the database second moment.
+
+use crate::leanvec::eigsearch::{NativeTopd, TopdBackend};
+use crate::linalg::Matrix;
+
+/// Top-d principal directions of the database as a row-orthonormal
+/// (d, D) projection `M` with `A = B = M` (Eq. 4). `kx` is `X X^T / n`.
+/// Uses the adaptive eigensolver (Jacobi for small D, orthogonal
+/// iteration for d << D) shared with Algorithm 2.
+pub fn pca(kx: &Matrix, d: usize) -> Matrix {
+    NativeTopd.topd(kx, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pca_recovers_planted_subspace() {
+        // data concentrated in a planted 3-dim subspace + small noise
+        let mut rng = Rng::new(1);
+        let dd = 16;
+        let basis = crate::linalg::qr::random_orthonormal(3, dd, &mut rng); // (3, D)
+        let coeff = Matrix::randn(500, 3, &mut rng);
+        let mut x = coeff.matmul(&basis); // (n, D) in the subspace
+        for v in x.data.iter_mut() {
+            *v += 0.01 * rng.gaussian_f32();
+        }
+        let p = pca(&x.second_moment(), 3);
+        // planted basis must lie in span(P): || basis - basis P^T P || small
+        let proj = basis.matmul_nt(&p).matmul(&p);
+        assert!(basis.max_abs_diff(&proj) < 0.05);
+    }
+
+    #[test]
+    fn pca_projection_is_orthonormal() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(200, 24, &mut rng);
+        let p = pca(&x.second_moment(), 8);
+        assert_eq!((p.rows, p.cols), (8, 24));
+        assert!(p.row_orthonormality_defect() < 1e-4);
+    }
+
+    #[test]
+    fn more_dims_capture_more_energy() {
+        let mut rng = Rng::new(3);
+        let x = Matrix::randn(300, 20, &mut rng);
+        let kx = x.second_moment();
+        let energy = |d: usize| {
+            let p = pca(&kx, d);
+            p.matmul(&kx).matmul_nt(&p).trace()
+        };
+        assert!(energy(4) < energy(8));
+        assert!(energy(8) < energy(16));
+    }
+}

@@ -1,0 +1,31 @@
+//! # LeanVec
+//!
+//! A production-oriented reproduction of *"LeanVec: Searching vectors
+//! faster by making them fit"* (Tepper et al., Intel Labs, 2023):
+//! graph-based similarity search accelerated by combining **linear
+//! dimensionality reduction** (in-distribution PCA and two query-aware
+//! out-of-distribution learners) with **Locally-adaptive Vector
+//! Quantization (LVQ)** in a search-and-rerank pipeline.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//! JAX/Pallas (Layers 1-2) author the projection-learning and batch
+//! projection computations, which are AOT-lowered to HLO-text artifacts
+//! at build time; this crate loads them through the PJRT C API
+//! ([`runtime`]) and owns everything on the request path: the Vamana
+//! graph ([`graph`]), the compressed vector stores ([`quant`]), the
+//! search-and-rerank index ([`index`]), and the batching query engine
+//! ([`coordinator`]). Python never runs at serve time.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod index;
+pub mod leanvec;
+pub mod linalg;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use config::Similarity;

@@ -1,0 +1,373 @@
+//! Row-major dense f32 matrix with the operations the learners need.
+
+use crate::util::rng::Rng;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.gaussian_f32()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Blocked matmul `self * other`, f32 with per-row f64-free kahan-less
+    /// accumulation (adequate at the sizes used; validated against the
+    /// PJRT artifacts in tests). Inner loops are written for
+    /// autovectorization: contiguous slices, no bounds checks in the hot
+    /// loop.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        // i-k-j loop order: out_row += a[i][k] * b_row[k], streaming b.
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * other^T` without materializing the transpose.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                out.data[i * n + j] = dot(a_row, b_row);
+            }
+        }
+        out
+    }
+
+    /// `self^T * other` without materializing the transpose.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let a_row = &self.data[kk * m..(kk + 1) * m];
+            let b_row = &other.data[kk * n..(kk + 1) * n];
+            for (i, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product `self * v`.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+
+    /// Second-moment (Gram) matrix of row-vectors: `self^T self / rows`.
+    ///
+    /// Rows of `self` are data points (n x D) — this is the `K_X`/`K_Q`
+    /// of Eq. (8), normalized by the sample count.
+    pub fn second_moment(&self) -> Matrix {
+        let mut k = self.matmul_tn(self);
+        let inv = 1.0 / self.rows.max(1) as f32;
+        for v in k.data.iter_mut() {
+            *v *= inv;
+        }
+        k
+    }
+
+    pub fn scale(&mut self, s: f32) -> &mut Self {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// `self = alpha*self + beta*other`.
+    pub fn lerp(&mut self, other: &Matrix, alpha: f32, beta: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a = alpha * *a + beta * b;
+        }
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn trace(&self) -> f32 {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.at(i, i) as f64).sum::<f64>() as f32
+    }
+
+    /// `Tr(self * other)` computed as sum(self .* other^T) — O(n^2).
+    pub fn trace_product(&self, other: &Matrix) -> f64 {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(self.rows, other.cols);
+        let mut acc = 0.0f64;
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                acc += self.at(i, j) as f64 * other.at(j, i) as f64;
+            }
+        }
+        acc
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// `|| self * self^T - I ||_max` — orthonormality defect of rows.
+    pub fn row_orthonormality_defect(&self) -> f32 {
+        let g = self.matmul_nt(self);
+        let mut worst = 0.0f32;
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let target = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g.at(i, j) - target).abs());
+            }
+        }
+        worst
+    }
+}
+
+/// Dot product with 4-way unrolled accumulation (autovectorizes well).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        s4 += a[i + 4] * b[i + 4];
+        s5 += a[i + 5] * b[i + 5];
+        s6 += a[i + 6] * b[i + 6];
+        s7 += a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s4) + (s1 + s5) + (s2 + s6) + (s3 + s7) + tail
+}
+
+/// Euclidean distance squared.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (x, y) in a.iter().zip(b.iter()) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// In-place L2 normalization; returns the original norm.
+pub fn normalize(v: &mut [f32]) -> f32 {
+    let norm = dot(v, v).sqrt();
+    if norm > 0.0 {
+        let inv = 1.0 / norm;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Matrix, b: &Matrix, tol: f32) {
+        assert!(
+            a.max_abs_diff(b) < tol,
+            "matrices differ by {}",
+            a.max_abs_diff(b)
+        );
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(13, 29, &mut rng);
+        let b = Matrix::randn(29, 17, &mut rng);
+        let direct = a.matmul(&b);
+        approx(&a.matmul_nt(&b.transpose()), &direct, 1e-4);
+        approx(&a.transpose().matmul_tn(&b), &direct, 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(8, 8, &mut rng);
+        approx(&a.matmul(&Matrix::eye(8)), &a, 1e-6);
+        approx(&Matrix::eye(8).matmul(&a), &a, 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(5, 9, &mut rng);
+        let v = Matrix::randn(9, 1, &mut rng);
+        let mv = a.matvec(&v.data);
+        let mm = a.matmul(&v);
+        for i in 0..5 {
+            assert!((mv[i] - mm.data[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn second_moment_is_symmetric_psd_diag() {
+        let mut rng = Rng::new(4);
+        let x = Matrix::randn(50, 7, &mut rng);
+        let k = x.second_moment();
+        for i in 0..7 {
+            assert!(k.at(i, i) > 0.0);
+            for j in 0..7 {
+                assert!((k.at(i, j) - k.at(j, i)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_product_matches_matmul_trace() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(6, 9, &mut rng);
+        let b = Matrix::randn(9, 6, &mut rng);
+        let direct = a.matmul(&b).trace() as f64;
+        assert!((a.trace_product(&b) - direct).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(6);
+        for n in [0, 1, 7, 8, 9, 31, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut v = vec![3.0, 4.0];
+        let norm = normalize(&mut v);
+        assert_eq!(norm, 5.0);
+        assert!((dot(&v, &v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l2_sq_known() {
+        assert_eq!(l2_sq(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn orthonormality_defect_of_identity_is_zero() {
+        assert!(Matrix::eye(5).row_orthonormality_defect() < 1e-7);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense f32 linear algebra substrate (no external BLAS/LAPACK).
+//!
+//! Everything the LeanVec learners need: row-major matrices, blocked
+//! matmul, Gram/second-moment accumulation, a cyclic-Jacobi symmetric
+//! eigensolver, thin SVD, QR, and the Newton-Schulz polar iteration
+//! mirrored from the Layer-1 Pallas kernel (used as the native fallback
+//! when a PJRT artifact for the shape is not available).
+
+pub mod eigen;
+pub mod matrix;
+pub mod polar;
+pub mod qr;
+pub mod svd;
+
+pub use eigen::{eigh, top_eigvecs};
+pub use matrix::Matrix;
+pub use polar::polar;
+pub use qr::qr_orthonormal_columns;
+pub use svd::{svd_thin, SvdThin};

@@ -1,0 +1,86 @@
+//! Newton-Schulz polar iteration — the native mirror of the Layer-1
+//! kernel in `python/compile/kernels/fw_step.py`.
+//!
+//! Computes the orthogonal polar factor `U V^T` of a (d, D) matrix,
+//! which is exactly the Frank-Wolfe linear-minimization oracle over the
+//! spectral-norm unit ball (Jaggi 2013). Matmul-only, so it matches the
+//! AOT artifact bit-for-bit in structure (the tests cross-check both).
+
+use super::matrix::Matrix;
+
+/// Iterations matching NEWTON_SCHULZ_ITERS in the Pallas kernel.
+pub const NEWTON_SCHULZ_ITERS: usize = 14;
+
+/// Orthogonal polar factor of `c` (rows <= cols expected, as in the
+/// (d, D) gradients). `X_{t+1} = 1.5 X_t - 0.5 (X_t X_t^T) X_t` starting
+/// from `c / ||c||_F`, which keeps the spectrum in the convergence basin.
+pub fn polar(c: &Matrix, iters: usize) -> Matrix {
+    let norm = c.frobenius_norm().max(1e-30);
+    let mut x = c.clone();
+    x.scale(1.0 / norm);
+    for _ in 0..iters {
+        // Small side first: (d, d) Gram, then (d, D) product.
+        let xxt = x.matmul_nt(&x);
+        let xxtx = xxt.matmul(&x);
+        x.lerp(&xxtx, 1.5, -0.5);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn result_has_orthonormal_rows() {
+        let mut rng = Rng::new(1);
+        for &(d, dd) in &[(4, 16), (12, 40), (24, 96)] {
+            let c = Matrix::randn(d, dd, &mut rng);
+            let p = polar(&c, NEWTON_SCHULZ_ITERS);
+            assert!(
+                p.row_orthonormality_defect() < 5e-3,
+                "defect {} at ({d},{dd})",
+                p.row_orthonormality_defect()
+            );
+        }
+    }
+
+    #[test]
+    fn polar_of_orthonormal_is_self() {
+        // rows of a rotation-ish matrix built by normalizing + deflating
+        let mut rng = Rng::new(2);
+        let c = Matrix::randn(6, 24, &mut rng);
+        let q = polar(&c, 30); // converged orthonormal input
+        let p = polar(&q, NEWTON_SCHULZ_ITERS);
+        assert!(p.max_abs_diff(&q) < 1e-3);
+    }
+
+    #[test]
+    fn is_linear_minimization_oracle() {
+        // <polar(C), C> must be within 1% of the nuclear norm of C
+        // (computed via eigh of C C^T).
+        let mut rng = Rng::new(3);
+        let c = Matrix::randn(10, 32, &mut rng);
+        let p = polar(&c, 30);
+        let align: f64 = p
+            .data
+            .iter()
+            .zip(c.data.iter())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let gram = c.matmul_nt(&c);
+        let (w, _) = crate::linalg::eigen::eigh(&gram);
+        let nuclear: f64 = w.iter().map(|&x| (x.max(0.0) as f64).sqrt()).sum();
+        assert!(align >= 0.99 * nuclear, "{align} vs {nuclear}");
+    }
+
+    #[test]
+    fn zero_matrix_stays_zero() {
+        // Documented behaviour: the NS oracle cannot escape a zero
+        // gradient (unlike an SVD LMO); drivers must not init at zero.
+        let z = Matrix::zeros(3, 8);
+        let p = polar(&z, NEWTON_SCHULZ_ITERS);
+        assert!(p.frobenius_norm() < 1e-6);
+    }
+}

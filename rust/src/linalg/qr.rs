@@ -1,0 +1,117 @@
+//! Thin QR via modified Gram-Schmidt (numerically adequate for the
+//! random-init bases used by subspace iteration and the generators).
+
+use super::matrix::{dot, normalize, Matrix};
+
+/// Orthonormalize the columns of `a` (rows x cols, rows >= cols) with
+/// modified Gram-Schmidt + one reorthogonalization pass. Returns Q with
+/// the same shape; any numerically-dependent column is replaced by a
+/// deterministic fresh direction and re-orthogonalized.
+pub fn qr_orthonormal_columns(a: &Matrix) -> Matrix {
+    let (n, k) = (a.rows, a.cols);
+    assert!(n >= k, "need rows >= cols");
+    // column-major working copy
+    let mut cols: Vec<Vec<f32>> = (0..k)
+        .map(|c| (0..n).map(|r| a.at(r, c)).collect())
+        .collect();
+
+    for j in 0..k {
+        // two MGS passes for stability
+        for _pass in 0..2 {
+            for i in 0..j {
+                // safety: cols[i] finished; project out
+                let proj = dot(&cols[j], &cols[i]);
+                let ci = cols[i].clone();
+                for (x, y) in cols[j].iter_mut().zip(ci.iter()) {
+                    *x -= proj * y;
+                }
+            }
+        }
+        let norm = normalize(&mut cols[j]);
+        if norm < 1e-6 {
+            // degenerate column: replace with canonical basis vector e_j
+            // then orthogonalize again
+            for (r, x) in cols[j].iter_mut().enumerate() {
+                *x = if r == j % n { 1.0 } else { 0.0 };
+            }
+            for i in 0..j {
+                let proj = dot(&cols[j], &cols[i]);
+                let ci = cols[i].clone();
+                for (x, y) in cols[j].iter_mut().zip(ci.iter()) {
+                    *x -= proj * y;
+                }
+            }
+            normalize(&mut cols[j]);
+        }
+    }
+
+    let mut q = Matrix::zeros(n, k);
+    for c in 0..k {
+        for r in 0..n {
+            q.set(r, c, cols[c][r]);
+        }
+    }
+    q
+}
+
+/// A random row-orthonormal (d x D) matrix (e.g. FW initialization,
+/// random-projection baseline in the Fig. 11 ablation).
+pub fn random_orthonormal(d: usize, dd: usize, rng: &mut crate::util::rng::Rng) -> Matrix {
+    let g = Matrix::randn(dd, d, rng);
+    qr_orthonormal_columns(&g).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn columns_are_orthonormal() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(20, 7, &mut rng);
+        let q = qr_orthonormal_columns(&a);
+        assert!(q.transpose().row_orthonormality_defect() < 1e-5);
+    }
+
+    #[test]
+    fn preserves_span_of_full_rank_input() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(10, 3, &mut rng);
+        let q = qr_orthonormal_columns(&a);
+        // every original column must be (nearly) in span(Q):
+        // || a_j - Q Q^T a_j || ~ 0
+        let qt = q.transpose();
+        for j in 0..3 {
+            let col: Vec<f32> = (0..10).map(|r| a.at(r, j)).collect();
+            let coeffs = qt.matvec(&col);
+            let rec = q.matvec(&coeffs);
+            let err: f32 = col
+                .iter()
+                .zip(rec.iter())
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            assert!(err < 1e-6, "col {j}: {err}");
+        }
+    }
+
+    #[test]
+    fn handles_duplicate_columns() {
+        let mut a = Matrix::zeros(6, 3);
+        for r in 0..6 {
+            a.set(r, 0, (r + 1) as f32);
+            a.set(r, 1, (r + 1) as f32); // duplicate
+            a.set(r, 2, if r == 0 { 1.0 } else { 0.0 });
+        }
+        let q = qr_orthonormal_columns(&a);
+        assert!(q.transpose().row_orthonormality_defect() < 1e-4);
+    }
+
+    #[test]
+    fn random_orthonormal_shape_and_defect() {
+        let mut rng = Rng::new(3);
+        let p = random_orthonormal(8, 32, &mut rng);
+        assert_eq!((p.rows, p.cols), (8, 32));
+        assert!(p.row_orthonormality_defect() < 1e-5);
+    }
+}

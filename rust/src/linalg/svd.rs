@@ -1,0 +1,128 @@
+//! Thin SVD of wide (d x D) matrices via the eigendecomposition of the
+//! small-side Gram matrix — all the learners ever need (spectral norms,
+//! exact polar factors for validation, Prop. 1 bounds).
+
+use super::eigen::eigh;
+use super::matrix::Matrix;
+
+/// Thin SVD `c = U diag(s) V^T` for `c` with `rows <= cols`.
+pub struct SvdThin {
+    /// (d x d) left singular vectors (columns)
+    pub u: Matrix,
+    /// singular values, descending
+    pub s: Vec<f32>,
+    /// (d x D): rows are the right singular vectors (i.e. V^T)
+    pub vt: Matrix,
+}
+
+/// Compute the thin SVD through `eigh(c c^T)`:
+/// `c c^T = U diag(s^2) U^T`, then `V^T = diag(1/s) U^T c`.
+/// Singular values below `1e-6 * s_max` get their `vt` row replaced by
+/// zeros (rank-deficient directions are never consumed by callers).
+pub fn svd_thin(c: &Matrix) -> SvdThin {
+    assert!(c.rows <= c.cols, "svd_thin expects a wide matrix");
+    let d = c.rows;
+    let gram = c.matmul_nt(c); // (d, d)
+    let (w, u) = eigh(&gram);
+    let s: Vec<f32> = w.iter().map(|&x| x.max(0.0).sqrt()).collect();
+    let smax = s.first().copied().unwrap_or(0.0);
+
+    // V^T = diag(1/s) U^T C
+    let utc = u.matmul_tn(c); // (d, D)
+    let mut vt = utc;
+    for r in 0..d {
+        let inv = if s[r] > 1e-6 * smax.max(1e-30) {
+            1.0 / s[r]
+        } else {
+            0.0
+        };
+        for v in vt.row_mut(r) {
+            *v *= inv;
+        }
+    }
+    SvdThin { u, s, vt }
+}
+
+/// Spectral norm (largest singular value).
+pub fn spectral_norm(c: &Matrix) -> f32 {
+    if c.rows <= c.cols {
+        svd_thin(c).s.first().copied().unwrap_or(0.0)
+    } else {
+        svd_thin(&c.transpose()).s.first().copied().unwrap_or(0.0)
+    }
+}
+
+/// Exact polar factor `U V^T` (the SVD-based LMO used as the oracle the
+/// Newton-Schulz kernel is validated against).
+pub fn polar_exact(c: &Matrix) -> Matrix {
+    let svd = svd_thin(c);
+    svd.u.matmul(&svd.vt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::polar::polar;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstructs_input() {
+        let mut rng = Rng::new(1);
+        let c = Matrix::randn(6, 20, &mut rng);
+        let svd = svd_thin(&c);
+        // U diag(s) V^T
+        let mut us = svd.u.clone();
+        for r in 0..6 {
+            for k in 0..6 {
+                us.data[r * 6 + k] = svd.u.at(r, k) * svd.s[k];
+            }
+        }
+        let rec = us.matmul(&svd.vt);
+        assert!(c.max_abs_diff(&rec) < 1e-3, "{}", c.max_abs_diff(&rec));
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::new(2);
+        let c = Matrix::randn(8, 30, &mut rng);
+        let s = svd_thin(&c).s;
+        for i in 1..s.len() {
+            assert!(s[i - 1] >= s[i] - 1e-5);
+            assert!(s[i] >= 0.0);
+        }
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        let mut rng = Rng::new(3);
+        let c = Matrix::randn(5, 17, &mut rng);
+        let svd = svd_thin(&c);
+        assert!(svd.u.row_orthonormality_defect() < 1e-4); // U square orthogonal
+        assert!(svd.vt.row_orthonormality_defect() < 1e-4);
+    }
+
+    #[test]
+    fn spectral_norm_of_orthonormal_is_one() {
+        let mut rng = Rng::new(4);
+        let q = crate::linalg::qr::random_orthonormal(6, 24, &mut rng);
+        assert!((spectral_norm(&q) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn polar_exact_matches_newton_schulz() {
+        let mut rng = Rng::new(5);
+        let c = Matrix::randn(8, 24, &mut rng);
+        let exact = polar_exact(&c);
+        let ns = polar(&c, 30);
+        assert!(exact.max_abs_diff(&ns) < 1e-2, "{}", exact.max_abs_diff(&ns));
+    }
+
+    #[test]
+    fn known_diagonal_case() {
+        // c = [[3, 0, 0], [0, 2, 0]] -> s = [3, 2]
+        let c = Matrix::from_vec(2, 3, vec![3.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+        let s = svd_thin(&c).s;
+        assert!((s[0] - 3.0).abs() < 1e-5);
+        assert!((s[1] - 2.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,240 @@
+//! `repro` — the LeanVec reproduction CLI.
+//!
+//! Subcommands:
+//!   experiment <id>   regenerate a paper table/figure (or `all`)
+//!   build             build an index over a synthetic dataset, report timing
+//!   search            build + search, print QPS/recall
+//!   serve             run the batching engine on a synthetic workload
+//!   artifacts         verify the PJRT artifacts load + execute
+//!
+//! Common flags: --out DIR, --scale S, --seed N, --pjrt,
+//!               --dataset NAME, --dim d, --window W, --k K
+
+use leanvec::config::{Compression, ProjectionKind};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QueryProjectorKind};
+use leanvec::data::synth::{generate, paper_datasets, paper_target_dim};
+use leanvec::experiments::harness::ExpContext;
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use leanvec::util::cli::Args;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("build") => cmd_build(&args),
+        Some("search") => cmd_search(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "usage: repro <experiment|build|search|serve|artifacts> [flags]\n\
+         \n\
+         repro experiment all --out results --scale 0.35\n\
+         repro experiment fig5 --pjrt\n\
+         repro build --dataset rqa-768 --dim 160\n\
+         repro search --dataset wit-512 --projection ood-es --window 50\n\
+         repro serve --dataset rqa-768 --queries 2000 --workers 2\n\
+         repro artifacts"
+    );
+}
+
+fn ctx_from(args: &Args) -> ExpContext {
+    ExpContext {
+        out_dir: args.str("out", "results").into(),
+        scale: args.f64("scale", 0.35),
+        use_pjrt: args.switch("pjrt"),
+        seed: args.usize("seed", 7) as u64,
+    }
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    leanvec::experiments::run(&id, &ctx_from(args))
+}
+
+fn dataset_from(args: &Args, ctx: &ExpContext) -> anyhow::Result<leanvec::data::synth::Dataset> {
+    let name = args.str("dataset", "rqa-768");
+    let spec = paper_datasets(ctx.scale)
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}'"))?;
+    Ok(generate(&spec))
+}
+
+fn build_index(
+    args: &Args,
+    ctx: &ExpContext,
+    ds: &leanvec::data::synth::Dataset,
+) -> anyhow::Result<leanvec::index::leanvec_index::LeanVecIndex> {
+    let proj = ProjectionKind::parse(&args.str("projection", "ood-es"))
+        .ok_or_else(|| anyhow::anyhow!("bad --projection"))?;
+    let d = args.usize("dim", paper_target_dim(&ds.name));
+    let primary = Compression::parse(&args.str("primary", "lvq8"))
+        .ok_or_else(|| anyhow::anyhow!("bad --primary"))?;
+    let secondary = Compression::parse(&args.str("secondary", "f16"))
+        .ok_or_else(|| anyhow::anyhow!("bad --secondary"))?;
+    let mut builder = IndexBuilder::new()
+        .projection(proj)
+        .target_dim(d)
+        .primary(primary)
+        .secondary(secondary)
+        .graph_params(ctx.graph_params(ds.similarity))
+        .seed(ctx.seed);
+    if ctx.use_pjrt {
+        let rt = leanvec::runtime::executor::open_shared(
+            &leanvec::runtime::default_artifacts_dir(),
+        )?;
+        builder = builder
+            .backends(leanvec::leanvec::model::TrainBackends {
+                fw: Box::new(leanvec::runtime::PjrtFwStepper::new(rt.clone())),
+                topd: Box::new(leanvec::runtime::PjrtTopd::new(rt.clone())),
+            })
+            .projector(Box::new(leanvec::runtime::PjrtProjector::new(rt)));
+    }
+    Ok(builder.build(&ds.database, Some(&ds.learn_queries), ds.similarity))
+}
+
+fn cmd_build(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let ds = dataset_from(args, &ctx)?;
+    println!(
+        "building index over {} ({} x {}, {})...",
+        ds.name,
+        ds.database.len(),
+        ds.dim,
+        ds.similarity.name()
+    );
+    let index = build_index(args, &ctx, &ds)?;
+    let b = index.build_breakdown;
+    println!(
+        "built: train {:.2}s | project {:.2}s | quantize {:.2}s | graph {:.2}s | total {:.2}s",
+        b.train_seconds,
+        b.project_seconds,
+        b.quantize_seconds,
+        b.graph_seconds,
+        b.total()
+    );
+    println!(
+        "primary {} B/vec ({:.1}x vs FP16 full-D), avg degree {:.1}",
+        index.primary.bytes_per_vector(),
+        index.primary_compression_vs_fp16(),
+        index.graph.adj.avg_degree()
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let ds = dataset_from(args, &ctx)?;
+    let k = args.usize("k", 10);
+    let window = args.usize("window", 50);
+    let index = build_index(args, &ctx, &ds)?;
+    let truth =
+        leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let curve = leanvec::experiments::harness::qps_recall_curve(
+        &index,
+        &ds.test_queries,
+        &truth,
+        k,
+        &[window],
+    );
+    let p = curve[0];
+    println!(
+        "{}: window {} -> recall@{k} {:.3}, {:.0} QPS, {:.0} bytes/query",
+        ds.name, p.window, p.recall, p.qps, p.bytes_per_query
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args);
+    let ds = dataset_from(args, &ctx)?;
+    let k = args.usize("k", 10);
+    let n_queries = args.usize("queries", 2000);
+    let index = Arc::new(build_index(args, &ctx, &ds)?);
+    let truth =
+        leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    // repeat test queries to reach the workload size
+    let queries: Vec<Vec<f32>> = (0..n_queries)
+        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
+        .collect();
+    let truth_rep: Vec<Vec<u32>> = (0..n_queries)
+        .map(|i| truth[i % truth.len()].clone())
+        .collect();
+    let cfg = EngineConfig {
+        workers: args.usize("workers", 0).max(1),
+        batch: BatchPolicy {
+            max_batch: args.usize("batch", 64),
+            max_wait: std::time::Duration::from_micros(args.usize("wait-us", 500) as u64),
+        },
+        search: SearchParams {
+            window: args.usize("window", 50),
+            rerank_window: args.usize("window", 50),
+        },
+        projector: if ctx.use_pjrt {
+            QueryProjectorKind::Pjrt(leanvec::runtime::default_artifacts_dir())
+        } else {
+            QueryProjectorKind::Native
+        },
+    };
+    let (_responses, report) = Engine::run_workload(index, cfg, &queries, k, Some(&truth_rep));
+    println!("{}", report.metrics);
+    println!("recall@{k}: {:.3}", report.recall_at_k);
+    Ok(())
+}
+
+fn cmd_artifacts(_args: &Args) -> anyhow::Result<()> {
+    use leanvec::runtime::PjrtRuntime;
+    let dir = leanvec::runtime::default_artifacts_dir();
+    let mut rt = PjrtRuntime::open(&dir)?;
+    println!(
+        "manifest: {} artifacts in {dir:?}",
+        rt.manifest().artifacts.len()
+    );
+    // smoke-execute the smallest project artifact
+    let spec = rt
+        .manifest()
+        .artifacts
+        .iter()
+        .find(|a| a.fn_name == "project")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("no project artifact"))?;
+    let (d, dd, b) = (spec.small_d, spec.big_d, spec.batch.unwrap_or(1));
+    let mut rng = leanvec::util::rng::Rng::new(1);
+    let p = leanvec::linalg::Matrix::randn(d, dd, &mut rng);
+    let x = leanvec::linalg::Matrix::randn(dd, b, &mut rng);
+    let out = rt.execute(
+        &spec.name,
+        &[
+            leanvec::runtime::client::lit_from_matrix(&p)?,
+            leanvec::runtime::client::lit_from_matrix(&x)?,
+        ],
+    )?;
+    let y = leanvec::runtime::client::matrix_from_lit(&out[0], d, b)?;
+    let want = p.matmul(&x);
+    let err = y.max_abs_diff(&want);
+    println!(
+        "executed {} -> output ({d} x {b}), max |err| vs native = {err:.2e}",
+        spec.name
+    );
+    anyhow::ensure!(err < 1e-2, "artifact numerics mismatch");
+    println!("artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,511 @@
+//! Locally-adaptive Vector Quantization (Aguerrebere et al., 2023).
+//!
+//! Per vector `x`: remove the global mean `u = x - mu`, then scalar-
+//! quantize each component with that vector's own range:
+//!
+//! ```text
+//! lo_i  = min(u),  hi_i = max(u),  delta_i = (hi - lo) / (2^B - 1)
+//! code  = round((u - lo) / delta)            (B bits per component)
+//! x_hat = mu + code * delta + lo
+//! ```
+//!
+//! The inner product factorizes into one integer dot plus scalar fixups
+//! (this is what makes LVQ fast — see python/compile/kernels/lvq_dot.py
+//! for the Pallas twin of this loop):
+//!
+//! ```text
+//! <q, x_hat> = delta_i * <q, code> + lo_i * sum(q) + <q, mu>
+//! ```
+//!
+//! `Lvq4x8Store` adds a second-level 8-bit quantization of the residual
+//! (the paper's LVQ4x8): traversal reads only the 4-bit codes; the
+//! residual level is used for decode/re-ranking.
+
+use super::{finish_score, PreparedQuery, ScoreStore};
+use crate::config::Similarity;
+use crate::linalg::matrix::dot;
+
+/// Single-level LVQ store with B in {4, 8} bits per component.
+pub struct LvqStore {
+    dim: usize,
+    bits: u8,
+    mean: Vec<f32>,
+    /// B=8: one byte per component; B=4: two components per byte
+    codes: Vec<u8>,
+    delta: Vec<f32>,
+    lo: Vec<f32>,
+    norms_sq: Vec<f32>,
+    bytes_per_vec: usize,
+}
+
+fn compute_mean(rows: &[Vec<f32>], dim: usize) -> Vec<f32> {
+    let mut mean = vec![0.0f64; dim];
+    for r in rows {
+        for (m, &v) in mean.iter_mut().zip(r.iter()) {
+            *m += v as f64;
+        }
+    }
+    let inv = 1.0 / rows.len().max(1) as f64;
+    mean.iter().map(|&m| (m * inv) as f32).collect()
+}
+
+/// Quantize one centered vector; returns (codes, delta, lo).
+fn quantize(u: &[f32], levels: u32) -> (Vec<u8>, f32, f32) {
+    let lo = u.iter().copied().fold(f32::INFINITY, f32::min);
+    let hi = u.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let range = (hi - lo).max(1e-12);
+    let delta = range / (levels - 1) as f32;
+    let inv = (levels - 1) as f32 / range;
+    let codes = u
+        .iter()
+        .map(|&v| {
+            let c = ((v - lo) * inv).round();
+            c.clamp(0.0, (levels - 1) as f32) as u8
+        })
+        .collect();
+    (codes, delta, lo)
+}
+
+impl LvqStore {
+    pub fn new(rows: &[Vec<f32>], bits: u8) -> LvqStore {
+        Self::with_mean(rows, bits, None)
+    }
+
+    /// Build with an explicit global mean (used when the primary store
+    /// quantizes *projected* vectors whose mean was computed upstream).
+    pub fn with_mean(rows: &[Vec<f32>], bits: u8, mean: Option<Vec<f32>>) -> LvqStore {
+        assert!(bits == 4 || bits == 8, "LVQ supports 4 or 8 bits");
+        let dim = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mean = mean.unwrap_or_else(|| compute_mean(rows, dim));
+        let levels = 1u32 << bits;
+        let stride = if bits == 8 { dim } else { dim.div_ceil(2) };
+
+        let mut codes = Vec::with_capacity(rows.len() * stride);
+        let mut delta = Vec::with_capacity(rows.len());
+        let mut lo = Vec::with_capacity(rows.len());
+        let mut norms_sq = Vec::with_capacity(rows.len());
+        let mut u = vec![0.0f32; dim];
+
+        for r in rows {
+            assert_eq!(r.len(), dim);
+            for ((uv, &x), &m) in u.iter_mut().zip(r.iter()).zip(mean.iter()) {
+                *uv = x - m;
+            }
+            let (c, d, l) = quantize(&u, levels);
+            // reconstructed norm, consistent with scoring
+            let mut ns = 0.0f32;
+            for (i, &ci) in c.iter().enumerate() {
+                let v = mean[i] + ci as f32 * d + l;
+                ns += v * v;
+            }
+            norms_sq.push(ns);
+            delta.push(d);
+            lo.push(l);
+            if bits == 8 {
+                codes.extend_from_slice(&c);
+            } else {
+                // pack two 4-bit codes per byte, low nibble first
+                for pair in c.chunks(2) {
+                    let lo_nib = pair[0] & 0x0F;
+                    let hi_nib = pair.get(1).copied().unwrap_or(0) & 0x0F;
+                    codes.push(lo_nib | (hi_nib << 4));
+                }
+            }
+        }
+        // bytes/vector: codes + delta + lo (mean is shared, amortized out)
+        let bytes_per_vec = stride + 8;
+        LvqStore {
+            dim,
+            bits,
+            mean,
+            codes,
+            delta,
+            lo,
+            norms_sq,
+            bytes_per_vec,
+        }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    pub fn mean(&self) -> &[f32] {
+        &self.mean
+    }
+
+    #[inline]
+    fn code_slice(&self, id: u32) -> &[u8] {
+        let stride = if self.bits == 8 {
+            self.dim
+        } else {
+            self.dim.div_ceil(2)
+        };
+        let i = id as usize * stride;
+        &self.codes[i..i + stride]
+    }
+
+    /// Fused decode+dot against the raw codes: `<q, code>`.
+    #[inline]
+    fn code_dot(&self, q: &[f32], id: u32) -> f32 {
+        let codes = self.code_slice(id);
+        if self.bits == 8 {
+            code_dot_u8(codes, q)
+        } else {
+            code_dot_u4(codes, q)
+        }
+    }
+}
+
+/// u8 code · f32 query with 4-way unrolling (autovectorizes to SIMD
+/// widen+fma on x86-64).
+#[inline]
+pub(crate) fn code_dot_u8(codes: &[u8], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let n = q.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += codes[i] as f32 * q[i];
+        s1 += codes[i + 1] as f32 * q[i + 1];
+        s2 += codes[i + 2] as f32 * q[i + 2];
+        s3 += codes[i + 3] as f32 * q[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..n {
+        tail += codes[i] as f32 * q[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// packed-u4 code · f32 query.
+#[inline]
+fn code_dot_u4(codes: &[u8], q: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    let n = q.len();
+    for (b, byte) in codes.iter().enumerate() {
+        let i = b * 2;
+        acc += (byte & 0x0F) as f32 * q[i];
+        if i + 1 < n {
+            acc += (byte >> 4) as f32 * q[i + 1];
+        }
+    }
+    acc
+}
+
+impl ScoreStore for LvqStore {
+    fn len(&self) -> usize {
+        self.delta.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn bytes_per_vector(&self) -> usize {
+        self.bytes_per_vec
+    }
+
+    fn prepare(&self, q: &[f32], sim: Similarity) -> PreparedQuery {
+        PreparedQuery {
+            q_sum: q.iter().sum(),
+            q_mu: dot(q, &self.mean),
+            q: q.to_vec(),
+            sim,
+        }
+    }
+
+    fn score(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        let i = id as usize;
+        let ip = self.delta[i] * self.code_dot(&pq.q, id) + self.lo[i] * pq.q_sum + pq.q_mu;
+        finish_score(ip, self.norms_sq[i], pq.sim)
+    }
+
+    fn decode(&self, id: u32) -> Vec<f32> {
+        let i = id as usize;
+        let (d, l) = (self.delta[i], self.lo[i]);
+        let codes = self.code_slice(id);
+        let mut out = Vec::with_capacity(self.dim);
+        if self.bits == 8 {
+            for (j, &c) in codes.iter().enumerate() {
+                out.push(self.mean[j] + c as f32 * d + l);
+            }
+        } else {
+            for (b, byte) in codes.iter().enumerate() {
+                let j = b * 2;
+                out.push(self.mean[j] + (byte & 0x0F) as f32 * d + l);
+                if j + 1 < self.dim {
+                    out.push(self.mean[j + 1] + (byte >> 4) as f32 * d + l);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Two-level LVQ4x8: 4-bit primary codes plus an 8-bit quantization of
+/// the residual. `score()` reads only the first level (that is what
+/// graph traversal touches); `decode()`/`score_full()` add the residual.
+pub struct Lvq4x8Store {
+    first: LvqStore,
+    /// residual codes, 1 byte per component
+    res_codes: Vec<u8>,
+    res_delta: Vec<f32>,
+    res_lo: Vec<f32>,
+    full_norms_sq: Vec<f32>,
+}
+
+impl Lvq4x8Store {
+    pub fn new(rows: &[Vec<f32>]) -> Lvq4x8Store {
+        let first = LvqStore::new(rows, 4);
+        let dim = first.dim();
+        let mut res_codes = Vec::with_capacity(rows.len() * dim);
+        let mut res_delta = Vec::with_capacity(rows.len());
+        let mut res_lo = Vec::with_capacity(rows.len());
+        let mut full_norms_sq = Vec::with_capacity(rows.len());
+        let mut resid = vec![0.0f32; dim];
+        for (i, r) in rows.iter().enumerate() {
+            let dec = first.decode(i as u32);
+            for ((rv, &x), &xh) in resid.iter_mut().zip(r.iter()).zip(dec.iter()) {
+                *rv = x - xh;
+            }
+            let (c, d, l) = quantize(&resid, 256);
+            let mut ns = 0.0f32;
+            for (j, &cj) in c.iter().enumerate() {
+                let v = dec[j] + cj as f32 * d + l;
+                ns += v * v;
+            }
+            full_norms_sq.push(ns);
+            res_codes.extend_from_slice(&c);
+            res_delta.push(d);
+            res_lo.push(l);
+        }
+        Lvq4x8Store {
+            first,
+            res_codes,
+            res_delta,
+            res_lo,
+            full_norms_sq,
+        }
+    }
+
+    /// Score with both levels (re-ranking accuracy).
+    pub fn score_full(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        let i = id as usize;
+        let dim = self.first.dim();
+        let res = &self.res_codes[i * dim..(i + 1) * dim];
+        let ip_first = self.first.delta[i] * self.first.code_dot(&pq.q, id)
+            + self.first.lo[i] * pq.q_sum
+            + pq.q_mu;
+        let ip_res = self.res_delta[i] * code_dot_u8(res, &pq.q) + self.res_lo[i] * pq.q_sum;
+        finish_score(ip_first + ip_res, self.full_norms_sq[i], pq.sim)
+    }
+}
+
+impl ScoreStore for Lvq4x8Store {
+    fn len(&self) -> usize {
+        self.first.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.first.dim()
+    }
+
+    /// Traversal traffic = first level only (the residual bytes are not
+    /// touched during graph search) + the residual's share for rerank is
+    /// accounted separately by callers.
+    fn bytes_per_vector(&self) -> usize {
+        self.first.bytes_per_vector()
+    }
+
+    fn prepare(&self, q: &[f32], sim: Similarity) -> PreparedQuery {
+        self.first.prepare(q, sim)
+    }
+
+    fn score(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        self.first.score(pq, id)
+    }
+
+    fn decode(&self, id: u32) -> Vec<f32> {
+        let i = id as usize;
+        let dim = self.first.dim();
+        let res = &self.res_codes[i * dim..(i + 1) * dim];
+        let mut out = self.first.decode(id);
+        for (j, v) in out.iter_mut().enumerate() {
+            *v += res[j] as f32 * self.res_delta[i] + self.res_lo[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    fn rel_err(a: f32, b: f32, scale: f32) -> f32 {
+        (a - b).abs() / scale.max(1e-6)
+    }
+
+    #[test]
+    fn lvq8_decode_error_small() {
+        let rs = rows(50, 64, 1);
+        let store = LvqStore::new(&rs, 8);
+        for (i, r) in rs.iter().enumerate() {
+            let dec = store.decode(i as u32);
+            let range: f32 = r.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for (a, b) in dec.iter().zip(r.iter()) {
+                assert!(rel_err(*a, *b, range) < 0.02, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn lvq8_score_matches_decode_dot() {
+        let rs = rows(30, 48, 2);
+        let store = LvqStore::new(&rs, 8);
+        let q: Vec<f32> = rows(1, 48, 3).pop().unwrap();
+        let pq = store.prepare(&q, Similarity::InnerProduct);
+        for i in 0..30u32 {
+            let via_score = store.score(&pq, i);
+            let via_decode = dot(&q, &store.decode(i));
+            assert!(
+                (via_score - via_decode).abs() < 1e-3,
+                "{via_score} vs {via_decode}"
+            );
+        }
+    }
+
+    #[test]
+    fn lvq8_approximates_true_ip() {
+        let rs = rows(100, 96, 4);
+        let store = LvqStore::new(&rs, 8);
+        let q: Vec<f32> = rows(1, 96, 5).pop().unwrap();
+        let pq = store.prepare(&q, Similarity::InnerProduct);
+        for (i, r) in rs.iter().enumerate() {
+            let truth = dot(&q, r);
+            let approx = store.score(&pq, i as u32);
+            assert!((truth - approx).abs() < 0.25, "{truth} vs {approx}");
+        }
+    }
+
+    #[test]
+    fn lvq4_coarser_than_lvq8() {
+        let rs = rows(60, 64, 6);
+        let s8 = LvqStore::new(&rs, 8);
+        let s4 = LvqStore::new(&rs, 4);
+        let q: Vec<f32> = rows(1, 64, 7).pop().unwrap();
+        let (p8, p4) = (
+            s8.prepare(&q, Similarity::InnerProduct),
+            s4.prepare(&q, Similarity::InnerProduct),
+        );
+        let (mut err8, mut err4) = (0.0f64, 0.0f64);
+        for (i, r) in rs.iter().enumerate() {
+            let truth = dot(&q, r) as f64;
+            err8 += (truth - s8.score(&p8, i as u32) as f64).abs();
+            err4 += (truth - s4.score(&p4, i as u32) as f64).abs();
+        }
+        assert!(err4 > err8, "lvq4 {err4} should be coarser than lvq8 {err8}");
+        assert!(s4.bytes_per_vector() < s8.bytes_per_vector());
+    }
+
+    #[test]
+    fn lvq4_packing_roundtrip_odd_dim() {
+        let rs = rows(10, 33, 8); // odd dim exercises nibble tail
+        let store = LvqStore::new(&rs, 4);
+        for (i, r) in rs.iter().enumerate() {
+            let dec = store.decode(i as u32);
+            assert_eq!(dec.len(), 33);
+            let range: f32 = r.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for (a, b) in dec.iter().zip(r.iter()) {
+                assert!(rel_err(*a, *b, range) < 0.2);
+            }
+        }
+    }
+
+    #[test]
+    fn lvq4x8_decode_better_than_lvq4() {
+        let rs = rows(40, 32, 9);
+        let two = Lvq4x8Store::new(&rs);
+        let one = LvqStore::new(&rs, 4);
+        let (mut e2, mut e1) = (0.0f64, 0.0f64);
+        for (i, r) in rs.iter().enumerate() {
+            for (a, b) in two.decode(i as u32).iter().zip(r.iter()) {
+                e2 += (a - b).abs() as f64;
+            }
+            for (a, b) in one.decode(i as u32).iter().zip(r.iter()) {
+                e1 += (a - b).abs() as f64;
+            }
+        }
+        assert!(e2 < e1 * 0.2, "two-level {e2} vs one-level {e1}");
+    }
+
+    #[test]
+    fn lvq4x8_score_full_better_than_first_level() {
+        let rs = rows(60, 48, 10);
+        let store = Lvq4x8Store::new(&rs);
+        let q: Vec<f32> = rows(1, 48, 11).pop().unwrap();
+        let pq = store.prepare(&q, Similarity::InnerProduct);
+        let (mut ef, mut e1) = (0.0f64, 0.0f64);
+        for (i, r) in rs.iter().enumerate() {
+            let truth = dot(&q, r) as f64;
+            ef += (truth - store.score_full(&pq, i as u32) as f64).abs();
+            e1 += (truth - store.score(&pq, i as u32) as f64).abs();
+        }
+        assert!(ef < e1, "full {ef} vs first {e1}");
+    }
+
+    #[test]
+    fn l2_similarity_ranks_by_distance() {
+        let rs = rows(80, 24, 12);
+        let store = LvqStore::new(&rs, 8);
+        let q: Vec<f32> = rows(1, 24, 13).pop().unwrap();
+        let pq = store.prepare(&q, Similarity::L2);
+        // top-1 by LVQ-L2 score must be among true top-5
+        let mut best = (0usize, f32::NEG_INFINITY);
+        for i in 0..80u32 {
+            let s = store.score(&pq, i);
+            if s > best.1 {
+                best = (i as usize, s);
+            }
+        }
+        let mut true_order: Vec<usize> = (0..80).collect();
+        true_order.sort_by(|&a, &b| {
+            crate::linalg::matrix::l2_sq(&q, &rs[a])
+                .partial_cmp(&crate::linalg::matrix::l2_sq(&q, &rs[b]))
+                .unwrap()
+        });
+        assert!(true_order[..5].contains(&best.0));
+    }
+
+    #[test]
+    fn constant_vector_quantizes_exactly() {
+        let rs = vec![vec![0.5f32; 16], vec![-0.25f32; 16]];
+        let store = LvqStore::new(&rs, 8);
+        for (i, r) in rs.iter().enumerate() {
+            let dec = store.decode(i as u32);
+            for (a, b) in dec.iter().zip(r.iter()) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratios_match_paper() {
+        // D=768: FP16 = 1536 B; LVQ8 ~ 776 B (~2x); LVQ4 ~ 392 B (~4x)
+        let rs = rows(4, 768, 14);
+        let f16b = crate::quant::F16Store::from_rows(&rs).bytes_per_vector() as f64;
+        let l8 = LvqStore::new(&rs, 8).bytes_per_vector() as f64;
+        let l4 = LvqStore::new(&rs, 4).bytes_per_vector() as f64;
+        assert!((f16b / l8 - 2.0).abs() < 0.1, "{}", f16b / l8);
+        assert!((f16b / l4 - 4.0).abs() < 0.25, "{}", f16b / l4);
+    }
+}

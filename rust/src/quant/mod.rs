@@ -1,0 +1,86 @@
+//! Compressed vector stores: FP32/FP16 and Locally-adaptive Vector
+//! Quantization (Aguerrebere et al., 2023) in LVQ4 / LVQ8 / LVQ4x8
+//! flavors, all behind one scoring trait used by graph traversal.
+//!
+//! Every store scores with a *fused* decode+dot: the code bytes are the
+//! only per-vector memory traffic, which is the entire point of LVQ —
+//! graph search is memory-bandwidth-bound, so score time tracks
+//! `bytes_per_vector()`.
+
+pub mod lvq;
+pub mod stores;
+
+pub use lvq::{Lvq4x8Store, LvqStore};
+pub use stores::{F16Store, F32Store};
+
+use crate::config::Similarity;
+
+/// A prepared query: everything precomputable once per search.
+#[derive(Clone, Debug)]
+pub struct PreparedQuery {
+    /// the (possibly projected) query vector
+    pub q: Vec<f32>,
+    /// sum of query components (LVQ offset fixup)
+    pub q_sum: f32,
+    /// `<q, mu>` against the store's global mean (LVQ mean fixup)
+    pub q_mu: f32,
+    /// similarity the scores should express
+    pub sim: Similarity,
+}
+
+/// Uniform scoring interface over compressed stores.
+///
+/// Scores are "bigger is better" for every similarity:
+/// IP/cosine -> `<q, x>`; L2 -> `2<q,x> - ||x||^2` (the `||q||^2`
+/// constant is dropped as it does not affect ranking).
+pub trait ScoreStore: Send + Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    fn dim(&self) -> usize;
+    /// Memory touched per scored vector (codes + per-vector constants).
+    fn bytes_per_vector(&self) -> usize;
+    fn prepare(&self, q: &[f32], sim: Similarity) -> PreparedQuery;
+    fn score(&self, pq: &PreparedQuery, id: u32) -> f32;
+    /// Decode (approximately reconstruct) one vector — rerank oracle,
+    /// tests, and IVF-PQ training use this.
+    fn decode(&self, id: u32) -> Vec<f32>;
+
+    /// Batch scoring helper (sequential fallback; stores may override
+    /// with a blocked implementation).
+    fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(ids.iter().map(|&id| self.score(pq, id)));
+    }
+}
+
+/// Shared plumbing: turn an inner product plus stored `||x||^2` into the
+/// similarity-specific score.
+#[inline]
+pub(crate) fn finish_score(ip: f32, norm_sq: f32, sim: Similarity) -> f32 {
+    match sim {
+        Similarity::InnerProduct | Similarity::Cosine => ip,
+        Similarity::L2 => 2.0 * ip - norm_sq,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_score_orders_l2_correctly() {
+        // q = 1D point at 0; x1 at 1, x2 at 3: x1 closer
+        // score = 2<q,x> - x^2 = -x^2 when q = 0
+        let s1 = finish_score(0.0, 1.0, Similarity::L2);
+        let s2 = finish_score(0.0, 9.0, Similarity::L2);
+        assert!(s1 > s2);
+    }
+
+    #[test]
+    fn finish_score_ip_passthrough() {
+        assert_eq!(finish_score(3.5, 99.0, Similarity::InnerProduct), 3.5);
+        assert_eq!(finish_score(3.5, 99.0, Similarity::Cosine), 3.5);
+    }
+}

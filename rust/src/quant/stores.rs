@@ -1,0 +1,260 @@
+//! Uncompressed (f32) and half-precision (f16) vector stores.
+
+use super::{finish_score, PreparedQuery, ScoreStore};
+use crate::config::Similarity;
+use crate::linalg::matrix::dot;
+use crate::util::f16;
+
+/// Plain f32 store — the accuracy reference and the FP32 baseline.
+pub struct F32Store {
+    dim: usize,
+    data: Vec<f32>,
+    norms_sq: Vec<f32>,
+}
+
+impl F32Store {
+    pub fn from_rows(rows: &[Vec<f32>]) -> F32Store {
+        let dim = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        let mut norms_sq = Vec::with_capacity(rows.len());
+        for r in rows {
+            assert_eq!(r.len(), dim);
+            norms_sq.push(dot(r, r));
+            data.extend_from_slice(r);
+        }
+        F32Store {
+            dim,
+            data,
+            norms_sq,
+        }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_flat(dim: usize, data: Vec<f32>) -> F32Store {
+        assert_eq!(data.len() % dim.max(1), 0);
+        let norms_sq = data.chunks(dim).map(|r| dot(r, r)).collect();
+        F32Store {
+            dim,
+            data,
+            norms_sq,
+        }
+    }
+
+    #[inline]
+    pub fn vector(&self, id: u32) -> &[f32] {
+        let i = id as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+}
+
+impl ScoreStore for F32Store {
+    fn len(&self) -> usize {
+        self.norms_sq.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn bytes_per_vector(&self) -> usize {
+        self.dim * 4 + 4
+    }
+
+    fn prepare(&self, q: &[f32], sim: Similarity) -> PreparedQuery {
+        PreparedQuery {
+            q: q.to_vec(),
+            q_sum: 0.0,
+            q_mu: 0.0,
+            sim,
+        }
+    }
+
+    fn score(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        let ip = dot(&pq.q, self.vector(id));
+        finish_score(ip, self.norms_sq[id as usize], pq.sim)
+    }
+
+    fn decode(&self, id: u32) -> Vec<f32> {
+        self.vector(id).to_vec()
+    }
+}
+
+/// FP16 store — the paper's uncompressed baseline and the default
+/// secondary (re-ranking) representation.
+pub struct F16Store {
+    dim: usize,
+    data: Vec<u16>,
+    norms_sq: Vec<f32>,
+}
+
+impl F16Store {
+    pub fn from_rows(rows: &[Vec<f32>]) -> F16Store {
+        let dim = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        let mut norms_sq = Vec::with_capacity(rows.len());
+        for r in rows {
+            assert_eq!(r.len(), dim);
+            let enc = f16::encode_slice(r);
+            // norm of the *encoded* vector so scoring is self-consistent
+            let dec = f16::decode_slice(&enc);
+            norms_sq.push(dot(&dec, &dec));
+            data.extend_from_slice(&enc);
+        }
+        F16Store {
+            dim,
+            data,
+            norms_sq,
+        }
+    }
+
+    #[inline]
+    fn codes(&self, id: u32) -> &[u16] {
+        let i = id as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+}
+
+impl ScoreStore for F16Store {
+    fn len(&self) -> usize {
+        self.norms_sq.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn bytes_per_vector(&self) -> usize {
+        self.dim * 2 + 4
+    }
+
+    fn prepare(&self, q: &[f32], sim: Similarity) -> PreparedQuery {
+        PreparedQuery {
+            q: q.to_vec(),
+            q_sum: 0.0,
+            q_mu: 0.0,
+            sim,
+        }
+    }
+
+    fn score(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        // fused decode+dot via the 64K decode table — no temporaries
+        let codes = self.codes(id);
+        let table = f16::decode_table();
+        let n = codes.len();
+        let chunks = n / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += table[codes[i] as usize] * pq.q[i];
+            s1 += table[codes[i + 1] as usize] * pq.q[i + 1];
+            s2 += table[codes[i + 2] as usize] * pq.q[i + 2];
+            s3 += table[codes[i + 3] as usize] * pq.q[i + 3];
+        }
+        let mut ip = (s0 + s1) + (s2 + s3);
+        for i in chunks * 4..n {
+            ip += table[codes[i] as usize] * pq.q[i];
+        }
+        finish_score(ip, self.norms_sq[id as usize], pq.sim)
+    }
+
+    fn decode(&self, id: u32) -> Vec<f32> {
+        f16::decode_slice(self.codes(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn f32_store_exact_ip() {
+        let rs = rows(10, 16, 1);
+        let store = F32Store::from_rows(&rs);
+        let q: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let pq = store.prepare(&q, Similarity::InnerProduct);
+        for (i, r) in rs.iter().enumerate() {
+            let want = dot(&q, r);
+            assert!((store.score(&pq, i as u32) - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn f32_store_l2_ranking_matches_true_distances() {
+        let rs = rows(50, 8, 2);
+        let store = F32Store::from_rows(&rs);
+        let q: Vec<f32> = rows(1, 8, 3).pop().unwrap();
+        let pq = store.prepare(&q, Similarity::L2);
+        let mut by_score: Vec<usize> = (0..50).collect();
+        by_score.sort_by(|&a, &b| {
+            store
+                .score(&pq, b as u32)
+                .partial_cmp(&store.score(&pq, a as u32))
+                .unwrap()
+        });
+        let mut by_dist: Vec<usize> = (0..50).collect();
+        by_dist.sort_by(|&a, &b| {
+            crate::linalg::matrix::l2_sq(&q, &rs[a])
+                .partial_cmp(&crate::linalg::matrix::l2_sq(&q, &rs[b]))
+                .unwrap()
+        });
+        assert_eq!(by_score, by_dist);
+    }
+
+    #[test]
+    fn f16_store_close_to_f32() {
+        let rs = rows(20, 32, 4);
+        let f32s = F32Store::from_rows(&rs);
+        let f16s = F16Store::from_rows(&rs);
+        let q: Vec<f32> = rows(1, 32, 5).pop().unwrap();
+        let p32 = f32s.prepare(&q, Similarity::InnerProduct);
+        let p16 = f16s.prepare(&q, Similarity::InnerProduct);
+        for i in 0..20 {
+            let a = f32s.score(&p32, i);
+            let b = f16s.score(&p16, i);
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let rs = rows(5, 12, 6);
+        let store = F16Store::from_rows(&rs);
+        for i in 0..5 {
+            let dec = store.decode(i);
+            for (a, b) in dec.iter().zip(rs[i as usize].iter()) {
+                assert!((a - b).abs() < 0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_per_vector_ordering() {
+        let rs = rows(3, 64, 7);
+        assert!(
+            F16Store::from_rows(&rs).bytes_per_vector()
+                < F32Store::from_rows(&rs).bytes_per_vector()
+        );
+    }
+
+    #[test]
+    fn score_block_matches_score() {
+        let rs = rows(10, 8, 8);
+        let store = F32Store::from_rows(&rs);
+        let q = vec![1.0; 8];
+        let pq = store.prepare(&q, Similarity::InnerProduct);
+        let ids: Vec<u32> = (0..10).collect();
+        let mut out = Vec::new();
+        store.score_block(&pq, &ids, &mut out);
+        for (i, &s) in out.iter().enumerate() {
+            assert_eq!(s, store.score(&pq, i as u32));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype in the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "u8" => Some(Dtype::U8),
+            _ => None,
+        }
+    }
+}
+
+/// One input/output tensor description.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    /// logical function: fw_step | eig_topd | project | score_batch
+    pub fn_name: String,
+    pub big_d: usize,
+    pub small_d: usize,
+    pub batch: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> std::io::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Manifest::parse(&text, dir).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+        })
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let arts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or("manifest missing 'artifacts'")?;
+        let tensor = |j: &Json| -> Result<TensorSpec, String> {
+            let shape = j
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or("tensor missing shape")?
+                .iter()
+                .map(|v| v.as_usize().ok_or("bad dim"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype = j
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .and_then(Dtype::parse)
+                .ok_or("bad dtype")?;
+            Ok(TensorSpec { shape, dtype })
+        };
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let get_str = |k: &str| a.get(k).and_then(|v| v.as_str()).map(str::to_string);
+            let name = get_str("name").ok_or("artifact missing name")?;
+            let file = dir.join(get_str("file").ok_or("artifact missing file")?);
+            let fn_name = get_str("fn").ok_or("artifact missing fn")?;
+            let big_d = a.get("D").and_then(|v| v.as_usize()).ok_or("missing D")?;
+            let small_d = a.get("d").and_then(|v| v.as_usize()).ok_or("missing d")?;
+            let batch = a.get("batch").and_then(|v| v.as_usize());
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("missing inputs")?
+                .iter()
+                .map(tensor)
+                .collect::<Result<Vec<_>, _>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("missing outputs")?
+                .iter()
+                .map(tensor)
+                .collect::<Result<Vec<_>, _>>()?;
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                fn_name,
+                big_d,
+                small_d,
+                batch,
+                inputs,
+                outputs,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Find an artifact by logical function + projection shape.
+    pub fn find(&self, fn_name: &str, big_d: usize, small_d: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.fn_name == fn_name && a.big_d == big_d && a.small_d == small_d)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": [
+        {"name": "fw_step_D64_d16", "file": "fw_step_D64_d16.hlo.txt",
+         "fn": "fw_step", "D": 64, "d": 16,
+         "inputs": [{"shape": [16,64], "dtype": "f32"},
+                    {"shape": [16,64], "dtype": "f32"},
+                    {"shape": [64,64], "dtype": "f32"},
+                    {"shape": [64,64], "dtype": "f32"},
+                    {"shape": [1], "dtype": "f32"}],
+         "outputs": [{"shape": [16,64], "dtype": "f32"},
+                     {"shape": [16,64], "dtype": "f32"},
+                     {"shape": [], "dtype": "f32"}]},
+        {"name": "score_D64_d16", "file": "score_D64_d16.hlo.txt",
+         "fn": "score_batch", "D": 64, "d": 16, "batch": 1024,
+         "inputs": [{"shape": [1024,16], "dtype": "u8"}],
+         "outputs": [{"shape": [1024], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let fw = m.find("fw_step", 64, 16).unwrap();
+        assert_eq!(fw.inputs.len(), 5);
+        assert_eq!(fw.outputs[2].shape.len(), 0); // scalar loss
+        assert_eq!(fw.file, Path::new("/tmp/a/fw_step_D64_d16.hlo.txt"));
+        let sc = m.by_name("score_D64_d16").unwrap();
+        assert_eq!(sc.batch, Some(1024));
+        assert_eq!(sc.inputs[0].dtype, Dtype::U8);
+    }
+
+    #[test]
+    fn find_misses_gracefully() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp")).unwrap();
+        assert!(m.find("fw_step", 128, 16).is_none());
+        assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("[1,2]", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // integration-lite: when `make artifacts` has run, the real
+        // manifest must parse and contain the default shape set
+        let dir = crate::runtime::default_artifacts_dir();
+        if let Ok(m) = Manifest::load(&dir) {
+            assert!(m.find("fw_step", 768, 160).is_some());
+            assert!(m.find("project", 768, 160).is_some());
+        }
+    }
+}

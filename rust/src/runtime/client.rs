@@ -1,0 +1,170 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use super::artifacts::{ArtifactSpec, Dtype, Manifest};
+use crate::linalg::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A live PJRT CPU client plus the compiled-executable cache.
+///
+/// Not `Send`: the underlying handles are raw pointers. Ownership lives
+/// on whichever thread does training/build/batched projection (the
+/// coordinator keeps it on the batcher thread).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// cumulative executions per artifact (observability/benches)
+    pub dispatch_counts: HashMap<String, usize>,
+}
+
+impl PjrtRuntime {
+    /// Open the CPU PJRT client and read the manifest in `dir`.
+    pub fn open(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest =
+            Manifest::load(dir).with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            dispatch_counts: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let spec = self
+                .manifest
+                .by_name(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", spec.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Execute an artifact with the given input literals. Returns the
+    /// decomposed output tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "artifact '{name}' wants {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            ));
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e:?}"))?;
+        *self.dispatch_counts.entry(name.to_string()).or_insert(0) += 1;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Is this (fn, D, d) combination available?
+    pub fn supports(&self, fn_name: &str, big_d: usize, small_d: usize) -> bool {
+        self.manifest.find(fn_name, big_d, small_d).is_some()
+    }
+
+    pub fn spec(&self, fn_name: &str, big_d: usize, small_d: usize) -> Option<&ArtifactSpec> {
+        self.manifest.find(fn_name, big_d, small_d)
+    }
+}
+
+// ---------------------------------------------------------------- literal <-> native
+
+/// f32 matrix (row-major) -> 2-D literal.
+pub fn lit_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(m.data.as_ptr() as *const u8, m.data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[m.rows, m.cols],
+        bytes,
+    )
+    .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+/// f32 slice -> 1-D literal.
+pub fn lit_from_f32s(v: &[f32]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &[v.len()], bytes)
+        .map_err(|e| anyhow!("f32 vec literal: {e:?}"))
+}
+
+/// u8 codes -> 2-D literal.
+pub fn lit_from_u8(rows: usize, cols: usize, data: &[u8]) -> Result<xla::Literal> {
+    assert_eq!(data.len(), rows * cols);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &[rows, cols], data)
+        .map_err(|e| anyhow!("u8 literal: {e:?}"))
+}
+
+/// literal -> f32 matrix with the given shape.
+pub fn matrix_from_lit(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    if v.len() != rows * cols {
+        return Err(anyhow!(
+            "literal has {} elements, expected {rows}x{cols}",
+            v.len()
+        ));
+    }
+    Ok(Matrix::from_vec(rows, cols, v))
+}
+
+/// scalar f32 from a rank-0/1 literal.
+pub fn f32_from_lit(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar literal: {e:?}"))
+}
+
+/// Validate inputs against a spec (defensive: shape bugs surface as
+/// clear errors instead of PJRT aborts).
+pub fn check_shapes(spec: &ArtifactSpec, inputs: &[xla::Literal]) -> Result<()> {
+    for (i, (lit, ts)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+        let n: usize = ts.shape.iter().product();
+        if lit.element_count() != n.max(1) {
+            return Err(anyhow!(
+                "input {i} of {} has {} elements, expected {:?}",
+                spec.name,
+                lit.element_count(),
+                ts.shape
+            ));
+        }
+        let want = match ts.dtype {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::U8 => xla::ElementType::U8,
+        };
+        let got = lit.ty().map_err(|e| anyhow!("{e:?}"))?;
+        if got != want {
+            return Err(anyhow!("input {i} of {}: dtype mismatch", spec.name));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! PJRT runtime: load + execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the Layer-1/2 computations to HLO *text*
+//! (xla_extension 0.5.1 rejects jax>=0.5 serialized protos — the text
+//! parser reassigns instruction ids; see aot.py). This module:
+//!
+//! * parses `artifacts/manifest.json` ([`artifacts`]),
+//! * compiles artifacts on demand through the PJRT CPU client and
+//!   caches the executables ([`client`]),
+//! * exposes typed executors that plug into the training/build
+//!   backends: [`executor::PjrtFwStepper`] (Algorithm 1 step),
+//!   [`executor::PjrtTopd`] (Algorithm 2 eigenbasis),
+//!   [`executor::PjrtProjector`] (batch `P X`), and
+//!   [`executor::PjrtScorer`] (fused LVQ scoring — bench comparison).
+//!
+//! Python never runs here: the artifacts are self-contained HLO.
+
+pub mod artifacts;
+pub mod client;
+pub mod executor;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use client::PjrtRuntime;
+pub use executor::{PjrtFwStepper, PjrtProjector, PjrtScorer, PjrtTopd};
+
+/// Default artifacts directory relative to the repo root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var("LEANVEC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

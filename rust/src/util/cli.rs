@@ -1,0 +1,149 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Model: `repro <subcommand> [positional...] [--flag value] [--switch]`.
+//! Typed getters with defaults keep call sites terse.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand).
+    pub fn parse(tokens: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = Some(it.next().unwrap().clone());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--key=value`, `--key value`, or switch
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if let Some(next) = it.peek() {
+                    if next.starts_with("--") {
+                        args.switches.push(name.to_string());
+                    } else {
+                        args.flags
+                            .insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                } else {
+                    args.switches.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Comma-separated list of usize, e.g. `--dims 96,128,160`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&toks("build --dataset rqa-768 --dim 160 --verbose"));
+        assert_eq!(a.subcommand.as_deref(), Some("build"));
+        assert_eq!(a.str("dataset", ""), "rqa-768");
+        assert_eq!(a.usize("dim", 0), 160);
+        assert!(a.switch("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let a = Args::parse(&toks("experiment fig4 --out=results --k=10"));
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig4"]);
+        assert_eq!(a.str("out", ""), "results");
+        assert_eq!(a.usize("k", 0), 10);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(&toks("run --fast"));
+        assert!(a.switch("fast"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&toks("run"));
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("missing", 0.5), 0.5);
+        assert_eq!(a.str("missing", "x"), "x");
+        assert!(!a.switch("missing"));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let a = Args::parse(&toks("x --dims 96,128,160"));
+        assert_eq!(a.usize_list("dims", &[1]), vec![96, 128, 160]);
+        assert_eq!(a.usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn no_subcommand_when_first_is_flag() {
+        let a = Args::parse(&toks("--help"));
+        assert_eq!(a.subcommand, None);
+        assert!(a.switch("help"));
+    }
+}

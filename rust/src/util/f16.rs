@@ -1,0 +1,182 @@
+//! IEEE 754 binary16 (half precision) codec.
+//!
+//! The paper stores secondary vectors as FP16; the `half` crate is not
+//! available offline, so the conversion is implemented here. Round-trip
+//! uses round-to-nearest-even, handles subnormals, infinities and NaN.
+
+/// Encode an `f32` to its nearest IEEE binary16 bit pattern.
+pub fn f32_to_f16(value: f32) -> u16 {
+    let bits = value.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN: keep a non-zero mantissa bit for NaN.
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal half
+        let mut m = mant >> 13; // keep 10 bits
+        let rest = mant & 0x1FFF;
+        // round to nearest even
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // mantissa rounded over; bump exponent
+            m = 0;
+            he += 1;
+            if he >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e < -25 {
+        return sign; // underflow to signed zero
+    }
+    // subnormal half: implicit leading 1 becomes explicit.
+    // m16 = round(full * 2^(e+1)) since value = full * 2^(e-23) and one
+    // subnormal-half ulp is 2^-24.
+    let full = mant | 0x0080_0000;
+    let shift = (-e - 1) as u32; // 14..=24
+    let m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half_ulp = 1u32 << (shift - 1);
+    let mut m16 = m as u16;
+    if rem > half_ulp || (rem == half_ulp && (m16 & 1) == 1) {
+        m16 += 1;
+    }
+    sign | m16
+}
+
+/// Decode an IEEE binary16 bit pattern to `f32`.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal: normalize. value = m * 2^-24; after shifting m
+            // up to its leading bit at position 10, the f32 exponent is
+            // 127 - 24 + (10 - shifts) = 113 + (position adjustments),
+            // tracked incrementally below.
+            let mut e: i32 = 113; // exponent if m already has bit 10 set
+            let mut m = m;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | ((e as u32) << 23) | (m << 13)
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a slice.
+pub fn encode_slice(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16(x)).collect()
+}
+
+/// Full f16 -> f32 decode table (64K entries, 256 KiB). The scoring hot
+/// loop is memory-bound on the codes; a table lookup beats the bit
+/// manipulation by ~2x on this testbed (EXPERIMENTS.md §Perf).
+pub fn decode_table() -> &'static [f32; 65536] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Box<[f32; 65536]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = vec![0.0f32; 65536].into_boxed_slice();
+        for (h, v) in t.iter_mut().enumerate() {
+            *v = f16_to_f32(h as u16);
+        }
+        t.try_into().unwrap()
+    })
+}
+
+/// Decode a slice.
+pub fn decode_slice(hs: &[u16]) -> Vec<f32> {
+    hs.iter().map(|&h| f16_to_f32(h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn special_values() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0xC000), -2.0);
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        assert_eq!(f32_to_f16(1.0e6), 0x7C00);
+        assert_eq!(f32_to_f16(-1.0e6), 0xFC00);
+        assert_eq!(f32_to_f16(65504.0), 0x7BFF); // max finite half
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // smallest positive subnormal half = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(f32_to_f16(tiny), 0x0001);
+        assert_eq!(f16_to_f32(0x0001), tiny);
+        // underflow below half of the smallest subnormal -> zero
+        assert_eq!(f32_to_f16(2.0f32.powi(-26)), 0x0000);
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        // unit-range values: |x - roundtrip(x)| <= 2^-11 * |x|
+        let mut worst = 0.0f32;
+        for i in 1..10_000 {
+            let x = i as f32 / 10_000.0;
+            let r = f16_to_f32(f32_to_f16(x));
+            worst = worst.max((x - r).abs() / x);
+        }
+        assert!(worst <= 1.0 / 2048.0, "{worst}");
+    }
+
+    #[test]
+    fn exhaustive_decode_encode_identity() {
+        // every finite half value must encode back to itself
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/NaN handled elsewhere
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "h={h:#06x}");
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs = vec![0.5, -1.25, 3.75, 100.0];
+        assert_eq!(decode_slice(&encode_slice(&xs)), xs);
+    }
+}

@@ -1,0 +1,14 @@
+//! From-scratch substrate utilities.
+//!
+//! The offline build environment only vendors the `xla` crate's
+//! dependency tree, so everything this crate needs beyond that —
+//! JSON, half-precision floats, RNG, a thread pool, CLI parsing, a
+//! property-testing harness, and bench statistics — is implemented here.
+
+pub mod cli;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

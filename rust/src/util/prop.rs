@@ -1,0 +1,159 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Drives a property with seeded random cases; on failure it retries the
+//! failing case with geometrically shrunk size hints and reports the
+//! smallest reproduction seed. Used by rust/tests/prop_invariants.rs for
+//! coordinator/graph/quantization invariants.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// maximum "size" hint handed to generators
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_size: 128,
+        }
+    }
+}
+
+/// Context handed to each property case: a seeded RNG plus a size hint
+/// that ramps up over the run (small cases first, like proptest).
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_gaussian(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.gaussian_f32()).collect()
+    }
+}
+
+/// Run `property` over `config.cases` generated cases; panic with the
+/// seed + case number on the first failure (after shrinking the size).
+pub fn check<F>(name: &str, config: Config, property: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..config.cases {
+        // Size ramps from tiny to max over the run.
+        let size = 1 + (config.max_size - 1) * case / config.cases.max(1);
+        let case_seed = config.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let mut g = Gen {
+            rng: &mut rng,
+            size,
+        };
+        if let Err(msg) = property(&mut g) {
+            // Shrink: try smaller sizes with the same seed to find the
+            // smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(case_seed);
+                let mut g = Gen {
+                    rng: &mut rng,
+                    size: s,
+                };
+                if let Err(m) = property(&mut g) {
+                    smallest = (s, m);
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 shrunk size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        check("always-true", Config::default(), |g| {
+            let _ = g.usize_in(0, 10);
+            count.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        });
+        assert_eq!(count.load(Ordering::Relaxed), Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", Config::default(), |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", Config::default(), |g| {
+            let n = g.usize_in(3, 9);
+            if !(3..=9).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let x = g.f32_in(-2.0, 2.0);
+            if !(-2.0..=2.0).contains(&x) {
+                return Err(format!("f32_in out of range: {x}"));
+            }
+            let v = g.vec_f32(g.size, 0.0, 1.0);
+            if v.len() != g.size {
+                return Err("wrong length".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn size_ramps_up() {
+        let seen = std::sync::Mutex::new(Vec::new());
+        check("sizes", Config { cases: 16, ..Config::default() }, |g| {
+            seen.lock().unwrap().push(g.size);
+            Ok(())
+        });
+        let sizes = seen.into_inner().unwrap();
+        assert!(sizes[0] < *sizes.last().unwrap());
+    }
+}

@@ -1,0 +1,177 @@
+//! Work-stealing-free, fixed-size thread pool + `parallel_for` helper.
+//!
+//! tokio/rayon are unavailable offline; graph construction and the
+//! serving engine only need (a) fire-and-forget jobs and (b) a blocking
+//! chunked parallel-for, both of which std::thread covers. On the 1-core
+//! CI testbed the pool degrades gracefully to sequential execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Jobs are dispatched over a shared channel.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// `size == 0` selects `available_parallelism()`.
+    pub fn new(size: usize) -> Self {
+        let size = if size == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            size
+        };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("leanvec-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = { rx.lock().unwrap().recv() };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            size,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(Box::new(job))
+            .expect("worker alive");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` scoped workers.
+///
+/// Indices are handed out via an atomic cursor in `chunk`-sized spans, so
+/// uneven work (e.g. graph-node insertion) balances automatically.
+/// `f` must be `Sync`; use interior mutability / index-disjoint writes.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, chunk: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = chunk.max(1);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                for i in start..(start + chunk).min(n) {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over 0..n in parallel, collecting results in index order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots = std::sync::Mutex::new(&mut out);
+        // Index-disjoint writes via raw pointer would be faster, but n is
+        // small wherever this is used; a mutexed vector keeps it safe.
+        parallel_for(n, threads, 1, |i| {
+            let v = f(i);
+            slots.lock().unwrap()[i] = Some(v);
+        });
+    }
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(4);
+            for _ in 0..100 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Drop joins all workers.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, 4, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_items_is_noop() {
+        parallel_for(0, 4, 16, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut seen = vec![false; 10];
+        let cell = std::sync::Mutex::new(&mut seen);
+        parallel_for(10, 1, 4, |i| {
+            cell.lock().unwrap()[i] = true;
+        });
+        assert!(seen.iter().all(|&s| s));
+    }
+}

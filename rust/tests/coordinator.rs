@@ -1,0 +1,163 @@
+//! Coordinator integration: batching behaviour, concurrency, recall
+//! through the full serve path, and failure-ish edges.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig};
+use leanvec::data::gt::ground_truth;
+use leanvec::data::synth::{generate, QueryDist, SynthSpec};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn dataset(n: usize) -> leanvec::data::synth::Dataset {
+    generate(&SynthSpec {
+        name: "coord".into(),
+        dim: 96,
+        n,
+        n_learn_queries: 200,
+        n_test_queries: 100,
+        similarity: Similarity::InnerProduct,
+        queries: QueryDist::OutOfDistribution(0.6),
+        decay: 0.6,
+        seed: 77,
+    })
+}
+
+fn build(ds: &leanvec::data::synth::Dataset) -> Arc<leanvec::index::leanvec_index::LeanVecIndex> {
+    let mut gp = GraphParams::for_similarity(ds.similarity);
+    gp.max_degree = 20;
+    gp.build_window = 40;
+    Arc::new(
+        IndexBuilder::new()
+            .projection(ProjectionKind::OodEigSearch)
+            .target_dim(32)
+            .primary(Compression::Lvq8)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity),
+    )
+}
+
+#[test]
+fn full_serve_path_reaches_good_recall() {
+    let ds = dataset(2_000);
+    let index = build(&ds);
+    let truth = ground_truth(&ds.database, &ds.test_queries, 10, ds.similarity);
+    let cfg = EngineConfig {
+        workers: 2,
+        search: SearchParams {
+            window: 80,
+            rerank_window: 80,
+        },
+        ..Default::default()
+    };
+    let (responses, report) =
+        Engine::run_workload(index, cfg, &ds.test_queries, 10, Some(&truth));
+    assert_eq!(responses.len(), ds.test_queries.len());
+    assert!(report.recall_at_k >= 0.85, "recall {}", report.recall_at_k);
+    assert!(report.metrics.qps > 0.0);
+    assert!(report.metrics.latency_p99_ms >= report.metrics.latency_p50_ms);
+}
+
+#[test]
+fn batches_form_under_load() {
+    let ds = dataset(1_000);
+    let index = build(&ds);
+    let cfg = EngineConfig {
+        workers: 1,
+        batch: BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+        },
+        ..Default::default()
+    };
+    // submit a burst before workers can drain -> batches > 1
+    let engine = Engine::start(index, cfg);
+    for q in ds.test_queries.iter().take(64) {
+        engine.submit(q.clone(), 5);
+    }
+    let responses = engine.drain(64);
+    engine.shutdown();
+    let max_batch = responses.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch > 1, "no batching under burst load");
+    assert!(max_batch <= 32, "batch exceeded policy: {max_batch}");
+}
+
+#[test]
+fn single_request_not_starved_by_batcher() {
+    let ds = dataset(800);
+    let index = build(&ds);
+    let cfg = EngineConfig {
+        workers: 1,
+        batch: BatchPolicy {
+            max_batch: 1024,
+            max_wait: Duration::from_millis(5),
+        },
+        ..Default::default()
+    };
+    let engine = Engine::start(index, cfg);
+    let t0 = std::time::Instant::now();
+    engine.submit(ds.test_queries[0].clone(), 5);
+    let r = engine.drain(1);
+    engine.shutdown();
+    assert_eq!(r.len(), 1);
+    // must be released by max_wait, not wait for a full batch
+    assert!(t0.elapsed() < Duration::from_secs(1));
+}
+
+#[test]
+fn many_workers_agree_with_single_worker() {
+    let ds = dataset(1_500);
+    let index = build(&ds);
+    let run = |workers: usize| {
+        let cfg = EngineConfig {
+            workers,
+            ..Default::default()
+        };
+        let (mut responses, _) = Engine::run_workload(
+            Arc::clone(&index),
+            cfg,
+            &ds.test_queries[..32].to_vec(),
+            5,
+            None,
+        );
+        responses.sort_by_key(|r| r.id);
+        responses.into_iter().map(|r| r.ids).collect::<Vec<_>>()
+    };
+    assert_eq!(run(1), run(3), "results must not depend on worker count");
+}
+
+#[test]
+fn zero_k_requests_return_empty() {
+    let ds = dataset(500);
+    let index = build(&ds);
+    let engine = Engine::start(index, EngineConfig::default());
+    engine.submit(ds.test_queries[0].clone(), 0);
+    let r = engine.drain(1);
+    engine.shutdown();
+    assert!(r[0].ids.is_empty());
+}
+
+#[test]
+fn throughput_improves_with_batching_amortization() {
+    // not asserting a ratio (1-core CI) — just that the batched engine
+    // completes a large workload without loss and reports sane numbers
+    let ds = dataset(1_000);
+    let index = build(&ds);
+    let queries: Vec<Vec<f32>> = (0..500)
+        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
+        .collect();
+    let cfg = EngineConfig {
+        workers: 2,
+        batch: BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+        },
+        ..Default::default()
+    };
+    let (responses, report) = Engine::run_workload(index, cfg, &queries, 10, None);
+    assert_eq!(responses.len(), 500);
+    assert!(report.metrics.mean_batch >= 1.0);
+    assert!(report.metrics.qps > 10.0, "{}", report.metrics.qps);
+}

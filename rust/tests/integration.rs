@@ -1,0 +1,243 @@
+//! Cross-module integration tests: dataset -> training -> index ->
+//! search -> recall, across similarities, learners and compressions.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::data::gt::{ground_truth, recall_at_k};
+use leanvec::data::synth::{generate, QueryDist, SynthSpec};
+use leanvec::index::builder::IndexBuilder;
+
+fn spec(sim: Similarity, queries: QueryDist, dim: usize, n: usize) -> SynthSpec {
+    SynthSpec {
+        name: "itest".into(),
+        dim,
+        n,
+        n_learn_queries: 256,
+        n_test_queries: 128,
+        similarity: sim,
+        queries,
+        decay: 0.6,
+        seed: 42,
+    }
+}
+
+fn small_graph(sim: Similarity) -> GraphParams {
+    let mut gp = GraphParams::for_similarity(sim);
+    gp.max_degree = 24;
+    gp.build_window = 48;
+    gp
+}
+
+fn end_to_end_recall(
+    sim: Similarity,
+    queries: QueryDist,
+    projection: ProjectionKind,
+    d: usize,
+    primary: Compression,
+    secondary: Compression,
+) -> f64 {
+    let ds = generate(&spec(sim, queries, 128, 2_500));
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let index = IndexBuilder::new()
+        .projection(projection)
+        .target_dim(d)
+        .primary(primary)
+        .secondary(secondary)
+        .graph_params(small_graph(sim))
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+    let got: Vec<Vec<u32>> = ds
+        .test_queries
+        .iter()
+        .map(|q| index.search(q, k, 80).0)
+        .collect();
+    recall_at_k(&got, &truth, k)
+}
+
+#[test]
+fn leanvec_ood_high_recall_on_ood_ip() {
+    let r = end_to_end_recall(
+        Similarity::InnerProduct,
+        QueryDist::OutOfDistribution(0.7),
+        ProjectionKind::OodEigSearch,
+        48,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    assert!(r >= 0.85, "recall {r}");
+}
+
+#[test]
+fn leanvec_id_high_recall_on_id_l2() {
+    let r = end_to_end_recall(
+        Similarity::L2,
+        QueryDist::InDistribution,
+        ProjectionKind::Id,
+        48,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    assert!(r >= 0.85, "recall {r}");
+}
+
+#[test]
+fn cosine_similarity_end_to_end() {
+    let r = end_to_end_recall(
+        Similarity::Cosine,
+        QueryDist::InDistribution,
+        ProjectionKind::Id,
+        48,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    assert!(r >= 0.85, "recall {r}");
+}
+
+#[test]
+fn ood_learner_beats_id_learner_on_ood_data() {
+    let r_ood = end_to_end_recall(
+        Similarity::InnerProduct,
+        QueryDist::OutOfDistribution(0.9),
+        ProjectionKind::OodEigSearch,
+        32,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    let r_id = end_to_end_recall(
+        Similarity::InnerProduct,
+        QueryDist::OutOfDistribution(0.9),
+        ProjectionKind::Id,
+        32,
+        Compression::Lvq8,
+        Compression::F16,
+    );
+    // the paper's headline OOD accuracy gap (Fig. 5 / Fig. 11)
+    assert!(
+        r_ood >= r_id - 0.01,
+        "ood learner {r_ood} should not lose to id learner {r_id}"
+    );
+}
+
+#[test]
+fn lvq4_primary_still_searches() {
+    let r = end_to_end_recall(
+        Similarity::InnerProduct,
+        QueryDist::InDistribution,
+        ProjectionKind::Id,
+        48,
+        Compression::Lvq4,
+        Compression::F16,
+    );
+    assert!(r >= 0.75, "recall {r}");
+}
+
+#[test]
+fn no_reduction_fp16_baseline_works() {
+    let r = end_to_end_recall(
+        Similarity::L2,
+        QueryDist::InDistribution,
+        ProjectionKind::None,
+        0,
+        Compression::F16,
+        Compression::F16,
+    );
+    assert!(r >= 0.9, "recall {r}");
+}
+
+#[test]
+fn rerank_recovers_projection_loss() {
+    // aggressive reduction (128 -> 16): primary-only recall collapses,
+    // rerank restores it (Fig. 11's mechanism)
+    let ds = generate(&spec(
+        Similarity::InnerProduct,
+        QueryDist::InDistribution,
+        128,
+        2_000,
+    ));
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let index = IndexBuilder::new()
+        .projection(ProjectionKind::Id)
+        .target_dim(16)
+        .graph_params(small_graph(ds.similarity))
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+    let mut ctx = leanvec::graph::beam::SearchCtx::new(index.len());
+    let mut got_rr = Vec::new();
+    let mut got_nr = Vec::new();
+    for q in &ds.test_queries {
+        let (ids, _, _) = index.search_with_ctx(
+            &mut ctx,
+            q,
+            k,
+            leanvec::index::leanvec_index::SearchParams {
+                window: 100,
+                rerank_window: 100,
+            },
+        );
+        got_rr.push(ids);
+        got_nr.push(index.search_no_rerank(&mut ctx, q, k, 100));
+    }
+    let r_rr = recall_at_k(&got_rr, &truth, k);
+    let r_nr = recall_at_k(&got_nr, &truth, k);
+    assert!(
+        r_rr >= r_nr + 0.05,
+        "rerank {r_rr} should clearly beat no-rerank {r_nr} at 8x reduction"
+    );
+}
+
+#[test]
+fn build_and_search_deterministic_for_seed() {
+    let ds = generate(&spec(
+        Similarity::InnerProduct,
+        QueryDist::InDistribution,
+        64,
+        1_500,
+    ));
+    let build = || {
+        IndexBuilder::new()
+            .projection(ProjectionKind::Id)
+            .target_dim(24)
+            .graph_params(small_graph(ds.similarity))
+            .seed(123)
+            .build(&ds.database, None, ds.similarity)
+    };
+    let (a, b) = (build(), build());
+    for q in ds.test_queries.iter().take(10) {
+        assert_eq!(a.search(q, 10, 50).0, b.search(q, 10, 50).0);
+    }
+}
+
+#[test]
+fn graph_quality_preserved_under_reduction() {
+    // Fig. 14: graph built on reduced+quantized vectors reaches the same
+    // recall as one built on full vectors (searched identically)
+    let ds = generate(&spec(
+        Similarity::InnerProduct,
+        QueryDist::InDistribution,
+        96,
+        2_000,
+    ));
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let reduced = IndexBuilder::new()
+        .projection(ProjectionKind::Id)
+        .target_dim(32)
+        .graph_params(small_graph(ds.similarity))
+        .build(&ds.database, None, ds.similarity);
+    let full = IndexBuilder::new()
+        .projection(ProjectionKind::None)
+        .graph_params(small_graph(ds.similarity))
+        .build(&ds.database, None, ds.similarity);
+    let recall = |ix: &leanvec::index::leanvec_index::LeanVecIndex| {
+        let got: Vec<Vec<u32>> = ds
+            .test_queries
+            .iter()
+            .map(|q| ix.search(q, k, 80).0)
+            .collect();
+        recall_at_k(&got, &truth, k)
+    };
+    let (r_red, r_full) = (recall(&reduced), recall(&full));
+    assert!(
+        r_red >= r_full - 0.05,
+        "reduced-graph recall {r_red} vs full-graph {r_full}"
+    );
+}

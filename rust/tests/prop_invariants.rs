@@ -1,0 +1,241 @@
+//! Property-based invariants (custom mini-framework in util::prop;
+//! proptest is unavailable offline). Covers quantization, projection,
+//! graph, search-buffer and coordinator invariants.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::make_store;
+use leanvec::linalg::matrix::dot;
+use leanvec::prop_assert;
+use leanvec::quant::ScoreStore;
+use leanvec::util::prop::{check, Config, Gen};
+
+fn rows_from(g: &mut Gen, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| g.vec_gaussian(d)).collect()
+}
+
+#[test]
+fn prop_lvq_roundtrip_error_bounded() {
+    check("lvq-roundtrip", Config::default(), |g| {
+        let n = g.usize_in(2, 40);
+        let d = g.usize_in(2, 96);
+        let bits = if g.usize_in(0, 1) == 0 { 4u8 } else { 8u8 };
+        let rows = rows_from(g, n, d);
+        let store = leanvec::quant::LvqStore::new(&rows, bits);
+        // per-vector max error <= delta/2 + f32 noise, delta = range/(2^B-1)
+        for (i, r) in rows.iter().enumerate() {
+            let dec = store.decode(i as u32);
+            let lo = r.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = r.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            // mean removal can widen the per-vector range by the mean's
+            // own range; bound via the global range of the row set
+            let levels = (1u32 << bits) as f32 - 1.0;
+            let bound = 2.0 * (hi - lo).max(1e-6) / levels + 1e-3;
+            for (a, b) in dec.iter().zip(r.iter()) {
+                prop_assert!(
+                    (a - b).abs() <= bound * 4.0,
+                    "decode error {} > {} (bits {bits})",
+                    (a - b).abs(),
+                    bound * 4.0
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lvq_score_equals_decode_dot() {
+    check("lvq-score-decode", Config::default(), |g| {
+        let n = g.usize_in(2, 30);
+        let d = g.usize_in(2, 64);
+        let rows = rows_from(g, n, d);
+        let q = g.vec_gaussian(d);
+        for compression in [Compression::Lvq8, Compression::Lvq4, Compression::Lvq4x8] {
+            let store = make_store(&rows, compression);
+            let pq = store.prepare(&q, Similarity::InnerProduct);
+            for i in 0..n as u32 {
+                let s = store.score(&pq, i);
+                let want = dot(&q, &store.decode(i));
+                // lvq4x8 primary score uses only the first level
+                let tol = if compression == Compression::Lvq4x8 {
+                    let dec1_err: f32 = 0.4 * q.iter().map(|x| x.abs()).sum::<f32>();
+                    dec1_err.max(0.5)
+                } else {
+                    1e-2 * (1.0 + want.abs())
+                };
+                prop_assert!(
+                    (s - want).abs() <= tol,
+                    "{compression:?} id {i}: score {s} vs decode-dot {want}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_projection_is_row_orthonormal_and_contracting() {
+    check("projection-orthonormal", Config::default(), |g| {
+        let dd = g.usize_in(8, 48);
+        let d = g.usize_in(2, dd.min(16));
+        let n = g.usize_in(30, 120);
+        let rows = rows_from(g, n, dd);
+        let mut backends = leanvec::leanvec::model::TrainBackends::default();
+        let m = leanvec::leanvec::model::train_projection(
+            ProjectionKind::Id,
+            &rows,
+            None,
+            d,
+            &mut backends,
+            g.usize_in(0, 1000) as u64,
+        );
+        prop_assert!(
+            m.a.row_orthonormality_defect() < 1e-3,
+            "defect {}",
+            m.a.row_orthonormality_defect()
+        );
+        // orthonormal projection never increases norms
+        for r in rows.iter().take(10) {
+            let p = m.project_database_vector(r);
+            let n_in = dot(r, r).sqrt();
+            let n_out = dot(&p, &p).sqrt();
+            prop_assert!(n_out <= n_in * 1.001, "{n_out} > {n_in}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_degrees_bounded_no_self_loops() {
+    check(
+        "graph-invariants",
+        Config {
+            cases: 12,
+            ..Config::default()
+        },
+        |g| {
+            let n = g.usize_in(50, 250);
+            let d = g.usize_in(4, 16);
+            let rows = rows_from(g, n, d);
+            let store = make_store(&rows, Compression::F32);
+            let mut gp = GraphParams::for_similarity(Similarity::L2);
+            gp.max_degree = g.usize_in(4, 20);
+            gp.build_window = gp.max_degree * 2;
+            let graph =
+                leanvec::graph::vamana::VamanaBuilder::new(gp, Similarity::L2).build(store.as_ref());
+            for i in 0..n as u32 {
+                let nbrs = graph.adj.neighbors(i);
+                prop_assert!(nbrs.len() <= gp.max_degree, "degree overflow");
+                prop_assert!(!nbrs.contains(&i), "self loop at {i}");
+                let set: std::collections::HashSet<_> = nbrs.iter().collect();
+                prop_assert!(set.len() == nbrs.len(), "duplicate edge at {i}");
+                prop_assert!(nbrs.iter().all(|&x| (x as usize) < n), "dangling edge");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_search_results_sorted_and_unique() {
+    check(
+        "search-results",
+        Config {
+            cases: 16,
+            ..Config::default()
+        },
+        |g| {
+            let n = g.usize_in(100, 400);
+            let d = g.usize_in(4, 24);
+            let rows = rows_from(g, n, d);
+            let index = IndexBuilder::new()
+                .projection(ProjectionKind::None)
+                .primary(Compression::Lvq8)
+                .build(&rows, None, Similarity::InnerProduct);
+            let q = g.vec_gaussian(d);
+            let k = g.usize_in(1, 20);
+            let (ids, scores) = index.search(&q, k, k * 3);
+            prop_assert!(ids.len() <= k, "too many results");
+            let set: std::collections::HashSet<_> = ids.iter().collect();
+            prop_assert!(set.len() == ids.len(), "duplicate result ids");
+            for w in scores.windows(2) {
+                prop_assert!(w[0] >= w[1], "scores not sorted: {scores:?}");
+            }
+            prop_assert!(ids.iter().all(|&i| (i as usize) < n), "id out of range");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_serves_every_request_exactly_once() {
+    check(
+        "coordinator-exactly-once",
+        Config {
+            cases: 8,
+            ..Config::default()
+        },
+        |g| {
+            let n = g.usize_in(80, 200);
+            let d = 8;
+            let rows = rows_from(g, n, d);
+            let index = std::sync::Arc::new(
+                IndexBuilder::new()
+                    .projection(ProjectionKind::None)
+                    .build(&rows, None, Similarity::InnerProduct),
+            );
+            let n_req = g.usize_in(1, 60);
+            let queries: Vec<Vec<f32>> = (0..n_req).map(|_| g.vec_gaussian(d)).collect();
+            let cfg = leanvec::coordinator::EngineConfig {
+                workers: g.usize_in(1, 3),
+                ..Default::default()
+            };
+            let (responses, _) =
+                leanvec::coordinator::Engine::run_workload(index, cfg, &queries, 5, None);
+            prop_assert!(responses.len() == n_req, "lost/duplicated responses");
+            let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            for (i, id) in ids.iter().enumerate() {
+                prop_assert!(*id == i as u64, "response ids not a permutation");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_f16_roundtrip_monotone() {
+    check("f16-monotone", Config::default(), |g| {
+        // f16 encoding preserves ordering of magnitudes
+        let a = g.f32_in(-100.0, 100.0);
+        let b = g.f32_in(-100.0, 100.0);
+        let (ra, rb) = (
+            leanvec::util::f16::f16_to_f32(leanvec::util::f16::f32_to_f16(a)),
+            leanvec::util::f16::f16_to_f32(leanvec::util::f16::f32_to_f16(b)),
+        );
+        if a < b {
+            prop_assert!(ra <= rb, "ordering broken: {a} < {b} but {ra} > {rb}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recall_metric_bounds() {
+    check("recall-bounds", Config::default(), |g| {
+        let k = g.usize_in(1, 10);
+        let q = g.usize_in(1, 10);
+        let truth: Vec<Vec<u32>> = (0..q)
+            .map(|_| (0..k).map(|_| g.usize_in(0, 1000) as u32).collect())
+            .collect();
+        let got: Vec<Vec<u32>> = (0..q)
+            .map(|_| (0..k).map(|_| g.usize_in(0, 1000) as u32).collect())
+            .collect();
+        let r = leanvec::data::gt::recall_at_k(&got, &truth, k);
+        prop_assert!((0.0..=1.0).contains(&r), "recall out of bounds: {r}");
+        let perfect = leanvec::data::gt::recall_at_k(&truth, &truth, k);
+        prop_assert!(perfect >= 0.999, "self-recall {perfect}");
+        Ok(())
+    });
+}

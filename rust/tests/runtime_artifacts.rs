@@ -1,0 +1,198 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-check numerics against the native implementations. These tests
+//! skip (pass trivially) when `make artifacts` has not been run.
+
+use leanvec::leanvec::eigsearch::TopdBackend;
+use leanvec::leanvec::fw::{FwStepper, NativeStepper};
+use leanvec::linalg::Matrix;
+use leanvec::runtime::client::{lit_from_f32s, lit_from_matrix, lit_from_u8, matrix_from_lit};
+use leanvec::runtime::{default_artifacts_dir, PjrtRuntime};
+use leanvec::util::rng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    PjrtRuntime::open(&default_artifacts_dir()).ok()
+}
+
+fn psd(dd: usize, n: usize, rng: &mut Rng) -> Matrix {
+    Matrix::randn(n, dd, rng).second_moment()
+}
+
+#[test]
+fn manifest_has_default_shapes() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m = rt.manifest();
+    for (dd, d) in [(768, 160), (512, 128), (256, 96), (200, 128)] {
+        assert!(m.find("fw_step", dd, d).is_some(), "fw_step {dd}x{d}");
+        assert!(m.find("fw_step_xla", dd, d).is_some(), "fw_step_xla {dd}x{d}");
+        assert!(m.find("eig_topd", dd, d).is_some(), "eig_topd {dd}x{d}");
+        assert!(m.find("project", dd, d).is_some(), "project {dd}x{d}");
+        assert!(m.find("score_batch", dd, d).is_some(), "score {dd}x{d}");
+    }
+}
+
+#[test]
+fn project_artifact_matches_native_matmul() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let spec = rt.manifest().find("project", 256, 96).unwrap().clone();
+    let b = spec.batch.unwrap();
+    let mut rng = Rng::new(1);
+    let p = Matrix::randn(96, 256, &mut rng);
+    let x = Matrix::randn(256, b, &mut rng);
+    let out = rt
+        .execute(
+            &spec.name,
+            &[lit_from_matrix(&p).unwrap(), lit_from_matrix(&x).unwrap()],
+        )
+        .unwrap();
+    let y = matrix_from_lit(&out[0], 96, b).unwrap();
+    let want = p.matmul(&x);
+    assert!(y.max_abs_diff(&want) < 1e-2, "{}", y.max_abs_diff(&want));
+}
+
+#[test]
+fn fw_step_artifact_matches_native_stepper() {
+    let Some(rt) = leanvec::runtime::executor::open_shared(&default_artifacts_dir()).ok() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Rng::new(2);
+    let (dd, d) = (256usize, 96usize);
+    let kq = psd(dd, 400, &mut rng);
+    let kx = psd(dd, 400, &mut rng);
+    let a0 = leanvec::linalg::qr::random_orthonormal(d, dd, &mut rng);
+    let b0 = leanvec::linalg::qr::random_orthonormal(d, dd, &mut rng);
+
+    let mut pjrt = leanvec::runtime::PjrtFwStepper::new(rt);
+    let (pa, pb, pl) = pjrt.step(&a0, &b0, &kq, &kx, 0.5);
+    assert!(pjrt.stats.pjrt >= 1, "must have dispatched via pjrt");
+
+    let (na, nb, nl) = NativeStepper.step(&a0, &b0, &kq, &kx, 0.5);
+    assert!(pa.max_abs_diff(&na) < 2e-2, "A diff {}", pa.max_abs_diff(&na));
+    assert!(pb.max_abs_diff(&nb) < 2e-2, "B diff {}", pb.max_abs_diff(&nb));
+    let rel = (pl - nl).abs() / nl.abs().max(1e-12);
+    assert!(rel < 1e-2, "loss {pl} vs {nl}");
+}
+
+#[test]
+fn eig_topd_artifact_spans_top_subspace() {
+    let Some(rt) = leanvec::runtime::executor::open_shared(&default_artifacts_dir()).ok() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Rng::new(3);
+    // d * 3 <= D so the PJRT subspace-iteration artifact is eligible
+    // (at aggressive d/D ratios PjrtTopd falls back to native Jacobi)
+    let dd = 512usize;
+    let d = 128usize;
+    // decaying-spectrum PSD so the top subspace is well defined
+    let mut x = Matrix::randn(900, dd, &mut rng);
+    for row in x.data.chunks_mut(dd) {
+        for (c, v) in row.iter_mut().enumerate() {
+            *v *= 1.0 / (1.0 + c as f32 * 0.15);
+        }
+    }
+    let k = x.second_moment();
+    let mut pjrt = leanvec::runtime::PjrtTopd::new(rt);
+    let p = pjrt.topd(&k, d);
+    assert!(pjrt.stats.pjrt >= 1);
+    assert!(p.row_orthonormality_defect() < 2e-2);
+    // captured energy close to the exact top-d total
+    let exact = leanvec::linalg::top_eigvecs(&k, d);
+    let captured = p.matmul(&k).matmul_nt(&p).trace();
+    let best = exact.matmul(&k).matmul_nt(&exact).trace();
+    assert!(captured >= 0.98 * best, "{captured} vs {best}");
+}
+
+#[test]
+fn score_artifact_matches_native_lvq_scores() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let spec = match rt.manifest().find("score_batch", 256, 96) {
+        Some(s) => s.clone(),
+        None => return,
+    };
+    let n = spec.batch.unwrap();
+    let d = 96usize;
+    let mut rng = Rng::new(4);
+    let codes: Vec<u8> = (0..n * d).map(|_| rng.below(256) as u8).collect();
+    let delta: Vec<f32> = (0..n).map(|_| rng.next_f32() * 0.01 + 1e-4).collect();
+    let lo: Vec<f32> = (0..n).map(|_| rng.gaussian_f32() * 0.01).collect();
+    let q: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+    let qstats = [q.iter().sum::<f32>(), 0.25f32];
+    let q_col = Matrix::from_vec(d, 1, q.clone());
+    let out = rt
+        .execute(
+            &spec.name,
+            &[
+                lit_from_u8(n, d, &codes).unwrap(),
+                lit_from_f32s(&delta).unwrap(),
+                lit_from_f32s(&lo).unwrap(),
+                lit_from_matrix(&q_col).unwrap(),
+                lit_from_f32s(&qstats).unwrap(),
+            ],
+        )
+        .unwrap();
+    let scores: Vec<f32> = out[0].to_vec().unwrap();
+    assert_eq!(scores.len(), n);
+    for i in 0..n {
+        let code_dot: f32 = codes[i * d..(i + 1) * d]
+            .iter()
+            .zip(q.iter())
+            .map(|(&c, &qv)| c as f32 * qv)
+            .sum();
+        let want = delta[i] * code_dot + lo[i] * qstats[0] + qstats[1];
+        assert!(
+            (scores[i] - want).abs() < 1e-2 * (1.0 + want.abs()),
+            "i={i}: {} vs {want}",
+            scores[i]
+        );
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let spec = rt.manifest().find("project", 200, 128).unwrap().clone();
+    let b = spec.batch.unwrap();
+    let mut rng = Rng::new(5);
+    let p = Matrix::randn(128, 200, &mut rng);
+    let x = Matrix::randn(200, b, &mut rng);
+    let t0 = std::time::Instant::now();
+    rt.execute(
+        &spec.name,
+        &[lit_from_matrix(&p).unwrap(), lit_from_matrix(&x).unwrap()],
+    )
+    .unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    for _ in 0..3 {
+        rt.execute(
+            &spec.name,
+            &[lit_from_matrix(&p).unwrap(), lit_from_matrix(&x).unwrap()],
+        )
+        .unwrap();
+    }
+    let warm = t1.elapsed() / 3;
+    assert!(warm < first, "warm {warm:?} should be below cold {first:?}");
+    assert_eq!(rt.dispatch_counts[&spec.name], 4);
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(rt.execute("definitely_not_there", &[]).is_err());
+}
