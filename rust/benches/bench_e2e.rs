@@ -1,15 +1,109 @@
 //! End-to-end bench: the paper's headline comparison (Fig. 1 / Fig. 5)
-//! at bench scale — QPS at matched recall across representations, plus
-//! the serving engine's throughput.
+//! at bench scale — QPS at matched recall across representations, the
+//! serving engine's throughput, and the parallel-build speedup curve
+//! (emitted machine-readable to `BENCH_build.json` so future changes
+//! can track the trajectory; the paper's headline is a 4.9x faster
+//! build).
 
 use leanvec::config::{Compression, GraphParams, ProjectionKind};
 use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig};
-use leanvec::data::gt::ground_truth;
+use leanvec::data::gt::{ground_truth, recall_at_k};
 use leanvec::data::synth::{generate, SynthSpec};
 use leanvec::experiments::harness::{qps_at_recall, qps_recall_curve};
 use leanvec::index::builder::IndexBuilder;
 use leanvec::index::leanvec_index::SearchParams;
+use leanvec::util::json::Json;
 use std::sync::Arc;
+
+/// Build-time breakdown at 1, 2 and all-cores threads; writes
+/// BENCH_build.json with the speedup curve and recall parity.
+fn bench_build_trajectory(
+    ds: &leanvec::data::synth::Dataset,
+    gp: GraphParams,
+    truth: &[Vec<u32>],
+    k: usize,
+) {
+    let all_cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut sweep: Vec<usize> = vec![1, 2, all_cores];
+    sweep.sort_unstable();
+    sweep.dedup();
+
+    println!("\n== parallel build trajectory ({} cores available) ==", all_cores);
+    let mut rows = Vec::new();
+    let mut serial_total = 0.0f64;
+    // projection training is serial at every thread count, so the
+    // headline speedup is reported over the phases build_threads
+    // actually parallelizes (project + quantize + graph), alongside the
+    // Amdahl-capped total ratio.
+    let mut serial_parallel_phases = 0.0f64;
+    for &threads in &sweep {
+        let t0 = std::time::Instant::now();
+        let index = IndexBuilder::new()
+            .projection(ProjectionKind::OodEigSearch)
+            .target_dim(160)
+            .primary(Compression::Lvq8)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+            .build_threads(threads)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+        let wall = t0.elapsed().as_secs_f64();
+        let b = index.build_breakdown;
+        let parallel_phases = b.project_seconds + b.quantize_seconds + b.graph_seconds;
+        if threads == 1 {
+            serial_total = b.total();
+            serial_parallel_phases = parallel_phases;
+        }
+        let got: Vec<Vec<u32>> = index
+            .search_batch(&ds.test_queries, k, SearchParams::default(), threads)
+            .into_iter()
+            .map(|(ids, _)| ids)
+            .collect();
+        let recall = recall_at_k(&got, truth, k);
+        let speedup_total = if b.total() > 0.0 { serial_total / b.total() } else { 0.0 };
+        let speedup_build = if parallel_phases > 0.0 {
+            serial_parallel_phases / parallel_phases
+        } else {
+            0.0
+        };
+        println!(
+            "threads {threads:>2}: total {:.2}s (train {:.2} | project {:.2} | quantize {:.2} | graph {:.2}) \
+             build-speedup {speedup_build:.2}x total-speedup {speedup_total:.2}x recall@{k} {recall:.3}",
+            b.total(),
+            b.train_seconds,
+            b.project_seconds,
+            b.quantize_seconds,
+            b.graph_seconds
+        );
+        rows.push(Json::obj(vec![
+            ("threads", Json::num(threads as f64)),
+            ("wall_seconds", Json::num(wall)),
+            ("train_seconds", Json::num(b.train_seconds)),
+            ("project_seconds", Json::num(b.project_seconds)),
+            ("quantize_seconds", Json::num(b.quantize_seconds)),
+            ("graph_seconds", Json::num(b.graph_seconds)),
+            ("total_seconds", Json::num(b.total())),
+            ("parallel_phase_seconds", Json::num(parallel_phases)),
+            ("speedup_parallel_phases_vs_serial", Json::num(speedup_build)),
+            ("speedup_total_vs_serial", Json::num(speedup_total)),
+            ("k", Json::num(k as f64)),
+            ("recall_at_k", Json::num(recall)),
+        ]));
+    }
+    let out = Json::obj(vec![
+        ("dataset", Json::str(&ds.name)),
+        ("n", Json::num(ds.database.len() as f64)),
+        ("dim", Json::num(ds.dim as f64)),
+        ("target_dim", Json::num(160.0)),
+        ("available_parallelism", Json::num(all_cores as f64)),
+        ("builds", Json::Arr(rows)),
+    ]);
+    match std::fs::write("BENCH_build.json", out.to_pretty()) {
+        Ok(()) => println!("[saved BENCH_build.json]"),
+        Err(e) => eprintln!("could not write BENCH_build.json: {e}"),
+    }
+}
 
 fn main() {
     let mut spec = SynthSpec::ood("bench-e2e", 768, 6_000, 256);
@@ -79,4 +173,7 @@ fn main() {
     };
     let (_r, report) = Engine::run_workload(index, cfg, &queries, k, None);
     println!("\nserving engine: {}", report.metrics);
+
+    // parallel build speedup trajectory -> BENCH_build.json
+    bench_build_trajectory(&ds, gp, &truth, k);
 }

@@ -136,6 +136,43 @@ impl GraphParams {
     }
 }
 
+/// Index-construction threading knobs.
+///
+/// `build_threads` controls how many worker threads the builder uses
+/// across every build phase: Vamana graph construction, LVQ/FP16
+/// encoding, and database projection.
+///
+/// * `1` (the default) — fully serial reference build. Bit-for-bit
+///   reproducible: identical adjacency lists and identical codes across
+///   runs, and identical to the historical single-threaded builder.
+/// * `0` — use `available_parallelism()`.
+/// * `n > 1` — batch-synchronous parallel build. Quantization and
+///   projection are bit-identical to the serial build (pure per-row
+///   work); graph construction inserts nodes in fixed-size rounds whose
+///   searches run against a frozen adjacency snapshot, so the resulting
+///   graph is deterministic for any thread count > 1 (the round schedule
+///   is fixed) but *differs* from the serial graph. The determinism
+///   escape hatch is `build_threads = 1`: use it whenever adjacency
+///   lists must match the serial reference exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BuildParams {
+    /// worker threads for index construction (0 = all cores, 1 = serial)
+    pub build_threads: usize,
+}
+
+impl Default for BuildParams {
+    fn default() -> Self {
+        BuildParams { build_threads: 1 }
+    }
+}
+
+impl BuildParams {
+    /// The effective worker count (`0` resolved to the core count).
+    pub fn resolved_threads(&self) -> usize {
+        crate::util::threadpool::resolve_threads(self.build_threads)
+    }
+}
+
 /// Persistable run description, serialized next to experiment outputs.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -145,6 +182,7 @@ pub struct RunConfig {
     pub primary: Compression,
     pub secondary: Compression,
     pub graph: GraphParams,
+    pub build: BuildParams,
 }
 
 impl RunConfig {
@@ -158,6 +196,7 @@ impl RunConfig {
             ("max_degree", Json::num(self.graph.max_degree as f64)),
             ("build_window", Json::num(self.graph.build_window as f64)),
             ("alpha", Json::num(self.graph.alpha as f64)),
+            ("build_threads", Json::num(self.build.build_threads as f64)),
         ])
     }
 }
@@ -202,9 +241,19 @@ mod tests {
             primary: Compression::Lvq8,
             secondary: Compression::F16,
             graph: GraphParams::for_similarity(Similarity::InnerProduct),
+            build: BuildParams { build_threads: 4 },
         };
         let j = rc.to_json();
         assert_eq!(j.get("target_dim").unwrap().as_usize(), Some(160));
         assert_eq!(j.get("projection").unwrap().as_str(), Some("leanvec-ood-fw"));
+        assert_eq!(j.get("build_threads").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn build_params_default_is_serial() {
+        let b = BuildParams::default();
+        assert_eq!(b.build_threads, 1);
+        assert_eq!(b.resolved_threads(), 1);
+        assert!(BuildParams { build_threads: 0 }.resolved_threads() >= 1);
     }
 }

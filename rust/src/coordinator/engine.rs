@@ -173,6 +173,33 @@ impl Engine {
         self.started.elapsed().as_secs_f64()
     }
 
+    /// Direct parallel batch path (no channels): project the whole
+    /// batch as ONE matmul on the calling thread — the same
+    /// amortization the batcher thread performs — then fan the searches
+    /// out across `workers` threads with pooled contexts, the same
+    /// chunking discipline as the parallel index builder. Returns
+    /// `(ids, scores)` per query, in query order, identical to serial
+    /// `search_projected` calls for every worker count.
+    pub fn run_batch_direct(
+        index: &LeanVecIndex,
+        queries: &[Vec<f32>],
+        k: usize,
+        params: SearchParams,
+        workers: usize,
+    ) -> Vec<(Vec<u32>, Vec<f32>)> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        // batched projection: Q (B, D) x A^T -> (B, d)
+        let qm = rows_to_matrix(queries);
+        let proj: Matrix = qm.matmul_nt(&index.model.a);
+        index.batch_fan_out(queries.len(), workers, |ctx, i| {
+            let (ids, scores, _) =
+                index.search_projected(ctx, proj.row(i), &queries[i], k, params);
+            (ids, scores)
+        })
+    }
+
     /// Convenience: run a closed-loop workload and report (used by the
     /// e2e example and the serving benches).
     pub fn run_workload(
@@ -338,6 +365,34 @@ mod tests {
         let rest = engine.shutdown();
         // the one response may have been drained here or not at all
         assert!(rest.len() <= 1);
+    }
+
+    #[test]
+    fn run_batch_direct_matches_engine_and_is_worker_count_invariant() {
+        let index = build_index(250, 16, 8);
+        let mut rng = Rng::new(13);
+        let queries: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let params = SearchParams::default();
+        let direct1 = Engine::run_batch_direct(&index, &queries, 5, params, 1);
+        let direct3 = Engine::run_batch_direct(&index, &queries, 5, params, 3);
+        assert_eq!(direct1, direct3, "results depend on worker count");
+        // agrees with the channel-based engine
+        let (mut responses, _) = Engine::run_workload(
+            Arc::clone(&index),
+            EngineConfig {
+                workers: 2,
+                ..EngineConfig::default()
+            },
+            &queries,
+            5,
+            None,
+        );
+        responses.sort_by_key(|r| r.id);
+        for (r, (ids, _)) in responses.iter().zip(direct1.iter()) {
+            assert_eq!(&r.ids, ids);
+        }
     }
 
     #[test]

@@ -102,6 +102,37 @@ impl SearchCtx {
     }
 }
 
+/// A pool of reusable [`SearchCtx`] for parallel sections (the parallel
+/// graph builder and the batch-search path). Sized to the worker count:
+/// as long as at most `workers` closures run concurrently, `acquire`
+/// always finds a free context without blocking on a held lock.
+pub struct CtxPool {
+    ctxs: Vec<std::sync::Mutex<SearchCtx>>,
+}
+
+impl CtxPool {
+    pub fn new(workers: usize, n: usize) -> CtxPool {
+        CtxPool {
+            ctxs: (0..workers.max(1))
+                .map(|_| std::sync::Mutex::new(SearchCtx::new(n)))
+                .collect(),
+        }
+    }
+
+    /// Borrow any free context (spins across the pool; never deadlocks
+    /// when concurrent borrowers <= pool size).
+    pub fn acquire(&self) -> std::sync::MutexGuard<'_, SearchCtx> {
+        loop {
+            for c in &self.ctxs {
+                if let Ok(guard) = c.try_lock() {
+                    return guard;
+                }
+            }
+            std::thread::yield_now();
+        }
+    }
+}
+
 /// Greedy traversal: start from `entries`, repeatedly expand the best
 /// unexpanded candidate, scoring its out-neighbors with `score_fn` and
 /// fetching them with `neighbors_fn`.
@@ -291,6 +322,29 @@ mod tests {
             assert_eq!(res[0].id, 7);
         }
         assert!(ctx.stats.hops > 0);
+    }
+
+    #[test]
+    fn ctx_pool_hands_out_distinct_contexts() {
+        let pool = CtxPool::new(2, 10);
+        let a = pool.acquire();
+        let b = pool.acquire();
+        // two concurrent borrows at pool size 2 must both succeed
+        drop(a);
+        drop(b);
+        let (adj, scores) = path_graph();
+        let mut guard = pool.acquire();
+        let res = greedy_search(
+            &mut *guard,
+            &[0],
+            4,
+            |id| scores[id as usize],
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&adj[id as usize]);
+            },
+        );
+        assert_eq!(res[0].id, 7);
     }
 
     #[test]

@@ -6,5 +6,5 @@ pub mod beam;
 pub mod hnsw;
 pub mod vamana;
 
-pub use beam::{SearchCtx, SearchStats};
+pub use beam::{CtxPool, SearchCtx, SearchStats};
 pub use vamana::{Adjacency, VamanaBuilder, VamanaGraph};

@@ -8,9 +8,16 @@
 //! fast as searching them.
 
 use crate::config::{GraphParams, Similarity};
-use crate::graph::beam::{greedy_search, SearchCtx};
+use crate::graph::beam::{greedy_search, CtxPool, SearchCtx};
 use crate::linalg::matrix::l2_sq;
 use crate::quant::ScoreStore;
+use crate::util::threadpool::{parallel_map, resolve_threads};
+
+/// Nodes inserted per round of the batch-synchronous parallel build.
+/// Fixed (not a function of the thread count) so the parallel graph is
+/// identical for every `threads > 1`: each round's searches run against
+/// the same frozen snapshot regardless of how many workers execute them.
+const PARALLEL_ROUND: usize = 128;
 
 /// Fixed-max-degree adjacency stored as one flat u32 block per node.
 pub struct Adjacency {
@@ -120,6 +127,11 @@ pub struct VamanaBuilder {
     pub params: GraphParams,
     pub sim: Similarity,
     pub seed: u64,
+    /// construction worker threads; 1 = the serial reference build
+    /// (bit-for-bit reproducible), >1 = batch-synchronous rounds
+    /// (deterministic for any thread count, but a different graph than
+    /// the serial schedule — see `config::BuildParams`)
+    pub threads: usize,
 }
 
 impl VamanaBuilder {
@@ -128,7 +140,14 @@ impl VamanaBuilder {
             params,
             sim,
             seed: 0x5EED,
+            threads: 1,
         }
+    }
+
+    /// Set the construction worker count (0 = all cores).
+    pub fn with_threads(mut self, threads: usize) -> VamanaBuilder {
+        self.threads = resolve_threads(threads);
+        self
     }
 
     /// Build the graph over the vectors in `store`.
@@ -154,7 +173,6 @@ impl VamanaBuilder {
         }
 
         let medoid = self.find_medoid(store);
-        let mut ctx = SearchCtx::new(n);
         let mut order: Vec<u32> = (0..n as u32).collect();
 
         // --- two passes: relaxed alpha then target alpha (DiskANN recipe)
@@ -162,11 +180,18 @@ impl VamanaBuilder {
             Similarity::L2 | Similarity::Cosine => vec![1.0f32, self.params.alpha],
             Similarity::InnerProduct => vec![1.0f32, self.params.alpha],
         };
-        for &alpha in &alphas {
-            rng.shuffle(&mut order);
-            for &node in &order {
-                self.insert_node(store, &mut adj, &mut ctx, medoid, node, alpha);
+        // resolve here too so `threads: 0` set directly on the struct
+        // means "all cores", matching every other threads knob
+        if resolve_threads(self.threads) <= 1 {
+            let mut ctx = SearchCtx::new(n);
+            for &alpha in &alphas {
+                rng.shuffle(&mut order);
+                for &node in &order {
+                    self.insert_node(store, &mut adj, &mut ctx, medoid, node, alpha);
+                }
             }
+        } else {
+            self.insert_all_parallel(store, &mut adj, medoid, &mut rng, &mut order, &alphas);
         }
 
         VamanaGraph {
@@ -175,6 +200,87 @@ impl VamanaBuilder {
             params: self.params,
             sim: self.sim,
             build_seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Batch-synchronous parallel insertion (mirrors the round-based
+    /// schedule intel/ScalableVectorSearch uses): nodes are inserted in
+    /// fixed-size rounds; within a round every node runs its greedy
+    /// search + robust prune concurrently against a *frozen* adjacency
+    /// snapshot with a per-thread [`SearchCtx`], then the edge updates
+    /// (forward lists + reverse edges with overflow re-prune) are
+    /// applied serially in round order. Results are deterministic for a
+    /// fixed round size no matter how many workers run the searches.
+    fn insert_all_parallel(
+        &self,
+        store: &dyn ScoreStore,
+        adj: &mut Adjacency,
+        medoid: u32,
+        rng: &mut crate::util::rng::Rng,
+        order: &mut [u32],
+        alphas: &[f32],
+    ) {
+        let n = store.len();
+        let threads = resolve_threads(self.threads);
+        let pool = CtxPool::new(threads, n);
+        for &alpha in alphas {
+            rng.shuffle(order);
+            for round in order.chunks(PARALLEL_ROUND) {
+                // (1) parallel: search the frozen snapshot + robust prune
+                let selections: Vec<Vec<u32>> = {
+                    let adj_snapshot: &Adjacency = adj;
+                    parallel_map(round.len(), threads, |j| {
+                        let node = round[j];
+                        let node_vec = store.decode(node);
+                        let pq = store.prepare(&node_vec, self.sim);
+                        let mut ctx = pool.acquire();
+                        let results = greedy_search(
+                            &mut *ctx,
+                            &[medoid],
+                            self.params.build_window,
+                            |id| store.score(&pq, id),
+                            |id, out| {
+                                out.clear();
+                                out.extend_from_slice(adj_snapshot.neighbors(id));
+                            },
+                        );
+                        let mut ids: Vec<u32> = results.iter().map(|c| c.id).collect();
+                        ids.extend_from_slice(adj_snapshot.neighbors(node));
+                        ids.sort_unstable();
+                        ids.dedup();
+                        ids.retain(|&id| id != node);
+                        self.robust_prune(store, node, &node_vec, &ids, alpha)
+                    })
+                };
+                // (2) serial: apply edge updates in round order. A
+                // node's selection came from the frozen snapshot, so it
+                // cannot contain reverse edges gained from round-mates
+                // applied earlier in this round — fold those in (the
+                // serial schedule keeps them by putting the node's live
+                // neighbor list into the prune pool), re-pruning only
+                // when the union overflows the degree bound.
+                let pre_round: Vec<Vec<u32>> = round
+                    .iter()
+                    .map(|&nd| adj.neighbors(nd).to_vec())
+                    .collect();
+                for (j, mut selected) in selections.into_iter().enumerate() {
+                    let node = round[j];
+                    for &nb in adj.neighbors(node) {
+                        if nb != node
+                            && !pre_round[j].contains(&nb)
+                            && !selected.contains(&nb)
+                        {
+                            selected.push(nb);
+                        }
+                    }
+                    if selected.len() > self.params.max_degree {
+                        let node_vec = store.decode(node);
+                        selected =
+                            self.robust_prune(store, node, &node_vec, &selected, alpha);
+                    }
+                    self.apply_insertion(store, adj, node, &selected, alpha);
+                }
+            }
         }
     }
 
@@ -210,10 +316,25 @@ impl VamanaBuilder {
         ids.retain(|&id| id != node);
 
         let selected = self.robust_prune(store, node, &node_vec, &ids, alpha);
-        adj.set_neighbors(node, &selected);
+        self.apply_insertion(store, adj, node, &selected, alpha);
+    }
+
+    /// Install `node`'s pruned out-list and its reverse edges (with the
+    /// overflow re-prune). Shared verbatim by the serial and parallel
+    /// schedules so `threads = 1` and `threads > 1` differ only in how
+    /// candidate pools are computed, never in how edges are applied.
+    fn apply_insertion(
+        &self,
+        store: &dyn ScoreStore,
+        adj: &mut Adjacency,
+        node: u32,
+        selected: &[u32],
+        alpha: f32,
+    ) {
+        adj.set_neighbors(node, selected);
 
         // reverse edges
-        for &nb in &selected {
+        for &nb in selected {
             if adj.degree(nb) < adj.max_degree() {
                 if !adj.neighbors(nb).contains(&node) {
                     adj.push_neighbor(nb, node);
@@ -443,6 +564,120 @@ mod tests {
         let rows = clustered_rows(100, 6, 5);
         let (g, _) = build_graph(&rows, Similarity::L2);
         assert!(g.build_seconds > 0.0);
+    }
+
+    fn adjacency_lists(g: &VamanaGraph) -> Vec<Vec<u32>> {
+        (0..g.adj.len_nodes() as u32)
+            .map(|i| g.adj.neighbors(i).to_vec())
+            .collect()
+    }
+
+    #[test]
+    fn parallel_build_is_deterministic_and_thread_count_independent() {
+        let rows = clustered_rows(500, 8, 21);
+        let store = F32Store::from_rows(&rows);
+        let mut params = GraphParams::for_similarity(Similarity::L2);
+        params.max_degree = 16;
+        params.build_window = 32;
+        let build = |threads: usize| {
+            VamanaBuilder::new(params, Similarity::L2)
+                .with_threads(threads)
+                .build(&store)
+        };
+        let a = build(2);
+        let b = build(2);
+        let c = build(4);
+        assert_eq!(adjacency_lists(&a), adjacency_lists(&b), "repeat run differs");
+        assert_eq!(
+            adjacency_lists(&a),
+            adjacency_lists(&c),
+            "graph depends on thread count"
+        );
+        assert_eq!(a.medoid, c.medoid);
+    }
+
+    #[test]
+    fn parallel_build_invariants_hold() {
+        let rows = clustered_rows(400, 8, 22);
+        let store = F32Store::from_rows(&rows);
+        let mut params = GraphParams::for_similarity(Similarity::L2);
+        params.max_degree = 16;
+        params.build_window = 32;
+        let g = VamanaBuilder::new(params, Similarity::L2)
+            .with_threads(4)
+            .build(&store);
+        for i in 0..400u32 {
+            let nbrs = g.adj.neighbors(i);
+            assert!(nbrs.len() <= params.max_degree);
+            assert!(!nbrs.contains(&i), "self loop at {i}");
+            let set: std::collections::HashSet<_> = nbrs.iter().collect();
+            assert_eq!(set.len(), nbrs.len(), "duplicate edge at {i}");
+        }
+        assert!(g.adj.avg_degree() >= 2.0);
+        // reverse edges gained within a round must survive the round's
+        // own set_neighbors applications: almost every node keeps at
+        // least one in-edge
+        let mut in_deg = vec![0usize; 400];
+        for i in 0..400u32 {
+            for &nb in g.adj.neighbors(i) {
+                in_deg[nb as usize] += 1;
+            }
+        }
+        let orphaned = in_deg.iter().filter(|&&d| d == 0).count();
+        assert!(orphaned < 40, "{orphaned}/400 nodes have no in-edges");
+    }
+
+    #[test]
+    fn parallel_build_recall_matches_serial() {
+        let rows = clustered_rows(500, 8, 23);
+        let store = F32Store::from_rows(&rows);
+        let mut params = GraphParams::for_similarity(Similarity::L2);
+        params.max_degree = 16;
+        params.build_window = 32;
+        let serial = VamanaBuilder::new(params, Similarity::L2).build(&store);
+        let parallel = VamanaBuilder::new(params, Similarity::L2)
+            .with_threads(4)
+            .build(&store);
+        let mut ctx = SearchCtx::new(500);
+        let recall = |g: &VamanaGraph, ctx: &mut SearchCtx| {
+            let trials = 40;
+            let mut hits = 0usize;
+            for t in 0..trials {
+                // per-trial rng so both graphs see identical queries
+                let mut probe_rng = Rng::new(900 + t as u64);
+                let q: Vec<f32> = rows[probe_rng.below(500)]
+                    .iter()
+                    .map(|&x| x + probe_rng.gaussian_f32() * 0.05)
+                    .collect();
+                let truth = brute_force_topk(&rows, &q, 10, Similarity::L2);
+                let pq = store.prepare(&q, Similarity::L2);
+                let res = g.search(ctx, &store, &pq, 40);
+                let got: Vec<u32> = res.iter().take(10).map(|c| c.id).collect();
+                hits += truth.iter().filter(|t| got.contains(t)).count();
+            }
+            hits as f64 / (10 * trials) as f64
+        };
+        let r_serial = recall(&serial, &mut ctx);
+        let r_parallel = recall(&parallel, &mut ctx);
+        assert!(
+            r_parallel >= r_serial - 0.03,
+            "parallel recall {r_parallel} vs serial {r_serial}"
+        );
+    }
+
+    #[test]
+    fn threads_one_reproduces_serial_build_exactly() {
+        let rows = clustered_rows(300, 8, 24);
+        let store = F32Store::from_rows(&rows);
+        let mut params = GraphParams::for_similarity(Similarity::L2);
+        params.max_degree = 16;
+        params.build_window = 32;
+        let a = VamanaBuilder::new(params, Similarity::L2).build(&store);
+        let b = VamanaBuilder::new(params, Similarity::L2)
+            .with_threads(1)
+            .build(&store);
+        assert_eq!(adjacency_lists(&a), adjacency_lists(&b));
+        assert_eq!(a.medoid, b.medoid);
     }
 
     #[test]

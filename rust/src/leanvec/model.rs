@@ -50,6 +50,22 @@ impl LeanVecModel {
             .collect()
     }
 
+    /// Project a batch of database rows across `threads` workers
+    /// (0 = all cores), in chunks so the per-item synchronization cost
+    /// stays negligible next to each matvec. Each row's projection is
+    /// independent, so the result is bit-identical to
+    /// [`LeanVecModel::project_database`].
+    pub fn project_database_threads(&self, rows: &[Vec<f32>], threads: usize) -> Vec<Vec<f32>> {
+        let threads = crate::util::threadpool::resolve_threads(threads);
+        if threads <= 1 {
+            return self.project_database(rows);
+        }
+        let parts = crate::util::threadpool::parallel_chunked(rows.len(), threads, |start, end| {
+            self.project_database(&rows[start..end])
+        });
+        parts.into_iter().flatten().collect()
+    }
+
     /// Identity model (no reduction) for the `ProjectionKind::None` path.
     pub fn identity(dim: usize) -> LeanVecModel {
         LeanVecModel {
@@ -280,6 +296,14 @@ mod tests {
         let fw = train_projection(ProjectionKind::OodFrankWolfe, &x, Some(&q), 6, &mut b, 0);
         assert!(es.train_loss <= id.train_loss * 1.001);
         assert!(fw.train_loss <= es.train_loss * 1.001);
+    }
+
+    #[test]
+    fn threaded_projection_matches_serial() {
+        let x = gaussian_rows(300, 16, 9);
+        let mut b = TrainBackends::default();
+        let m = train_projection(ProjectionKind::Id, &x, None, 6, &mut b, 0);
+        assert_eq!(m.project_database(&x), m.project_database_threads(&x, 4));
     }
 
     #[test]

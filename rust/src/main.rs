@@ -8,7 +8,8 @@
 //!   artifacts         verify the PJRT artifacts load + execute
 //!
 //! Common flags: --out DIR, --scale S, --seed N, --pjrt,
-//!               --dataset NAME, --dim d, --window W, --k K
+//!               --dataset NAME, --dim d, --window W, --k K,
+//!               --threads T (build workers; 0 = all cores, 1 = serial)
 
 use leanvec::config::{Compression, ProjectionKind};
 use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QueryProjectorKind};
@@ -44,7 +45,7 @@ fn print_usage() {
          \n\
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
-         repro build --dataset rqa-768 --dim 160\n\
+         repro build --dataset rqa-768 --dim 160 --threads 0\n\
          repro search --dataset wit-512 --projection ood-es --window 50\n\
          repro serve --dataset rqa-768 --queries 2000 --workers 2\n\
          repro artifacts"
@@ -96,7 +97,8 @@ fn build_index(
         .primary(primary)
         .secondary(secondary)
         .graph_params(ctx.graph_params(ds.similarity))
-        .seed(ctx.seed);
+        .seed(ctx.seed)
+        .build_threads(args.usize("threads", 1));
     if ctx.use_pjrt {
         let rt = leanvec::runtime::executor::open_shared(
             &leanvec::runtime::default_artifacts_dir(),

@@ -24,6 +24,7 @@
 use super::{finish_score, PreparedQuery, ScoreStore};
 use crate::config::Similarity;
 use crate::linalg::matrix::dot;
+use crate::util::threadpool::parallel_chunked;
 
 /// Single-level LVQ store with B in {4, 8} bits per component.
 pub struct LvqStore {
@@ -66,52 +67,101 @@ fn quantize(u: &[f32], levels: u32) -> (Vec<u8>, f32, f32) {
     (codes, delta, lo)
 }
 
+/// Per-chunk encoder output, concatenated serially in chunk order.
+struct EncodedChunk {
+    codes: Vec<u8>,
+    delta: Vec<f32>,
+    lo: Vec<f32>,
+    norms_sq: Vec<f32>,
+}
+
+/// Quantize `rows` against `mean` (pure per-row work; used by both the
+/// serial and the chunk-parallel paths, so they agree bit-for-bit).
+fn encode_rows(rows: &[Vec<f32>], mean: &[f32], bits: u8, stride: usize) -> EncodedChunk {
+    let dim = mean.len();
+    let levels = 1u32 << bits;
+    let mut out = EncodedChunk {
+        codes: Vec::with_capacity(rows.len() * stride),
+        delta: Vec::with_capacity(rows.len()),
+        lo: Vec::with_capacity(rows.len()),
+        norms_sq: Vec::with_capacity(rows.len()),
+    };
+    let mut u = vec![0.0f32; dim];
+    for r in rows {
+        assert_eq!(r.len(), dim);
+        for ((uv, &x), &m) in u.iter_mut().zip(r.iter()).zip(mean.iter()) {
+            *uv = x - m;
+        }
+        let (c, d, l) = quantize(&u, levels);
+        // reconstructed norm, consistent with scoring
+        let mut ns = 0.0f32;
+        for (i, &ci) in c.iter().enumerate() {
+            let v = mean[i] + ci as f32 * d + l;
+            ns += v * v;
+        }
+        out.norms_sq.push(ns);
+        out.delta.push(d);
+        out.lo.push(l);
+        if bits == 8 {
+            out.codes.extend_from_slice(&c);
+        } else {
+            // pack two 4-bit codes per byte, low nibble first
+            for pair in c.chunks(2) {
+                let lo_nib = pair[0] & 0x0F;
+                let hi_nib = pair.get(1).copied().unwrap_or(0) & 0x0F;
+                out.codes.push(lo_nib | (hi_nib << 4));
+            }
+        }
+    }
+    out
+}
+
 impl LvqStore {
     pub fn new(rows: &[Vec<f32>], bits: u8) -> LvqStore {
-        Self::with_mean(rows, bits, None)
+        Self::with_mean_threads(rows, bits, None, 1)
+    }
+
+    /// Parallel-encoding constructor (0 threads = all cores).
+    pub fn new_threads(rows: &[Vec<f32>], bits: u8, threads: usize) -> LvqStore {
+        Self::with_mean_threads(rows, bits, None, threads)
     }
 
     /// Build with an explicit global mean (used when the primary store
     /// quantizes *projected* vectors whose mean was computed upstream).
     pub fn with_mean(rows: &[Vec<f32>], bits: u8, mean: Option<Vec<f32>>) -> LvqStore {
+        Self::with_mean_threads(rows, bits, mean, 1)
+    }
+
+    /// [`LvqStore::with_mean`] with each vector's quantization fanned
+    /// out across `threads` workers in fixed-size row chunks.
+    /// Bit-identical to the serial build for every thread count.
+    pub fn with_mean_threads(
+        rows: &[Vec<f32>],
+        bits: u8,
+        mean: Option<Vec<f32>>,
+        threads: usize,
+    ) -> LvqStore {
         assert!(bits == 4 || bits == 8, "LVQ supports 4 or 8 bits");
+        let threads = crate::util::threadpool::resolve_threads(threads);
         let dim = rows.first().map(|r| r.len()).unwrap_or(0);
         let mean = mean.unwrap_or_else(|| compute_mean(rows, dim));
-        let levels = 1u32 << bits;
         let stride = if bits == 8 { dim } else { dim.div_ceil(2) };
 
         let mut codes = Vec::with_capacity(rows.len() * stride);
         let mut delta = Vec::with_capacity(rows.len());
         let mut lo = Vec::with_capacity(rows.len());
         let mut norms_sq = Vec::with_capacity(rows.len());
-        let mut u = vec![0.0f32; dim];
 
-        for r in rows {
-            assert_eq!(r.len(), dim);
-            for ((uv, &x), &m) in u.iter_mut().zip(r.iter()).zip(mean.iter()) {
-                *uv = x - m;
-            }
-            let (c, d, l) = quantize(&u, levels);
-            // reconstructed norm, consistent with scoring
-            let mut ns = 0.0f32;
-            for (i, &ci) in c.iter().enumerate() {
-                let v = mean[i] + ci as f32 * d + l;
-                ns += v * v;
-            }
-            norms_sq.push(ns);
-            delta.push(d);
-            lo.push(l);
-            if bits == 8 {
-                codes.extend_from_slice(&c);
-            } else {
-                // pack two 4-bit codes per byte, low nibble first
-                for pair in c.chunks(2) {
-                    let lo_nib = pair[0] & 0x0F;
-                    let hi_nib = pair.get(1).copied().unwrap_or(0) & 0x0F;
-                    codes.push(lo_nib | (hi_nib << 4));
-                }
-            }
+        let parts = parallel_chunked(rows.len(), threads, |start, end| {
+            encode_rows(&rows[start..end], &mean, bits, stride)
+        });
+        for p in parts {
+            codes.extend_from_slice(&p.codes);
+            delta.extend_from_slice(&p.delta);
+            lo.extend_from_slice(&p.lo);
+            norms_sq.extend_from_slice(&p.norms_sq);
         }
+
         // bytes/vector: codes + delta + lo (mean is shared, amortized out)
         let bytes_per_vec = stride + 8;
         LvqStore {
@@ -258,28 +308,53 @@ pub struct Lvq4x8Store {
 
 impl Lvq4x8Store {
     pub fn new(rows: &[Vec<f32>]) -> Lvq4x8Store {
-        let first = LvqStore::new(rows, 4);
+        Self::new_threads(rows, 1)
+    }
+
+    /// Parallel two-level build: the 4-bit primary level is encoded in
+    /// parallel chunks, then each chunk's 8-bit residual quantization
+    /// runs in parallel too (per-row work again — bit-identical to the
+    /// serial build).
+    pub fn new_threads(rows: &[Vec<f32>], threads: usize) -> Lvq4x8Store {
+        let threads = crate::util::threadpool::resolve_threads(threads);
+        let first = LvqStore::new_threads(rows, 4, threads);
         let dim = first.dim();
         let mut res_codes = Vec::with_capacity(rows.len() * dim);
         let mut res_delta = Vec::with_capacity(rows.len());
         let mut res_lo = Vec::with_capacity(rows.len());
         let mut full_norms_sq = Vec::with_capacity(rows.len());
-        let mut resid = vec![0.0f32; dim];
-        for (i, r) in rows.iter().enumerate() {
-            let dec = first.decode(i as u32);
-            for ((rv, &x), &xh) in resid.iter_mut().zip(r.iter()).zip(dec.iter()) {
-                *rv = x - xh;
+
+        let parts = parallel_chunked(rows.len(), threads, |start, end| {
+            let mut out = EncodedChunk {
+                codes: Vec::with_capacity((end - start) * dim),
+                delta: Vec::with_capacity(end - start),
+                lo: Vec::with_capacity(end - start),
+                norms_sq: Vec::with_capacity(end - start),
+            };
+            let mut resid = vec![0.0f32; dim];
+            for (i, r) in rows[start..end].iter().enumerate() {
+                let dec = first.decode((start + i) as u32);
+                for ((rv, &x), &xh) in resid.iter_mut().zip(r.iter()).zip(dec.iter()) {
+                    *rv = x - xh;
+                }
+                let (c, d, l) = quantize(&resid, 256);
+                let mut ns = 0.0f32;
+                for (j, &cj) in c.iter().enumerate() {
+                    let v = dec[j] + cj as f32 * d + l;
+                    ns += v * v;
+                }
+                out.norms_sq.push(ns);
+                out.codes.extend_from_slice(&c);
+                out.delta.push(d);
+                out.lo.push(l);
             }
-            let (c, d, l) = quantize(&resid, 256);
-            let mut ns = 0.0f32;
-            for (j, &cj) in c.iter().enumerate() {
-                let v = dec[j] + cj as f32 * d + l;
-                ns += v * v;
-            }
-            full_norms_sq.push(ns);
-            res_codes.extend_from_slice(&c);
-            res_delta.push(d);
-            res_lo.push(l);
+            out
+        });
+        for p in parts {
+            res_codes.extend_from_slice(&p.codes);
+            res_delta.extend_from_slice(&p.delta);
+            res_lo.extend_from_slice(&p.lo);
+            full_norms_sq.extend_from_slice(&p.norms_sq);
         }
         Lvq4x8Store {
             first,
@@ -313,10 +388,17 @@ impl ScoreStore for Lvq4x8Store {
     }
 
     /// Traversal traffic = first level only (the residual bytes are not
-    /// touched during graph search) + the residual's share for rerank is
-    /// accounted separately by callers.
+    /// touched during graph search); re-rank traffic is reported by
+    /// [`ScoreStore::rerank_bytes_per_vector`].
     fn bytes_per_vector(&self) -> usize {
         self.first.bytes_per_vector()
+    }
+
+    /// Re-rank traffic: first level + residual codes + the residual's
+    /// per-vector `delta`/`lo` constants — what `score_full`/`decode`
+    /// actually read.
+    fn rerank_bytes_per_vector(&self) -> usize {
+        self.first.bytes_per_vector() + self.first.dim() + 8
     }
 
     fn prepare(&self, q: &[f32], sim: Similarity) -> PreparedQuery {
@@ -325,6 +407,11 @@ impl ScoreStore for Lvq4x8Store {
 
     fn score(&self, pq: &PreparedQuery, id: u32) -> f32 {
         self.first.score(pq, id)
+    }
+
+    /// Re-ranking reads both levels.
+    fn score_rerank(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        self.score_full(pq, id)
     }
 
     fn decode(&self, id: u32) -> Vec<f32> {
@@ -495,6 +582,52 @@ mod tests {
             for (a, b) in dec.iter().zip(r.iter()) {
                 assert!((a - b).abs() < 1e-5);
             }
+        }
+    }
+
+    #[test]
+    fn parallel_encoding_bit_identical_to_serial() {
+        // span several encode chunks so the parallel path really fans out
+        let rs = rows(700, 33, 15);
+        for bits in [4u8, 8u8] {
+            let serial = LvqStore::new(&rs, bits);
+            let parallel = LvqStore::new_threads(&rs, bits, 4);
+            assert_eq!(serial.codes, parallel.codes, "bits {bits}");
+            assert_eq!(serial.delta, parallel.delta);
+            assert_eq!(serial.lo, parallel.lo);
+            assert_eq!(serial.norms_sq, parallel.norms_sq);
+        }
+        let s2 = Lvq4x8Store::new(&rs);
+        let p2 = Lvq4x8Store::new_threads(&rs, 4);
+        assert_eq!(s2.first.codes, p2.first.codes);
+        assert_eq!(s2.res_codes, p2.res_codes);
+        assert_eq!(s2.res_delta, p2.res_delta);
+        assert_eq!(s2.res_lo, p2.res_lo);
+        assert_eq!(s2.full_norms_sq, p2.full_norms_sq);
+    }
+
+    #[test]
+    fn rerank_bytes_exceed_traversal_bytes_for_two_level() {
+        let rs = rows(10, 32, 16);
+        let two = Lvq4x8Store::new(&rs);
+        assert!(two.rerank_bytes_per_vector() > two.bytes_per_vector());
+        assert_eq!(
+            two.rerank_bytes_per_vector(),
+            two.bytes_per_vector() + 32 + 8
+        );
+        // single-level stores: rerank traffic == traversal traffic
+        let one = LvqStore::new(&rs, 8);
+        assert_eq!(one.rerank_bytes_per_vector(), one.bytes_per_vector());
+    }
+
+    #[test]
+    fn score_rerank_uses_both_levels() {
+        let rs = rows(40, 24, 17);
+        let store = Lvq4x8Store::new(&rs);
+        let q: Vec<f32> = rows(1, 24, 18).pop().unwrap();
+        let pq = store.prepare(&q, Similarity::InnerProduct);
+        for i in 0..40u32 {
+            assert_eq!(store.score_rerank(&pq, i), store.score_full(&pq, i));
         }
     }
 

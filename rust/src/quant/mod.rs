@@ -47,6 +47,22 @@ pub trait ScoreStore: Send + Sync {
     /// tests, and IVF-PQ training use this.
     fn decode(&self, id: u32) -> Vec<f32>;
 
+    /// Score used during re-ranking. Defaults to [`ScoreStore::score`];
+    /// two-level stores override it to include their residual level
+    /// (`Lvq4x8Store::score_full`), matching what `decode` reconstructs.
+    fn score_rerank(&self, pq: &PreparedQuery, id: u32) -> f32 {
+        self.score(pq, id)
+    }
+
+    /// Memory touched per *re-ranked* vector — what `score_rerank` /
+    /// `decode` actually read. Equal to `bytes_per_vector()` for
+    /// single-level stores; two-level stores add their residual bytes,
+    /// which graph traversal never touches but re-ranking does (this is
+    /// the `QueryStats::bytes_touched` accounting used by Fig. 1).
+    fn rerank_bytes_per_vector(&self) -> usize {
+        self.bytes_per_vector()
+    }
+
     /// Batch scoring helper (sequential fallback; stores may override
     /// with a blocked implementation).
     fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {

@@ -4,6 +4,7 @@ use super::{finish_score, PreparedQuery, ScoreStore};
 use crate::config::Similarity;
 use crate::linalg::matrix::dot;
 use crate::util::f16;
+use crate::util::threadpool::parallel_chunked;
 
 /// Plain f32 store — the accuracy reference and the FP32 baseline.
 pub struct F32Store {
@@ -89,16 +90,33 @@ pub struct F16Store {
 
 impl F16Store {
     pub fn from_rows(rows: &[Vec<f32>]) -> F16Store {
+        Self::from_rows_threads(rows, 1)
+    }
+
+    /// Parallel-encoding constructor: rows are converted to f16 in
+    /// independent chunks (pure per-row work, so the result is
+    /// bit-identical to the serial build for every thread count).
+    pub fn from_rows_threads(rows: &[Vec<f32>], threads: usize) -> F16Store {
+        let threads = crate::util::threadpool::resolve_threads(threads);
         let dim = rows.first().map(|r| r.len()).unwrap_or(0);
         let mut data = Vec::with_capacity(rows.len() * dim);
         let mut norms_sq = Vec::with_capacity(rows.len());
-        for r in rows {
-            assert_eq!(r.len(), dim);
-            let enc = f16::encode_slice(r);
-            // norm of the *encoded* vector so scoring is self-consistent
-            let dec = f16::decode_slice(&enc);
-            norms_sq.push(dot(&dec, &dec));
-            data.extend_from_slice(&enc);
+        let parts = parallel_chunked(rows.len(), threads, |start, end| {
+            let mut codes = Vec::with_capacity((end - start) * dim);
+            let mut norms = Vec::with_capacity(end - start);
+            for r in &rows[start..end] {
+                assert_eq!(r.len(), dim);
+                let enc = f16::encode_slice(r);
+                // norm of the *encoded* vector so scoring is self-consistent
+                let dec = f16::decode_slice(&enc);
+                norms.push(dot(&dec, &dec));
+                codes.extend_from_slice(&enc);
+            }
+            (codes, norms)
+        });
+        for (codes, norms) in parts {
+            data.extend_from_slice(&codes);
+            norms_sq.extend_from_slice(&norms);
         }
         F16Store {
             dim,
@@ -242,6 +260,15 @@ mod tests {
             F16Store::from_rows(&rs).bytes_per_vector()
                 < F32Store::from_rows(&rs).bytes_per_vector()
         );
+    }
+
+    #[test]
+    fn f16_parallel_encoding_bit_identical() {
+        let rs = rows(600, 20, 9);
+        let serial = F16Store::from_rows(&rs);
+        let parallel = F16Store::from_rows_threads(&rs, 4);
+        assert_eq!(serial.data, parallel.data);
+        assert_eq!(serial.norms_sq, parallel.norms_sq);
     }
 
     #[test]

@@ -104,6 +104,37 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, chunk: usize,
     });
 }
 
+/// Resolve a thread-count knob: `0` selects `available_parallelism()`.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Rows handled per task in [`parallel_chunked`]: fixed (not derived
+/// from the thread count) so chunked results are identical for every
+/// thread count.
+pub const CHUNK_ROWS: usize = 256;
+
+/// Fan `f(start, end)` over [`CHUNK_ROWS`]-sized index ranges across
+/// `threads` workers, returning per-chunk outputs in chunk order
+/// (callers concatenate them serially). The shared scaffolding for the
+/// chunk-parallel store encoders and database projection: per-row work
+/// is pure, so results are bit-identical to a serial loop.
+pub fn parallel_chunked<T: Send, F: Fn(usize, usize) -> T + Sync>(
+    n_rows: usize,
+    threads: usize,
+    f: F,
+) -> Vec<T> {
+    let n_chunks = n_rows.div_ceil(CHUNK_ROWS);
+    parallel_map(n_chunks, threads, |ci| {
+        let start = ci * CHUNK_ROWS;
+        f(start, (start + CHUNK_ROWS).min(n_rows))
+    })
+}
+
 /// Map `f` over 0..n in parallel, collecting results in index order.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(
     n: usize,
@@ -163,6 +194,21 @@ mod tests {
     fn parallel_map_preserves_order() {
         let out = parallel_map(100, 4, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_chunked_covers_ranges_in_order() {
+        let parts = parallel_chunked(600, 4, |start, end| (start, end));
+        assert_eq!(parts, vec![(0, 256), (256, 512), (512, 600)]);
+        assert!(parallel_chunked(0, 4, |s, e| (s, e)).is_empty());
+        // thread count never changes the output
+        assert_eq!(parts, parallel_chunked(600, 1, |start, end| (start, end)));
+    }
+
+    #[test]
+    fn resolve_threads_zero_is_parallelism() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Score/decode consistency across every store type, plus
+//! parallel-vs-serial build parity.
+//!
+//! The contract under test: for every compression and similarity, the
+//! re-ranking score a store reports for a vector must agree with the
+//! similarity computed against that store's own `decode` output —
+//! `score_rerank(pq, id) ≈ sim(q, decode(id))` — including the 4-bit
+//! nibble tail at odd dimensions. (For two-level LVQ4x8 the traversal
+//! `score` reads only the first level by design; `score_rerank` is the
+//! decode-consistent one.)
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::data::gt::{ground_truth, recall_at_k};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::{make_store, make_store_threads, SearchParams};
+use leanvec::linalg::matrix::dot;
+use leanvec::prop_assert;
+use leanvec::util::prop::{check, Config, Gen};
+
+const ALL_COMPRESSIONS: [Compression; 5] = [
+    Compression::F32,
+    Compression::F16,
+    Compression::Lvq8,
+    Compression::Lvq4,
+    Compression::Lvq4x8,
+];
+
+/// The similarity a store's score should express, computed directly
+/// against decoded vectors: IP -> `<q, x>`; L2 -> `2<q,x> - ||x||^2`.
+fn expected_score(q: &[f32], dec: &[f32], sim: Similarity) -> f32 {
+    match sim {
+        Similarity::InnerProduct | Similarity::Cosine => dot(q, dec),
+        Similarity::L2 => 2.0 * dot(q, dec) - dot(dec, dec),
+    }
+}
+
+fn rows_from(g: &mut Gen, n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n).map(|_| g.vec_gaussian(d)).collect()
+}
+
+#[test]
+fn prop_score_rerank_matches_decode_all_stores_both_sims() {
+    check("score-decode-consistency", Config::default(), |g| {
+        let n = g.usize_in(2, 30);
+        // force odd dimensions half the time to exercise the 4-bit
+        // nibble tail; keep a spread of sizes either way
+        let mut d = g.usize_in(3, 97);
+        if g.usize_in(0, 1) == 0 {
+            d |= 1;
+        }
+        let rows = rows_from(g, n, d);
+        let q = g.vec_gaussian(d);
+        for compression in ALL_COMPRESSIONS {
+            let store = make_store(&rows, compression);
+            for sim in [Similarity::InnerProduct, Similarity::L2] {
+                let pq = store.prepare(&q, sim);
+                for id in 0..n as u32 {
+                    let got = store.score_rerank(&pq, id);
+                    let dec = store.decode(id);
+                    prop_assert!(
+                        dec.len() == d,
+                        "{compression:?} decode length {} != {d}",
+                        dec.len()
+                    );
+                    let want = expected_score(&q, &dec, sim);
+                    let tol = 1e-2 * (1.0 + want.abs());
+                    prop_assert!(
+                        (got - want).abs() <= tol,
+                        "{compression:?}/{sim:?} id {id}: score_rerank {got} vs decode-sim {want}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_traversal_score_matches_first_level_decode_single_level_stores() {
+    // for single-level stores the traversal score itself must already be
+    // decode-consistent (score_rerank is just score)
+    check("traversal-score-decode", Config::default(), |g| {
+        let n = g.usize_in(2, 20);
+        let d = g.usize_in(3, 65) | 1; // always odd: nibble-tail stress
+        let rows = rows_from(g, n, d);
+        let q = g.vec_gaussian(d);
+        for compression in [Compression::Lvq4, Compression::Lvq8, Compression::F16] {
+            let store = make_store(&rows, compression);
+            let pq = store.prepare(&q, Similarity::InnerProduct);
+            for id in 0..n as u32 {
+                let got = store.score(&pq, id);
+                let want = dot(&q, &store.decode(id));
+                prop_assert!(
+                    (got - want).abs() <= 1e-2 * (1.0 + want.abs()),
+                    "{compression:?} id {id}: {got} vs {want}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_store_encoding_is_bit_identical_for_every_compression() {
+    let mut g_rng = leanvec::util::rng::Rng::new(71);
+    let rows: Vec<Vec<f32>> = (0..600)
+        .map(|_| (0..33).map(|_| g_rng.gaussian_f32()).collect())
+        .collect();
+    for compression in ALL_COMPRESSIONS {
+        let serial = make_store(&rows, compression);
+        let parallel = make_store_threads(&rows, compression, 4);
+        assert_eq!(serial.len(), parallel.len());
+        assert_eq!(
+            serial.bytes_per_vector(),
+            parallel.bytes_per_vector(),
+            "{compression:?}"
+        );
+        for id in (0..600u32).step_by(37) {
+            assert_eq!(
+                serial.decode(id),
+                parallel.decode(id),
+                "{compression:?} id {id}"
+            );
+        }
+    }
+}
+
+fn build_index(
+    rows: &[Vec<f32>],
+    learn: &[Vec<f32>],
+    threads: usize,
+) -> leanvec::index::leanvec_index::LeanVecIndex {
+    let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+    gp.max_degree = 24;
+    gp.build_window = 48;
+    IndexBuilder::new()
+        .projection(ProjectionKind::Id)
+        .target_dim(24)
+        .primary(Compression::Lvq8)
+        .secondary(Compression::F16)
+        .graph_params(gp)
+        .seed(99)
+        .build_threads(threads)
+        .build(rows, Some(learn), Similarity::InnerProduct)
+}
+
+#[test]
+fn parallel_and_serial_builds_reach_the_same_recall() {
+    let ds = leanvec::data::synth::generate(&leanvec::data::synth::SynthSpec {
+        name: "parity".into(),
+        dim: 64,
+        n: 1_500,
+        n_learn_queries: 200,
+        n_test_queries: 100,
+        similarity: Similarity::InnerProduct,
+        queries: leanvec::data::synth::QueryDist::InDistribution,
+        decay: 0.6,
+        seed: 31,
+    });
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let serial = build_index(&ds.database, &ds.learn_queries, 1);
+    let parallel = build_index(&ds.database, &ds.learn_queries, 4);
+
+    let params = SearchParams {
+        window: 80,
+        rerank_window: 80,
+    };
+    let recall = |ix: &leanvec::index::leanvec_index::LeanVecIndex| {
+        let got: Vec<Vec<u32>> = ix
+            .search_batch(&ds.test_queries, k, params, 2)
+            .into_iter()
+            .map(|(ids, _)| ids)
+            .collect();
+        recall_at_k(&got, &truth, k)
+    };
+    let r_serial = recall(&serial);
+    let r_parallel = recall(&parallel);
+    assert!(r_serial >= 0.85, "serial recall {r_serial}");
+    // acceptance: parallel recall within 1 point of serial (+ noise slack)
+    assert!(
+        r_parallel >= r_serial - 0.02,
+        "parallel {r_parallel} vs serial {r_serial}"
+    );
+}
+
+#[test]
+fn parallel_build_same_codes_as_serial() {
+    // quantization and projection are bit-identical across thread
+    // counts; only the graph schedule differs
+    let ds = leanvec::data::synth::generate(&leanvec::data::synth::SynthSpec {
+        name: "codes".into(),
+        dim: 48,
+        n: 700,
+        n_learn_queries: 100,
+        n_test_queries: 50,
+        similarity: Similarity::InnerProduct,
+        queries: leanvec::data::synth::QueryDist::InDistribution,
+        decay: 0.6,
+        seed: 32,
+    });
+    let serial = build_index(&ds.database, &ds.learn_queries, 1);
+    let parallel = build_index(&ds.database, &ds.learn_queries, 4);
+    for id in (0..700u32).step_by(61) {
+        assert_eq!(serial.primary.decode(id), parallel.primary.decode(id));
+        assert_eq!(serial.secondary.decode(id), parallel.secondary.decode(id));
+    }
+}
