@@ -11,7 +11,8 @@ use leanvec::data::gt::{ground_truth, recall_at_k};
 use leanvec::data::synth::{generate, SynthSpec};
 use leanvec::experiments::harness::{qps_at_recall, qps_recall_curve};
 use leanvec::index::builder::IndexBuilder;
-use leanvec::index::leanvec_index::SearchParams;
+use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
+use leanvec::index::persist::SnapshotMeta;
 use leanvec::util::json::Json;
 use std::sync::Arc;
 
@@ -32,6 +33,7 @@ fn bench_build_trajectory(
 
     println!("\n== parallel build trajectory ({} cores available) ==", all_cores);
     let mut rows = Vec::new();
+    let mut last_index: Option<LeanVecIndex> = None;
     let mut serial_total = 0.0f64;
     // projection training is serial at every thread count, so the
     // headline speedup is reported over the phases build_threads
@@ -90,13 +92,41 @@ fn bench_build_trajectory(
             ("k", Json::num(k as f64)),
             ("recall_at_k", Json::num(recall)),
         ]));
+        last_index = Some(index);
     }
+
+    // snapshot write/load timing rides along with the build trajectory:
+    // with the build/serve split, load time is what a serving process
+    // actually pays at startup
+    let snap_path =
+        std::env::temp_dir().join(format!("leanvec-bench-{}.leanvec", std::process::id()));
+    let (mut snap_bytes, mut snap_write_s, mut snap_load_s) = (0u64, 0.0f64, 0.0f64);
+    if let Some(index) = last_index {
+        let t0 = std::time::Instant::now();
+        snap_bytes = index
+            .save(&snap_path, &SnapshotMeta::default())
+            .expect("snapshot save");
+        snap_write_s = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let (loaded, _) = LeanVecIndex::load(&snap_path).expect("snapshot load");
+        snap_load_s = t0.elapsed().as_secs_f64();
+        assert_eq!(loaded.len(), index.len(), "snapshot round-trip size");
+        std::fs::remove_file(&snap_path).ok();
+        println!(
+            "snapshot: {:.1} MiB, write {snap_write_s:.3}s, load {snap_load_s:.3}s",
+            snap_bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+
     let out = Json::obj(vec![
         ("dataset", Json::str(&ds.name)),
         ("n", Json::num(ds.database.len() as f64)),
         ("dim", Json::num(ds.dim as f64)),
         ("target_dim", Json::num(160.0)),
         ("available_parallelism", Json::num(all_cores as f64)),
+        ("snapshot_bytes", Json::num(snap_bytes as f64)),
+        ("snapshot_write_seconds", Json::num(snap_write_s)),
+        ("snapshot_load_seconds", Json::num(snap_load_s)),
         ("builds", Json::Arr(rows)),
     ]);
     match std::fs::write("BENCH_build.json", out.to_pretty()) {

@@ -31,6 +31,26 @@ impl Similarity {
             Similarity::Cosine => "cosine",
         }
     }
+
+    /// Stable one-byte wire code used by the snapshot format
+    /// (`docs/SNAPSHOT_FORMAT.md`). Never renumber existing variants.
+    pub fn code(&self) -> u8 {
+        match self {
+            Similarity::InnerProduct => 0,
+            Similarity::L2 => 1,
+            Similarity::Cosine => 2,
+        }
+    }
+
+    /// Inverse of [`Similarity::code`].
+    pub fn from_code(c: u8) -> Option<Similarity> {
+        match c {
+            0 => Some(Similarity::InnerProduct),
+            1 => Some(Similarity::L2),
+            2 => Some(Similarity::Cosine),
+            _ => None,
+        }
+    }
 }
 
 /// Quantization scheme for a vector store.
@@ -69,6 +89,30 @@ impl Compression {
             Compression::Lvq4x8 => "lvq4x8",
         }
     }
+
+    /// Stable one-byte wire code used by the snapshot format
+    /// (`docs/SNAPSHOT_FORMAT.md`). Never renumber existing variants.
+    pub fn code(&self) -> u8 {
+        match self {
+            Compression::F32 => 0,
+            Compression::F16 => 1,
+            Compression::Lvq8 => 2,
+            Compression::Lvq4 => 3,
+            Compression::Lvq4x8 => 4,
+        }
+    }
+
+    /// Inverse of [`Compression::code`].
+    pub fn from_code(c: u8) -> Option<Compression> {
+        match c {
+            0 => Some(Compression::F32),
+            1 => Some(Compression::F16),
+            2 => Some(Compression::Lvq8),
+            3 => Some(Compression::Lvq4),
+            4 => Some(Compression::Lvq4x8),
+            _ => None,
+        }
+    }
 }
 
 /// Projection learner for the primary vectors.
@@ -91,8 +135,10 @@ impl ProjectionKind {
         match s.to_ascii_lowercase().as_str() {
             "none" => Some(ProjectionKind::None),
             "id" | "pca" | "leanvec-id" => Some(ProjectionKind::Id),
-            "ood" | "fw" | "ood-fw" | "leanvec-ood" => Some(ProjectionKind::OodFrankWolfe),
-            "es" | "ood-es" | "eigsearch" => Some(ProjectionKind::OodEigSearch),
+            "ood" | "fw" | "ood-fw" | "leanvec-ood" | "leanvec-ood-fw" => {
+                Some(ProjectionKind::OodFrankWolfe)
+            }
+            "es" | "ood-es" | "eigsearch" | "leanvec-ood-es" => Some(ProjectionKind::OodEigSearch),
             "random" | "rand" => Some(ProjectionKind::Random),
             _ => None,
         }
@@ -105,6 +151,30 @@ impl ProjectionKind {
             ProjectionKind::OodFrankWolfe => "leanvec-ood-fw",
             ProjectionKind::OodEigSearch => "leanvec-ood-es",
             ProjectionKind::Random => "random",
+        }
+    }
+
+    /// Stable one-byte wire code used by the snapshot format
+    /// (`docs/SNAPSHOT_FORMAT.md`). Never renumber existing variants.
+    pub fn code(&self) -> u8 {
+        match self {
+            ProjectionKind::None => 0,
+            ProjectionKind::Id => 1,
+            ProjectionKind::OodFrankWolfe => 2,
+            ProjectionKind::OodEigSearch => 3,
+            ProjectionKind::Random => 4,
+        }
+    }
+
+    /// Inverse of [`ProjectionKind::code`].
+    pub fn from_code(c: u8) -> Option<ProjectionKind> {
+        match c {
+            0 => Some(ProjectionKind::None),
+            1 => Some(ProjectionKind::Id),
+            2 => Some(ProjectionKind::OodFrankWolfe),
+            3 => Some(ProjectionKind::OodEigSearch),
+            4 => Some(ProjectionKind::Random),
+            _ => None,
         }
     }
 }
@@ -221,6 +291,36 @@ mod tests {
         }
         assert_eq!(ProjectionKind::parse("pca"), Some(ProjectionKind::Id));
         assert_eq!(Similarity::parse("bogus"), None);
+    }
+
+    #[test]
+    fn wire_codes_roundtrip() {
+        for sim in [Similarity::InnerProduct, Similarity::L2, Similarity::Cosine] {
+            assert_eq!(Similarity::from_code(sim.code()), Some(sim));
+        }
+        for c in [
+            Compression::F32,
+            Compression::F16,
+            Compression::Lvq8,
+            Compression::Lvq4,
+            Compression::Lvq4x8,
+        ] {
+            assert_eq!(Compression::from_code(c.code()), Some(c));
+        }
+        for p in [
+            ProjectionKind::None,
+            ProjectionKind::Id,
+            ProjectionKind::OodFrankWolfe,
+            ProjectionKind::OodEigSearch,
+            ProjectionKind::Random,
+        ] {
+            assert_eq!(ProjectionKind::from_code(p.code()), Some(p));
+            // canonical names must parse back (snapshot META round-trip)
+            assert_eq!(ProjectionKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(Similarity::from_code(99), None);
+        assert_eq!(Compression::from_code(99), None);
+        assert_eq!(ProjectionKind::from_code(99), None);
     }
 
     #[test]

@@ -64,6 +64,33 @@ struct WorkItem {
 }
 
 impl Engine {
+    /// Start a serving engine directly from an on-disk index snapshot
+    /// (see `crate::index::persist`): the build/serve split. The
+    /// training, projection and graph-construction paths are never
+    /// touched — the process goes from snapshot bytes to answering
+    /// queries.
+    ///
+    /// `cfg` receives the snapshot's metadata before the engine starts,
+    /// so the recommended serving parameters it carries are usable:
+    ///
+    /// ```ignore
+    /// let (engine, _meta) = Engine::start_from_snapshot(path, |meta| EngineConfig {
+    ///     search: meta.search_defaults,
+    ///     ..EngineConfig::default()
+    /// })?;
+    /// ```
+    pub fn start_from_snapshot<F>(
+        path: &std::path::Path,
+        cfg: F,
+    ) -> Result<(Engine, crate::index::persist::SnapshotMeta), crate::index::persist::SnapshotError>
+    where
+        F: FnOnce(&crate::index::persist::SnapshotMeta) -> EngineConfig,
+    {
+        let (index, meta) = LeanVecIndex::load(path)?;
+        let cfg = cfg(&meta);
+        Ok((Engine::start(Arc::new(index), cfg), meta))
+    }
+
     pub fn start(index: Arc<LeanVecIndex>, cfg: EngineConfig) -> Engine {
         let (req_tx, req_rx) = channel::<Request>();
         let (work_tx, work_rx) = channel::<WorkItem>();
@@ -393,6 +420,40 @@ mod tests {
         for (r, (ids, _)) in responses.iter().zip(direct1.iter()) {
             assert_eq!(&r.ids, ids);
         }
+    }
+
+    #[test]
+    fn engine_from_snapshot_matches_in_memory_engine() {
+        let index = build_index(200, 16, 8);
+        let path = std::env::temp_dir().join(format!(
+            "leanvec-engine-snap-{}.leanvec",
+            std::process::id()
+        ));
+        index
+            .save(&path, &crate::index::persist::SnapshotMeta::default())
+            .unwrap();
+        let (engine, _meta) = Engine::start_from_snapshot(&path, |meta| EngineConfig {
+            workers: 2,
+            search: meta.search_defaults,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let mut rng = Rng::new(17);
+        let queries: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        for q in &queries {
+            engine.submit(q.clone(), 5);
+        }
+        let mut responses = engine.drain(queries.len());
+        responses.sort_by_key(|r| r.id);
+        engine.shutdown();
+        for (r, q) in responses.iter().zip(queries.iter()) {
+            let (ids, scores) = index.search(q, 5, SearchParams::default().window);
+            assert_eq!(r.ids, ids);
+            assert_eq!(r.scores, scores);
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,10 +1,204 @@
-//! Vector-file I/O: fvecs/ivecs (the TexMex/ANN-benchmarks formats) and
-//! a minimal npy (v1.0, C-order f32) reader/writer for interchange with
-//! the Python side.
+//! Vector-file I/O: fvecs/ivecs (the TexMex/ANN-benchmarks formats), a
+//! minimal npy (v1.0, C-order f32) reader/writer for interchange with
+//! the Python side, and the little-endian binary primitives ([`bin`],
+//! [`crc32`]) shared by every section of the index snapshot format
+//! (see `docs/SNAPSHOT_FORMAT.md` and `crate::index::persist`).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
+
+/// 256-entry lookup table for [`crc32`], built at compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), used as the
+/// per-section checksum of the snapshot format. Table-driven: store
+/// sections are hundreds of MB at production scale and this runs on
+/// every serve-side snapshot load.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// Little-endian binary encode/decode helpers for snapshot sections.
+///
+/// Writers append to a `Vec<u8>` section buffer; the [`bin::Cursor`]
+/// reader yields `std::io::Error` of kind `UnexpectedEof` on truncated
+/// input so callers can surface truncation without panicking.
+pub mod bin {
+    /// Append a `u8`.
+    pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+        out.push(v);
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f32`, little-endian bit pattern.
+    pub fn put_f32(out: &mut Vec<u8>, v: f32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64`, little-endian bit pattern.
+    pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a length-prefixed (`u64`) byte slice.
+    pub fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+        put_u64(out, v.len() as u64);
+        out.extend_from_slice(v);
+    }
+
+    /// Append a length-prefixed (`u64`) `u16` slice, little-endian.
+    pub fn put_u16s(out: &mut Vec<u8>, v: &[u16]) {
+        put_u64(out, v.len() as u64);
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Append a length-prefixed (`u64`) `u32` slice, little-endian.
+    pub fn put_u32s(out: &mut Vec<u8>, v: &[u32]) {
+        put_u64(out, v.len() as u64);
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Append a length-prefixed (`u64`) `f32` slice, little-endian.
+    pub fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+        put_u64(out, v.len() as u64);
+        for &x in v {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn eof(what: &str) -> std::io::Error {
+        std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            format!("snapshot section truncated reading {what}"),
+        )
+    }
+
+    /// Bounds-checked reader over a section payload.
+    pub struct Cursor<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Cursor<'a> {
+        pub fn new(buf: &'a [u8]) -> Cursor<'a> {
+            Cursor { buf, pos: 0 }
+        }
+
+        /// Bytes not yet consumed.
+        pub fn remaining(&self) -> usize {
+            self.buf.len() - self.pos
+        }
+
+        /// Take `n` raw bytes.
+        pub fn take(&mut self, n: usize) -> std::io::Result<&'a [u8]> {
+            if self.remaining() < n {
+                return Err(eof("bytes"));
+            }
+            let s = &self.buf[self.pos..self.pos + n];
+            self.pos += n;
+            Ok(s)
+        }
+
+        pub fn get_u8(&mut self) -> std::io::Result<u8> {
+            Ok(self.take(1)?[0])
+        }
+
+        pub fn get_u32(&mut self) -> std::io::Result<u32> {
+            let b = self.take(4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        }
+
+        pub fn get_u64(&mut self) -> std::io::Result<u64> {
+            let b = self.take(8)?;
+            Ok(u64::from_le_bytes([
+                b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+            ]))
+        }
+
+        pub fn get_f32(&mut self) -> std::io::Result<f32> {
+            Ok(f32::from_le_bytes(self.get_u32()?.to_le_bytes()))
+        }
+
+        pub fn get_f64(&mut self) -> std::io::Result<f64> {
+            Ok(f64::from_le_bytes(self.get_u64()?.to_le_bytes()))
+        }
+
+        /// Sanity-checked length prefix: must fit in the bytes left.
+        fn get_len(&mut self, elem_bytes: usize) -> std::io::Result<usize> {
+            let n = self.get_u64()? as usize;
+            match n.checked_mul(elem_bytes) {
+                Some(b) if b <= self.remaining() => Ok(n),
+                _ => Err(eof("length-prefixed slice")),
+            }
+        }
+
+        /// Read a length-prefixed byte slice.
+        pub fn get_bytes(&mut self) -> std::io::Result<Vec<u8>> {
+            let n = self.get_len(1)?;
+            Ok(self.take(n)?.to_vec())
+        }
+
+        /// Read a length-prefixed `u16` slice.
+        pub fn get_u16s(&mut self) -> std::io::Result<Vec<u16>> {
+            let n = self.get_len(2)?;
+            let b = self.take(n * 2)?;
+            Ok(b.chunks_exact(2)
+                .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                .collect())
+        }
+
+        /// Read a length-prefixed `u32` slice.
+        pub fn get_u32s(&mut self) -> std::io::Result<Vec<u32>> {
+            let n = self.get_len(4)?;
+            let b = self.take(n * 4)?;
+            Ok(b.chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        }
+
+        /// Read a length-prefixed `f32` slice.
+        pub fn get_f32s(&mut self) -> std::io::Result<Vec<f32>> {
+            let n = self.get_len(4)?;
+            let b = self.take(n * 4)?;
+            Ok(b.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        }
+    }
+}
 
 /// Write fvecs: per vector, a little-endian u32 dim then dim f32s.
 pub fn write_fvecs(path: &Path, rows: &[Vec<f32>]) -> std::io::Result<()> {
@@ -210,5 +404,53 @@ mod tests {
         std::fs::write(&p, b"").unwrap();
         assert!(read_fvecs(&p).unwrap().is_empty());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn bin_roundtrip_all_types() {
+        let mut buf = Vec::new();
+        bin::put_u8(&mut buf, 7);
+        bin::put_u32(&mut buf, 0xDEAD_BEEF);
+        bin::put_u64(&mut buf, 1 << 40);
+        bin::put_f32(&mut buf, -1.5);
+        bin::put_f64(&mut buf, 2.25);
+        bin::put_bytes(&mut buf, &[1, 2, 3]);
+        bin::put_u16s(&mut buf, &[10, 20]);
+        bin::put_u32s(&mut buf, &[30, 40, 50]);
+        bin::put_f32s(&mut buf, &[0.5, -0.5]);
+        let mut c = bin::Cursor::new(&buf);
+        assert_eq!(c.get_u8().unwrap(), 7);
+        assert_eq!(c.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(c.get_u64().unwrap(), 1 << 40);
+        assert_eq!(c.get_f32().unwrap(), -1.5);
+        assert_eq!(c.get_f64().unwrap(), 2.25);
+        assert_eq!(c.get_bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(c.get_u16s().unwrap(), vec![10, 20]);
+        assert_eq!(c.get_u32s().unwrap(), vec![30, 40, 50]);
+        assert_eq!(c.get_f32s().unwrap(), vec![0.5, -0.5]);
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn bin_cursor_rejects_truncation() {
+        let mut buf = Vec::new();
+        bin::put_f32s(&mut buf, &[1.0, 2.0, 3.0]);
+        // cut mid-payload: the length prefix now exceeds the bytes left
+        let cut = &buf[..buf.len() - 5];
+        let mut c = bin::Cursor::new(cut);
+        let err = c.get_f32s().unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+        // absurd length prefix must not allocate/panic
+        let mut huge = Vec::new();
+        bin::put_u64(&mut huge, u64::MAX);
+        let mut c = bin::Cursor::new(&huge);
+        assert!(c.get_u32s().is_err());
     }
 }

@@ -8,6 +8,7 @@
 //! fast as searching them.
 
 use crate::config::{GraphParams, Similarity};
+use crate::data::io::bin;
 use crate::graph::beam::{greedy_search, CtxPool, SearchCtx};
 use crate::linalg::matrix::l2_sq;
 use crate::quant::ScoreStore;
@@ -90,6 +91,100 @@ pub struct VamanaGraph {
 }
 
 impl VamanaGraph {
+    /// Serialize the graph as a CSR-packed snapshot section: scalar
+    /// parameters, the per-node degree array (the CSR offsets in
+    /// difference form), then every neighbor list concatenated without
+    /// the fixed-degree padding [`Adjacency`] keeps in memory. Byte
+    /// layout: `docs/SNAPSHOT_FORMAT.md`.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        let n = self.adj.len_nodes();
+        bin::put_u64(out, n as u64);
+        bin::put_u32(out, self.adj.max_degree() as u32);
+        bin::put_u32(out, self.params.max_degree as u32);
+        bin::put_u32(out, self.params.build_window as u32);
+        bin::put_f32(out, self.params.alpha);
+        bin::put_u8(out, self.sim.code());
+        bin::put_u32(out, self.medoid);
+        bin::put_f64(out, self.build_seconds);
+        bin::put_u32s(out, &self.adj.len);
+        let total: usize = self.adj.len.iter().map(|&l| l as usize).sum();
+        bin::put_u64(out, total as u64);
+        for id in 0..n as u32 {
+            for &nb in self.adj.neighbors(id) {
+                out.extend_from_slice(&nb.to_le_bytes());
+            }
+        }
+    }
+
+    /// Inverse of [`VamanaGraph::write_bytes`], re-padding the CSR lists
+    /// into the fixed-max-degree layout. Validates every degree and
+    /// neighbor id so a corrupted section errors instead of panicking.
+    pub fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<VamanaGraph> {
+        let bad = |what: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("inconsistent graph section: {what}"),
+            )
+        };
+        let n = cur.get_u64()? as usize;
+        let max_degree = cur.get_u32()? as usize;
+        let params = GraphParams {
+            max_degree: cur.get_u32()? as usize,
+            build_window: cur.get_u32()? as usize,
+            alpha: cur.get_f32()?,
+        };
+        let sim_code = cur.get_u8()?;
+        let sim = Similarity::from_code(sim_code)
+            .ok_or_else(|| bad("unknown similarity code"))?;
+        let medoid = cur.get_u32()?;
+        let build_seconds = cur.get_f64()?;
+        let degrees = cur.get_u32s()?;
+        if degrees.len() != n {
+            return Err(bad("degree array length"));
+        }
+        if n > 0 && medoid as usize >= n {
+            return Err(bad("medoid out of range"));
+        }
+        let total = cur.get_u64()? as usize;
+        let expect: usize = degrees.iter().map(|&l| l as usize).sum();
+        if total != expect {
+            return Err(bad("edge count disagrees with degrees"));
+        }
+        // the slab is n * max_degree slots: refuse absurd sizes rather
+        // than letting a corrupt-but-self-consistent header drive a
+        // process-aborting allocation (2^33 u32 slots = 32 GiB, far
+        // above any graph this crate builds but below OOM territory)
+        match n.checked_mul(max_degree) {
+            Some(slots) if max_degree <= (1 << 20) && (slots as u64) <= (1u64 << 33) => {}
+            _ => return Err(bad("adjacency slab implausibly large")),
+        }
+        let mut adj = Adjacency::new(n, max_degree);
+        let mut list = Vec::with_capacity(max_degree);
+        for (i, &deg) in degrees.iter().enumerate() {
+            let deg = deg as usize;
+            if deg > max_degree {
+                return Err(bad("degree exceeds max_degree"));
+            }
+            let raw = cur.take(deg * 4)?;
+            list.clear();
+            for c in raw.chunks_exact(4) {
+                let nb = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                if nb as usize >= n {
+                    return Err(bad("neighbor id out of range"));
+                }
+                list.push(nb);
+            }
+            adj.set_neighbors(i as u32, &list);
+        }
+        Ok(VamanaGraph {
+            adj,
+            medoid,
+            params,
+            sim,
+            build_seconds,
+        })
+    }
+
     /// Beam search for a prepared query over `store`. Returns candidates
     /// best-first (up to `window`).
     pub fn search<'c>(
@@ -678,6 +773,41 @@ mod tests {
             .build(&store);
         assert_eq!(adjacency_lists(&a), adjacency_lists(&b));
         assert_eq!(a.medoid, b.medoid);
+    }
+
+    #[test]
+    fn graph_write_read_roundtrip() {
+        let rows = clustered_rows(250, 8, 31);
+        let (g, _) = build_graph(&rows, Similarity::L2);
+        let mut buf = Vec::new();
+        g.write_bytes(&mut buf);
+        let mut cur = crate::data::io::bin::Cursor::new(&buf);
+        let back = VamanaGraph::read_bytes(&mut cur).unwrap();
+        assert_eq!(cur.remaining(), 0);
+        assert_eq!(back.medoid, g.medoid);
+        assert_eq!(back.sim, g.sim);
+        assert_eq!(back.params.max_degree, g.params.max_degree);
+        assert_eq!(back.params.build_window, g.params.build_window);
+        assert_eq!(back.params.alpha, g.params.alpha);
+        assert_eq!(back.adj.max_degree(), g.adj.max_degree());
+        assert_eq!(adjacency_lists(&back), adjacency_lists(&g));
+    }
+
+    #[test]
+    fn graph_read_rejects_corruption() {
+        let rows = clustered_rows(100, 6, 32);
+        let (g, _) = build_graph(&rows, Similarity::L2);
+        let mut buf = Vec::new();
+        g.write_bytes(&mut buf);
+        for cut in [0usize, 8, 20, buf.len() / 2, buf.len() - 1] {
+            let mut cur = crate::data::io::bin::Cursor::new(&buf[..cut]);
+            assert!(VamanaGraph::read_bytes(&mut cur).is_err(), "cut {cut}");
+        }
+        // bogus similarity code
+        let mut bad = buf.clone();
+        bad[8 + 4 + 4 + 4 + 4] = 0xFF; // n(u64) + max_deg + params.max_deg + window + alpha
+        let mut cur = crate::data::io::bin::Cursor::new(&bad);
+        assert!(VamanaGraph::read_bytes(&mut cur).is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::leanvec::model::LeanVecModel;
 use crate::quant::{Lvq4x8Store, LvqStore, PreparedQuery, ScoreStore, F16Store, F32Store};
 
 /// Runtime search knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SearchParams {
     /// graph search-buffer width L
     pub window: usize,
@@ -32,7 +32,7 @@ impl Default for SearchParams {
 
 /// Per-query traffic/latency accounting (drives Fig. 1's bandwidth
 /// model).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct QueryStats {
     pub primary_scored: usize,
     pub reranked: usize,
@@ -63,24 +63,44 @@ pub fn make_store_threads(
     }
 }
 
+/// The LeanVec search-and-rerank index. Built once by
+/// [`crate::index::IndexBuilder`]; round-trips to disk whole via
+/// [`LeanVecIndex::save`]/[`LeanVecIndex::load`]
+/// (`crate::index::persist`), after which the loaded copy serves
+/// bit-identical results to the built one.
 pub struct LeanVecIndex {
+    /// Projection pair `(A, B)`: queries traverse through `A q`,
+    /// database vectors were stored as `B x`.
     pub model: LeanVecModel,
+    /// Traversal store over projected + quantized vectors.
     pub primary: Box<dyn ScoreStore>,
+    /// Re-ranking store over full-dimensional vectors.
     pub secondary: Box<dyn ScoreStore>,
+    /// Vamana graph over the primary store.
     pub graph: VamanaGraph,
+    /// Similarity the scores express (cosine is normalized to IP at
+    /// build time, so this is never [`Similarity::Cosine`]).
     pub sim: Similarity,
+    /// Compression of [`LeanVecIndex::primary`].
     pub primary_compression: Compression,
+    /// Compression of [`LeanVecIndex::secondary`].
     pub secondary_compression: Compression,
     /// wall-clock seconds: projection training + database projection +
     /// quantization + graph build (Fig. 6 decomposition)
     pub build_breakdown: BuildBreakdown,
 }
 
+/// Wall-clock decomposition of one index build (Fig. 6). Persisted in
+/// the snapshot META section as build provenance.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BuildBreakdown {
+    /// projection training (phase 1)
     pub train_seconds: f64,
+    /// database projection (phase 2)
     pub project_seconds: f64,
+    /// primary + secondary store encoding (phase 3)
     pub quantize_seconds: f64,
+    /// Vamana graph construction (phase 4)
     pub graph_seconds: f64,
 }
 

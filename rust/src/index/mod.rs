@@ -1,13 +1,16 @@
 //! Search indices: the LeanVec search-and-rerank index (the paper's
-//! system), the flat exhaustive baseline/oracle, and an IVF-PQ baseline
-//! (FAISS-IVFPQfs stand-in).
+//! system), the flat exhaustive baseline/oracle, an IVF-PQ baseline
+//! (FAISS-IVFPQfs stand-in), and the versioned snapshot layer
+//! ([`persist`]) that round-trips a built index to disk.
 
 pub mod builder;
 pub mod flat;
 pub mod ivfpq;
 pub mod leanvec_index;
+pub mod persist;
 
 pub use builder::{IndexBuilder, SearchIndex};
 pub use flat::FlatIndex;
 pub use ivfpq::{IvfPqIndex, IvfPqParams};
 pub use leanvec_index::{LeanVecIndex, SearchParams};
+pub use persist::{SnapshotError, SnapshotMeta};

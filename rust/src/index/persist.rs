@@ -1,0 +1,557 @@
+//! Versioned binary snapshots of a whole [`LeanVecIndex`].
+//!
+//! A snapshot round-trips everything the index needs to serve queries —
+//! the Vamana adjacency (CSR-packed), both compressed stores with all
+//! their derived per-vector constants, the LeanVec projection pair, and
+//! the build/search/provenance metadata — so a process can
+//! [`LeanVecIndex::load`] and answer queries **bit-identically** to the
+//! process that built the index, without ever touching the training
+//! path. This is the build/serve split: `repro build` writes a
+//! snapshot once, any number of `repro search`/`repro serve` processes
+//! read it.
+//!
+//! # File layout (see `docs/SNAPSHOT_FORMAT.md` for the byte-level spec)
+//!
+//! ```text
+//! magic "LEANVEC\0" | version u32 | section count u32
+//! section table: per section { tag[8] | offset u64 | len u64 | crc32 }
+//! section payloads, concatenated in table order
+//! ```
+//!
+//! The section table is the forward-compatibility seam: readers locate
+//! sections by tag and ignore tags they do not understand, so new
+//! sections can be appended without a version bump; removing or
+//! reshaping an existing section requires bumping [`FORMAT_VERSION`],
+//! which old readers reject loudly ([`SnapshotError::UnsupportedVersion`]).
+//! Every payload is CRC-32-checked before it is parsed, so corruption
+//! surfaces as [`SnapshotError::ChecksumMismatch`] rather than as a
+//! garbled index.
+//!
+//! Snapshots are byte-deterministic: saving the same index twice
+//! produces identical files (nothing time- or environment-dependent is
+//! written outside the metadata the caller passes in).
+
+use std::fmt;
+use std::path::Path;
+
+use crate::config::{BuildParams, Compression, Similarity};
+use crate::data::io::{bin, crc32};
+use crate::graph::vamana::VamanaGraph;
+use crate::index::leanvec_index::{BuildBreakdown, LeanVecIndex, SearchParams};
+use crate::leanvec::model::LeanVecModel;
+use crate::quant::read_store;
+use crate::util::json::Json;
+
+/// First 8 bytes of every snapshot.
+pub const MAGIC: [u8; 8] = *b"LEANVEC\0";
+
+/// Current snapshot format version. Bump only for incompatible layout
+/// changes; appending new sections does NOT require a bump.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// JSON metadata: params, provenance, build breakdown.
+pub const SECTION_META: [u8; 8] = *b"META\0\0\0\0";
+/// The LeanVec projection pair `(A, B)`.
+pub const SECTION_MODEL: [u8; 8] = *b"MODEL\0\0\0";
+/// The primary (traversal) store.
+pub const SECTION_PRIMARY: [u8; 8] = *b"PRIMARY\0";
+/// The secondary (re-ranking) store.
+pub const SECTION_SECONDARY: [u8; 8] = *b"SECSTORE";
+/// The Vamana graph, CSR-packed.
+pub const SECTION_GRAPH: [u8; 8] = *b"GRAPH\0\0\0";
+
+/// Everything that can go wrong reading or writing a snapshot. Old
+/// readers meeting new files, bit rot, and partial writes all map to
+/// distinct variants so operators can tell them apart.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// The file does not start with [`MAGIC`] — not a snapshot at all.
+    BadMagic,
+    /// The file's format version is one this reader does not speak.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The file ends before the named structure is complete.
+    Truncated(String),
+    /// A section's payload does not match its recorded CRC-32.
+    ChecksumMismatch { section: String },
+    /// A section this reader requires is absent from the table.
+    MissingSection(String),
+    /// A payload passed its checksum but is internally inconsistent.
+    Corrupt(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot i/o error: {e}"),
+            SnapshotError::BadMagic => write!(f, "not a LeanVec snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "snapshot format version {found} not supported (this reader speaks {supported})"
+            ),
+            SnapshotError::Truncated(what) => write!(f, "snapshot truncated: {what}"),
+            SnapshotError::ChecksumMismatch { section } => {
+                write!(f, "snapshot section '{section}' failed its checksum")
+            }
+            SnapshotError::MissingSection(tag) => {
+                write!(f, "snapshot is missing required section '{tag}'")
+            }
+            SnapshotError::Corrupt(what) => write!(f, "snapshot corrupt: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SnapshotError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for SnapshotError {
+    fn from(e: std::io::Error) -> SnapshotError {
+        match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => SnapshotError::Truncated(e.to_string()),
+            std::io::ErrorKind::InvalidData => SnapshotError::Corrupt(e.to_string()),
+            _ => SnapshotError::Io(e),
+        }
+    }
+}
+
+/// One tagged, checksummed payload. The raw-section API is public so
+/// tools (and the forward-compatibility tests) can read, extend and
+/// rewrite snapshots without understanding every payload.
+///
+/// Payloads are owned (`Vec<u8>`) rather than borrowed from the file
+/// buffer so sections can be edited and re-written; the cost is a
+/// transient ~2x snapshot size in memory during load. If that ever
+/// bites at scale, the parse layer can grow a borrowing variant (or
+/// mmap) without changing the on-disk format.
+pub struct RawSection {
+    /// 8-byte tag, NUL-padded ASCII (e.g. [`SECTION_META`]).
+    pub tag: [u8; 8],
+    /// The section payload, exactly as stored.
+    pub bytes: Vec<u8>,
+}
+
+/// Printable form of a section tag (trailing NULs stripped).
+pub fn tag_str(tag: &[u8; 8]) -> String {
+    let end = tag.iter().position(|&b| b == 0).unwrap_or(8);
+    String::from_utf8_lossy(&tag[..end]).into_owned()
+}
+
+/// Serialize `sections` to `path` with the snapshot header and section
+/// table. Returns the number of bytes written.
+///
+/// The write is atomic-by-rename: everything is streamed to
+/// `<path>.tmp` and renamed over `path` only once complete, so a crash
+/// mid-save never destroys an existing good snapshot. Payloads are
+/// streamed section by section (never concatenated in memory), so peak
+/// memory is the section buffers the caller already holds.
+pub fn write_sections(path: &Path, sections: &[RawSection]) -> Result<u64, SnapshotError> {
+    use std::io::Write;
+    const ENTRY: usize = 8 + 8 + 8 + 4; // tag, offset, len, crc
+    let header_len = 16 + sections.len() * ENTRY;
+    let mut header = Vec::with_capacity(header_len);
+    header.extend_from_slice(&MAGIC);
+    bin::put_u32(&mut header, FORMAT_VERSION);
+    bin::put_u32(&mut header, sections.len() as u32);
+    let mut offset = header_len as u64;
+    for s in sections {
+        header.extend_from_slice(&s.tag);
+        bin::put_u64(&mut header, offset);
+        bin::put_u64(&mut header, s.bytes.len() as u64);
+        bin::put_u32(&mut header, crc32(&s.bytes));
+        offset += s.bytes.len() as u64;
+    }
+
+    let tmp = {
+        let mut os = path.as_os_str().to_owned();
+        os.push(".tmp");
+        std::path::PathBuf::from(os)
+    };
+    let write_all = || -> std::io::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(&header)?;
+        for s in sections {
+            w.write_all(&s.bytes)?;
+        }
+        w.flush()?;
+        // fsync before the rename: without it, a power loss after the
+        // rename can leave a zero-length file where the old good
+        // snapshot used to be (delayed allocation)
+        w.get_ref().sync_all()?;
+        Ok(())
+    };
+    if let Err(e) = write_all() {
+        std::fs::remove_file(&tmp).ok();
+        return Err(SnapshotError::Io(e));
+    }
+    std::fs::rename(&tmp, path).map_err(SnapshotError::Io)?;
+    Ok(offset)
+}
+
+/// Read and verify every section of the snapshot at `path`: magic,
+/// version, section table, and each payload's CRC-32. Unknown tags are
+/// returned as-is (the forward-compatibility contract); interpreting
+/// payloads is the caller's job.
+pub fn read_sections(path: &Path) -> Result<Vec<RawSection>, SnapshotError> {
+    let buf = std::fs::read(path).map_err(SnapshotError::Io)?;
+    parse_sections(&buf)
+}
+
+/// [`read_sections`] over an in-memory buffer.
+pub fn parse_sections(buf: &[u8]) -> Result<Vec<RawSection>, SnapshotError> {
+    if buf.len() >= 8 && buf[..8] != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    if buf.len() < 16 {
+        return Err(SnapshotError::Truncated("header".into()));
+    }
+    let version = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
+    if version != FORMAT_VERSION {
+        return Err(SnapshotError::UnsupportedVersion {
+            found: version,
+            supported: FORMAT_VERSION,
+        });
+    }
+    let count = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]) as usize;
+    const ENTRY: usize = 28;
+    let table_end = match count.checked_mul(ENTRY).and_then(|t| t.checked_add(16)) {
+        Some(e) if e <= buf.len() => e,
+        _ => return Err(SnapshotError::Truncated("section table".into())),
+    };
+    let mut sections = Vec::with_capacity(count);
+    for i in 0..count {
+        let e = 16 + i * ENTRY;
+        let mut tag = [0u8; 8];
+        tag.copy_from_slice(&buf[e..e + 8]);
+        let offset = u64::from_le_bytes(buf[e + 8..e + 16].try_into().unwrap());
+        let len = u64::from_le_bytes(buf[e + 16..e + 24].try_into().unwrap());
+        let crc = u32::from_le_bytes(buf[e + 24..e + 28].try_into().unwrap());
+        let end = match offset.checked_add(len) {
+            Some(end) if end <= buf.len() as u64 && offset >= table_end as u64 => end,
+            _ => {
+                return Err(SnapshotError::Truncated(format!(
+                    "payload of section '{}'",
+                    tag_str(&tag)
+                )))
+            }
+        };
+        let bytes = buf[offset as usize..end as usize].to_vec();
+        if crc32(&bytes) != crc {
+            return Err(SnapshotError::ChecksumMismatch {
+                section: tag_str(&tag),
+            });
+        }
+        sections.push(RawSection { tag, bytes });
+    }
+    Ok(sections)
+}
+
+/// Snapshot metadata the index itself does not carry: where the data
+/// came from and the knobs it was built/should be served with. Stored
+/// in the META section as JSON (extensible without a format bump).
+#[derive(Clone, Debug, Default)]
+pub struct SnapshotMeta {
+    /// Dataset name (a `data::synth` generator name for synthetic runs,
+    /// or a free-form label for external data). Lets the search CLI
+    /// regenerate the matching query set from the snapshot alone.
+    pub dataset: String,
+    /// Generator/build seed.
+    pub seed: u64,
+    /// Generator scale factor (synthetic datasets).
+    pub scale: f64,
+    /// Construction threading the index was built with.
+    pub build: BuildParams,
+    /// Recommended serving parameters.
+    pub search_defaults: SearchParams,
+}
+
+fn meta_to_json(index: &LeanVecIndex, meta: &SnapshotMeta) -> Json {
+    let b = index.build_breakdown;
+    Json::obj(vec![
+        ("dataset", Json::str(&meta.dataset)),
+        // seed is a string: u64 seeds above 2^53 would lose precision
+        // as a JSON number
+        ("seed", Json::str(&meta.seed.to_string())),
+        ("scale", Json::num(meta.scale)),
+        ("build_threads", Json::num(meta.build.build_threads as f64)),
+        ("window", Json::num(meta.search_defaults.window as f64)),
+        (
+            "rerank_window",
+            Json::num(meta.search_defaults.rerank_window as f64),
+        ),
+        ("similarity", Json::str(index.sim.name())),
+        ("projection", Json::str(index.model.kind.name())),
+        ("primary", Json::str(index.primary_compression.name())),
+        ("secondary", Json::str(index.secondary_compression.name())),
+        ("n", Json::num(index.len() as f64)),
+        ("input_dim", Json::num(index.model.input_dim() as f64)),
+        ("target_dim", Json::num(index.model.target_dim() as f64)),
+        (
+            "build_breakdown",
+            Json::obj(vec![
+                ("train_seconds", Json::num(b.train_seconds)),
+                ("project_seconds", Json::num(b.project_seconds)),
+                ("quantize_seconds", Json::num(b.quantize_seconds)),
+                ("graph_seconds", Json::num(b.graph_seconds)),
+            ]),
+        ),
+    ])
+}
+
+fn meta_from_json(j: &Json) -> (SnapshotMeta, BuildBreakdown, Option<Similarity>) {
+    // lenient by design: META is the extensible section, so absent
+    // fields fall back to defaults instead of failing the load
+    let num = |key: &str, default: f64| j.get(key).and_then(|v| v.as_f64()).unwrap_or(default);
+    let meta = SnapshotMeta {
+        dataset: j
+            .get("dataset")
+            .and_then(|v| v.as_str())
+            .unwrap_or("")
+            .to_string(),
+        seed: j
+            .get("seed")
+            .and_then(|v| v.as_str())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0),
+        scale: num("scale", 0.0),
+        build: BuildParams {
+            build_threads: num("build_threads", 1.0) as usize,
+        },
+        search_defaults: SearchParams {
+            window: num("window", SearchParams::default().window as f64) as usize,
+            rerank_window: num(
+                "rerank_window",
+                SearchParams::default().rerank_window as f64,
+            ) as usize,
+        },
+    };
+    let bj = j.get("build_breakdown");
+    let bnum = |key: &str| {
+        bj.and_then(|b| b.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let breakdown = BuildBreakdown {
+        train_seconds: bnum("train_seconds"),
+        project_seconds: bnum("project_seconds"),
+        quantize_seconds: bnum("quantize_seconds"),
+        graph_seconds: bnum("graph_seconds"),
+    };
+    let sim = j
+        .get("similarity")
+        .and_then(|v| v.as_str())
+        .and_then(Similarity::parse);
+    (meta, breakdown, sim)
+}
+
+impl LeanVecIndex {
+    /// Write the whole index to `path` as a versioned snapshot (see the
+    /// [`crate::index::persist`] module docs for the format). Returns
+    /// bytes written.
+    ///
+    /// `meta` carries what the index does not: dataset provenance and
+    /// the recommended build/search knobs. Pass
+    /// [`SnapshotMeta::default()`] when there is nothing to record.
+    pub fn save(&self, path: &Path, meta: &SnapshotMeta) -> Result<u64, SnapshotError> {
+        let mut model = Vec::new();
+        self.model.write_bytes(&mut model);
+        let mut primary = Vec::new();
+        self.primary.write_bytes(&mut primary);
+        let mut secondary = Vec::new();
+        self.secondary.write_bytes(&mut secondary);
+        let mut graph = Vec::new();
+        self.graph.write_bytes(&mut graph);
+        let sections = [
+            RawSection {
+                tag: SECTION_META,
+                bytes: meta_to_json(self, meta).to_pretty().into_bytes(),
+            },
+            RawSection {
+                tag: SECTION_MODEL,
+                bytes: model,
+            },
+            RawSection {
+                tag: SECTION_PRIMARY,
+                bytes: primary,
+            },
+            RawSection {
+                tag: SECTION_SECONDARY,
+                bytes: secondary,
+            },
+            RawSection {
+                tag: SECTION_GRAPH,
+                bytes: graph,
+            },
+        ];
+        write_sections(path, &sections)
+    }
+
+    /// Load an index previously written by [`LeanVecIndex::save`].
+    ///
+    /// The loaded index serves queries **bit-identically** to the one
+    /// that was saved: identical neighbor ids, identical scores,
+    /// identical [`crate::index::leanvec_index::QueryStats`]. Fails
+    /// loudly — never panics — on a non-snapshot file, an unsupported
+    /// format version, truncation, checksum mismatch, or an internally
+    /// inconsistent payload.
+    pub fn load(path: &Path) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
+        let sections = read_sections(path)?;
+        let find = |tag: [u8; 8]| -> Result<&[u8], SnapshotError> {
+            sections
+                .iter()
+                .find(|s| s.tag == tag)
+                .map(|s| s.bytes.as_slice())
+                .ok_or_else(|| SnapshotError::MissingSection(tag_str(&tag)))
+        };
+
+        // META: JSON, parsed leniently (the extensible section)
+        let meta_bytes = find(SECTION_META)?;
+        let meta_text = std::str::from_utf8(meta_bytes)
+            .map_err(|_| SnapshotError::Corrupt("META is not UTF-8".into()))?;
+        let meta_json = Json::parse(meta_text)
+            .map_err(|e| SnapshotError::Corrupt(format!("META json: {e}")))?;
+        let (meta, breakdown, meta_sim) = meta_from_json(&meta_json);
+
+        // MODEL
+        let model = LeanVecModel::read_bytes(&mut bin::Cursor::new(find(SECTION_MODEL)?))?;
+
+        // stores: payloads are self-describing (leading compression code)
+        let primary_bytes = find(SECTION_PRIMARY)?;
+        let secondary_bytes = find(SECTION_SECONDARY)?;
+        let store_kind = |bytes: &[u8], which: &str| -> Result<Compression, SnapshotError> {
+            bytes
+                .first()
+                .copied()
+                .and_then(Compression::from_code)
+                .ok_or_else(|| SnapshotError::Corrupt(format!("{which} store kind byte")))
+        };
+        let primary_compression = store_kind(primary_bytes, "primary")?;
+        let secondary_compression = store_kind(secondary_bytes, "secondary")?;
+        let primary = read_store(&mut bin::Cursor::new(primary_bytes))?;
+        let secondary = read_store(&mut bin::Cursor::new(secondary_bytes))?;
+
+        // GRAPH
+        let graph = VamanaGraph::read_bytes(&mut bin::Cursor::new(find(SECTION_GRAPH)?))?;
+
+        // cross-section consistency: every section describes the same
+        // collection or the snapshot is rejected
+        let n = primary.len();
+        if secondary.len() != n || graph.adj.len_nodes() != n {
+            return Err(SnapshotError::Corrupt(format!(
+                "section sizes disagree: primary {n}, secondary {}, graph {}",
+                secondary.len(),
+                graph.adj.len_nodes()
+            )));
+        }
+        if model.target_dim() != primary.dim() || model.input_dim() != secondary.dim() {
+            return Err(SnapshotError::Corrupt(format!(
+                "model dims ({} -> {}) disagree with stores ({} primary, {} secondary)",
+                model.input_dim(),
+                model.target_dim(),
+                primary.dim(),
+                secondary.dim()
+            )));
+        }
+        if let Some(ms) = meta_sim {
+            if ms != graph.sim {
+                return Err(SnapshotError::Corrupt(
+                    "META similarity disagrees with graph section".into(),
+                ));
+            }
+        }
+
+        let sim = graph.sim;
+        Ok((
+            LeanVecIndex {
+                model,
+                primary,
+                secondary,
+                graph,
+                sim,
+                primary_compression,
+                secondary_compression,
+                build_breakdown: breakdown,
+            },
+            meta,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_sections_roundtrip_and_preserve_unknown_tags() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("leanvec-persist-raw-{}.snap", std::process::id()));
+        let sections = [
+            RawSection {
+                tag: SECTION_META,
+                bytes: b"{}".to_vec(),
+            },
+            RawSection {
+                tag: *b"FUTURE\0\0",
+                bytes: vec![1, 2, 3, 4, 5],
+            },
+        ];
+        write_sections(&path, &sections).unwrap();
+        let back = read_sections(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].tag, SECTION_META);
+        assert_eq!(back[1].tag, *b"FUTURE\0\0");
+        assert_eq!(back[1].bytes, vec![1, 2, 3, 4, 5]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parse_rejects_bad_magic_version_and_crc() {
+        let mut buf = Vec::new();
+        // build a valid one-section snapshot in memory
+        buf.extend_from_slice(&MAGIC);
+        bin::put_u32(&mut buf, FORMAT_VERSION);
+        bin::put_u32(&mut buf, 1);
+        let payload = b"hello".to_vec();
+        buf.extend_from_slice(&SECTION_META);
+        bin::put_u64(&mut buf, (16 + 28) as u64);
+        bin::put_u64(&mut buf, payload.len() as u64);
+        bin::put_u32(&mut buf, crc32(&payload));
+        buf.extend_from_slice(&payload);
+        assert!(parse_sections(&buf).is_ok());
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(matches!(parse_sections(&bad), Err(SnapshotError::BadMagic)));
+
+        let mut bad = buf.clone();
+        bad[8] = 99;
+        assert!(matches!(
+            parse_sections(&bad),
+            Err(SnapshotError::UnsupportedVersion { found: 99, .. })
+        ));
+
+        let mut bad = buf.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(matches!(
+            parse_sections(&bad),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+
+        for cut in [4usize, 12, 20, buf.len() - 1] {
+            assert!(parse_sections(&buf[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn tag_str_strips_padding() {
+        assert_eq!(tag_str(&SECTION_META), "META");
+        assert_eq!(tag_str(&SECTION_SECONDARY), "SECSTORE");
+    }
+}

@@ -77,6 +77,58 @@ impl LeanVecModel {
     }
 
     // ------------------------------------------------------------ persistence
+
+    /// Serialize the model (both projection matrices, bit-exact) as the
+    /// snapshot MODEL section. Byte layout: `docs/SNAPSHOT_FORMAT.md`.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        use crate::data::io::bin;
+        let mat = |out: &mut Vec<u8>, m: &Matrix| {
+            bin::put_u32(out, m.rows as u32);
+            bin::put_u32(out, m.cols as u32);
+            bin::put_f32s(out, &m.data);
+        };
+        bin::put_u8(out, self.kind.code());
+        bin::put_f64(out, self.train_loss);
+        mat(out, &self.a);
+        mat(out, &self.b);
+    }
+
+    /// Inverse of [`LeanVecModel::write_bytes`]. Unlike the JSON path
+    /// ([`LeanVecModel::from_json`]) this round-trips the matrices
+    /// bit-exactly, which the snapshot's bit-identical-search guarantee
+    /// relies on.
+    pub fn read_bytes(cur: &mut crate::data::io::bin::Cursor) -> std::io::Result<LeanVecModel> {
+        let bad = |what: &str| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("inconsistent model section: {what}"),
+            )
+        };
+        let kind = ProjectionKind::from_code(cur.get_u8()?)
+            .ok_or_else(|| bad("unknown projection kind"))?;
+        let train_loss = cur.get_f64()?;
+        let mat = |cur: &mut crate::data::io::bin::Cursor| -> std::io::Result<Matrix> {
+            let rows = cur.get_u32()? as usize;
+            let cols = cur.get_u32()? as usize;
+            let data = cur.get_f32s()?;
+            if data.len() != rows * cols {
+                return Err(bad("matrix shape disagrees with data length"));
+            }
+            Ok(Matrix::from_vec(rows, cols, data))
+        };
+        let a = mat(cur)?;
+        let b = mat(cur)?;
+        if a.rows != b.rows || a.cols != b.cols {
+            return Err(bad("A and B shapes differ"));
+        }
+        Ok(LeanVecModel {
+            a,
+            b,
+            kind,
+            train_loss,
+        })
+    }
+
     pub fn to_json(&self) -> Json {
         let mat = |m: &Matrix| {
             Json::obj(vec![
@@ -312,6 +364,31 @@ mod tests {
         let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
         assert_eq!(m.project_query(&v), v);
         assert_eq!(m.project_database_vector(&v), v);
+    }
+
+    #[test]
+    fn binary_roundtrip_bit_exact() {
+        let x = gaussian_rows(120, 10, 7);
+        let q = gaussian_rows(80, 10, 8);
+        let mut b = TrainBackends::default();
+        for kind in [ProjectionKind::Id, ProjectionKind::OodEigSearch] {
+            let m = train_projection(kind, &x, Some(&q), 4, &mut b, 0);
+            let mut buf = Vec::new();
+            m.write_bytes(&mut buf);
+            let mut cur = crate::data::io::bin::Cursor::new(&buf);
+            let m2 = LeanVecModel::read_bytes(&mut cur).expect("read back");
+            assert_eq!(cur.remaining(), 0);
+            assert_eq!(m2.kind, m.kind);
+            assert_eq!(m2.train_loss.to_bits(), m.train_loss.to_bits());
+            assert_eq!(m2.a, m.a, "{kind:?}");
+            assert_eq!(m2.b, m.b, "{kind:?}");
+        }
+        // truncation errors instead of panicking
+        let m = LeanVecModel::identity(6);
+        let mut buf = Vec::new();
+        m.write_bytes(&mut buf);
+        let mut cur = crate::data::io::bin::Cursor::new(&buf[..buf.len() - 3]);
+        assert!(LeanVecModel::read_bytes(&mut cur).is_err());
     }
 
     #[test]

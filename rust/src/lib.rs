@@ -15,6 +15,45 @@
 //! graph ([`graph`]), the compressed vector stores ([`quant`]), the
 //! search-and-rerank index ([`index`]), and the batching query engine
 //! ([`coordinator`]). Python never runs at serve time.
+//!
+//! Built indices round-trip to disk through the versioned snapshot
+//! layer ([`index::persist`]): `build` constructs and saves once,
+//! `serve`/`search` load and answer queries bit-identically — the
+//! build/serve split. `docs/ARCHITECTURE.md` maps the modules and data
+//! flows; `docs/SNAPSHOT_FORMAT.md` specifies the on-disk bytes.
+//!
+//! # Quickstart
+//!
+//! Build an index over toy vectors, snapshot it, and serve from the
+//! snapshot:
+//!
+//! ```
+//! use leanvec::config::{ProjectionKind, Similarity};
+//! use leanvec::index::{IndexBuilder, LeanVecIndex, SnapshotMeta};
+//!
+//! // 64 toy vectors in 8 dimensions
+//! let rows: Vec<Vec<f32>> = (0..64)
+//!     .map(|i| (0..8).map(|j| ((i * 31 + j * 7) as f32).sin()).collect())
+//!     .collect();
+//! let index = IndexBuilder::new()
+//!     .projection(ProjectionKind::Id) // PCA to 4 dims
+//!     .target_dim(4)
+//!     .build(&rows, None, Similarity::L2);
+//!
+//! // build/serve split: snapshot to disk, load it back, search
+//! let path = std::env::temp_dir().join(format!(
+//!     "leanvec-doctest-{}.leanvec",
+//!     std::process::id()
+//! ));
+//! index.save(&path, &SnapshotMeta::default()).unwrap();
+//! let (loaded, _meta) = LeanVecIndex::load(&path).unwrap();
+//! std::fs::remove_file(&path).ok();
+//!
+//! // the loaded index answers bit-identically to the built one
+//! let (ids, _scores) = loaded.search(&rows[0], 3, 20);
+//! assert_eq!(ids.len(), 3);
+//! assert_eq!(ids, index.search(&rows[0], 3, 20).0);
+//! ```
 
 pub mod config;
 pub mod coordinator;

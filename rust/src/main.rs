@@ -2,21 +2,28 @@
 //!
 //! Subcommands:
 //!   experiment <id>   regenerate a paper table/figure (or `all`)
-//!   build             build an index over a synthetic dataset, report timing
-//!   search            build + search, print QPS/recall
-//!   serve             run the batching engine on a synthetic workload
+//!   build             build an index, write it to a snapshot, report timing
+//!   search            search an index (from --index snapshot, or build ad hoc)
+//!   serve             run the batching engine (from --index snapshot, or build)
 //!   artifacts         verify the PJRT artifacts load + execute
+//!
+//! The build/serve split: `build` constructs the index once and
+//! snapshots it to disk (`--index PATH`, default `<dataset>.leanvec`);
+//! `search` and `serve` given `--index PATH` read the snapshot and
+//! answer queries without ever touching the training path.
 //!
 //! Common flags: --out DIR, --scale S, --seed N, --pjrt,
 //!               --dataset NAME, --dim d, --window W, --k K,
+//!               --index PATH (snapshot to write/read),
 //!               --threads T (build workers; 0 = all cores, 1 = serial)
 
-use leanvec::config::{Compression, ProjectionKind};
+use leanvec::config::{BuildParams, Compression, ProjectionKind};
 use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QueryProjectorKind};
 use leanvec::data::synth::{generate, paper_datasets, paper_target_dim};
 use leanvec::experiments::harness::ExpContext;
 use leanvec::index::builder::IndexBuilder;
-use leanvec::index::leanvec_index::SearchParams;
+use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
+use leanvec::index::persist::SnapshotMeta;
 use leanvec::util::cli::Args;
 use std::sync::Arc;
 
@@ -45,9 +52,10 @@ fn print_usage() {
          \n\
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
-         repro build --dataset rqa-768 --dim 160 --threads 0\n\
-         repro search --dataset wit-512 --projection ood-es --window 50\n\
-         repro serve --dataset rqa-768 --queries 2000 --workers 2\n\
+         repro build --dataset rqa-768 --dim 160 --threads 0 --index rqa-768.leanvec\n\
+         repro search --index rqa-768.leanvec --window 50\n\
+         repro serve --index rqa-768.leanvec --queries 2000 --workers 2\n\
+         repro search --dataset wit-512 --projection ood-es   (ad hoc, no snapshot)\n\
          repro artifacts"
     );
 }
@@ -113,6 +121,77 @@ fn build_index(
     Ok(builder.build(&ds.database, Some(&ds.learn_queries), ds.similarity))
 }
 
+/// Load a snapshot, printing what was loaded and how long it took.
+fn load_snapshot(path: &str) -> anyhow::Result<(LeanVecIndex, SnapshotMeta)> {
+    let t0 = std::time::Instant::now();
+    let (index, meta) = LeanVecIndex::load(std::path::Path::new(path))?;
+    println!(
+        "loaded snapshot {path}: {} vectors, {} -> {} dims, {}/{} stores, in {:.3}s",
+        index.len(),
+        index.model.input_dim(),
+        index.model.target_dim(),
+        index.primary_compression.name(),
+        index.secondary_compression.name(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok((index, meta))
+}
+
+/// Regenerate the dataset a snapshot was built from (provenance in the
+/// META section), falling back to CLI flags when the snapshot predates
+/// provenance or was built from external data. Validated against the
+/// loaded index so a provenance mismatch fails loudly instead of
+/// reporting recall against the wrong ground truth.
+fn dataset_for_snapshot(
+    args: &Args,
+    ctx: &ExpContext,
+    meta: &SnapshotMeta,
+    index: &LeanVecIndex,
+) -> anyhow::Result<leanvec::data::synth::Dataset> {
+    // explicit flags override provenance (the escape hatch the mismatch
+    // error below points at); provenance fills in whatever is absent
+    let name = match args.opt_str("dataset") {
+        Some(n) => n,
+        None if !meta.dataset.is_empty() => meta.dataset.clone(),
+        None => "rqa-768".to_string(),
+    };
+    let scale = if args.flags.contains_key("scale") || meta.scale <= 0.0 {
+        ctx.scale
+    } else {
+        meta.scale
+    };
+    let spec = paper_datasets(scale)
+        .into_iter()
+        .find(|s| s.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' in snapshot provenance"))?;
+    let ds = generate(&spec);
+    anyhow::ensure!(
+        ds.database.len() == index.len() && ds.dim == index.model.input_dim(),
+        "snapshot does not match dataset '{name}' at scale {scale} \
+         ({} x {} vs index {} x {}); pass the original --dataset/--scale flags",
+        ds.database.len(),
+        ds.dim,
+        index.len(),
+        index.model.input_dim()
+    );
+    Ok(ds)
+}
+
+/// Resolve [`SearchParams`]: an explicit `--window` overrides both
+/// knobs; otherwise snapshot-recommended defaults apply.
+fn search_params_from(args: &Args, defaults: SearchParams) -> SearchParams {
+    match args.flags.get("window") {
+        Some(_) => {
+            let w = args.usize("window", defaults.window);
+            SearchParams {
+                window: w,
+                rerank_window: w,
+            }
+        }
+        None => defaults,
+    }
+}
+
 fn cmd_build(args: &Args) -> anyhow::Result<()> {
     let ctx = ctx_from(args);
     let ds = dataset_from(args, &ctx)?;
@@ -139,15 +218,48 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
         index.primary_compression_vs_fp16(),
         index.graph.adj.avg_degree()
     );
+    // snapshot to disk: the serve-side commands start from this file
+    let path = args.str("index", &format!("{}.leanvec", ds.name));
+    let meta = SnapshotMeta {
+        dataset: ds.name.clone(),
+        seed: ctx.seed,
+        scale: ctx.scale,
+        build: BuildParams {
+            build_threads: args.usize("threads", 1),
+        },
+        search_defaults: SearchParams {
+            window: args.usize("window", 50),
+            rerank_window: args.usize("rerank-window", args.usize("window", 50)),
+        },
+    };
+    let t0 = std::time::Instant::now();
+    let bytes = index.save(std::path::Path::new(&path), &meta)?;
+    println!(
+        "snapshot {path}: {:.1} MiB written in {:.3}s",
+        bytes as f64 / (1024.0 * 1024.0),
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
 fn cmd_search(args: &Args) -> anyhow::Result<()> {
     let ctx = ctx_from(args);
-    let ds = dataset_from(args, &ctx)?;
     let k = args.usize("k", 10);
-    let window = args.usize("window", 50);
-    let index = build_index(args, &ctx, &ds)?;
+    let (index, ds, params) = match args.opt_str("index") {
+        // serve path: read the snapshot, never touch the training path
+        Some(path) => {
+            let (index, meta) = load_snapshot(&path)?;
+            let ds = dataset_for_snapshot(args, &ctx, &meta, &index)?;
+            let params = search_params_from(args, meta.search_defaults);
+            (index, ds, params)
+        }
+        // ad hoc path: build in-process (kept for experimentation)
+        None => {
+            let ds = dataset_from(args, &ctx)?;
+            let index = build_index(args, &ctx, &ds)?;
+            (index, ds, search_params_from(args, SearchParams::default()))
+        }
+    };
     let truth =
         leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
     let curve = leanvec::experiments::harness::qps_recall_curve(
@@ -155,22 +267,50 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
         &ds.test_queries,
         &truth,
         k,
-        &[window],
+        &[params.window],
     );
     let p = curve[0];
     println!(
         "{}: window {} -> recall@{k} {:.3}, {:.0} QPS, {:.0} bytes/query",
         ds.name, p.window, p.recall, p.qps, p.bytes_per_query
     );
+    // closed-loop parallel batch search over the same queries
+    let threads = args.usize("threads", 0);
+    let t0 = std::time::Instant::now();
+    let got: Vec<Vec<u32>> = index
+        .search_batch(&ds.test_queries, k, params, threads)
+        .into_iter()
+        .map(|(ids, _)| ids)
+        .collect();
+    let wall = t0.elapsed().as_secs_f64();
+    let recall = leanvec::data::gt::recall_at_k(&got, &truth, k);
+    println!(
+        "batch: {} queries in {:.3}s -> {:.0} QPS, recall@{k} {:.3}",
+        ds.test_queries.len(),
+        wall,
+        ds.test_queries.len() as f64 / wall.max(1e-9),
+        recall
+    );
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let ctx = ctx_from(args);
-    let ds = dataset_from(args, &ctx)?;
     let k = args.usize("k", 10);
     let n_queries = args.usize("queries", 2000);
-    let index = Arc::new(build_index(args, &ctx, &ds)?);
+    let (index, ds, default_params) = match args.opt_str("index") {
+        // serve path: snapshot in, engine up — no training code runs
+        Some(path) => {
+            let (index, meta) = load_snapshot(&path)?;
+            let ds = dataset_for_snapshot(args, &ctx, &meta, &index)?;
+            (Arc::new(index), ds, meta.search_defaults)
+        }
+        None => {
+            let ds = dataset_from(args, &ctx)?;
+            let index = Arc::new(build_index(args, &ctx, &ds)?);
+            (index, ds, SearchParams::default())
+        }
+    };
     let truth =
         leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
     // repeat test queries to reach the workload size
@@ -186,10 +326,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_batch: args.usize("batch", 64),
             max_wait: std::time::Duration::from_micros(args.usize("wait-us", 500) as u64),
         },
-        search: SearchParams {
-            window: args.usize("window", 50),
-            rerank_window: args.usize("window", 50),
-        },
+        search: search_params_from(args, default_params),
         projector: if ctx.use_pjrt {
             QueryProjectorKind::Pjrt(leanvec::runtime::default_artifacts_dir())
         } else {

@@ -21,8 +21,9 @@
 //! (the paper's LVQ4x8): traversal reads only the 4-bit codes; the
 //! residual level is used for decode/re-ranking.
 
-use super::{finish_score, PreparedQuery, ScoreStore};
-use crate::config::Similarity;
+use super::{corrupt, finish_score, PreparedQuery, ScoreStore};
+use crate::config::{Compression, Similarity};
+use crate::data::io::bin;
 use crate::linalg::matrix::dot;
 use crate::util::threadpool::parallel_chunked;
 
@@ -205,6 +206,63 @@ impl LvqStore {
             code_dot_u4(codes, q)
         }
     }
+
+    /// Serialize every field (shared by the one- and two-level wire
+    /// formats; the caller writes the compression code byte first).
+    fn write_fields(&self, out: &mut Vec<u8>) {
+        bin::put_u32(out, self.dim as u32);
+        bin::put_u8(out, self.bits);
+        bin::put_f32s(out, &self.mean);
+        bin::put_bytes(out, &self.codes);
+        bin::put_f32s(out, &self.delta);
+        bin::put_f32s(out, &self.lo);
+        bin::put_f32s(out, &self.norms_sq);
+    }
+
+    /// Inverse of [`LvqStore::write_fields`], with size cross-checks.
+    fn read_fields(cur: &mut bin::Cursor) -> std::io::Result<LvqStore> {
+        let dim = cur.get_u32()? as usize;
+        let bits = cur.get_u8()?;
+        if bits != 4 && bits != 8 {
+            return Err(corrupt("lvq store: bits not 4 or 8"));
+        }
+        let mean = cur.get_f32s()?;
+        let codes = cur.get_bytes()?;
+        let delta = cur.get_f32s()?;
+        let lo = cur.get_f32s()?;
+        let norms_sq = cur.get_f32s()?;
+        let stride = if bits == 8 { dim } else { dim.div_ceil(2) };
+        let n = delta.len();
+        if mean.len() != dim
+            || codes.len() != n * stride
+            || lo.len() != n
+            || norms_sq.len() != n
+        {
+            return Err(corrupt("lvq store: field length mismatch"));
+        }
+        Ok(LvqStore {
+            dim,
+            bits,
+            mean,
+            codes,
+            delta,
+            lo,
+            norms_sq,
+            bytes_per_vec: stride + 8,
+        })
+    }
+
+    /// Deserialize a one-level payload written by this store's
+    /// [`ScoreStore::write_bytes`] (after the compression code byte);
+    /// `kind` is that code, used to cross-check the stored bit width.
+    pub(crate) fn read_bytes(cur: &mut bin::Cursor, kind: Compression) -> std::io::Result<LvqStore> {
+        let store = Self::read_fields(cur)?;
+        let want_bits = if kind == Compression::Lvq8 { 8 } else { 4 };
+        if store.bits != want_bits {
+            return Err(corrupt("lvq store: bit width disagrees with compression code"));
+        }
+        Ok(store)
+    }
 }
 
 /// u8 code · f32 query with 4-way unrolling (autovectorizes to SIMD
@@ -292,6 +350,16 @@ impl ScoreStore for LvqStore {
         }
         out
     }
+
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        let kind = if self.bits == 8 {
+            Compression::Lvq8
+        } else {
+            Compression::Lvq4
+        };
+        bin::put_u8(out, kind.code());
+        self.write_fields(out);
+    }
 }
 
 /// Two-level LVQ4x8: 4-bit primary codes plus an 8-bit quantization of
@@ -365,6 +433,34 @@ impl Lvq4x8Store {
         }
     }
 
+    /// Deserialize a two-level payload written by this store's
+    /// [`ScoreStore::write_bytes`] (after the compression code byte).
+    pub(crate) fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<Lvq4x8Store> {
+        let first = LvqStore::read_fields(cur)?;
+        if first.bits != 4 {
+            return Err(corrupt("lvq4x8 store: first level is not 4-bit"));
+        }
+        let res_codes = cur.get_bytes()?;
+        let res_delta = cur.get_f32s()?;
+        let res_lo = cur.get_f32s()?;
+        let full_norms_sq = cur.get_f32s()?;
+        let (n, dim) = (first.len(), first.dim());
+        if res_codes.len() != n * dim
+            || res_delta.len() != n
+            || res_lo.len() != n
+            || full_norms_sq.len() != n
+        {
+            return Err(corrupt("lvq4x8 store: residual length mismatch"));
+        }
+        Ok(Lvq4x8Store {
+            first,
+            res_codes,
+            res_delta,
+            res_lo,
+            full_norms_sq,
+        })
+    }
+
     /// Score with both levels (re-ranking accuracy).
     pub fn score_full(&self, pq: &PreparedQuery, id: u32) -> f32 {
         let i = id as usize;
@@ -423,6 +519,15 @@ impl ScoreStore for Lvq4x8Store {
             *v += res[j] as f32 * self.res_delta[i] + self.res_lo[i];
         }
         out
+    }
+
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        bin::put_u8(out, Compression::Lvq4x8.code());
+        self.first.write_fields(out);
+        bin::put_bytes(out, &self.res_codes);
+        bin::put_f32s(out, &self.res_delta);
+        bin::put_f32s(out, &self.res_lo);
+        bin::put_f32s(out, &self.full_norms_sq);
     }
 }
 
@@ -628,6 +733,61 @@ mod tests {
         let pq = store.prepare(&q, Similarity::InnerProduct);
         for i in 0..40u32 {
             assert_eq!(store.score_rerank(&pq, i), store.score_full(&pq, i));
+        }
+    }
+
+    #[test]
+    fn write_read_roundtrip_bit_identical() {
+        let rs = rows(60, 33, 20); // odd dim exercises the nibble tail
+        let q: Vec<f32> = rows(1, 33, 21).pop().unwrap();
+        let stores: [Box<dyn ScoreStore>; 3] = [
+            Box::new(LvqStore::new(&rs, 4)),
+            Box::new(LvqStore::new(&rs, 8)),
+            Box::new(Lvq4x8Store::new(&rs)),
+        ];
+        for store in stores {
+            let mut buf = Vec::new();
+            store.write_bytes(&mut buf);
+            let mut cur = crate::data::io::bin::Cursor::new(&buf);
+            let back = crate::quant::read_store(&mut cur).unwrap();
+            assert_eq!(cur.remaining(), 0);
+            assert_eq!(back.len(), store.len());
+            assert_eq!(back.dim(), store.dim());
+            assert_eq!(back.bytes_per_vector(), store.bytes_per_vector());
+            assert_eq!(back.rerank_bytes_per_vector(), store.rerank_bytes_per_vector());
+            let (pa, pb) = (
+                store.prepare(&q, Similarity::InnerProduct),
+                back.prepare(&q, Similarity::InnerProduct),
+            );
+            for i in 0..store.len() as u32 {
+                assert_eq!(store.score(&pa, i).to_bits(), back.score(&pb, i).to_bits());
+                assert_eq!(
+                    store.score_rerank(&pa, i).to_bits(),
+                    back.score_rerank(&pb, i).to_bits()
+                );
+                assert_eq!(store.decode(i), back.decode(i));
+            }
+        }
+    }
+
+    #[test]
+    fn read_rejects_inconsistent_payload() {
+        let rs = rows(8, 16, 22);
+        let store = LvqStore::new(&rs, 8);
+        let mut buf = Vec::new();
+        store.write_bytes(&mut buf);
+        // truncation mid-payload -> UnexpectedEof, never a panic
+        for cut in [1usize, 6, buf.len() / 2, buf.len() - 1] {
+            let mut cur = crate::data::io::bin::Cursor::new(&buf[..cut]);
+            assert!(crate::quant::read_store(&mut cur).is_err(), "cut {cut}");
+        }
+        // wrong compression code vs stored bit width -> InvalidData
+        let mut wrong = buf.clone();
+        wrong[0] = Compression::Lvq4.code();
+        let mut cur = crate::data::io::bin::Cursor::new(&wrong);
+        match crate::quant::read_store(&mut cur) {
+            Err(err) => assert_eq!(err.kind(), std::io::ErrorKind::InvalidData),
+            Ok(_) => panic!("mismatched code byte must fail"),
         }
     }
 

@@ -13,7 +13,8 @@ pub mod stores;
 pub use lvq::{Lvq4x8Store, LvqStore};
 pub use stores::{F16Store, F32Store};
 
-use crate::config::Similarity;
+use crate::config::{Compression, Similarity};
+use crate::data::io::bin;
 
 /// A prepared query: everything precomputable once per search.
 #[derive(Clone, Debug)]
@@ -69,6 +70,41 @@ pub trait ScoreStore: Send + Sync {
         out.clear();
         out.extend(ids.iter().map(|&id| self.score(pq, id)));
     }
+
+    /// Serialize the store's complete state — codes *and* every derived
+    /// per-vector constant (scales, offsets, stored norms) — so a store
+    /// read back by [`read_store`] scores bit-identically to this one.
+    /// The payload is self-describing: it starts with the store's
+    /// [`Compression`] wire code. Byte layout: `docs/SNAPSHOT_FORMAT.md`.
+    fn write_bytes(&self, out: &mut Vec<u8>);
+}
+
+/// Deserialize a store previously written by [`ScoreStore::write_bytes`]
+/// (any variant; the leading [`Compression`] wire code selects the
+/// concrete type). Errors with `InvalidData` on an unknown code or
+/// internally inconsistent payload, `UnexpectedEof` on truncation.
+pub fn read_store(cur: &mut bin::Cursor) -> std::io::Result<Box<dyn ScoreStore>> {
+    let code = cur.get_u8()?;
+    let kind = Compression::from_code(code).ok_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("unknown store compression code {code}"),
+        )
+    })?;
+    match kind {
+        Compression::F32 => Ok(Box::new(F32Store::read_bytes(cur)?)),
+        Compression::F16 => Ok(Box::new(F16Store::read_bytes(cur)?)),
+        Compression::Lvq4 | Compression::Lvq8 => Ok(Box::new(LvqStore::read_bytes(cur, kind)?)),
+        Compression::Lvq4x8 => Ok(Box::new(Lvq4x8Store::read_bytes(cur)?)),
+    }
+}
+
+/// `InvalidData` error helper shared by the store deserializers.
+pub(crate) fn corrupt(what: &str) -> std::io::Error {
+    std::io::Error::new(
+        std::io::ErrorKind::InvalidData,
+        format!("inconsistent store payload: {what}"),
+    )
 }
 
 /// Shared plumbing: turn an inner product plus stored `||x||^2` into the

@@ -1,7 +1,8 @@
 //! Uncompressed (f32) and half-precision (f16) vector stores.
 
-use super::{finish_score, PreparedQuery, ScoreStore};
-use crate::config::Similarity;
+use super::{corrupt, finish_score, PreparedQuery, ScoreStore};
+use crate::config::{Compression, Similarity};
+use crate::data::io::bin;
 use crate::linalg::matrix::dot;
 use crate::util::f16;
 use crate::util::threadpool::parallel_chunked;
@@ -46,6 +47,22 @@ impl F32Store {
         let i = id as usize * self.dim;
         &self.data[i..i + self.dim]
     }
+
+    /// Deserialize a payload written by this store's
+    /// [`ScoreStore::write_bytes`] (after the compression code byte).
+    pub(crate) fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<F32Store> {
+        let dim = cur.get_u32()? as usize;
+        let data = cur.get_f32s()?;
+        let norms_sq = cur.get_f32s()?;
+        if data.len() != norms_sq.len() * dim {
+            return Err(corrupt("f32 store: data/norms length mismatch"));
+        }
+        Ok(F32Store {
+            dim,
+            data,
+            norms_sq,
+        })
+    }
 }
 
 impl ScoreStore for F32Store {
@@ -77,6 +94,13 @@ impl ScoreStore for F32Store {
 
     fn decode(&self, id: u32) -> Vec<f32> {
         self.vector(id).to_vec()
+    }
+
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        bin::put_u8(out, Compression::F32.code());
+        bin::put_u32(out, self.dim as u32);
+        bin::put_f32s(out, &self.data);
+        bin::put_f32s(out, &self.norms_sq);
     }
 }
 
@@ -130,6 +154,22 @@ impl F16Store {
         let i = id as usize * self.dim;
         &self.data[i..i + self.dim]
     }
+
+    /// Deserialize a payload written by this store's
+    /// [`ScoreStore::write_bytes`] (after the compression code byte).
+    pub(crate) fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<F16Store> {
+        let dim = cur.get_u32()? as usize;
+        let data = cur.get_u16s()?;
+        let norms_sq = cur.get_f32s()?;
+        if data.len() != norms_sq.len() * dim {
+            return Err(corrupt("f16 store: data/norms length mismatch"));
+        }
+        Ok(F16Store {
+            dim,
+            data,
+            norms_sq,
+        })
+    }
 }
 
 impl ScoreStore for F16Store {
@@ -177,6 +217,13 @@ impl ScoreStore for F16Store {
 
     fn decode(&self, id: u32) -> Vec<f32> {
         f16::decode_slice(self.codes(id))
+    }
+
+    fn write_bytes(&self, out: &mut Vec<u8>) {
+        bin::put_u8(out, Compression::F16.code());
+        bin::put_u32(out, self.dim as u32);
+        bin::put_u16s(out, &self.data);
+        bin::put_f32s(out, &self.norms_sq);
     }
 }
 
@@ -269,6 +316,34 @@ mod tests {
         let parallel = F16Store::from_rows_threads(&rs, 4);
         assert_eq!(serial.data, parallel.data);
         assert_eq!(serial.norms_sq, parallel.norms_sq);
+    }
+
+    #[test]
+    fn write_read_roundtrip_bit_identical() {
+        let rs = rows(40, 17, 10); // odd dim
+        let q: Vec<f32> = rows(1, 17, 11).pop().unwrap();
+        for store in [
+            Box::new(F32Store::from_rows(&rs)) as Box<dyn ScoreStore>,
+            Box::new(F16Store::from_rows(&rs)),
+        ] {
+            let mut buf = Vec::new();
+            store.write_bytes(&mut buf);
+            let mut cur = crate::data::io::bin::Cursor::new(&buf);
+            let back = crate::quant::read_store(&mut cur).unwrap();
+            assert_eq!(cur.remaining(), 0);
+            assert_eq!(back.len(), store.len());
+            assert_eq!(back.dim(), store.dim());
+            assert_eq!(back.bytes_per_vector(), store.bytes_per_vector());
+            let (pa, pb) = (
+                store.prepare(&q, Similarity::L2),
+                back.prepare(&q, Similarity::L2),
+            );
+            for i in 0..store.len() as u32 {
+                // bit-identical, not approximately equal
+                assert_eq!(store.score(&pa, i).to_bits(), back.score(&pb, i).to_bits());
+                assert_eq!(store.decode(i), back.decode(i));
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Snapshot persistence suite: build → save → load → search must be
+//! bit-identical to the in-memory index for every store kind, and every
+//! corruption mode (bad magic, version skew, truncation, bit rot,
+//! missing sections) must fail loudly without panicking.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::graph::beam::SearchCtx;
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
+use leanvec::index::persist::{self, RawSection, SnapshotError, SnapshotMeta};
+use leanvec::util::rng::Rng;
+use std::path::PathBuf;
+
+fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+        .collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("leanvec-persist-{}-{name}", std::process::id()))
+}
+
+fn build(
+    primary: Compression,
+    secondary: Compression,
+    sim: Similarity,
+    proj: ProjectionKind,
+    seed: u64,
+) -> LeanVecIndex {
+    let x = rows(250, 16, seed);
+    let q = rows(60, 16, seed + 1);
+    let mut gp = GraphParams::for_similarity(sim);
+    gp.max_degree = 16;
+    gp.build_window = 40;
+    let d = if proj == ProjectionKind::None { 0 } else { 6 };
+    IndexBuilder::new()
+        .projection(proj)
+        .target_dim(d)
+        .primary(primary)
+        .secondary(secondary)
+        .graph_params(gp)
+        .seed(77)
+        .build(&x, Some(&q), sim)
+}
+
+/// Assert that `loaded` answers exactly like `built`: ids, score bits,
+/// and the full `QueryStats` accounting, over `trials` fresh queries.
+fn assert_search_identical(built: &LeanVecIndex, loaded: &LeanVecIndex, trials: usize, seed: u64) {
+    assert_eq!(loaded.len(), built.len());
+    assert_eq!(loaded.sim, built.sim);
+    assert_eq!(loaded.primary_compression, built.primary_compression);
+    assert_eq!(loaded.secondary_compression, built.secondary_compression);
+    assert_eq!(loaded.graph.medoid, built.graph.medoid);
+    let mut rng = Rng::new(seed);
+    let mut ctx_a = SearchCtx::new(built.len());
+    let mut ctx_b = SearchCtx::new(loaded.len());
+    let params = SearchParams {
+        window: 30,
+        rerank_window: 30,
+    };
+    let dd = built.model.input_dim();
+    for _ in 0..trials {
+        let q: Vec<f32> = (0..dd).map(|_| rng.gaussian_f32()).collect();
+        let (ids_a, scores_a, stats_a) = built.search_with_ctx(&mut ctx_a, &q, 10, params);
+        let (ids_b, scores_b, stats_b) = loaded.search_with_ctx(&mut ctx_b, &q, 10, params);
+        assert_eq!(ids_a, ids_b);
+        let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&scores_a), bits(&scores_b), "scores not bit-identical");
+        assert_eq!(stats_a, stats_b, "QueryStats diverged");
+    }
+}
+
+#[test]
+fn round_trip_bit_identical_across_store_kinds() {
+    let arms: [(Compression, Compression, Similarity, ProjectionKind); 6] = [
+        (Compression::Lvq8, Compression::F16, Similarity::InnerProduct, ProjectionKind::Id),
+        (Compression::Lvq4, Compression::F16, Similarity::L2, ProjectionKind::Id),
+        (Compression::Lvq4x8, Compression::F16, Similarity::InnerProduct, ProjectionKind::OodEigSearch),
+        (Compression::F16, Compression::F32, Similarity::L2, ProjectionKind::Id),
+        (Compression::F32, Compression::Lvq4x8, Similarity::InnerProduct, ProjectionKind::Id),
+        // identity projection (d == D) and the cosine-normalization path
+        (Compression::Lvq8, Compression::F16, Similarity::Cosine, ProjectionKind::None),
+    ];
+    for (i, (p, s, sim, proj)) in arms.into_iter().enumerate() {
+        let built = build(p, s, sim, proj, 100 + i as u64);
+        let path = tmp(&format!("roundtrip-{i}.leanvec"));
+        let meta_in = SnapshotMeta {
+            dataset: "synthetic-test".into(),
+            seed: 0xFEED_FACE_CAFE_F00D,
+            scale: 0.25,
+            ..SnapshotMeta::default()
+        };
+        built.save(&path, &meta_in).expect("save");
+        let (loaded, meta_out) = LeanVecIndex::load(&path).expect("load");
+        assert_eq!(meta_out.dataset, "synthetic-test");
+        assert_eq!(meta_out.seed, 0xFEED_FACE_CAFE_F00D, "u64 seed survives");
+        assert_eq!(meta_out.scale, 0.25);
+        assert_search_identical(&built, &loaded, 15, 500 + i as u64);
+        // build provenance travels with the file
+        assert_eq!(
+            loaded.build_breakdown.graph_seconds.to_bits(),
+            built.build_breakdown.graph_seconds.to_bits()
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn snapshot_bytes_are_deterministic() {
+    let built = build(
+        Compression::Lvq8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        42,
+    );
+    let (pa, pb) = (tmp("det-a.leanvec"), tmp("det-b.leanvec"));
+    built.save(&pa, &SnapshotMeta::default()).unwrap();
+    built.save(&pb, &SnapshotMeta::default()).unwrap();
+    assert_eq!(std::fs::read(&pa).unwrap(), std::fs::read(&pb).unwrap());
+    // overwriting an existing snapshot is atomic-by-rename: re-saving
+    // succeeds and leaves no .tmp file behind
+    built.save(&pa, &SnapshotMeta::default()).unwrap();
+    let staging = PathBuf::from(format!("{}.tmp", pa.display()));
+    assert!(!staging.exists(), "temp staging file left behind");
+    std::fs::remove_file(&pa).ok();
+    std::fs::remove_file(&pb).ok();
+}
+
+fn saved_snapshot(name: &str) -> (PathBuf, Vec<u8>) {
+    let built = build(
+        Compression::Lvq4x8,
+        Compression::F16,
+        Similarity::L2,
+        ProjectionKind::Id,
+        7,
+    );
+    let path = tmp(name);
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    (path, bytes)
+}
+
+#[test]
+fn corrupted_magic_fails_loudly() {
+    let (path, mut bytes) = saved_snapshot("badmagic.leanvec");
+    bytes[0] = b'X';
+    std::fs::write(&path, &bytes).unwrap();
+    match LeanVecIndex::load(&path) {
+        Err(SnapshotError::BadMagic) => {}
+        Err(other) => panic!("expected BadMagic, got {other:?}"),
+        Ok(_) => panic!("corrupted magic must not load"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn version_mismatch_fails_loudly() {
+    let (path, mut bytes) = saved_snapshot("version.leanvec");
+    bytes[8] = 0xFE; // format version -> 0xFE: a future incompatible rev
+    std::fs::write(&path, &bytes).unwrap();
+    match LeanVecIndex::load(&path) {
+        Err(SnapshotError::UnsupportedVersion { found, supported }) => {
+            assert_eq!(found, 0xFE);
+            assert_eq!(supported, persist::FORMAT_VERSION);
+        }
+        Err(other) => panic!("expected UnsupportedVersion, got {other:?}"),
+        Ok(_) => panic!("future version must not load"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn truncated_file_fails_loudly_at_every_length() {
+    let (path, bytes) = saved_snapshot("trunc.leanvec");
+    // a spread of cuts: inside the header, the table, and each payload
+    let cuts = [
+        0,
+        7,
+        12,
+        15,
+        20,
+        100,
+        bytes.len() / 4,
+        bytes.len() / 2,
+        bytes.len() - 1,
+    ];
+    for cut in cuts {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = match LeanVecIndex::load(&path) {
+            Err(e) => e,
+            Ok(_) => panic!("cut at {cut} must fail"),
+        };
+        match err {
+            SnapshotError::Truncated(_)
+            | SnapshotError::BadMagic
+            | SnapshotError::ChecksumMismatch { .. } => {}
+            other => panic!("cut {cut}: unexpected error {other:?}"),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn payload_bit_rot_fails_checksum() {
+    let (path, bytes) = saved_snapshot("bitrot.leanvec");
+    // flip one byte in each quarter of the payload region
+    let start = bytes.len() / 4;
+    for pos in [start, bytes.len() / 2, bytes.len() - 2] {
+        let mut rotted = bytes.clone();
+        rotted[pos] ^= 0x5A;
+        std::fs::write(&path, &rotted).unwrap();
+        match LeanVecIndex::load(&path) {
+            Err(SnapshotError::ChecksumMismatch { section }) => {
+                assert!(!section.is_empty());
+            }
+            // a flip inside the section table corrupts offsets instead
+            Err(SnapshotError::Truncated(_)) => {}
+            Err(other) => panic!("pos {pos}: expected checksum failure, got {other:?}"),
+            Ok(_) => panic!("pos {pos}: bit rot must not load"),
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn unknown_sections_are_ignored_forward_compatibly() {
+    let built = build(
+        Compression::Lvq8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        13,
+    );
+    let path = tmp("fwdcompat.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    // a "newer writer" appends a section this reader does not know
+    let mut sections = persist::read_sections(&path).unwrap();
+    sections.push(RawSection {
+        tag: *b"SHARDMAP",
+        bytes: vec![0xAB; 64],
+    });
+    persist::write_sections(&path, &sections).unwrap();
+    let (loaded, _) = LeanVecIndex::load(&path).expect("unknown section must not break loading");
+    assert_search_identical(&built, &loaded, 10, 900);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn missing_required_section_fails_loudly() {
+    let built = build(
+        Compression::Lvq8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        14,
+    );
+    let path = tmp("missing.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    let sections: Vec<RawSection> = persist::read_sections(&path)
+        .unwrap()
+        .into_iter()
+        .filter(|s| s.tag != persist::SECTION_GRAPH)
+        .collect();
+    persist::write_sections(&path, &sections).unwrap();
+    match LeanVecIndex::load(&path) {
+        Err(SnapshotError::MissingSection(tag)) => assert_eq!(tag, "GRAPH"),
+        Err(other) => panic!("expected MissingSection, got {other:?}"),
+        Ok(_) => panic!("snapshot without GRAPH must not load"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn search_batch_identical_after_load() {
+    let built = build(
+        Compression::Lvq4x8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        15,
+    );
+    let path = tmp("batch.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    let (loaded, _) = LeanVecIndex::load(&path).unwrap();
+    let queries = rows(32, 16, 16);
+    let params = SearchParams {
+        window: 30,
+        rerank_window: 30,
+    };
+    for threads in [1usize, 4] {
+        let a = built.search_batch(&queries, 5, params, threads);
+        let b = loaded.search_batch(&queries, 5, params, threads);
+        assert_eq!(a, b, "threads {threads}");
+    }
+    std::fs::remove_file(&path).ok();
+}
