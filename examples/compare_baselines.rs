@@ -6,10 +6,37 @@
 
 use leanvec::config::{Compression, ProjectionKind, Similarity};
 use leanvec::data::gt::{ground_truth, recall_at_k};
-use leanvec::data::synth::{generate, SynthSpec};
+use leanvec::data::synth::{generate, Dataset, SynthSpec};
+use leanvec::graph::beam::SearchCtx;
 use leanvec::index::builder::{build_hnsw_baseline, IndexBuilder};
 use leanvec::index::ivfpq::{IvfPqIndex, IvfPqParams};
+use leanvec::index::query::{Query, VectorIndex};
 use std::time::Instant;
+
+/// One generic sweep serves every arm through the `VectorIndex` trait:
+/// for the graph indexes the `Query` window is the search buffer, for
+/// IVF-PQ it is `nprobe`.
+fn sweep<I: VectorIndex>(
+    name: &str,
+    index: &I,
+    windows: &[usize],
+    ds: &Dataset,
+    truth: &[Vec<u32>],
+    k: usize,
+) {
+    let mut ctx = SearchCtx::new(index.len());
+    for &w in windows {
+        let t0 = Instant::now();
+        let got: Vec<Vec<u32>> = ds
+            .test_queries
+            .iter()
+            .map(|q| index.search(&mut ctx, &Query::new(q).k(k).window(w)).ids)
+            .collect();
+        let qps = ds.test_queries.len() as f64 / t0.elapsed().as_secs_f64();
+        let r = recall_at_k(&got, truth, k);
+        println!("{name:<14} {w:>8} {r:>10.3} {qps:>8.0}");
+    }
+}
 
 fn main() {
     let ds = generate(&SynthSpec::ood("compare", 256, 8_000, 400));
@@ -41,30 +68,14 @@ fn main() {
         .build(&ds.database, None, ds.similarity);
 
     for (name, index) in [("svs-leanvec", &leanvec), ("svs-lvq", &lvq), ("vamana-f32", &vamana)] {
-        for &w in &windows {
-            let t0 = Instant::now();
-            let got: Vec<Vec<u32>> = ds
-                .test_queries
-                .iter()
-                .map(|q| index.search(q, k, w).0)
-                .collect();
-            let qps = ds.test_queries.len() as f64 / t0.elapsed().as_secs_f64();
-            let r = recall_at_k(&got, &truth, k);
-            println!("{name:<14} {w:>8} {r:>10.3} {qps:>8.0}");
-        }
+        sweep(name, index, &windows, &ds, &truth, k);
     }
 
-    // --- HNSW baseline
+    // --- HNSW baseline (window = ef)
     let hnsw = build_hnsw_baseline(&ds.database, Similarity::InnerProduct, Compression::F16, 5);
-    for &w in &windows {
-        let t0 = Instant::now();
-        let got: Vec<Vec<u32>> = ds.test_queries.iter().map(|q| hnsw.search(q, k, w)).collect();
-        let qps = ds.test_queries.len() as f64 / t0.elapsed().as_secs_f64();
-        let r = recall_at_k(&got, &truth, k);
-        println!("{:<14} {w:>8} {r:>10.3} {qps:>8.0}", "hnsw");
-    }
+    sweep("hnsw", &hnsw, &windows, &ds, &truth, k);
 
-    // --- IVF-PQ baseline (nprobe sweep)
+    // --- IVF-PQ baseline (window = nprobe)
     let ivf = IvfPqIndex::build(
         &ds.database,
         IvfPqParams {
@@ -76,17 +87,7 @@ fn main() {
         Similarity::InnerProduct,
         7,
     );
-    for nprobe in [1usize, 4, 8, 16, 32] {
-        let t0 = Instant::now();
-        let got: Vec<Vec<u32>> = ds
-            .test_queries
-            .iter()
-            .map(|q| ivf.search(q, k, nprobe).0)
-            .collect();
-        let qps = ds.test_queries.len() as f64 / t0.elapsed().as_secs_f64();
-        let r = recall_at_k(&got, &truth, k);
-        println!("{:<14} {nprobe:>8} {r:>10.3} {qps:>8.0}", "faiss-ivfpq");
-    }
+    sweep("faiss-ivfpq", &ivf, &[1usize, 4, 8, 16, 32], &ds, &truth, k);
 
     println!("\nExpected shape (paper Fig. 7): svs-leanvec dominates at high");
     println!("recall; svs-lvq second; graph methods beat IVF-PQ at high recall.");

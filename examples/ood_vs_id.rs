@@ -34,7 +34,7 @@ fn brute_recall(
                 .iter()
                 .map(|&id| (flat_f.score_one(q, id), id))
                 .collect();
-            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
             scored.into_iter().take(k).map(|(_, id)| id).collect()
         })
         .collect();

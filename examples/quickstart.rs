@@ -1,17 +1,29 @@
 //! Quickstart: build a LeanVec index over a synthetic OOD dataset,
-//! search it, and print recall — the 60-second tour of the public API.
+//! search it through the unified `Query` -> `VectorIndex` ->
+//! `SearchResult` API, and print recall — the 60-second tour.
 //!
 //! Run: `cargo run --release --example quickstart`
+//! Flags (CI smokes a tiny configuration): --n N --dim D --target-dim d
+//!        --queries Q --window W
 
 use leanvec::config::{Compression, ProjectionKind};
 use leanvec::data::gt::{ground_truth, recall_at_k};
 use leanvec::data::synth::{generate, SynthSpec};
 use leanvec::index::builder::IndexBuilder;
+use leanvec::index::query::{Query, VectorIndex};
+use leanvec::util::cli::Args;
 
 fn main() {
-    // 1. A synthetic cross-modal-style dataset: 5k database vectors in
-    //    256 dims, out-of-distribution queries (text-vs-image style).
-    let ds = generate(&SynthSpec::ood("quickstart", 256, 5_000, 200));
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let n = args.usize("n", 5_000);
+    let dim = args.usize("dim", 256);
+    let target_dim = args.usize("target-dim", (dim / 2).clamp(2, 96));
+    let n_queries = args.usize("queries", 200);
+    let window = args.usize("window", 60);
+
+    // 1. A synthetic cross-modal-style dataset with out-of-distribution
+    //    queries (text-vs-image style).
+    let ds = generate(&SynthSpec::ood("quickstart", dim, n, n_queries));
     println!(
         "dataset: {} vectors x {} dims, {} learn + {} test queries ({})",
         ds.database.len(),
@@ -21,11 +33,11 @@ fn main() {
         ds.similarity.name()
     );
 
-    // 2. Build: LeanVec-OOD projection 256 -> 96, LVQ8 primaries for
-    //    graph traversal, FP16 secondaries for re-ranking.
+    // 2. Build: LeanVec-OOD projection dim -> target_dim, LVQ8 primaries
+    //    for graph traversal, FP16 secondaries for re-ranking.
     let index = IndexBuilder::new()
         .projection(ProjectionKind::OodEigSearch)
-        .target_dim(96)
+        .target_dim(target_dim)
         .primary(Compression::Lvq8)
         .secondary(Compression::F16)
         .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
@@ -45,14 +57,42 @@ fn main() {
     let got: Vec<Vec<u32>> = ds
         .test_queries
         .iter()
-        .map(|q| index.search(q, k, 60).0)
+        .map(|q| index.search_one(&Query::new(q).k(k).window(window)).ids)
         .collect();
     let recall = recall_at_k(&got, &truth, k);
-    println!("recall@{k} = {recall:.3} at search window 60");
+    println!("recall@{k} = {recall:.3} at search window {window}");
     assert!(recall > 0.8, "quickstart recall unexpectedly low: {recall}");
 
-    // 4. One query end to end.
-    let (ids, scores) = index.search(&ds.test_queries[0], 5, 60);
-    println!("top-5 for query 0: {ids:?}");
-    println!("scores:           {scores:?}");
+    // 4. One query end to end: builder -> search -> SearchResult.
+    //    Split buffer: re-rank 3x the window without widening traversal.
+    let result = index.search_one(
+        &Query::new(&ds.test_queries[0])
+            .k(5)
+            .window(window)
+            .rerank_window(window * 3),
+    );
+    println!("top-5 for query 0: {:?}", result.ids);
+    println!("scores:           {:?}", result.scores);
+    println!(
+        "stats: scored {} | reranked {} | {} bytes | {} hops",
+        result.stats.primary_scored,
+        result.stats.reranked,
+        result.stats.bytes_touched,
+        result.stats.hops
+    );
+
+    // 5. Filtered search: only even ids may be returned; the predicate
+    //    is pushed into traversal, so excluded ids are never re-ranked.
+    let even_only = |id: u32| id % 2 == 0;
+    let filtered = index.search_one(
+        &Query::new(&ds.test_queries[0])
+            .k(5)
+            .window(window)
+            .filter(&even_only),
+    );
+    assert!(filtered.ids.iter().all(|id| id % 2 == 0));
+    println!(
+        "filtered top-5 (even ids only): {:?} ({} candidates filtered out)",
+        filtered.ids, filtered.stats.filtered
+    );
 }

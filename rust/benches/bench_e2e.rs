@@ -13,6 +13,7 @@ use leanvec::experiments::harness::{qps_at_recall, qps_recall_curve};
 use leanvec::index::builder::IndexBuilder;
 use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
 use leanvec::index::persist::SnapshotMeta;
+use leanvec::index::query::{Query, VectorIndex};
 use leanvec::util::json::Json;
 use std::sync::Arc;
 
@@ -57,10 +58,11 @@ fn bench_build_trajectory(
             serial_total = b.total();
             serial_parallel_phases = parallel_phases;
         }
+        let reqs: Vec<Query> = ds.test_queries.iter().map(|q| Query::new(q).k(k)).collect();
         let got: Vec<Vec<u32>> = index
-            .search_batch(&ds.test_queries, k, SearchParams::default(), threads)
+            .search_batch(&reqs, threads)
             .into_iter()
-            .map(|(ids, _)| ids)
+            .map(|r| r.ids)
             .collect();
         let recall = recall_at_k(&got, truth, k);
         let speedup_total = if b.total() > 0.0 { serial_total / b.total() } else { 0.0 };

@@ -5,7 +5,7 @@ use leanvec::config::{Compression, GraphParams, ProjectionKind};
 use leanvec::data::synth::{generate, SynthSpec};
 use leanvec::graph::beam::SearchCtx;
 use leanvec::index::builder::IndexBuilder;
-use leanvec::index::leanvec_index::SearchParams;
+use leanvec::index::query::{Query, VectorIndex};
 use leanvec::util::rng::Rng;
 use leanvec::util::stats::bench;
 use std::time::Duration;
@@ -38,13 +38,11 @@ fn main() {
         let mut ctx = SearchCtx::new(index.len());
         let mut rng = Rng::new(5);
         for window in [20usize, 50, 100] {
-            let params = SearchParams {
-                window,
-                rerank_window: window,
-            };
             let r = bench(&format!("search/{name}/w{window}"), budget, || {
                 let q = &ds.test_queries[rng.below(ds.test_queries.len())];
-                std::hint::black_box(index.search_with_ctx(&mut ctx, q, 10, params));
+                std::hint::black_box(
+                    index.search(&mut ctx, &Query::new(q).k(10).window(window)),
+                );
             });
             println!("{r}");
         }

@@ -1,5 +1,14 @@
 //! Dynamic batching policy: collect requests until the batch is full or
 //! the oldest request has waited long enough.
+//!
+//! Batches are deliberately **spec-heterogeneous**: the only operation
+//! performed at batch granularity is the query projection (one matmul),
+//! which does not depend on any per-request knob, so requests with
+//! different `QuerySpec`s (k, window/rerank overrides, allow-list
+//! filters) batch together freely — grouping by spec would only shrink
+//! batches and hurt the amortization. Per-request knobs are honored
+//! downstream, where they matter: each worker resolves its item's spec
+//! against the engine defaults before searching.
 
 use super::protocol::Request;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};

@@ -3,8 +3,9 @@
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Metrics, ServeReport};
-use super::protocol::{Request, Response};
+use super::protocol::{QuerySpec, Request, Response};
 use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
+use crate::index::query::Query;
 use crate::graph::beam::SearchCtx;
 use crate::leanvec::model::rows_to_matrix;
 use crate::linalg::Matrix;
@@ -124,13 +125,34 @@ impl Engine {
                                 Ok(i) => i,
                                 Err(_) => break,
                             };
-                            let (ids, scores, _) = windex.search_projected(
-                                &mut ctx,
-                                &item.q_proj,
-                                &item.req.query,
-                                item.req.k,
-                                search,
-                            );
+                            // per-request spec wins over the engine-wide
+                            // defaults; the allow-list becomes a filter
+                            // predicate pushed into traversal
+                            let result = {
+                                let spec = &item.req.spec;
+                                let params = resolve_spec(spec, search);
+                                let base = Query::new(&item.req.query)
+                                    .k(spec.k)
+                                    .window(params.window)
+                                    .rerank_window(params.rerank_window);
+                                match spec.allow.as_ref() {
+                                    // the set was built once at spec
+                                    // construction; here it is only read
+                                    Some(allow) => {
+                                        let pred = |id: u32| allow.contains(&id);
+                                        windex.search_prepared(
+                                            &mut ctx,
+                                            &item.q_proj,
+                                            &base.filter(&pred),
+                                        )
+                                    }
+                                    None => windex.search_prepared(
+                                        &mut ctx,
+                                        &item.q_proj,
+                                        &base,
+                                    ),
+                                }
+                            };
                             let latency_s = item
                                 .req
                                 .submitted
@@ -138,8 +160,9 @@ impl Engine {
                                 .unwrap_or(0.0);
                             let _ = wtx.send(Response {
                                 id: item.req.id,
-                                ids,
-                                scores,
+                                ids: result.ids,
+                                scores: result.scores,
+                                stats: result.stats,
                                 latency_s,
                                 batch_size: item.batch_size,
                             });
@@ -159,10 +182,17 @@ impl Engine {
         }
     }
 
-    /// Submit one query; returns its request id.
+    /// Submit one query with engine-default knobs; returns its request
+    /// id.
     pub fn submit(&self, query: Vec<f32>, k: usize) -> u64 {
+        self.submit_spec(query, QuerySpec::top_k(k))
+    }
+
+    /// Submit one query with per-request knobs (window / rerank-window
+    /// overrides, allow-list filter); returns its request id.
+    pub fn submit_spec(&self, query: Vec<f32>, spec: QuerySpec) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = Request::new(id, query, k);
+        let mut req = Request::with_spec(id, query, spec);
         req.submitted = Some(Instant::now());
         self.req_tx
             .as_ref()
@@ -206,7 +236,7 @@ impl Engine {
     /// out across `workers` threads with pooled contexts, the same
     /// chunking discipline as the parallel index builder. Returns
     /// `(ids, scores)` per query, in query order, identical to serial
-    /// `search_projected` calls for every worker count.
+    /// per-query trait searches for every worker count.
     pub fn run_batch_direct(
         index: &LeanVecIndex,
         queries: &[Vec<f32>],
@@ -221,9 +251,12 @@ impl Engine {
         let qm = rows_to_matrix(queries);
         let proj: Matrix = qm.matmul_nt(&index.model.a);
         index.batch_fan_out(queries.len(), workers, |ctx, i| {
-            let (ids, scores, _) =
-                index.search_projected(ctx, proj.row(i), &queries[i], k, params);
-            (ids, scores)
+            let query = Query::new(&queries[i])
+                .k(k)
+                .window(params.window)
+                .rerank_window(params.rerank_window);
+            let r = index.search_prepared(ctx, proj.row(i), &query);
+            (r.ids, r.scores)
         })
     }
 
@@ -255,6 +288,18 @@ impl Engine {
             },
         };
         (responses, report)
+    }
+}
+
+/// Resolve a request's [`QuerySpec`] against the engine-wide defaults
+/// via the one shared rule ([`crate::index::query::resolve_params`]).
+/// The results are clamped to >= 1 so a malformed spec degrades
+/// instead of panicking the worker.
+fn resolve_spec(spec: &QuerySpec, defaults: SearchParams) -> SearchParams {
+    let p = crate::index::query::resolve_params(spec.window, spec.rerank_window, defaults);
+    SearchParams {
+        window: p.window.max(1),
+        rerank_window: p.rerank_window.max(1),
     }
 }
 
@@ -313,6 +358,7 @@ mod tests {
     use super::*;
     use crate::config::{GraphParams, ProjectionKind, Similarity};
     use crate::index::builder::IndexBuilder;
+    use crate::index::query::VectorIndex;
     use crate::util::rng::Rng;
 
     fn build_index_sim(n: usize, dd: usize, d: usize, sim: Similarity) -> Arc<LeanVecIndex> {
@@ -449,9 +495,10 @@ mod tests {
         responses.sort_by_key(|r| r.id);
         engine.shutdown();
         for (r, q) in responses.iter().zip(queries.iter()) {
-            let (ids, scores) = index.search(q, 5, SearchParams::default().window);
-            assert_eq!(r.ids, ids);
-            assert_eq!(r.scores, scores);
+            let direct = index.search_one(&Query::new(q).k(5));
+            assert_eq!(r.ids, direct.ids);
+            assert_eq!(r.scores, direct.scores);
+            assert_eq!(r.stats, direct.stats, "served stats match direct stats");
         }
         std::fs::remove_file(&path).ok();
     }
@@ -461,7 +508,7 @@ mod tests {
         let index = build_index(250, 16, 8);
         let mut rng = Rng::new(11);
         let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
-        let direct = index.search(&q, 5, SearchParams::default().window);
+        let direct = index.search_one(&Query::new(&q).k(5));
         let (responses, _) = Engine::run_workload(
             Arc::clone(&index),
             EngineConfig {
@@ -472,6 +519,42 @@ mod tests {
             5,
             None,
         );
-        assert_eq!(responses[0].ids, direct.0);
+        assert_eq!(responses[0].ids, direct.ids);
+    }
+
+    #[test]
+    fn per_request_spec_overrides_engine_defaults() {
+        let index = build_index(400, 16, 8);
+        // deliberately tiny engine-wide window so the override is visible
+        let engine = Engine::start(
+            Arc::clone(&index),
+            EngineConfig {
+                workers: 1,
+                search: SearchParams {
+                    window: 5,
+                    rerank_window: 5,
+                },
+                ..EngineConfig::default()
+            },
+        );
+        let mut rng = Rng::new(23);
+        let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        engine.submit(q.clone(), 5); // engine defaults
+        engine.submit_spec(
+            q.clone(),
+            QuerySpec::top_k(5).with_window(80).with_rerank_window(120),
+        );
+        let mut responses = engine.drain(2);
+        responses.sort_by_key(|r| r.id);
+        engine.shutdown();
+        // the overridden request must match a direct search at its own
+        // params, not the engine-wide ones
+        let wide = index.search_one(&Query::new(&q).k(5).window(80).rerank_window(120));
+        assert_eq!(responses[1].ids, wide.ids);
+        assert_eq!(responses[1].stats, wide.stats);
+        let narrow = index.search_one(&Query::new(&q).k(5).window(5));
+        assert_eq!(responses[0].ids, narrow.ids);
+        // wider window scores strictly more vectors
+        assert!(responses[1].stats.primary_scored > responses[0].stats.primary_scored);
     }
 }

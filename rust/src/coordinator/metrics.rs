@@ -96,6 +96,7 @@ mod tests {
             id,
             scores: vec![0.0; ids.len()],
             ids,
+            stats: crate::index::query::QueryStats::default(),
             latency_s: lat,
             batch_size: batch,
         }

@@ -27,4 +27,4 @@ pub mod protocol;
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, QueryProjectorKind};
 pub use metrics::{Metrics, ServeReport};
-pub use protocol::{Request, Response};
+pub use protocol::{QuerySpec, Request, Response};

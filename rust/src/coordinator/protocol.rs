@@ -1,23 +1,85 @@
 //! Request/response types for the serving engine.
 
+use crate::index::query::QueryStats;
+use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Per-request search knobs: what a client may override on top of the
+/// engine-wide [`SearchParams`] defaults. Owned (no borrows) so it can
+/// travel through channels to the worker pool.
+///
+/// [`SearchParams`]: crate::index::leanvec_index::SearchParams
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct QuerySpec {
+    /// results to return
+    pub k: usize,
+    /// greedy-search window override (engine default when `None`)
+    pub window: Option<usize>,
+    /// re-rank buffer override; may exceed `window` (split buffer)
+    pub rerank_window: Option<usize>,
+    /// allow-list filter: when set, only these ids may be returned
+    /// (the worker reads it as a predicate pushed into traversal).
+    /// `Arc` so a tenant's (possibly large) allow-set is hashed once —
+    /// at spec construction — and shared across every request and
+    /// worker that uses it, never rebuilt per query.
+    pub allow: Option<Arc<HashSet<u32>>>,
+}
+
+impl QuerySpec {
+    /// A plain top-k spec with engine-default knobs.
+    pub fn top_k(k: usize) -> QuerySpec {
+        QuerySpec {
+            k,
+            ..QuerySpec::default()
+        }
+    }
+
+    pub fn with_window(mut self, window: usize) -> QuerySpec {
+        self.window = Some(window);
+        self
+    }
+
+    pub fn with_rerank_window(mut self, rerank_window: usize) -> QuerySpec {
+        self.rerank_window = Some(rerank_window);
+        self
+    }
+
+    /// Restrict results to `ids` (allow-list filtered search). Builds
+    /// the lookup set once; reuse the spec (or
+    /// [`QuerySpec::with_allow_set`]) to share it across requests.
+    pub fn with_allow_list(self, ids: Vec<u32>) -> QuerySpec {
+        self.with_allow_set(Arc::new(ids.into_iter().collect()))
+    }
+
+    /// Restrict results to a pre-built shared allow-set.
+    pub fn with_allow_set(mut self, ids: Arc<HashSet<u32>>) -> QuerySpec {
+        self.allow = Some(ids);
+        self
+    }
+}
 
 /// One similarity-search request.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub query: Vec<f32>,
-    pub k: usize,
+    /// per-request knobs (k + overrides + optional filter)
+    pub spec: QuerySpec,
     /// submission timestamp (set by `Engine::submit`)
     pub submitted: Option<Instant>,
 }
 
 impl Request {
     pub fn new(id: u64, query: Vec<f32>, k: usize) -> Request {
+        Request::with_spec(id, query, QuerySpec::top_k(k))
+    }
+
+    pub fn with_spec(id: u64, query: Vec<f32>, spec: QuerySpec) -> Request {
         Request {
             id,
             query,
-            k,
+            spec,
             submitted: None,
         }
     }
@@ -29,6 +91,9 @@ pub struct Response {
     pub id: u64,
     pub ids: Vec<u32>,
     pub scores: Vec<f32>,
+    /// per-query traffic accounting (observability: bytes touched,
+    /// hops, filtered count — mirrors what direct search returns)
+    pub stats: QueryStats,
     /// end-to-end latency (submit -> response ready), seconds
     pub latency_s: f64,
     /// batch this request was served in (observability)
@@ -43,7 +108,22 @@ mod tests {
     fn request_roundtrip_fields() {
         let r = Request::new(7, vec![1.0, 2.0], 10);
         assert_eq!(r.id, 7);
-        assert_eq!(r.k, 10);
+        assert_eq!(r.spec.k, 10);
+        assert_eq!(r.spec.window, None);
         assert!(r.submitted.is_none());
+    }
+
+    #[test]
+    fn spec_builder_accumulates() {
+        let s = QuerySpec::top_k(5)
+            .with_window(40)
+            .with_rerank_window(120)
+            .with_allow_list(vec![1, 2, 3]);
+        assert_eq!(s.k, 5);
+        assert_eq!(s.window, Some(40));
+        assert_eq!(s.rerank_window, Some(120), "split buffer travels");
+        let allow = s.allow.unwrap();
+        assert_eq!(allow.len(), 3);
+        assert!(allow.contains(&2) && !allow.contains(&4));
     }
 }

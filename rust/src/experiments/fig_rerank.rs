@@ -112,7 +112,7 @@ fn rerank_exact(flat: &FlatIndex, q: &[f32], ids: &[u32], k: usize) -> Vec<u32> 
         .iter()
         .map(|&id| (flat.score_one(q, id), id))
         .collect();
-    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0));
     scored.truncate(k);
     scored.into_iter().map(|(_, id)| id).collect()
 }

@@ -11,7 +11,6 @@ use crate::index::builder::build_hnsw_baseline;
 use crate::index::ivfpq::{IvfPqIndex, IvfPqParams};
 use crate::index::leanvec_index::make_store;
 use crate::util::json::Json;
-use std::time::Instant;
 
 const K: usize = 10;
 const TARGET_RECALL: f64 = 0.9;
@@ -222,32 +221,20 @@ pub fn fig7(ctx: &ExpContext) -> anyhow::Result<()> {
         ];
         let mut curves = curves_for_arms(&ds, &arms, &truth);
 
-        // HNSW baseline
+        // HNSW baseline — same sweep through the VectorIndex trait
+        // (window = ef for the HNSW arm)
         let graph_sim = if ds.similarity == Similarity::Cosine {
             Similarity::InnerProduct
         } else {
             ds.similarity
         };
         let hnsw = build_hnsw_baseline(&ds.database, graph_sim, Compression::F16, ctx.seed);
-        let mut hnsw_curve = Vec::new();
-        for &w in &windows {
-            let t0 = Instant::now();
-            let got: Vec<Vec<u32>> = ds
-                .test_queries
-                .iter()
-                .map(|q| hnsw.search(q, K, w))
-                .collect();
-            let wall = t0.elapsed().as_secs_f64();
-            hnsw_curve.push(super::harness::CurvePoint {
-                window: w,
-                recall: crate::data::gt::recall_at_k(&got, &truth, K),
-                qps: ds.test_queries.len() as f64 / wall,
-                bytes_per_query: 0.0,
-            });
-        }
-        curves.push(("hnsw".to_string(), hnsw_curve));
+        curves.push((
+            "hnsw".to_string(),
+            qps_recall_curve(&hnsw, &ds.test_queries, &truth, K, &windows),
+        ));
 
-        // IVF-PQ baseline (nprobe sweep instead of window sweep)
+        // IVF-PQ baseline (window = nprobe through the trait)
         if ds.dim % 8 == 0 {
             let ivf = IvfPqIndex::build(
                 &ds.database,
@@ -260,23 +247,11 @@ pub fn fig7(ctx: &ExpContext) -> anyhow::Result<()> {
                 graph_sim,
                 ctx.seed,
             );
-            let mut curve = Vec::new();
-            for nprobe in [1usize, 2, 4, 8, 16, 32, 64] {
-                let t0 = Instant::now();
-                let got: Vec<Vec<u32>> = ds
-                    .test_queries
-                    .iter()
-                    .map(|q| ivf.search(q, K, nprobe).0)
-                    .collect();
-                let wall = t0.elapsed().as_secs_f64();
-                curve.push(super::harness::CurvePoint {
-                    window: nprobe,
-                    recall: crate::data::gt::recall_at_k(&got, &truth, K),
-                    qps: ds.test_queries.len() as f64 / wall,
-                    bytes_per_query: ivf.bytes_per_vector() as f64,
-                });
-            }
-            curves.push(("faiss-ivfpq".to_string(), curve));
+            let nprobes = [1usize, 2, 4, 8, 16, 32, 64];
+            curves.push((
+                "faiss-ivfpq".to_string(),
+                qps_recall_curve(&ivf, &ds.test_queries, &truth, K, &nprobes),
+            ));
         }
         report_curves(ctx, "fig7", name, &curves, vec![])?;
     }

@@ -7,6 +7,7 @@ use crate::data::synth::{generate, Dataset, SynthSpec};
 use crate::graph::beam::SearchCtx;
 use crate::index::builder::IndexBuilder;
 use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
+use crate::index::query::{Query, VectorIndex};
 use crate::util::json::Json;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -124,38 +125,67 @@ pub struct CurvePoint {
     pub bytes_per_query: f64,
 }
 
+/// Measure one point — recall, single-thread QPS, bytes/query — at
+/// explicit [`SearchParams`] (so a split-buffer `rerank_window` larger
+/// than the traversal window is measurable). The single copy of the
+/// measurement loop behind [`qps_recall_curve`] and the CLI's
+/// point report.
+pub fn qps_recall_point<I: VectorIndex>(
+    index: &I,
+    queries: &[Vec<f32>],
+    truth: &[Vec<u32>],
+    k: usize,
+    params: SearchParams,
+) -> CurvePoint {
+    let mut ctx = SearchCtx::new(index.len());
+    let mut got: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
+    let mut bytes = 0usize;
+    let t0 = Instant::now();
+    for q in queries {
+        let r = index.search(
+            &mut ctx,
+            &Query::new(q)
+                .k(k)
+                .window(params.window)
+                .rerank_window(params.rerank_window),
+        );
+        bytes += r.stats.bytes_touched;
+        got.push(r.ids);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    CurvePoint {
+        window: params.window,
+        recall: recall_at_k(&got, truth, k),
+        qps: queries.len() as f64 / wall.max(1e-12),
+        bytes_per_query: bytes as f64 / queries.len().max(1) as f64,
+    }
+}
+
 /// Sweep the search window, measuring recall and single-thread QPS.
-pub fn qps_recall_curve(
-    index: &LeanVecIndex,
+/// Generic over [`VectorIndex`], so one sweep serves every arm — for
+/// IVF-PQ the "window" is its `nprobe`, for HNSW its `ef`.
+pub fn qps_recall_curve<I: VectorIndex>(
+    index: &I,
     queries: &[Vec<f32>],
     truth: &[Vec<u32>],
     k: usize,
     windows: &[usize],
 ) -> Vec<CurvePoint> {
-    let mut ctx = SearchCtx::new(index.len());
-    let mut out = Vec::with_capacity(windows.len());
-    for &w in windows {
-        let params = SearchParams {
-            window: w,
-            rerank_window: w.max(k),
-        };
-        let mut got: Vec<Vec<u32>> = Vec::with_capacity(queries.len());
-        let mut bytes = 0usize;
-        let t0 = Instant::now();
-        for q in queries {
-            let (ids, _, stats) = index.search_with_ctx(&mut ctx, q, k, params);
-            bytes += stats.bytes_touched;
-            got.push(ids);
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        out.push(CurvePoint {
-            window: w,
-            recall: recall_at_k(&got, truth, k),
-            qps: queries.len() as f64 / wall,
-            bytes_per_query: bytes as f64 / queries.len() as f64,
-        });
-    }
-    out
+    windows
+        .iter()
+        .map(|&w| {
+            qps_recall_point(
+                index,
+                queries,
+                truth,
+                k,
+                SearchParams {
+                    window: w,
+                    rerank_window: w,
+                },
+            )
+        })
+        .collect()
 }
 
 /// The paper's headline metric: QPS at the first window reaching the

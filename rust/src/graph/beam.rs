@@ -17,8 +17,13 @@ pub struct Candidate {
 
 /// Reusable search state.
 pub struct SearchCtx {
-    /// sorted by score descending; capacity = window
+    /// sorted by score descending; capacity = the traversal capacity
+    /// (window, or the larger split-buffer retention size)
     buffer: Vec<Candidate>,
+    /// filtered-search result buffer: passing candidates only, sorted
+    /// by score descending (the navigation `buffer` keeps every node so
+    /// traversal can route *through* filtered-out ids)
+    passing: Vec<Candidate>,
     /// epoch-stamped visited marks, one per node
     visited: Vec<u32>,
     epoch: u32,
@@ -31,12 +36,15 @@ pub struct SearchCtx {
 pub struct SearchStats {
     pub hops: usize,
     pub scored: usize,
+    /// nodes encountered but excluded by the query's filter predicate
+    pub filtered: usize,
 }
 
 impl SearchCtx {
     pub fn new(n: usize) -> SearchCtx {
         SearchCtx {
             buffer: Vec::new(),
+            passing: Vec::new(),
             visited: vec![0; n],
             epoch: 0,
             stats: SearchStats::default(),
@@ -58,6 +66,7 @@ impl SearchCtx {
             self.epoch = 1;
         }
         self.buffer.clear();
+        self.passing.clear();
         self.stats = SearchStats::default();
     }
 
@@ -72,34 +81,58 @@ impl SearchCtx {
         }
     }
 
-    /// Insert into the sorted buffer, keeping at most `window` entries.
-    /// Returns true if inserted.
+    /// Insert into the sorted navigation buffer, keeping at most `cap`
+    /// entries. Returns true if inserted.
     #[inline]
-    fn insert(&mut self, c: Candidate, window: usize) -> bool {
-        // find insertion point (descending by score)
-        let pos = self
-            .buffer
-            .partition_point(|e| e.score >= c.score);
-        if pos >= window {
-            return false;
-        }
-        if self.buffer.len() == window {
-            self.buffer.pop();
-        }
-        self.buffer.insert(pos, c);
-        true
+    fn insert(&mut self, c: Candidate, cap: usize) -> bool {
+        bounded_insert(&mut self.buffer, c, cap)
     }
 
-    /// index of the best unexpanded candidate
+    /// Insert into the passing-results buffer (filtered search only),
+    /// keeping at most `cap` entries.
     #[inline]
-    fn next_unexpanded(&self) -> Option<usize> {
-        self.buffer.iter().position(|c| !c.expanded)
+    fn insert_passing(&mut self, c: Candidate, cap: usize) {
+        bounded_insert(&mut self.passing, c, cap);
+    }
+
+    /// Index of the best unexpanded candidate within the first
+    /// `window` buffer slots. Split-buffer semantics: candidates past
+    /// the window are retained (for re-ranking) but never expanded.
+    #[inline]
+    fn next_unexpanded(&self, window: usize) -> Option<usize> {
+        self.buffer
+            .iter()
+            .take(window)
+            .position(|c| !c.expanded)
     }
 
     /// The final candidates, best first.
     pub fn results(&self) -> &[Candidate] {
         &self.buffer
     }
+
+    /// The final *passing* candidates of a filtered search, best first.
+    pub fn passing_results(&self) -> &[Candidate] {
+        &self.passing
+    }
+}
+
+/// Bounded sorted insert, descending by score: the one copy of the
+/// ordering/capacity invariant shared by the navigation and
+/// passing-results buffers (so filtered and unfiltered ordering can
+/// never drift apart). Returns true if inserted.
+#[inline]
+fn bounded_insert(buf: &mut Vec<Candidate>, c: Candidate, cap: usize) -> bool {
+    // find insertion point (descending by score)
+    let pos = buf.partition_point(|e| e.score >= c.score);
+    if pos >= cap {
+        return false;
+    }
+    if buf.len() == cap {
+        buf.pop();
+    }
+    buf.insert(pos, c);
+    true
 }
 
 /// A pool of reusable [`SearchCtx`] for parallel sections (the parallel
@@ -138,11 +171,42 @@ impl CtxPool {
 /// fetching them with `neighbors_fn`.
 ///
 /// `window` is the search-buffer width L; the returned slice holds up to
-/// `window` candidates, best first.
+/// `window` candidates, best first. Equivalent to
+/// [`greedy_search_ext`] with `capacity == window` and no filter.
 pub fn greedy_search<'a, S, N>(
     ctx: &'a mut SearchCtx,
     entries: &[u32],
     window: usize,
+    score_fn: S,
+    neighbors_fn: N,
+) -> &'a [Candidate]
+where
+    S: FnMut(u32) -> f32,
+    N: FnMut(u32, &mut Vec<u32>),
+{
+    greedy_search_ext(ctx, entries, window, window, None, score_fn, neighbors_fn)
+}
+
+/// [`greedy_search`] with the split-buffer and filtered-search
+/// extensions the [`Query`] API exposes:
+///
+/// * `capacity >= window` — how many candidates to *retain* (the
+///   re-rank buffer). Only the best `window` drive expansion, so
+///   traversal cost is unchanged; the extra slots merely keep more
+///   unexpanded candidates for downstream re-ranking.
+/// * `filter` — when present, every scored node still enters the
+///   navigation buffer (traversal routes through filtered-out ids),
+///   but the returned slice holds only *passing* candidates, collected
+///   into a separate buffer of size `capacity`.
+///   `ctx.stats.filtered` counts the excluded nodes.
+///
+/// [`Query`]: crate::index::query::Query
+pub fn greedy_search_ext<'a, S, N>(
+    ctx: &'a mut SearchCtx,
+    entries: &[u32],
+    window: usize,
+    capacity: usize,
+    filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
     mut score_fn: S,
     mut neighbors_fn: N,
 ) -> &'a [Candidate]
@@ -151,42 +215,52 @@ where
     N: FnMut(u32, &mut Vec<u32>),
 {
     ctx.begin();
+    let capacity = capacity.max(window);
+    // Without a filter the single buffer both navigates and retains
+    // (capacity slots, expansion over the window prefix). With a
+    // filter, navigation stays window-bounded — identical traversal to
+    // the unfiltered case — and passing results accumulate separately.
+    let nav_cap = if filter.is_some() { window } else { capacity };
     let mut nbuf: Vec<u32> = Vec::with_capacity(64);
-    for &e in entries {
-        if ctx.mark_visited(e) {
-            let s = score_fn(e);
-            ctx.stats.scored += 1;
-            ctx.insert(
-                Candidate {
-                    id: e,
+    macro_rules! visit {
+        ($id:expr) => {{
+            let id = $id;
+            if ctx.mark_visited(id) {
+                let s = score_fn(id);
+                ctx.stats.scored += 1;
+                let c = Candidate {
+                    id,
                     score: s,
                     expanded: false,
-                },
-                window,
-            );
-        }
+                };
+                if let Some(f) = filter {
+                    if f(id) {
+                        ctx.insert_passing(c, capacity);
+                    } else {
+                        ctx.stats.filtered += 1;
+                    }
+                }
+                ctx.insert(c, nav_cap);
+            }
+        }};
     }
-    while let Some(pos) = ctx.next_unexpanded() {
+    for &e in entries {
+        visit!(e);
+    }
+    while let Some(pos) = ctx.next_unexpanded(window) {
         ctx.buffer[pos].expanded = true;
         let node = ctx.buffer[pos].id;
         ctx.stats.hops += 1;
         neighbors_fn(node, &mut nbuf);
         for &nb in nbuf.iter() {
-            if ctx.mark_visited(nb) {
-                let s = score_fn(nb);
-                ctx.stats.scored += 1;
-                ctx.insert(
-                    Candidate {
-                        id: nb,
-                        score: s,
-                        expanded: false,
-                    },
-                    window,
-                );
-            }
+            visit!(nb);
         }
     }
-    ctx.results()
+    if filter.is_some() {
+        ctx.passing_results()
+    } else {
+        ctx.results()
+    }
 }
 
 #[cfg(test)]
@@ -345,6 +419,63 @@ mod tests {
             },
         );
         assert_eq!(res[0].id, 7);
+    }
+
+    #[test]
+    fn filtered_search_returns_only_passing_but_navigates_through() {
+        let (adj, scores) = path_graph();
+        let mut ctx = SearchCtx::new(10);
+        // filter out the odd nodes — including parts of the only path
+        // from 0 to the score peak at 7
+        let even = |id: u32| id % 2 == 0;
+        let res = greedy_search_ext(
+            &mut ctx,
+            &[0],
+            10,
+            10,
+            Some(&even),
+            |id| scores[id as usize],
+            |id, out| {
+                out.clear();
+                out.extend_from_slice(&adj[id as usize]);
+            },
+        );
+        assert!(res.iter().all(|c| c.id % 2 == 0), "{res:?}");
+        // traversal routed through odd nodes to reach the peak region:
+        // best passing node is 6 or 8 (score -1), neighbors of peak 7
+        assert_eq!(scores[res[0].id as usize], -1.0, "{res:?}");
+        assert_eq!(ctx.stats.filtered, 5, "all five odd nodes counted");
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn split_buffer_retains_beyond_window_without_extra_expansion() {
+        let (adj, scores) = path_graph();
+        let run = |capacity: usize| {
+            let mut ctx = SearchCtx::new(10);
+            let n = greedy_search_ext(
+                &mut ctx,
+                &[0],
+                3,
+                capacity,
+                None,
+                |id| scores[id as usize],
+                |id, out| {
+                    out.clear();
+                    out.extend_from_slice(&adj[id as usize]);
+                },
+            )
+            .len();
+            (n, ctx.stats.hops, ctx.stats.scored)
+        };
+        let (n_narrow, hops_narrow, scored_narrow) = run(3);
+        let (n_wide, hops_wide, scored_wide) = run(8);
+        assert!(n_wide > n_narrow, "capacity retained nothing extra");
+        // identical traversal: the split buffer widens retention only
+        assert_eq!(hops_wide, hops_narrow);
+        assert_eq!(scored_wide, scored_narrow);
     }
 
     #[test]

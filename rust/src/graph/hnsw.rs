@@ -4,7 +4,7 @@
 //! layers and beam search at layer 0.
 
 use crate::config::Similarity;
-use crate::graph::beam::{greedy_search, SearchCtx};
+use crate::graph::beam::{greedy_search, greedy_search_ext, SearchCtx};
 use crate::quant::ScoreStore;
 use crate::util::rng::Rng;
 
@@ -198,15 +198,32 @@ impl HnswGraph {
         pq: &crate::quant::PreparedQuery,
         ef: usize,
     ) -> &'c [crate::graph::beam::Candidate] {
+        self.search_filtered(ctx, store, pq, ef, None)
+    }
+
+    /// [`HnswGraph::search`] with a filter predicate pushed into the
+    /// layer-0 beam: the upper-layer descent (pure navigation) ignores
+    /// the filter, while layer 0 routes through filtered-out nodes but
+    /// returns only passing candidates.
+    pub fn search_filtered<'c>(
+        &self,
+        ctx: &'c mut SearchCtx,
+        store: &dyn ScoreStore,
+        pq: &crate::quant::PreparedQuery,
+        ef: usize,
+        filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
+    ) -> &'c [crate::graph::beam::Candidate] {
         ctx.ensure(store.len());
         let mut ep = self.entry;
         for l in (1..self.layers.len()).rev() {
             ep = Self::greedy_layer(store, &self.layers[l], pq, ep);
         }
-        greedy_search(
+        greedy_search_ext(
             ctx,
             &[ep],
             ef,
+            ef,
+            filter,
             |id| store.score(pq, id),
             |id, out| {
                 out.clear();

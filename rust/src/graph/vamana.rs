@@ -9,7 +9,7 @@
 
 use crate::config::{GraphParams, Similarity};
 use crate::data::io::bin;
-use crate::graph::beam::{greedy_search, CtxPool, SearchCtx};
+use crate::graph::beam::{greedy_search, greedy_search_ext, CtxPool, SearchCtx};
 use crate::linalg::matrix::l2_sq;
 use crate::quant::ScoreStore;
 use crate::util::threadpool::{parallel_map, resolve_threads};
@@ -186,7 +186,9 @@ impl VamanaGraph {
     }
 
     /// Beam search for a prepared query over `store`. Returns candidates
-    /// best-first (up to `window`).
+    /// best-first (up to `window`). Equivalent to
+    /// [`VamanaGraph::search_filtered`] with `capacity == window` and no
+    /// filter.
     pub fn search<'c>(
         &self,
         ctx: &'c mut SearchCtx,
@@ -194,11 +196,30 @@ impl VamanaGraph {
         pq: &crate::quant::PreparedQuery,
         window: usize,
     ) -> &'c [crate::graph::beam::Candidate] {
+        self.search_filtered(ctx, store, pq, window, window, None)
+    }
+
+    /// [`VamanaGraph::search`] with the split-buffer and filter
+    /// extensions: retain up to `capacity >= window` candidates for
+    /// re-ranking, and — when `filter` is set — navigate through
+    /// filtered-out nodes while returning only passing candidates (see
+    /// [`crate::graph::beam::greedy_search_ext`]).
+    pub fn search_filtered<'c>(
+        &self,
+        ctx: &'c mut SearchCtx,
+        store: &dyn ScoreStore,
+        pq: &crate::quant::PreparedQuery,
+        window: usize,
+        capacity: usize,
+        filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
+    ) -> &'c [crate::graph::beam::Candidate] {
         ctx.ensure(self.adj.len_nodes());
-        greedy_search(
+        greedy_search_ext(
             ctx,
             &[self.medoid],
             window,
+            capacity,
+            filter,
             |id| store.score(pq, id),
             |id, out| {
                 out.clear();

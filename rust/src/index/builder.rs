@@ -2,11 +2,13 @@
 //! experiment harness.
 
 use crate::config::{BuildParams, Compression, GraphParams, ProjectionKind, Similarity};
+use crate::graph::beam::SearchCtx;
 use crate::graph::hnsw::{HnswGraph, HnswParams};
 use crate::graph::vamana::VamanaBuilder;
 use crate::index::flat::FlatIndex;
 use crate::index::ivfpq::IvfPqIndex;
 use crate::index::leanvec_index::{make_store, make_store_threads, BuildBreakdown, LeanVecIndex};
+use crate::index::query::{Query, SearchResult, VectorIndex};
 use crate::leanvec::model::{train_projection, LeanVecModel, TrainBackends};
 use crate::linalg::matrix::normalize;
 use crate::linalg::Matrix;
@@ -235,38 +237,84 @@ impl IndexBuilder {
 }
 
 /// Unified index for the experiment harness (Fig. 7/8 comparisons).
+/// Every arm answers through the [`VectorIndex`] trait, so the harness
+/// sweeps one API: for the IVF-PQ arm the stored `nprobe` fills in when
+/// a query leaves `window` unset, and the HNSW arm reads `window` as
+/// `ef`.
 pub enum SearchIndex {
     LeanVec(LeanVecIndex),
     Flat(FlatIndex),
-    IvfPq(IvfPqIndex, usize), // (index, nprobe)
+    IvfPq(IvfPqIndex, usize), // (index, default nprobe)
     Hnsw(HnswGraph, Box<dyn crate::quant::ScoreStore>),
 }
 
 impl SearchIndex {
-    /// Search with a per-call context (harness convenience).
-    pub fn search(&self, q: &[f32], k: usize, window: usize) -> Vec<u32> {
-        match self {
-            SearchIndex::LeanVec(ix) => ix.search(q, k, window).0,
-            SearchIndex::Flat(ix) => ix.search(q, k).0,
-            SearchIndex::IvfPq(ix, nprobe) => ix.search(q, k, window.max(*nprobe)).0,
-            SearchIndex::Hnsw(g, store) => {
-                let mut ctx = crate::graph::beam::SearchCtx::new(store.len());
-                let pq = store.prepare(q, g.sim);
-                g.search(&mut ctx, store.as_ref(), &pq, window)
-                    .iter()
-                    .take(k)
-                    .map(|c| c.id)
-                    .collect()
-            }
-        }
-    }
-
     pub fn name(&self) -> &'static str {
         match self {
             SearchIndex::LeanVec(_) => "leanvec",
             SearchIndex::Flat(_) => "flat",
             SearchIndex::IvfPq(_, _) => "ivfpq",
             SearchIndex::Hnsw(_, _) => "hnsw",
+        }
+    }
+}
+
+impl VectorIndex for SearchIndex {
+    fn search(&self, ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        match self {
+            SearchIndex::LeanVec(ix) => ix.search(ctx, query),
+            SearchIndex::Flat(ix) => VectorIndex::search(ix, ctx, query),
+            SearchIndex::IvfPq(ix, nprobe) => {
+                VectorIndex::search(ix, ctx, &query.with_default_window(*nprobe))
+            }
+            SearchIndex::Hnsw(g, store) => {
+                let ef = query
+                    .effective(crate::index::leanvec_index::SearchParams::default())
+                    .window;
+                let pq = store.prepare(query.vector(), g.sim);
+                let cands = g.search_filtered(ctx, store.as_ref(), &pq, ef, query.filter_fn());
+                let take = query.top_k().min(cands.len());
+                let ids: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
+                let scores: Vec<f32> = cands[..take].iter().map(|c| c.score).collect();
+                SearchResult {
+                    ids,
+                    scores,
+                    stats: crate::index::query::QueryStats {
+                        primary_scored: ctx.stats.scored,
+                        reranked: 0,
+                        bytes_touched: ctx.stats.scored * store.bytes_per_vector(),
+                        hops: ctx.stats.hops,
+                        filtered: ctx.stats.filtered,
+                    },
+                }
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            SearchIndex::LeanVec(ix) => ix.len(),
+            SearchIndex::Flat(ix) => ix.len(),
+            SearchIndex::IvfPq(ix, _) => ix.len(),
+            SearchIndex::Hnsw(_, store) => store.len(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        match self {
+            SearchIndex::LeanVec(ix) => VectorIndex::dim(ix),
+            SearchIndex::Flat(ix) => VectorIndex::dim(ix),
+            SearchIndex::IvfPq(ix, _) => VectorIndex::dim(ix),
+            SearchIndex::Hnsw(_, store) => store.dim(),
+        }
+    }
+
+    fn sim(&self) -> Similarity {
+        match self {
+            SearchIndex::LeanVec(ix) => VectorIndex::sim(ix),
+            SearchIndex::Flat(ix) => VectorIndex::sim(ix),
+            SearchIndex::IvfPq(ix, _) => VectorIndex::sim(ix),
+            SearchIndex::Hnsw(g, _) => g.sim,
         }
     }
 }
@@ -310,7 +358,7 @@ mod tests {
                 .target_dim(if kind == ProjectionKind::None { 0 } else { 8 })
                 .build(&x, Some(&q), Similarity::InnerProduct);
             assert_eq!(ix.len(), 250, "{kind:?}");
-            let (ids, _) = ix.search(&q[0], 5, 20);
+            let ids = ix.search_one(&Query::new(&q[0]).k(5).window(20)).ids;
             assert_eq!(ids.len(), 5);
         }
     }
@@ -351,7 +399,7 @@ mod tests {
             (0..40u32)
                 .filter(|&i| {
                     let q = ix.secondary.decode(i);
-                    ix.search(&q, 1, 20).0.first() == Some(&i)
+                    ix.search_one(&Query::new(&q).k(1).window(20)).ids.first() == Some(&i)
                 })
                 .count()
         };
@@ -419,8 +467,11 @@ mod tests {
             SearchIndex::IvfPq(ivf, 4),
             hnsw,
         ] {
-            let ids = ix.search(&x[0], 5, 20);
-            assert_eq!(ids.len(), 5, "{}", ix.name());
+            let r = ix.search_one(&Query::new(&x[0]).k(5).window(20));
+            assert_eq!(r.ids.len(), 5, "{}", ix.name());
+            assert_eq!(r.ids.len(), r.scores.len(), "{}", ix.name());
+            assert_eq!(ix.len(), 300, "{}", ix.name());
+            assert_eq!(VectorIndex::dim(&ix), 16, "{}", ix.name());
         }
     }
 }

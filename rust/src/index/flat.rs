@@ -1,7 +1,12 @@
 //! Flat (exhaustive) index — the accuracy oracle, the ground-truth
-//! generator, and the brute-force baseline in Fig. 11.
+//! generator, and the brute-force baseline in Fig. 11. Speaks the
+//! unified [`VectorIndex`] API (including filtered search, which makes
+//! it the exact oracle for filtered queries too); the tuple-returning
+//! [`FlatIndex::search`] shorthand stays for ground-truth call sites.
 
 use crate::config::Similarity;
+use crate::graph::beam::SearchCtx;
+use crate::index::query::{Query, QueryStats, SearchResult, VectorIndex};
 use crate::quant::{F32Store, ScoreStore};
 
 pub struct FlatIndex {
@@ -31,19 +36,41 @@ impl FlatIndex {
         self.store.score(&pq, id)
     }
 
-    /// Exact top-k by full scan. Returns (ids, scores) best-first.
+    /// Exact top-k by full scan — oracle shorthand for
+    /// `VectorIndex::search`. Returns (ids, scores) best-first.
     pub fn search(&self, q: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
-        let pq = self.store.prepare(q, self.sim);
+        let r = VectorIndex::search(self, &mut SearchCtx::new(0), &Query::new(q).k(k));
+        (r.ids, r.scores)
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    /// Exact top-k by full scan; `window`/`rerank_window` are
+    /// irrelevant and ignored. Filtered-out ids are skipped before
+    /// scoring, so the result is the exact filtered oracle.
+    fn search(&self, _ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        let pq = self.store.prepare(query.vector(), self.sim);
         let n = self.store.len();
-        let k = k.min(n);
+        let k = query.top_k().min(n);
+        let filter = query.filter_fn();
+        let mut filtered = 0usize;
+        let mut scored = 0usize;
         // bounded selection: keep a sorted top-k vector (k is small)
         let mut top: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
         for id in 0..n as u32 {
+            if let Some(f) = filter {
+                if !f(id) {
+                    filtered += 1;
+                    continue;
+                }
+            }
             let s = self.store.score(&pq, id);
+            scored += 1;
             if top.len() < k {
                 top.push((s, id));
-                top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-            } else if s > top[k - 1].0 {
+                // total_cmp: a NaN score must never panic mid-serve
+                top.sort_by(|a, b| b.0.total_cmp(&a.0));
+            } else if k > 0 && s > top[k - 1].0 {
                 top[k - 1] = (s, id);
                 let mut i = k - 1;
                 while i > 0 && top[i].0 > top[i - 1].0 {
@@ -52,10 +79,29 @@ impl FlatIndex {
                 }
             }
         }
-        (
-            top.iter().map(|&(_, id)| id).collect(),
-            top.iter().map(|&(s, _)| s).collect(),
-        )
+        SearchResult {
+            ids: top.iter().map(|&(_, id)| id).collect(),
+            scores: top.iter().map(|&(s, _)| s).collect(),
+            stats: QueryStats {
+                primary_scored: scored,
+                reranked: 0,
+                bytes_touched: scored * self.store.bytes_per_vector(),
+                hops: 0,
+                filtered,
+            },
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.store.dim()
+    }
+
+    fn sim(&self) -> Similarity {
+        self.sim
     }
 }
 

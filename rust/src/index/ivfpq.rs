@@ -7,8 +7,14 @@
 //! and poor for random access — Fig. 7 reproduces that comparison.
 
 use crate::config::Similarity;
+use crate::graph::beam::SearchCtx;
+use crate::index::query::{Query, QueryStats, SearchResult, VectorIndex};
 use crate::linalg::matrix::{dot, l2_sq};
 use crate::util::rng::Rng;
+
+/// `nprobe` used when a [`Query`] does not set one (via
+/// [`Query::window`], which IVF-PQ reads as the probe count).
+pub const DEFAULT_NPROBE: usize = 32;
 
 #[derive(Clone, Copy, Debug)]
 pub struct IvfPqParams {
@@ -202,11 +208,45 @@ impl IvfPqIndex {
         }
     }
 
-    /// ADC search probing `nprobe` coarse lists. Returns (ids, scores)
-    /// best-first with "bigger is better" scores.
+    /// ADC search probing `nprobe` coarse lists — shorthand for the
+    /// [`VectorIndex`] trait call with `window == nprobe`. Returns
+    /// (ids, scores) best-first with "bigger is better" scores.
     pub fn search(&self, q: &[f32], k: usize, nprobe: usize) -> (Vec<u32>, Vec<f32>) {
+        let r = VectorIndex::search(
+            self,
+            &mut SearchCtx::new(0),
+            &Query::new(q).k(k).window(nprobe.max(1)),
+        );
+        (r.ids, r.scores)
+    }
+
+    pub fn len(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.assign.is_empty()
+    }
+
+    /// bytes touched per scanned vector (PQ codes only)
+    pub fn bytes_per_vector(&self) -> usize {
+        self.params.m
+    }
+}
+
+impl VectorIndex for IvfPqIndex {
+    /// ADC search; [`Query::window`] is read as `nprobe` (defaulting to
+    /// [`DEFAULT_NPROBE`], clamped to `nlist`). Filtered-out ids are
+    /// skipped before the LUT gather, never scored, never returned.
+    fn search(&self, _ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        let q = query.vector();
         assert_eq!(q.len(), self.dim);
-        let nprobe = nprobe.max(1).min(self.coarse.len());
+        let k = query.top_k();
+        let nprobe = query
+            .window_override()
+            .unwrap_or(DEFAULT_NPROBE)
+            .clamp(1, self.coarse.len());
+        let filter = query.filter_fn();
         // rank coarse cells
         let mut cells: Vec<(f32, usize)> = self
             .coarse
@@ -220,12 +260,14 @@ impl IvfPqIndex {
                 (s, c)
             })
             .collect();
-        cells.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        cells.sort_by(|a, b| b.0.total_cmp(&a.0));
 
         let m = self.params.m;
         let ksub = self.params.ksub;
         let mut top: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
         let mut lut = vec![0.0f32; m * ksub];
+        let mut filtered = 0usize;
+        let mut scored = 0usize;
         for &(_, cell) in cells.iter().take(nprobe) {
             // Build the ADC LUT for this cell: per subspace, the score
             // contribution of each codebook centroid.
@@ -263,17 +305,25 @@ impl IvfPqIndex {
             }
             // scan the list with LUT gathers
             for &id in &self.lists[cell] {
+                if let Some(f) = filter {
+                    if !f(id) {
+                        filtered += 1;
+                        continue;
+                    }
+                }
                 let code = &self.codes[id as usize * m..id as usize * m + m];
                 let mut s = 0.0f32;
                 for (sub, &c) in code.iter().enumerate() {
                     s += lut[sub * ksub + c as usize];
                 }
+                scored += 1;
                 if top.len() < k {
                     top.push((s, id));
                     if top.len() == k {
-                        top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                        // total_cmp: a NaN score must never panic mid-serve
+                        top.sort_by(|a, b| b.0.total_cmp(&a.0));
                     }
-                } else if s > top[k - 1].0 {
+                } else if k > 0 && s > top[k - 1].0 {
                     top[k - 1] = (s, id);
                     let mut i = k - 1;
                     while i > 0 && top[i].0 > top[i - 1].0 {
@@ -284,25 +334,31 @@ impl IvfPqIndex {
             }
         }
         if top.len() < k {
-            top.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            top.sort_by(|a, b| b.0.total_cmp(&a.0));
         }
-        (
-            top.iter().map(|&(_, id)| id).collect(),
-            top.iter().map(|&(s, _)| s).collect(),
-        )
+        SearchResult {
+            ids: top.iter().map(|&(_, id)| id).collect(),
+            scores: top.iter().map(|&(s, _)| s).collect(),
+            stats: QueryStats {
+                primary_scored: scored,
+                reranked: 0,
+                bytes_touched: scored * self.params.m,
+                hops: nprobe,
+                filtered,
+            },
+        }
     }
 
-    pub fn len(&self) -> usize {
+    fn len(&self) -> usize {
         self.assign.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.assign.is_empty()
+    fn dim(&self) -> usize {
+        self.dim
     }
 
-    /// bytes touched per scanned vector (PQ codes only)
-    pub fn bytes_per_vector(&self) -> usize {
-        self.params.m
+    fn sim(&self) -> Similarity {
+        self.sim
     }
 }
 
@@ -344,7 +400,7 @@ mod tests {
                         (dot(&q, &rows[a as usize]), dot(&q, &rows[b as usize]))
                     }
                 };
-                sb.partial_cmp(&sa).unwrap()
+                sb.total_cmp(&sa)
             });
             let (ids, _) = index.search(&q, 10, nprobe);
             hits += truth[..10].iter().filter(|t| ids.contains(t)).count();

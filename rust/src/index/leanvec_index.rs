@@ -4,20 +4,30 @@
 //!
 //! Search = (1) project the query once (`A q` — negligible, Section 2),
 //! (2) traverse the graph scoring primaries, (3) re-rank the top
-//! `rerank_window` candidates with the secondary store, (4) return top-k.
+//! `rerank_window` candidates with the secondary store, (4) return
+//! top-k. All of it is driven through the unified
+//! [`VectorIndex`] trait with a typed [`Query`]; the serving engine
+//! enters below the projection step via
+//! [`LeanVecIndex::search_prepared`] (it projects whole batches at
+//! once).
 
 use crate::config::{Compression, Similarity};
 use crate::graph::beam::SearchCtx;
 use crate::graph::vamana::VamanaGraph;
+use crate::index::query::{Query, QueryStats, SearchResult, VectorIndex};
 use crate::leanvec::model::LeanVecModel;
 use crate::quant::{Lvq4x8Store, LvqStore, PreparedQuery, ScoreStore, F16Store, F32Store};
 
-/// Runtime search knobs.
+/// Engine-level serving defaults: what a [`Query`] resolves against
+/// when it does not override the knobs per-request. Persisted in
+/// snapshot metadata as the recommended serving parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SearchParams {
     /// graph search-buffer width L
     pub window: usize,
-    /// candidates re-scored with the secondary store (>= k)
+    /// candidates re-scored with the secondary store (>= k); may exceed
+    /// `window` (split-buffer: extra candidates are retained for
+    /// re-ranking without widening the traversal)
     pub rerank_window: usize,
 }
 
@@ -28,16 +38,6 @@ impl Default for SearchParams {
             rerank_window: 50,
         }
     }
-}
-
-/// Per-query traffic/latency accounting (drives Fig. 1's bandwidth
-/// model).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct QueryStats {
-    pub primary_scored: usize,
-    pub reranked: usize,
-    pub bytes_touched: usize,
-    pub hops: usize,
 }
 
 /// Build a store of the requested compression over rows.
@@ -119,32 +119,51 @@ impl LeanVecIndex {
         self.primary.len() == 0
     }
 
-    /// Search with a fresh context (convenience; allocates).
-    pub fn search(&self, q: &[f32], k: usize, window: usize) -> (Vec<u32>, Vec<f32>) {
-        let mut ctx = SearchCtx::new(self.len());
-        let params = SearchParams {
-            window,
-            rerank_window: window.max(k),
-        };
-        let (ids, scores, _) = self.search_with_ctx(&mut ctx, q, k, params);
-        (ids, scores)
-    }
-
-    /// Hot-path search with a reusable context. Returns (ids, scores,
-    /// stats), best-first.
-    pub fn search_with_ctx(
+    /// Search with an externally projected query vector (the
+    /// coordinator projects whole batches as one matmul — natively or
+    /// through the PJRT `project_q` artifact — then fans the searches
+    /// out to workers). `query.vector()` must be the *original*
+    /// full-dimensional vector: re-ranking happens in the original
+    /// space. [`VectorIndex::search`] is this plus the per-query
+    /// projection.
+    pub fn search_prepared(
         &self,
         ctx: &mut SearchCtx,
-        q: &[f32],
-        k: usize,
-        params: SearchParams,
-    ) -> (Vec<u32>, Vec<f32>, QueryStats) {
-        // (1) project the query once
-        let q_proj = self.model.project_query(q);
-        let pq = self.primary.prepare(&q_proj, self.sim);
-        // (2) graph traversal over primaries
-        let cands = self.graph.search(ctx, self.primary.as_ref(), &pq, params.window);
+        q_proj: &[f32],
+        query: &Query,
+    ) -> SearchResult {
+        let k = query.top_k();
+        let params = query.effective(SearchParams::default());
+        let pq = self.primary.prepare(q_proj, self.sim);
+        // graph traversal over primaries: retain up to rerank_window
+        // candidates (split buffer) while expanding only the window
+        let capacity = params.rerank_window.max(k);
+        let cands = self.graph.search_filtered(
+            ctx,
+            self.primary.as_ref(),
+            &pq,
+            params.window,
+            capacity,
+            query.filter_fn(),
+        );
         let take = params.rerank_window.max(k).min(cands.len());
+        if !query.wants_rerank() {
+            // primary-only ablation arm: top-k straight off the traversal
+            let take_k = k.min(cands.len());
+            let ids: Vec<u32> = cands[..take_k].iter().map(|c| c.id).collect();
+            let scores: Vec<f32> = cands[..take_k].iter().map(|c| c.score).collect();
+            return SearchResult {
+                ids,
+                scores,
+                stats: QueryStats {
+                    primary_scored: ctx.stats.scored,
+                    reranked: 0,
+                    bytes_touched: ctx.stats.scored * self.primary.bytes_per_vector(),
+                    hops: ctx.stats.hops,
+                    filtered: ctx.stats.filtered,
+                },
+            };
+        }
         let ids: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
         let stats = QueryStats {
             primary_scored: ctx.stats.scored,
@@ -154,36 +173,11 @@ impl LeanVecIndex {
             bytes_touched: ctx.stats.scored * self.primary.bytes_per_vector()
                 + take * self.secondary.rerank_bytes_per_vector(),
             hops: ctx.stats.hops,
+            filtered: ctx.stats.filtered,
         };
-        // (3) re-rank with secondary vectors in the original space
-        let (ids, scores) = self.rerank(q, &ids, k);
-        (ids, scores, stats)
-    }
-
-    /// Search with an externally projected query (the coordinator
-    /// projects whole batches at once — natively or through the PJRT
-    /// `project_q` artifact — then fans the searches out to workers).
-    pub fn search_projected(
-        &self,
-        ctx: &mut SearchCtx,
-        q_proj: &[f32],
-        q_orig: &[f32],
-        k: usize,
-        params: SearchParams,
-    ) -> (Vec<u32>, Vec<f32>, QueryStats) {
-        let pq = self.primary.prepare(q_proj, self.sim);
-        let cands = self.graph.search(ctx, self.primary.as_ref(), &pq, params.window);
-        let take = params.rerank_window.max(k).min(cands.len());
-        let ids: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
-        let stats = QueryStats {
-            primary_scored: ctx.stats.scored,
-            reranked: take,
-            bytes_touched: ctx.stats.scored * self.primary.bytes_per_vector()
-                + take * self.secondary.rerank_bytes_per_vector(),
-            hops: ctx.stats.hops,
-        };
-        let (ids, scores) = self.rerank(q_orig, &ids, k);
-        (ids, scores, stats)
+        // re-rank with secondary vectors in the original space
+        let (ids, scores) = self.rerank(query.vector(), &ids, k);
+        SearchResult { ids, scores, stats }
     }
 
     /// Re-score `ids` with the secondary store and return the top-k.
@@ -195,7 +189,8 @@ impl LeanVecIndex {
             .iter()
             .map(|&id| (self.secondary.score_rerank(&pq, id), id))
             .collect();
-        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // total_cmp: a NaN score must never panic the serving thread
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
         scored.truncate(k);
         (
             scored.iter().map(|&(_, id)| id).collect(),
@@ -203,27 +198,12 @@ impl LeanVecIndex {
         )
     }
 
-    /// Primary-only search (no re-ranking) — the Fig. 11 ablation arm.
-    pub fn search_no_rerank(
-        &self,
-        ctx: &mut SearchCtx,
-        q: &[f32],
-        k: usize,
-        window: usize,
-    ) -> Vec<u32> {
-        let q_proj = self.model.project_query(q);
-        let pq = self.primary.prepare(&q_proj, self.sim);
-        let cands = self.graph.search(ctx, self.primary.as_ref(), &pq, window);
-        cands.iter().take(k).map(|c| c.id).collect()
-    }
-
     /// Shared parallel fan-out for batch search: run `f(ctx, i)` for
     /// every index in `0..n` across `threads` workers (0 = all cores),
     /// each drawing a reusable [`SearchCtx`] from a pool — the same
-    /// chunking discipline as the parallel builder. Used by
-    /// [`LeanVecIndex::search_batch`] and the coordinator's direct
-    /// batch path; results are in index order and identical for every
-    /// thread count.
+    /// chunking discipline as the parallel builder. Used by the trait's
+    /// batch path and the coordinator's direct batch path; results are
+    /// in index order and identical for every thread count.
     pub(crate) fn batch_fan_out<T, F>(&self, n: usize, threads: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -237,27 +217,31 @@ impl LeanVecIndex {
         })
     }
 
-    /// Parallel closed-loop batch search over raw (unprojected)
-    /// queries. Results are identical to per-query
-    /// [`LeanVecIndex::search_with_ctx`] calls for every thread count.
-    pub fn search_batch(
-        &self,
-        queries: &[Vec<f32>],
-        k: usize,
-        params: SearchParams,
-        threads: usize,
-    ) -> Vec<(Vec<u32>, Vec<f32>)> {
-        self.batch_fan_out(queries.len(), threads, |ctx, i| {
-            let (ids, scores, _) = self.search_with_ctx(ctx, &queries[i], k, params);
-            (ids, scores)
-        })
-    }
-
     /// Compression ratio of the primary representation vs FP16 full-D
     /// (the Fig. 1 headline number, e.g. 9.6x for rqa-768 at d=160).
     pub fn primary_compression_vs_fp16(&self) -> f64 {
         let full_fp16 = self.model.input_dim() * 2;
         full_fp16 as f64 / self.primary.bytes_per_vector() as f64
+    }
+}
+
+impl VectorIndex for LeanVecIndex {
+    /// Full query path: project once (`A q`), traverse, re-rank.
+    fn search(&self, ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        let q_proj = self.model.project_query(query.vector());
+        self.search_prepared(ctx, &q_proj, query)
+    }
+
+    fn len(&self) -> usize {
+        LeanVecIndex::len(self)
+    }
+
+    fn dim(&self) -> usize {
+        self.model.input_dim()
+    }
+
+    fn sim(&self) -> Similarity {
+        self.sim
     }
 }
 
@@ -315,17 +299,11 @@ mod tests {
         for _ in 0..trials {
             let q: Vec<f32> = (0..32).map(|_| rng.gaussian_f32()).collect();
             let (truth, _) = flat.search(&q, 10);
-            let (ids, _, _) = index.search_with_ctx(
-                &mut ctx,
-                &q,
-                10,
-                SearchParams {
-                    window: 50,
-                    rerank_window: 50,
-                },
-            );
+            let ids = index.search(&mut ctx, &Query::new(&q).k(10).window(50)).ids;
             hit_rr += truth.iter().filter(|t| ids.contains(t)).count();
-            let ids_nr = index.search_no_rerank(&mut ctx, &q, 10, 50);
+            let ids_nr = index
+                .search(&mut ctx, &Query::new(&q).k(10).window(50).no_rerank())
+                .ids;
             hit_nr += truth.iter().filter(|t| ids_nr.contains(t)).count();
         }
         let (r_rr, r_nr) = (
@@ -341,19 +319,14 @@ mod tests {
         let rows = lowrank_rows(200, 16, 4, 2);
         let index = build_small(&rows, 6);
         let mut ctx = SearchCtx::new(rows.len());
-        let (_, _, stats) = index.search_with_ctx(
-            &mut ctx,
-            &rows[0],
-            5,
-            SearchParams {
-                window: 20,
-                rerank_window: 20,
-            },
-        );
+        let stats = index
+            .search(&mut ctx, &Query::new(&rows[0]).k(5).window(20))
+            .stats;
         assert!(stats.primary_scored > 0);
         assert!(stats.reranked > 0);
         assert!(stats.bytes_touched > 0);
         assert!(stats.hops > 0);
+        assert_eq!(stats.filtered, 0, "no filter attached");
     }
 
     #[test]
@@ -372,13 +345,10 @@ mod tests {
         };
         let two_level = build(crate::config::Compression::Lvq4x8);
         let one_level = build(crate::config::Compression::Lvq4);
-        let params = SearchParams {
-            window: 20,
-            rerank_window: 20,
-        };
         let mut ctx = SearchCtx::new(rows.len());
-        let (_, _, s2) = two_level.search_with_ctx(&mut ctx, &rows[0], 5, params);
-        let (_, _, s1) = one_level.search_with_ctx(&mut ctx, &rows[0], 5, params);
+        let q = Query::new(&rows[0]).k(5).window(20);
+        let s2 = two_level.search(&mut ctx, &q).stats;
+        let s1 = one_level.search(&mut ctx, &q).stats;
         // identical traversal-layer compression; the two-level secondary
         // must report strictly more rerank traffic (its residual bytes)
         assert_eq!(
@@ -403,20 +373,15 @@ mod tests {
         let queries: Vec<Vec<f32>> = (0..24)
             .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
             .collect();
-        let params = SearchParams {
-            window: 30,
-            rerank_window: 30,
-        };
+        let reqs: Vec<Query> = queries.iter().map(|q| Query::new(q).k(5).window(30)).collect();
         let mut ctx = SearchCtx::new(rows.len());
-        let sequential: Vec<Vec<u32>> = queries
-            .iter()
-            .map(|q| index.search_with_ctx(&mut ctx, q, 5, params).0)
-            .collect();
+        let sequential: Vec<Vec<u32>> =
+            reqs.iter().map(|q| index.search(&mut ctx, q).ids).collect();
         for threads in [1usize, 3] {
             let batched: Vec<Vec<u32>> = index
-                .search_batch(&queries, 5, params, threads)
+                .search_batch(&reqs, threads)
                 .into_iter()
-                .map(|(ids, _)| ids)
+                .map(|r| r.ids)
                 .collect();
             assert_eq!(batched, sequential, "threads {threads}");
         }
@@ -434,9 +399,27 @@ mod tests {
     fn scores_descend() {
         let rows = lowrank_rows(150, 16, 4, 4);
         let index = build_small(&rows, 6);
-        let (_, scores) = index.search(&rows[3], 10, 30);
+        let scores = index.search_one(&Query::new(&rows[3]).k(10).window(30)).scores;
         for w in scores.windows(2) {
             assert!(w[0] >= w[1]);
         }
+    }
+
+    #[test]
+    fn split_buffer_retains_more_than_the_window() {
+        let rows = lowrank_rows(400, 16, 4, 9);
+        let index = build_small(&rows, 6);
+        let mut ctx = SearchCtx::new(rows.len());
+        // rerank_window 3x the traversal window: the buffer must retain
+        // (and re-rank) more candidates than the window alone holds
+        let wide = index
+            .search(&mut ctx, &Query::new(&rows[0]).k(5).window(20).rerank_window(60))
+            .stats;
+        let narrow = index
+            .search(&mut ctx, &Query::new(&rows[0]).k(5).window(20))
+            .stats;
+        assert!(wide.reranked > 20, "split buffer capped at window: {wide:?}");
+        assert_eq!(narrow.reranked.min(20), narrow.reranked);
+        assert!(wide.reranked > narrow.reranked);
     }
 }

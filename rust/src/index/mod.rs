@@ -2,15 +2,20 @@
 //! system), the flat exhaustive baseline/oracle, an IVF-PQ baseline
 //! (FAISS-IVFPQfs stand-in), and the versioned snapshot layer
 //! ([`persist`]) that round-trips a built index to disk.
+//!
+//! All of them speak one API ([`query`]): a [`Query`] builder in, a
+//! [`SearchResult`] out, through the [`VectorIndex`] trait.
 
 pub mod builder;
 pub mod flat;
 pub mod ivfpq;
 pub mod leanvec_index;
 pub mod persist;
+pub mod query;
 
 pub use builder::{IndexBuilder, SearchIndex};
 pub use flat::FlatIndex;
 pub use ivfpq::{IvfPqIndex, IvfPqParams};
 pub use leanvec_index::{LeanVecIndex, SearchParams};
 pub use persist::{SnapshotError, SnapshotMeta};
+pub use query::{Query, QueryStats, SearchResult, VectorIndex};

@@ -396,7 +396,7 @@ impl LeanVecIndex {
     ///
     /// The loaded index serves queries **bit-identically** to the one
     /// that was saved: identical neighbor ids, identical scores,
-    /// identical [`crate::index::leanvec_index::QueryStats`]. Fails
+    /// identical [`crate::index::query::QueryStats`]. Fails
     /// loudly — never panics — on a non-snapshot file, an unsupported
     /// format version, truncation, checksum mismatch, or an internally
     /// inconsistent payload.

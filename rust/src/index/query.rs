@@ -1,0 +1,326 @@
+//! The unified query API: one typed [`Query`] builder, one
+//! [`SearchResult`] shape, and one [`VectorIndex`] trait that every
+//! index in the crate speaks — the LeanVec search-and-rerank index, the
+//! flat oracle, the IVF-PQ baseline, and the [`SearchIndex`] harness
+//! wrapper all answer the same `search(ctx, &Query)` call.
+//!
+//! The builder carries the *split-buffer* knobs SVS ships for LeanVec:
+//! [`Query::window`] is the greedy-search buffer width L (drives
+//! traversal cost), [`Query::rerank_window`] is how many candidates are
+//! retained for secondary re-ranking — and it **may exceed** `window`:
+//! the traversal buffer then keeps extra unexpanded candidates purely
+//! for the re-rank stage, decoupling search effort from re-rank depth.
+//!
+//! Queries can also carry a filter predicate ([`Query::filter`]); it is
+//! pushed into graph traversal and the flat/IVF scans, so filtered-out
+//! ids are never re-ranked and never returned, and the traversal still
+//! navigates *through* them (connectivity is preserved).
+//!
+//! [`SearchIndex`]: crate::index::builder::SearchIndex
+
+use crate::config::Similarity;
+use crate::graph::beam::{CtxPool, SearchCtx};
+use crate::index::leanvec_index::SearchParams;
+use crate::util::threadpool::{parallel_map, resolve_threads};
+
+/// A filter predicate over database ids: `true` keeps the id. Must be
+/// `Sync` so batch search can evaluate it from worker threads.
+pub type FilterFn<'a> = &'a (dyn Fn(u32) -> bool + Sync);
+
+/// One typed search request: the query vector plus every per-request
+/// knob. Built fluently:
+///
+/// ```ignore
+/// let q = Query::new(&v).k(10).window(80).rerank_window(120);
+/// let filtered = Query::new(&v).k(10).filter(&|id| id % 2 == 0);
+/// ```
+///
+/// Unset knobs fall back to [`SearchParams::default()`] at search time
+/// (for IVF-PQ, `window` is interpreted as `nprobe`). Layers that own
+/// richer defaults apply them by *setting* the knobs before searching:
+/// the serving engine resolves each request's `QuerySpec` against
+/// `EngineConfig.search`, and the CLI resolves its flags against the
+/// snapshot-recommended `SnapshotMeta::search_defaults` — a library
+/// user serving from a snapshot should do the same
+/// (`Query::new(&q).window(meta.search_defaults.window)...`).
+/// `window` and `rerank_window` are validated at construction: zero is
+/// rejected immediately rather than producing an empty traversal deep
+/// in the stack.
+#[derive(Clone, Copy)]
+pub struct Query<'a> {
+    vector: &'a [f32],
+    k: usize,
+    window: Option<usize>,
+    rerank_window: Option<usize>,
+    rerank: bool,
+    filter: Option<FilterFn<'a>>,
+}
+
+impl<'a> Query<'a> {
+    /// A query for `vector` with `k = 10` and index-default knobs.
+    pub fn new(vector: &'a [f32]) -> Query<'a> {
+        Query {
+            vector,
+            k: 10,
+            window: None,
+            rerank_window: None,
+            rerank: true,
+            filter: None,
+        }
+    }
+
+    /// Number of results to return.
+    pub fn k(mut self, k: usize) -> Query<'a> {
+        self.k = k;
+        self
+    }
+
+    /// Greedy-search buffer width L (IVF-PQ reads it as `nprobe`).
+    /// Panics on zero — a zero window is always a caller bug.
+    pub fn window(mut self, window: usize) -> Query<'a> {
+        assert!(window > 0, "Query::window must be >= 1");
+        self.window = Some(window);
+        self
+    }
+
+    /// How many candidates to re-rank with the secondary store. May
+    /// exceed [`Query::window`] (split-buffer semantics: the traversal
+    /// buffer retains up to this many candidates, but only the top
+    /// `window` drive expansion). Panics on zero.
+    pub fn rerank_window(mut self, rerank_window: usize) -> Query<'a> {
+        assert!(rerank_window > 0, "Query::rerank_window must be >= 1");
+        self.rerank_window = Some(rerank_window);
+        self
+    }
+
+    /// Skip secondary re-ranking (the Fig. 11 ablation arm): results
+    /// come straight from the primary traversal, scores are primary
+    /// scores.
+    pub fn no_rerank(mut self) -> Query<'a> {
+        self.rerank = false;
+        self
+    }
+
+    /// Attach a filter predicate; ids failing it are never re-ranked
+    /// and never returned ([`QueryStats::filtered`] counts them).
+    pub fn filter(mut self, pred: FilterFn<'a>) -> Query<'a> {
+        self.filter = Some(pred);
+        self
+    }
+
+    /// The query vector.
+    pub fn vector(&self) -> &'a [f32] {
+        self.vector
+    }
+
+    /// Requested result count.
+    pub fn top_k(&self) -> usize {
+        self.k
+    }
+
+    /// The filter predicate, if any.
+    pub fn filter_fn(&self) -> Option<FilterFn<'a>> {
+        self.filter
+    }
+
+    /// Whether secondary re-ranking is enabled (default: yes).
+    pub fn wants_rerank(&self) -> bool {
+        self.rerank
+    }
+
+    /// The raw `window` override, if set.
+    pub fn window_override(&self) -> Option<usize> {
+        self.window
+    }
+
+    /// This query with `window` defaulted to `w` when unset (the
+    /// [`SearchIndex`] IVF-PQ arm injects its per-index `nprobe` here).
+    ///
+    /// [`SearchIndex`]: crate::index::builder::SearchIndex
+    pub fn with_default_window(mut self, w: usize) -> Query<'a> {
+        if self.window.is_none() && w > 0 {
+            self.window = Some(w);
+        }
+        self
+    }
+
+    /// Resolve the effective `(window, rerank_window)` against an
+    /// index's serving defaults — see [`resolve_params`] for the rule.
+    pub fn effective(&self, defaults: SearchParams) -> SearchParams {
+        resolve_params(self.window, self.rerank_window, defaults)
+    }
+}
+
+/// THE resolution rule for optional search-knob overrides, shared by
+/// [`Query::effective`], the serving engine's per-request `QuerySpec`
+/// resolution, and the CLI's `--window`/`--rerank-window` flags so the
+/// three can never drift apart: an explicit `window` without an
+/// explicit `rerank_window` couples the two (the common case); fully
+/// unset takes both defaults verbatim.
+pub fn resolve_params(
+    window: Option<usize>,
+    rerank_window: Option<usize>,
+    defaults: SearchParams,
+) -> SearchParams {
+    let effective_window = window.unwrap_or(defaults.window);
+    let effective_rerank = rerank_window.unwrap_or(match window {
+        Some(w) => w,
+        None => defaults.rerank_window,
+    });
+    SearchParams {
+        window: effective_window,
+        rerank_window: effective_rerank,
+    }
+}
+
+impl std::fmt::Debug for Query<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Query")
+            .field("dim", &self.vector.len())
+            .field("k", &self.k)
+            .field("window", &self.window)
+            .field("rerank_window", &self.rerank_window)
+            .field("rerank", &self.rerank)
+            .field("filtered", &self.filter.is_some())
+            .finish()
+    }
+}
+
+/// Per-query traffic/latency accounting (drives Fig. 1's bandwidth
+/// model). Returned inside every [`SearchResult`] and echoed through
+/// the serving [`Response`] for observability.
+///
+/// [`Response`]: crate::coordinator::protocol::Response
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// vectors scored during primary traversal / scan
+    pub primary_scored: usize,
+    /// candidates re-scored with the secondary store
+    pub reranked: usize,
+    /// bytes of vector data read (primary + re-rank traffic)
+    pub bytes_touched: usize,
+    /// graph hops (nodes expanded); coarse cells probed for IVF-PQ
+    pub hops: usize,
+    /// ids encountered but excluded by the query's filter predicate
+    pub filtered: usize,
+}
+
+/// What every search returns: ids and scores best-first, plus the
+/// traffic accounting. Replaces the positional `(Vec<u32>, Vec<f32>,
+/// QueryStats)` tuples the per-index entry points used to return.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SearchResult {
+    /// result ids, best first
+    pub ids: Vec<u32>,
+    /// matching scores ("bigger is better" for every similarity)
+    pub scores: Vec<f32>,
+    /// per-query accounting
+    pub stats: QueryStats,
+}
+
+/// The uniform search interface every index implements. `Sync` is a
+/// supertrait so the default batch fan-out can share `&self` across
+/// worker threads.
+pub trait VectorIndex: Sync {
+    /// Answer one query with a reusable [`SearchCtx`] (the hot path:
+    /// steady-state searches allocate nothing beyond the result).
+    fn search(&self, ctx: &mut SearchCtx, query: &Query) -> SearchResult;
+
+    /// Number of indexed vectors.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Input (full, unprojected) dimensionality queries must have.
+    fn dim(&self) -> usize;
+
+    /// Similarity the scores express.
+    fn sim(&self) -> Similarity;
+
+    /// Convenience: answer one query with a fresh context (allocates).
+    fn search_one(&self, query: &Query) -> SearchResult {
+        // size 0: the graph paths grow the visited array lazily via
+        // `ctx.ensure`, and the scan paths never touch the context
+        let mut ctx = SearchCtx::new(0);
+        self.search(&mut ctx, query)
+    }
+
+    /// Parallel closed-loop batch search across `threads` workers
+    /// (0 = all cores), each drawing a pooled [`SearchCtx`]. Results
+    /// are in query order and identical to sequential [`VectorIndex::search`]
+    /// calls for every thread count.
+    fn search_batch(&self, queries: &[Query<'_>], threads: usize) -> Vec<SearchResult>
+    where
+        Self: Sized,
+    {
+        let threads = resolve_threads(threads);
+        // size 0: graph searches grow their visited arrays lazily
+        // (`ctx.ensure`), scan indexes never touch the contexts
+        let pool = CtxPool::new(threads, 0);
+        parallel_map(queries.len(), threads, |i| {
+            let mut ctx = pool.acquire();
+            self.search(&mut ctx, &queries[i])
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_knobs() {
+        let v = vec![0.0f32; 4];
+        let pred = |id: u32| id < 2;
+        let q = Query::new(&v)
+            .k(5)
+            .window(30)
+            .rerank_window(90)
+            .filter(&pred);
+        assert_eq!(q.top_k(), 5);
+        assert!(q.wants_rerank());
+        let eff = q.effective(SearchParams::default());
+        assert_eq!(eff.window, 30);
+        assert_eq!(eff.rerank_window, 90, "split buffer: rerank > window");
+        assert!(q.filter_fn().unwrap()(1));
+        assert!(!q.filter_fn().unwrap()(3));
+    }
+
+    #[test]
+    fn effective_defaults_resolve() {
+        let v = vec![0.0f32; 4];
+        let d = SearchParams {
+            window: 64,
+            rerank_window: 128,
+        };
+        // fully unset -> both defaults
+        let eff = Query::new(&v).effective(d);
+        assert_eq!((eff.window, eff.rerank_window), (64, 128));
+        // explicit window couples rerank to it
+        let eff = Query::new(&v).window(20).effective(d);
+        assert_eq!((eff.window, eff.rerank_window), (20, 20));
+        // explicit rerank only: window stays default
+        let eff = Query::new(&v).rerank_window(200).effective(d);
+        assert_eq!((eff.window, eff.rerank_window), (64, 200));
+        // with_default_window does not override an explicit window
+        let q = Query::new(&v).window(9).with_default_window(99);
+        assert_eq!(q.window_override(), Some(9));
+        assert_eq!(Query::new(&v).with_default_window(99).window_override(), Some(99));
+    }
+
+    #[test]
+    #[should_panic(expected = "window must be >= 1")]
+    fn zero_window_rejected_at_construction() {
+        let v = vec![0.0f32; 2];
+        let _ = Query::new(&v).window(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rerank_window must be >= 1")]
+    fn zero_rerank_window_rejected_at_construction() {
+        let v = vec![0.0f32; 2];
+        let _ = Query::new(&v).rerank_window(0);
+    }
+}

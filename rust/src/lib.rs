@@ -22,14 +22,21 @@
 //! build/serve split. `docs/ARCHITECTURE.md` maps the modules and data
 //! flows; `docs/SNAPSHOT_FORMAT.md` specifies the on-disk bytes.
 //!
+//! Every index speaks one typed query API ([`index::query`]): build a
+//! [`index::Query`], call [`index::VectorIndex::search`], get a
+//! [`index::SearchResult`] — with per-request window/rerank-window
+//! overrides (split-buffer semantics) and filtered search pushed into
+//! the traversal.
+//!
 //! # Quickstart
 //!
-//! Build an index over toy vectors, snapshot it, and serve from the
-//! snapshot:
+//! Build an index over toy vectors, snapshot it, and query the loaded
+//! copy through the unified `Query` → `VectorIndex` → `SearchResult`
+//! path:
 //!
 //! ```
 //! use leanvec::config::{ProjectionKind, Similarity};
-//! use leanvec::index::{IndexBuilder, LeanVecIndex, SnapshotMeta};
+//! use leanvec::index::{IndexBuilder, LeanVecIndex, Query, SnapshotMeta, VectorIndex};
 //!
 //! // 64 toy vectors in 8 dimensions
 //! let rows: Vec<Vec<f32>> = (0..64)
@@ -40,7 +47,7 @@
 //!     .target_dim(4)
 //!     .build(&rows, None, Similarity::L2);
 //!
-//! // build/serve split: snapshot to disk, load it back, search
+//! // build/serve split: snapshot to disk, load it back
 //! let path = std::env::temp_dir().join(format!(
 //!     "leanvec-doctest-{}.leanvec",
 //!     std::process::id()
@@ -49,10 +56,21 @@
 //! let (loaded, _meta) = LeanVecIndex::load(&path).unwrap();
 //! std::fs::remove_file(&path).ok();
 //!
+//! // builder -> search -> SearchResult; split buffer: rerank_window
+//! // may exceed the traversal window
+//! let query = Query::new(&rows[0]).k(3).window(20).rerank_window(40);
+//! let result = loaded.search_one(&query);
+//! assert_eq!(result.ids.len(), 3);
+//! assert!(result.stats.primary_scored > 0);
+//!
 //! // the loaded index answers bit-identically to the built one
-//! let (ids, _scores) = loaded.search(&rows[0], 3, 20);
-//! assert_eq!(ids.len(), 3);
-//! assert_eq!(ids, index.search(&rows[0], 3, 20).0);
+//! assert_eq!(result.ids, index.search_one(&query).ids);
+//!
+//! // filtered search: excluded ids are never returned
+//! let even_only = |id: u32| id % 2 == 0;
+//! let filtered = loaded.search_one(&Query::new(&rows[0]).k(3).filter(&even_only));
+//! assert!(filtered.ids.iter().all(|id| id % 2 == 0));
+//! assert!(filtered.stats.filtered > 0);
 //! ```
 
 pub mod config;

@@ -13,17 +13,23 @@
 //! answer queries without ever touching the training path.
 //!
 //! Common flags: --out DIR, --scale S, --seed N, --pjrt,
-//!               --dataset NAME, --dim d, --window W, --k K,
+//!               --dataset NAME, --dim d, --window W,
+//!               --rerank-window R (split buffer; may exceed W), --k K,
 //!               --index PATH (snapshot to write/read),
-//!               --threads T (build workers; 0 = all cores, 1 = serial)
+//!               --threads T (build workers; 0 = all cores, 1 = serial),
+//!               --baseline leanvec|ivfpq|flat (search arm),
+//!               --nprobe N (IVF-PQ probe count)
 
 use leanvec::config::{BuildParams, Compression, ProjectionKind};
 use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QueryProjectorKind};
 use leanvec::data::synth::{generate, paper_datasets, paper_target_dim};
 use leanvec::experiments::harness::ExpContext;
 use leanvec::index::builder::IndexBuilder;
+use leanvec::index::ivfpq::{IvfPqIndex, IvfPqParams};
 use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
 use leanvec::index::persist::SnapshotMeta;
+use leanvec::index::query::{Query, VectorIndex};
+use leanvec::index::FlatIndex;
 use leanvec::util::cli::Args;
 use std::sync::Arc;
 
@@ -53,10 +59,15 @@ fn print_usage() {
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
          repro build --dataset rqa-768 --dim 160 --threads 0 --index rqa-768.leanvec\n\
-         repro search --index rqa-768.leanvec --window 50\n\
-         repro serve --index rqa-768.leanvec --queries 2000 --workers 2\n\
+         repro search --index rqa-768.leanvec --window 50 --rerank-window 150\n\
+         repro serve --index rqa-768.leanvec --queries 2000 --workers 2 --rerank-window 100\n\
          repro search --dataset wit-512 --projection ood-es   (ad hoc, no snapshot)\n\
-         repro artifacts"
+         repro search --dataset deep-256 --baseline ivfpq --nprobe 16\n\
+         repro artifacts\n\
+         \n\
+         search knobs: --window W (graph search buffer), --rerank-window R\n\
+         (candidates re-ranked; may exceed W — split buffer), --k K,\n\
+         --baseline leanvec|ivfpq|flat (ad hoc arms), --nprobe N (IVF-PQ)"
     );
 }
 
@@ -177,19 +188,15 @@ fn dataset_for_snapshot(
     Ok(ds)
 }
 
-/// Resolve [`SearchParams`]: an explicit `--window` overrides both
-/// knobs; otherwise snapshot-recommended defaults apply.
+/// Resolve [`SearchParams`] from `--window` / `--rerank-window` via
+/// the one shared rule (`index::query::resolve_params`): explicit
+/// flags win over the (snapshot-recommended) defaults, an explicit
+/// `--window` without `--rerank-window` couples the two, and
+/// `--rerank-window` may exceed `--window` (split buffer: more
+/// candidates re-ranked without widening the traversal).
 fn search_params_from(args: &Args, defaults: SearchParams) -> SearchParams {
-    match args.flags.get("window") {
-        Some(_) => {
-            let w = args.usize("window", defaults.window);
-            SearchParams {
-                window: w,
-                rerank_window: w,
-            }
-        }
-        None => defaults,
-    }
+    let flag = |key: &str| args.flags.get(key).and_then(|v| v.parse::<usize>().ok());
+    leanvec::index::query::resolve_params(flag("window"), flag("rerank-window"), defaults)
 }
 
 fn cmd_build(args: &Args) -> anyhow::Result<()> {
@@ -245,6 +252,10 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
 fn cmd_search(args: &Args) -> anyhow::Result<()> {
     let ctx = ctx_from(args);
     let k = args.usize("k", 10);
+    let baseline = args.str("baseline", "leanvec");
+    if baseline != "leanvec" {
+        return cmd_search_baseline(args, &ctx, &baseline, k);
+    }
     let (index, ds, params) = match args.opt_str("index") {
         // serve path: read the snapshot, never touch the training path
         Some(path) => {
@@ -262,28 +273,121 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     };
     let truth =
         leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
-    let curve = leanvec::experiments::harness::qps_recall_curve(
-        &index,
-        &ds.test_queries,
-        &truth,
-        k,
-        &[params.window],
+    report_point_and_batch(args, &index, &ds, &truth, k, params)
+}
+
+/// Ad hoc baseline arms reached through the same `VectorIndex` trait:
+/// `--baseline ivfpq` (with `--nprobe`) and `--baseline flat`.
+fn cmd_search_baseline(
+    args: &Args,
+    ctx: &ExpContext,
+    baseline: &str,
+    k: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        args.opt_str("index").is_none(),
+        "--baseline arms are ad hoc (built in-process); drop --index"
     );
-    let p = curve[0];
+    let ds = dataset_from(args, ctx)?;
+    let sim = if ds.similarity == leanvec::Similarity::Cosine {
+        leanvec::Similarity::InnerProduct
+    } else {
+        ds.similarity
+    };
+    let truth =
+        leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    match baseline {
+        "ivfpq" => {
+            let nprobe = args.usize("nprobe", 8).max(1);
+            // largest m in {8,4,2,1} dividing the dimensionality
+            let m = [8usize, 4, 2, 1]
+                .into_iter()
+                .find(|m| ds.dim % m == 0)
+                .unwrap();
+            let nlist = (ds.database.len() as f64).sqrt().ceil() as usize;
+            let ivf = IvfPqIndex::build(
+                &ds.database,
+                IvfPqParams {
+                    nlist,
+                    m,
+                    ksub: 256,
+                    kmeans_iters: 6,
+                },
+                sim,
+                ctx.seed,
+            );
+            println!(
+                "ivfpq baseline: built in {:.2}s ({nlist} lists, m={m})",
+                ivf.build_seconds
+            );
+            // for IVF-PQ the trait reads Query::window as nprobe
+            report_point_and_batch(
+                args,
+                &ivf,
+                &ds,
+                &truth,
+                k,
+                SearchParams {
+                    window: nprobe,
+                    rerank_window: nprobe,
+                },
+            )
+        }
+        "flat" => {
+            let flat = FlatIndex::new(&ds.database, sim);
+            report_point_and_batch(args, &flat, &ds, &truth, k, SearchParams::default())
+        }
+        other => anyhow::bail!("unknown --baseline '{other}' (leanvec|ivfpq|flat)"),
+    }
+}
+
+/// Shared reporting: one single-thread QPS/recall point at `params`
+/// plus a closed-loop parallel batch run — all through `VectorIndex`.
+fn report_point_and_batch<I: VectorIndex>(
+    args: &Args,
+    index: &I,
+    ds: &leanvec::data::synth::Dataset,
+    truth: &[Vec<u32>],
+    k: usize,
+    params: SearchParams,
+) -> anyhow::Result<()> {
+    // single-thread point at the full per-request params (including a
+    // split-buffer rerank window larger than the traversal window)
+    let params = SearchParams {
+        window: params.window.max(1),
+        rerank_window: params.rerank_window.max(1),
+    };
+    let p = leanvec::experiments::harness::qps_recall_point(
+        index,
+        &ds.test_queries,
+        truth,
+        k,
+        params,
+    );
     println!(
-        "{}: window {} -> recall@{k} {:.3}, {:.0} QPS, {:.0} bytes/query",
-        ds.name, p.window, p.recall, p.qps, p.bytes_per_query
+        "{}: window {} (rerank {}) -> recall@{k} {:.3}, {:.0} QPS, {:.0} bytes/query",
+        ds.name, params.window, params.rerank_window, p.recall, p.qps, p.bytes_per_query
     );
     // closed-loop parallel batch search over the same queries
     let threads = args.usize("threads", 0);
+    let queries: Vec<Query> = ds
+        .test_queries
+        .iter()
+        .map(|q| {
+            Query::new(q)
+                .k(k)
+                .window(params.window)
+                .rerank_window(params.rerank_window)
+        })
+        .collect();
     let t0 = std::time::Instant::now();
     let got: Vec<Vec<u32>> = index
-        .search_batch(&ds.test_queries, k, params, threads)
+        .search_batch(&queries, threads)
         .into_iter()
-        .map(|(ids, _)| ids)
+        .map(|r| r.ids)
         .collect();
     let wall = t0.elapsed().as_secs_f64();
-    let recall = leanvec::data::gt::recall_at_k(&got, &truth, k);
+    let recall = leanvec::data::gt::recall_at_k(&got, truth, k);
     println!(
         "batch: {} queries in {:.3}s -> {:.0} QPS, recall@{k} {:.3}",
         ds.test_queries.len(),

@@ -5,6 +5,7 @@ use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
 use leanvec::data::gt::{ground_truth, recall_at_k};
 use leanvec::data::synth::{generate, QueryDist, SynthSpec};
 use leanvec::index::builder::IndexBuilder;
+use leanvec::index::query::{Query, VectorIndex};
 
 fn spec(sim: Similarity, queries: QueryDist, dim: usize, n: usize) -> SynthSpec {
     SynthSpec {
@@ -48,7 +49,7 @@ fn end_to_end_recall(
     let got: Vec<Vec<u32>> = ds
         .test_queries
         .iter()
-        .map(|q| index.search(q, k, 80).0)
+        .map(|q| index.search_one(&Query::new(q).k(k).window(80)).ids)
         .collect();
     recall_at_k(&got, &truth, k)
 }
@@ -164,17 +165,12 @@ fn rerank_recovers_projection_loss() {
     let mut got_rr = Vec::new();
     let mut got_nr = Vec::new();
     for q in &ds.test_queries {
-        let (ids, _, _) = index.search_with_ctx(
-            &mut ctx,
-            q,
-            k,
-            leanvec::index::leanvec_index::SearchParams {
-                window: 100,
-                rerank_window: 100,
-            },
+        got_rr.push(index.search(&mut ctx, &Query::new(q).k(k).window(100)).ids);
+        got_nr.push(
+            index
+                .search(&mut ctx, &Query::new(q).k(k).window(100).no_rerank())
+                .ids,
         );
-        got_rr.push(ids);
-        got_nr.push(index.search_no_rerank(&mut ctx, q, k, 100));
     }
     let r_rr = recall_at_k(&got_rr, &truth, k);
     let r_nr = recall_at_k(&got_nr, &truth, k);
@@ -202,7 +198,8 @@ fn build_and_search_deterministic_for_seed() {
     };
     let (a, b) = (build(), build());
     for q in ds.test_queries.iter().take(10) {
-        assert_eq!(a.search(q, 10, 50).0, b.search(q, 10, 50).0);
+        let query = Query::new(q).k(10).window(50);
+        assert_eq!(a.search_one(&query).ids, b.search_one(&query).ids);
     }
 }
 
@@ -231,7 +228,7 @@ fn graph_quality_preserved_under_reduction() {
         let got: Vec<Vec<u32>> = ds
             .test_queries
             .iter()
-            .map(|q| ix.search(q, k, 80).0)
+            .map(|q| ix.search_one(&Query::new(q).k(k).window(80)).ids)
             .collect();
         recall_at_k(&got, &truth, k)
     };

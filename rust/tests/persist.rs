@@ -6,8 +6,9 @@
 use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
 use leanvec::graph::beam::SearchCtx;
 use leanvec::index::builder::IndexBuilder;
-use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
+use leanvec::index::leanvec_index::LeanVecIndex;
 use leanvec::index::persist::{self, RawSection, SnapshotError, SnapshotMeta};
+use leanvec::index::query::{Query, VectorIndex};
 use leanvec::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -56,19 +57,16 @@ fn assert_search_identical(built: &LeanVecIndex, loaded: &LeanVecIndex, trials: 
     let mut rng = Rng::new(seed);
     let mut ctx_a = SearchCtx::new(built.len());
     let mut ctx_b = SearchCtx::new(loaded.len());
-    let params = SearchParams {
-        window: 30,
-        rerank_window: 30,
-    };
     let dd = built.model.input_dim();
     for _ in 0..trials {
         let q: Vec<f32> = (0..dd).map(|_| rng.gaussian_f32()).collect();
-        let (ids_a, scores_a, stats_a) = built.search_with_ctx(&mut ctx_a, &q, 10, params);
-        let (ids_b, scores_b, stats_b) = loaded.search_with_ctx(&mut ctx_b, &q, 10, params);
-        assert_eq!(ids_a, ids_b);
+        let query = Query::new(&q).k(10).window(30);
+        let a = built.search(&mut ctx_a, &query);
+        let b = loaded.search(&mut ctx_b, &query);
+        assert_eq!(a.ids, b.ids);
         let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
-        assert_eq!(bits(&scores_a), bits(&scores_b), "scores not bit-identical");
-        assert_eq!(stats_a, stats_b, "QueryStats diverged");
+        assert_eq!(bits(&a.scores), bits(&b.scores), "scores not bit-identical");
+        assert_eq!(a.stats, b.stats, "QueryStats diverged");
     }
 }
 
@@ -286,13 +284,10 @@ fn search_batch_identical_after_load() {
     built.save(&path, &SnapshotMeta::default()).unwrap();
     let (loaded, _) = LeanVecIndex::load(&path).unwrap();
     let queries = rows(32, 16, 16);
-    let params = SearchParams {
-        window: 30,
-        rerank_window: 30,
-    };
+    let reqs: Vec<Query> = queries.iter().map(|q| Query::new(q).k(5).window(30)).collect();
     for threads in [1usize, 4] {
-        let a = built.search_batch(&queries, 5, params, threads);
-        let b = loaded.search_batch(&queries, 5, params, threads);
+        let a = built.search_batch(&reqs, threads);
+        let b = loaded.search_batch(&reqs, threads);
         assert_eq!(a, b, "threads {threads}");
     }
     std::fs::remove_file(&path).ok();

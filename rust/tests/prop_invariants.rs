@@ -5,6 +5,7 @@
 use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
 use leanvec::index::builder::IndexBuilder;
 use leanvec::index::leanvec_index::make_store;
+use leanvec::index::query::{Query, VectorIndex};
 use leanvec::linalg::matrix::dot;
 use leanvec::prop_assert;
 use leanvec::quant::ScoreStore;
@@ -155,7 +156,8 @@ fn prop_search_results_sorted_and_unique() {
                 .build(&rows, None, Similarity::InnerProduct);
             let q = g.vec_gaussian(d);
             let k = g.usize_in(1, 20);
-            let (ids, scores) = index.search(&q, k, k * 3);
+            let r = index.search_one(&Query::new(&q).k(k).window(k * 3));
+            let (ids, scores) = (r.ids, r.scores);
             prop_assert!(ids.len() <= k, "too many results");
             let set: std::collections::HashSet<_> = ids.iter().collect();
             prop_assert!(set.len() == ids.len(), "duplicate result ids");

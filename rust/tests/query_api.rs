@@ -1,0 +1,334 @@
+//! `VectorIndex` conformance suite: every index kind (LeanVec, flat,
+//! IVF-PQ — plus the `SearchIndex` harness wrapper) must honor the
+//! `Query` contract identically: scores descend, k is respected,
+//! filters exclude exactly the filtered ids (with correct
+//! `QueryStats.filtered` accounting), split-buffer rerank windows
+//! work, batch equals sequential, and per-request parameter overrides
+//! flow through the serving `Engine`.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::coordinator::{Engine, EngineConfig, QuerySpec};
+use leanvec::graph::beam::SearchCtx;
+use leanvec::index::builder::{build_hnsw_baseline, IndexBuilder, SearchIndex};
+use leanvec::index::ivfpq::{IvfPqIndex, IvfPqParams};
+use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
+use leanvec::index::query::{Query, VectorIndex};
+use leanvec::index::FlatIndex;
+use leanvec::util::rng::Rng;
+use std::sync::Arc;
+
+const N: usize = 600;
+const DIM: usize = 16;
+const K: usize = 10;
+
+fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..6)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32() * 3.0).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            centers[i % 6]
+                .iter()
+                .map(|&x| x + rng.gaussian_f32() * 0.4)
+                .collect()
+        })
+        .collect()
+}
+
+fn queries(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+        .collect()
+}
+
+fn build_leanvec(rows: &[Vec<f32>], sim: Similarity) -> LeanVecIndex {
+    let mut gp = GraphParams::for_similarity(sim);
+    gp.max_degree = 16;
+    gp.build_window = 40;
+    IndexBuilder::new()
+        .projection(ProjectionKind::Id)
+        .target_dim(8)
+        .graph_params(gp)
+        .build(rows, None, sim)
+}
+
+fn build_ivfpq(rows: &[Vec<f32>], sim: Similarity) -> IvfPqIndex {
+    IvfPqIndex::build(
+        rows,
+        IvfPqParams {
+            nlist: 16,
+            m: 4,
+            ksub: 64,
+            kmeans_iters: 6,
+        },
+        sim,
+        5,
+    )
+}
+
+/// All index kinds behind the trait, boxed into the harness wrapper so
+/// one loop covers them.
+fn all_kinds(rows: &[Vec<f32>], sim: Similarity) -> Vec<SearchIndex> {
+    vec![
+        SearchIndex::LeanVec(build_leanvec(rows, sim)),
+        SearchIndex::Flat(FlatIndex::new(rows, sim)),
+        SearchIndex::IvfPq(build_ivfpq(rows, sim), 16),
+        build_hnsw_baseline(rows, sim, Compression::F16, 7),
+    ]
+}
+
+#[test]
+fn scores_descend_and_k_respected_for_every_kind() {
+    let rs = rows(N, DIM, 1);
+    let qs = queries(8, DIM, 2);
+    for ix in all_kinds(&rs, Similarity::InnerProduct) {
+        let mut ctx = SearchCtx::new(ix.len());
+        for q in &qs {
+            for k in [1usize, 5, K] {
+                let r = ix.search(&mut ctx, &Query::new(q).k(k).window(40));
+                assert_eq!(r.ids.len(), k, "{}: k not respected", ix.name());
+                assert_eq!(r.ids.len(), r.scores.len(), "{}", ix.name());
+                for w in r.scores.windows(2) {
+                    assert!(w[0] >= w[1], "{}: scores ascend {:?}", ix.name(), r.scores);
+                }
+                let set: std::collections::HashSet<_> = r.ids.iter().collect();
+                assert_eq!(set.len(), r.ids.len(), "{}: duplicate ids", ix.name());
+                assert!(r.stats.primary_scored > 0, "{}", ix.name());
+                assert!(r.stats.bytes_touched > 0, "{}", ix.name());
+            }
+        }
+        // metadata surface
+        assert_eq!(ix.len(), N);
+        assert_eq!(ix.dim(), DIM);
+        assert_eq!(ix.sim(), Similarity::InnerProduct);
+    }
+}
+
+#[test]
+fn filter_excludes_exactly_the_filtered_ids() {
+    let rs = rows(N, DIM, 3);
+    let qs = queries(6, DIM, 4);
+    let allow = |id: u32| id % 3 == 0; // keep one id in three
+    for ix in all_kinds(&rs, Similarity::L2) {
+        let mut ctx = SearchCtx::new(ix.len());
+        for q in &qs {
+            let r = ix.search(&mut ctx, &Query::new(q).k(K).window(60).filter(&allow));
+            assert!(
+                r.ids.iter().all(|&id| allow(id)),
+                "{}: filtered id returned: {:?}",
+                ix.name(),
+                r.ids
+            );
+            assert!(!r.ids.is_empty(), "{}: filter starved results", ix.name());
+            assert!(
+                r.stats.filtered > 0,
+                "{}: filtered counter not accounted",
+                ix.name()
+            );
+            // the unfiltered search must encounter no filtered nodes
+            let plain = ix.search(&mut ctx, &Query::new(q).k(K).window(60));
+            assert_eq!(plain.stats.filtered, 0, "{}", ix.name());
+        }
+    }
+}
+
+#[test]
+fn flat_filtered_counts_are_exact() {
+    // the flat oracle scans everything, so its accounting is exact:
+    // filtered + scored == n
+    let rs = rows(300, DIM, 5);
+    let flat = FlatIndex::new(&rs, Similarity::InnerProduct);
+    let q = &queries(1, DIM, 6)[0];
+    let allow = |id: u32| id < 100;
+    let r = flat.search_one(&Query::new(q).k(K).filter(&allow));
+    assert_eq!(r.stats.filtered, 200);
+    assert_eq!(r.stats.primary_scored, 100);
+    assert!(r.ids.iter().all(|&id| id < 100));
+}
+
+#[test]
+fn filtered_recall_vs_filtered_flat_oracle() {
+    let rs = rows(800, DIM, 7);
+    let index = build_leanvec(&rs, Similarity::InnerProduct);
+    let flat = FlatIndex::new(&rs, Similarity::InnerProduct);
+    let qs = queries(30, DIM, 8);
+    let allow = |id: u32| id % 2 == 0; // 50% selectivity
+    let mut ctx = SearchCtx::new(rs.len());
+    let mut hits = 0usize;
+    for q in &qs {
+        let truth = flat.search_one(&Query::new(q).k(K).filter(&allow)).ids;
+        let got = index
+            .search(&mut ctx, &Query::new(q).k(K).window(100).filter(&allow))
+            .ids;
+        assert!(got.iter().all(|&id| allow(id)));
+        hits += truth.iter().filter(|t| got.contains(t)).count();
+    }
+    let recall = hits as f64 / (K * qs.len()) as f64;
+    assert!(recall >= 0.75, "filtered recall vs filtered oracle: {recall}");
+}
+
+#[test]
+fn split_buffer_rerank_window_may_exceed_window() {
+    let rs = rows(N, DIM, 9);
+    let index = build_leanvec(&rs, Similarity::InnerProduct);
+    let q = &queries(1, DIM, 10)[0];
+    let mut ctx = SearchCtx::new(rs.len());
+    let wide = index.search(&mut ctx, &Query::new(q).k(5).window(15).rerank_window(60));
+    // more candidates were retained and re-ranked than the traversal
+    // window alone can hold
+    assert!(wide.stats.reranked > 15, "{:?}", wide.stats);
+    let narrow = index.search(&mut ctx, &Query::new(q).k(5).window(15));
+    assert!(narrow.stats.reranked <= 15, "{:?}", narrow.stats);
+    // identical traversal effort: the split buffer widens retention,
+    // not expansion
+    assert_eq!(wide.stats.hops, narrow.stats.hops);
+    assert_eq!(wide.stats.primary_scored, narrow.stats.primary_scored);
+}
+
+#[test]
+fn no_rerank_reports_zero_reranked() {
+    let rs = rows(N, DIM, 11);
+    let index = build_leanvec(&rs, Similarity::InnerProduct);
+    let q = &queries(1, DIM, 12)[0];
+    let r = index.search_one(&Query::new(q).k(5).window(30).no_rerank());
+    assert_eq!(r.stats.reranked, 0);
+    assert_eq!(r.ids.len(), 5);
+    for w in r.scores.windows(2) {
+        assert!(w[0] >= w[1]);
+    }
+}
+
+#[test]
+fn batch_matches_sequential_via_the_trait_for_every_kind() {
+    let rs = rows(N, DIM, 13);
+    let qs = queries(16, DIM, 14);
+    for ix in all_kinds(&rs, Similarity::InnerProduct) {
+        let reqs: Vec<Query> = qs.iter().map(|q| Query::new(q).k(5).window(30)).collect();
+        let mut ctx = SearchCtx::new(ix.len());
+        let sequential: Vec<Vec<u32>> =
+            reqs.iter().map(|q| ix.search(&mut ctx, q).ids).collect();
+        for threads in [1usize, 3] {
+            let batched: Vec<Vec<u32>> = ix
+                .search_batch(&reqs, threads)
+                .into_iter()
+                .map(|r| r.ids)
+                .collect();
+            assert_eq!(batched, sequential, "{} threads {threads}", ix.name());
+        }
+    }
+}
+
+#[test]
+fn zero_k_returns_empty_for_every_kind() {
+    let rs = rows(200, DIM, 15);
+    let q = &queries(1, DIM, 16)[0];
+    for ix in all_kinds(&rs, Similarity::InnerProduct) {
+        let r = ix.search_one(&Query::new(q).k(0).window(20));
+        assert!(r.ids.is_empty(), "{}", ix.name());
+        assert!(r.scores.is_empty(), "{}", ix.name());
+    }
+}
+
+// ---- per-request parameters and filters through the serving engine
+
+fn engine_fixture() -> (Arc<LeanVecIndex>, Vec<Vec<f32>>) {
+    let rs = rows(700, DIM, 17);
+    let index = Arc::new(build_leanvec(&rs, Similarity::InnerProduct));
+    let qs = queries(6, DIM, 18);
+    (index, qs)
+}
+
+#[test]
+fn engine_honors_per_request_params_over_defaults() {
+    let (index, qs) = engine_fixture();
+    let engine = Engine::start(
+        Arc::clone(&index),
+        EngineConfig {
+            workers: 2,
+            search: SearchParams {
+                window: 4,
+                rerank_window: 4,
+            },
+            ..EngineConfig::default()
+        },
+    );
+    for q in &qs {
+        engine.submit_spec(
+            q.clone(),
+            QuerySpec::top_k(K).with_window(80).with_rerank_window(160),
+        );
+    }
+    let mut responses = engine.drain(qs.len());
+    responses.sort_by_key(|r| r.id);
+    engine.shutdown();
+    for (resp, q) in responses.iter().zip(qs.iter()) {
+        let direct = index.search_one(&Query::new(q).k(K).window(80).rerank_window(160));
+        assert_eq!(resp.ids, direct.ids, "override ignored by worker");
+        assert_eq!(resp.stats, direct.stats, "stats not echoed faithfully");
+        assert!(resp.stats.reranked > 4, "engine-wide default leaked in");
+    }
+}
+
+#[test]
+fn engine_filtered_query_returns_only_allowed_ids_with_accounting() {
+    let (index, qs) = engine_fixture();
+    // allow-list: every third id
+    let allow_ids: Vec<u32> = (0..index.len() as u32).filter(|id| id % 3 == 0).collect();
+    let engine = Engine::start(Arc::clone(&index), EngineConfig {
+        workers: 2,
+        ..EngineConfig::default()
+    });
+    for q in &qs {
+        engine.submit_spec(
+            q.clone(),
+            QuerySpec::top_k(K)
+                .with_window(80)
+                .with_allow_list(allow_ids.clone()),
+        );
+    }
+    let mut responses = engine.drain(qs.len());
+    responses.sort_by_key(|r| r.id);
+    engine.shutdown();
+    let pred = |id: u32| id % 3 == 0;
+    for (resp, q) in responses.iter().zip(qs.iter()) {
+        assert!(
+            resp.ids.iter().all(|&id| pred(id)),
+            "engine returned a filtered-out id: {:?}",
+            resp.ids
+        );
+        assert!(!resp.ids.is_empty());
+        // QueryStats.filtered must match a direct filtered search
+        let direct = index.search_one(&Query::new(q).k(K).window(80).filter(&pred));
+        assert_eq!(resp.ids, direct.ids);
+        assert_eq!(
+            resp.stats.filtered, direct.stats.filtered,
+            "filtered accounting diverged between engine and direct path"
+        );
+        assert!(resp.stats.filtered > 0);
+    }
+}
+
+#[test]
+fn mixed_specs_in_one_engine_batch_each_honored() {
+    let (index, qs) = engine_fixture();
+    let engine = Engine::start(Arc::clone(&index), EngineConfig {
+        workers: 1,
+        ..EngineConfig::default()
+    });
+    // same query, three different specs, submitted back to back (they
+    // may batch together; the batcher is spec-heterogeneous by design)
+    let q = qs[0].clone();
+    engine.submit_spec(q.clone(), QuerySpec::top_k(3));
+    engine.submit_spec(q.clone(), QuerySpec::top_k(7).with_window(100));
+    engine.submit_spec(q.clone(), QuerySpec::top_k(5).with_allow_list(vec![]));
+    let mut responses = engine.drain(3);
+    responses.sort_by_key(|r| r.id);
+    engine.shutdown();
+    assert_eq!(responses[0].ids.len(), 3);
+    assert_eq!(responses[1].ids.len(), 7);
+    // an empty allow-list filters everything: no results, full accounting
+    assert!(responses[2].ids.is_empty());
+    assert!(responses[2].stats.filtered > 0);
+}

@@ -12,7 +12,8 @@
 use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
 use leanvec::data::gt::{ground_truth, recall_at_k};
 use leanvec::index::builder::IndexBuilder;
-use leanvec::index::leanvec_index::{make_store, make_store_threads, SearchParams};
+use leanvec::index::leanvec_index::{make_store, make_store_threads};
+use leanvec::index::query::{Query, VectorIndex};
 use leanvec::linalg::matrix::dot;
 use leanvec::prop_assert;
 use leanvec::util::prop::{check, Config, Gen};
@@ -162,15 +163,16 @@ fn parallel_and_serial_builds_reach_the_same_recall() {
     let serial = build_index(&ds.database, &ds.learn_queries, 1);
     let parallel = build_index(&ds.database, &ds.learn_queries, 4);
 
-    let params = SearchParams {
-        window: 80,
-        rerank_window: 80,
-    };
+    let reqs: Vec<Query> = ds
+        .test_queries
+        .iter()
+        .map(|q| Query::new(q).k(k).window(80))
+        .collect();
     let recall = |ix: &leanvec::index::leanvec_index::LeanVecIndex| {
         let got: Vec<Vec<u32>> = ix
-            .search_batch(&ds.test_queries, k, params, 2)
+            .search_batch(&reqs, 2)
             .into_iter()
-            .map(|(ids, _)| ids)
+            .map(|r| r.ids)
             .collect();
         recall_at_k(&got, &truth, k)
     };
