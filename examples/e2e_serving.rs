@@ -107,6 +107,7 @@ fn main() -> anyhow::Result<()> {
             rerank_window: 60,
         },
         projector: QueryProjectorKind::Native,
+        ..EngineConfig::default()
     };
     println!("[e2e] serving {n_queries} requests...");
     let (_responses, report) =

@@ -6,7 +6,7 @@
 //! build).
 
 use leanvec::config::{Compression, GraphParams, ProjectionKind};
-use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, Metrics};
 use leanvec::data::gt::{ground_truth, recall_at_k};
 use leanvec::data::synth::{generate, SynthSpec};
 use leanvec::experiments::harness::{qps_at_recall, qps_recall_curve};
@@ -14,7 +14,9 @@ use leanvec::index::builder::IndexBuilder;
 use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
 use leanvec::index::persist::SnapshotMeta;
 use leanvec::index::query::{Query, VectorIndex};
+use leanvec::mutate::LiveIndex;
 use leanvec::util::json::Json;
+use leanvec::util::rng::Rng;
 use std::sync::Arc;
 
 /// Build-time breakdown at 1, 2 and all-cores threads; writes
@@ -137,6 +139,117 @@ fn bench_build_trajectory(
     }
 }
 
+/// Churn phase: streaming mutation throughput on a live index, search
+/// tail latency under 10% churn, and consolidation wall time — emitted
+/// machine-readable to `BENCH_mutate.json`.
+fn bench_churn(ds: &leanvec::data::synth::Dataset, gp: GraphParams) {
+    println!("\n== live mutation churn ==");
+    let index = IndexBuilder::new()
+        .projection(ProjectionKind::OodEigSearch)
+        .target_dim(160)
+        .graph_params(gp)
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+    let n0 = index.len();
+    let dim = ds.dim;
+    let live = Arc::new(LiveIndex::from_index(index));
+    let churn = (n0 / 10).max(1);
+    let mut rng = Rng::new(0xCAFE);
+    let new_vecs: Vec<Vec<f32>> = (0..churn)
+        .map(|_| {
+            let base = &ds.database[rng.below(n0)];
+            base.iter().map(|&x| x + 0.05 * rng.gaussian_f32()).collect()
+        })
+        .collect();
+
+    // --- direct (unloaded) mutation throughput
+    let t0 = std::time::Instant::now();
+    for (i, v) in new_vecs.iter().enumerate() {
+        live.insert((n0 + i) as u32, v).expect("insert");
+    }
+    let insert_qps = churn as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let mut victims: Vec<u32> = (0..n0 as u32).collect();
+    rng.shuffle(&mut victims);
+    victims.truncate(churn);
+    let t0 = std::time::Instant::now();
+    for &id in &victims {
+        live.delete(id).expect("delete");
+    }
+    let delete_qps = churn as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let consolidate = live.consolidate();
+    println!(
+        "direct: {insert_qps:.0} inserts/s, {delete_qps:.0} deletes/s | \
+         consolidation: {} removed, {} rewired in {:.3}s",
+        consolidate.removed, consolidate.rewired, consolidate.seconds
+    );
+
+    // --- search latency while another 10% churns through the engine
+    let cfg = EngineConfig {
+        workers: 2,
+        search: SearchParams {
+            window: 60,
+            rerank_window: 60,
+        },
+        consolidate_threshold: 0.08,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::start_live(Arc::clone(&live), cfg);
+    let n_queries = 2000usize;
+    let ext_base = (n0 + churn) as u32;
+    let live_now = live.live_ids();
+    let t0 = std::time::Instant::now();
+    let mut mutated = 0usize;
+    for i in 0..n_queries {
+        if mutated < churn && mutated * n_queries <= i * churn {
+            engine.submit_insert(ext_base + mutated as u32, new_vecs[mutated].clone());
+            engine.submit_delete(live_now[mutated * (live_now.len() / churn).max(1)]);
+            mutated += 1;
+        }
+        engine.submit(ds.test_queries[i % ds.test_queries.len()].clone(), 10);
+    }
+    let responses = engine.drain(n_queries);
+    engine.quiesce_mutations();
+    let churn_wall = t0.elapsed().as_secs_f64();
+    let stats = engine.ingest_stats();
+    engine.shutdown();
+    let metrics = Metrics::from_responses(&responses, churn_wall);
+    println!("under churn: {metrics}");
+    println!(
+        "ingest under load: {} inserts + {} deletes, {} consolidations ({:.3}s)",
+        stats.inserts, stats.deletes, stats.consolidations, stats.consolidate_seconds
+    );
+
+    let out = Json::obj(vec![
+        ("n", Json::num(n0 as f64)),
+        ("dim", Json::num(dim as f64)),
+        ("churn_fraction", Json::num(0.1)),
+        ("insert_qps", Json::num(insert_qps)),
+        ("delete_qps", Json::num(delete_qps)),
+        ("consolidate_removed", Json::num(consolidate.removed as f64)),
+        ("consolidate_rewired", Json::num(consolidate.rewired as f64)),
+        ("consolidate_seconds", Json::num(consolidate.seconds)),
+        ("churn_queries", Json::num(n_queries as f64)),
+        ("churn_search_qps", Json::num(metrics.qps)),
+        ("churn_latency_p50_ms", Json::num(metrics.latency_p50_ms)),
+        ("churn_latency_p99_ms", Json::num(metrics.latency_p99_ms)),
+        (
+            "churn_deleted_skipped_total",
+            Json::num(metrics.query_stats.deleted_skipped_total as f64),
+        ),
+        (
+            "churn_consolidations",
+            Json::num(stats.consolidations as f64),
+        ),
+        (
+            "churn_consolidate_seconds",
+            Json::num(stats.consolidate_seconds),
+        ),
+    ]);
+    match std::fs::write("BENCH_mutate.json", out.to_pretty()) {
+        Ok(()) => println!("[saved BENCH_mutate.json]"),
+        Err(e) => eprintln!("could not write BENCH_mutate.json: {e}"),
+    }
+}
+
 fn main() {
     let mut spec = SynthSpec::ood("bench-e2e", 768, 6_000, 256);
     spec.seed = 0xBE;
@@ -208,4 +321,7 @@ fn main() {
 
     // parallel build speedup trajectory -> BENCH_build.json
     bench_build_trajectory(&ds, gp, &truth, k);
+
+    // streaming mutation churn -> BENCH_mutate.json
+    bench_churn(&ds, gp);
 }

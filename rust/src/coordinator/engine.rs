@@ -1,19 +1,95 @@
 //! The serving engine: batcher thread + worker pool over a shared
-//! [`LeanVecIndex`].
+//! index — a frozen [`LeanVecIndex`], or a [`LiveIndex`] with an
+//! **ingest lane**: a dedicated mutation worker that applies streaming
+//! inserts/deletes interleaved with (never blocking) the search
+//! workers, and runs tombstone consolidation off the hot path when the
+//! tombstone fraction crosses [`EngineConfig::consolidate_threshold`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Metrics, ServeReport};
-use super::protocol::{QuerySpec, Request, Response};
+use super::protocol::{Mutation, QuerySpec, Request, Response};
 use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
-use crate::index::query::Query;
+use crate::index::query::{Query, SearchResult};
 use crate::graph::beam::SearchCtx;
-use crate::leanvec::model::rows_to_matrix;
+use crate::leanvec::model::{rows_to_matrix, LeanVecModel};
 use crate::linalg::Matrix;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::mutate::LiveIndex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// The index a running engine serves: frozen or live. Workers and the
+/// batcher are generic over this, so the live path reuses the whole
+/// batching/projection/worker machinery.
+#[derive(Clone)]
+enum ServeIndex {
+    Frozen(Arc<LeanVecIndex>),
+    Live(Arc<LiveIndex>),
+}
+
+impl ServeIndex {
+    fn model(&self) -> &LeanVecModel {
+        match self {
+            ServeIndex::Frozen(ix) => &ix.model,
+            ServeIndex::Live(ix) => ix.model(),
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            ServeIndex::Frozen(ix) => ix.len(),
+            ServeIndex::Live(ix) => ix.total_slots(),
+        }
+    }
+
+    fn search_prepared(
+        &self,
+        ctx: &mut SearchCtx,
+        q_proj: &[f32],
+        query: &Query,
+    ) -> SearchResult {
+        match self {
+            ServeIndex::Frozen(ix) => ix.search_prepared(ctx, q_proj, query),
+            ServeIndex::Live(ix) => ix.search_prepared(ctx, q_proj, query),
+        }
+    }
+}
+
+/// Ingest-lane counters (atomics: the lane runs on its own thread).
+#[derive(Debug, Default)]
+pub struct IngestStats {
+    pub inserts: AtomicUsize,
+    pub deletes: AtomicUsize,
+    /// rejected mutations (duplicate/unknown id, dimension mismatch)
+    pub errors: AtomicUsize,
+    pub consolidations: AtomicUsize,
+    /// total wall-clock nanoseconds spent consolidating
+    pub consolidate_nanos: AtomicU64,
+}
+
+/// A plain-value copy of [`IngestStats`] for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngestSnapshot {
+    pub inserts: usize,
+    pub deletes: usize,
+    pub errors: usize,
+    pub consolidations: usize,
+    pub consolidate_seconds: f64,
+}
+
+impl IngestStats {
+    pub fn snapshot(&self) -> IngestSnapshot {
+        IngestSnapshot {
+            inserts: self.inserts.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            consolidations: self.consolidations.load(Ordering::Relaxed),
+            consolidate_seconds: self.consolidate_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
 
 /// How the batcher projects query batches.
 #[derive(Clone, Debug)]
@@ -32,6 +108,12 @@ pub struct EngineConfig {
     pub batch: BatchPolicy,
     pub search: SearchParams,
     pub projector: QueryProjectorKind,
+    /// Live engines only: tombstone fraction at which the ingest lane
+    /// runs a consolidation pass (after applying a mutation, off the
+    /// search hot path). `<= 0` disables the tombstone-fraction
+    /// trigger; the pending-insert-log memory bound still folds the
+    /// journal regardless.
+    pub consolidate_threshold: f64,
 }
 
 impl Default for EngineConfig {
@@ -43,16 +125,25 @@ impl Default for EngineConfig {
             batch: BatchPolicy::default(),
             search: SearchParams::default(),
             projector: QueryProjectorKind::Native,
+            consolidate_threshold: 0.2,
         }
     }
 }
 
-/// A running engine. Submit requests, then `drain` responses.
+/// A running engine. Submit requests, then `drain` responses; live
+/// engines additionally accept mutations
+/// ([`Engine::submit_insert`]/[`Engine::submit_delete`]) on the ingest
+/// lane.
 pub struct Engine {
     req_tx: Option<Sender<Request>>,
     resp_rx: Receiver<Response>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    // ingest lane (live engines only)
+    mut_tx: Option<Sender<Mutation>>,
+    ingest: Option<JoinHandle<()>>,
+    ingest_stats: Arc<IngestStats>,
+    live: Option<Arc<LiveIndex>>,
     next_id: AtomicU64,
     started: Instant,
 }
@@ -93,13 +184,44 @@ impl Engine {
     }
 
     pub fn start(index: Arc<LeanVecIndex>, cfg: EngineConfig) -> Engine {
+        Engine::start_serve(ServeIndex::Frozen(index), cfg)
+    }
+
+    /// Start a **live** engine over a mutable index: the same
+    /// batcher/worker pipeline as [`Engine::start`], plus an ingest
+    /// lane — one mutation thread draining
+    /// [`Engine::submit_insert`]/[`Engine::submit_delete`] in
+    /// submission order, concurrently with the search workers (no
+    /// global lock: searches hold read guards, mutations write briefly).
+    /// After each mutation the lane checks the tombstone fraction and
+    /// runs [`LiveIndex::consolidate`] when it crosses
+    /// [`EngineConfig::consolidate_threshold`] — off the search path.
+    pub fn start_live(live: Arc<LiveIndex>, cfg: EngineConfig) -> Engine {
+        let threshold = cfg.consolidate_threshold;
+        let mut engine = Engine::start_serve(ServeIndex::Live(Arc::clone(&live)), cfg);
+        let (mut_tx, mut_rx) = channel::<Mutation>();
+        let stats = Arc::clone(&engine.ingest_stats);
+        let ilive = Arc::clone(&live);
+        let ingest = std::thread::Builder::new()
+            .name("leanvec-ingest".into())
+            .spawn(move || {
+                ingest_loop(ilive, mut_rx, stats, threshold);
+            })
+            .expect("spawn ingest");
+        engine.mut_tx = Some(mut_tx);
+        engine.ingest = Some(ingest);
+        engine.live = Some(live);
+        engine
+    }
+
+    fn start_serve(index: ServeIndex, cfg: EngineConfig) -> Engine {
         let (req_tx, req_rx) = channel::<Request>();
         let (work_tx, work_rx) = channel::<WorkItem>();
         let (resp_tx, resp_rx) = channel::<Response>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
         // --- batcher thread: batch, project, fan out
-        let bindex = Arc::clone(&index);
+        let bindex = index.clone();
         let bcfg = cfg.clone();
         let batcher = std::thread::Builder::new()
             .name("leanvec-batcher".into())
@@ -111,7 +233,7 @@ impl Engine {
         // --- workers: search + rerank
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
-                let windex = Arc::clone(&index);
+                let windex = index.clone();
                 let wrx = Arc::clone(&work_rx);
                 let wtx = resp_tx.clone();
                 let search = cfg.search;
@@ -177,6 +299,10 @@ impl Engine {
             resp_rx,
             batcher: Some(batcher),
             workers,
+            mut_tx: None,
+            ingest: None,
+            ingest_stats: Arc::new(IngestStats::default()),
+            live: None,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
         }
@@ -202,6 +328,48 @@ impl Engine {
         id
     }
 
+    /// Enqueue an insert on the ingest lane (live engines only; panics
+    /// on an engine started with [`Engine::start`]). Applied
+    /// asynchronously, in submission order, concurrently with searches.
+    pub fn submit_insert(&self, ext_id: u32, vector: Vec<f32>) {
+        self.mut_tx
+            .as_ref()
+            .expect("mutations need a live engine (Engine::start_live)")
+            .send(Mutation::Insert { ext_id, vector })
+            .expect("ingest alive");
+    }
+
+    /// Enqueue a delete on the ingest lane (live engines only; panics
+    /// on an engine started with [`Engine::start`]).
+    pub fn submit_delete(&self, ext_id: u32) {
+        self.mut_tx
+            .as_ref()
+            .expect("mutations need a live engine (Engine::start_live)")
+            .send(Mutation::Delete { ext_id })
+            .expect("ingest alive");
+    }
+
+    /// Ingest-lane counters (zeros on a frozen engine).
+    pub fn ingest_stats(&self) -> IngestSnapshot {
+        self.ingest_stats.snapshot()
+    }
+
+    /// The live index this engine serves, if started with
+    /// [`Engine::start_live`].
+    pub fn live_index(&self) -> Option<&Arc<LiveIndex>> {
+        self.live.as_ref()
+    }
+
+    /// Block until every mutation submitted so far has been applied:
+    /// closes the ingest lane and joins the ingest worker. Searches are
+    /// unaffected; further `submit_insert`/`submit_delete` calls panic.
+    pub fn quiesce_mutations(&mut self) {
+        drop(self.mut_tx.take());
+        if let Some(h) = self.ingest.take() {
+            let _ = h.join();
+        }
+    }
+
     /// Blockingly collect `n` responses.
     pub fn drain(&self, n: usize) -> Vec<Response> {
         (0..n)
@@ -209,8 +377,10 @@ impl Engine {
             .collect()
     }
 
-    /// Stop accepting requests, join all threads.
+    /// Stop accepting requests, join all threads. Pending mutations are
+    /// applied before the ingest lane joins.
     pub fn shutdown(mut self) -> Vec<Response> {
+        self.quiesce_mutations();
         drop(self.req_tx.take());
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
@@ -304,7 +474,7 @@ fn resolve_spec(spec: &QuerySpec, defaults: SearchParams) -> SearchParams {
 }
 
 fn batcher_loop(
-    index: Arc<LeanVecIndex>,
+    index: ServeIndex,
     cfg: EngineConfig,
     req_rx: Receiver<Request>,
     work_tx: Sender<WorkItem>,
@@ -324,17 +494,19 @@ fn batcher_loop(
 
     while let Some(batch) = batcher.next_batch(&req_rx) {
         let bs = batch.len();
-        // project the whole batch as one matmul: (d, D) x (D, B)
+        // project the whole batch as one matmul: (d, D) x (D, B). The
+        // projection model is frozen even on a live index, so batching
+        // is mutation-oblivious.
         let queries: Vec<Vec<f32>> = batch.iter().map(|r| r.query.clone()).collect();
         let projected: Vec<Vec<f32>> = match pjrt.as_mut() {
             Some(p) => {
                 use crate::index::builder::BatchProjector;
-                p.project(&index.model.a, &queries)
+                p.project(&index.model().a, &queries)
             }
             None => {
                 // single matmul on the batcher thread: Q (B, D) x A^T
                 let qm = rows_to_matrix(&queries);
-                let proj: Matrix = qm.matmul_nt(&index.model.a); // (B, d)
+                let proj: Matrix = qm.matmul_nt(&index.model().a); // (B, d)
                 (0..bs).map(|i| proj.row(i).to_vec()).collect()
             }
         };
@@ -349,6 +521,66 @@ fn batcher_loop(
             {
                 return;
             }
+        }
+    }
+}
+
+/// Pending-insert-log bound for the ingest lane: once this many inserts
+/// accumulate since the last consolidation, the lane folds the log even
+/// with zero tombstones (insert-only workloads must not grow the
+/// journal — and every snapshot's MUTLOG section — without bound).
+const INGEST_LOG_FOLD: usize = 65_536;
+
+/// The ingest lane: apply mutations in submission order; rejections are
+/// counted, never fatal. After each mutation, consolidate if the
+/// tombstone fraction crossed the threshold (or the pending insert log
+/// outgrew [`INGEST_LOG_FOLD`]) — this runs here, on the ingest thread,
+/// so the search workers never pay for it (searches proceed
+/// concurrently through the rewiring phase and block only for the
+/// final compaction swap).
+fn ingest_loop(
+    live: Arc<LiveIndex>,
+    mut_rx: Receiver<Mutation>,
+    stats: Arc<IngestStats>,
+    consolidate_threshold: f64,
+) {
+    while let Ok(m) = mut_rx.recv() {
+        let applied = match m {
+            Mutation::Insert { ext_id, vector } => match live.insert(ext_id, &vector) {
+                Ok(_) => {
+                    stats.inserts.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("ingest: {e}");
+                    false
+                }
+            },
+            Mutation::Delete { ext_id } => match live.delete(ext_id) {
+                Ok(_) => {
+                    stats.deletes.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+                Err(e) => {
+                    eprintln!("ingest: {e}");
+                    false
+                }
+            },
+        };
+        if !applied {
+            stats.errors.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        // the log-size bound is independent of the tombstone trigger: a
+        // disabled threshold must not disable the memory bound
+        let tombstones_due =
+            consolidate_threshold > 0.0 && live.tombstone_fraction() >= consolidate_threshold;
+        if tombstones_due || live.pending_inserts() >= INGEST_LOG_FOLD {
+            let report = live.consolidate();
+            stats.consolidations.fetch_add(1, Ordering::Relaxed);
+            stats
+                .consolidate_nanos
+                .fetch_add((report.seconds * 1e9) as u64, Ordering::Relaxed);
         }
     }
 }
@@ -520,6 +752,73 @@ mod tests {
             None,
         );
         assert_eq!(responses[0].ids, direct.ids);
+    }
+
+    #[test]
+    fn live_engine_ingest_lane_applies_mutations_and_consolidates() {
+        let mut rng = Rng::new(3);
+        let rows: Vec<Vec<f32>> = (0..300)
+            .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let mut gp = GraphParams::for_similarity(Similarity::L2);
+        gp.max_degree = 12;
+        gp.build_window = 30;
+        let built = IndexBuilder::new()
+            .projection(ProjectionKind::Id)
+            .target_dim(8)
+            .graph_params(gp)
+            .build(&rows, None, Similarity::L2);
+        let live = Arc::new(crate::mutate::LiveIndex::from_index(built));
+        let mut engine = Engine::start_live(
+            Arc::clone(&live),
+            EngineConfig {
+                workers: 2,
+                consolidate_threshold: 0.05,
+                ..EngineConfig::default()
+            },
+        );
+        // mutations and searches interleaved on a running engine
+        for i in 0..30u32 {
+            engine.submit_delete(i);
+        }
+        for i in 0..30u32 {
+            let v: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+            engine.submit_insert(1000 + i, v);
+        }
+        for q in rows.iter().take(20) {
+            engine.submit(q.clone(), 5);
+        }
+        let responses = engine.drain(20);
+        assert_eq!(responses.len(), 20);
+        for r in &responses {
+            assert_eq!(r.ids.len(), 5);
+        }
+        engine.quiesce_mutations();
+        let stats = engine.ingest_stats();
+        assert_eq!(stats.inserts, 30);
+        assert_eq!(stats.deletes, 30);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.consolidations >= 1, "5% threshold crossed: {stats:?}");
+        assert!(stats.consolidate_seconds >= 0.0);
+        assert_eq!(live.live_len(), 300);
+        // with the lane quiesced, deleted ids can never surface again
+        let r = live.search_one(&Query::new(&rows[0]).k(10).window(60));
+        assert!(
+            r.ids.iter().all(|&id| id >= 30),
+            "deleted id returned: {:?}",
+            r.ids
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn frozen_engine_has_no_ingest_lane() {
+        let index = build_index(100, 8, 4);
+        let engine = Engine::start(index, EngineConfig::default());
+        assert!(engine.live_index().is_none());
+        let stats = engine.ingest_stats();
+        assert_eq!(stats.inserts + stats.deletes + stats.errors, 0);
+        engine.shutdown();
     }
 
     #[test]

@@ -1,7 +1,72 @@
-//! Serving metrics: QPS, latency percentiles, recall.
+//! Serving metrics: QPS, latency percentiles, recall, and the
+//! per-query [`QueryStats`] distribution (hops, bytes touched,
+//! filtered, tombstones routed through) aggregated as p50/p99 instead
+//! of being dropped after the response echo.
+//!
+//! [`QueryStats`]: crate::index::query::QueryStats
 
 use super::protocol::Response;
 use crate::util::stats::Summary;
+
+/// p50/p99 of one per-query counter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsPercentiles {
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl StatsPercentiles {
+    fn of(s: &Summary) -> StatsPercentiles {
+        if s.is_empty() {
+            return StatsPercentiles::default();
+        }
+        StatsPercentiles {
+            p50: s.p50(),
+            p99: s.p99(),
+        }
+    }
+}
+
+/// The served [`QueryStats`] distribution across one run.
+///
+/// [`QueryStats`]: crate::index::query::QueryStats
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryStatsSummary {
+    /// graph hops per query
+    pub hops: StatsPercentiles,
+    /// bytes of vector data read per query
+    pub bytes_touched: StatsPercentiles,
+    /// ids excluded by the request's filter predicate
+    pub filtered: StatsPercentiles,
+    /// tombstoned ids routed through (live indexes)
+    pub deleted_skipped: StatsPercentiles,
+    /// total tombstone skips across the run (a quick liveness signal)
+    pub deleted_skipped_total: usize,
+}
+
+impl QueryStatsSummary {
+    pub fn from_responses(responses: &[Response]) -> QueryStatsSummary {
+        let mut hops = Summary::new();
+        let mut bytes = Summary::new();
+        let mut filtered = Summary::new();
+        let mut deleted = Summary::new();
+        let mut deleted_total = 0usize;
+        for r in responses {
+            hops.push(r.stats.hops as f64);
+            bytes.push(r.stats.bytes_touched as f64);
+            filtered.push(r.stats.filtered as f64);
+            deleted.push(r.stats.deleted_skipped as f64);
+            deleted_total += r.stats.deleted_skipped;
+        }
+        QueryStatsSummary {
+            hops: StatsPercentiles::of(&hops),
+            bytes_touched: StatsPercentiles::of(&bytes),
+            filtered: StatsPercentiles::of(&filtered),
+            deleted_skipped: StatsPercentiles::of(&deleted),
+            deleted_skipped_total: deleted_total,
+        }
+    }
+}
 
 /// Aggregated serving metrics.
 #[derive(Clone, Debug)]
@@ -13,6 +78,8 @@ pub struct Metrics {
     pub latency_p99_ms: f64,
     pub latency_mean_ms: f64,
     pub mean_batch: f64,
+    /// per-query traversal accounting, aggregated (not dropped)
+    pub query_stats: QueryStatsSummary,
 }
 
 impl Metrics {
@@ -36,21 +103,34 @@ impl Metrics {
             latency_p99_ms: lat.p99(),
             latency_mean_ms: lat.mean(),
             mean_batch: if n > 0 { batch / n as f64 } else { 0.0 },
+            query_stats: QueryStatsSummary::from_responses(responses),
         }
     }
 }
 
 impl std::fmt::Display for Metrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let qs = &self.query_stats;
         write!(
             f,
-            "{} queries in {:.3}s -> {:.0} QPS | lat p50 {:.3} ms p99 {:.3} ms | mean batch {:.1}",
+            "{} queries in {:.3}s -> {:.0} QPS | lat p50 {:.3} ms p99 {:.3} ms | mean batch {:.1}\n\
+             per-query: hops p50 {:.0} p99 {:.0} | bytes p50 {:.0} p99 {:.0} | \
+             filtered p50 {:.0} p99 {:.0} | deleted-skipped p50 {:.0} p99 {:.0} (total {})",
             self.queries,
             self.wall_seconds,
             self.qps,
             self.latency_p50_ms,
             self.latency_p99_ms,
-            self.mean_batch
+            self.mean_batch,
+            qs.hops.p50,
+            qs.hops.p99,
+            qs.bytes_touched.p50,
+            qs.bytes_touched.p99,
+            qs.filtered.p50,
+            qs.filtered.p99,
+            qs.deleted_skipped.p50,
+            qs.deleted_skipped.p99,
+            qs.deleted_skipped_total
         )
     }
 }
@@ -100,6 +180,31 @@ mod tests {
             latency_s: lat,
             batch_size: batch,
         }
+    }
+
+    fn resp_with_stats(id: u64, hops: usize, bytes: usize, deleted: usize) -> Response {
+        let mut r = resp(id, vec![1], 0.001, 1);
+        r.stats.hops = hops;
+        r.stats.bytes_touched = bytes;
+        r.stats.deleted_skipped = deleted;
+        r
+    }
+
+    #[test]
+    fn query_stats_aggregate_as_percentiles() {
+        let rs: Vec<Response> = (0..100)
+            .map(|i| resp_with_stats(i, i as usize, 1000 * i as usize, if i < 10 { 3 } else { 0 }))
+            .collect();
+        let m = Metrics::from_responses(&rs, 1.0);
+        let qs = m.query_stats;
+        assert!(qs.hops.p50 > 40.0 && qs.hops.p50 < 60.0, "{:?}", qs.hops);
+        assert!(qs.hops.p99 > qs.hops.p50);
+        assert!(qs.bytes_touched.p99 > 90_000.0);
+        assert_eq!(qs.deleted_skipped_total, 30);
+        assert_eq!(qs.filtered.p99, 0.0);
+        // the Display line carries the aggregates
+        let text = format!("{m}");
+        assert!(text.contains("deleted-skipped"), "{text}");
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod metrics;
 pub mod protocol;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, EngineConfig, QueryProjectorKind};
-pub use metrics::{Metrics, ServeReport};
-pub use protocol::{QuerySpec, Request, Response};
+pub use engine::{Engine, EngineConfig, IngestSnapshot, IngestStats, QueryProjectorKind};
+pub use metrics::{Metrics, QueryStatsSummary, ServeReport, StatsPercentiles};
+pub use protocol::{Mutation, QuerySpec, Request, Response};

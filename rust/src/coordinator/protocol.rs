@@ -59,6 +59,21 @@ impl QuerySpec {
     }
 }
 
+/// One mutation for the live engine's ingest lane
+/// ([`Engine::submit_insert`] / [`Engine::submit_delete`]): applied in
+/// submission order by the ingest worker, interleaved with — never
+/// blocking — the search workers.
+///
+/// [`Engine::submit_insert`]: crate::coordinator::Engine::submit_insert
+/// [`Engine::submit_delete`]: crate::coordinator::Engine::submit_delete
+#[derive(Clone, Debug)]
+pub enum Mutation {
+    /// Insert `vector` under the caller's external id.
+    Insert { ext_id: u32, vector: Vec<f32> },
+    /// Tombstone the vector with this external id.
+    Delete { ext_id: u32 },
+}
+
 /// One similarity-search request.
 #[derive(Clone, Debug)]
 pub struct Request {

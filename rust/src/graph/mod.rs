@@ -7,4 +7,4 @@ pub mod hnsw;
 pub mod vamana;
 
 pub use beam::{CtxPool, SearchCtx, SearchStats};
-pub use vamana::{Adjacency, VamanaBuilder, VamanaGraph};
+pub use vamana::{medoid_of, robust_prune, Adjacency, VamanaBuilder, VamanaGraph};

@@ -238,6 +238,103 @@ struct PruneCand {
     alive: bool,
 }
 
+/// α-slack robust prune (DiskANN convention, squared distances):
+/// greedily keep the closest candidate, drop everything it "covers":
+/// `s` covers `c` when `alpha_l2 * d(s, c) <= d(p, c)`. Keeps at most
+/// `max_degree` ids.
+///
+/// Pruning geometry is always Euclidean on the decoded vectors — for
+/// MIPS the navigation scores stay inner-product, but edge
+/// diversification over a *proximity* structure is the robust choice
+/// (the paper's alpha = 0.95 for IP expresses the same slack; we map it
+/// to the equivalent L2 slack 1/alpha). Free-standing so the batch
+/// builder and the live-mutation path ([`crate::mutate`]) share one
+/// copy of the rule.
+pub fn robust_prune(
+    store: &dyn ScoreStore,
+    p: u32,
+    p_vec: &[f32],
+    pool: &[u32],
+    alpha: f32,
+    max_degree: usize,
+) -> Vec<u32> {
+    let alpha_l2 = if alpha >= 1.0 { alpha } else { 1.0 / alpha };
+    let mut cands: Vec<PruneCand> = pool
+        .iter()
+        .filter(|&&id| id != p)
+        .map(|&id| {
+            let vec = store.decode(id);
+            PruneCand {
+                id,
+                dist_to_p: l2_sq(p_vec, &vec),
+                vec,
+                alive: true,
+            }
+        })
+        .collect();
+    // total_cmp: identical ordering for the (non-negative, finite)
+    // squared distances the builder produces, but a NaN smuggled in by
+    // runtime input must never panic the live ingest lane
+    cands.sort_by(|a, b| a.dist_to_p.total_cmp(&b.dist_to_p));
+
+    let mut out: Vec<u32> = Vec::with_capacity(max_degree);
+    for i in 0..cands.len() {
+        if !cands[i].alive {
+            continue;
+        }
+        out.push(cands[i].id);
+        if out.len() >= max_degree {
+            break;
+        }
+        // deactivate covered candidates
+        let (head, tail) = cands.split_at_mut(i + 1);
+        let s = &head[i];
+        for c in tail.iter_mut().filter(|c| c.alive) {
+            if alpha_l2 * l2_sq(&s.vec, &c.vec) <= c.dist_to_p {
+                c.alive = false;
+            }
+        }
+    }
+    out
+}
+
+/// Medoid of `store`: the stored vector most similar to the (sampled)
+/// dataset centroid — the graph's search entry point. Shared by the
+/// builder and by tombstone consolidation (which must re-anchor the
+/// entry point after compaction). Returns 0 for an empty store.
+pub fn medoid_of(store: &dyn ScoreStore) -> u32 {
+    let n = store.len();
+    if n == 0 {
+        return 0;
+    }
+    let dim = store.dim();
+    let mut mean = vec![0.0f64; dim];
+    // sample up to 2048 vectors for the centroid
+    let step = (n / 2048).max(1);
+    let mut count = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let v = store.decode(i as u32);
+        for (m, &x) in mean.iter_mut().zip(v.iter()) {
+            *m += x as f64;
+        }
+        count += 1;
+        i += step;
+    }
+    let mean_f32: Vec<f32> = mean.iter().map(|&m| (m / count as f64) as f32).collect();
+    let pq = store.prepare(&mean_f32, Similarity::L2);
+    let mut best = (0u32, f32::NEG_INFINITY);
+    i = 0;
+    while i < n {
+        let s = store.score(&pq, i as u32);
+        if s > best.1 {
+            best = (i as u32, s);
+        }
+        i += step;
+    }
+    best.0
+}
+
 /// Vamana builder.
 pub struct VamanaBuilder {
     pub params: GraphParams,
@@ -468,15 +565,7 @@ impl VamanaBuilder {
         }
     }
 
-    /// α-slack robust prune (DiskANN convention, squared distances):
-    /// greedily keep the closest candidate, drop everything it "covers":
-    /// `s` covers `c` when `alpha_l2 * d(s, c) <= d(p, c)`.
-    ///
-    /// Pruning geometry is always Euclidean on the decoded vectors —
-    /// for MIPS the navigation scores stay inner-product, but edge
-    /// diversification over a *proximity* structure is the robust choice
-    /// (the paper's alpha = 0.95 for IP expresses the same slack; we map
-    /// it to the equivalent L2 slack 1/alpha).
+    /// [`robust_prune`] at this builder's degree bound.
     fn robust_prune(
         &self,
         store: &dyn ScoreStore,
@@ -485,73 +574,12 @@ impl VamanaBuilder {
         pool: &[u32],
         alpha: f32,
     ) -> Vec<u32> {
-        let r = self.params.max_degree;
-        let alpha_l2 = if alpha >= 1.0 { alpha } else { 1.0 / alpha };
-        let mut cands: Vec<PruneCand> = pool
-            .iter()
-            .filter(|&&id| id != p)
-            .map(|&id| {
-                let vec = store.decode(id);
-                PruneCand {
-                    id,
-                    dist_to_p: l2_sq(p_vec, &vec),
-                    vec,
-                    alive: true,
-                }
-            })
-            .collect();
-        cands.sort_by(|a, b| a.dist_to_p.partial_cmp(&b.dist_to_p).unwrap());
-
-        let mut out: Vec<u32> = Vec::with_capacity(r);
-        for i in 0..cands.len() {
-            if !cands[i].alive {
-                continue;
-            }
-            out.push(cands[i].id);
-            if out.len() >= r {
-                break;
-            }
-            // deactivate covered candidates
-            let (head, tail) = cands.split_at_mut(i + 1);
-            let s = &head[i];
-            for c in tail.iter_mut().filter(|c| c.alive) {
-                if alpha_l2 * l2_sq(&s.vec, &c.vec) <= c.dist_to_p {
-                    c.alive = false;
-                }
-            }
-        }
-        out
+        robust_prune(store, p, p_vec, pool, alpha, self.params.max_degree)
     }
 
     /// Medoid: the stored vector most similar to the dataset centroid.
     fn find_medoid(&self, store: &dyn ScoreStore) -> u32 {
-        let n = store.len();
-        let dim = store.dim();
-        let mut mean = vec![0.0f64; dim];
-        // sample up to 2048 vectors for the centroid
-        let step = (n / 2048).max(1);
-        let mut count = 0usize;
-        let mut i = 0usize;
-        while i < n {
-            let v = store.decode(i as u32);
-            for (m, &x) in mean.iter_mut().zip(v.iter()) {
-                *m += x as f64;
-            }
-            count += 1;
-            i += step;
-        }
-        let mean_f32: Vec<f32> = mean.iter().map(|&m| (m / count as f64) as f32).collect();
-        let pq = store.prepare(&mean_f32, Similarity::L2);
-        let mut best = (0u32, f32::NEG_INFINITY);
-        i = 0;
-        while i < n {
-            let s = store.score(&pq, i as u32);
-            if s > best.1 {
-                best = (i as u32, s);
-            }
-            i += step;
-        }
-        best.0
+        medoid_of(store)
     }
 }
 

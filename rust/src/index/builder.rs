@@ -285,6 +285,7 @@ impl VectorIndex for SearchIndex {
                         bytes_touched: ctx.stats.scored * store.bytes_per_vector(),
                         hops: ctx.stats.hops,
                         filtered: ctx.stats.filtered,
+                        deleted_skipped: 0,
                     },
                 }
             }

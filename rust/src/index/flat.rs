@@ -88,6 +88,7 @@ impl VectorIndex for FlatIndex {
                 bytes_touched: scored * self.store.bytes_per_vector(),
                 hops: 0,
                 filtered,
+                deleted_skipped: 0,
             },
         }
     }

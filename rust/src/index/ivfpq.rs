@@ -345,6 +345,7 @@ impl VectorIndex for IvfPqIndex {
                 bytes_touched: scored * self.params.m,
                 hops: nprobe,
                 filtered,
+                deleted_skipped: 0,
             },
         }
     }

@@ -161,6 +161,7 @@ impl LeanVecIndex {
                     bytes_touched: ctx.stats.scored * self.primary.bytes_per_vector(),
                     hops: ctx.stats.hops,
                     filtered: ctx.stats.filtered,
+                    deleted_skipped: 0,
                 },
             };
         }
@@ -174,6 +175,7 @@ impl LeanVecIndex {
                 + take * self.secondary.rerank_bytes_per_vector(),
             hops: ctx.stats.hops,
             filtered: ctx.stats.filtered,
+            deleted_skipped: 0,
         };
         // re-rank with secondary vectors in the original space
         let (ids, scores) = self.rerank(query.vector(), &ids, k);
@@ -184,14 +186,7 @@ impl LeanVecIndex {
     /// Uses `score_rerank`, so a two-level secondary contributes its
     /// residual level here (full-accuracy re-ranking).
     pub fn rerank(&self, q: &[f32], ids: &[u32], k: usize) -> (Vec<u32>, Vec<f32>) {
-        let pq: PreparedQuery = self.secondary.prepare(q, self.sim);
-        let mut scored: Vec<(f32, u32)> = ids
-            .iter()
-            .map(|&id| (self.secondary.score_rerank(&pq, id), id))
-            .collect();
-        // total_cmp: a NaN score must never panic the serving thread
-        scored.sort_by(|a, b| b.0.total_cmp(&a.0));
-        scored.truncate(k);
+        let scored = rerank_top_k(self.secondary.as_ref(), q, self.sim, ids, k);
         (
             scored.iter().map(|&(_, id)| id).collect(),
             scored.iter().map(|&(s, _)| s).collect(),
@@ -223,6 +218,30 @@ impl LeanVecIndex {
         let full_fp16 = self.model.input_dim() * 2;
         full_fp16 as f64 / self.primary.bytes_per_vector() as f64
     }
+}
+
+/// THE re-rank ordering rule: re-score `ids` against `store` in the
+/// original space (`score_rerank`, so two-level stores contribute their
+/// residual), NaN-safe descending sort, truncate to `k`. Returns
+/// `(score, id)` pairs best first. One copy shared by the frozen index
+/// and the live index ([`crate::mutate::LiveIndex`]) so their
+/// tie-breaking can never drift apart.
+pub(crate) fn rerank_top_k(
+    store: &dyn ScoreStore,
+    q: &[f32],
+    sim: Similarity,
+    ids: &[u32],
+    k: usize,
+) -> Vec<(f32, u32)> {
+    let pq: PreparedQuery = store.prepare(q, sim);
+    let mut scored: Vec<(f32, u32)> = ids
+        .iter()
+        .map(|&id| (store.score_rerank(&pq, id), id))
+        .collect();
+    // total_cmp: a NaN score must never panic the serving thread
+    scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+    scored.truncate(k);
+    scored
 }
 
 impl VectorIndex for LeanVecIndex {

@@ -34,7 +34,7 @@
 use std::fmt;
 use std::path::Path;
 
-use crate::config::{BuildParams, Compression, Similarity};
+use crate::config::{BuildParams, Compression, ProjectionKind, Similarity};
 use crate::data::io::{bin, crc32};
 use crate::graph::vamana::VamanaGraph;
 use crate::index::leanvec_index::{BuildBreakdown, LeanVecIndex, SearchParams};
@@ -45,9 +45,20 @@ use crate::util::json::Json;
 /// First 8 bytes of every snapshot.
 pub const MAGIC: [u8; 8] = *b"LEANVEC\0";
 
-/// Current snapshot format version. Bump only for incompatible layout
-/// changes; appending new sections does NOT require a bump.
+/// Current snapshot format version for *frozen* indexes. Bump only for
+/// incompatible layout changes; appending new sections does NOT require
+/// a bump.
 pub const FORMAT_VERSION: u32 = 1;
+
+/// Format version written for *live* snapshots (`mutate::persist_live`):
+/// ones carrying tombstones, a non-identity id map, or a pending insert
+/// log. The bump is deliberate — a live snapshot *reshapes the meaning*
+/// of the store/graph sections (some rows are dead, result ids go
+/// through the id map), so a version-1 reader that would silently serve
+/// deleted rows must reject the file loudly instead
+/// ([`SnapshotError::UnsupportedVersion`]), exactly per the PR 2
+/// versioning contract.
+pub const FORMAT_VERSION_LIVE: u32 = 2;
 
 /// JSON metadata: params, provenance, build breakdown.
 pub const SECTION_META: [u8; 8] = *b"META\0\0\0\0";
@@ -59,6 +70,12 @@ pub const SECTION_PRIMARY: [u8; 8] = *b"PRIMARY\0";
 pub const SECTION_SECONDARY: [u8; 8] = *b"SECSTORE";
 /// The Vamana graph, CSR-packed.
 pub const SECTION_GRAPH: [u8; 8] = *b"GRAPH\0\0\0";
+/// Live index only: tombstone bitmap (see `docs/SNAPSHOT_FORMAT.md`).
+pub const SECTION_TOMBS: [u8; 8] = *b"TOMBS\0\0\0";
+/// Live index only: internal-slot -> external-id map.
+pub const SECTION_IDMAP: [u8; 8] = *b"IDMAP\0\0\0";
+/// Live index only: mutation journal + pending insert log.
+pub const SECTION_MUTLOG: [u8; 8] = *b"MUTLOG\0\0";
 
 /// Everything that can go wrong reading or writing a snapshot. Old
 /// readers meeting new files, bit rot, and partial writes all map to
@@ -152,12 +169,23 @@ pub fn tag_str(tag: &[u8; 8]) -> String {
 /// streamed section by section (never concatenated in memory), so peak
 /// memory is the section buffers the caller already holds.
 pub fn write_sections(path: &Path, sections: &[RawSection]) -> Result<u64, SnapshotError> {
+    write_sections_versioned(path, sections, FORMAT_VERSION)
+}
+
+/// [`write_sections`] with an explicit format version — the live
+/// snapshot writer stamps [`FORMAT_VERSION_LIVE`] so frozen-only
+/// readers reject the file instead of silently serving dead rows.
+pub fn write_sections_versioned(
+    path: &Path,
+    sections: &[RawSection],
+    version: u32,
+) -> Result<u64, SnapshotError> {
     use std::io::Write;
     const ENTRY: usize = 8 + 8 + 8 + 4; // tag, offset, len, crc
     let header_len = 16 + sections.len() * ENTRY;
     let mut header = Vec::with_capacity(header_len);
     header.extend_from_slice(&MAGIC);
-    bin::put_u32(&mut header, FORMAT_VERSION);
+    bin::put_u32(&mut header, version);
     bin::put_u32(&mut header, sections.len() as u32);
     let mut offset = header_len as u64;
     for s in sections {
@@ -203,8 +231,29 @@ pub fn read_sections(path: &Path) -> Result<Vec<RawSection>, SnapshotError> {
     parse_sections(&buf)
 }
 
-/// [`read_sections`] over an in-memory buffer.
+/// [`read_sections`] that also accepts live snapshots: returns the
+/// file's format version alongside the sections. Used by
+/// `mutate::LiveIndex::load`, which understands both layouts.
+pub fn read_sections_any(path: &Path) -> Result<(u32, Vec<RawSection>), SnapshotError> {
+    let buf = std::fs::read(path).map_err(SnapshotError::Io)?;
+    parse_sections_any(&buf, FORMAT_VERSION_LIVE)
+}
+
+/// [`read_sections`] over an in-memory buffer. Accepts only
+/// [`FORMAT_VERSION`] — live snapshots are rejected with
+/// [`SnapshotError::UnsupportedVersion`] (this is the "old reader"
+/// path that must never silently serve a mutated index).
 pub fn parse_sections(buf: &[u8]) -> Result<Vec<RawSection>, SnapshotError> {
+    let (_v, sections) = parse_sections_any(buf, FORMAT_VERSION)?;
+    Ok(sections)
+}
+
+/// Parse header + section table + checksummed payloads, accepting any
+/// format version up to `max_version`.
+fn parse_sections_any(
+    buf: &[u8],
+    max_version: u32,
+) -> Result<(u32, Vec<RawSection>), SnapshotError> {
     if buf.len() >= 8 && buf[..8] != MAGIC {
         return Err(SnapshotError::BadMagic);
     }
@@ -212,10 +261,10 @@ pub fn parse_sections(buf: &[u8]) -> Result<Vec<RawSection>, SnapshotError> {
         return Err(SnapshotError::Truncated("header".into()));
     }
     let version = u32::from_le_bytes([buf[8], buf[9], buf[10], buf[11]]);
-    if version != FORMAT_VERSION {
+    if version == 0 || version > max_version {
         return Err(SnapshotError::UnsupportedVersion {
             found: version,
-            supported: FORMAT_VERSION,
+            supported: max_version,
         });
     }
     let count = u32::from_le_bytes([buf[12], buf[13], buf[14], buf[15]]) as usize;
@@ -249,7 +298,7 @@ pub fn parse_sections(buf: &[u8]) -> Result<Vec<RawSection>, SnapshotError> {
         }
         sections.push(RawSection { tag, bytes });
     }
-    Ok(sections)
+    Ok((version, sections))
 }
 
 /// Snapshot metadata the index itself does not carry: where the data
@@ -271,8 +320,23 @@ pub struct SnapshotMeta {
     pub search_defaults: SearchParams,
 }
 
-fn meta_to_json(index: &LeanVecIndex, meta: &SnapshotMeta) -> Json {
-    let b = index.build_breakdown;
+/// Index-side facts the META section records alongside the caller's
+/// [`SnapshotMeta`]. Grouped so the frozen ([`LeanVecIndex::save`]) and
+/// live (`mutate::persist_live`) writers produce byte-identical META
+/// for the same state.
+pub(crate) struct MetaFacts {
+    pub sim: Similarity,
+    pub projection: ProjectionKind,
+    pub primary: Compression,
+    pub secondary: Compression,
+    pub n: usize,
+    pub input_dim: usize,
+    pub target_dim: usize,
+    pub breakdown: BuildBreakdown,
+}
+
+pub(crate) fn meta_to_json(meta: &SnapshotMeta, facts: &MetaFacts) -> Json {
+    let b = facts.breakdown;
     Json::obj(vec![
         ("dataset", Json::str(&meta.dataset)),
         // seed is a string: u64 seeds above 2^53 would lose precision
@@ -285,13 +349,13 @@ fn meta_to_json(index: &LeanVecIndex, meta: &SnapshotMeta) -> Json {
             "rerank_window",
             Json::num(meta.search_defaults.rerank_window as f64),
         ),
-        ("similarity", Json::str(index.sim.name())),
-        ("projection", Json::str(index.model.kind.name())),
-        ("primary", Json::str(index.primary_compression.name())),
-        ("secondary", Json::str(index.secondary_compression.name())),
-        ("n", Json::num(index.len() as f64)),
-        ("input_dim", Json::num(index.model.input_dim() as f64)),
-        ("target_dim", Json::num(index.model.target_dim() as f64)),
+        ("similarity", Json::str(facts.sim.name())),
+        ("projection", Json::str(facts.projection.name())),
+        ("primary", Json::str(facts.primary.name())),
+        ("secondary", Json::str(facts.secondary.name())),
+        ("n", Json::num(facts.n as f64)),
+        ("input_dim", Json::num(facts.input_dim as f64)),
+        ("target_dim", Json::num(facts.target_dim as f64)),
         (
             "build_breakdown",
             Json::obj(vec![
@@ -359,36 +423,24 @@ impl LeanVecIndex {
     /// the recommended build/search knobs. Pass
     /// [`SnapshotMeta::default()`] when there is nothing to record.
     pub fn save(&self, path: &Path, meta: &SnapshotMeta) -> Result<u64, SnapshotError> {
-        let mut model = Vec::new();
-        self.model.write_bytes(&mut model);
-        let mut primary = Vec::new();
-        self.primary.write_bytes(&mut primary);
-        let mut secondary = Vec::new();
-        self.secondary.write_bytes(&mut secondary);
-        let mut graph = Vec::new();
-        self.graph.write_bytes(&mut graph);
-        let sections = [
-            RawSection {
-                tag: SECTION_META,
-                bytes: meta_to_json(self, meta).to_pretty().into_bytes(),
-            },
-            RawSection {
-                tag: SECTION_MODEL,
-                bytes: model,
-            },
-            RawSection {
-                tag: SECTION_PRIMARY,
-                bytes: primary,
-            },
-            RawSection {
-                tag: SECTION_SECONDARY,
-                bytes: secondary,
-            },
-            RawSection {
-                tag: SECTION_GRAPH,
-                bytes: graph,
-            },
-        ];
+        let facts = MetaFacts {
+            sim: self.sim,
+            projection: self.model.kind,
+            primary: self.primary_compression,
+            secondary: self.secondary_compression,
+            n: self.len(),
+            input_dim: self.model.input_dim(),
+            target_dim: self.model.target_dim(),
+            breakdown: self.build_breakdown,
+        };
+        let sections = core_sections(
+            meta,
+            &facts,
+            &self.model,
+            self.primary.as_ref(),
+            self.secondary.as_ref(),
+            &self.graph,
+        );
         write_sections(path, &sections)
     }
 
@@ -402,6 +454,60 @@ impl LeanVecIndex {
     /// inconsistent payload.
     pub fn load(path: &Path) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
         let sections = read_sections(path)?;
+        load_core_sections(&sections)
+    }
+}
+
+/// Serialize the five core sections shared by frozen and live
+/// snapshots (META, MODEL, PRIMARY, SECSTORE, GRAPH), in table order.
+pub(crate) fn core_sections(
+    meta: &SnapshotMeta,
+    facts: &MetaFacts,
+    model: &LeanVecModel,
+    primary: &dyn crate::quant::ScoreStore,
+    secondary: &dyn crate::quant::ScoreStore,
+    graph: &VamanaGraph,
+) -> Vec<RawSection> {
+    let mut model_bytes = Vec::new();
+    model.write_bytes(&mut model_bytes);
+    let mut primary_bytes = Vec::new();
+    primary.write_bytes(&mut primary_bytes);
+    let mut secondary_bytes = Vec::new();
+    secondary.write_bytes(&mut secondary_bytes);
+    let mut graph_bytes = Vec::new();
+    graph.write_bytes(&mut graph_bytes);
+    vec![
+        RawSection {
+            tag: SECTION_META,
+            bytes: meta_to_json(meta, facts).to_pretty().into_bytes(),
+        },
+        RawSection {
+            tag: SECTION_MODEL,
+            bytes: model_bytes,
+        },
+        RawSection {
+            tag: SECTION_PRIMARY,
+            bytes: primary_bytes,
+        },
+        RawSection {
+            tag: SECTION_SECONDARY,
+            bytes: secondary_bytes,
+        },
+        RawSection {
+            tag: SECTION_GRAPH,
+            bytes: graph_bytes,
+        },
+    ]
+}
+
+/// Parse + cross-validate the five core sections into a
+/// [`LeanVecIndex`] — the shared body of [`LeanVecIndex::load`] and the
+/// live loader (`mutate::persist_live`), which layers the live sections
+/// on top.
+pub(crate) fn load_core_sections(
+    sections: &[RawSection],
+) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
+    {
         let find = |tag: [u8; 8]| -> Result<&[u8], SnapshotError> {
             sections
                 .iter()

@@ -203,6 +203,10 @@ pub struct QueryStats {
     pub hops: usize,
     /// ids encountered but excluded by the query's filter predicate
     pub filtered: usize,
+    /// tombstoned ids the traversal routed *through* but never returned
+    /// (always 0 on a frozen index; populated by the live mutable index,
+    /// [`crate::mutate::LiveIndex`])
+    pub deleted_skipped: usize,
 }
 
 /// What every search returns: ids and scores best-first, plus the

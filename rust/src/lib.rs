@@ -28,6 +28,13 @@
 //! overrides (split-buffer semantics) and filtered search pushed into
 //! the traversal.
 //!
+//! Indexes are live, not frozen: [`mutate::LiveIndex`] accepts
+//! streaming inserts and deletes concurrently with search
+//! (FreshDiskANN-style tombstones + α-robust-prune linking), compacts
+//! itself via background consolidation, and round-trips the mutated
+//! state through versioned live snapshots. The serving engine feeds it
+//! through an ingest lane ([`coordinator::Engine::start_live`]).
+//!
 //! # Quickstart
 //!
 //! Build an index over toy vectors, snapshot it, and query the loaded
@@ -81,6 +88,7 @@ pub mod graph;
 pub mod index;
 pub mod leanvec;
 pub mod linalg;
+pub mod mutate;
 pub mod quant;
 pub mod runtime;
 pub mod util;

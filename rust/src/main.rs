@@ -5,12 +5,14 @@
 //!   build             build an index, write it to a snapshot, report timing
 //!   search            search an index (from --index snapshot, or build ad hoc)
 //!   serve             run the batching engine (from --index snapshot, or build)
+//!   mutate            churn driver: streaming inserts/deletes + search
+//!                     on a snapshot-loaded live index
 //!   artifacts         verify the PJRT artifacts load + execute
 //!
 //! The build/serve split: `build` constructs the index once and
 //! snapshots it to disk (`--index PATH`, default `<dataset>.leanvec`);
-//! `search` and `serve` given `--index PATH` read the snapshot and
-//! answer queries without ever touching the training path.
+//! `search`, `serve` and `mutate` given `--index PATH` read the
+//! snapshot and answer queries without ever touching the training path.
 //!
 //! Common flags: --out DIR, --scale S, --seed N, --pjrt,
 //!               --dataset NAME, --dim d, --window W,
@@ -18,10 +20,15 @@
 //!               --index PATH (snapshot to write/read),
 //!               --threads T (build workers; 0 = all cores, 1 = serial),
 //!               --baseline leanvec|ivfpq|flat (search arm),
-//!               --nprobe N (IVF-PQ probe count)
+//!               --nprobe N (IVF-PQ probe count),
+//!               --insert-rate/--delete-rate R (mutate churn, in [0,1])
+//!
+//! Numeric flags are validated up front: garbage or out-of-range values
+//! produce a usage-style error instead of a panic (or silent fallback)
+//! deep in the stack.
 
 use leanvec::config::{BuildParams, Compression, ProjectionKind};
-use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QueryProjectorKind};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, Metrics, QueryProjectorKind};
 use leanvec::data::synth::{generate, paper_datasets, paper_target_dim};
 use leanvec::experiments::harness::ExpContext;
 use leanvec::index::builder::IndexBuilder;
@@ -30,6 +37,7 @@ use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
 use leanvec::index::persist::SnapshotMeta;
 use leanvec::index::query::{Query, VectorIndex};
 use leanvec::index::FlatIndex;
+use leanvec::mutate::LiveIndex;
 use leanvec::util::cli::Args;
 use std::sync::Arc;
 
@@ -40,6 +48,7 @@ fn main() {
         Some("build") => cmd_build(&args),
         Some("search") => cmd_search(&args),
         Some("serve") => cmd_serve(&args),
+        Some("mutate") => cmd_mutate(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             print_usage();
@@ -54,30 +63,70 @@ fn main() {
 
 fn print_usage() {
     println!(
-        "usage: repro <experiment|build|search|serve|artifacts> [flags]\n\
+        "usage: repro <experiment|build|search|serve|mutate|artifacts> [flags]\n\
          \n\
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
          repro build --dataset rqa-768 --dim 160 --threads 0 --index rqa-768.leanvec\n\
          repro search --index rqa-768.leanvec --window 50 --rerank-window 150\n\
          repro serve --index rqa-768.leanvec --queries 2000 --workers 2 --rerank-window 100\n\
+         repro mutate --index rqa-768.leanvec --insert-rate 0.2 --delete-rate 0.1\n\
          repro search --dataset wit-512 --projection ood-es   (ad hoc, no snapshot)\n\
          repro search --dataset deep-256 --baseline ivfpq --nprobe 16\n\
          repro artifacts\n\
          \n\
          search knobs: --window W (graph search buffer), --rerank-window R\n\
          (candidates re-ranked; may exceed W — split buffer), --k K,\n\
-         --baseline leanvec|ivfpq|flat (ad hoc arms), --nprobe N (IVF-PQ)"
+         --baseline leanvec|ivfpq|flat (ad hoc arms), --nprobe N (IVF-PQ)\n\
+         mutate knobs: --insert-rate/--delete-rate R (fraction of the live\n\
+         corpus churned, in [0,1]), --consolidate-threshold F (tombstone\n\
+         fraction triggering compaction; 0 disables that trigger), --queries N"
     );
 }
 
-fn ctx_from(args: &Args) -> ExpContext {
-    ExpContext {
+/// Validated `--key` that must be a positive integer (usage-style error
+/// on garbage or zero, default when absent).
+fn positive_usize(args: &Args, key: &str, default: usize) -> anyhow::Result<usize> {
+    let v = args
+        .checked_usize(key, default)
+        .map_err(|m| anyhow::anyhow!("{m}; run `repro` for usage"))?;
+    anyhow::ensure!(v > 0, "--{key} must be >= 1, got {v}; run `repro` for usage");
+    Ok(v)
+}
+
+/// Validated `--key` that must be a fraction in [0, 1].
+fn rate_flag(args: &Args, key: &str, default: f64) -> anyhow::Result<f64> {
+    let v = args
+        .checked_f64(key, default)
+        .map_err(|m| anyhow::anyhow!("{m}; run `repro` for usage"))?;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&v),
+        "--{key} must be in [0, 1], got {v}; run `repro` for usage"
+    );
+    Ok(v)
+}
+
+/// Validated `--key` integer where zero is meaningful (0 = all cores /
+/// disabled): only garbage is rejected, not any in-range value.
+fn checked_usize_flag(args: &Args, key: &str, default: usize) -> anyhow::Result<usize> {
+    args.checked_usize(key, default)
+        .map_err(|m| anyhow::anyhow!("{m}; run `repro` for usage"))
+}
+
+fn ctx_from(args: &Args) -> anyhow::Result<ExpContext> {
+    let scale = args
+        .checked_f64("scale", 0.35)
+        .map_err(|m| anyhow::anyhow!("{m}; run `repro` for usage"))?;
+    anyhow::ensure!(
+        scale > 0.0,
+        "--scale must be > 0, got {scale}; run `repro` for usage"
+    );
+    Ok(ExpContext {
         out_dir: args.str("out", "results").into(),
-        scale: args.f64("scale", 0.35),
+        scale,
         use_pjrt: args.switch("pjrt"),
-        seed: args.usize("seed", 7) as u64,
-    }
+        seed: checked_usize_flag(args, "seed", 7)? as u64,
+    })
 }
 
 fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
@@ -86,7 +135,7 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         .first()
         .cloned()
         .unwrap_or_else(|| "all".to_string());
-    leanvec::experiments::run(&id, &ctx_from(args))
+    leanvec::experiments::run(&id, &ctx_from(args)?)
 }
 
 fn dataset_from(args: &Args, ctx: &ExpContext) -> anyhow::Result<leanvec::data::synth::Dataset> {
@@ -117,7 +166,7 @@ fn build_index(
         .secondary(secondary)
         .graph_params(ctx.graph_params(ds.similarity))
         .seed(ctx.seed)
-        .build_threads(args.usize("threads", 1));
+        .build_threads(checked_usize_flag(args, "threads", 1)?);
     if ctx.use_pjrt {
         let rt = leanvec::runtime::executor::open_shared(
             &leanvec::runtime::default_artifacts_dir(),
@@ -152,12 +201,15 @@ fn load_snapshot(path: &str) -> anyhow::Result<(LeanVecIndex, SnapshotMeta)> {
 /// META section), falling back to CLI flags when the snapshot predates
 /// provenance or was built from external data. Validated against the
 /// loaded index so a provenance mismatch fails loudly instead of
-/// reporting recall against the wrong ground truth.
+/// reporting recall against the wrong ground truth. `expect_n` is
+/// `None` for live (mutated) indexes, whose live count legitimately
+/// differs from the generator's corpus size.
 fn dataset_for_snapshot(
     args: &Args,
     ctx: &ExpContext,
     meta: &SnapshotMeta,
-    index: &LeanVecIndex,
+    expect_n: Option<usize>,
+    expect_dim: usize,
 ) -> anyhow::Result<leanvec::data::synth::Dataset> {
     // explicit flags override provenance (the escape hatch the mismatch
     // error below points at); provenance fills in whatever is absent
@@ -176,14 +228,21 @@ fn dataset_for_snapshot(
         .find(|s| s.name == name)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' in snapshot provenance"))?;
     let ds = generate(&spec);
+    let n_ok = match expect_n {
+        Some(n) => ds.database.len() == n,
+        None => true,
+    };
+    let index_n = match expect_n {
+        Some(n) => n.to_string(),
+        None => "live".to_string(),
+    };
     anyhow::ensure!(
-        ds.database.len() == index.len() && ds.dim == index.model.input_dim(),
+        n_ok && ds.dim == expect_dim,
         "snapshot does not match dataset '{name}' at scale {scale} \
-         ({} x {} vs index {} x {}); pass the original --dataset/--scale flags",
+         ({} x {} vs index {index_n} x {expect_dim}); pass the original \
+         --dataset/--scale flags",
         ds.database.len(),
         ds.dim,
-        index.len(),
-        index.model.input_dim()
     );
     Ok(ds)
 }
@@ -193,14 +252,25 @@ fn dataset_for_snapshot(
 /// flags win over the (snapshot-recommended) defaults, an explicit
 /// `--window` without `--rerank-window` couples the two, and
 /// `--rerank-window` may exceed `--window` (split buffer: more
-/// candidates re-ranked without widening the traversal).
-fn search_params_from(args: &Args, defaults: SearchParams) -> SearchParams {
-    let flag = |key: &str| args.flags.get(key).and_then(|v| v.parse::<usize>().ok());
-    leanvec::index::query::resolve_params(flag("window"), flag("rerank-window"), defaults)
+/// candidates re-ranked without widening the traversal). Present flags
+/// must parse and be positive — `Query::window(0)` would panic deep in
+/// the stack, so reject it here with a usage error instead.
+fn search_params_from(args: &Args, defaults: SearchParams) -> anyhow::Result<SearchParams> {
+    let flag = |key: &str| -> anyhow::Result<Option<usize>> {
+        match args.flags.get(key) {
+            None => Ok(None),
+            Some(_) => Ok(Some(positive_usize(args, key, 1)?)),
+        }
+    };
+    Ok(leanvec::index::query::resolve_params(
+        flag("window")?,
+        flag("rerank-window")?,
+        defaults,
+    ))
 }
 
 fn cmd_build(args: &Args) -> anyhow::Result<()> {
-    let ctx = ctx_from(args);
+    let ctx = ctx_from(args)?;
     let ds = dataset_from(args, &ctx)?;
     println!(
         "building index over {} ({} x {}, {})...",
@@ -232,12 +302,15 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
         seed: ctx.seed,
         scale: ctx.scale,
         build: BuildParams {
-            build_threads: args.usize("threads", 1),
+            build_threads: checked_usize_flag(args, "threads", 1)?,
         },
-        search_defaults: SearchParams {
-            window: args.usize("window", 50),
-            rerank_window: args.usize("rerank-window", args.usize("window", 50)),
-        },
+        search_defaults: search_params_from(
+            args,
+            SearchParams {
+                window: 50,
+                rerank_window: 50,
+            },
+        )?,
     };
     let t0 = std::time::Instant::now();
     let bytes = index.save(std::path::Path::new(&path), &meta)?;
@@ -250,8 +323,8 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_search(args: &Args) -> anyhow::Result<()> {
-    let ctx = ctx_from(args);
-    let k = args.usize("k", 10);
+    let ctx = ctx_from(args)?;
+    let k = positive_usize(args, "k", 10)?;
     let baseline = args.str("baseline", "leanvec");
     if baseline != "leanvec" {
         return cmd_search_baseline(args, &ctx, &baseline, k);
@@ -260,15 +333,21 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
         // serve path: read the snapshot, never touch the training path
         Some(path) => {
             let (index, meta) = load_snapshot(&path)?;
-            let ds = dataset_for_snapshot(args, &ctx, &meta, &index)?;
-            let params = search_params_from(args, meta.search_defaults);
+            let ds = dataset_for_snapshot(
+                args,
+                &ctx,
+                &meta,
+                Some(index.len()),
+                index.model.input_dim(),
+            )?;
+            let params = search_params_from(args, meta.search_defaults)?;
             (index, ds, params)
         }
         // ad hoc path: build in-process (kept for experimentation)
         None => {
             let ds = dataset_from(args, &ctx)?;
             let index = build_index(args, &ctx, &ds)?;
-            (index, ds, search_params_from(args, SearchParams::default()))
+            (index, ds, search_params_from(args, SearchParams::default())?)
         }
     };
     let truth =
@@ -298,7 +377,7 @@ fn cmd_search_baseline(
         leanvec::data::gt::ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
     match baseline {
         "ivfpq" => {
-            let nprobe = args.usize("nprobe", 8).max(1);
+            let nprobe = positive_usize(args, "nprobe", 8)?;
             // largest m in {8,4,2,1} dividing the dimensionality
             let m = [8usize, 4, 2, 1]
                 .into_iter()
@@ -369,7 +448,7 @@ fn report_point_and_batch<I: VectorIndex>(
         ds.name, params.window, params.rerank_window, p.recall, p.qps, p.bytes_per_query
     );
     // closed-loop parallel batch search over the same queries
-    let threads = args.usize("threads", 0);
+    let threads = checked_usize_flag(args, "threads", 0)?;
     let queries: Vec<Query> = ds
         .test_queries
         .iter()
@@ -399,14 +478,20 @@ fn report_point_and_batch<I: VectorIndex>(
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let ctx = ctx_from(args);
-    let k = args.usize("k", 10);
-    let n_queries = args.usize("queries", 2000);
+    let ctx = ctx_from(args)?;
+    let k = positive_usize(args, "k", 10)?;
+    let n_queries = positive_usize(args, "queries", 2000)?;
     let (index, ds, default_params) = match args.opt_str("index") {
         // serve path: snapshot in, engine up — no training code runs
         Some(path) => {
             let (index, meta) = load_snapshot(&path)?;
-            let ds = dataset_for_snapshot(args, &ctx, &meta, &index)?;
+            let ds = dataset_for_snapshot(
+                args,
+                &ctx,
+                &meta,
+                Some(index.len()),
+                index.model.input_dim(),
+            )?;
             (Arc::new(index), ds, meta.search_defaults)
         }
         None => {
@@ -425,21 +510,161 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .map(|i| truth[i % truth.len()].clone())
         .collect();
     let cfg = EngineConfig {
-        workers: args.usize("workers", 0).max(1),
+        workers: checked_usize_flag(args, "workers", 0)?.max(1),
         batch: BatchPolicy {
-            max_batch: args.usize("batch", 64),
-            max_wait: std::time::Duration::from_micros(args.usize("wait-us", 500) as u64),
+            max_batch: positive_usize(args, "batch", 64)?,
+            max_wait: std::time::Duration::from_micros(checked_usize_flag(args, "wait-us", 500)? as u64),
         },
-        search: search_params_from(args, default_params),
+        search: search_params_from(args, default_params)?,
         projector: if ctx.use_pjrt {
             QueryProjectorKind::Pjrt(leanvec::runtime::default_artifacts_dir())
         } else {
             QueryProjectorKind::Native
         },
+        ..EngineConfig::default()
     };
     let (_responses, report) = Engine::run_workload(index, cfg, &queries, k, Some(&truth_rep));
     println!("{}", report.metrics);
     println!("recall@{k}: {:.3}", report.recall_at_k);
+    Ok(())
+}
+
+/// Churn driver: load a snapshot into a live index, stream inserts and
+/// deletes through the engine's ingest lane while a search workload
+/// runs, then report mutation throughput, search latency under churn,
+/// consolidation work, and live-set recall vs the exact flat oracle.
+fn cmd_mutate(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args)?;
+    let k = positive_usize(args, "k", 10)?;
+    let n_queries = positive_usize(args, "queries", 2000)?;
+    let insert_rate = rate_flag(args, "insert-rate", 0.2)?;
+    let delete_rate = rate_flag(args, "delete-rate", 0.1)?;
+    let threshold = rate_flag(args, "consolidate-threshold", 0.2)?;
+    let path = args.opt_str("index").ok_or_else(|| {
+        anyhow::anyhow!("repro mutate needs --index SNAPSHOT; run `repro` for usage")
+    })?;
+
+    let t0 = std::time::Instant::now();
+    let (live, meta) = LiveIndex::load(std::path::Path::new(&path))?;
+    println!(
+        "loaded snapshot {path}: {} live vectors ({} slots), {} dims, in {:.3}s",
+        live.live_len(),
+        live.total_slots(),
+        live.model().input_dim(),
+        t0.elapsed().as_secs_f64()
+    );
+    let params = search_params_from(args, meta.search_defaults)?;
+    let ds = dataset_for_snapshot(args, &ctx, &meta, None, live.model().input_dim())?;
+
+    let n0 = live.live_len();
+    let n_inserts = (insert_rate * n0 as f64).round() as usize;
+    let n_deletes = ((delete_rate * n0 as f64).round() as usize).min(n0);
+    let mut rng = leanvec::util::rng::Rng::new(ctx.seed ^ 0xC0FFEE);
+    // distinct delete targets from the live set; fresh external ids for
+    // inserts, above everything currently live (one scan serves both)
+    let mut delete_ids = live.live_ids();
+    let ext_base = delete_ids.iter().copied().max().unwrap_or(0) + 1;
+    rng.shuffle(&mut delete_ids);
+    delete_ids.truncate(n_deletes);
+    // insert vectors: perturbed copies of corpus rows (same distribution)
+    let dim = live.model().input_dim();
+    let inserts: Vec<Vec<f32>> = (0..n_inserts)
+        .map(|_| {
+            let base = &ds.database[rng.below(ds.database.len())];
+            base.iter()
+                .map(|&x| x + 0.05 * rng.gaussian_f32())
+                .collect()
+        })
+        .collect();
+    anyhow::ensure!(
+        inserts.iter().all(|v| v.len() == dim),
+        "insert vectors must have {dim} dims"
+    );
+
+    let live = Arc::new(live);
+    let cfg = EngineConfig {
+        workers: checked_usize_flag(args, "workers", 0)?.max(1),
+        batch: BatchPolicy::default(),
+        search: params,
+        projector: QueryProjectorKind::Native,
+        consolidate_threshold: threshold,
+    };
+    let mut engine = Engine::start_live(Arc::clone(&live), cfg);
+
+    // interleave the three streams: searches dominate, mutations drip
+    // in alongside them (10% churn while serving is the target regime)
+    let t_churn = std::time::Instant::now();
+    let (mut ins, mut del) = (0usize, 0usize);
+    let steps = n_queries.max(n_inserts).max(n_deletes);
+    for i in 0..steps {
+        if ins * steps <= i * n_inserts && ins < n_inserts {
+            engine.submit_insert(ext_base + ins as u32, inserts[ins].clone());
+            ins += 1;
+        }
+        if del * steps <= i * n_deletes && del < n_deletes {
+            engine.submit_delete(delete_ids[del]);
+            del += 1;
+        }
+        if i < n_queries {
+            engine.submit(ds.test_queries[i % ds.test_queries.len()].clone(), k);
+        }
+    }
+    while ins < n_inserts {
+        engine.submit_insert(ext_base + ins as u32, inserts[ins].clone());
+        ins += 1;
+    }
+    while del < n_deletes {
+        engine.submit_delete(delete_ids[del]);
+        del += 1;
+    }
+    let responses = engine.drain(n_queries);
+    engine.quiesce_mutations();
+    let churn_wall = t_churn.elapsed().as_secs_f64();
+    let stats = engine.ingest_stats();
+    engine.shutdown();
+
+    let metrics = Metrics::from_responses(&responses, churn_wall);
+    println!("{metrics}");
+    println!(
+        "ingest: {} inserts + {} deletes in {churn_wall:.3}s -> {:.0} mutations/s \
+         ({} rejected) | {} consolidations, {:.3}s total",
+        stats.inserts,
+        stats.deletes,
+        (stats.inserts + stats.deletes) as f64 / churn_wall.max(1e-9),
+        stats.errors,
+        stats.consolidations,
+        stats.consolidate_seconds
+    );
+    println!(
+        "live set: {} vectors ({} slots, tombstone fraction {:.3})",
+        live.live_len(),
+        live.total_slots(),
+        live.tombstone_fraction()
+    );
+
+    // live-set recall@k vs the exact flat oracle over the live corpus
+    let corpus = live.export_live();
+    let flat_rows: Vec<Vec<f32>> = corpus.iter().map(|(_, v)| v.clone()).collect();
+    let flat = FlatIndex::new(&flat_rows, live.similarity());
+    let probes = ds.test_queries.len().min(200);
+    let mut hits = 0usize;
+    let mut ctx = leanvec::graph::beam::SearchCtx::new(live.total_slots());
+    for q in ds.test_queries.iter().take(probes) {
+        let (truth_pos, _) = flat.search(q, k);
+        let truth: Vec<u32> = truth_pos.iter().map(|&p| corpus[p as usize].0).collect();
+        let got = live.search(
+            &mut ctx,
+            &Query::new(q)
+                .k(k)
+                .window(params.window)
+                .rerank_window(params.rerank_window),
+        );
+        hits += got.ids.iter().filter(|id| truth.contains(id)).count();
+    }
+    println!(
+        "live-set recall@{k}: {:.3} ({probes} probe queries vs flat oracle)",
+        hits as f64 / (probes * k) as f64
+    );
     Ok(())
 }
 

@@ -1,0 +1,288 @@
+//! Concurrently-readable, single-writer adjacency for the live index.
+//!
+//! The frozen [`Adjacency`] is one flat slab — perfect for a built
+//! graph, unusable for a growing one. [`LiveAdjacency`] shards the same
+//! fixed-max-degree layout into blocks of [`SHARD_NODES`] nodes, each
+//! behind its own `RwLock`, with the shard table itself published
+//! through an `Arc` swap:
+//!
+//! * **readers** take an [`AdjacencyReader`] snapshot once per query
+//!   (one brief table-lock to clone an `Arc`), then fetch neighbor
+//!   lists under per-shard read locks — searches never contend with
+//!   each other and only ever wait on a writer touching the *same*
+//!   shard for the microseconds one `set_neighbors` takes;
+//! * **the writer** (mutators are serialized upstream by
+//!   [`crate::mutate::LiveIndex`]) edits one shard at a time, and grows
+//!   the graph by appending shards: existing shard `Arc`s are reused in
+//!   the new table, so in-flight readers keep seeing every edge update
+//!   to the shards their snapshot covers.
+//!
+//! [`Adjacency`]: crate::graph::vamana::Adjacency
+
+use crate::graph::vamana::Adjacency;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Nodes per shard. Large enough that the table stays short, small
+/// enough that writer/reader collisions on one shard are rare.
+pub const SHARD_NODES: usize = 1024;
+
+/// One block of `SHARD_NODES` fixed-max-degree neighbor lists,
+/// allocated at full capacity up front so edits never reallocate.
+struct Shard {
+    flat: Vec<u32>,
+    len: Vec<u32>,
+}
+
+impl Shard {
+    fn new(max_degree: usize) -> Shard {
+        Shard {
+            flat: vec![0; SHARD_NODES * max_degree],
+            len: vec![0; SHARD_NODES],
+        }
+    }
+}
+
+type ShardTable = Arc<Vec<Arc<RwLock<Shard>>>>;
+
+/// Growable sharded adjacency; see the module docs for the contract.
+pub struct LiveAdjacency {
+    max_degree: usize,
+    table: RwLock<ShardTable>,
+    nodes: AtomicUsize,
+}
+
+/// One query's snapshot of the shard table.
+#[derive(Clone)]
+pub struct AdjacencyReader {
+    table: ShardTable,
+    max_degree: usize,
+}
+
+impl AdjacencyReader {
+    /// Copy `id`'s neighbor list into `out` (cleared first). Ids beyond
+    /// the snapshot read as empty.
+    pub fn neighbors_into(&self, id: u32, out: &mut Vec<u32>) {
+        out.clear();
+        let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
+        if let Some(shard) = self.table.get(s) {
+            let guard = shard.read().unwrap();
+            let l = guard.len[i] as usize;
+            let base = i * self.max_degree;
+            out.extend_from_slice(&guard.flat[base..base + l]);
+        }
+    }
+
+    /// `id`'s current out-degree.
+    pub fn degree(&self, id: u32) -> usize {
+        let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
+        match self.table.get(s) {
+            Some(shard) => shard.read().unwrap().len[i] as usize,
+            None => 0,
+        }
+    }
+}
+
+impl LiveAdjacency {
+    /// Thaw a frozen adjacency into the sharded live layout.
+    pub fn from_adjacency(adj: &Adjacency) -> LiveAdjacency {
+        let n = adj.len_nodes();
+        let max_degree = adj.max_degree();
+        let live = LiveAdjacency {
+            max_degree,
+            table: RwLock::new(Arc::new(Vec::new())),
+            nodes: AtomicUsize::new(0),
+        };
+        live.replace_frozen(adj, n);
+        live
+    }
+
+    /// Number of node slots (live + tombstoned).
+    pub fn len(&self) -> usize {
+        self.nodes.load(Ordering::Acquire)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.max_degree
+    }
+
+    /// Snapshot for one query (or one mutation's link phase).
+    pub fn reader(&self) -> AdjacencyReader {
+        AdjacencyReader {
+            table: Arc::clone(&self.table.read().unwrap()),
+            max_degree: self.max_degree,
+        }
+    }
+
+    /// Install `id`'s neighbor list (truncated to the degree bound).
+    pub fn set_neighbors(&self, id: u32, list: &[u32]) {
+        debug_assert!((id as usize) < self.len());
+        let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
+        let table = Arc::clone(&self.table.read().unwrap());
+        let mut shard = table[s].write().unwrap();
+        let k = list.len().min(self.max_degree);
+        let base = i * self.max_degree;
+        shard.flat[base..base + k].copy_from_slice(&list[..k]);
+        shard.len[i] = k as u32;
+    }
+
+    /// Append one node slot (empty neighbor list) and return its id.
+    /// Grows the shard table when the last shard is full; existing
+    /// shards are shared with in-flight readers.
+    pub fn add_node(&self) -> u32 {
+        let id = self.nodes.load(Ordering::Acquire);
+        let needed_shards = (id + 1).div_ceil(SHARD_NODES);
+        {
+            let mut guard = self.table.write().unwrap();
+            if guard.len() < needed_shards {
+                let mut grown: Vec<Arc<RwLock<Shard>>> = guard.iter().map(Arc::clone).collect();
+                while grown.len() < needed_shards {
+                    grown.push(Arc::new(RwLock::new(Shard::new(self.max_degree))));
+                }
+                *guard = Arc::new(grown);
+            }
+        }
+        // publish the slot only after its shard exists
+        self.nodes.store(id + 1, Ordering::Release);
+        id as u32
+    }
+
+    /// Freeze the first `n` nodes into a flat [`Adjacency`] (persist /
+    /// consolidation). Writer-side only.
+    pub fn to_adjacency(&self, n: usize) -> Adjacency {
+        let reader = self.reader();
+        let mut adj = Adjacency::new(n, self.max_degree);
+        let mut buf = Vec::with_capacity(self.max_degree);
+        for id in 0..n as u32 {
+            reader.neighbors_into(id, &mut buf);
+            adj.set_neighbors(id, &buf);
+        }
+        adj
+    }
+
+    /// Replace the whole graph with `adj` (consolidation swap). The
+    /// caller must hold the live index's exclusive core guard so no
+    /// search observes the new graph against old stores.
+    pub fn replace_frozen(&self, adj: &Adjacency, n: usize) {
+        assert_eq!(adj.max_degree(), self.max_degree);
+        let shards = n.div_ceil(SHARD_NODES).max(1);
+        let mut table: Vec<Arc<RwLock<Shard>>> = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            table.push(Arc::new(RwLock::new(Shard::new(self.max_degree))));
+        }
+        for id in 0..n as u32 {
+            let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
+            let mut shard = table[s].write().unwrap();
+            let list = adj.neighbors(id);
+            let base = i * self.max_degree;
+            shard.flat[base..base + list.len()].copy_from_slice(list);
+            shard.len[i] = list.len() as u32;
+        }
+        // order: shrink the published count first so a racing reader
+        // never addresses a node the new table does not cover
+        self.nodes.store(0, Ordering::Release);
+        *self.table.write().unwrap() = Arc::new(table);
+        self.nodes.store(n, Ordering::Release);
+    }
+
+    /// Mean out-degree over the first `n` nodes (observability).
+    pub fn avg_degree(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let reader = self.reader();
+        let total: usize = (0..n as u32).map(|id| reader.degree(id)).sum();
+        total as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frozen(n: usize, max_degree: usize) -> Adjacency {
+        let mut adj = Adjacency::new(n, max_degree);
+        for i in 0..n as u32 {
+            let nb = [(i + 1) % n as u32, (i + 2) % n as u32];
+            adj.set_neighbors(i, &nb);
+        }
+        adj
+    }
+
+    #[test]
+    fn thaw_preserves_lists_across_shard_boundaries() {
+        let n = SHARD_NODES + 37; // spans two shards
+        let adj = frozen(n, 8);
+        let live = LiveAdjacency::from_adjacency(&adj);
+        assert_eq!(live.len(), n);
+        let reader = live.reader();
+        let mut buf = Vec::new();
+        for id in [0u32, 1023, 1024, (n - 1) as u32] {
+            reader.neighbors_into(id, &mut buf);
+            assert_eq!(buf.as_slice(), adj.neighbors(id), "id {id}");
+        }
+    }
+
+    #[test]
+    fn add_node_grows_and_old_readers_stay_consistent() {
+        let adj = frozen(10, 4);
+        let live = LiveAdjacency::from_adjacency(&adj);
+        let snap = live.reader();
+        // grow past the first shard
+        let mut last = 0;
+        for _ in 0..SHARD_NODES {
+            last = live.add_node();
+        }
+        assert_eq!(last as usize, 10 + SHARD_NODES - 1);
+        assert_eq!(live.len(), 10 + SHARD_NODES);
+        live.set_neighbors(last, &[0, 1]);
+        let mut buf = Vec::new();
+        // the fresh reader sees the new node; the old snapshot reads it
+        // as empty (its shard did not exist then) but still sees edits
+        // to nodes its shards cover
+        live.reader().neighbors_into(last, &mut buf);
+        assert_eq!(buf, vec![0, 1]);
+        snap.neighbors_into(last, &mut buf);
+        assert!(buf.is_empty());
+        live.set_neighbors(3, &[7]);
+        snap.neighbors_into(3, &mut buf);
+        assert_eq!(buf, vec![7], "shared shard shows writer edits");
+    }
+
+    #[test]
+    fn roundtrip_to_adjacency() {
+        let adj = frozen(300, 6);
+        let live = LiveAdjacency::from_adjacency(&adj);
+        live.set_neighbors(5, &[1, 2, 3]);
+        let back = live.to_adjacency(300);
+        assert_eq!(back.neighbors(5), &[1, 2, 3]);
+        for id in [0u32, 100, 299] {
+            assert_eq!(back.neighbors(id), adj.neighbors(id));
+        }
+    }
+
+    #[test]
+    fn replace_frozen_swaps_whole_graph() {
+        let live = LiveAdjacency::from_adjacency(&frozen(100, 6));
+        let smaller = frozen(40, 6);
+        live.replace_frozen(&smaller, 40);
+        assert_eq!(live.len(), 40);
+        let mut buf = Vec::new();
+        live.reader().neighbors_into(39, &mut buf);
+        assert_eq!(buf.as_slice(), smaller.neighbors(39));
+        assert!(live.avg_degree(40) > 1.9);
+    }
+
+    #[test]
+    fn degree_bound_enforced() {
+        let live = LiveAdjacency::from_adjacency(&frozen(10, 3));
+        live.set_neighbors(0, &[1, 2, 3, 4, 5]);
+        let mut buf = Vec::new();
+        live.reader().neighbors_into(0, &mut buf);
+        assert_eq!(buf.len(), 3, "list truncated to max_degree");
+    }
+}

@@ -1,0 +1,942 @@
+//! [`LiveIndex`]: a [`LeanVecIndex`] that accepts streaming inserts and
+//! deletes while serving searches, FreshDiskANN-style.
+//!
+//! * **insert** projects the new vector through the frozen LeanVec
+//!   model (`B x`), LVQ-encodes it into the primary store with the
+//!   store's existing constants, appends the full-dimensional vector to
+//!   the secondary store, then links the node into the Vamana graph via
+//!   greedy search + α-robust-prune with reverse-edge patching — the
+//!   same rule the batch builder applies, shared through
+//!   [`crate::graph::vamana::robust_prune`].
+//! * **delete** is an O(1) tombstone: traversal routes *through*
+//!   tombstoned nodes (connectivity is preserved — the PR 3 filtered
+//!   search machinery) but never returns them;
+//!   [`QueryStats::deleted_skipped`] counts them per query.
+//! * **consolidate** rewires every neighbor-of-a-deleted edge
+//!   (pool = live neighbors ∪ live neighbors-of-deleted-neighbors,
+//!   re-pruned), then compacts the stores, graph, and id map,
+//!   clearing the tombstones.
+//!
+//! # Concurrency
+//!
+//! One writer, many readers. Mutators serialize on an internal writer
+//! lock (the engine's ingest lane is one thread anyway); searches never
+//! take it. The query path takes a *read* guard on the store core for
+//! the duration of one search — concurrent searches share it freely —
+//! plus per-shard graph locks and a lock-free tombstone snapshot, so
+//! searches run concurrently with each other and with mutations.
+//! Inserts hold the core write guard only for the O(dim) store append;
+//! graph linking runs under a read guard. The only stop-the-world
+//! moment is the compaction half of [`LiveIndex::consolidate`] (the
+//! expensive rewiring half runs under a read guard).
+//!
+//! # External ids
+//!
+//! Compaction renumbers internal slots, so the index speaks *external*
+//! ids at its edge: [`LiveIndex::insert`] takes the caller's id,
+//! searches return external ids, [`LiveIndex::delete`] takes one.
+//! An index thawed from a built [`LeanVecIndex`] starts with external
+//! id `i` == internal slot `i`.
+//!
+//! [`QueryStats::deleted_skipped`]: crate::index::query::QueryStats
+
+use crate::config::{Compression, GraphParams, Similarity};
+use crate::graph::beam::{greedy_search, greedy_search_ext, SearchCtx};
+use crate::graph::vamana::{medoid_of, robust_prune, Adjacency};
+use crate::index::leanvec_index::{BuildBreakdown, LeanVecIndex, SearchParams};
+use crate::index::query::{Query, QueryStats, SearchResult, VectorIndex};
+use crate::leanvec::model::LeanVecModel;
+use crate::mutate::adjacency::LiveAdjacency;
+use crate::mutate::tombstones::Tombstones;
+use crate::quant::ScoreStore;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Everything that can go wrong mutating a live index.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MutateError {
+    /// The external id is already live.
+    DuplicateId(u32),
+    /// The external id is not live (never inserted, or already deleted).
+    UnknownId(u32),
+    /// The vector's dimensionality does not match the index.
+    DimMismatch { expected: usize, got: usize },
+    /// The vector contains NaN or infinite components (they would
+    /// poison the distance-based prune rule).
+    NonFinite,
+}
+
+impl std::fmt::Display for MutateError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MutateError::DuplicateId(id) => write!(f, "insert: id {id} is already live"),
+            MutateError::UnknownId(id) => write!(f, "delete: id {id} is not live"),
+            MutateError::DimMismatch { expected, got } => {
+                write!(f, "vector has {got} dims, index expects {expected}")
+            }
+            MutateError::NonFinite => {
+                write!(f, "insert: vector has NaN or infinite components")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MutateError {}
+
+/// Lifetime mutation counters; survive snapshots (observability).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MutationJournal {
+    pub inserts: u64,
+    pub deletes: u64,
+    pub consolidations: u64,
+}
+
+/// What one [`LiveIndex::consolidate`] pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConsolidateReport {
+    /// tombstoned slots removed by compaction
+    pub removed: usize,
+    /// live nodes whose edges were rewired around deleted neighbors
+    pub rewired: usize,
+    /// live nodes remaining after compaction
+    pub remaining: usize,
+    /// wall-clock seconds for the whole pass
+    pub seconds: f64,
+}
+
+/// The mutable core: both stores plus the external↔internal id maps and
+/// the insert journal, all swapped/compacted together under one lock so
+/// a search can never observe them out of step.
+pub(crate) struct Core {
+    pub(crate) primary: Box<dyn ScoreStore>,
+    pub(crate) secondary: Box<dyn ScoreStore>,
+    /// internal slot -> external id
+    pub(crate) ext_of: Vec<u32>,
+    /// external id -> internal slot (live ids only)
+    pub(crate) int_of: HashMap<u32, u32>,
+    /// (external id, full-D vector) of every insert since the last
+    /// consolidation — the snapshot insert log, and the feed a future
+    /// model re-train would consume (data drift)
+    pub(crate) insert_log: Vec<(u32, Vec<f32>)>,
+    pub(crate) journal: MutationJournal,
+}
+
+/// A live (streaming-mutable) LeanVec index. Construct with
+/// [`LiveIndex::from_index`] or load a live snapshot with
+/// [`LiveIndex::load`] (`mutate::persist_live`).
+pub struct LiveIndex {
+    pub(crate) model: LeanVecModel,
+    pub(crate) sim: Similarity,
+    pub(crate) primary_compression: Compression,
+    pub(crate) secondary_compression: Compression,
+    pub(crate) params: GraphParams,
+    pub(crate) build_breakdown: BuildBreakdown,
+    pub(crate) graph_build_seconds: f64,
+    pub(crate) core: RwLock<Core>,
+    pub(crate) graph: LiveAdjacency,
+    pub(crate) medoid: AtomicU32,
+    pub(crate) tombs: Tombstones,
+    /// serializes insert/delete/consolidate/save (single-writer
+    /// discipline; the engine's ingest lane is one thread)
+    pub(crate) writer: Mutex<()>,
+    /// reusable traversal state for the insert link phase — mutators
+    /// are serialized, so one pooled context suffices and inserts never
+    /// re-allocate the O(n) visited array
+    link_ctx: Mutex<SearchCtx>,
+}
+
+impl LiveIndex {
+    /// Thaw a built (or snapshot-loaded) index into a live one.
+    /// External ids start equal to the build positions `0..n`.
+    pub fn from_index(index: LeanVecIndex) -> LiveIndex {
+        let LeanVecIndex {
+            model,
+            primary,
+            secondary,
+            graph,
+            sim,
+            primary_compression,
+            secondary_compression,
+            build_breakdown,
+        } = index;
+        let n = primary.len();
+        LiveIndex {
+            model,
+            sim,
+            primary_compression,
+            secondary_compression,
+            params: graph.params,
+            build_breakdown,
+            graph_build_seconds: graph.build_seconds,
+            graph: LiveAdjacency::from_adjacency(&graph.adj),
+            medoid: AtomicU32::new(graph.medoid),
+            tombs: Tombstones::new(n),
+            core: RwLock::new(Core {
+                primary,
+                secondary,
+                ext_of: (0..n as u32).collect(),
+                int_of: (0..n as u32).map(|i| (i, i)).collect(),
+                insert_log: Vec::new(),
+                journal: MutationJournal::default(),
+            }),
+            writer: Mutex::new(()),
+            link_ctx: Mutex::new(SearchCtx::new(n)),
+        }
+    }
+
+    pub(crate) fn core_read(&self) -> RwLockReadGuard<'_, Core> {
+        self.core.read().unwrap()
+    }
+
+    pub(crate) fn core_write(&self) -> RwLockWriteGuard<'_, Core> {
+        self.core.write().unwrap()
+    }
+
+    /// Total node slots (live + tombstoned).
+    pub fn total_slots(&self) -> usize {
+        self.graph.len()
+    }
+
+    /// Number of live (searchable) vectors.
+    pub fn live_len(&self) -> usize {
+        self.graph.len().saturating_sub(self.tombs.deleted())
+    }
+
+    /// Fraction of slots that are tombstoned — the consolidation
+    /// trigger the engine's ingest lane watches.
+    pub fn tombstone_fraction(&self) -> f64 {
+        let n = self.graph.len();
+        if n == 0 {
+            0.0
+        } else {
+            self.tombs.deleted() as f64 / n as f64
+        }
+    }
+
+    /// Inserts not yet folded into a consolidation (insert-log length).
+    pub fn pending_inserts(&self) -> usize {
+        self.core_read().insert_log.len()
+    }
+
+    /// Lifetime mutation counters.
+    pub fn journal(&self) -> MutationJournal {
+        self.core_read().journal
+    }
+
+    pub fn graph_params(&self) -> GraphParams {
+        self.params
+    }
+
+    pub fn similarity(&self) -> Similarity {
+        self.sim
+    }
+
+    /// The frozen LeanVec projection model (queries go through `A q`).
+    pub fn model(&self) -> &LeanVecModel {
+        &self.model
+    }
+
+    /// Is `ext_id` currently live?
+    pub fn contains(&self, ext_id: u32) -> bool {
+        self.core_read().int_of.contains_key(&ext_id)
+    }
+
+    /// The external ids currently live, in internal-slot order.
+    pub fn live_ids(&self) -> Vec<u32> {
+        let core = self.core_read();
+        let n = self.graph.len().min(core.primary.len());
+        let tomb = self.tombs.reader();
+        (0..n as u32)
+            .filter(|&id| !tomb.is_deleted(id))
+            .map(|id| core.ext_of[id as usize])
+            .collect()
+    }
+
+    /// The live id set with full-dimensional vectors (secondary-store
+    /// decodes) — the exact corpus a flat oracle over the live set
+    /// scores against.
+    pub fn export_live(&self) -> Vec<(u32, Vec<f32>)> {
+        let core = self.core_read();
+        let n = self.graph.len().min(core.primary.len());
+        let tomb = self.tombs.reader();
+        (0..n as u32)
+            .filter(|&id| !tomb.is_deleted(id))
+            .map(|id| (core.ext_of[id as usize], core.secondary.decode(id)))
+            .collect()
+    }
+
+    /// Insert `vector` under the caller's `ext_id`. Returns the internal
+    /// slot (diagnostics only — slots are renumbered by consolidation).
+    /// Errors if `ext_id` is already live or the dimensionality is
+    /// wrong. Searches run concurrently throughout.
+    pub fn insert(&self, ext_id: u32, vector: &[f32]) -> Result<u32, MutateError> {
+        if vector.len() != self.model.input_dim() {
+            return Err(MutateError::DimMismatch {
+                expected: self.model.input_dim(),
+                got: vector.len(),
+            });
+        }
+        if !vector.iter().all(|v| v.is_finite()) {
+            return Err(MutateError::NonFinite);
+        }
+        let _writer = self.writer.lock().unwrap();
+        // duplicate check before the projection matmul: only mutators
+        // (serialized by the writer lock we hold) touch `int_of`, so a
+        // cheap read here is authoritative and rejected replays never
+        // pay the O(D*d) projection
+        if self.core_read().int_of.contains_key(&ext_id) {
+            return Err(MutateError::DuplicateId(ext_id));
+        }
+        let proj = self.model.project_database_vector(vector);
+        let id = {
+            let mut core = self.core_write();
+            debug_assert!(!core.int_of.contains_key(&ext_id));
+            let id = core.primary.len() as u32;
+            core.primary.append_row(&proj);
+            core.secondary.append_row(vector);
+            core.ext_of.push(ext_id);
+            core.int_of.insert(ext_id, id);
+            core.insert_log.push((ext_id, vector.to_vec()));
+            core.journal.inserts += 1;
+            id
+        };
+        self.tombs.ensure(id as usize + 1);
+        let slot = self.graph.add_node();
+        debug_assert_eq!(slot, id);
+        // link under a read guard: searches continue while we wire edges
+        let core = self.core_read();
+        self.link_node(&core, id, &proj);
+        Ok(id)
+    }
+
+    /// Greedy-search + α-robust-prune linking of a freshly appended
+    /// node, with reverse-edge patching (overflowing reverse lists are
+    /// re-pruned) — the builder's insertion rule, applied online.
+    fn link_node(&self, core: &Core, id: u32, proj: &[f32]) {
+        let store = core.primary.as_ref();
+        let medoid = self.medoid.load(Ordering::Acquire);
+        if medoid == id {
+            return; // degenerate single-node graph
+        }
+        let pq = store.prepare(proj, self.sim);
+        let reader = self.graph.reader();
+        let tomb = self.tombs.reader();
+        let mut ctx = self.link_ctx.lock().unwrap();
+        ctx.ensure(store.len());
+        let cands = greedy_search(
+            &mut *ctx,
+            &[medoid],
+            self.params.build_window,
+            |x| store.score(&pq, x),
+            |x, out| {
+                reader.neighbors_into(x, out);
+                out.retain(|&nb| nb != id);
+            },
+        );
+        // candidate pool: search results, minus self and tombstones
+        // (deleted nodes must not gain new in-edges)
+        let mut pool: Vec<u32> = cands
+            .iter()
+            .map(|c| c.id)
+            .filter(|&x| x != id && !tomb.is_deleted(x))
+            .collect();
+        if pool.is_empty() {
+            // every reachable candidate is tombstoned (a dense deleted
+            // region with no consolidation yet): apply the
+            // consolidation rule at insert time, deepened — walk
+            // outward through the deleted region (bounded BFS) until
+            // live nodes appear, so the new node is never orphaned
+            let mut seen: HashSet<u32> = cands.iter().map(|c| c.id).collect();
+            seen.insert(id);
+            let mut frontier: Vec<u32> =
+                cands.iter().map(|c| c.id).filter(|&x| x != id).collect();
+            let cap = (self.params.build_window * self.params.max_degree).max(1024);
+            let mut dnb: Vec<u32> = Vec::new();
+            while pool.is_empty() && !frontier.is_empty() && seen.len() < cap {
+                let mut next: Vec<u32> = Vec::new();
+                for &d in &frontier {
+                    reader.neighbors_into(d, &mut dnb);
+                    for &x in dnb.iter() {
+                        if !seen.insert(x) {
+                            continue;
+                        }
+                        if tomb.is_deleted(x) {
+                            next.push(x);
+                        } else {
+                            pool.push(x);
+                        }
+                    }
+                }
+                frontier = next;
+            }
+        }
+        pool.sort_unstable();
+        pool.dedup();
+        let (alpha, r) = (self.params.alpha, self.params.max_degree);
+        let selected = robust_prune(store, id, proj, &pool, alpha, r);
+        self.graph.set_neighbors(id, &selected);
+        if selected.is_empty() {
+            // no live node reachable even through the deleted region:
+            // re-anchor the entry point here ONLY when this node really
+            // is the whole live set (the delete-everything case) —
+            // otherwise keep the medoid where the live corpus lives
+            if self.live_len() == 1 {
+                self.medoid.store(id, Ordering::Release);
+            }
+            return;
+        }
+        // reverse edges
+        let mut cur: Vec<u32> = Vec::with_capacity(r + 1);
+        for &nb in &selected {
+            reader.neighbors_into(nb, &mut cur);
+            if cur.contains(&id) {
+                continue;
+            }
+            cur.push(id);
+            if cur.len() <= r {
+                self.graph.set_neighbors(nb, &cur);
+            } else {
+                // overflow: re-prune nb's list including the new edge
+                let nb_vec = store.decode(nb);
+                let pruned = robust_prune(store, nb, &nb_vec, &cur, alpha, r);
+                self.graph.set_neighbors(nb, &pruned);
+            }
+        }
+    }
+
+    /// Tombstone the vector with external id `ext_id`: O(1), honored by
+    /// every search from this call on. Returns the internal slot.
+    pub fn delete(&self, ext_id: u32) -> Result<u32, MutateError> {
+        let _writer = self.writer.lock().unwrap();
+        let mut core = self.core_write();
+        let id = match core.int_of.remove(&ext_id) {
+            Some(id) => id,
+            None => return Err(MutateError::UnknownId(ext_id)),
+        };
+        core.journal.deletes += 1;
+        // set the bit while holding the core guard: once delete()
+        // returns, no search can return this id
+        self.tombs.set(id);
+        Ok(id)
+    }
+
+    /// Rewire around tombstoned nodes, then compact every store, the
+    /// graph, and the id map. The rewiring (the expensive half) runs
+    /// under a read guard — searches continue; only the compaction swap
+    /// holds the exclusive guard. No-op when nothing is deleted.
+    pub fn consolidate(&self) -> ConsolidateReport {
+        let t0 = std::time::Instant::now();
+        let _writer = self.writer.lock().unwrap();
+        let removed = self.tombs.deleted();
+        if removed == 0 {
+            // nothing to compact — but still fold any pending insert
+            // log into the base so insert-only workloads bound their
+            // memory (the vectors already live in both stores; the log
+            // is just the since-last-consolidation journal)
+            let mut core = self.core_write();
+            if !core.insert_log.is_empty() {
+                core.insert_log.clear();
+                core.journal.consolidations += 1;
+            }
+            return ConsolidateReport {
+                removed: 0,
+                rewired: 0,
+                remaining: self.graph.len(),
+                seconds: t0.elapsed().as_secs_f64(),
+            };
+        }
+        let (alpha, r) = (self.params.alpha, self.params.max_degree);
+
+        // --- phase 1 (concurrent with searches): rewire every live
+        //     node that points at a deleted one. FreshDiskANN rule:
+        //     pool = live neighbors ∪ live neighbors-of-deleted-
+        //     neighbors, re-pruned with the same α slack.
+        let mut rewired = 0usize;
+        {
+            let core = self.core_read();
+            let store = core.primary.as_ref();
+            let tomb = self.tombs.reader();
+            let reader = self.graph.reader();
+            let n = self.graph.len();
+            let mut nb: Vec<u32> = Vec::new();
+            let mut dnb: Vec<u32> = Vec::new();
+            for id in 0..n as u32 {
+                if tomb.is_deleted(id) {
+                    continue;
+                }
+                reader.neighbors_into(id, &mut nb);
+                if !nb.iter().any(|&x| tomb.is_deleted(x)) {
+                    continue;
+                }
+                let mut pool: Vec<u32> =
+                    nb.iter().copied().filter(|&x| !tomb.is_deleted(x)).collect();
+                for &d in nb.iter() {
+                    if !tomb.is_deleted(d) {
+                        continue;
+                    }
+                    reader.neighbors_into(d, &mut dnb);
+                    pool.extend(
+                        dnb.iter()
+                            .copied()
+                            .filter(|&x| x != id && !tomb.is_deleted(x)),
+                    );
+                }
+                pool.sort_unstable();
+                pool.dedup();
+                let p_vec = store.decode(id);
+                let pruned = robust_prune(store, id, &p_vec, &pool, alpha, r);
+                self.graph.set_neighbors(id, &pruned);
+                rewired += 1;
+            }
+        }
+
+        // --- phase 2 (exclusive): compact stores + graph + id map in
+        //     one swap so no search observes them out of step
+        let mut core = self.core_write();
+        let n = self.graph.len();
+        let tomb = self.tombs.reader();
+        let keep: Vec<u32> = (0..n as u32).filter(|&i| !tomb.is_deleted(i)).collect();
+        let mut remap = vec![u32::MAX; n];
+        for (new_id, &old) in keep.iter().enumerate() {
+            remap[old as usize] = new_id as u32;
+        }
+        let reader = self.graph.reader();
+        let mut new_adj = Adjacency::new(keep.len(), r);
+        let mut nb: Vec<u32> = Vec::new();
+        let mut mapped: Vec<u32> = Vec::with_capacity(r);
+        for (new_id, &old) in keep.iter().enumerate() {
+            reader.neighbors_into(old, &mut nb);
+            mapped.clear();
+            mapped.extend(
+                nb.iter()
+                    .filter(|&&x| remap[x as usize] != u32::MAX)
+                    .map(|&x| remap[x as usize]),
+            );
+            new_adj.set_neighbors(new_id as u32, &mapped);
+        }
+        core.primary.compact(&keep);
+        core.secondary.compact(&keep);
+        let new_ext: Vec<u32> = keep.iter().map(|&o| core.ext_of[o as usize]).collect();
+        core.int_of = new_ext
+            .iter()
+            .enumerate()
+            .map(|(i, &e)| (e, i as u32))
+            .collect();
+        core.ext_of = new_ext;
+        core.insert_log.clear();
+        core.journal.consolidations += 1;
+        let old_medoid = self.medoid.load(Ordering::Acquire) as usize;
+        let new_medoid = if old_medoid < n && remap[old_medoid] != u32::MAX {
+            remap[old_medoid]
+        } else {
+            // the entry point itself was deleted: re-anchor at the
+            // compacted store's medoid
+            medoid_of(core.primary.as_ref())
+        };
+        self.graph.replace_frozen(&new_adj, keep.len());
+        self.medoid.store(new_medoid, Ordering::Release);
+        self.tombs.reset(keep.len());
+        ConsolidateReport {
+            removed,
+            rewired,
+            remaining: keep.len(),
+            seconds: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Search with an externally projected query (the engine's
+    /// batch-projected path; see
+    /// [`LeanVecIndex::search_prepared`] for the contract).
+    /// `query.vector()` must be the original full-dimensional vector.
+    pub fn search_prepared(
+        &self,
+        ctx: &mut SearchCtx,
+        q_proj: &[f32],
+        query: &Query,
+    ) -> SearchResult {
+        let core = self.core_read();
+        self.search_core(&core, ctx, q_proj, query)
+    }
+
+    /// The traversal + rerank body, under a held core read guard.
+    fn search_core(
+        &self,
+        core: &Core,
+        ctx: &mut SearchCtx,
+        q_proj: &[f32],
+        query: &Query,
+    ) -> SearchResult {
+        let k = query.top_k();
+        let params = query.effective(SearchParams::default());
+        let store = core.primary.as_ref();
+        // snapshot the node count: anything inserted after this line is
+        // invisible to this query (ids are filtered at neighbor fetch)
+        let n = self.graph.len().min(store.len());
+        if n == 0 || k == 0 {
+            return SearchResult::default();
+        }
+        let pq = store.prepare(q_proj, self.sim);
+        let tomb = self.tombs.reader();
+        let reader = self.graph.reader();
+        let deleted_hits = AtomicUsize::new(0);
+        let user = query.filter_fn();
+        // tombstones compose with the user's filter: both are routed
+        // through, neither is returned; only tombstone skips land in
+        // `deleted_skipped`. The user's predicate sees *external* ids —
+        // the same namespace results are returned in — so allow-lists
+        // stay valid across consolidations.
+        let pred = |id: u32| {
+            if tomb.is_deleted(id) {
+                deleted_hits.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+            match user {
+                Some(f) => f(core.ext_of[id as usize]),
+                None => true,
+            }
+        };
+        ctx.ensure(store.len());
+        let capacity = params.rerank_window.max(k);
+        let medoid = self.medoid.load(Ordering::Acquire).min(n as u32 - 1);
+        let cands = greedy_search_ext(
+            ctx,
+            &[medoid],
+            params.window,
+            capacity,
+            Some(&pred),
+            |id| store.score(&pq, id),
+            |id, out| {
+                reader.neighbors_into(id, out);
+                out.retain(|&x| (x as usize) < n);
+            },
+        );
+        let take = params.rerank_window.max(k).min(cands.len());
+        if !query.wants_rerank() {
+            let take_k = k.min(cands.len());
+            let ids: Vec<u32> = cands[..take_k]
+                .iter()
+                .map(|c| core.ext_of[c.id as usize])
+                .collect();
+            let scores: Vec<f32> = cands[..take_k].iter().map(|c| c.score).collect();
+            let deleted_skipped = deleted_hits.load(Ordering::Relaxed);
+            return SearchResult {
+                ids,
+                scores,
+                stats: QueryStats {
+                    primary_scored: ctx.stats.scored,
+                    reranked: 0,
+                    bytes_touched: ctx.stats.scored * store.bytes_per_vector(),
+                    hops: ctx.stats.hops,
+                    filtered: ctx.stats.filtered - deleted_skipped,
+                    deleted_skipped,
+                },
+            };
+        }
+        let internal: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
+        let deleted_skipped = deleted_hits.load(Ordering::Relaxed);
+        let stats = QueryStats {
+            primary_scored: ctx.stats.scored,
+            reranked: take,
+            bytes_touched: ctx.stats.scored * store.bytes_per_vector()
+                + take * core.secondary.rerank_bytes_per_vector(),
+            hops: ctx.stats.hops,
+            filtered: ctx.stats.filtered - deleted_skipped,
+            deleted_skipped,
+        };
+        // re-rank with secondary vectors in the original space (the one
+        // shared ordering rule), then translate to external ids
+        let scored = crate::index::leanvec_index::rerank_top_k(
+            core.secondary.as_ref(),
+            query.vector(),
+            self.sim,
+            &internal,
+            k,
+        );
+        SearchResult {
+            ids: scored
+                .iter()
+                .map(|&(_, id)| core.ext_of[id as usize])
+                .collect(),
+            scores: scored.iter().map(|&(s, _)| s).collect(),
+            stats,
+        }
+    }
+}
+
+impl VectorIndex for LiveIndex {
+    /// Full query path: project once (`A q`), traverse routing through
+    /// tombstones, re-rank, return **external** ids.
+    fn search(&self, ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        let q_proj = self.model.project_query(query.vector());
+        self.search_prepared(ctx, &q_proj, query)
+    }
+
+    /// Number of live (searchable) vectors.
+    fn len(&self) -> usize {
+        self.live_len()
+    }
+
+    fn dim(&self) -> usize {
+        self.model.input_dim()
+    }
+
+    fn sim(&self) -> Similarity {
+        self.sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProjectionKind;
+    use crate::index::builder::IndexBuilder;
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    fn build(rows: &[Vec<f32>], d: usize, sim: Similarity) -> LeanVecIndex {
+        let mut gp = GraphParams::for_similarity(sim);
+        gp.max_degree = 16;
+        gp.build_window = 40;
+        IndexBuilder::new()
+            .projection(ProjectionKind::Id)
+            .target_dim(d)
+            .graph_params(gp)
+            .build(rows, None, sim)
+    }
+
+    #[test]
+    fn pristine_live_index_matches_frozen_search_exactly() {
+        let rs = rows(300, 16, 1);
+        let frozen = build(&rs, 8, Similarity::L2);
+        let live = LiveIndex::from_index(build(&rs, 8, Similarity::L2));
+        let mut ctx = SearchCtx::new(rs.len());
+        for seed in 0..10u64 {
+            let q: Vec<f32> = rows(1, 16, 100 + seed).pop().unwrap();
+            let query = Query::new(&q).k(10).window(30).rerank_window(60);
+            let a = frozen.search(&mut ctx, &query);
+            let b = live.search(&mut ctx, &query);
+            assert_eq!(a.ids, b.ids);
+            assert_eq!(a.scores, b.scores);
+            assert_eq!(a.stats.primary_scored, b.stats.primary_scored);
+            assert_eq!(a.stats.hops, b.stats.hops);
+            assert_eq!(b.stats.deleted_skipped, 0);
+        }
+    }
+
+    #[test]
+    fn inserted_vectors_are_found() {
+        let rs = rows(200, 12, 2);
+        let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
+        // insert vectors far from the base cloud so they are their own
+        // nearest neighbors
+        let mut rng = Rng::new(77);
+        for i in 0..20u32 {
+            let v: Vec<f32> = (0..12)
+                .map(|_| 10.0 + 0.05 * rng.gaussian_f32())
+                .collect();
+            live.insert(1000 + i, &v).unwrap();
+        }
+        assert_eq!(live.live_len(), 220);
+        assert_eq!(live.journal().inserts, 20);
+        assert_eq!(live.pending_inserts(), 20);
+        let probe: Vec<f32> = vec![10.0; 12];
+        let got = live.search_one(&Query::new(&probe).k(10).window(40));
+        assert_eq!(got.ids.len(), 10);
+        let hits = got.ids.iter().filter(|&&id| id >= 1000).count();
+        assert!(hits >= 8, "inserted cluster not found: {:?}", got.ids);
+    }
+
+    #[test]
+    fn insert_validates() {
+        let rs = rows(50, 8, 3);
+        let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));
+        assert_eq!(
+            live.insert(3, &[0.0; 5]),
+            Err(MutateError::DimMismatch {
+                expected: 8,
+                got: 5
+            })
+        );
+        assert_eq!(live.insert(3, &[0.0; 8]), Err(MutateError::DuplicateId(3)));
+        assert_eq!(live.insert(98, &[f32::NAN; 8]), Err(MutateError::NonFinite));
+        assert_eq!(
+            live.insert(98, &[f32::INFINITY; 8]),
+            Err(MutateError::NonFinite)
+        );
+        assert!(live.insert(99, &[0.0; 8]).is_ok());
+        assert_eq!(live.insert(99, &[0.0; 8]), Err(MutateError::DuplicateId(99)));
+    }
+
+    #[test]
+    fn deleted_ids_are_never_returned_but_routed_through() {
+        let rs = rows(300, 12, 4);
+        let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
+        let probe = rs[7].clone();
+        let before = live.search_one(&Query::new(&probe).k(10).window(40));
+        assert_eq!(before.ids[0], 7, "self query finds itself under L2");
+        // delete the whole true top-5
+        for &id in &before.ids[..5] {
+            live.delete(id).unwrap();
+        }
+        assert_eq!(live.journal().deletes, 5);
+        assert_eq!(live.live_len(), 295);
+        assert_eq!(live.delete(before.ids[0]), Err(MutateError::UnknownId(before.ids[0])));
+        let after = live.search_one(&Query::new(&probe).k(10).window(40));
+        assert_eq!(after.ids.len(), 10, "still k results from live nodes");
+        for id in &after.ids {
+            assert!(!before.ids[..5].contains(id), "deleted id {id} returned");
+        }
+        assert!(
+            after.stats.deleted_skipped >= 5,
+            "traversal routed through the deleted region: {:?}",
+            after.stats
+        );
+        assert_eq!(after.stats.filtered, 0, "no user filter attached");
+    }
+
+    #[test]
+    fn user_filter_composes_with_tombstones() {
+        let rs = rows(200, 12, 5);
+        let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
+        // delete the two best answers so the traversal is guaranteed to
+        // route through tombstones near the query
+        let pre = live.search_one(&Query::new(&rs[4]).k(4).window(60));
+        let doomed = [pre.ids[0], pre.ids[1]];
+        for &id in &doomed {
+            live.delete(id).unwrap();
+        }
+        let even = |id: u32| id % 2 == 0;
+        let got = live.search_one(&Query::new(&rs[4]).k(10).window(60).filter(&even));
+        assert!(got.ids.iter().all(|id| id % 2 == 0));
+        for id in &doomed {
+            assert!(!got.ids.contains(id), "deleted id {id} returned");
+        }
+        assert!(got.stats.filtered > 0, "odd ids counted as user-filtered");
+        assert!(got.stats.deleted_skipped >= 1, "{:?}", got.stats);
+    }
+
+    #[test]
+    fn consolidate_compacts_and_keeps_external_ids() {
+        let rs = rows(400, 12, 6);
+        let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
+        // delete every third id, insert a small far-away cluster
+        let mut deleted = Vec::new();
+        for id in (0..400u32).step_by(3) {
+            live.delete(id).unwrap();
+            deleted.push(id);
+        }
+        let mut rng = Rng::new(9);
+        for i in 0..30u32 {
+            let v: Vec<f32> = (0..12).map(|_| 8.0 + 0.05 * rng.gaussian_f32()).collect();
+            live.insert(5000 + i, &v).unwrap();
+        }
+        let live_before = live.live_len();
+        let report = live.consolidate();
+        assert_eq!(report.removed, deleted.len());
+        assert!(report.rewired > 0);
+        assert_eq!(report.remaining, live_before);
+        assert_eq!(live.total_slots(), live_before, "slots compacted");
+        assert_eq!(live.tombstone_fraction(), 0.0);
+        assert_eq!(live.pending_inserts(), 0, "insert log folded in");
+        assert_eq!(live.journal().consolidations, 1);
+        // external ids survive compaction: a surviving base id still
+        // finds itself, the inserted cluster still answers, deleted ids
+        // stay gone
+        let got = live.search_one(&Query::new(&rs[7]).k(5).window(40));
+        assert_eq!(got.ids[0], 7);
+        assert_eq!(got.stats.deleted_skipped, 0, "no tombstones left");
+        let probe = vec![8.0f32; 12];
+        let cluster = live.search_one(&Query::new(&probe).k(10).window(40));
+        assert!(cluster.ids.iter().filter(|&&id| id >= 5000).count() >= 9);
+        for q_id in [1u32, 7, 100] {
+            let r = live.search_one(&Query::new(&rs[q_id as usize]).k(20).window(80));
+            for id in &r.ids {
+                assert!(!deleted.contains(id), "deleted {id} resurfaced");
+            }
+        }
+        // a second consolidation is a no-op
+        let again = live.consolidate();
+        assert_eq!(again.removed, 0);
+    }
+
+    #[test]
+    fn delete_everything_then_reinsert() {
+        let rs = rows(60, 8, 7);
+        let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));
+        for id in 0..60u32 {
+            live.delete(id).unwrap();
+        }
+        assert_eq!(live.live_len(), 0);
+        let empty = live.search_one(&Query::new(&rs[0]).k(5).window(20));
+        assert!(empty.ids.is_empty(), "{:?}", empty.ids);
+        live.consolidate();
+        assert_eq!(live.total_slots(), 0);
+        assert!(live.search_one(&Query::new(&rs[0]).k(5)).ids.is_empty());
+        // the index recovers: re-insert a few vectors and search again
+        for (i, r) in rs.iter().take(10).enumerate() {
+            live.insert(i as u32, r).unwrap();
+        }
+        assert_eq!(live.live_len(), 10);
+        let got = live.search_one(&Query::new(&rs[3]).k(3).window(20));
+        assert_eq!(got.ids.first(), Some(&3));
+    }
+
+    #[test]
+    fn insert_after_deleting_everything_without_consolidation() {
+        // the whole greedy candidate pool is tombstoned: the insert
+        // must still end up reachable (medoid re-anchors to it)
+        let rs = rows(60, 8, 10);
+        let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));
+        for id in 0..60u32 {
+            live.delete(id).unwrap();
+        }
+        live.insert(100, &rs[0]).unwrap();
+        assert_eq!(live.live_len(), 1);
+        let got = live.search_one(&Query::new(&rs[0]).k(1).window(20));
+        assert_eq!(got.ids, vec![100], "orphaned insert is unreachable");
+        // and the next insert links to it through the new entry point
+        live.insert(101, &rs[1]).unwrap();
+        let got = live.search_one(&Query::new(&rs[1]).k(2).window(20));
+        assert!(got.ids.contains(&101) && got.ids.contains(&100), "{:?}", got.ids);
+    }
+
+    #[test]
+    fn insert_into_fully_deleted_cluster_links_through_tombstones() {
+        // a dense far-away cluster is inserted then fully deleted; a new
+        // vector landing there must link *through* the tombstoned
+        // cluster to its live neighbors instead of being orphaned
+        let rs = rows(200, 12, 11);
+        let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
+        let mut rng = Rng::new(13);
+        for i in 0..20u32 {
+            let v: Vec<f32> = (0..12).map(|_| 9.0 + 0.05 * rng.gaussian_f32()).collect();
+            live.insert(1000 + i, &v).unwrap();
+        }
+        for i in 0..20u32 {
+            live.delete(1000 + i).unwrap();
+        }
+        let v: Vec<f32> = vec![9.0; 12];
+        live.insert(2000, &v).unwrap();
+        let got = live.search_one(&Query::new(&v).k(3).window(40));
+        assert_eq!(got.ids.first(), Some(&2000), "{:?}", got.ids);
+        assert!(got.ids.iter().all(|&id| id < 1000 || id == 2000));
+    }
+
+    #[test]
+    fn reinsert_after_delete_uses_fresh_slot() {
+        let rs = rows(100, 8, 8);
+        let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));
+        live.delete(5).unwrap();
+        let slot = live.insert(5, &rs[5]).unwrap();
+        assert_eq!(slot, 100, "new internal slot appended");
+        let got = live.search_one(&Query::new(&rs[5]).k(1).window(30));
+        assert_eq!(got.ids, vec![5], "re-inserted id searchable again");
+    }
+}

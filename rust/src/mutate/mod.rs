@@ -1,0 +1,39 @@
+//! Streaming mutation: the live index subsystem.
+//!
+//! Everything upstream of this module is frozen-at-build; this module
+//! makes the serve path mutable — FreshDiskANN-style streaming inserts
+//! and deletes running *concurrently with search*, plus the
+//! consolidation pass that compacts tombstones away:
+//!
+//! ```text
+//! insert(ext_id, x) ──> project B x ──> append to both stores ──┐
+//!                                                               ▼
+//!                      greedy-search + α-robust-prune link, reverse-edge patch
+//! delete(ext_id)  ──> tombstone bit (O(1)); traversal routes through,
+//!                      never returns ([`QueryStats::deleted_skipped`])
+//! consolidate()   ──> rewire neighbors-of-deleted, compact stores +
+//!                      graph + id map, clear tombstones
+//! ```
+//!
+//! The module splits into:
+//! * [`live`] — [`LiveIndex`], the mutable index and its search path;
+//! * [`adjacency`] — the RwLock-sharded growable neighbor lists;
+//! * [`tombstones`] — the lock-free-readable deletion bitmap;
+//! * [`persist_live`] — live snapshot save/load
+//!   (`FORMAT_VERSION_LIVE`, `TOMBS`/`IDMAP`/`MUTLOG` sections).
+//!
+//! The serving engine drives it through an ingest lane
+//! ([`crate::coordinator::Engine::start_live`]): one mutation thread
+//! interleaved with the search worker pool, consolidation triggered off
+//! the hot path when the tombstone fraction crosses a threshold.
+//!
+//! [`QueryStats::deleted_skipped`]: crate::index::query::QueryStats
+
+pub mod adjacency;
+pub mod live;
+pub mod persist_live;
+pub mod tombstones;
+
+pub use adjacency::{AdjacencyReader, LiveAdjacency};
+pub use live::{ConsolidateReport, LiveIndex, MutateError, MutationJournal};
+pub use tombstones::{TombstoneReader, Tombstones};

@@ -1,0 +1,238 @@
+//! Live snapshot persistence: the five frozen core sections plus three
+//! live sections, stamped [`FORMAT_VERSION_LIVE`].
+//!
+//! A live snapshot *reshapes the meaning* of the core sections — store
+//! rows may be tombstoned, result ids go through the external-id map —
+//! so per the PR 2 versioning contract the format version is bumped
+//! rather than relying on ignorable extra sections: a frozen-only
+//! reader ([`LeanVecIndex::load`]) meeting a live snapshot fails with
+//! [`SnapshotError::UnsupportedVersion`] instead of silently serving
+//! deleted vectors. A pristine live index (no mutations ever) writes a
+//! plain version-1 snapshot, byte-identical to
+//! [`LeanVecIndex::save`].
+//!
+//! New sections (byte layout in `docs/SNAPSHOT_FORMAT.md`):
+//!
+//! * `TOMBS` — slot count + the tombstone bitmap, 64 ids per word;
+//! * `IDMAP` — internal slot -> external id, one `u32` per slot;
+//! * `MUTLOG` — lifetime mutation counters + the pending insert log
+//!   (external id + full-D vector per insert since the last
+//!   consolidation — what a model re-train against drifted data would
+//!   consume).
+//!
+//! Saving is byte-deterministic, and save → load → save reproduces the
+//! file exactly (the round-trip tests in `rust/tests/mutate.rs` assert
+//! it), so mutated indexes keep the frozen snapshot guarantee: a loaded
+//! copy serves bit-identical results.
+//!
+//! [`LeanVecIndex::load`]: crate::index::LeanVecIndex::load
+//! [`LeanVecIndex::save`]: crate::index::LeanVecIndex::save
+
+use crate::data::io::bin;
+use crate::graph::vamana::VamanaGraph;
+use crate::index::persist::{
+    core_sections, load_core_sections, read_sections_any, tag_str, write_sections_versioned,
+    MetaFacts, RawSection, SnapshotError, SnapshotMeta, FORMAT_VERSION, FORMAT_VERSION_LIVE,
+    SECTION_IDMAP, SECTION_MUTLOG, SECTION_TOMBS,
+};
+use crate::mutate::live::{LiveIndex, MutationJournal};
+use crate::mutate::tombstones::Tombstones;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+fn corrupt(what: impl Into<String>) -> SnapshotError {
+    SnapshotError::Corrupt(what.into())
+}
+
+impl LiveIndex {
+    /// Write the live index to `path`. Searches continue while the
+    /// snapshot is taken (a read guard is held); mutators wait.
+    /// Pristine indexes produce a plain frozen (version-1) snapshot;
+    /// any mutation history produces a [`FORMAT_VERSION_LIVE`] file
+    /// with the `TOMBS`/`IDMAP`/`MUTLOG` sections appended.
+    pub fn save(&self, path: &Path, meta: &SnapshotMeta) -> Result<u64, SnapshotError> {
+        let _writer = self.writer.lock().unwrap();
+        let core = self.core_read();
+        let n = core.primary.len();
+        let graph = VamanaGraph {
+            adj: self.graph.to_adjacency(n),
+            medoid: self.medoid.load(Ordering::Acquire),
+            params: self.params,
+            sim: self.sim,
+            build_seconds: self.graph_build_seconds,
+        };
+        let facts = MetaFacts {
+            sim: self.sim,
+            projection: self.model.kind,
+            primary: self.primary_compression,
+            secondary: self.secondary_compression,
+            n,
+            input_dim: self.model.input_dim(),
+            target_dim: self.model.target_dim(),
+            breakdown: self.build_breakdown,
+        };
+        let mut sections = core_sections(
+            meta,
+            &facts,
+            &self.model,
+            core.primary.as_ref(),
+            core.secondary.as_ref(),
+            &graph,
+        );
+        let identity_ids = core.ext_of.iter().enumerate().all(|(i, &e)| e == i as u32);
+        if self.tombs.deleted() == 0
+            && core.journal == MutationJournal::default()
+            && core.insert_log.is_empty()
+            && identity_ids
+        {
+            return write_sections_versioned(path, &sections, FORMAT_VERSION);
+        }
+
+        // TOMBS: slot count, canonical word count, bitmap words
+        let mut tombs = Vec::new();
+        bin::put_u64(&mut tombs, n as u64);
+        let canonical = n.div_ceil(64);
+        bin::put_u64(&mut tombs, canonical as u64);
+        let words = self.tombs.to_words();
+        for i in 0..canonical {
+            let w = words.get(i).copied().unwrap_or(0);
+            tombs.extend_from_slice(&w.to_le_bytes());
+        }
+
+        // IDMAP: internal slot -> external id
+        let mut idmap = Vec::new();
+        bin::put_u32s(&mut idmap, &core.ext_of);
+
+        // MUTLOG: lifetime counters + pending insert log
+        let mut log = Vec::new();
+        bin::put_u64(&mut log, core.journal.inserts);
+        bin::put_u64(&mut log, core.journal.deletes);
+        bin::put_u64(&mut log, core.journal.consolidations);
+        bin::put_u64(&mut log, core.insert_log.len() as u64);
+        for (ext, vec) in &core.insert_log {
+            bin::put_u32(&mut log, *ext);
+            bin::put_f32s(&mut log, vec);
+        }
+
+        sections.push(RawSection {
+            tag: SECTION_TOMBS,
+            bytes: tombs,
+        });
+        sections.push(RawSection {
+            tag: SECTION_IDMAP,
+            bytes: idmap,
+        });
+        sections.push(RawSection {
+            tag: SECTION_MUTLOG,
+            bytes: log,
+        });
+        write_sections_versioned(path, &sections, FORMAT_VERSION_LIVE)
+    }
+
+    /// Load a live *or* frozen snapshot into a [`LiveIndex`]. The
+    /// loaded copy serves bit-identical results to the saved one —
+    /// same ids, scores, and [`QueryStats`] — and re-saving it
+    /// reproduces the file byte-for-byte.
+    ///
+    /// [`QueryStats`]: crate::index::query::QueryStats
+    pub fn load(path: &Path) -> Result<(LiveIndex, SnapshotMeta), SnapshotError> {
+        let (version, sections) = read_sections_any(path)?;
+        let (index, meta) = load_core_sections(&sections)?;
+        let mut live = LiveIndex::from_index(index);
+        if version < FORMAT_VERSION_LIVE {
+            return Ok((live, meta));
+        }
+        let find = |tag: [u8; 8]| -> Result<&[u8], SnapshotError> {
+            sections
+                .iter()
+                .find(|s| s.tag == tag)
+                .map(|s| s.bytes.as_slice())
+                .ok_or_else(|| SnapshotError::MissingSection(tag_str(&tag)))
+        };
+        let n = live.total_slots();
+
+        // TOMBS
+        let mut cur = bin::Cursor::new(find(SECTION_TOMBS)?);
+        let slots = cur.get_u64()? as usize;
+        if slots != n {
+            return Err(corrupt(format!(
+                "tombstone bitmap covers {slots} slots, stores hold {n}"
+            )));
+        }
+        let canonical = n.div_ceil(64);
+        let word_count = cur.get_u64()? as usize;
+        if word_count != canonical {
+            return Err(corrupt("tombstone bitmap word count disagrees with slots"));
+        }
+        let mut words = Vec::with_capacity(word_count);
+        for _ in 0..word_count {
+            words.push(cur.get_u64()?);
+        }
+        if cur.remaining() != 0 {
+            return Err(corrupt("trailing bytes in tombstone section"));
+        }
+        let tail_bits = n % 64;
+        if tail_bits != 0 {
+            if let Some(&last) = words.last() {
+                if last >> tail_bits != 0 {
+                    return Err(corrupt("tombstone bit set beyond the last slot"));
+                }
+            }
+        }
+
+        // IDMAP
+        let mut cur = bin::Cursor::new(find(SECTION_IDMAP)?);
+        let ext_of = cur.get_u32s()?;
+        if ext_of.len() != n || cur.remaining() != 0 {
+            return Err(corrupt("id map length disagrees with stores"));
+        }
+
+        // MUTLOG
+        let mut cur = bin::Cursor::new(find(SECTION_MUTLOG)?);
+        let journal = MutationJournal {
+            inserts: cur.get_u64()?,
+            deletes: cur.get_u64()?,
+            consolidations: cur.get_u64()?,
+        };
+        let pending = cur.get_u64()? as usize;
+        if pending > n {
+            return Err(corrupt("insert log longer than the store"));
+        }
+        let dim = live.model.input_dim();
+        let mut insert_log = Vec::with_capacity(pending);
+        for _ in 0..pending {
+            let ext = cur.get_u32()?;
+            let vec = cur.get_f32s()?;
+            if vec.len() != dim {
+                return Err(corrupt("insert-log vector has the wrong dimensionality"));
+            }
+            insert_log.push((ext, vec));
+        }
+        if cur.remaining() != 0 {
+            return Err(corrupt("trailing bytes in mutation log"));
+        }
+
+        // install the live state: tombstones first, then the id maps —
+        // a live external id appearing twice is corruption
+        live.tombs = Tombstones::from_words(&words, n);
+        let tomb = live.tombs.reader();
+        let mut int_of: HashMap<u32, u32> = HashMap::with_capacity(n);
+        for (id, &ext) in ext_of.iter().enumerate() {
+            if tomb.is_deleted(id as u32) {
+                continue;
+            }
+            if int_of.insert(ext, id as u32).is_some() {
+                return Err(corrupt(format!("external id {ext} is live twice")));
+            }
+        }
+        {
+            let mut core = live.core_write();
+            core.ext_of = ext_of;
+            core.int_of = int_of;
+            core.insert_log = insert_log;
+            core.journal = journal;
+        }
+        Ok((live, meta))
+    }
+}

@@ -1,0 +1,195 @@
+//! Tombstone bitmap for the live index: deletes are O(1) bit-sets
+//! honored by traversal (routed *through*, never returned) until a
+//! consolidation pass compacts them away.
+//!
+//! Concurrency contract (the whole `mutate` module shares it): **one
+//! writer, many readers**. Mutators are serialized by
+//! [`crate::mutate::LiveIndex`]'s writer lock; searches read through a
+//! [`TombstoneReader`] snapshot taken once per query and never block —
+//! bit tests are relaxed atomic loads on a shared word array. Growth
+//! (the only structural change) copies the words into a larger array
+//! and swaps the `Arc`, so an in-flight reader keeps a consistent view
+//! of the bitmap as it was when its query started.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Grow-only atomic bitmap + deleted counter.
+pub struct Tombstones {
+    words: RwLock<Arc<Vec<AtomicU64>>>,
+    deleted: AtomicUsize,
+}
+
+/// A per-query snapshot of the bitmap: lock-free bit tests.
+#[derive(Clone)]
+pub struct TombstoneReader {
+    words: Arc<Vec<AtomicU64>>,
+}
+
+impl TombstoneReader {
+    /// Is `id` tombstoned? Ids beyond the snapshot are alive by
+    /// definition (they were inserted after it was taken).
+    #[inline]
+    pub fn is_deleted(&self, id: u32) -> bool {
+        let w = id as usize / 64;
+        match self.words.get(w) {
+            Some(word) => (word.load(Ordering::Relaxed) >> (id % 64)) & 1 == 1,
+            None => false,
+        }
+    }
+}
+
+fn new_words(capacity: usize) -> Vec<AtomicU64> {
+    (0..capacity.div_ceil(64)).map(|_| AtomicU64::new(0)).collect()
+}
+
+impl Tombstones {
+    /// An all-alive bitmap covering `capacity` ids.
+    pub fn new(capacity: usize) -> Tombstones {
+        Tombstones {
+            words: RwLock::new(Arc::new(new_words(capacity))),
+            deleted: AtomicUsize::new(0),
+        }
+    }
+
+    /// Rebuild from persisted words (see `mutate::persist_live`).
+    pub fn from_words(words: &[u64], capacity: usize) -> Tombstones {
+        let vec = new_words(capacity.max(words.len() * 64));
+        let mut deleted = 0usize;
+        for (slot, &w) in vec.iter().zip(words.iter()) {
+            slot.store(w, Ordering::Relaxed);
+            deleted += w.count_ones() as usize;
+        }
+        Tombstones {
+            words: RwLock::new(Arc::new(vec)),
+            deleted: AtomicUsize::new(deleted),
+        }
+    }
+
+    /// Snapshot for one query's traversal.
+    pub fn reader(&self) -> TombstoneReader {
+        TombstoneReader {
+            words: Arc::clone(&self.words.read().unwrap()),
+        }
+    }
+
+    /// Grow to cover at least `n` ids (writer-side; called on insert).
+    pub fn ensure(&self, n: usize) {
+        let need = n.div_ceil(64);
+        {
+            let cur = self.words.read().unwrap();
+            if cur.len() >= need {
+                return;
+            }
+        }
+        let mut guard = self.words.write().unwrap();
+        if guard.len() >= need {
+            return;
+        }
+        // grow with slack so the copy amortizes across inserts
+        let grown = new_words((need * 64).max(guard.len() * 2 * 64));
+        for (dst, src) in grown.iter().zip(guard.iter()) {
+            dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        *guard = Arc::new(grown);
+    }
+
+    /// Tombstone `id`; returns false if it was already set. The caller
+    /// must have `ensure`d capacity (every insert does).
+    pub fn set(&self, id: u32) -> bool {
+        let guard = self.words.read().unwrap();
+        let w = id as usize / 64;
+        let bit = 1u64 << (id % 64);
+        let prev = guard[w].fetch_or(bit, Ordering::Relaxed);
+        if prev & bit == 0 {
+            self.deleted.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is `id` currently tombstoned?
+    pub fn is_deleted(&self, id: u32) -> bool {
+        self.reader().is_deleted(id)
+    }
+
+    /// Number of tombstoned ids.
+    pub fn deleted(&self) -> usize {
+        self.deleted.load(Ordering::Relaxed)
+    }
+
+    /// Reset to all-alive over `capacity` ids (after consolidation).
+    pub fn reset(&self, capacity: usize) {
+        let mut guard = self.words.write().unwrap();
+        *guard = Arc::new(new_words(capacity));
+        self.deleted.store(0, Ordering::Relaxed);
+    }
+
+    /// Plain-word image for persistence.
+    pub fn to_words(&self) -> Vec<u64> {
+        self.words
+            .read()
+            .unwrap()
+            .iter()
+            .map(|w| w.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_and_test_bits() {
+        let t = Tombstones::new(130);
+        assert!(!t.is_deleted(0));
+        assert!(t.set(0));
+        assert!(!t.set(0), "double delete is idempotent");
+        assert!(t.set(129));
+        assert!(t.is_deleted(0));
+        assert!(t.is_deleted(129));
+        assert!(!t.is_deleted(64));
+        assert_eq!(t.deleted(), 2);
+    }
+
+    #[test]
+    fn reader_snapshot_is_stable_across_growth() {
+        let t = Tombstones::new(64);
+        t.set(3);
+        let snap = t.reader();
+        t.ensure(1024);
+        t.set(700);
+        // the old snapshot still sees id 3 deleted and treats the new
+        // range as alive
+        assert!(snap.is_deleted(3));
+        assert!(!snap.is_deleted(700));
+        assert!(t.is_deleted(700));
+        assert!(t.is_deleted(3), "growth copies existing bits");
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let t = Tombstones::new(64);
+        t.set(1);
+        t.set(2);
+        t.reset(128);
+        assert_eq!(t.deleted(), 0);
+        assert!(!t.is_deleted(1));
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let t = Tombstones::new(200);
+        t.set(5);
+        t.set(70);
+        t.set(199);
+        let back = Tombstones::from_words(&t.to_words(), 200);
+        assert_eq!(back.deleted(), 3);
+        for id in [5u32, 70, 199] {
+            assert!(back.is_deleted(id));
+        }
+        assert!(!back.is_deleted(6));
+    }
+}

@@ -21,7 +21,7 @@
 //! (the paper's LVQ4x8): traversal reads only the 4-bit codes; the
 //! residual level is used for decode/re-ranking.
 
-use super::{corrupt, finish_score, PreparedQuery, ScoreStore};
+use super::{compact_flat, compact_scalars, corrupt, finish_score, PreparedQuery, ScoreStore};
 use crate::config::{Compression, Similarity};
 use crate::data::io::bin;
 use crate::linalg::matrix::dot;
@@ -185,13 +185,17 @@ impl LvqStore {
         &self.mean
     }
 
+    /// Packed code bytes per vector (one copy of the stride rule for
+    /// every accessor; the constructors derive it from `bits` before
+    /// the struct exists and store it via `bytes_per_vec`).
+    #[inline]
+    fn stride(&self) -> usize {
+        self.bytes_per_vec - 8
+    }
+
     #[inline]
     fn code_slice(&self, id: u32) -> &[u8] {
-        let stride = if self.bits == 8 {
-            self.dim
-        } else {
-            self.dim.div_ceil(2)
-        };
+        let stride = self.stride();
         let i = id as usize * stride;
         &self.codes[i..i + stride]
     }
@@ -359,6 +363,25 @@ impl ScoreStore for LvqStore {
         };
         bin::put_u8(out, kind.code());
         self.write_fields(out);
+    }
+
+    fn append_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        // centered against the *frozen* global mean: the mean is part of
+        // the learned representation, so existing codes stay valid
+        let one = [row.to_vec()];
+        let chunk = encode_rows(&one, &self.mean, self.bits, self.stride());
+        self.codes.extend_from_slice(&chunk.codes);
+        self.delta.extend_from_slice(&chunk.delta);
+        self.lo.extend_from_slice(&chunk.lo);
+        self.norms_sq.extend_from_slice(&chunk.norms_sq);
+    }
+
+    fn compact(&mut self, keep: &[u32]) {
+        compact_flat(&mut self.codes, self.stride(), keep);
+        compact_scalars(&mut self.delta, keep);
+        compact_scalars(&mut self.lo, keep);
+        compact_scalars(&mut self.norms_sq, keep);
     }
 }
 
@@ -528,6 +551,36 @@ impl ScoreStore for Lvq4x8Store {
         bin::put_f32s(out, &self.res_delta);
         bin::put_f32s(out, &self.res_lo);
         bin::put_f32s(out, &self.full_norms_sq);
+    }
+
+    fn append_row(&mut self, row: &[f32]) {
+        let dim = self.first.dim();
+        self.first.append_row(row);
+        let id = (self.first.len() - 1) as u32;
+        // second level: 8-bit quantization of the first-level residual,
+        // exactly as the batch constructor computes it
+        let dec = self.first.decode(id);
+        let resid: Vec<f32> = row.iter().zip(dec.iter()).map(|(&x, &xh)| x - xh).collect();
+        let (c, d, l) = quantize(&resid, 256);
+        let mut ns = 0.0f32;
+        for (j, &cj) in c.iter().enumerate() {
+            let v = dec[j] + cj as f32 * d + l;
+            ns += v * v;
+        }
+        debug_assert_eq!(c.len(), dim);
+        self.res_codes.extend_from_slice(&c);
+        self.res_delta.push(d);
+        self.res_lo.push(l);
+        self.full_norms_sq.push(ns);
+    }
+
+    fn compact(&mut self, keep: &[u32]) {
+        let dim = self.first.dim();
+        self.first.compact(keep);
+        compact_flat(&mut self.res_codes, dim, keep);
+        compact_scalars(&mut self.res_delta, keep);
+        compact_scalars(&mut self.res_lo, keep);
+        compact_scalars(&mut self.full_norms_sq, keep);
     }
 }
 
@@ -788,6 +841,119 @@ mod tests {
         match crate::quant::read_store(&mut cur) {
             Err(err) => assert_eq!(err.kind(), std::io::ErrorKind::InvalidData),
             Ok(_) => panic!("mismatched code byte must fail"),
+        }
+    }
+
+    /// One boxed store of every kind over `rs` (the five live-mutation
+    /// arms).
+    fn all_kinds(rs: &[Vec<f32>]) -> Vec<Box<dyn ScoreStore>> {
+        vec![
+            Box::new(crate::quant::F32Store::from_rows(rs)),
+            Box::new(crate::quant::F16Store::from_rows(rs)),
+            Box::new(LvqStore::new(rs, 4)),
+            Box::new(LvqStore::new(rs, 8)),
+            Box::new(Lvq4x8Store::new(rs)),
+        ]
+    }
+
+    #[test]
+    fn append_row_scores_self_consistently_all_kinds() {
+        let base = rows(50, 24, 30);
+        let extra = rows(10, 24, 31);
+        let q: Vec<f32> = rows(1, 24, 32).pop().unwrap();
+        for mut store in all_kinds(&base) {
+            for r in &extra {
+                store.append_row(r);
+            }
+            assert_eq!(store.len(), 60);
+            let pq = store.prepare(&q, Similarity::InnerProduct);
+            for (i, r) in extra.iter().enumerate() {
+                let id = (50 + i) as u32;
+                let dec = store.decode(id);
+                // appended rows decode close to the original...
+                let range: f32 = r.iter().fold(0.1f32, |m, &v| m.max(v.abs()));
+                for (a, b) in dec.iter().zip(r.iter()) {
+                    assert!(rel_err(*a, *b, range) < 0.2, "{a} vs {b}");
+                }
+                // ...and score consistently with their own decode
+                let via_score = store.score(&pq, id);
+                let via_decode = dot(&q, &dec);
+                assert!(
+                    (via_score - via_decode).abs() < 0.05 * (1.0 + via_decode.abs()),
+                    "{via_score} vs {via_decode}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn append_row_bit_identical_to_batch_for_fixed_constants() {
+        // stores whose encoding has no dataset-level state (f32/f16) and
+        // LVQ with an explicitly shared mean: appending one-by-one must
+        // reproduce the batch construction bit-for-bit
+        let all = rows(40, 16, 33);
+        let (head, tail) = all.split_at(30);
+        let q: Vec<f32> = rows(1, 16, 34).pop().unwrap();
+        let mean = compute_mean(&all, 16);
+        let pairs: Vec<(Box<dyn ScoreStore>, Box<dyn ScoreStore>)> = vec![
+            (
+                Box::new(crate::quant::F32Store::from_rows(&all)),
+                Box::new(crate::quant::F32Store::from_rows(head)),
+            ),
+            (
+                Box::new(crate::quant::F16Store::from_rows(&all)),
+                Box::new(crate::quant::F16Store::from_rows(head)),
+            ),
+            (
+                Box::new(LvqStore::with_mean(&all, 8, Some(mean.clone()))),
+                Box::new(LvqStore::with_mean(head, 8, Some(mean.clone()))),
+            ),
+            (
+                Box::new(LvqStore::with_mean(&all, 4, Some(mean.clone()))),
+                Box::new(LvqStore::with_mean(head, 4, Some(mean))),
+            ),
+        ];
+        for (batch, mut grown) in pairs {
+            for r in tail {
+                grown.append_row(r);
+            }
+            assert_eq!(grown.len(), batch.len());
+            let (pa, pb) = (
+                batch.prepare(&q, Similarity::L2),
+                grown.prepare(&q, Similarity::L2),
+            );
+            for i in 0..batch.len() as u32 {
+                assert_eq!(batch.score(&pa, i).to_bits(), grown.score(&pb, i).to_bits());
+                assert_eq!(batch.decode(i), grown.decode(i));
+            }
+        }
+    }
+
+    #[test]
+    fn compact_preserves_survivors_bitwise_all_kinds() {
+        let rs = rows(60, 17, 35); // odd dim exercises the nibble tail
+        let q: Vec<f32> = rows(1, 17, 36).pop().unwrap();
+        let keep: Vec<u32> = (0..60u32).filter(|i| i % 3 != 1).collect();
+        for (reference, mut store) in all_kinds(&rs).into_iter().zip(all_kinds(&rs)) {
+            store.compact(&keep);
+            assert_eq!(store.len(), keep.len());
+            assert_eq!(store.dim(), 17);
+            let (pa, pb) = (
+                reference.prepare(&q, Similarity::InnerProduct),
+                store.prepare(&q, Similarity::InnerProduct),
+            );
+            for (new_id, &old_id) in keep.iter().enumerate() {
+                let new_id = new_id as u32;
+                assert_eq!(
+                    reference.score(&pa, old_id).to_bits(),
+                    store.score(&pb, new_id).to_bits()
+                );
+                assert_eq!(
+                    reference.score_rerank(&pa, old_id).to_bits(),
+                    store.score_rerank(&pb, new_id).to_bits()
+                );
+                assert_eq!(reference.decode(old_id), store.decode(new_id));
+            }
         }
     }
 

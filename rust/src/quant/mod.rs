@@ -77,6 +77,40 @@ pub trait ScoreStore: Send + Sync {
     /// The payload is self-describing: it starts with the store's
     /// [`Compression`] wire code. Byte layout: `docs/SNAPSHOT_FORMAT.md`.
     fn write_bytes(&self, out: &mut Vec<u8>);
+
+    /// Append one vector; its id is the store's previous `len()`.
+    ///
+    /// The row is encoded with the store's *existing* derived constants
+    /// — for LVQ stores the global mean is part of the learned
+    /// representation, so new vectors are centered against it and the
+    /// mean is never re-estimated (existing codes stay valid; see the
+    /// live-index drift note in `docs/ARCHITECTURE.md`). Appending the
+    /// same row always produces the same bytes regardless of what else
+    /// is stored.
+    fn append_row(&mut self, row: &[f32]);
+
+    /// Drop every row not named in `keep` (strictly increasing old
+    /// ids): old id `keep[i]` becomes new id `i`. Tombstone
+    /// consolidation uses this to compact the store after deletes; the
+    /// surviving rows' bytes are moved, never re-encoded, so scores are
+    /// bit-identical across a compaction.
+    fn compact(&mut self, keep: &[u32]);
+}
+
+/// Shared compaction helper: retain `keep[i] * stride .. +stride` slices
+/// of a flat per-vector buffer, in `keep` order.
+pub(crate) fn compact_flat<T: Copy>(data: &mut Vec<T>, stride: usize, keep: &[u32]) {
+    let mut out = Vec::with_capacity(keep.len() * stride);
+    for &old in keep {
+        let i = old as usize * stride;
+        out.extend_from_slice(&data[i..i + stride]);
+    }
+    *data = out;
+}
+
+/// [`compact_flat`] for stride-1 per-vector constants.
+pub(crate) fn compact_scalars<T: Copy>(data: &mut Vec<T>, keep: &[u32]) {
+    compact_flat(data, 1, keep);
 }
 
 /// Deserialize a store previously written by [`ScoreStore::write_bytes`]

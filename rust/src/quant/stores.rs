@@ -1,6 +1,6 @@
 //! Uncompressed (f32) and half-precision (f16) vector stores.
 
-use super::{corrupt, finish_score, PreparedQuery, ScoreStore};
+use super::{compact_flat, compact_scalars, corrupt, finish_score, PreparedQuery, ScoreStore};
 use crate::config::{Compression, Similarity};
 use crate::data::io::bin;
 use crate::linalg::matrix::dot;
@@ -101,6 +101,17 @@ impl ScoreStore for F32Store {
         bin::put_u32(out, self.dim as u32);
         bin::put_f32s(out, &self.data);
         bin::put_f32s(out, &self.norms_sq);
+    }
+
+    fn append_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        self.norms_sq.push(dot(row, row));
+        self.data.extend_from_slice(row);
+    }
+
+    fn compact(&mut self, keep: &[u32]) {
+        compact_flat(&mut self.data, self.dim, keep);
+        compact_scalars(&mut self.norms_sq, keep);
     }
 }
 
@@ -224,6 +235,20 @@ impl ScoreStore for F16Store {
         bin::put_u32(out, self.dim as u32);
         bin::put_u16s(out, &self.data);
         bin::put_f32s(out, &self.norms_sq);
+    }
+
+    fn append_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        let enc = f16::encode_slice(row);
+        // norm of the *encoded* vector, same as the batch constructor
+        let dec = f16::decode_slice(&enc);
+        self.norms_sq.push(dot(&dec, &dec));
+        self.data.extend_from_slice(&enc);
+    }
+
+    fn compact(&mut self, keep: &[u32]) {
+        compact_flat(&mut self.data, self.dim, keep);
+        compact_scalars(&mut self.norms_sq, keep);
     }
 }
 

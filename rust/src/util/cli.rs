@@ -75,6 +75,28 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Like [`Args::usize`], but a present-yet-unparsable value is an
+    /// error instead of silently falling back to the default (the
+    /// up-front CLI validation path).
+    pub fn checked_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an unsigned integer, got '{v}'")),
+        }
+    }
+
+    /// [`Args::checked_usize`] for `f64` flags.
+    pub fn checked_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -131,6 +153,17 @@ mod tests {
         assert_eq!(a.f64("missing", 0.5), 0.5);
         assert_eq!(a.str("missing", "x"), "x");
         assert!(!a.switch("missing"));
+    }
+
+    #[test]
+    fn checked_getters_reject_garbage_but_accept_absent() {
+        let a = Args::parse(&toks("search --k banana --nprobe 8"));
+        assert!(a.checked_usize("k", 10).is_err());
+        assert_eq!(a.checked_usize("nprobe", 1), Ok(8));
+        assert_eq!(a.checked_usize("window", 50), Ok(50), "absent -> default");
+        let b = Args::parse(&toks("mutate --insert-rate 0.2x"));
+        assert!(b.checked_f64("insert-rate", 0.0).is_err());
+        assert_eq!(b.checked_f64("delete-rate", 0.1), Ok(0.1));
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Live-index integration tests: concurrent read/write soak, the
+//! churn-recall acceptance bar (insert 20% / delete 10% on a
+//! snapshot-loaded index, recall within 2 points of a fresh rebuild),
+//! and live snapshot round-trips (bit-identical search, byte-identical
+//! re-save, loud rejection by frozen-only readers).
+
+use leanvec::config::{GraphParams, ProjectionKind, Similarity};
+use leanvec::coordinator::{Engine, EngineConfig};
+use leanvec::graph::beam::SearchCtx;
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::LeanVecIndex;
+use leanvec::index::persist::{SnapshotError, SnapshotMeta};
+use leanvec::index::query::{Query, VectorIndex};
+use leanvec::index::FlatIndex;
+use leanvec::mutate::LiveIndex;
+use leanvec::util::rng::Rng;
+use std::sync::Arc;
+
+/// A few well-separated Gaussian blobs: an easy, stable recall target.
+fn clustered_rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    let k = 5;
+    let centers: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32() * 4.0).collect())
+        .collect();
+    (0..n)
+        .map(|i| {
+            let c = &centers[i % k];
+            c.iter().map(|&x| x + rng.gaussian_f32() * 0.3).collect()
+        })
+        .collect()
+}
+
+fn build(rows: &[Vec<f32>], target_dim: usize) -> LeanVecIndex {
+    let mut gp = GraphParams::for_similarity(Similarity::L2);
+    gp.max_degree = 24;
+    gp.build_window = 60;
+    IndexBuilder::new()
+        .projection(ProjectionKind::Id)
+        .target_dim(target_dim)
+        .graph_params(gp)
+        .build(rows, None, Similarity::L2)
+}
+
+/// Recall@k of `index` against the exact flat oracle over the live
+/// corpus (`(ext_id, vector)` pairs), probing with perturbed corpus
+/// vectors.
+fn live_recall(
+    index: &dyn VectorIndex,
+    corpus: &[(u32, Vec<f32>)],
+    k: usize,
+    window: usize,
+    probes: usize,
+    seed: u64,
+) -> f64 {
+    let rows: Vec<Vec<f32>> = corpus.iter().map(|(_, v)| v.clone()).collect();
+    let flat = FlatIndex::new(&rows, Similarity::L2);
+    let mut rng = Rng::new(seed);
+    let mut ctx = SearchCtx::new(0);
+    let mut hits = 0usize;
+    for _ in 0..probes {
+        let q: Vec<f32> = rows[rng.below(rows.len())]
+            .iter()
+            .map(|&x| x + 0.05 * rng.gaussian_f32())
+            .collect();
+        let (pos, _) = flat.search(&q, k);
+        let truth: Vec<u32> = pos.iter().map(|&p| corpus[p as usize].0).collect();
+        let got = index.search(&mut ctx, &Query::new(&q).k(k).window(window));
+        hits += got.ids.iter().filter(|id| truth.contains(id)).count();
+    }
+    hits as f64 / (probes * k) as f64
+}
+
+#[test]
+fn soak_interleaved_mutations_and_searches() {
+    let dim = 16;
+    let rows = clustered_rows(800, dim, 1);
+    let live = Arc::new(LiveIndex::from_index(build(&rows, 8)));
+    // pre-delete a slice synchronously: these ids must NEVER appear in
+    // any result for the rest of the test, churn or not
+    for id in 0..40u32 {
+        live.delete(id).unwrap();
+    }
+    let mut engine = Engine::start_live(
+        Arc::clone(&live),
+        EngineConfig {
+            workers: 2,
+            consolidate_threshold: 0.15,
+            ..EngineConfig::default()
+        },
+    );
+    // a direct-search stressor thread outside the engine: hammers the
+    // read path while the ingest lane mutates
+    let stress_live = Arc::clone(&live);
+    let stressor = std::thread::spawn(move || {
+        let mut rng = Rng::new(99);
+        let mut ctx = SearchCtx::new(0);
+        let mut seen = 0usize;
+        for _ in 0..300 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect();
+            let r = stress_live.search(&mut ctx, &Query::new(&q).k(10).window(50));
+            assert!(r.ids.len() <= 10);
+            for w in r.scores.windows(2) {
+                assert!(w[0] >= w[1], "scores out of order under churn");
+            }
+            for id in &r.ids {
+                assert!(*id >= 40, "pre-deleted id {id} surfaced mid-churn");
+            }
+            seen += r.ids.len();
+        }
+        seen
+    });
+    // churn through the ingest lane, searches interleaved
+    let mut rng = Rng::new(7);
+    let mut submitted = 0usize;
+    for round in 0..20u32 {
+        for j in 0..8u32 {
+            let v: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect();
+            engine.submit_insert(10_000 + round * 8 + j, v);
+        }
+        for j in 0..4u32 {
+            engine.submit_delete(40 + round * 4 + j);
+        }
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect();
+            engine.submit(q, 10);
+        }
+        submitted += 10;
+    }
+    // poisoned mutations mid-churn: both must be rejected (counted),
+    // never panic the ingest lane or the engine
+    engine.submit_insert(99_999, vec![f32::NAN; dim]);
+    engine.submit_delete(0); // already deleted before the engine started
+    let responses = engine.drain(submitted);
+    assert_eq!(responses.len(), submitted);
+    for r in &responses {
+        assert!(r.ids.len() <= 10);
+        let set: std::collections::HashSet<_> = r.ids.iter().collect();
+        assert_eq!(set.len(), r.ids.len(), "duplicate ids in a response");
+        for id in &r.ids {
+            assert!(*id >= 40, "pre-deleted id {id} served mid-churn");
+        }
+    }
+    assert!(stressor.join().expect("stressor panicked") > 0);
+    engine.quiesce_mutations();
+    let stats = engine.ingest_stats();
+    assert_eq!(stats.inserts, 160);
+    assert_eq!(stats.deletes, 80);
+    assert_eq!(stats.errors, 2, "NaN insert + double delete rejected");
+    engine.shutdown();
+    // quiesced: every delete is visible, recall over the live set holds
+    assert_eq!(live.live_len(), 800 - 40 - 80 + 160);
+    let deleted: Vec<u32> = (0..120).collect();
+    let mut ctx = SearchCtx::new(0);
+    for probe in [45usize, 200, 777] {
+        let r = live.search(&mut ctx, &Query::new(&rows[probe]).k(20).window(80));
+        for id in &r.ids {
+            assert!(!deleted.contains(id), "deleted id {id} after quiesce");
+        }
+    }
+    let corpus = live.export_live();
+    let recall = live_recall(live.as_ref(), &corpus, 10, 60, 40, 5);
+    assert!(recall >= 0.7, "live recall under churn too low: {recall}");
+}
+
+#[test]
+fn churn_recall_within_two_points_of_fresh_rebuild() {
+    // the acceptance bar: snapshot-loaded index, +20% inserts, -10%
+    // deletes, then live-set recall@10 within 2 points of a fresh full
+    // rebuild over the same live corpus at the same search window
+    let dim = 24;
+    let n0 = 1000;
+    let rows = clustered_rows(n0, dim, 2);
+    let snap = std::env::temp_dir().join(format!(
+        "leanvec-mutate-accept-{}.leanvec",
+        std::process::id()
+    ));
+    build(&rows, 12)
+        .save(&snap, &SnapshotMeta::default())
+        .unwrap();
+    let (live, _meta) = LiveIndex::load(&snap).unwrap();
+    std::fs::remove_file(&snap).ok();
+
+    let mut rng = Rng::new(11);
+    // +20%: new vectors from the same blob distribution
+    let fresh = clustered_rows(n0 / 5, dim, 3);
+    for (i, v) in fresh.iter().enumerate() {
+        live.insert((n0 + i) as u32, v).unwrap();
+    }
+    // -10% of the *original* corpus
+    let mut victims: Vec<u32> = (0..n0 as u32).collect();
+    rng.shuffle(&mut victims);
+    victims.truncate(n0 / 10);
+    for &id in &victims {
+        live.delete(id).unwrap();
+    }
+    let report = live.consolidate();
+    assert_eq!(report.removed, n0 / 10);
+    assert_eq!(live.live_len(), n0 + n0 / 5 - n0 / 10);
+
+    let corpus = live.export_live();
+    // fresh full rebuild over the live corpus, external ids == corpus
+    // order mapped back through the same (ext, vector) pairs
+    let rebuild_rows: Vec<Vec<f32>> = corpus.iter().map(|(_, v)| v.clone()).collect();
+    let rebuilt = build(&rebuild_rows, 12);
+
+    let (k, window, probes) = (10, 60, 100);
+    let live_r = live_recall(&live, &corpus, k, window, probes, 13);
+    // the rebuilt index's ids are corpus positions; rebase the oracle
+    // onto positions by giving every position its own "external" id
+    let pos_corpus: Vec<(u32, Vec<f32>)> = rebuild_rows
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (i as u32, v.clone()))
+        .collect();
+    let rebuilt_r = live_recall(&rebuilt, &pos_corpus, k, window, probes, 13);
+    assert!(
+        live_r >= rebuilt_r - 0.02,
+        "live recall {live_r} more than 2 points below rebuild {rebuilt_r}"
+    );
+    assert!(live_r >= 0.85, "absolute live recall too low: {live_r}");
+}
+
+#[test]
+fn mutated_snapshot_roundtrips_bit_identically() {
+    let dim = 16;
+    let rows = clustered_rows(400, dim, 4);
+    let live = LiveIndex::from_index(build(&rows, 8));
+    let mut rng = Rng::new(21);
+    for i in 0..60u32 {
+        let v: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect();
+        live.insert(2000 + i, &v).unwrap();
+    }
+    for id in (0..100u32).step_by(3) {
+        live.delete(id).unwrap();
+    }
+    let dir = std::env::temp_dir();
+    let p1 = dir.join(format!("leanvec-mutate-rt1-{}.leanvec", std::process::id()));
+    let p2 = dir.join(format!("leanvec-mutate-rt2-{}.leanvec", std::process::id()));
+    let meta = SnapshotMeta {
+        dataset: "soak".into(),
+        seed: 9,
+        scale: 1.0,
+        ..SnapshotMeta::default()
+    };
+    live.save(&p1, &meta).unwrap();
+
+    // a frozen-only reader must reject the live snapshot loudly
+    match LeanVecIndex::load(&p1) {
+        Err(SnapshotError::UnsupportedVersion { found, .. }) => assert_eq!(found, 2),
+        other => panic!("frozen reader accepted a live snapshot: {other:?}"),
+    }
+
+    let (back, meta_back) = LiveIndex::load(&p1).unwrap();
+    assert_eq!(meta_back.dataset, "soak");
+    assert_eq!(back.live_len(), live.live_len());
+    assert_eq!(back.total_slots(), live.total_slots());
+    assert_eq!(back.journal(), live.journal());
+    assert_eq!(back.pending_inserts(), live.pending_inserts());
+    // bit-identical serving: same ids, same score bits, same stats
+    let mut ctx = SearchCtx::new(0);
+    for seed in 0..15u64 {
+        let mut qrng = Rng::new(300 + seed);
+        let q: Vec<f32> = (0..dim).map(|_| qrng.gaussian_f32() * 2.0).collect();
+        let query = Query::new(&q).k(10).window(50).rerank_window(80);
+        let a = live.search(&mut ctx, &query);
+        let b = back.search(&mut ctx, &query);
+        assert_eq!(a.ids, b.ids);
+        let (sa, sb): (Vec<u32>, Vec<u32>) = (
+            a.scores.iter().map(|s| s.to_bits()).collect(),
+            b.scores.iter().map(|s| s.to_bits()).collect(),
+        );
+        assert_eq!(sa, sb);
+        assert_eq!(a.stats, b.stats);
+    }
+    // byte-deterministic re-save
+    back.save(&p2, &meta_back).unwrap();
+    let (b1, b2) = (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    assert_eq!(b1, b2, "save -> load -> save changed bytes");
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
+
+#[test]
+fn consolidated_snapshot_preserves_external_ids() {
+    let dim = 12;
+    let rows = clustered_rows(300, dim, 6);
+    let live = LiveIndex::from_index(build(&rows, 6));
+    for id in (0..300u32).step_by(4) {
+        live.delete(id).unwrap();
+    }
+    live.consolidate();
+    let path = std::env::temp_dir().join(format!(
+        "leanvec-mutate-consol-{}.leanvec",
+        std::process::id()
+    ));
+    live.save(&path, &SnapshotMeta::default()).unwrap();
+    let (back, _) = LiveIndex::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.total_slots(), live.total_slots());
+    assert_eq!(back.journal().consolidations, 1);
+    let mut ctx = SearchCtx::new(0);
+    // surviving ids keep answering under their original external names
+    for probe in [1u32, 7, 150, 299] {
+        if probe % 4 == 0 {
+            continue;
+        }
+        let r = back.search(&mut ctx, &Query::new(&rows[probe as usize]).k(1).window(40));
+        assert_eq!(r.ids, vec![probe], "self-query after consolidated reload");
+    }
+    // deleted ids are gone even though the tombstone bitmap is empty
+    let r = back.search(&mut ctx, &Query::new(&rows[0]).k(20).window(80));
+    assert!(r.ids.iter().all(|id| id % 4 != 0));
+    assert_eq!(r.stats.deleted_skipped, 0, "compaction left no tombstones");
+}
+
+#[test]
+fn pristine_live_save_is_a_frozen_snapshot() {
+    let rows = clustered_rows(200, 12, 8);
+    let live = LiveIndex::from_index(build(&rows, 6));
+    let path = std::env::temp_dir().join(format!(
+        "leanvec-mutate-pristine-{}.leanvec",
+        std::process::id()
+    ));
+    live.save(&path, &SnapshotMeta::default()).unwrap();
+    // no mutation history -> plain version-1 file any reader loads
+    let (frozen, _) = LeanVecIndex::load(&path).unwrap();
+    assert_eq!(frozen.len(), 200);
+    let (live_back, _) = LiveIndex::load(&path).unwrap();
+    assert_eq!(live_back.live_len(), 200);
+    std::fs::remove_file(&path).ok();
+}
