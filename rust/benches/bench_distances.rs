@@ -2,9 +2,16 @@
 //! is unavailable offline). This is the Fig.-1 mechanism at micro scale:
 //! score time tracks bytes/vector, so LVQ8 < FP16 < F32 per-score cost
 //! on a memory-bound loop.
+//!
+//! Two sections:
+//! * per-kernel: raw ns/vector for every kernel in the `simd` layer,
+//!   scalar reference vs dispatched (the headline: >= 2x on an AVX2
+//!   host for the LVQ4/LVQ8/F16 kernels at dim 128/768)
+//! * per-store: the fused `score()`/`score_block()` paths end to end
 
 use leanvec::config::Similarity;
 use leanvec::index::leanvec_index::make_store;
+use leanvec::simd;
 use leanvec::util::rng::Rng;
 use leanvec::util::stats::bench;
 use std::time::Duration;
@@ -16,8 +23,124 @@ fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// Print one scalar-vs-dispatched kernel pair as ns/vector + speedup.
+fn report_pair(kernel: &str, d: usize, scalar_ns: f64, dispatched_ns: f64) {
+    println!(
+        "kernel/{kernel:<6} d{d:<4} scalar {scalar_ns:>8.1} ns/vec   dispatched {dispatched_ns:>8.1} ns/vec   {:.2}x",
+        scalar_ns / dispatched_ns.max(1e-9)
+    );
+}
+
+/// Per-kernel microbench: every store kind's kernel at dim 128 and 768,
+/// scalar reference vs the dispatched implementation, over a working
+/// set large enough to stream from cache like real traversal batches.
+fn bench_kernels(budget: Duration) {
+    const N: usize = 4096;
+    println!("== per-kernel: ns/vector, scalar vs dispatched ==");
+    for d in [128usize, 768] {
+        let mut rng = Rng::new(42);
+        let f32_rows: Vec<f32> = (0..N * d).map(|_| rng.gaussian_f32()).collect();
+        let f16_rows: Vec<u16> = leanvec::util::f16::encode_slice(&f32_rows);
+        let u8_rows: Vec<u8> = (0..N * d).map(|_| rng.below(256) as u8).collect();
+        let s4 = d.div_ceil(2);
+        let u4_rows: Vec<u8> = (0..N * s4).map(|_| rng.below(256) as u8).collect();
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        let ids: Vec<usize> = (0..N).map(|_| rng.below(N)).collect();
+
+        // f32 dot
+        let mut i = 0usize;
+        let rs = bench(&format!("scalar/f32/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * d;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::scalar::dot_f32(&f32_rows[r..r + d], &q));
+        });
+        let mut i = 0usize;
+        let rd = bench(&format!("dispatch/f32/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * d;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::dot_f32(&f32_rows[r..r + d], &q));
+        });
+        report_pair("f32", d, rs.mean_ns, rd.mean_ns);
+
+        // fused f16 decode+dot
+        let mut i = 0usize;
+        let rs = bench(&format!("scalar/f16/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * d;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::scalar::dot_f16(&f16_rows[r..r + d], &q));
+        });
+        let mut i = 0usize;
+        let rd = bench(&format!("dispatch/f16/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * d;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::dot_f16(&f16_rows[r..r + d], &q));
+        });
+        report_pair("f16", d, rs.mean_ns, rd.mean_ns);
+
+        // LVQ8 u8 widen+FMA dot
+        let mut i = 0usize;
+        let rs = bench(&format!("scalar/lvq8/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * d;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::scalar::dot_u8(&u8_rows[r..r + d], &q));
+        });
+        let mut i = 0usize;
+        let rd = bench(&format!("dispatch/lvq8/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * d;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::dot_u8(&u8_rows[r..r + d], &q));
+        });
+        report_pair("lvq8", d, rs.mean_ns, rd.mean_ns);
+
+        // LVQ4 nibble-unpack dot
+        let mut i = 0usize;
+        let rs = bench(&format!("scalar/lvq4/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * s4;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::scalar::dot_u4(&u4_rows[r..r + s4], &q));
+        });
+        let mut i = 0usize;
+        let rd = bench(&format!("dispatch/lvq4/d{d}"), budget, || {
+            let r = ids[i & (N - 1)] * s4;
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::dot_u4(&u4_rows[r..r + s4], &q));
+        });
+        report_pair("lvq4", d, rs.mean_ns, rd.mean_ns);
+
+        // LVQ4x8 residual combine (both levels of one row)
+        let mut i = 0usize;
+        let rs = bench(&format!("scalar/lvq4x8/d{d}"), budget, || {
+            let id = ids[i & (N - 1)];
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::scalar::dot_u4_u8(
+                &u4_rows[id * s4..id * s4 + s4],
+                &u8_rows[id * d..id * d + d],
+                &q,
+            ));
+        });
+        let mut i = 0usize;
+        let rd = bench(&format!("dispatch/lvq4x8/d{d}"), budget, || {
+            let id = ids[i & (N - 1)];
+            i = i.wrapping_add(1);
+            std::hint::black_box(simd::dot_u4_u8(
+                &u4_rows[id * s4..id * s4 + s4],
+                &u8_rows[id * d..id * d + d],
+                &q,
+            ));
+        });
+        report_pair("lvq4x8", d, rs.mean_ns, rd.mean_ns);
+        println!();
+    }
+}
+
 fn main() {
+    // first line of output: which instruction set the dispatcher picked
+    // (CI greps the log for this so a silently-scalar runner is visible)
+    println!("kernel dispatch: {}", simd::active_features());
     let budget = Duration::from_millis(300);
+
+    bench_kernels(budget);
+
     println!("== bench_distances: fused scoring, one vector per call ==");
     for d in [160usize, 512, 768] {
         let data = rows(4096, d, 42);
@@ -39,6 +162,17 @@ fn main() {
                 store.bytes_per_vector(),
                 store.bytes_per_vector() as f64 / r.mean_ns
             );
+            // the blocked path the request loop actually uses
+            let mut out: Vec<f32> = Vec::with_capacity(64);
+            let mut start = 0usize;
+            let rb = bench(&format!("score_block/{comp}/d{d}"), budget, || {
+                let s = start & 4095;
+                let end = (s + 64).min(4096);
+                store.score_block(&pq, &ids[s..end], &mut out);
+                start = start.wrapping_add(64);
+                std::hint::black_box(out.last().copied());
+            });
+            println!("{}  [{:.1} ns/vec in 64-wide blocks]", rb, rb.mean_ns / 64.0);
         }
         println!();
     }

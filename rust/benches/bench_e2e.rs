@@ -139,6 +139,97 @@ fn bench_build_trajectory(
     }
 }
 
+/// Search-side baseline at one fixed operating point — emitted
+/// machine-readable to `BENCH_search.json` so the perf trajectory of
+/// the scoring kernels has an end-to-end anchor: QPS (single-thread
+/// sequential and all-core batch) + recall@10 at a fixed window, plus
+/// which kernel set the dispatcher picked and a flat-scan point for
+/// the linear-scan path.
+fn bench_search_baseline(
+    ds: &leanvec::data::synth::Dataset,
+    gp: GraphParams,
+    truth: &[Vec<u32>],
+    k: usize,
+) {
+    use leanvec::graph::beam::SearchCtx;
+    use leanvec::index::flat::FlatIndex;
+
+    const WINDOW: usize = 60;
+    println!(
+        "\n== search baseline (window {WINDOW}, kernel dispatch: {}) ==",
+        leanvec::simd::active_features()
+    );
+    let index = IndexBuilder::new()
+        .projection(ProjectionKind::OodEigSearch)
+        .target_dim(160)
+        .primary(Compression::Lvq8)
+        .secondary(Compression::F16)
+        .graph_params(gp)
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+
+    let reqs: Vec<Query> = ds
+        .test_queries
+        .iter()
+        .map(|q| Query::new(q).k(k).window(WINDOW))
+        .collect();
+
+    // single-thread sequential: one reused ctx, best of 3 passes
+    let mut ctx = SearchCtx::new(index.len());
+    let mut got: Vec<Vec<u32>> = Vec::new();
+    let mut best_wall = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        got = reqs.iter().map(|q| index.search(&mut ctx, q).ids).collect();
+        best_wall = best_wall.min(t0.elapsed().as_secs_f64());
+    }
+    let qps_seq = reqs.len() as f64 / best_wall.max(1e-9);
+    let recall = recall_at_k(&got, truth, k);
+
+    // all-core closed-loop batch
+    let t0 = std::time::Instant::now();
+    let batch: Vec<Vec<u32>> = index
+        .search_batch(&reqs, 0)
+        .into_iter()
+        .map(|r| r.ids)
+        .collect();
+    let qps_batch = reqs.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let recall_batch = recall_at_k(&batch, truth, k);
+
+    // flat full-scan point (the blocked linear-scan path)
+    let flat = FlatIndex::new(&ds.database, ds.similarity);
+    let n_flat = reqs.len().min(64);
+    let t0 = std::time::Instant::now();
+    for q in reqs.iter().take(n_flat) {
+        std::hint::black_box(flat.search_one(q));
+    }
+    let flat_qps = n_flat as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    println!(
+        "leanvec-ood-d160/lvq8: {qps_seq:.0} QPS (1 thread), {qps_batch:.0} QPS (batch), \
+         recall@{k} {recall:.3} | flat scan {flat_qps:.0} QPS"
+    );
+
+    let out = Json::obj(vec![
+        ("dataset", Json::str(&ds.name)),
+        ("n", Json::num(ds.database.len() as f64)),
+        ("dim", Json::num(ds.dim as f64)),
+        ("target_dim", Json::num(160.0)),
+        ("kernel_dispatch", Json::str(leanvec::simd::active_features())),
+        ("window", Json::num(WINDOW as f64)),
+        ("k", Json::num(k as f64)),
+        ("queries", Json::num(reqs.len() as f64)),
+        ("qps_1thread", Json::num(qps_seq)),
+        ("qps_batch_all_cores", Json::num(qps_batch)),
+        ("recall_at_k", Json::num(recall)),
+        ("recall_at_k_batch", Json::num(recall_batch)),
+        ("flat_scan_qps", Json::num(flat_qps)),
+    ]);
+    match std::fs::write("BENCH_search.json", out.to_pretty()) {
+        Ok(()) => println!("[saved BENCH_search.json]"),
+        Err(e) => eprintln!("could not write BENCH_search.json: {e}"),
+    }
+}
+
 /// Churn phase: streaming mutation throughput on a live index, search
 /// tail latency under 10% churn, and consolidation wall time — emitted
 /// machine-readable to `BENCH_mutate.json`.
@@ -318,6 +409,9 @@ fn main() {
     };
     let (_r, report) = Engine::run_workload(index, cfg, &queries, k, None);
     println!("\nserving engine: {}", report.metrics);
+
+    // fixed-window search QPS + recall anchor -> BENCH_search.json
+    bench_search_baseline(&ds, gp, &truth, k);
 
     // parallel build speedup trajectory -> BENCH_build.json
     bench_build_trajectory(&ds, gp, &truth, k);

@@ -6,6 +6,14 @@
 //! buffer is a fixed-capacity sorted array (insertion into a ~100-entry
 //! window is cheaper than heap churn at these sizes — the same call the
 //! SVS library makes), and the visited set is an epoch-stamped array.
+//!
+//! Scoring is **blocked**: each expansion gathers the expanded node's
+//! unvisited neighbors into one batch and hands the whole batch to the
+//! score callback (`ScoreStore::score_block` on the request path, which
+//! runs the dispatched SIMD kernels with software prefetch of upcoming
+//! code rows), then bulk-inserts the results in neighbor order — the
+//! visit order, dedup, and buffer semantics are identical to scoring
+//! one id at a time.
 
 /// One search-buffer entry.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +36,12 @@ pub struct SearchCtx {
     visited: Vec<u32>,
     epoch: u32,
     pub stats: SearchStats,
+    /// reusable scratch for the blocked traversal (neighbor gather,
+    /// unvisited batch, batch scores) — kept on the ctx so steady-state
+    /// searches allocate nothing
+    scratch_nbuf: Vec<u32>,
+    scratch_batch: Vec<u32>,
+    scratch_scores: Vec<f32>,
 }
 
 /// Per-search counters (hops, score evaluations) — these drive the
@@ -48,6 +62,9 @@ impl SearchCtx {
             visited: vec![0; n],
             epoch: 0,
             stats: SearchStats::default(),
+            scratch_nbuf: Vec::new(),
+            scratch_batch: Vec::new(),
+            scratch_scores: Vec::new(),
         }
     }
 
@@ -136,60 +153,149 @@ fn bounded_insert(buf: &mut Vec<Candidate>, c: Candidate, cap: usize) -> bool {
 }
 
 /// A pool of reusable [`SearchCtx`] for parallel sections (the parallel
-/// graph builder and the batch-search path). Sized to the worker count:
-/// as long as at most `workers` closures run concurrently, `acquire`
-/// always finds a free context without blocking on a held lock.
+/// graph builder and the batch-search path): a condvar-guarded free
+/// list. Sized to the worker count, so when at most `workers` closures
+/// run concurrently `acquire` always pops without waiting; an
+/// oversubscribed borrower *blocks* on the condvar until a context is
+/// returned instead of burning a core in a `try_lock` spin.
 pub struct CtxPool {
-    ctxs: Vec<std::sync::Mutex<SearchCtx>>,
+    free: std::sync::Mutex<Vec<SearchCtx>>,
+    returned: std::sync::Condvar,
+}
+
+/// A [`SearchCtx`] borrowed from a [`CtxPool`]; derefs to the context
+/// and returns it to the pool's free list (waking one waiter) on drop.
+pub struct PooledCtx<'a> {
+    pool: &'a CtxPool,
+    ctx: Option<SearchCtx>,
+}
+
+impl std::ops::Deref for PooledCtx<'_> {
+    type Target = SearchCtx;
+    fn deref(&self) -> &SearchCtx {
+        self.ctx.as_ref().expect("pooled ctx present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledCtx<'_> {
+    fn deref_mut(&mut self) -> &mut SearchCtx {
+        self.ctx.as_mut().expect("pooled ctx present until drop")
+    }
+}
+
+impl Drop for PooledCtx<'_> {
+    fn drop(&mut self) {
+        if let Some(ctx) = self.ctx.take() {
+            let mut free = self.pool.free.lock().unwrap();
+            free.push(ctx);
+            drop(free);
+            self.pool.returned.notify_one();
+        }
+    }
 }
 
 impl CtxPool {
     pub fn new(workers: usize, n: usize) -> CtxPool {
+        let ctxs: Vec<SearchCtx> = (0..workers.max(1)).map(|_| SearchCtx::new(n)).collect();
         CtxPool {
-            ctxs: (0..workers.max(1))
-                .map(|_| std::sync::Mutex::new(SearchCtx::new(n)))
-                .collect(),
+            free: std::sync::Mutex::new(ctxs),
+            returned: std::sync::Condvar::new(),
         }
     }
 
-    /// Borrow any free context (spins across the pool; never deadlocks
-    /// when concurrent borrowers <= pool size).
-    pub fn acquire(&self) -> std::sync::MutexGuard<'_, SearchCtx> {
+    /// Borrow a free context, blocking (not spinning) until one is
+    /// available. Never deadlocks: every borrow is returned on drop.
+    pub fn acquire(&self) -> PooledCtx<'_> {
+        let mut free = self.free.lock().unwrap();
         loop {
-            for c in &self.ctxs {
-                if let Ok(guard) = c.try_lock() {
-                    return guard;
-                }
+            if let Some(ctx) = free.pop() {
+                return PooledCtx {
+                    pool: self,
+                    ctx: Some(ctx),
+                };
             }
-            std::thread::yield_now();
+            free = self.returned.wait(free).unwrap();
         }
     }
 }
 
-/// Greedy traversal: start from `entries`, repeatedly expand the best
-/// unexpanded candidate, scoring its out-neighbors with `score_fn` and
-/// fetching them with `neighbors_fn`.
+/// Greedy traversal with a *per-id* score callback: start from
+/// `entries`, repeatedly expand the best unexpanded candidate, scoring
+/// its out-neighbors with `score_fn` and fetching them with
+/// `neighbors_fn`.
 ///
 /// `window` is the search-buffer width L; the returned slice holds up to
 /// `window` candidates, best first. Equivalent to
-/// [`greedy_search_ext`] with `capacity == window` and no filter.
+/// [`greedy_search_ext`] with `capacity == window`, no filter, and the
+/// per-id scorer lifted over each batch. Kept for call sites whose
+/// scorer is a plain closure (tests, toy graphs); store-backed callers
+/// should pass `ScoreStore::score_block` to [`greedy_search_ext`]
+/// instead so batches hit the SIMD kernels.
 pub fn greedy_search<'a, S, N>(
     ctx: &'a mut SearchCtx,
     entries: &[u32],
     window: usize,
-    score_fn: S,
+    mut score_fn: S,
     neighbors_fn: N,
 ) -> &'a [Candidate]
 where
     S: FnMut(u32) -> f32,
     N: FnMut(u32, &mut Vec<u32>),
 {
-    greedy_search_ext(ctx, entries, window, window, None, score_fn, neighbors_fn)
+    greedy_search_ext(
+        ctx,
+        entries,
+        window,
+        window,
+        None,
+        move |ids: &[u32], out: &mut Vec<f32>| {
+            out.clear();
+            out.extend(ids.iter().map(|&id| score_fn(id)));
+        },
+        neighbors_fn,
+    )
 }
 
-/// [`greedy_search`] with the split-buffer and filtered-search
-/// extensions the [`Query`] API exposes:
+/// Insert one scored batch into the buffers, in batch order — the one
+/// copy of the filter/insert bookkeeping shared by the entry seeding
+/// and the expansion loop.
+#[inline]
+fn insert_batch(
+    ctx: &mut SearchCtx,
+    ids: &[u32],
+    scores: &[f32],
+    filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
+    nav_cap: usize,
+    capacity: usize,
+) {
+    debug_assert_eq!(ids.len(), scores.len());
+    ctx.stats.scored += ids.len();
+    for (&id, &score) in ids.iter().zip(scores.iter()) {
+        let c = Candidate {
+            id,
+            score,
+            expanded: false,
+        };
+        if let Some(f) = filter {
+            if f(id) {
+                ctx.insert_passing(c, capacity);
+            } else {
+                ctx.stats.filtered += 1;
+            }
+        }
+        ctx.insert(c, nav_cap);
+    }
+}
+
+/// [`greedy_search`] with blocked scoring plus the split-buffer and
+/// filtered-search extensions the [`Query`] API exposes:
 ///
+/// * `score_block_fn(ids, out)` — score a whole batch of ids at once
+///   (the unvisited neighbors of one expanded node), writing one score
+///   per id into `out`. The request path passes
+///   [`ScoreStore::score_block`], which runs the dispatched SIMD
+///   kernels and prefetches upcoming code rows. Visit order, dedup,
+///   and buffer semantics are identical to per-id scoring.
 /// * `capacity >= window` — how many candidates to *retain* (the
 ///   re-rank buffer). Only the best `window` drive expansion, so
 ///   traversal cost is unchanged; the extra slots merely keep more
@@ -201,17 +307,18 @@ where
 ///   `ctx.stats.filtered` counts the excluded nodes.
 ///
 /// [`Query`]: crate::index::query::Query
+/// [`ScoreStore::score_block`]: crate::quant::ScoreStore::score_block
 pub fn greedy_search_ext<'a, S, N>(
     ctx: &'a mut SearchCtx,
     entries: &[u32],
     window: usize,
     capacity: usize,
     filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
-    mut score_fn: S,
+    mut score_block_fn: S,
     mut neighbors_fn: N,
 ) -> &'a [Candidate]
 where
-    S: FnMut(u32) -> f32,
+    S: FnMut(&[u32], &mut Vec<f32>),
     N: FnMut(u32, &mut Vec<u32>),
 {
     ctx.begin();
@@ -221,41 +328,46 @@ where
     // filter, navigation stays window-bounded — identical traversal to
     // the unfiltered case — and passing results accumulate separately.
     let nav_cap = if filter.is_some() { window } else { capacity };
-    let mut nbuf: Vec<u32> = Vec::with_capacity(64);
-    macro_rules! visit {
-        ($id:expr) => {{
-            let id = $id;
-            if ctx.mark_visited(id) {
-                let s = score_fn(id);
-                ctx.stats.scored += 1;
-                let c = Candidate {
-                    id,
-                    score: s,
-                    expanded: false,
-                };
-                if let Some(f) = filter {
-                    if f(id) {
-                        ctx.insert_passing(c, capacity);
-                    } else {
-                        ctx.stats.filtered += 1;
-                    }
-                }
-                ctx.insert(c, nav_cap);
-            }
-        }};
-    }
+    // scratch buffers live on the ctx (taken for the duration of the
+    // traversal, put back before returning) so steady-state searches
+    // allocate nothing
+    let mut nbuf = std::mem::take(&mut ctx.scratch_nbuf);
+    let mut batch = std::mem::take(&mut ctx.scratch_batch);
+    let mut scores = std::mem::take(&mut ctx.scratch_scores);
+
+    // seed: the entry points are one batch (dedup preserves order).
+    // `scores` is pre-cleared before every scorer call so a callback
+    // that only appends cannot misalign ids and scores.
+    batch.clear();
     for &e in entries {
-        visit!(e);
+        if ctx.mark_visited(e) {
+            batch.push(e);
+        }
     }
+    scores.clear();
+    score_block_fn(&batch, &mut scores);
+    insert_batch(ctx, &batch, &scores, filter, nav_cap, capacity);
+
     while let Some(pos) = ctx.next_unexpanded(window) {
         ctx.buffer[pos].expanded = true;
         let node = ctx.buffer[pos].id;
         ctx.stats.hops += 1;
         neighbors_fn(node, &mut nbuf);
+        // gather the unvisited neighbors (marking them visited, in
+        // neighbor order), block-score them, bulk-insert
+        batch.clear();
         for &nb in nbuf.iter() {
-            visit!(nb);
+            if ctx.mark_visited(nb) {
+                batch.push(nb);
+            }
         }
+        scores.clear();
+        score_block_fn(&batch, &mut scores);
+        insert_batch(ctx, &batch, &scores, filter, nav_cap, capacity);
     }
+    ctx.scratch_nbuf = nbuf;
+    ctx.scratch_batch = batch;
+    ctx.scratch_scores = scores;
     if filter.is_some() {
         ctx.passing_results()
     } else {
@@ -434,7 +546,10 @@ mod tests {
             10,
             10,
             Some(&even),
-            |id| scores[id as usize],
+            |ids: &[u32], out: &mut Vec<f32>| {
+                out.clear();
+                out.extend(ids.iter().map(|&id| scores[id as usize]));
+            },
             |id, out| {
                 out.clear();
                 out.extend_from_slice(&adj[id as usize]);
@@ -461,7 +576,10 @@ mod tests {
                 3,
                 capacity,
                 None,
-                |id| scores[id as usize],
+                |ids: &[u32], out: &mut Vec<f32>| {
+                    out.clear();
+                    out.extend(ids.iter().map(|&id| scores[id as usize]));
+                },
                 |id, out| {
                     out.clear();
                     out.extend_from_slice(&adj[id as usize]);
@@ -476,6 +594,64 @@ mod tests {
         // identical traversal: the split buffer widens retention only
         assert_eq!(hops_wide, hops_narrow);
         assert_eq!(scored_wide, scored_narrow);
+    }
+
+    #[test]
+    fn blocked_scoring_identical_to_per_id() {
+        // the block-scored path must reproduce per-id traversal exactly:
+        // same ids, same scores, same hop/score counters
+        let (adj, scores) = path_graph();
+        let neighbors = |id: u32, out: &mut Vec<u32>| {
+            out.clear();
+            out.extend_from_slice(&adj[id as usize]);
+        };
+        let mut ctx_a = SearchCtx::new(10);
+        let res_a = greedy_search(&mut ctx_a, &[0], 4, |id| scores[id as usize], neighbors);
+        let a: Vec<Candidate> = res_a.to_vec();
+        let mut ctx_b = SearchCtx::new(10);
+        let b: Vec<Candidate> = greedy_search_ext(
+            &mut ctx_b,
+            &[0],
+            4,
+            4,
+            None,
+            |ids: &[u32], out: &mut Vec<f32>| {
+                out.clear();
+                out.extend(ids.iter().map(|&id| scores[id as usize]));
+            },
+            neighbors,
+        )
+        .to_vec();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
+        assert_eq!(ctx_a.stats.hops, ctx_b.stats.hops);
+        assert_eq!(ctx_a.stats.scored, ctx_b.stats.scored);
+    }
+
+    #[test]
+    fn ctx_pool_blocks_oversubscribed_acquire_until_return() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let pool = Arc::new(CtxPool::new(1, 4));
+        let held = pool.acquire();
+        let released = Arc::new(AtomicBool::new(false));
+        let waiter = {
+            let (pool, released) = (Arc::clone(&pool), Arc::clone(&released));
+            std::thread::spawn(move || {
+                let _ctx = pool.acquire(); // must block until the holder drops
+                assert!(
+                    released.load(Ordering::SeqCst),
+                    "acquire returned while the only context was held"
+                );
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        released.store(true, Ordering::SeqCst);
+        drop(held);
+        waiter.join().unwrap();
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! layers and beam search at layer 0.
 
 use crate::config::Similarity;
-use crate::graph::beam::{greedy_search, greedy_search_ext, SearchCtx};
+use crate::graph::beam::{greedy_search_ext, SearchCtx};
 use crate::quant::ScoreStore;
 use crate::util::rng::Rng;
 
@@ -73,11 +73,13 @@ impl HnswGraph {
             // insert at layers min(lvl, entry_level)..0
             for l in (0..=lvl.min(entry_level)).rev() {
                 let max_deg = if l == 0 { params.m * 2 } else { params.m };
-                let res = greedy_search(
+                let res = greedy_search_ext(
                     &mut ctx,
                     &[ep],
                     params.ef_construction,
-                    |id| store.score(&pq, id),
+                    params.ef_construction,
+                    None,
+                    |ids: &[u32], out: &mut Vec<f32>| store.score_block(&pq, ids, out),
                     |id, out| {
                         out.clear();
                         out.extend_from_slice(&layers[l][id as usize]);
@@ -224,7 +226,7 @@ impl HnswGraph {
             ef,
             ef,
             filter,
-            |id| store.score(pq, id),
+            |ids: &[u32], out: &mut Vec<f32>| store.score_block(pq, ids, out),
             |id, out| {
                 out.clear();
                 out.extend_from_slice(&self.layers[0][id as usize]);

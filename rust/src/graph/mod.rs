@@ -6,5 +6,5 @@ pub mod beam;
 pub mod hnsw;
 pub mod vamana;
 
-pub use beam::{CtxPool, SearchCtx, SearchStats};
+pub use beam::{CtxPool, PooledCtx, SearchCtx, SearchStats};
 pub use vamana::{medoid_of, robust_prune, Adjacency, VamanaBuilder, VamanaGraph};

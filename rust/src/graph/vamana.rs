@@ -9,7 +9,7 @@
 
 use crate::config::{GraphParams, Similarity};
 use crate::data::io::bin;
-use crate::graph::beam::{greedy_search, greedy_search_ext, CtxPool, SearchCtx};
+use crate::graph::beam::{greedy_search_ext, CtxPool, SearchCtx};
 use crate::linalg::matrix::l2_sq;
 use crate::quant::ScoreStore;
 use crate::util::threadpool::{parallel_map, resolve_threads};
@@ -220,7 +220,7 @@ impl VamanaGraph {
             window,
             capacity,
             filter,
-            |id| store.score(pq, id),
+            |ids: &[u32], out: &mut Vec<f32>| store.score_block(pq, ids, out),
             |id, out| {
                 out.clear();
                 out.extend_from_slice(self.adj.neighbors(id));
@@ -447,11 +447,13 @@ impl VamanaBuilder {
                         let node_vec = store.decode(node);
                         let pq = store.prepare(&node_vec, self.sim);
                         let mut ctx = pool.acquire();
-                        let results = greedy_search(
+                        let results = greedy_search_ext(
                             &mut *ctx,
                             &[medoid],
                             self.params.build_window,
-                            |id| store.score(&pq, id),
+                            self.params.build_window,
+                            None,
+                            |ids: &[u32], out: &mut Vec<f32>| store.score_block(&pq, ids, out),
                             |id, out| {
                                 out.clear();
                                 out.extend_from_slice(adj_snapshot.neighbors(id));
@@ -511,11 +513,13 @@ impl VamanaBuilder {
         let pq = store.prepare(&node_vec, self.sim);
         // search the current graph with the node itself as query
         let window = self.params.build_window;
-        let results = greedy_search(
+        let results = greedy_search_ext(
             ctx,
             &[medoid],
             window,
-            |id| store.score(&pq, id),
+            window,
+            None,
+            |ids: &[u32], out: &mut Vec<f32>| store.score_block(&pq, ids, out),
             |id, out| {
                 out.clear();
                 out.extend_from_slice(adj.neighbors(id));

@@ -45,10 +45,17 @@ impl FlatIndex {
 }
 
 impl VectorIndex for FlatIndex {
-    /// Exact top-k by full scan; `window`/`rerank_window` are
+    /// Exact top-k by *blocked* full scan; `window`/`rerank_window` are
     /// irrelevant and ignored. Filtered-out ids are skipped before
-    /// scoring, so the result is the exact filtered oracle.
+    /// scoring, so the result is the exact filtered oracle. The scan
+    /// gathers passing ids in fixed-size blocks and scores each block
+    /// through [`crate::quant::ScoreStore::score_block`] (dispatched
+    /// SIMD kernels + row prefetch); the selection update runs in id
+    /// order, so results are identical to the per-id scan.
     fn search(&self, _ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        // ids scored per `score_block` call (amortizes the call and
+        // keeps the prefetch pipeline fed without outgrowing L1)
+        const SCAN_BLOCK: usize = 128;
         let pq = self.store.prepare(query.vector(), self.sim);
         let n = self.store.len();
         let k = query.top_k().min(n);
@@ -57,27 +64,39 @@ impl VectorIndex for FlatIndex {
         let mut scored = 0usize;
         // bounded selection: keep a sorted top-k vector (k is small)
         let mut top: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
-        for id in 0..n as u32 {
-            if let Some(f) = filter {
-                if !f(id) {
-                    filtered += 1;
-                    continue;
+        let mut block: Vec<u32> = Vec::with_capacity(SCAN_BLOCK);
+        let mut scores: Vec<f32> = Vec::with_capacity(SCAN_BLOCK);
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + SCAN_BLOCK).min(n);
+            block.clear();
+            for id in start as u32..end as u32 {
+                if let Some(f) = filter {
+                    if !f(id) {
+                        filtered += 1;
+                        continue;
+                    }
+                }
+                block.push(id);
+            }
+            scores.clear();
+            self.store.score_block(&pq, &block, &mut scores);
+            scored += block.len();
+            for (&id, &s) in block.iter().zip(scores.iter()) {
+                if top.len() < k {
+                    top.push((s, id));
+                    // total_cmp: a NaN score must never panic mid-serve
+                    top.sort_by(|a, b| b.0.total_cmp(&a.0));
+                } else if k > 0 && s > top[k - 1].0 {
+                    top[k - 1] = (s, id);
+                    let mut i = k - 1;
+                    while i > 0 && top[i].0 > top[i - 1].0 {
+                        top.swap(i, i - 1);
+                        i -= 1;
+                    }
                 }
             }
-            let s = self.store.score(&pq, id);
-            scored += 1;
-            if top.len() < k {
-                top.push((s, id));
-                // total_cmp: a NaN score must never panic mid-serve
-                top.sort_by(|a, b| b.0.total_cmp(&a.0));
-            } else if k > 0 && s > top[k - 1].0 {
-                top[k - 1] = (s, id);
-                let mut i = k - 1;
-                while i > 0 && top[i].0 > top[i - 1].0 {
-                    top.swap(i, i - 1);
-                    i -= 1;
-                }
-            }
+            start = end;
         }
         SearchResult {
             ids: top.iter().map(|&(_, id)| id).collect(),

@@ -303,8 +303,14 @@ impl VectorIndex for IvfPqIndex {
                     }
                 }
             }
-            // scan the list with LUT gathers
-            for &id in &self.lists[cell] {
+            // scan the list with LUT gathers, prefetching the next
+            // entry's code row (inverted lists gather codes at random
+            // row offsets — the prefetch hides that latency)
+            let list = &self.lists[cell];
+            for (j, &id) in list.iter().enumerate() {
+                if let Some(&next) = list.get(j + 1) {
+                    crate::simd::prefetch(&self.codes[next as usize * m..]);
+                }
                 if let Some(f) = filter {
                     if !f(id) {
                         filtered += 1;

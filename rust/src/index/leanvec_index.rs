@@ -234,9 +234,15 @@ pub(crate) fn rerank_top_k(
     k: usize,
 ) -> Vec<(f32, u32)> {
     let pq: PreparedQuery = store.prepare(q, sim);
-    let mut scored: Vec<(f32, u32)> = ids
+    // one blocked call: the store's override runs the dispatched
+    // kernels and prefetches upcoming rows (both levels for LVQ4x8)
+    let mut scores: Vec<f32> = Vec::new();
+    store.score_rerank_block(&pq, ids, &mut scores);
+    debug_assert_eq!(scores.len(), ids.len(), "score_rerank_block contract");
+    let mut scored: Vec<(f32, u32)> = scores
         .iter()
-        .map(|&id| (store.score_rerank(&pq, id), id))
+        .zip(ids.iter())
+        .map(|(&s, &id)| (s, id))
         .collect();
     // total_cmp: a NaN score must never panic the serving thread
     scored.sort_by(|a, b| b.0.total_cmp(&a.0));

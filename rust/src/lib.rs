@@ -35,6 +35,13 @@
 //! state through versioned live snapshots. The serving engine feeds it
 //! through an ingest lane ([`coordinator::Engine::start_live`]).
 //!
+//! Scoring bottoms out in the [`simd`] kernel layer: explicit
+//! AVX2/FMA/F16C kernels selected once at startup by runtime CPU
+//! detection, with a portable scalar fallback that is bit-identical to
+//! the historical loops (`LEANVEC_FORCE_SCALAR=1` pins it). Graph
+//! traversal and the flat/IVF scans feed those kernels in blocks with
+//! software prefetch of upcoming code rows.
+//!
 //! # Quickstart
 //!
 //! Build an index over toy vectors, snapshot it, and query the loaded
@@ -91,6 +98,7 @@ pub mod linalg;
 pub mod mutate;
 pub mod quant;
 pub mod runtime;
+pub mod simd;
 pub mod util;
 
 pub use config::Similarity;

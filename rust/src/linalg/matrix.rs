@@ -220,30 +220,13 @@ impl Matrix {
     }
 }
 
-/// Dot product with 4-way unrolled accumulation (autovectorizes well).
+/// Dot product through the dispatched f32 kernel
+/// ([`crate::simd::dot_f32`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 8;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-        s4 += a[i + 4] * b[i + 4];
-        s5 += a[i + 5] * b[i + 5];
-        s6 += a[i + 6] * b[i + 6];
-        s7 += a[i + 7] * b[i + 7];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..n {
-        tail += a[i] * b[i];
-    }
-    (s0 + s4) + (s1 + s5) + (s2 + s6) + (s3 + s7) + tail
+    // dispatched kernel (AVX2+FMA when the host has it; the scalar
+    // fallback is the historical 8-way-unrolled loop, bit-identical)
+    crate::simd::dot_f32(a, b)
 }
 
 /// Euclidean distance squared.

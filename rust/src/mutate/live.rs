@@ -41,7 +41,7 @@
 //! [`QueryStats::deleted_skipped`]: crate::index::query::QueryStats
 
 use crate::config::{Compression, GraphParams, Similarity};
-use crate::graph::beam::{greedy_search, greedy_search_ext, SearchCtx};
+use crate::graph::beam::{greedy_search_ext, SearchCtx};
 use crate::graph::vamana::{medoid_of, robust_prune, Adjacency};
 use crate::index::leanvec_index::{BuildBreakdown, LeanVecIndex, SearchParams};
 use crate::index::query::{Query, QueryStats, SearchResult, VectorIndex};
@@ -324,11 +324,13 @@ impl LiveIndex {
         let tomb = self.tombs.reader();
         let mut ctx = self.link_ctx.lock().unwrap();
         ctx.ensure(store.len());
-        let cands = greedy_search(
+        let cands = greedy_search_ext(
             &mut *ctx,
             &[medoid],
             self.params.build_window,
-            |x| store.score(&pq, x),
+            self.params.build_window,
+            None,
+            |ids: &[u32], out: &mut Vec<f32>| store.score_block(&pq, ids, out),
             |x, out| {
                 reader.neighbors_into(x, out);
                 out.retain(|&nb| nb != id);
@@ -605,7 +607,7 @@ impl LiveIndex {
             params.window,
             capacity,
             Some(&pred),
-            |id| store.score(&pq, id),
+            |ids: &[u32], out: &mut Vec<f32>| store.score_block(&pq, ids, out),
             |id, out| {
                 reader.neighbors_into(id, out);
                 out.retain(|&x| (x as usize) < n);

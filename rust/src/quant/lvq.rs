@@ -200,14 +200,15 @@ impl LvqStore {
         &self.codes[i..i + stride]
     }
 
-    /// Fused decode+dot against the raw codes: `<q, code>`.
+    /// Fused decode+dot against the raw codes: `<q, code>` through the
+    /// dispatched integer kernels.
     #[inline]
     fn code_dot(&self, q: &[f32], id: u32) -> f32 {
         let codes = self.code_slice(id);
         if self.bits == 8 {
-            code_dot_u8(codes, q)
+            crate::simd::dot_u8(codes, q)
         } else {
-            code_dot_u4(codes, q)
+            crate::simd::dot_u4(codes, q)
         }
     }
 
@@ -269,43 +270,6 @@ impl LvqStore {
     }
 }
 
-/// u8 code · f32 query with 4-way unrolling (autovectorizes to SIMD
-/// widen+fma on x86-64).
-#[inline]
-pub(crate) fn code_dot_u8(codes: &[u8], q: &[f32]) -> f32 {
-    debug_assert_eq!(codes.len(), q.len());
-    let n = q.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += codes[i] as f32 * q[i];
-        s1 += codes[i + 1] as f32 * q[i + 1];
-        s2 += codes[i + 2] as f32 * q[i + 2];
-        s3 += codes[i + 3] as f32 * q[i + 3];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 4..n {
-        tail += codes[i] as f32 * q[i];
-    }
-    (s0 + s1) + (s2 + s3) + tail
-}
-
-/// packed-u4 code · f32 query.
-#[inline]
-fn code_dot_u4(codes: &[u8], q: &[f32]) -> f32 {
-    let mut acc = 0.0f32;
-    let n = q.len();
-    for (b, byte) in codes.iter().enumerate() {
-        let i = b * 2;
-        acc += (byte & 0x0F) as f32 * q[i];
-        if i + 1 < n {
-            acc += (byte >> 4) as f32 * q[i + 1];
-        }
-    }
-    acc
-}
-
 impl ScoreStore for LvqStore {
     fn len(&self) -> usize {
         self.delta.len()
@@ -332,6 +296,23 @@ impl ScoreStore for LvqStore {
         let i = id as usize;
         let ip = self.delta[i] * self.code_dot(&pq.q, id) + self.lo[i] * pq.q_sum + pq.q_mu;
         finish_score(ip, self.norms_sq[i], pq.sim)
+    }
+
+    /// Blocked scoring with software prefetch of the next row's code
+    /// bytes while the current row's kernel runs.
+    fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        let stride = self.stride();
+        super::blocked_scores(
+            ids,
+            out,
+            |next| crate::simd::prefetch(&self.codes[next as usize * stride..]),
+            |id| self.score(pq, id),
+        );
+    }
+
+    /// Single-level store: re-rank scoring is traversal scoring.
+    fn score_rerank_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        self.score_block(pq, ids, out);
     }
 
     fn decode(&self, id: u32) -> Vec<f32> {
@@ -484,15 +465,16 @@ impl Lvq4x8Store {
         })
     }
 
-    /// Score with both levels (re-ranking accuracy).
+    /// Score with both levels (re-ranking accuracy): one fused
+    /// residual-combine kernel reads the 4-bit primary and 8-bit
+    /// residual codes against the same query.
     pub fn score_full(&self, pq: &PreparedQuery, id: u32) -> f32 {
         let i = id as usize;
         let dim = self.first.dim();
         let res = &self.res_codes[i * dim..(i + 1) * dim];
-        let ip_first = self.first.delta[i] * self.first.code_dot(&pq.q, id)
-            + self.first.lo[i] * pq.q_sum
-            + pq.q_mu;
-        let ip_res = self.res_delta[i] * code_dot_u8(res, &pq.q) + self.res_lo[i] * pq.q_sum;
+        let (dot4, dot8) = crate::simd::dot_u4_u8(self.first.code_slice(id), res, &pq.q);
+        let ip_first = self.first.delta[i] * dot4 + self.first.lo[i] * pq.q_sum + pq.q_mu;
+        let ip_res = self.res_delta[i] * dot8 + self.res_lo[i] * pq.q_sum;
         finish_score(ip_first + ip_res, self.full_norms_sq[i], pq.sim)
     }
 }
@@ -528,9 +510,33 @@ impl ScoreStore for Lvq4x8Store {
         self.first.score(pq, id)
     }
 
+    /// Traversal reads only the first level — delegate to its blocked
+    /// (prefetching) implementation.
+    fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        self.first.score_block(pq, ids, out);
+    }
+
     /// Re-ranking reads both levels.
     fn score_rerank(&self, pq: &PreparedQuery, id: u32) -> f32 {
         self.score_full(pq, id)
+    }
+
+    /// Blocked two-level re-ranking: prefetch the next row's primary
+    /// *and* residual code bytes, then run the fused residual-combine
+    /// kernel on the current row.
+    fn score_rerank_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        let stride = self.first.stride();
+        let dim = self.first.dim();
+        super::blocked_scores(
+            ids,
+            out,
+            |next| {
+                let n = next as usize;
+                crate::simd::prefetch(&self.first.codes[n * stride..]);
+                crate::simd::prefetch(&self.res_codes[n * dim..]);
+            },
+            |id| self.score_full(pq, id),
+        );
     }
 
     fn decode(&self, id: u32) -> Vec<f32> {

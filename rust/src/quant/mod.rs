@@ -5,7 +5,11 @@
 //! Every store scores with a *fused* decode+dot: the code bytes are the
 //! only per-vector memory traffic, which is the entire point of LVQ —
 //! graph search is memory-bandwidth-bound, so score time tracks
-//! `bytes_per_vector()`.
+//! `bytes_per_vector()`. The dots themselves run through the
+//! [`crate::simd`] kernel layer (AVX2/FMA/F16C with runtime dispatch,
+//! scalar fallback), and the request path scores in *blocks*
+//! ([`ScoreStore::score_block`]) so upcoming code rows can be
+//! software-prefetched while the current row computes.
 
 pub mod lvq;
 pub mod stores;
@@ -64,11 +68,25 @@ pub trait ScoreStore: Send + Sync {
         self.bytes_per_vector()
     }
 
-    /// Batch scoring helper (sequential fallback; stores may override
-    /// with a blocked implementation).
+    /// Score a batch of ids, writing one score per id into `out` (in
+    /// `ids` order, `out` cleared first). **This is the request-path
+    /// entry point**: graph traversal and the flat scan hand whole
+    /// neighbor/scan batches here, and every store overrides it to run
+    /// the dispatched SIMD kernels with software prefetch of the next
+    /// row's code bytes. Each score must equal `score(pq, id)` exactly
+    /// (same kernel, same bits). The default is the sequential loop.
     fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
         out.clear();
         out.extend(ids.iter().map(|&id| self.score(pq, id)));
+    }
+
+    /// Blocked [`ScoreStore::score_rerank`]: the re-rank loop's batch
+    /// entry point, same contract as [`ScoreStore::score_block`] but
+    /// for the re-ranking score (two-level stores read their residual
+    /// level here and prefetch both levels' code rows).
+    fn score_rerank_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(ids.iter().map(|&id| self.score_rerank(pq, id)));
     }
 
     /// Serialize the store's complete state — codes *and* every derived
@@ -95,6 +113,27 @@ pub trait ScoreStore: Send + Sync {
     /// surviving rows' bytes are moved, never re-encoded, so scores are
     /// bit-identical across a compaction.
     fn compact(&mut self, keep: &[u32]);
+}
+
+/// THE blocked-scoring loop shape shared by every store's
+/// `score_block`/`score_rerank_block` override: clear + reserve, issue
+/// `prefetch_row(next_id)` for the upcoming row while `score(id)`
+/// computes the current one, push in `ids` order. One copy so the
+/// prefetch policy (distance, which bytes) can never drift between
+/// store kinds.
+pub(crate) fn blocked_scores<P, S>(ids: &[u32], out: &mut Vec<f32>, prefetch_row: P, score: S)
+where
+    P: Fn(u32),
+    S: Fn(u32) -> f32,
+{
+    out.clear();
+    out.reserve(ids.len());
+    for (i, &id) in ids.iter().enumerate() {
+        if let Some(&next) = ids.get(i + 1) {
+            prefetch_row(next);
+        }
+        out.push(score(id));
+    }
 }
 
 /// Shared compaction helper: retain `keep[i] * stride .. +stride` slices

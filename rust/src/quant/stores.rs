@@ -92,6 +92,21 @@ impl ScoreStore for F32Store {
         finish_score(ip, self.norms_sq[id as usize], pq.sim)
     }
 
+    /// Blocked scoring with software prefetch of the next row.
+    fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        super::blocked_scores(
+            ids,
+            out,
+            |next| crate::simd::prefetch(&self.data[next as usize * self.dim..]),
+            |id| self.score(pq, id),
+        );
+    }
+
+    /// Single-level store: re-rank scoring is traversal scoring.
+    fn score_rerank_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        self.score_block(pq, ids, out);
+    }
+
     fn decode(&self, id: u32) -> Vec<f32> {
         self.vector(id).to_vec()
     }
@@ -206,24 +221,26 @@ impl ScoreStore for F16Store {
     }
 
     fn score(&self, pq: &PreparedQuery, id: u32) -> f32 {
-        // fused decode+dot via the 64K decode table — no temporaries
-        let codes = self.codes(id);
-        let table = f16::decode_table();
-        let n = codes.len();
-        let chunks = n / 4;
-        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        for c in 0..chunks {
-            let i = c * 4;
-            s0 += table[codes[i] as usize] * pq.q[i];
-            s1 += table[codes[i + 1] as usize] * pq.q[i + 1];
-            s2 += table[codes[i + 2] as usize] * pq.q[i + 2];
-            s3 += table[codes[i + 3] as usize] * pq.q[i + 3];
-        }
-        let mut ip = (s0 + s1) + (s2 + s3);
-        for i in chunks * 4..n {
-            ip += table[codes[i] as usize] * pq.q[i];
-        }
+        // fused decode+dot, no temporaries: `_mm256_cvtph_ps` widening
+        // on F16C hosts, the 64K decode table on the scalar path
+        let ip = crate::simd::dot_f16(self.codes(id), &pq.q);
         finish_score(ip, self.norms_sq[id as usize], pq.sim)
+    }
+
+    /// Blocked scoring with software prefetch of the next row's f16
+    /// codes.
+    fn score_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        super::blocked_scores(
+            ids,
+            out,
+            |next| crate::simd::prefetch(&self.data[next as usize * self.dim..]),
+            |id| self.score(pq, id),
+        );
+    }
+
+    /// Single-level store: re-rank scoring is traversal scoring.
+    fn score_rerank_block(&self, pq: &PreparedQuery, ids: &[u32], out: &mut Vec<f32>) {
+        self.score_block(pq, ids, out);
     }
 
     fn decode(&self, id: u32) -> Vec<f32> {

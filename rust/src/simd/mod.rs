@@ -1,0 +1,180 @@
+//! The kernel layer: fused decode+dot scoring kernels with one-time
+//! runtime dispatch.
+//!
+//! Every score in the crate bottoms out in one of five kernels — f32
+//! dot, fused f16 decode+dot, LVQ8 u8·f32, LVQ4 packed-nibble·f32, and
+//! the LVQ4x8 residual combine. This module owns them:
+//!
+//! * [`scalar`] holds the portable reference implementations (the
+//!   pre-SIMD loops, moved verbatim — bit-identical history).
+//! * `x86` (x86-64 only) holds explicit `std::arch` implementations:
+//!   AVX2 + FMA for the integer/float dots, plus F16C
+//!   (`_mm256_cvtph_ps`) for the f16 path.
+//! * The dispatcher picks a kernel set **once per process** via
+//!   `is_x86_feature_detected!`, caches it in a `OnceLock`, and every
+//!   call goes through a plain `fn` pointer — no per-call detection.
+//!
+//! Setting the environment variable `LEANVEC_FORCE_SCALAR=1` before
+//! the first score pins the scalar set regardless of the host CPU:
+//! determinism-sensitive tests and cross-machine comparisons get one
+//! canonical answer ([`active_features`] reports what was picked).
+//! On non-x86-64 targets the scalar set is the only set.
+//!
+//! How to add a kernel: put the portable loop in [`scalar`], the
+//! `#[target_feature]` twin + safe wrapper in `x86`, add a `fn`-pointer
+//! field to the internal table here, and extend the parity property
+//! test in `rust/tests/score_decode.rs` (see
+//! `docs/ARCHITECTURE.md` § "The kernel layer").
+
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+/// The dispatched kernel set: one function pointer per kernel, selected
+/// once at startup.
+struct Kernels {
+    dot_f32: fn(&[f32], &[f32]) -> f32,
+    dot_f16: fn(&[u16], &[f32]) -> f32,
+    dot_u8: fn(&[u8], &[f32]) -> f32,
+    dot_u4: fn(&[u8], &[f32]) -> f32,
+    dot_u4_u8: fn(&[u8], &[u8], &[f32]) -> (f32, f32),
+    features: &'static str,
+}
+
+const SCALAR_KERNELS: Kernels = Kernels {
+    dot_f32: scalar::dot_f32,
+    dot_f16: scalar::dot_f16,
+    dot_u8: scalar::dot_u8,
+    dot_u4: scalar::dot_u4,
+    dot_u4_u8: scalar::dot_u4_u8,
+    features: "scalar",
+};
+
+/// Was `LEANVEC_FORCE_SCALAR` set (to anything but `0`/empty) when the
+/// dispatcher first ran? Pinned for the process lifetime.
+pub fn force_scalar_requested() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| match std::env::var("LEANVEC_FORCE_SCALAR") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    })
+}
+
+fn select_kernels() -> Kernels {
+    if force_scalar_requested() {
+        return Kernels {
+            features: "scalar (LEANVEC_FORCE_SCALAR)",
+            ..SCALAR_KERNELS
+        };
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            let f16c = is_x86_feature_detected!("f16c");
+            return Kernels {
+                dot_f32: x86::dot_f32,
+                // without F16C the f16 path alone stays scalar; the
+                // other four kernels still dispatch to AVX2
+                dot_f16: if f16c { x86::dot_f16 } else { scalar::dot_f16 },
+                dot_u8: x86::dot_u8,
+                dot_u4: x86::dot_u4,
+                dot_u4_u8: x86::dot_u4_u8,
+                features: if f16c { "avx2+fma+f16c" } else { "avx2+fma" },
+            };
+        }
+    }
+    SCALAR_KERNELS
+}
+
+#[inline]
+fn kernels() -> &'static Kernels {
+    static KERNELS: OnceLock<Kernels> = OnceLock::new();
+    KERNELS.get_or_init(select_kernels)
+}
+
+/// Which kernel set the dispatcher picked for this process:
+/// `"avx2+fma+f16c"`, `"avx2+fma"`, `"scalar"`, or
+/// `"scalar (LEANVEC_FORCE_SCALAR)"`. Benches and the CI smoke step
+/// print this so a silently-scalar host is visible in the log.
+pub fn active_features() -> &'static str {
+    kernels().features
+}
+
+/// f32 · f32 dot product.
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    (kernels().dot_f32)(a, b)
+}
+
+/// Fused f16 decode + dot: `<decode(codes), q>` without materializing
+/// the decoded vector.
+#[inline]
+pub fn dot_f16(codes: &[u16], q: &[f32]) -> f32 {
+    (kernels().dot_f16)(codes, q)
+}
+
+/// u8 code · f32 query (the LVQ8 integer dot).
+#[inline]
+pub fn dot_u8(codes: &[u8], q: &[f32]) -> f32 {
+    (kernels().dot_u8)(codes, q)
+}
+
+/// Packed-u4 code · f32 query (two components per byte, low nibble
+/// first; the LVQ4 dot). `codes.len()` must be `ceil(q.len() / 2)`.
+#[inline]
+pub fn dot_u4(codes: &[u8], q: &[f32]) -> f32 {
+    (kernels().dot_u4)(codes, q)
+}
+
+/// LVQ4x8 residual combine: `(dot_u4(codes4, q), dot_u8(codes8, q))`
+/// in one call — the two-level re-rank score reads both levels of one
+/// vector against the same query.
+#[inline]
+pub fn dot_u4_u8(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
+    (kernels().dot_u4_u8)(codes4, codes8, q)
+}
+
+/// Software prefetch (to all cache levels) of the cache line at the
+/// start of `data` — the blocked scoring paths issue this for the
+/// *next* row's code bytes while the current row computes. No-op on
+/// non-x86-64 targets and for empty slices' dangling base pointers
+/// (prefetch is a hint; it never faults).
+#[inline(always)]
+pub fn prefetch<T>(data: &[T]) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<{ _MM_HINT_T0 }>(data.as_ptr() as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = data;
+}
+
+#[cfg(test)]
+mod tests {
+    // Scalar-vs-dispatched numeric parity lives in ONE place —
+    // `rust/tests/score_decode.rs::kernel_parity_scalar_vs_dispatched_awkward_dims`
+    // — so the tolerance and dim list cannot drift between copies.
+    // Here we only pin the dispatch mechanics themselves.
+    use super::*;
+
+    #[test]
+    fn dispatch_is_stable_and_named() {
+        let a = active_features();
+        let b = active_features();
+        assert_eq!(a, b, "dispatch must be pinned per process");
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn prefetch_accepts_any_slice() {
+        let v = vec![1u8, 2, 3];
+        prefetch(&v);
+        let f = vec![1.0f32];
+        prefetch(&f);
+        let empty: &[u16] = &[];
+        prefetch(empty);
+    }
+}

@@ -1,0 +1,106 @@
+//! Portable scalar reference kernels.
+//!
+//! These are the pre-SIMD scoring loops, moved here **verbatim** from
+//! `linalg::matrix` (f32 dot), `quant::stores` (the f16 table loop) and
+//! `quant::lvq` (the u8/u4 code dots): same unrolling, same summation
+//! order, same tail handling. That is a hard contract — when the
+//! dispatcher pins the scalar set (`LEANVEC_FORCE_SCALAR=1`, or a host
+//! without AVX2), every score in the crate is bit-identical to what it
+//! was before the kernel layer existed, which is what the snapshot
+//! bit-identity tests certify.
+//!
+//! They are also the parity oracle: `rust/tests/score_decode.rs`
+//! compares every dispatched kernel against these on awkward shapes.
+
+/// f32 · f32 with 8-way unrolling (the historical `linalg::matrix::dot`
+/// body; autovectorizes reasonably, which is why it was the baseline).
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let (mut s4, mut s5, mut s6, mut s7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        s4 += a[i + 4] * b[i + 4];
+        s5 += a[i + 5] * b[i + 5];
+        s6 += a[i + 6] * b[i + 6];
+        s7 += a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s4) + (s1 + s5) + (s2 + s6) + (s3 + s7) + tail
+}
+
+/// Fused f16 decode + dot via the 64K decode table (the historical
+/// `F16Store::score` inner loop) — no temporaries, 4-way unrolled.
+pub fn dot_f16(codes: &[u16], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let table = crate::util::f16::decode_table();
+    let n = codes.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += table[codes[i] as usize] * q[i];
+        s1 += table[codes[i + 1] as usize] * q[i + 1];
+        s2 += table[codes[i + 2] as usize] * q[i + 2];
+        s3 += table[codes[i + 3] as usize] * q[i + 3];
+    }
+    let mut ip = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..n {
+        ip += table[codes[i] as usize] * q[i];
+    }
+    ip
+}
+
+/// u8 code · f32 query with 4-way unrolling (the historical LVQ8
+/// `code_dot_u8`).
+pub fn dot_u8(codes: &[u8], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let n = q.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += codes[i] as f32 * q[i];
+        s1 += codes[i + 1] as f32 * q[i + 1];
+        s2 += codes[i + 2] as f32 * q[i + 2];
+        s3 += codes[i + 3] as f32 * q[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..n {
+        tail += codes[i] as f32 * q[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// packed-u4 code · f32 query (two components per byte, low nibble
+/// first; the historical LVQ4 `code_dot_u4`). `codes.len()` is
+/// `ceil(q.len() / 2)`.
+pub fn dot_u4(codes: &[u8], q: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    let n = q.len();
+    for (b, byte) in codes.iter().enumerate() {
+        let i = b * 2;
+        acc += (byte & 0x0F) as f32 * q[i];
+        if i + 1 < n {
+            acc += (byte >> 4) as f32 * q[i + 1];
+        }
+    }
+    acc
+}
+
+/// LVQ4x8 residual combine: the 4-bit primary dot and the 8-bit
+/// residual dot of one two-level vector against the same query,
+/// computed exactly as two sequential scalar dots (the historical
+/// `Lvq4x8Store::score_full` order).
+pub fn dot_u4_u8(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
+    (dot_u4(codes4, q), dot_u8(codes8, q))
+}

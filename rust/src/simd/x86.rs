@@ -1,0 +1,192 @@
+//! Explicit x86-64 kernels: AVX2 + FMA, plus F16C for the f16 path.
+//!
+//! Every public function here is a *safe-looking* wrapper around a
+//! `#[target_feature]` inner function. The wrappers are `pub(super)`
+//! and referenced **only** by the dispatcher in `simd::mod`, which
+//! installs them exclusively after `is_x86_feature_detected!` confirmed
+//! the features at process start — that detection is the safety
+//! argument for every `unsafe` call in this file.
+//!
+//! Summation order differs from the scalar reference (wide lanes fold
+//! at the end), so results agree with `simd::scalar` only to floating-
+//! point tolerance, never bitwise — the parity property tests in
+//! `rust/tests/score_decode.rs` pin that tolerance.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+/// Horizontal sum of one AVX register (SSE2-only shuffle sequence).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi); // [a, b, c, d]
+        let s2 = _mm_add_ps(s, _mm_movehl_ps(s, s)); // [a+c, b+d, ..]
+        let s3 = _mm_add_ss(s2, _mm_shuffle_ps::<0x55>(s2, s2)); // + (b+d)
+        _mm_cvtss_f32(s3)
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    unsafe {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+            i += 8;
+        }
+        let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
+unsafe fn dot_f16_f16c(codes: &[u16], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let n = codes.len();
+    let (pc, pq) = (codes.as_ptr(), q.as_ptr());
+    unsafe {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let h0 = _mm_loadu_si128(pc.add(i) as *const __m128i);
+            let h1 = _mm_loadu_si128(pc.add(i + 8) as *const __m128i);
+            acc0 = _mm256_fmadd_ps(_mm256_cvtph_ps(h0), _mm256_loadu_ps(pq.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_cvtph_ps(h1), _mm256_loadu_ps(pq.add(i + 8)), acc1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let h = _mm_loadu_si128(pc.add(i) as *const __m128i);
+            acc0 = _mm256_fmadd_ps(_mm256_cvtph_ps(h), _mm256_loadu_ps(pq.add(i)), acc0);
+            i += 8;
+        }
+        let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += crate::util::f16::f16_to_f32(codes[i]) * q[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_u8_avx2(codes: &[u8], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let n = q.len();
+    let (pc, pq) = (codes.as_ptr(), q.as_ptr());
+    unsafe {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // 16 u8 codes -> two u32x8 widens -> two f32x8 FMAs
+            let c16 = _mm_loadu_si128(pc.add(i) as *const __m128i);
+            let lo = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(c16));
+            let hi = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(c16)));
+            acc0 = _mm256_fmadd_ps(lo, _mm256_loadu_ps(pq.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(hi, _mm256_loadu_ps(pq.add(i + 8)), acc1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let c8 = _mm_loadl_epi64(pc.add(i) as *const __m128i);
+            let cf = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(c8));
+            acc0 = _mm256_fmadd_ps(cf, _mm256_loadu_ps(pq.add(i)), acc0);
+            i += 8;
+        }
+        let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += codes[i] as f32 * q[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_u4_avx2(codes: &[u8], q: &[f32]) -> f32 {
+    // two components per byte, low nibble first: byte j holds
+    // components 2j (low) and 2j+1 (high)
+    let n = q.len();
+    debug_assert_eq!(codes.len(), n.div_ceil(2));
+    let (pc, pq) = (codes.as_ptr(), q.as_ptr());
+    unsafe {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let nib_mask = _mm_set1_epi8(0x0F);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            // 8 packed bytes -> 16 nibbles, restored to component order
+            // by interleaving the low- and high-nibble lanes
+            let b = _mm_loadl_epi64(pc.add(i / 2) as *const __m128i);
+            let lo_nib = _mm_and_si128(b, nib_mask);
+            let hi_nib = _mm_and_si128(_mm_srli_epi16::<4>(b), nib_mask);
+            let inter = _mm_unpacklo_epi8(lo_nib, hi_nib); // c[i..i+16]
+            let c0 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(inter));
+            let c1 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(inter)));
+            acc0 = _mm256_fmadd_ps(c0, _mm256_loadu_ps(pq.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(c1, _mm256_loadu_ps(pq.add(i + 8)), acc1);
+            i += 16;
+        }
+        let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            let byte = codes[i / 2];
+            let c = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+            sum += c as f32 * q[i];
+            i += 1;
+        }
+        sum
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_u4_u8_avx2(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
+    unsafe { (dot_u4_avx2(codes4, q), dot_u8_avx2(codes8, q)) }
+}
+
+// ---- dispatcher-facing wrappers -----------------------------------------
+//
+// SAFETY (all five): only ever installed into the kernel table by
+// `simd::select_kernels` after `is_x86_feature_detected!` confirmed
+// avx2+fma (and f16c for `dot_f16`) on this host. Never call directly.
+
+pub(super) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    unsafe { dot_f32_avx2(a, b) }
+}
+
+pub(super) fn dot_f16(codes: &[u16], q: &[f32]) -> f32 {
+    unsafe { dot_f16_f16c(codes, q) }
+}
+
+pub(super) fn dot_u8(codes: &[u8], q: &[f32]) -> f32 {
+    unsafe { dot_u8_avx2(codes, q) }
+}
+
+pub(super) fn dot_u4(codes: &[u8], q: &[f32]) -> f32 {
+    unsafe { dot_u4_avx2(codes, q) }
+}
+
+pub(super) fn dot_u4_u8(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
+    unsafe { dot_u4_u8_avx2(codes4, codes8, q) }
+}

@@ -1,4 +1,5 @@
-//! Score/decode consistency across every store type, plus
+//! Score/decode consistency across every store type, scalar-vs-SIMD
+//! kernel parity, blocked-vs-per-id scoring identity, plus
 //! parallel-vs-serial build parity.
 //!
 //! The contract under test: for every compression and similarity, the
@@ -124,6 +125,176 @@ fn threaded_store_encoding_is_bit_identical_for_every_compression() {
             );
         }
     }
+}
+
+/// Awkward shapes for the kernel layer: empty, single element, below
+/// one SIMD lane (8), exactly one lane, one-past, odd nibble tails,
+/// and a couple of realistic dims.
+const AWKWARD_DIMS: [usize; 10] = [0, 1, 3, 7, 8, 9, 16, 17, 33, 96];
+
+#[test]
+fn kernel_parity_scalar_vs_dispatched_awkward_dims() {
+    // On an AVX2 host this pins the dispatched kernels against the
+    // scalar references at 1e-4 relative tolerance; with
+    // LEANVEC_FORCE_SCALAR=1 (the second CI run) both sides are the
+    // same function and the comparison is exact.
+    use leanvec::simd;
+    let mut rng = leanvec::util::rng::Rng::new(0x51AD);
+    for &n in &AWKWARD_DIMS {
+        for trial in 0..8u64 {
+            let q: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let a: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let h: Vec<u16> = leanvec::util::f16::encode_slice(&a);
+            let c8: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let c4: Vec<u8> = (0..n.div_ceil(2)).map(|_| rng.below(256) as u8).collect();
+            let close = |got: f32, want: f32, what: &str| {
+                assert!(
+                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "{what} n={n} trial={trial}: dispatched {got} vs scalar {want}"
+                );
+            };
+            close(simd::dot_f32(&q, &a), simd::scalar::dot_f32(&q, &a), "dot_f32");
+            close(simd::dot_f16(&h, &q), simd::scalar::dot_f16(&h, &q), "dot_f16");
+            close(simd::dot_u8(&c8, &q), simd::scalar::dot_u8(&c8, &q), "dot_u8");
+            close(simd::dot_u4(&c4, &q), simd::scalar::dot_u4(&c4, &q), "dot_u4");
+            let (g4, g8) = simd::dot_u4_u8(&c4, &c8, &q);
+            let (w4, w8) = simd::scalar::dot_u4_u8(&c4, &c8, &q);
+            close(g4, w4, "dot_u4_u8.0");
+            close(g8, w8, "dot_u4_u8.1");
+        }
+    }
+}
+
+#[test]
+fn score_block_bitwise_matches_score_every_store_sim_dim() {
+    // The blocked entry points must reproduce the per-id scores *bit
+    // for bit* (same kernel, same data) for every store kind, both
+    // similarities, and every awkward dimension — including dim where
+    // a whole SIMD lane never fills.
+    check("score-block-identity", Config::default(), |g| {
+        let d = AWKWARD_DIMS[g.usize_in(1, AWKWARD_DIMS.len() - 1)]; // skip 0: stores need a dim
+        let n = g.usize_in(1, 40);
+        let rows = rows_from(g, n, d);
+        let q = g.vec_gaussian(d);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let (mut block, mut rerank_block) = (Vec::new(), Vec::new());
+        for compression in ALL_COMPRESSIONS {
+            let store = make_store(&rows, compression);
+            for sim in [Similarity::InnerProduct, Similarity::L2] {
+                let pq = store.prepare(&q, sim);
+                store.score_block(&pq, &ids, &mut block);
+                store.score_rerank_block(&pq, &ids, &mut rerank_block);
+                prop_assert!(block.len() == n && rerank_block.len() == n, "lengths");
+                for &id in &ids {
+                    let i = id as usize;
+                    prop_assert!(
+                        block[i].to_bits() == store.score(&pq, id).to_bits(),
+                        "{compression:?}/{sim:?} d={d} id={id}: score_block {} vs score {}",
+                        block[i],
+                        store.score(&pq, id)
+                    );
+                    prop_assert!(
+                        rerank_block[i].to_bits() == store.score_rerank(&pq, id).to_bits(),
+                        "{compression:?}/{sim:?} d={d} id={id}: rerank_block {} vs {}",
+                        rerank_block[i],
+                        store.score_rerank(&pq, id)
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// f64 reference score from a store's own decode (the high-precision
+/// twin of what `score` computes in f32).
+fn ref_score_f64(q: &[f32], dec: &[f32], sim: Similarity) -> f64 {
+    let ip: f64 = q.iter().zip(dec.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+    match sim {
+        Similarity::InnerProduct | Similarity::Cosine => ip,
+        Similarity::L2 => {
+            let nsq: f64 = dec.iter().map(|&x| x as f64 * x as f64).sum();
+            2.0 * ip - nsq
+        }
+    }
+}
+
+#[test]
+fn topk_ranking_matches_f64_reference_every_store() {
+    // Gaussian data, realistic dim: the top-10 ranking produced by the
+    // dispatched kernels must match the f64 decode-based reference
+    // ranking, except where two reference scores genuinely tie within
+    // tolerance (summation-order noise may legally swap those).
+    let mut rng = leanvec::util::rng::Rng::new(0xBEEF);
+    let n = 300usize;
+    let d = 96usize;
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+        .collect();
+    let q: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let k = 10usize;
+    for compression in ALL_COMPRESSIONS {
+        let store = make_store(&rows, compression);
+        for sim in [Similarity::InnerProduct, Similarity::L2] {
+            let pq = store.prepare(&q, sim);
+            let mut scores = Vec::new();
+            store.score_block(&pq, &ids, &mut scores);
+            let mut got: Vec<u32> = ids.clone();
+            got.sort_by(|&a, &b| scores[b as usize].total_cmp(&scores[a as usize]));
+            got.truncate(k);
+            // reference ranking of *traversal* scores: first level only
+            // for LVQ4x8, so decode the matching representation
+            let ref_store = match compression {
+                Compression::Lvq4x8 => make_store(&rows, Compression::Lvq4),
+                _ => make_store(&rows, compression),
+            };
+            let mut refs: Vec<f64> = Vec::with_capacity(n);
+            for id in 0..n as u32 {
+                refs.push(ref_score_f64(&q, &ref_store.decode(id), sim));
+            }
+            let mut want: Vec<u32> = ids.clone();
+            want.sort_by(|&a, &b| refs[b as usize].total_cmp(&refs[a as usize]));
+            want.truncate(k);
+            for (pos, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+                if g != w {
+                    let diff = (refs[g as usize] - refs[w as usize]).abs();
+                    let scale = 1.0 + refs[w as usize].abs();
+                    assert!(
+                        diff <= 1e-3 * scale,
+                        "{compression:?}/{sim:?} rank {pos}: id {g} vs {w} \
+                         (ref scores {} vs {})",
+                        refs[g as usize],
+                        refs[w as usize]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn force_scalar_override_pins_the_scalar_kernels() {
+    // self-describing dispatch: when the env override is present the
+    // dispatcher must report (and use) the scalar set — the CI runs the
+    // whole suite a second time under LEANVEC_FORCE_SCALAR=1 to drive
+    // every test above through this path
+    let forced = leanvec::simd::force_scalar_requested();
+    let features = leanvec::simd::active_features();
+    if forced {
+        assert!(
+            features.starts_with("scalar"),
+            "forced scalar but dispatcher picked {features}"
+        );
+        // spot-check: dispatched == scalar exactly
+        let q: Vec<f32> = (0..33).map(|i| (i as f32).sin()).collect();
+        let c: Vec<u8> = (0..33).map(|i| (i * 7 % 251) as u8).collect();
+        assert_eq!(
+            leanvec::simd::dot_u8(&c, &q).to_bits(),
+            leanvec::simd::scalar::dot_u8(&c, &q).to_bits()
+        );
+    }
+    assert!(!features.is_empty());
 }
 
 fn build_index(
