@@ -15,6 +15,7 @@ use leanvec::index::leanvec_index::{LeanVecIndex, SearchParams};
 use leanvec::index::persist::SnapshotMeta;
 use leanvec::index::query::{Query, VectorIndex};
 use leanvec::mutate::LiveIndex;
+use leanvec::shard::{ShardSpec, ShardedIndex};
 use leanvec::util::json::Json;
 use leanvec::util::rng::Rng;
 use std::sync::Arc;
@@ -145,11 +146,108 @@ fn bench_build_trajectory(
 /// sequential and all-core batch) + recall@10 at a fixed window, plus
 /// which kernel set the dispatcher picked and a flat-scan point for
 /// the linear-scan path.
+/// Sharded scatter-gather arm: shards=1 vs shards=4 over the same
+/// corpus, same model, measured closed-loop from one submitter thread
+/// (the scatter fans each query across per-shard threads — the latency
+/// path sharding exists for). Each shard holds n/4 vectors, so its
+/// beam converges with a smaller per-shard window at equal union
+/// recall; the sweep picks the smallest window that holds recall@k,
+/// and the headline is sharded QPS over unsharded QPS at that matched
+/// operating point. Returns the JSON fragment embedded under
+/// `"sharded"` in BENCH_search.json.
+fn bench_sharded(
+    ds: &leanvec::data::synth::Dataset,
+    gp: GraphParams,
+    truth: &[Vec<u32>],
+    k: usize,
+) -> Json {
+    const WINDOW: usize = 60;
+    const SHARDS: usize = 4;
+    println!("\n== sharded scatter-gather ({SHARDS} shards vs 1, window {WINDOW}) ==");
+    let configure = move |b: IndexBuilder| {
+        b.projection(ProjectionKind::OodEigSearch)
+            .target_dim(160)
+            .primary(Compression::Lvq8)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+    };
+    let one = ShardedIndex::build(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(1),
+        0,
+        configure,
+    );
+    let four = ShardedIndex::build(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(SHARDS),
+        0,
+        configure,
+    );
+    // closed-loop from one submitter, best of 3 passes
+    let run = |ix: &ShardedIndex, window: usize| -> (f64, f64) {
+        let mut got: Vec<Vec<u32>> = Vec::new();
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            got = ds
+                .test_queries
+                .iter()
+                .map(|v| {
+                    let q = Query::new(v).k(k).window(window).rerank_window(window);
+                    ix.search_scatter(&ix.model().project_query(v), &q).ids
+                })
+                .collect();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        (
+            ds.test_queries.len() as f64 / best.max(1e-9),
+            recall_at_k(&got, truth, k),
+        )
+    };
+    let (qps1, recall1) = run(&one, WINDOW);
+    println!("shards=1: window {WINDOW:<3} recall@{k} {recall1:.3}  {qps1:>8.0} QPS");
+    // per-shard window sweep: each shard covers n/4 vectors, so the
+    // smallest window whose union recall matches shards=1 wins
+    let (mut w4, mut qps4, mut recall4) = (WINDOW, 0.0, 0.0);
+    for w in [WINDOW / 3, WINDOW / 2, 2 * WINDOW / 3, WINDOW] {
+        let (q, r) = run(&four, w);
+        (w4, qps4, recall4) = (w, q, r);
+        println!(
+            "shards={SHARDS}: window {w:<3} recall@{k} {r:.3}  {q:>8.0} QPS  ({:.2}x)",
+            q / qps1.max(1e-9)
+        );
+        if r >= recall1 - 0.005 {
+            break;
+        }
+    }
+    let speedup = qps4 / qps1.max(1e-9);
+    println!(
+        "sharded speedup at matched recall: {speedup:.2}x \
+         (shards={SHARDS} w={w4} recall {recall4:.3} vs shards=1 w={WINDOW} recall {recall1:.3})"
+    );
+    Json::obj(vec![
+        ("shards", Json::num(SHARDS as f64)),
+        ("window_1shard", Json::num(WINDOW as f64)),
+        ("window_per_shard", Json::num(w4 as f64)),
+        ("k", Json::num(k as f64)),
+        ("qps_1shard", Json::num(qps1)),
+        ("qps_sharded", Json::num(qps4)),
+        ("recall_1shard", Json::num(recall1)),
+        ("recall_sharded", Json::num(recall4)),
+        ("speedup_at_matched_recall", Json::num(speedup)),
+    ])
+}
+
 fn bench_search_baseline(
     ds: &leanvec::data::synth::Dataset,
     gp: GraphParams,
     truth: &[Vec<u32>],
     k: usize,
+    sharded: Json,
 ) {
     use leanvec::graph::beam::SearchCtx;
     use leanvec::index::flat::FlatIndex;
@@ -223,6 +321,7 @@ fn bench_search_baseline(
         ("recall_at_k", Json::num(recall)),
         ("recall_at_k_batch", Json::num(recall_batch)),
         ("flat_scan_qps", Json::num(flat_qps)),
+        ("sharded", sharded),
     ]);
     match std::fs::write("BENCH_search.json", out.to_pretty()) {
         Ok(()) => println!("[saved BENCH_search.json]"),
@@ -291,11 +390,17 @@ fn bench_churn(ds: &leanvec::data::synth::Dataset, gp: GraphParams) {
     let mut mutated = 0usize;
     for i in 0..n_queries {
         if mutated < churn && mutated * n_queries <= i * churn {
-            engine.submit_insert(ext_base + mutated as u32, new_vecs[mutated].clone());
-            engine.submit_delete(live_now[mutated * (live_now.len() / churn).max(1)]);
+            engine
+                .submit_insert(ext_base + mutated as u32, new_vecs[mutated].clone())
+                .expect("live engine running");
+            engine
+                .submit_delete(live_now[mutated * (live_now.len() / churn).max(1)])
+                .expect("live engine running");
             mutated += 1;
         }
-        engine.submit(ds.test_queries[i % ds.test_queries.len()].clone(), 10);
+        engine
+            .submit(ds.test_queries[i % ds.test_queries.len()].clone(), 10)
+            .expect("engine running");
     }
     let responses = engine.drain(n_queries);
     engine.quiesce_mutations();
@@ -410,12 +515,119 @@ fn main() {
     let (_r, report) = Engine::run_workload(index, cfg, &queries, k, None);
     println!("\nserving engine: {}", report.metrics);
 
+    // sharded scatter-gather arm (embedded into BENCH_search.json)
+    let sharded = bench_sharded(&ds, gp, &truth, k);
+
     // fixed-window search QPS + recall anchor -> BENCH_search.json
-    bench_search_baseline(&ds, gp, &truth, k);
+    bench_search_baseline(&ds, gp, &truth, k, sharded);
 
     // parallel build speedup trajectory -> BENCH_build.json
     bench_build_trajectory(&ds, gp, &truth, k);
 
     // streaming mutation churn -> BENCH_mutate.json
     bench_churn(&ds, gp);
+
+    // roll this run's headline numbers into the committed trajectory
+    roll_history();
+}
+
+/// Append this run's headline numbers to `BENCH_history.json` — the
+/// committed per-PR perf trajectory. Each entry is a compact summary
+/// of the three BENCH_*.json files (which hold the full detail for one
+/// run only and get overwritten every time). Label via $BENCH_LABEL,
+/// defaulting to run-<n>.
+fn roll_history() {
+    let read = |p: &str| {
+        std::fs::read_to_string(p)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+    };
+    let pick = |j: &Option<Json>, keys: &[&str]| -> f64 {
+        let mut cur = match j {
+            Some(j) => j,
+            None => return 0.0,
+        };
+        for key in keys {
+            cur = match cur.get(key) {
+                Some(next) => next,
+                None => return 0.0,
+            };
+        }
+        cur.as_f64().unwrap_or(0.0)
+    };
+    let build = read("BENCH_build.json");
+    let search = read("BENCH_search.json");
+    let mutate = read("BENCH_mutate.json");
+    // fastest build in the trajectory sweep (the all-cores row)
+    let best_build = build
+        .as_ref()
+        .and_then(|b| b.get("builds"))
+        .and_then(|b| b.as_arr())
+        .map(|rows| {
+            rows.iter()
+                .filter_map(|r| r.get("total_seconds").and_then(|v| v.as_f64()))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .filter(|v| v.is_finite())
+        .unwrap_or(0.0);
+    let mut entries: Vec<Json> = std::fs::read_to_string("BENCH_history.json")
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    let label = std::env::var("BENCH_LABEL")
+        .unwrap_or_else(|_| format!("run-{}", entries.len() + 1));
+    let unix_seconds = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    entries.push(Json::obj(vec![
+        ("label", Json::str(&label)),
+        ("unix_seconds", Json::num(unix_seconds)),
+        ("search_qps_1thread", Json::num(pick(&search, &["qps_1thread"]))),
+        (
+            "search_qps_batch_all_cores",
+            Json::num(pick(&search, &["qps_batch_all_cores"])),
+        ),
+        ("search_recall_at_k", Json::num(pick(&search, &["recall_at_k"]))),
+        (
+            "sharded_qps_1shard",
+            Json::num(pick(&search, &["sharded", "qps_1shard"])),
+        ),
+        (
+            "sharded_qps_sharded",
+            Json::num(pick(&search, &["sharded", "qps_sharded"])),
+        ),
+        (
+            "sharded_speedup_at_matched_recall",
+            Json::num(pick(&search, &["sharded", "speedup_at_matched_recall"])),
+        ),
+        ("build_best_total_seconds", Json::num(best_build)),
+        (
+            "build_speedup_parallel_phases",
+            Json::num({
+                let b = build
+                    .as_ref()
+                    .and_then(|b| b.get("builds"))
+                    .and_then(|b| b.as_arr());
+                b.and_then(|rows| rows.last())
+                    .map(|r| pick(&Some(r.clone()), &["speedup_parallel_phases_vs_serial"]))
+                    .unwrap_or(0.0)
+            }),
+        ),
+        ("mutate_insert_qps", Json::num(pick(&mutate, &["insert_qps"]))),
+        ("mutate_delete_qps", Json::num(pick(&mutate, &["delete_qps"]))),
+        (
+            "mutate_churn_search_qps",
+            Json::num(pick(&mutate, &["churn_search_qps"])),
+        ),
+        (
+            "mutate_churn_latency_p99_ms",
+            Json::num(pick(&mutate, &["churn_latency_p99_ms"])),
+        ),
+    ]));
+    match std::fs::write("BENCH_history.json", Json::arr(entries).to_pretty()) {
+        Ok(()) => println!("[rolled BENCH_history.json]"),
+        Err(e) => eprintln!("could not write BENCH_history.json: {e}"),
+    }
 }

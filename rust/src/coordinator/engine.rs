@@ -1,61 +1,70 @@
-//! The serving engine: batcher thread + worker pool over a shared
-//! index — a frozen [`LeanVecIndex`], or a [`LiveIndex`] with an
-//! **ingest lane**: a dedicated mutation worker that applies streaming
-//! inserts/deletes interleaved with (never blocking) the search
-//! workers, and runs tombstone consolidation off the hot path when the
-//! tombstone fraction crosses [`EngineConfig::consolidate_threshold`].
+//! The serving engine: batcher thread + worker pool over a registry of
+//! named [`Collection`]s, each a [`ShardedIndex`] (frozen or live
+//! shards) with per-collection search defaults and admission quotas.
+//! Requests carry a collection name in their [`QuerySpec`]; the batcher
+//! groups each batch by collection (one projection matmul per group)
+//! and the workers answer by concurrent scatter-gather across that
+//! collection's shards. Live collections share one **ingest lane**: a
+//! dedicated mutation worker that routes inserts/deletes to the owning
+//! shard by id hash, interleaved with (never blocking) the search
+//! workers, and staggers tombstone consolidation one shard at a time
+//! when a shard crosses [`EngineConfig::consolidate_threshold`].
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Metrics, ServeReport};
 use super::protocol::{Mutation, QuerySpec, Request, Response};
 use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
-use crate::index::query::{Query, SearchResult};
-use crate::graph::beam::SearchCtx;
-use crate::leanvec::model::{rows_to_matrix, LeanVecModel};
+use crate::index::query::Query;
+use crate::leanvec::model::rows_to_matrix;
 use crate::linalg::Matrix;
 use crate::mutate::LiveIndex;
+use crate::shard::{Collection, CollectionRegistry, ShardedIndex, DEFAULT_COLLECTION};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// The index a running engine serves: frozen or live. Workers and the
-/// batcher are generic over this, so the live path reuses the whole
-/// batching/projection/worker machinery.
-#[derive(Clone)]
-enum ServeIndex {
-    Frozen(Arc<LeanVecIndex>),
-    Live(Arc<LiveIndex>),
+/// Everything `Engine::submit*` can reject instead of panicking: a
+/// stopped (or mutation-quiesced) engine, an unregistered collection, a
+/// tenant over its admission quota, or a mutation aimed at a frozen
+/// collection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The engine (or its ingest lane) no longer accepts submissions —
+    /// it was shut down, or mutations were quiesced.
+    Stopped,
+    /// No collection registered under this name.
+    UnknownCollection(String),
+    /// The collection's [`TenantQuota`](crate::shard::TenantQuota)
+    /// rejected the submission (too many in-flight searches or pending
+    /// mutations).
+    QuotaExceeded { collection: String },
+    /// Mutation submitted to a collection whose shards are frozen.
+    NotLive { collection: String },
 }
 
-impl ServeIndex {
-    fn model(&self) -> &LeanVecModel {
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ServeIndex::Frozen(ix) => &ix.model,
-            ServeIndex::Live(ix) => ix.model(),
-        }
-    }
-
-    fn len(&self) -> usize {
-        match self {
-            ServeIndex::Frozen(ix) => ix.len(),
-            ServeIndex::Live(ix) => ix.total_slots(),
-        }
-    }
-
-    fn search_prepared(
-        &self,
-        ctx: &mut SearchCtx,
-        q_proj: &[f32],
-        query: &Query,
-    ) -> SearchResult {
-        match self {
-            ServeIndex::Frozen(ix) => ix.search_prepared(ctx, q_proj, query),
-            ServeIndex::Live(ix) => ix.search_prepared(ctx, q_proj, query),
+            EngineError::Stopped => write!(f, "engine stopped accepting submissions"),
+            EngineError::UnknownCollection(name) => {
+                write!(f, "no collection named {name:?}")
+            }
+            EngineError::QuotaExceeded { collection } => {
+                write!(f, "collection {collection:?}: admission quota exceeded")
+            }
+            EngineError::NotLive { collection } => {
+                write!(
+                    f,
+                    "collection {collection:?} is frozen (mutations need live shards)"
+                )
+            }
         }
     }
 }
+
+impl std::error::Error for EngineError {}
 
 /// Ingest-lane counters (atomics: the lane runs on its own thread).
 #[derive(Debug, Default)]
@@ -106,13 +115,18 @@ pub enum QueryProjectorKind {
 pub struct EngineConfig {
     pub workers: usize,
     pub batch: BatchPolicy,
+    /// engine-wide search defaults; collections registered through
+    /// [`Engine::start`]/[`Engine::start_live`] adopt these as their
+    /// per-collection defaults ([`Engine::start_collections`] callers
+    /// set defaults on each [`Collection`] instead)
     pub search: SearchParams,
     pub projector: QueryProjectorKind,
-    /// Live engines only: tombstone fraction at which the ingest lane
-    /// runs a consolidation pass (after applying a mutation, off the
-    /// search hot path). `<= 0` disables the tombstone-fraction
-    /// trigger; the pending-insert-log memory bound still folds the
-    /// journal regardless.
+    /// Live collections only: tombstone fraction at which the ingest
+    /// lane consolidates a shard (after applying a mutation, off the
+    /// search hot path; at most one shard per mutation, so multi-shard
+    /// consolidations stagger across the stream). `<= 0` disables the
+    /// tombstone-fraction trigger; the pending-insert-log memory bound
+    /// still folds each shard's journal regardless.
     pub consolidate_threshold: f64,
 }
 
@@ -130,17 +144,18 @@ impl Default for EngineConfig {
     }
 }
 
-/// A running engine. Submit requests, then `drain` responses; live
-/// engines additionally accept mutations
-/// ([`Engine::submit_insert`]/[`Engine::submit_delete`]) on the ingest
-/// lane.
+/// A running engine. Submit requests, then `drain` responses; engines
+/// with live collections additionally accept mutations
+/// ([`Engine::submit_insert`]/[`Engine::submit_delete`], or the `_to`
+/// variants naming a collection) on the ingest lane.
 pub struct Engine {
+    registry: Arc<CollectionRegistry>,
     req_tx: Option<Sender<Request>>,
     resp_rx: Receiver<Response>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
-    // ingest lane (live engines only)
-    mut_tx: Option<Sender<Mutation>>,
+    // ingest lane (engines with live collections only)
+    mut_tx: Option<Sender<(Arc<Collection>, Mutation)>>,
     ingest: Option<JoinHandle<()>>,
     ingest_stats: Arc<IngestStats>,
     live: Option<Arc<LiveIndex>>,
@@ -148,11 +163,13 @@ pub struct Engine {
     started: Instant,
 }
 
-/// Work item: one request plus its projected query.
+/// Work item: one request, its projected query, and the collection that
+/// answers it (resolved once, by the batcher).
 struct WorkItem {
     req: Request,
     q_proj: Vec<f32>,
     batch_size: usize,
+    collection: Arc<Collection>,
 }
 
 impl Engine {
@@ -183,13 +200,21 @@ impl Engine {
         Ok((Engine::start(Arc::new(index), cfg), meta))
     }
 
+    /// Start a single-collection engine over a frozen index: the index
+    /// is registered as the [`DEFAULT_COLLECTION`] with `cfg.search` as
+    /// its defaults.
     pub fn start(index: Arc<LeanVecIndex>, cfg: EngineConfig) -> Engine {
-        Engine::start_serve(ServeIndex::Frozen(index), cfg)
+        let mut registry = CollectionRegistry::new();
+        registry.register(
+            Collection::new(DEFAULT_COLLECTION, ShardedIndex::from_single(index))
+                .with_defaults(cfg.search),
+        );
+        Engine::start_collections(registry, cfg)
     }
 
-    /// Start a **live** engine over a mutable index: the same
-    /// batcher/worker pipeline as [`Engine::start`], plus an ingest
-    /// lane — one mutation thread draining
+    /// Start a **live** single-collection engine over a mutable index:
+    /// the same batcher/worker pipeline as [`Engine::start`], plus an
+    /// ingest lane — one mutation thread draining
     /// [`Engine::submit_insert`]/[`Engine::submit_delete`] in
     /// submission order, concurrently with the search workers (no
     /// global lock: searches hold read guards, mutations write briefly).
@@ -197,62 +222,63 @@ impl Engine {
     /// runs [`LiveIndex::consolidate`] when it crosses
     /// [`EngineConfig::consolidate_threshold`] — off the search path.
     pub fn start_live(live: Arc<LiveIndex>, cfg: EngineConfig) -> Engine {
-        let threshold = cfg.consolidate_threshold;
-        let mut engine = Engine::start_serve(ServeIndex::Live(Arc::clone(&live)), cfg);
-        let (mut_tx, mut_rx) = channel::<Mutation>();
-        let stats = Arc::clone(&engine.ingest_stats);
-        let ilive = Arc::clone(&live);
-        let ingest = std::thread::Builder::new()
-            .name("leanvec-ingest".into())
-            .spawn(move || {
-                ingest_loop(ilive, mut_rx, stats, threshold);
-            })
-            .expect("spawn ingest");
-        engine.mut_tx = Some(mut_tx);
-        engine.ingest = Some(ingest);
+        let mut registry = CollectionRegistry::new();
+        registry.register(
+            Collection::new(DEFAULT_COLLECTION, ShardedIndex::from_live(Arc::clone(&live)))
+                .with_defaults(cfg.search),
+        );
+        let mut engine = Engine::start_collections(registry, cfg);
         engine.live = Some(live);
         engine
     }
 
-    fn start_serve(index: ServeIndex, cfg: EngineConfig) -> Engine {
+    /// Start the engine over a full [`CollectionRegistry`]: the
+    /// multi-tenant entry point. Every registered collection is served
+    /// by the shared batcher/worker pipeline, routed by the collection
+    /// name in each request's [`QuerySpec`]. An ingest lane is started
+    /// iff any collection has live shards.
+    pub fn start_collections(registry: CollectionRegistry, cfg: EngineConfig) -> Engine {
+        assert!(
+            !registry.is_empty(),
+            "engine needs at least one collection"
+        );
+        let registry = Arc::new(registry);
         let (req_tx, req_rx) = channel::<Request>();
         let (work_tx, work_rx) = channel::<WorkItem>();
         let (resp_tx, resp_rx) = channel::<Response>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
-        // --- batcher thread: batch, project, fan out
-        let bindex = index.clone();
+        // --- batcher thread: batch, group by collection, project, fan out
+        let bregistry = Arc::clone(&registry);
         let bcfg = cfg.clone();
         let batcher = std::thread::Builder::new()
             .name("leanvec-batcher".into())
             .spawn(move || {
-                batcher_loop(bindex, bcfg, req_rx, work_tx);
+                batcher_loop(bregistry, bcfg, req_rx, work_tx);
             })
             .expect("spawn batcher");
 
-        // --- workers: search + rerank
+        // --- workers: scatter-gather search + rerank
         let workers = (0..cfg.workers.max(1))
             .map(|w| {
-                let windex = index.clone();
                 let wrx = Arc::clone(&work_rx);
                 let wtx = resp_tx.clone();
-                let search = cfg.search;
                 std::thread::Builder::new()
                     .name(format!("leanvec-search-{w}"))
                     .spawn(move || {
-                        let mut ctx = SearchCtx::new(windex.len());
                         loop {
                             let item = { wrx.lock().unwrap().recv() };
                             let item = match item {
                                 Ok(i) => i,
                                 Err(_) => break,
                             };
-                            // per-request spec wins over the engine-wide
+                            // per-request spec wins over the collection's
                             // defaults; the allow-list becomes a filter
                             // predicate pushed into traversal
                             let result = {
+                                let coll = &item.collection;
                                 let spec = &item.req.spec;
-                                let params = resolve_spec(spec, search);
+                                let params = resolve_spec(spec, coll.defaults);
                                 let base = Query::new(&item.req.query)
                                     .k(spec.k)
                                     .window(params.window)
@@ -262,19 +288,16 @@ impl Engine {
                                     // construction; here it is only read
                                     Some(allow) => {
                                         let pred = |id: u32| allow.contains(&id);
-                                        windex.search_prepared(
-                                            &mut ctx,
-                                            &item.q_proj,
-                                            &base.filter(&pred),
-                                        )
+                                        coll.index
+                                            .search_scatter(&item.q_proj, &base.filter(&pred))
                                     }
-                                    None => windex.search_prepared(
-                                        &mut ctx,
-                                        &item.q_proj,
-                                        &base,
-                                    ),
+                                    None => coll.index.search_scatter(&item.q_proj, &base),
                                 }
                             };
+                            // release the admission slot before the send:
+                            // once the caller drains this response the
+                            // quota capacity is observably free
+                            item.collection.finish_search();
                             let latency_s = item
                                 .req
                                 .submitted
@@ -294,62 +317,131 @@ impl Engine {
             })
             .collect();
 
+        // --- ingest lane, iff any collection accepts mutations
+        let ingest_stats = Arc::new(IngestStats::default());
+        let (mut_tx, ingest) = if registry.any_live() {
+            let (tx, rx) = channel::<(Arc<Collection>, Mutation)>();
+            let stats = Arc::clone(&ingest_stats);
+            let threshold = cfg.consolidate_threshold;
+            let handle = std::thread::Builder::new()
+                .name("leanvec-ingest".into())
+                .spawn(move || {
+                    ingest_loop(rx, stats, threshold);
+                })
+                .expect("spawn ingest");
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+
         Engine {
+            registry,
             req_tx: Some(req_tx),
             resp_rx,
             batcher: Some(batcher),
             workers,
-            mut_tx: None,
-            ingest: None,
-            ingest_stats: Arc::new(IngestStats::default()),
+            mut_tx,
+            ingest,
+            ingest_stats,
             live: None,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
 
-    /// Submit one query with engine-default knobs; returns its request
-    /// id.
-    pub fn submit(&self, query: Vec<f32>, k: usize) -> u64 {
+    /// The collections this engine serves.
+    pub fn registry(&self) -> &Arc<CollectionRegistry> {
+        &self.registry
+    }
+
+    /// One collection by name (admission counters, defaults, index).
+    pub fn collection(&self, name: &str) -> Option<&Arc<Collection>> {
+        self.registry.get(name)
+    }
+
+    /// Submit one query to the default collection with its default
+    /// knobs; returns the request id.
+    pub fn submit(&self, query: Vec<f32>, k: usize) -> Result<u64, EngineError> {
         self.submit_spec(query, QuerySpec::top_k(k))
     }
 
-    /// Submit one query with per-request knobs (window / rerank-window
-    /// overrides, allow-list filter); returns its request id.
-    pub fn submit_spec(&self, query: Vec<f32>, spec: QuerySpec) -> u64 {
+    /// Submit one query with per-request knobs (collection, window /
+    /// rerank-window overrides, allow-list filter); returns the request
+    /// id, or the reason the request was not admitted.
+    pub fn submit_spec(&self, query: Vec<f32>, spec: QuerySpec) -> Result<u64, EngineError> {
+        let name = spec.collection_name();
+        let coll = self
+            .registry
+            .get(name)
+            .ok_or_else(|| EngineError::UnknownCollection(name.to_string()))?;
+        let tx = self.req_tx.as_ref().ok_or(EngineError::Stopped)?;
+        if !coll.admit_search() {
+            return Err(EngineError::QuotaExceeded {
+                collection: name.to_string(),
+            });
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = Request::with_spec(id, query, spec);
         req.submitted = Some(Instant::now());
-        self.req_tx
-            .as_ref()
-            .expect("engine running")
-            .send(req)
-            .expect("batcher alive");
-        id
+        if tx.send(req).is_err() {
+            coll.finish_search();
+            return Err(EngineError::Stopped);
+        }
+        Ok(id)
     }
 
-    /// Enqueue an insert on the ingest lane (live engines only; panics
-    /// on an engine started with [`Engine::start`]). Applied
-    /// asynchronously, in submission order, concurrently with searches.
-    pub fn submit_insert(&self, ext_id: u32, vector: Vec<f32>) {
-        self.mut_tx
-            .as_ref()
-            .expect("mutations need a live engine (Engine::start_live)")
-            .send(Mutation::Insert { ext_id, vector })
-            .expect("ingest alive");
+    /// Enqueue an insert for the default collection on the ingest lane.
+    /// Applied asynchronously, in submission order, concurrently with
+    /// searches. Errors instead of panicking when the collection is
+    /// frozen, unknown, over quota, or the lane is quiesced/stopped.
+    pub fn submit_insert(&self, ext_id: u32, vector: Vec<f32>) -> Result<(), EngineError> {
+        self.submit_mutation(DEFAULT_COLLECTION, Mutation::Insert { ext_id, vector })
     }
 
-    /// Enqueue a delete on the ingest lane (live engines only; panics
-    /// on an engine started with [`Engine::start`]).
-    pub fn submit_delete(&self, ext_id: u32) {
-        self.mut_tx
-            .as_ref()
-            .expect("mutations need a live engine (Engine::start_live)")
-            .send(Mutation::Delete { ext_id })
-            .expect("ingest alive");
+    /// Enqueue a delete for the default collection on the ingest lane.
+    pub fn submit_delete(&self, ext_id: u32) -> Result<(), EngineError> {
+        self.submit_mutation(DEFAULT_COLLECTION, Mutation::Delete { ext_id })
     }
 
-    /// Ingest-lane counters (zeros on a frozen engine).
+    /// Enqueue an insert for a named collection.
+    pub fn submit_insert_to(
+        &self,
+        collection: &str,
+        ext_id: u32,
+        vector: Vec<f32>,
+    ) -> Result<(), EngineError> {
+        self.submit_mutation(collection, Mutation::Insert { ext_id, vector })
+    }
+
+    /// Enqueue a delete for a named collection.
+    pub fn submit_delete_to(&self, collection: &str, ext_id: u32) -> Result<(), EngineError> {
+        self.submit_mutation(collection, Mutation::Delete { ext_id })
+    }
+
+    fn submit_mutation(&self, name: &str, m: Mutation) -> Result<(), EngineError> {
+        let coll = self
+            .registry
+            .get(name)
+            .ok_or_else(|| EngineError::UnknownCollection(name.to_string()))?;
+        if !coll.index.is_live() {
+            return Err(EngineError::NotLive {
+                collection: name.to_string(),
+            });
+        }
+        let tx = self.mut_tx.as_ref().ok_or(EngineError::Stopped)?;
+        if !coll.admit_mutation() {
+            return Err(EngineError::QuotaExceeded {
+                collection: name.to_string(),
+            });
+        }
+        if tx.send((Arc::clone(coll), m)).is_err() {
+            coll.finish_mutation();
+            return Err(EngineError::Stopped);
+        }
+        Ok(())
+    }
+
+    /// Ingest-lane counters (zeros on an all-frozen engine).
     pub fn ingest_stats(&self) -> IngestSnapshot {
         self.ingest_stats.snapshot()
     }
@@ -362,7 +454,8 @@ impl Engine {
 
     /// Block until every mutation submitted so far has been applied:
     /// closes the ingest lane and joins the ingest worker. Searches are
-    /// unaffected; further `submit_insert`/`submit_delete` calls panic.
+    /// unaffected; further `submit_insert`/`submit_delete` calls return
+    /// [`EngineError::Stopped`].
     pub fn quiesce_mutations(&mut self) {
         drop(self.mut_tx.take());
         if let Some(h) = self.ingest.take() {
@@ -442,7 +535,9 @@ impl Engine {
         let engine = Engine::start(index, cfg);
         let t0 = Instant::now();
         for q in queries {
-            engine.submit(q.clone(), k);
+            engine
+                .submit(q.clone(), k)
+                .expect("submit on a freshly started engine");
         }
         let mut responses = engine.drain(queries.len());
         let wall = t0.elapsed().as_secs_f64();
@@ -461,7 +556,7 @@ impl Engine {
     }
 }
 
-/// Resolve a request's [`QuerySpec`] against the engine-wide defaults
+/// Resolve a request's [`QuerySpec`] against its collection's defaults
 /// via the one shared rule ([`crate::index::query::resolve_params`]).
 /// The results are clamped to >= 1 so a malformed spec degrades
 /// instead of panicking the worker.
@@ -474,7 +569,7 @@ fn resolve_spec(spec: &QuerySpec, defaults: SearchParams) -> SearchParams {
 }
 
 fn batcher_loop(
-    index: ServeIndex,
+    registry: Arc<CollectionRegistry>,
     cfg: EngineConfig,
     req_rx: Receiver<Request>,
     work_tx: Sender<WorkItem>,
@@ -494,89 +589,113 @@ fn batcher_loop(
 
     while let Some(batch) = batcher.next_batch(&req_rx) {
         let bs = batch.len();
-        // project the whole batch as one matmul: (d, D) x (D, B). The
-        // projection model is frozen even on a live index, so batching
-        // is mutation-oblivious.
-        let queries: Vec<Vec<f32>> = batch.iter().map(|r| r.query.clone()).collect();
-        let projected: Vec<Vec<f32>> = match pjrt.as_mut() {
-            Some(p) => {
-                use crate::index::builder::BatchProjector;
-                p.project(&index.model().a, &queries)
+        // group the batch by collection: one projection matmul per
+        // collection (each has its own model), insertion order kept so
+        // single-collection batches stay one contiguous matmul
+        let mut groups: Vec<(Arc<Collection>, Vec<usize>)> = Vec::new();
+        for (i, req) in batch.iter().enumerate() {
+            let name = req.spec.collection_name();
+            match groups.iter_mut().find(|(c, _)| c.name() == name) {
+                Some((_, idxs)) => idxs.push(i),
+                // submit_spec validated the name; a miss here means the
+                // registry changed under us, which it never does
+                None => match registry.get(name) {
+                    Some(c) => groups.push((Arc::clone(c), vec![i])),
+                    None => {}
+                },
             }
-            None => {
-                // single matmul on the batcher thread: Q (B, D) x A^T
-                let qm = rows_to_matrix(&queries);
-                let proj: Matrix = qm.matmul_nt(&index.model().a); // (B, d)
-                (0..bs).map(|i| proj.row(i).to_vec()).collect()
-            }
-        };
-        for (req, q_proj) in batch.into_iter().zip(projected.into_iter()) {
-            if work_tx
-                .send(WorkItem {
-                    req,
-                    q_proj,
-                    batch_size: bs,
-                })
-                .is_err()
-            {
-                return;
+        }
+        let mut slots: Vec<Option<Request>> = batch.into_iter().map(Some).collect();
+        for (coll, idxs) in groups {
+            // project the group as one matmul: Q (B, D) x A^T -> (B, d).
+            // The projection model is frozen even on live shards, so
+            // batching is mutation-oblivious.
+            let queries: Vec<Vec<f32>> = idxs
+                .iter()
+                .map(|&i| slots[i].as_ref().expect("grouped once").query.clone())
+                .collect();
+            let projected: Vec<Vec<f32>> = match pjrt.as_mut() {
+                Some(p) => {
+                    use crate::index::builder::BatchProjector;
+                    p.project(&coll.index.model().a, &queries)
+                }
+                None => {
+                    let qm = rows_to_matrix(&queries);
+                    let proj: Matrix = qm.matmul_nt(&coll.index.model().a); // (B, d)
+                    (0..queries.len()).map(|i| proj.row(i).to_vec()).collect()
+                }
+            };
+            for (&i, q_proj) in idxs.iter().zip(projected.into_iter()) {
+                let req = slots[i].take().expect("each request dispatched once");
+                if work_tx
+                    .send(WorkItem {
+                        req,
+                        q_proj,
+                        batch_size: bs,
+                        collection: Arc::clone(&coll),
+                    })
+                    .is_err()
+                {
+                    return;
+                }
             }
         }
     }
 }
 
 /// Pending-insert-log bound for the ingest lane: once this many inserts
-/// accumulate since the last consolidation, the lane folds the log even
-/// with zero tombstones (insert-only workloads must not grow the
-/// journal — and every snapshot's MUTLOG section — without bound).
+/// accumulate in a shard since its last consolidation, the lane folds
+/// that shard's log even with zero tombstones (insert-only workloads
+/// must not grow the journal — and every snapshot's MUTLOG section —
+/// without bound).
 const INGEST_LOG_FOLD: usize = 65_536;
 
-/// The ingest lane: apply mutations in submission order; rejections are
-/// counted, never fatal. After each mutation, consolidate if the
-/// tombstone fraction crossed the threshold (or the pending insert log
-/// outgrew [`INGEST_LOG_FOLD`]) — this runs here, on the ingest thread,
-/// so the search workers never pay for it (searches proceed
+/// The ingest lane: apply mutations in submission order, routed to the
+/// owning collection (and within it, to the owning shard by id hash);
+/// rejections are counted, never fatal. After each applied mutation the
+/// collection consolidates AT MOST ONE due shard
+/// ([`ShardedIndex::consolidate_one`]) — staggered compaction, on this
+/// thread, so the search workers never pay for it (searches proceed
 /// concurrently through the rewiring phase and block only for the
 /// final compaction swap).
 fn ingest_loop(
-    live: Arc<LiveIndex>,
-    mut_rx: Receiver<Mutation>,
+    mut_rx: Receiver<(Arc<Collection>, Mutation)>,
     stats: Arc<IngestStats>,
     consolidate_threshold: f64,
 ) {
-    while let Ok(m) = mut_rx.recv() {
+    while let Ok((coll, m)) = mut_rx.recv() {
         let applied = match m {
-            Mutation::Insert { ext_id, vector } => match live.insert(ext_id, &vector) {
+            Mutation::Insert { ext_id, vector } => match coll.index.insert(ext_id, &vector) {
                 Ok(_) => {
                     stats.inserts.fetch_add(1, Ordering::Relaxed);
                     true
                 }
                 Err(e) => {
-                    eprintln!("ingest: {e}");
+                    eprintln!("ingest[{}]: {e}", coll.name());
                     false
                 }
             },
-            Mutation::Delete { ext_id } => match live.delete(ext_id) {
+            Mutation::Delete { ext_id } => match coll.index.delete(ext_id) {
                 Ok(_) => {
                     stats.deletes.fetch_add(1, Ordering::Relaxed);
                     true
                 }
                 Err(e) => {
-                    eprintln!("ingest: {e}");
+                    eprintln!("ingest[{}]: {e}", coll.name());
                     false
                 }
             },
         };
+        coll.finish_mutation();
         if !applied {
             stats.errors.fetch_add(1, Ordering::Relaxed);
             continue;
         }
         // the log-size bound is independent of the tombstone trigger: a
         // disabled threshold must not disable the memory bound
-        let tombstones_due =
-            consolidate_threshold > 0.0 && live.tombstone_fraction() >= consolidate_threshold;
-        if tombstones_due || live.pending_inserts() >= INGEST_LOG_FOLD {
-            let report = live.consolidate();
+        if let Some((_shard, report)) =
+            coll.index.consolidate_one(consolidate_threshold, INGEST_LOG_FOLD)
+        {
             stats.consolidations.fetch_add(1, Ordering::Relaxed);
             stats
                 .consolidate_nanos
@@ -591,6 +710,7 @@ mod tests {
     use crate::config::{GraphParams, ProjectionKind, Similarity};
     use crate::index::builder::IndexBuilder;
     use crate::index::query::VectorIndex;
+    use crate::shard::{ShardSpec, TenantQuota};
     use crate::util::rng::Rng;
 
     fn build_index_sim(n: usize, dd: usize, d: usize, sim: Similarity) -> Arc<LeanVecIndex> {
@@ -627,7 +747,7 @@ mod tests {
         let mut rng = Rng::new(9);
         for _ in 0..50 {
             let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
-            engine.submit(q, 5);
+            engine.submit(q, 5).unwrap();
         }
         let responses = engine.drain(50);
         assert_eq!(responses.len(), 50);
@@ -665,7 +785,7 @@ mod tests {
     fn shutdown_joins_cleanly() {
         let index = build_index(100, 8, 4);
         let engine = Engine::start(index, EngineConfig::default());
-        engine.submit(vec![0.0; 8], 3);
+        engine.submit(vec![0.0; 8], 3).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(50));
         let rest = engine.shutdown();
         // the one response may have been drained here or not at all
@@ -721,7 +841,7 @@ mod tests {
             .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
             .collect();
         for q in &queries {
-            engine.submit(q.clone(), 5);
+            engine.submit(q.clone(), 5).unwrap();
         }
         let mut responses = engine.drain(queries.len());
         responses.sort_by_key(|r| r.id);
@@ -779,14 +899,14 @@ mod tests {
         );
         // mutations and searches interleaved on a running engine
         for i in 0..30u32 {
-            engine.submit_delete(i);
+            engine.submit_delete(i).unwrap();
         }
         for i in 0..30u32 {
             let v: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
-            engine.submit_insert(1000 + i, v);
+            engine.submit_insert(1000 + i, v).unwrap();
         }
         for q in rows.iter().take(20) {
-            engine.submit(q.clone(), 5);
+            engine.submit(q.clone(), 5).unwrap();
         }
         let responses = engine.drain(20);
         assert_eq!(responses.len(), 20);
@@ -818,6 +938,13 @@ mod tests {
         assert!(engine.live_index().is_none());
         let stats = engine.ingest_stats();
         assert_eq!(stats.inserts + stats.deletes + stats.errors, 0);
+        // mutations are rejected with an error, not a panic
+        assert_eq!(
+            engine.submit_delete(0),
+            Err(EngineError::NotLive {
+                collection: DEFAULT_COLLECTION.to_string()
+            })
+        );
         engine.shutdown();
     }
 
@@ -838,11 +965,13 @@ mod tests {
         );
         let mut rng = Rng::new(23);
         let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
-        engine.submit(q.clone(), 5); // engine defaults
-        engine.submit_spec(
-            q.clone(),
-            QuerySpec::top_k(5).with_window(80).with_rerank_window(120),
-        );
+        engine.submit(q.clone(), 5).unwrap(); // engine defaults
+        engine
+            .submit_spec(
+                q.clone(),
+                QuerySpec::top_k(5).with_window(80).with_rerank_window(120),
+            )
+            .unwrap();
         let mut responses = engine.drain(2);
         responses.sort_by_key(|r| r.id);
         engine.shutdown();
@@ -855,5 +984,210 @@ mod tests {
         assert_eq!(responses[0].ids, narrow.ids);
         // wider window scores strictly more vectors
         assert!(responses[1].stats.primary_scored > responses[0].stats.primary_scored);
+    }
+
+    #[test]
+    fn engine_routes_requests_by_collection_name() {
+        // two collections over DIFFERENT data; responses must come from
+        // the one named in the spec
+        let mut rng = Rng::new(41);
+        let rows_a: Vec<Vec<f32>> = (0..150)
+            .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let rows_b: Vec<Vec<f32>> = (0..150)
+            .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let configure = |b: IndexBuilder| {
+            let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+            gp.max_degree = 12;
+            gp.build_window = 30;
+            b.projection(ProjectionKind::Id).target_dim(8).graph_params(gp)
+        };
+        let sharded_a = ShardedIndex::build(
+            &rows_a,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(1),
+            1,
+            configure,
+        );
+        let sharded_b = ShardedIndex::build(
+            &rows_b,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(2),
+            1,
+            configure,
+        );
+        // keep plain handles for the direct-search oracle
+        let oracle_a = ShardedIndex::build(
+            &rows_a,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(1),
+            1,
+            configure,
+        );
+        let oracle_b = ShardedIndex::build(
+            &rows_b,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(2),
+            1,
+            configure,
+        );
+        let mut registry = CollectionRegistry::new();
+        registry.register(Collection::new("tenant-a", sharded_a));
+        registry.register(Collection::new("tenant-b", sharded_b));
+        let engine = Engine::start_collections(
+            registry,
+            EngineConfig {
+                workers: 2,
+                ..EngineConfig::default()
+            },
+        );
+        let q: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let ra = engine
+            .submit_spec(q.clone(), QuerySpec::top_k(5).with_collection("tenant-a"))
+            .unwrap();
+        let rb = engine
+            .submit_spec(q.clone(), QuerySpec::top_k(5).with_collection("tenant-b"))
+            .unwrap();
+        // the default collection is not registered on this engine
+        assert_eq!(
+            engine.submit(q.clone(), 5),
+            Err(EngineError::UnknownCollection(
+                DEFAULT_COLLECTION.to_string()
+            ))
+        );
+        assert_eq!(
+            engine.submit_spec(q.clone(), QuerySpec::top_k(5).with_collection("ghost")),
+            Err(EngineError::UnknownCollection("ghost".to_string()))
+        );
+        let mut responses = engine.drain(2);
+        responses.sort_by_key(|r| r.id);
+        engine.shutdown();
+        let direct_a = oracle_a.search_one(&Query::new(&q).k(5));
+        let direct_b = oracle_b.search_one(&Query::new(&q).k(5));
+        let by_id = |id: u64| responses.iter().find(|r| r.id == id).unwrap();
+        assert_eq!(by_id(ra).ids, direct_a.ids, "tenant-a served from a's data");
+        assert_eq!(by_id(rb).ids, direct_b.ids, "tenant-b served from b's data");
+        assert_ne!(direct_a.ids, direct_b.ids, "collections hold different data");
+    }
+
+    #[test]
+    fn quota_rejections_surface_as_errors_and_recover() {
+        let index = build_index(150, 16, 8);
+        let mut registry = CollectionRegistry::new();
+        registry.register(
+            Collection::new(DEFAULT_COLLECTION, ShardedIndex::from_single(index))
+                .with_quota(TenantQuota {
+                    max_inflight: 1,
+                    max_pending_mutations: 0,
+                }),
+        );
+        let engine = Engine::start_collections(
+            registry,
+            EngineConfig {
+                workers: 1,
+                ..EngineConfig::default()
+            },
+        );
+        let q = vec![0.5f32; 16];
+        engine.submit(q.clone(), 3).unwrap();
+        // quota admits one in-flight search; keep submitting until the
+        // first drains — every rejection must be the typed error
+        let mut rejections = 0u32;
+        loop {
+            match engine.submit(q.clone(), 3) {
+                Ok(_) => break,
+                Err(EngineError::QuotaExceeded { collection }) => {
+                    assert_eq!(collection, DEFAULT_COLLECTION);
+                    rejections += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        let drained = engine.drain(2);
+        assert_eq!(drained.len(), 2);
+        let counters = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+        assert_eq!(counters.submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(counters.rejected.load(Ordering::Relaxed) > 0, rejections > 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn quiesced_engine_rejects_mutations_with_error() {
+        let index = build_index(120, 8, 4);
+        let live = Arc::new(crate::mutate::LiveIndex::from_index(
+            Arc::try_unwrap(index).expect("sole owner"),
+        ));
+        let mut engine = Engine::start_live(live, EngineConfig::default());
+        engine.submit_insert(500, vec![0.1; 8]).unwrap();
+        engine.quiesce_mutations();
+        assert_eq!(
+            engine.submit_insert(501, vec![0.1; 8]),
+            Err(EngineError::Stopped)
+        );
+        assert_eq!(engine.submit_delete(500), Err(EngineError::Stopped));
+        // searches still work after the mutation lane closed
+        engine.submit(vec![0.1; 8], 3).unwrap();
+        assert_eq!(engine.drain(1).len(), 1);
+        assert_eq!(engine.ingest_stats().inserts, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn sharded_live_engine_staggers_consolidation_across_shards() {
+        let mut rng = Rng::new(7);
+        let rows: Vec<Vec<f32>> = (0..400)
+            .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        let configure = |b: IndexBuilder| {
+            let mut gp = GraphParams::for_similarity(Similarity::L2);
+            gp.max_degree = 12;
+            gp.build_window = 30;
+            b.projection(ProjectionKind::Id).target_dim(8).graph_params(gp)
+        };
+        let sharded = ShardedIndex::build_live(
+            &rows,
+            None,
+            Similarity::L2,
+            ShardSpec::new(3),
+            1,
+            configure,
+        );
+        let mut registry = CollectionRegistry::new();
+        registry.register(Collection::new(DEFAULT_COLLECTION, sharded));
+        let mut engine = Engine::start_collections(
+            registry,
+            EngineConfig {
+                workers: 2,
+                consolidate_threshold: 0.05,
+                ..EngineConfig::default()
+            },
+        );
+        for i in 0..80u32 {
+            engine.submit_delete(i).unwrap();
+        }
+        for q in rows.iter().take(10) {
+            engine.submit(q.clone(), 5).unwrap();
+        }
+        assert_eq!(engine.drain(10).len(), 10);
+        engine.quiesce_mutations();
+        let stats = engine.ingest_stats();
+        assert_eq!(stats.deletes, 80);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.consolidations >= 1, "{stats:?}");
+        let coll = engine.collection(DEFAULT_COLLECTION).unwrap();
+        // staggered passes keep every shard's fraction bounded near the
+        // threshold (one due shard compacts per mutation, so the final
+        // mutation may leave at most one shard marginally over it), and
+        // no deleted id is ever served
+        assert!(coll.index.max_tombstone_fraction() < 0.10, "shards kept compacted");
+        let r = coll.index.search_one(&Query::new(&rows[0]).k(10).window(60));
+        assert!(r.ids.iter().all(|&id| id >= 80), "deleted id served: {:?}", r.ids);
+        engine.shutdown();
     }
 }

@@ -6,6 +6,7 @@
 //! [`QueryStats`]: crate::index::query::QueryStats
 
 use super::protocol::Response;
+use crate::index::query::QueryStats;
 use crate::util::stats::Summary;
 
 /// p50/p99 of one per-query counter.
@@ -42,6 +43,10 @@ pub struct QueryStatsSummary {
     pub deleted_skipped: StatsPercentiles,
     /// total tombstone skips across the run (a quick liveness signal)
     pub deleted_skipped_total: usize,
+    /// every counter summed across the run ([`QueryStats::merge`] over
+    /// all responses) — the same reduction the sharded scatter-gather
+    /// applies per query, applied once more across the workload
+    pub totals: QueryStats,
 }
 
 impl QueryStatsSummary {
@@ -51,12 +56,14 @@ impl QueryStatsSummary {
         let mut filtered = Summary::new();
         let mut deleted = Summary::new();
         let mut deleted_total = 0usize;
+        let mut totals = QueryStats::default();
         for r in responses {
             hops.push(r.stats.hops as f64);
             bytes.push(r.stats.bytes_touched as f64);
             filtered.push(r.stats.filtered as f64);
             deleted.push(r.stats.deleted_skipped as f64);
             deleted_total += r.stats.deleted_skipped;
+            totals.merge(&r.stats);
         }
         QueryStatsSummary {
             hops: StatsPercentiles::of(&hops),
@@ -64,6 +71,7 @@ impl QueryStatsSummary {
             filtered: StatsPercentiles::of(&filtered),
             deleted_skipped: StatsPercentiles::of(&deleted),
             deleted_skipped_total: deleted_total,
+            totals,
         }
     }
 }
@@ -202,6 +210,11 @@ mod tests {
         assert!(qs.bytes_touched.p99 > 90_000.0);
         assert_eq!(qs.deleted_skipped_total, 30);
         assert_eq!(qs.filtered.p99, 0.0);
+        // the merged totals agree with a hand sum over the responses
+        assert_eq!(qs.totals.hops, (0..100).sum::<usize>());
+        assert_eq!(qs.totals.bytes_touched, (0..100).map(|i| 1000 * i).sum::<usize>());
+        assert_eq!(qs.totals.deleted_skipped, 30);
+        assert_eq!(qs.totals.filtered, 0);
         // the Display line carries the aggregates
         let text = format!("{m}");
         assert!(text.contains("deleted-skipped"), "{text}");

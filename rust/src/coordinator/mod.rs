@@ -1,23 +1,30 @@
-//! The serving coordinator: a batching query engine over a
-//! [`crate::index::LeanVecIndex`].
+//! The serving coordinator: a batching query engine over a registry of
+//! named collections ([`crate::shard::CollectionRegistry`]), each a
+//! sharded index ([`crate::shard::ShardedIndex`]).
 //!
 //! Request path (Python never runs here):
 //!
 //! ```text
 //! clients --> request channel --> batcher thread --> worker pool --> responses
-//!                                  (collects up to     (graph search +
-//!                                   max_batch or        rerank, one
-//!                                   max_wait, projects  SearchCtx per
-//!                                   queries A q as one  worker, zero
-//!                                   batched matmul —    steady-state
-//!                                   natively or through  allocations)
-//!                                   the PJRT project_q
+//!                                  (collects up to     (scatter-gather
+//!                                   max_batch or        across the
+//!                                   max_wait, groups    collection's
+//!                                   by collection,      shards: graph
+//!                                   projects each       search + rerank
+//!                                   group A q as one    with per-shard
+//!                                   batched matmul —    pooled contexts,
+//!                                   natively or through  stats-merging
+//!                                   the PJRT project_q  top-k reduce)
 //!                                   artifact)
 //! ```
 //!
 //! Batching exists to amortize the query projection (a batched matmul —
 //! exactly the granularity where PJRT dispatch pays off) and to give the
 //! workers cache-friendly runs; per-query state stays on the workers.
+//! Requests name their collection in [`protocol::QuerySpec`]; admission
+//! quotas are enforced per collection at `Engine::submit*` time, which
+//! returns [`engine::EngineError`] instead of panicking on a stopped
+//! engine, an unknown collection, or an exhausted quota.
 
 pub mod batcher;
 pub mod engine;
@@ -25,6 +32,6 @@ pub mod metrics;
 pub mod protocol;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, EngineConfig, IngestSnapshot, IngestStats, QueryProjectorKind};
+pub use engine::{Engine, EngineConfig, EngineError, IngestSnapshot, IngestStats, QueryProjectorKind};
 pub use metrics::{Metrics, QueryStatsSummary, ServeReport, StatsPercentiles};
 pub use protocol::{Mutation, QuerySpec, Request, Response};

@@ -24,6 +24,10 @@ pub struct QuerySpec {
     /// at spec construction — and shared across every request and
     /// worker that uses it, never rebuilt per query.
     pub allow: Option<Arc<HashSet<u32>>>,
+    /// collection this request targets; `None` routes to
+    /// [`DEFAULT_COLLECTION`](crate::shard::DEFAULT_COLLECTION).
+    /// `Arc` so a tenant's requests share one allocation of the name.
+    pub collection: Option<Arc<str>>,
 }
 
 impl QuerySpec {
@@ -56,6 +60,19 @@ impl QuerySpec {
     pub fn with_allow_set(mut self, ids: Arc<HashSet<u32>>) -> QuerySpec {
         self.allow = Some(ids);
         self
+    }
+
+    /// Route this request to a named collection instead of the default.
+    pub fn with_collection(mut self, name: impl AsRef<str>) -> QuerySpec {
+        self.collection = Some(Arc::from(name.as_ref()));
+        self
+    }
+
+    /// The collection name this spec routes to.
+    pub fn collection_name(&self) -> &str {
+        self.collection
+            .as_deref()
+            .unwrap_or(crate::shard::DEFAULT_COLLECTION)
     }
 }
 
@@ -137,8 +154,11 @@ mod tests {
         assert_eq!(s.k, 5);
         assert_eq!(s.window, Some(40));
         assert_eq!(s.rerank_window, Some(120), "split buffer travels");
-        let allow = s.allow.unwrap();
+        let allow = s.allow.clone().unwrap();
         assert_eq!(allow.len(), 3);
         assert!(allow.contains(&2) && !allow.contains(&4));
+        assert_eq!(s.collection_name(), crate::shard::DEFAULT_COLLECTION);
+        let s = s.with_collection("tenant-b");
+        assert_eq!(s.collection_name(), "tenant-b");
     }
 }

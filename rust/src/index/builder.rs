@@ -32,6 +32,24 @@ impl BatchProjector for NativeProjector {
     }
 }
 
+/// Cosine similarity operates on unit vectors: return a normalized copy
+/// of `rows` (then treat as inner product), `None` for the other
+/// similarities.
+fn cosine_normalized(rows: &[Vec<f32>], sim: Similarity) -> Option<Vec<Vec<f32>>> {
+    if sim != Similarity::Cosine {
+        return None;
+    }
+    Some(
+        rows.iter()
+            .map(|r| {
+                let mut v = r.clone();
+                normalize(&mut v);
+                v
+            })
+            .collect(),
+    )
+}
+
 /// Builder for [`LeanVecIndex`].
 pub struct IndexBuilder {
     projection: ProjectionKind,
@@ -134,39 +152,34 @@ impl IndexBuilder {
         self
     }
 
-    /// Build the index over `rows`; `learn_queries` is required for the
-    /// OOD learners. Cosine similarity normalizes a copy of the data.
-    pub fn build(
+    /// Phase (1) of [`IndexBuilder::build`] alone: train (or pass
+    /// through) the projection model over `rows` without building an
+    /// index. The sharded builder ([`crate::shard::ShardedIndex`])
+    /// trains one model over the *full* corpus and hands a clone to
+    /// every per-shard build via [`IndexBuilder::model`], so a single
+    /// batched query projection `A q` serves all shards.
+    pub fn train_model(
         mut self,
         rows: &[Vec<f32>],
         learn_queries: Option<&[Vec<f32>]>,
         sim: Similarity,
-    ) -> LeanVecIndex {
+    ) -> LeanVecModel {
         assert!(!rows.is_empty());
+        let owned_rows = cosine_normalized(rows, sim);
+        let rows: &[Vec<f32>] = owned_rows.as_deref().unwrap_or(rows);
+        self.resolve_model(rows, learn_queries)
+    }
+
+    /// Train the projection, or take the pre-supplied model. `rows` must
+    /// already be cosine-normalized when applicable.
+    fn resolve_model(
+        &mut self,
+        rows: &[Vec<f32>],
+        learn_queries: Option<&[Vec<f32>]>,
+    ) -> LeanVecModel {
         let dd = rows[0].len();
         let d = if self.target_dim == 0 { dd } else { self.target_dim };
-        let threads = self.build.resolved_threads();
-        let mut breakdown = BuildBreakdown::default();
-
-        // cosine -> normalize once, then treat as IP
-        let owned_rows: Option<Vec<Vec<f32>>> = if sim == Similarity::Cosine {
-            Some(
-                rows.iter()
-                    .map(|r| {
-                        let mut v = r.clone();
-                        normalize(&mut v);
-                        v
-                    })
-                    .collect(),
-            )
-        } else {
-            None
-        };
-        let rows: &[Vec<f32>] = owned_rows.as_deref().unwrap_or(rows);
-
-        // --- (1) train the projection
-        let t = std::time::Instant::now();
-        let model = match self.model.take() {
+        match self.model.take() {
             Some(m) => {
                 assert_eq!(m.input_dim(), dd);
                 m
@@ -186,7 +199,29 @@ impl IndexBuilder {
                     self.seed,
                 )
             }
-        };
+        }
+    }
+
+    /// Build the index over `rows`; `learn_queries` is required for the
+    /// OOD learners. Cosine similarity normalizes a copy of the data.
+    pub fn build(
+        mut self,
+        rows: &[Vec<f32>],
+        learn_queries: Option<&[Vec<f32>]>,
+        sim: Similarity,
+    ) -> LeanVecIndex {
+        assert!(!rows.is_empty());
+        let dd = rows[0].len();
+        let threads = self.build.resolved_threads();
+        let mut breakdown = BuildBreakdown::default();
+
+        // cosine -> normalize once, then treat as IP
+        let owned_rows = cosine_normalized(rows, sim);
+        let rows: &[Vec<f32>] = owned_rows.as_deref().unwrap_or(rows);
+
+        // --- (1) train the projection
+        let t = std::time::Instant::now();
+        let model = self.resolve_model(rows, learn_queries);
         breakdown.train_seconds = t.elapsed().as_secs_f64();
 
         // --- (2) project the database (chunked across build threads

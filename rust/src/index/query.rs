@@ -133,6 +133,20 @@ impl<'a> Query<'a> {
         self.window
     }
 
+    /// The raw `rerank_window` override, if set.
+    pub fn rerank_window_override(&self) -> Option<usize> {
+        self.rerank_window
+    }
+
+    /// This query with its filter predicate replaced (or cleared). Used
+    /// by the sharded scatter-gather layer to substitute a predicate in
+    /// the shard's local id namespace for the caller's external-id one;
+    /// every other knob travels unchanged.
+    pub(crate) fn replace_filter(mut self, pred: Option<FilterFn<'a>>) -> Query<'a> {
+        self.filter = pred;
+        self
+    }
+
     /// This query with `window` defaulted to `w` when unset (the
     /// [`SearchIndex`] IVF-PQ arm injects its per-index `nprobe` here).
     ///
@@ -207,6 +221,21 @@ pub struct QueryStats {
     /// (always 0 on a frozen index; populated by the live mutable index,
     /// [`crate::mutate::LiveIndex`])
     pub deleted_skipped: usize,
+}
+
+impl QueryStats {
+    /// Accumulate another query's counters into this one. The sharded
+    /// scatter-gather merge sums per-shard stats with this, so a fanned-
+    /// out query reports the *total* traffic it caused across shards;
+    /// the metrics layer uses it to aggregate run totals.
+    pub fn merge(&mut self, other: &QueryStats) {
+        self.primary_scored += other.primary_scored;
+        self.reranked += other.reranked;
+        self.bytes_touched += other.bytes_touched;
+        self.hops += other.hops;
+        self.filtered += other.filtered;
+        self.deleted_skipped += other.deleted_skipped;
+    }
 }
 
 /// What every search returns: ids and scores best-first, plus the
@@ -312,6 +341,61 @@ mod tests {
         let q = Query::new(&v).window(9).with_default_window(99);
         assert_eq!(q.window_override(), Some(9));
         assert_eq!(Query::new(&v).with_default_window(99).window_override(), Some(99));
+    }
+
+    #[test]
+    fn stats_merge_sums_every_field() {
+        let mut a = QueryStats {
+            primary_scored: 10,
+            reranked: 4,
+            bytes_touched: 1_000,
+            hops: 7,
+            filtered: 2,
+            deleted_skipped: 1,
+        };
+        let b = QueryStats {
+            primary_scored: 3,
+            reranked: 5,
+            bytes_touched: 250,
+            hops: 11,
+            filtered: 6,
+            deleted_skipped: 9,
+        };
+        a.merge(&b);
+        assert_eq!(a.primary_scored, 13);
+        assert_eq!(a.reranked, 9);
+        assert_eq!(a.bytes_touched, 1_250);
+        assert_eq!(a.hops, 18);
+        assert_eq!(a.filtered, 8);
+        assert_eq!(a.deleted_skipped, 10);
+    }
+
+    #[test]
+    fn stats_merge_identity_and_accumulation() {
+        // merging the default (all-zero) stats is a no-op
+        let mut a = QueryStats {
+            primary_scored: 1,
+            reranked: 2,
+            bytes_touched: 3,
+            hops: 4,
+            filtered: 5,
+            deleted_skipped: 6,
+        };
+        let before = a;
+        a.merge(&QueryStats::default());
+        assert_eq!(a, before);
+        // folding n copies multiplies every counter by n
+        let unit = a;
+        let mut total = QueryStats::default();
+        for _ in 0..4 {
+            total.merge(&unit);
+        }
+        assert_eq!(total.primary_scored, 4 * unit.primary_scored);
+        assert_eq!(total.reranked, 4 * unit.reranked);
+        assert_eq!(total.bytes_touched, 4 * unit.bytes_touched);
+        assert_eq!(total.hops, 4 * unit.hops);
+        assert_eq!(total.filtered, 4 * unit.filtered);
+        assert_eq!(total.deleted_skipped, 4 * unit.deleted_skipped);
     }
 
     #[test]

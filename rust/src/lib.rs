@@ -98,6 +98,7 @@ pub mod linalg;
 pub mod mutate;
 pub mod quant;
 pub mod runtime;
+pub mod shard;
 pub mod simd;
 pub mod util;
 

@@ -21,14 +21,18 @@
 //!               --threads T (build workers; 0 = all cores, 1 = serial),
 //!               --baseline leanvec|ivfpq|flat (search arm),
 //!               --nprobe N (IVF-PQ probe count),
-//!               --insert-rate/--delete-rate R (mutate churn, in [0,1])
+//!               --insert-rate/--delete-rate R (mutate churn, in [0,1]),
+//!               --shards N (hash-partitioned build/serve),
+//!               --collection NAME (serve: collection to register/route)
 //!
 //! Numeric flags are validated up front: garbage or out-of-range values
 //! produce a usage-style error instead of a panic (or silent fallback)
 //! deep in the stack.
 
 use leanvec::config::{BuildParams, Compression, ProjectionKind};
-use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, Metrics, QueryProjectorKind};
+use leanvec::coordinator::{
+    BatchPolicy, Engine, EngineConfig, Metrics, QueryProjectorKind, QuerySpec, ServeReport,
+};
 use leanvec::data::synth::{generate, paper_datasets, paper_target_dim};
 use leanvec::experiments::harness::ExpContext;
 use leanvec::index::builder::IndexBuilder;
@@ -38,6 +42,9 @@ use leanvec::index::persist::SnapshotMeta;
 use leanvec::index::query::{Query, VectorIndex};
 use leanvec::index::FlatIndex;
 use leanvec::mutate::LiveIndex;
+use leanvec::shard::{
+    Collection, CollectionRegistry, ShardSpec, ShardedIndex, DEFAULT_COLLECTION, MANIFEST_NAME,
+};
 use leanvec::util::cli::Args;
 use std::sync::Arc;
 
@@ -68,8 +75,11 @@ fn print_usage() {
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
          repro build --dataset rqa-768 --dim 160 --threads 0 --index rqa-768.leanvec\n\
+         repro build --dataset rqa-768 --shards 4 --threads 0 --index rqa-768.lvshards\n\
          repro search --index rqa-768.leanvec --window 50 --rerank-window 150\n\
          repro serve --index rqa-768.leanvec --queries 2000 --workers 2 --rerank-window 100\n\
+         repro serve --index rqa-768.lvshards --collection tenant-a --workers 4\n\
+         repro serve --dataset wit-512 --shards 4   (ad hoc sharded build + serve)\n\
          repro mutate --index rqa-768.leanvec --insert-rate 0.2 --delete-rate 0.1\n\
          repro search --dataset wit-512 --projection ood-es   (ad hoc, no snapshot)\n\
          repro search --dataset deep-256 --baseline ivfpq --nprobe 16\n\
@@ -80,7 +90,10 @@ fn print_usage() {
          --baseline leanvec|ivfpq|flat (ad hoc arms), --nprobe N (IVF-PQ)\n\
          mutate knobs: --insert-rate/--delete-rate R (fraction of the live\n\
          corpus churned, in [0,1]), --consolidate-threshold F (tombstone\n\
-         fraction triggering compaction; 0 disables that trigger), --queries N"
+         fraction triggering compaction; 0 disables that trigger), --queries N\n\
+         shard knobs: --shards N (hash-partition the corpus across N shards;\n\
+         build writes a shard directory + manifest, serve scatter-gathers),\n\
+         --collection NAME (serve: register/route under this collection name)"
     );
 }
 
@@ -269,8 +282,96 @@ fn search_params_from(args: &Args, defaults: SearchParams) -> anyhow::Result<Sea
     ))
 }
 
+/// Build a [`ShardedIndex`] from the same builder flags `build_index`
+/// reads, with one shared projection model trained over the full corpus
+/// (sharded builds train natively — the per-shard builds run on worker
+/// threads, where PJRT handles cannot travel).
+fn build_sharded_index(
+    args: &Args,
+    ctx: &ExpContext,
+    ds: &leanvec::data::synth::Dataset,
+    shards: usize,
+) -> anyhow::Result<ShardedIndex> {
+    anyhow::ensure!(
+        !ctx.use_pjrt,
+        "sharded builds train natively; drop --pjrt or --shards"
+    );
+    let proj = ProjectionKind::parse(&args.str("projection", "ood-es"))
+        .ok_or_else(|| anyhow::anyhow!("bad --projection"))?;
+    let d = args.usize("dim", paper_target_dim(&ds.name));
+    let primary = Compression::parse(&args.str("primary", "lvq8"))
+        .ok_or_else(|| anyhow::anyhow!("bad --primary"))?;
+    let secondary = Compression::parse(&args.str("secondary", "f16"))
+        .ok_or_else(|| anyhow::anyhow!("bad --secondary"))?;
+    let gp = ctx.graph_params(ds.similarity);
+    let seed = ctx.seed;
+    let threads = checked_usize_flag(args, "threads", 1)?;
+    let configure = move |b: IndexBuilder| {
+        b.projection(proj)
+            .target_dim(d)
+            .primary(primary)
+            .secondary(secondary)
+            .graph_params(gp)
+            .seed(seed)
+    };
+    Ok(ShardedIndex::build(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(shards),
+        threads,
+        configure,
+    ))
+}
+
+/// Build a sharded index and snapshot it as a per-shard directory with
+/// a CRC'd routing manifest (`repro build --shards N`).
+fn cmd_build_sharded(
+    args: &Args,
+    ctx: &ExpContext,
+    ds: &leanvec::data::synth::Dataset,
+    shards: usize,
+) -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+    let sharded = build_sharded_index(args, ctx, ds, shards)?;
+    println!(
+        "built {} shards over {} vectors in {:.2}s (shared model: {} -> {} dims)",
+        sharded.shards(),
+        sharded.len(),
+        t0.elapsed().as_secs_f64(),
+        sharded.model().input_dim(),
+        sharded.model().target_dim(),
+    );
+    let dir = args.str("index", &format!("{}.lvshards", ds.name));
+    let meta = SnapshotMeta {
+        dataset: ds.name.clone(),
+        seed: ctx.seed,
+        scale: ctx.scale,
+        build: BuildParams {
+            build_threads: checked_usize_flag(args, "threads", 1)?,
+        },
+        search_defaults: search_params_from(
+            args,
+            SearchParams {
+                window: 50,
+                rerank_window: 50,
+            },
+        )?,
+    };
+    let t0 = std::time::Instant::now();
+    let bytes = sharded.save_dir(std::path::Path::new(&dir), &meta)?;
+    println!(
+        "shard dir {dir}: {} shard files + manifest, {:.1} MiB written in {:.3}s",
+        sharded.shards(),
+        bytes as f64 / (1024.0 * 1024.0),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_build(args: &Args) -> anyhow::Result<()> {
     let ctx = ctx_from(args)?;
+    let shards = positive_usize(args, "shards", 1)?;
     let ds = dataset_from(args, &ctx)?;
     println!(
         "building index over {} ({} x {}, {})...",
@@ -279,6 +380,9 @@ fn cmd_build(args: &Args) -> anyhow::Result<()> {
         ds.dim,
         ds.similarity.name()
     );
+    if shards > 1 {
+        return cmd_build_sharded(args, &ctx, &ds, shards);
+    }
     let index = build_index(args, &ctx, &ds)?;
     let b = index.build_breakdown;
     println!(
@@ -481,23 +585,58 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let ctx = ctx_from(args)?;
     let k = positive_usize(args, "k", 10)?;
     let n_queries = positive_usize(args, "queries", 2000)?;
-    let (index, ds, default_params) = match args.opt_str("index") {
-        // serve path: snapshot in, engine up — no training code runs
+    let shards = positive_usize(args, "shards", 1)?;
+    let collection = args.str("collection", DEFAULT_COLLECTION);
+    let (sharded, ds, default_params) = match args.opt_str("index") {
+        // serve path: snapshot in, engine up — no training code runs.
+        // A directory with a shard manifest loads the whole sharded
+        // layout; a plain file loads as a single-shard collection.
         Some(path) => {
-            let (index, meta) = load_snapshot(&path)?;
-            let ds = dataset_for_snapshot(
-                args,
-                &ctx,
-                &meta,
-                Some(index.len()),
-                index.model.input_dim(),
-            )?;
-            (Arc::new(index), ds, meta.search_defaults)
+            let p = std::path::Path::new(&path);
+            if p.join(MANIFEST_NAME).is_file() {
+                let t0 = std::time::Instant::now();
+                let (sharded, meta) = ShardedIndex::load_dir(p)?;
+                println!(
+                    "loaded shard dir {path}: {} shards, {} vectors, {} -> {} dims, in {:.3}s",
+                    sharded.shards(),
+                    sharded.len(),
+                    sharded.model().input_dim(),
+                    sharded.model().target_dim(),
+                    t0.elapsed().as_secs_f64()
+                );
+                let expect_n = if sharded.is_live() {
+                    None // mutated live shards legitimately drift from the generator
+                } else {
+                    Some(sharded.len())
+                };
+                let ds = dataset_for_snapshot(
+                    args,
+                    &ctx,
+                    &meta,
+                    expect_n,
+                    sharded.model().input_dim(),
+                )?;
+                (sharded, ds, meta.search_defaults)
+            } else {
+                let (index, meta) = load_snapshot(&path)?;
+                let ds = dataset_for_snapshot(
+                    args,
+                    &ctx,
+                    &meta,
+                    Some(index.len()),
+                    index.model.input_dim(),
+                )?;
+                (ShardedIndex::from_single(Arc::new(index)), ds, meta.search_defaults)
+            }
         }
         None => {
             let ds = dataset_from(args, &ctx)?;
-            let index = Arc::new(build_index(args, &ctx, &ds)?);
-            (index, ds, SearchParams::default())
+            let sharded = if shards > 1 {
+                build_sharded_index(args, &ctx, &ds, shards)?
+            } else {
+                ShardedIndex::from_single(Arc::new(build_index(args, &ctx, &ds)?))
+            };
+            (sharded, ds, SearchParams::default())
         }
     };
     let truth =
@@ -509,13 +648,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let truth_rep: Vec<Vec<u32>> = (0..n_queries)
         .map(|i| truth[i % truth.len()].clone())
         .collect();
+    let params = search_params_from(args, default_params)?;
+    let wait_us = checked_usize_flag(args, "wait-us", 500)? as u64;
     let cfg = EngineConfig {
         workers: checked_usize_flag(args, "workers", 0)?.max(1),
         batch: BatchPolicy {
             max_batch: positive_usize(args, "batch", 64)?,
-            max_wait: std::time::Duration::from_micros(checked_usize_flag(args, "wait-us", 500)? as u64),
+            max_wait: std::time::Duration::from_micros(wait_us),
         },
-        search: search_params_from(args, default_params)?,
+        search: params,
         projector: if ctx.use_pjrt {
             QueryProjectorKind::Pjrt(leanvec::runtime::default_artifacts_dir())
         } else {
@@ -523,7 +664,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         ..EngineConfig::default()
     };
-    let (_responses, report) = Engine::run_workload(index, cfg, &queries, k, Some(&truth_rep));
+    let n_shards = sharded.shards();
+    let mut registry = CollectionRegistry::new();
+    registry.register(Collection::new(collection.clone(), sharded).with_defaults(params));
+    let engine = Engine::start_collections(registry, cfg);
+    println!("serving collection {collection:?} ({n_shards} shards)");
+    let t0 = std::time::Instant::now();
+    for q in &queries {
+        engine
+            .submit_spec(q.clone(), QuerySpec::top_k(k).with_collection(&collection))
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let mut responses = engine.drain(n_queries);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut leftovers = engine.shutdown();
+    responses.append(&mut leftovers);
+    responses.sort_by_key(|r| r.id);
+    let report = ServeReport::new(&responses, &truth_rep, k, wall);
     println!("{}", report.metrics);
     println!("recall@{k}: {:.3}", report.recall_at_k);
     Ok(())
@@ -598,23 +755,33 @@ fn cmd_mutate(args: &Args) -> anyhow::Result<()> {
     let steps = n_queries.max(n_inserts).max(n_deletes);
     for i in 0..steps {
         if ins * steps <= i * n_inserts && ins < n_inserts {
-            engine.submit_insert(ext_base + ins as u32, inserts[ins].clone());
+            engine
+                .submit_insert(ext_base + ins as u32, inserts[ins].clone())
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
             ins += 1;
         }
         if del * steps <= i * n_deletes && del < n_deletes {
-            engine.submit_delete(delete_ids[del]);
+            engine
+                .submit_delete(delete_ids[del])
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
             del += 1;
         }
         if i < n_queries {
-            engine.submit(ds.test_queries[i % ds.test_queries.len()].clone(), k);
+            engine
+                .submit(ds.test_queries[i % ds.test_queries.len()].clone(), k)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
         }
     }
     while ins < n_inserts {
-        engine.submit_insert(ext_base + ins as u32, inserts[ins].clone());
+        engine
+            .submit_insert(ext_base + ins as u32, inserts[ins].clone())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         ins += 1;
     }
     while del < n_deletes {
-        engine.submit_delete(delete_ids[del]);
+        engine
+            .submit_delete(delete_ids[del])
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
         del += 1;
     }
     let responses = engine.drain(n_queries);

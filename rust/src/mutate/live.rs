@@ -65,6 +65,10 @@ pub enum MutateError {
     /// The vector contains NaN or infinite components (they would
     /// poison the distance-based prune rule).
     NonFinite,
+    /// The target index holds no live shards — it was built or loaded
+    /// frozen ([`crate::shard::ShardedIndex`] routes mutations only when
+    /// its shards are [`LiveIndex`]es).
+    Frozen,
 }
 
 impl std::fmt::Display for MutateError {
@@ -77,6 +81,9 @@ impl std::fmt::Display for MutateError {
             }
             MutateError::NonFinite => {
                 write!(f, "insert: vector has NaN or infinite components")
+            }
+            MutateError::Frozen => {
+                write!(f, "index is frozen (no live shards accept mutations)")
             }
         }
     }
@@ -183,6 +190,35 @@ impl LiveIndex {
             writer: Mutex::new(()),
             link_ctx: Mutex::new(SearchCtx::new(n)),
         }
+    }
+
+    /// [`LiveIndex::from_index`] with an explicit external-id map:
+    /// internal slot `i` serves (and is addressed by) `ext_ids[i]`. The
+    /// sharded layer thaws each shard with the global ids of the rows it
+    /// was built over, so inserts/deletes route by external id and
+    /// results come back in the caller's namespace.
+    ///
+    /// Panics if `ext_ids` does not cover the index (one id per row) or
+    /// repeats an id.
+    pub fn from_index_with_ids(index: LeanVecIndex, ext_ids: Vec<u32>) -> LiveIndex {
+        let live = LiveIndex::from_index(index);
+        {
+            let mut core = live.core_write();
+            assert_eq!(
+                ext_ids.len(),
+                core.ext_of.len(),
+                "external-id map must cover every row"
+            );
+            let int_of: HashMap<u32, u32> = ext_ids
+                .iter()
+                .enumerate()
+                .map(|(i, &e)| (e, i as u32))
+                .collect();
+            assert_eq!(int_of.len(), ext_ids.len(), "external ids must be unique");
+            core.ext_of = ext_ids;
+            core.int_of = int_of;
+        }
+        live
     }
 
     pub(crate) fn core_read(&self) -> RwLockReadGuard<'_, Core> {

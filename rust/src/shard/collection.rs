@@ -1,0 +1,289 @@
+//! Named collections: the unit of multi-tenant serving.
+//!
+//! A [`Collection`] binds a name to a [`ShardedIndex`] plus the
+//! per-tenant serving policy — default [`SearchParams`] applied when a
+//! request leaves its knobs unset, and an admission [`TenantQuota`]
+//! (max in-flight searches, max pending mutations) enforced at
+//! `Engine::submit*` time so one tenant cannot starve the shared worker
+//! pool. The [`CollectionRegistry`] is the name → collection map the
+//! engine routes by; requests carry the collection name in their
+//! [`QuerySpec`](crate::coordinator::protocol::QuerySpec).
+
+use crate::index::leanvec_index::SearchParams;
+use crate::shard::sharded::ShardedIndex;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// The collection single-index engines serve under
+/// ([`Engine::start`](crate::coordinator::Engine::start) wraps its
+/// index into this name).
+pub const DEFAULT_COLLECTION: &str = "default";
+
+/// Per-tenant admission limits. `0` means unlimited (the default): the
+/// quota only rejects when a bound is explicitly configured.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// max searches in flight (submitted, response not yet drained)
+    pub max_inflight: usize,
+    /// max mutations queued on the ingest lane and not yet applied
+    pub max_pending_mutations: usize,
+}
+
+/// Live admission/usage counters for one collection, updated lock-free
+/// on the submit and completion paths.
+#[derive(Debug, Default)]
+pub struct AdmissionCounters {
+    /// searches submitted and not yet answered
+    pub inflight: AtomicUsize,
+    /// searches admitted over the collection's lifetime
+    pub submitted: AtomicU64,
+    /// submissions rejected by quota
+    pub rejected: AtomicU64,
+    /// mutations queued on the ingest lane and not yet applied
+    pub pending_mutations: AtomicUsize,
+    /// mutations admitted over the collection's lifetime
+    pub mutations: AtomicU64,
+}
+
+/// One named, sharded, quota-governed index.
+pub struct Collection {
+    name: String,
+    /// the sharded index this collection serves
+    pub index: ShardedIndex,
+    /// per-collection serving defaults (window / rerank window) applied
+    /// when a request's `QuerySpec` leaves them unset
+    pub defaults: SearchParams,
+    quota: TenantQuota,
+    admission: AdmissionCounters,
+}
+
+impl Collection {
+    /// A collection with default search params and no quota.
+    pub fn new(name: impl Into<String>, index: ShardedIndex) -> Collection {
+        Collection {
+            name: name.into(),
+            index,
+            defaults: SearchParams::default(),
+            quota: TenantQuota::default(),
+            admission: AdmissionCounters::default(),
+        }
+    }
+
+    /// Replace the per-collection search defaults.
+    pub fn with_defaults(mut self, defaults: SearchParams) -> Collection {
+        self.defaults = defaults;
+        self
+    }
+
+    /// Attach an admission quota.
+    pub fn with_quota(mut self, quota: TenantQuota) -> Collection {
+        self.quota = quota;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn quota(&self) -> TenantQuota {
+        self.quota
+    }
+
+    /// The live admission counters (observability).
+    pub fn admission(&self) -> &AdmissionCounters {
+        &self.admission
+    }
+
+    /// Try to admit one search. On success the in-flight gauge is
+    /// already incremented; the caller MUST pair it with
+    /// [`Collection::finish_search`] exactly once.
+    pub(crate) fn admit_search(&self) -> bool {
+        let limit = self.quota.max_inflight;
+        if limit == 0 {
+            self.admission.inflight.fetch_add(1, Ordering::AcqRel);
+        } else {
+            // CAS loop: never exceed the bound even under contention
+            let admitted = self
+                .admission
+                .inflight
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                    (cur < limit).then(|| cur + 1)
+                })
+                .is_ok();
+            if !admitted {
+                self.admission.rejected.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+        }
+        self.admission.submitted.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// A previously admitted search completed (its response was built).
+    pub(crate) fn finish_search(&self) {
+        self.admission.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Try to admit one mutation onto the ingest lane; pairs with
+    /// [`Collection::finish_mutation`].
+    pub(crate) fn admit_mutation(&self) -> bool {
+        let limit = self.quota.max_pending_mutations;
+        if limit == 0 {
+            self.admission.pending_mutations.fetch_add(1, Ordering::AcqRel);
+        } else {
+            let admitted = self
+                .admission
+                .pending_mutations
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                    (cur < limit).then(|| cur + 1)
+                })
+                .is_ok();
+            if !admitted {
+                self.admission.rejected.fetch_add(1, Ordering::Relaxed);
+                return false;
+            }
+        }
+        self.admission.mutations.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// A previously admitted mutation was applied (or dropped).
+    pub(crate) fn finish_mutation(&self) {
+        self.admission.pending_mutations.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Name → [`Collection`] map the engine serves. Built up-front and
+/// immutable while serving (collections are added between engine runs),
+/// so lookups are lock-free `HashMap` reads through an `Arc`.
+#[derive(Default)]
+pub struct CollectionRegistry {
+    by_name: HashMap<String, Arc<Collection>>,
+}
+
+impl CollectionRegistry {
+    pub fn new() -> CollectionRegistry {
+        CollectionRegistry::default()
+    }
+
+    /// Add a collection; replaces any previous one with the same name.
+    pub fn register(&mut self, collection: Collection) -> &mut Self {
+        self.by_name
+            .insert(collection.name.clone(), Arc::new(collection));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<Collection>> {
+        self.by_name.get(name)
+    }
+
+    /// Registered names, sorted (deterministic display order).
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.by_name.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    pub fn collections(&self) -> impl Iterator<Item = &Arc<Collection>> {
+        self.by_name.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Whether any registered collection has live (mutable) shards —
+    /// decides if the engine starts an ingest lane.
+    pub fn any_live(&self) -> bool {
+        self.by_name.values().any(|c| c.index.is_live())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, ProjectionKind, Similarity};
+    use crate::index::builder::IndexBuilder;
+    use crate::shard::sharded::ShardSpec;
+    use crate::util::rng::Rng;
+
+    fn tiny_index() -> ShardedIndex {
+        let mut rng = Rng::new(11);
+        let rows: Vec<Vec<f32>> = (0..80)
+            .map(|_| (0..8).map(|_| rng.gaussian_f32()).collect())
+            .collect();
+        ShardedIndex::build(
+            &rows,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(2),
+            1,
+            |b: IndexBuilder| {
+                let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+                gp.max_degree = 8;
+                gp.build_window = 16;
+                b.projection(ProjectionKind::Id).target_dim(4).graph_params(gp)
+            },
+        )
+    }
+
+    #[test]
+    fn registry_routes_by_name() {
+        let mut reg = CollectionRegistry::new();
+        reg.register(Collection::new("tenant-a", tiny_index()));
+        reg.register(Collection::new("tenant-b", tiny_index()).with_defaults(SearchParams {
+            window: 17,
+            rerank_window: 23,
+        }));
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["tenant-a".to_string(), "tenant-b".to_string()]);
+        assert!(reg.get("tenant-a").is_some());
+        assert!(reg.get("missing").is_none());
+        assert_eq!(reg.get("tenant-b").unwrap().defaults.window, 17);
+        assert!(!reg.any_live(), "frozen shards");
+    }
+
+    #[test]
+    fn unlimited_quota_always_admits() {
+        let c = Collection::new("t", tiny_index());
+        for _ in 0..100 {
+            assert!(c.admit_search());
+        }
+        assert_eq!(c.admission().inflight.load(Ordering::Acquire), 100);
+        assert_eq!(c.admission().submitted.load(Ordering::Relaxed), 100);
+        assert_eq!(c.admission().rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn inflight_quota_rejects_at_bound_and_recovers() {
+        let c = Collection::new("t", tiny_index()).with_quota(TenantQuota {
+            max_inflight: 2,
+            max_pending_mutations: 0,
+        });
+        assert!(c.admit_search());
+        assert!(c.admit_search());
+        assert!(!c.admit_search(), "third in-flight search must be rejected");
+        assert_eq!(c.admission().rejected.load(Ordering::Relaxed), 1);
+        c.finish_search();
+        assert!(c.admit_search(), "capacity freed by completion");
+        assert_eq!(c.admission().inflight.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn mutation_quota_is_independent_of_search_quota() {
+        let c = Collection::new("t", tiny_index()).with_quota(TenantQuota {
+            max_inflight: 1,
+            max_pending_mutations: 1,
+        });
+        assert!(c.admit_search());
+        assert!(c.admit_mutation(), "search quota must not consume mutation quota");
+        assert!(!c.admit_mutation());
+        c.finish_mutation();
+        assert!(c.admit_mutation());
+    }
+}

@@ -1,0 +1,560 @@
+//! Sharded snapshot persistence: one snapshot file per shard plus a
+//! small CRC'd manifest, written into a directory.
+//!
+//! ```text
+//! <dir>/MANIFEST.lvshard     routing + integrity (spec below)
+//! <dir>/shard-000.leanvec    shard 0 snapshot
+//! <dir>/shard-001.leanvec    shard 1 snapshot
+//! ...
+//! ```
+//!
+//! Each shard file is a standard snapshot (`docs/SNAPSHOT_FORMAT.md`):
+//! live shards go through [`LiveIndex::save`]/[`LiveIndex::load`]
+//! unchanged; a frozen shard with a non-identity external-id map is
+//! written as a pristine live snapshot ([`FORMAT_VERSION_LIVE`] with an
+//! all-zero `TOMBS` bitmap, the shard's `IDMAP`, and an empty `MUTLOG`)
+//! — the id map *reshapes the meaning* of result ids, so a frozen-only
+//! reader ([`LeanVecIndex::load`]) rejects the file loudly instead of
+//! serving shard-local ids as if they were external. The identity
+//! single-shard case writes a plain version-1 snapshot, byte-identical
+//! to [`LeanVecIndex::save`].
+//!
+//! Manifest byte layout (all integers little-endian; full spec with a
+//! worked example in `docs/SNAPSHOT_FORMAT.md`):
+//!
+//! ```text
+//! magic "LVSHARD\0"                      8 bytes
+//! manifest version u32                   currently 1
+//! kind u8                                0 = frozen shards, 1 = live
+//! shard count u32
+//! hash seed u64                          routing-hash seed (ShardSpec)
+//! per shard, in shard order:
+//!   file name     u64 len + bytes        relative to the directory
+//!   file crc32    u32                    CRC-32 of the whole shard file
+//!   rows          u64                    row count (slots) in the shard
+//! crc32 u32                              CRC-32 of all preceding bytes
+//! ```
+//!
+//! Saving is byte-deterministic and save → load → save reproduces every
+//! file exactly; the loaded index serves bit-identically (ids, scores,
+//! [`QueryStats`]) because each shard file round-trips bit-identically
+//! and the manifest restores the exact routing spec.
+//!
+//! [`LeanVecIndex::save`]: crate::index::LeanVecIndex::save
+//! [`LeanVecIndex::load`]: crate::index::LeanVecIndex::load
+//! [`LiveIndex::save`]: crate::mutate::LiveIndex
+//! [`FORMAT_VERSION_LIVE`]: crate::index::persist::FORMAT_VERSION_LIVE
+//! [`QueryStats`]: crate::index::query::QueryStats
+
+use crate::data::io::{bin, crc32};
+use crate::index::persist::{
+    core_sections, load_core_sections, read_sections_any, tag_str, write_sections_versioned,
+    MetaFacts, RawSection, SnapshotError, SnapshotMeta, FORMAT_VERSION_LIVE, SECTION_IDMAP,
+    SECTION_MUTLOG, SECTION_TOMBS,
+};
+use crate::index::leanvec_index::LeanVecIndex;
+use crate::mutate::LiveIndex;
+use crate::shard::sharded::{FrozenShard, ShardSet, ShardSpec, ShardedIndex};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// First 8 bytes of every shard manifest.
+pub const MANIFEST_MAGIC: [u8; 8] = *b"LVSHARD\0";
+
+/// Current manifest format version.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// Manifest file name inside a sharded snapshot directory.
+pub const MANIFEST_NAME: &str = "MANIFEST.lvshard";
+
+fn corrupt(what: impl Into<String>) -> SnapshotError {
+    SnapshotError::Corrupt(what.into())
+}
+
+fn shard_file_name(i: usize) -> String {
+    format!("shard-{i:03}.leanvec")
+}
+
+/// Write a frozen shard's snapshot. Identity id map -> plain version-1
+/// file; non-identity -> pristine live layout stamped
+/// [`FORMAT_VERSION_LIVE`] so version-1 readers reject it (see the
+/// module docs).
+fn save_frozen_shard(
+    shard: &FrozenShard,
+    path: &Path,
+    meta: &SnapshotMeta,
+) -> Result<u64, SnapshotError> {
+    let ix: &LeanVecIndex = &shard.index;
+    if shard.ext_of.is_empty() {
+        return ix.save(path, meta);
+    }
+    let facts = MetaFacts {
+        sim: ix.sim,
+        projection: ix.model.kind,
+        primary: ix.primary_compression,
+        secondary: ix.secondary_compression,
+        n: ix.len(),
+        input_dim: ix.model.input_dim(),
+        target_dim: ix.model.target_dim(),
+        breakdown: ix.build_breakdown,
+    };
+    let mut sections = core_sections(
+        meta,
+        &facts,
+        &ix.model,
+        ix.primary.as_ref(),
+        ix.secondary.as_ref(),
+        &ix.graph,
+    );
+    let n = ix.len();
+    // TOMBS: all-zero bitmap (nothing is deleted in a frozen shard)
+    let mut tombs = Vec::new();
+    bin::put_u64(&mut tombs, n as u64);
+    let canonical = n.div_ceil(64);
+    bin::put_u64(&mut tombs, canonical as u64);
+    tombs.extend(std::iter::repeat(0u8).take(canonical * 8));
+    // IDMAP: local slot -> external id
+    let mut idmap = Vec::new();
+    bin::put_u32s(&mut idmap, &shard.ext_of);
+    // MUTLOG: zero counters, empty insert log
+    let mut log = Vec::new();
+    bin::put_u64(&mut log, 0);
+    bin::put_u64(&mut log, 0);
+    bin::put_u64(&mut log, 0);
+    bin::put_u64(&mut log, 0);
+    sections.push(RawSection {
+        tag: SECTION_TOMBS,
+        bytes: tombs,
+    });
+    sections.push(RawSection {
+        tag: SECTION_IDMAP,
+        bytes: idmap,
+    });
+    sections.push(RawSection {
+        tag: SECTION_MUTLOG,
+        bytes: log,
+    });
+    write_sections_versioned(path, &sections, FORMAT_VERSION_LIVE)
+}
+
+/// Load one frozen shard: a version-1 file is an identity-mapped shard;
+/// a live-stamped file must be pristine (all-zero tombstones) and
+/// contributes its `IDMAP` as the shard's external-id map.
+fn load_frozen_shard(path: &Path) -> Result<(Arc<LeanVecIndex>, Vec<u32>, SnapshotMeta), SnapshotError> {
+    let (version, sections) = read_sections_any(path)?;
+    let (index, meta) = load_core_sections(&sections)?;
+    if version < FORMAT_VERSION_LIVE {
+        return Ok((Arc::new(index), Vec::new(), meta));
+    }
+    let find = |tag: [u8; 8]| -> Result<&[u8], SnapshotError> {
+        sections
+            .iter()
+            .find(|s| s.tag == tag)
+            .map(|s| s.bytes.as_slice())
+            .ok_or_else(|| SnapshotError::MissingSection(tag_str(&tag)))
+    };
+    // a frozen manifest must never point at a file with tombstones or a
+    // pending mutation log — that state belongs to a live shard set
+    let mut cur = bin::Cursor::new(find(SECTION_TOMBS)?);
+    let slots = cur.get_u64()? as usize;
+    if slots != index.len() {
+        return Err(corrupt(format!(
+            "shard tombstone bitmap covers {slots} slots, stores hold {}",
+            index.len()
+        )));
+    }
+    let word_count = cur.get_u64()? as usize;
+    for _ in 0..word_count {
+        if cur.get_u64()? != 0 {
+            return Err(corrupt(
+                "frozen shard manifest points at a snapshot with tombstones",
+            ));
+        }
+    }
+    let mut cur = bin::Cursor::new(find(SECTION_IDMAP)?);
+    let ext_of = cur.get_u32s()?;
+    if ext_of.len() != index.len() || cur.remaining() != 0 {
+        return Err(corrupt("shard id map length disagrees with stores"));
+    }
+    Ok((Arc::new(index), ext_of, meta))
+}
+
+impl ShardedIndex {
+    /// Snapshot the whole sharded index into `dir`: one file per shard
+    /// plus [`MANIFEST_NAME`] (see the module docs for the layout).
+    /// Returns total bytes written. The directory is created if absent;
+    /// shard files are written first, the manifest last (each write is
+    /// atomic-by-rename), so a crash mid-save never leaves a manifest
+    /// pointing at missing or truncated shards.
+    pub fn save_dir(&self, dir: &Path, meta: &SnapshotMeta) -> Result<u64, SnapshotError> {
+        std::fs::create_dir_all(dir).map_err(SnapshotError::Io)?;
+        let spec = self.spec();
+        let (kind, rows): (u8, Vec<u64>) = match self.set() {
+            ShardSet::Frozen(shards) => (0, shards.iter().map(|s| s.index.len() as u64).collect()),
+            ShardSet::Live(shards) => (1, shards.iter().map(|s| s.total_slots() as u64).collect()),
+        };
+        let mut total = 0u64;
+        let mut entries: Vec<(String, u32, u64)> = Vec::with_capacity(spec.shards);
+        for i in 0..spec.shards {
+            let name = shard_file_name(i);
+            let path = dir.join(&name);
+            total += match self.set() {
+                ShardSet::Frozen(shards) => save_frozen_shard(&shards[i], &path, meta)?,
+                ShardSet::Live(shards) => shards[i].save(&path, meta)?,
+            };
+            // checksum the bytes as written: load_dir verifies the same
+            // CRC before parsing, so shard-file bit rot (or a manifest
+            // pointing at the wrong generation) is caught up front
+            let bytes = std::fs::read(&path).map_err(SnapshotError::Io)?;
+            entries.push((name, crc32(&bytes), rows[i]));
+        }
+
+        let mut m = Vec::new();
+        m.extend_from_slice(&MANIFEST_MAGIC);
+        bin::put_u32(&mut m, MANIFEST_VERSION);
+        bin::put_u8(&mut m, kind);
+        bin::put_u32(&mut m, spec.shards as u32);
+        bin::put_u64(&mut m, spec.hash_seed);
+        for (name, crc, n) in &entries {
+            bin::put_bytes(&mut m, name.as_bytes());
+            bin::put_u32(&mut m, *crc);
+            bin::put_u64(&mut m, *n);
+        }
+        let trailer = crc32(&m);
+        bin::put_u32(&mut m, trailer);
+
+        // same atomic write discipline as the snapshot sections
+        let path = dir.join(MANIFEST_NAME);
+        let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
+        let write_all = || -> std::io::Result<()> {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&m)?;
+            f.sync_all()?;
+            Ok(())
+        };
+        if let Err(e) = write_all() {
+            std::fs::remove_file(&tmp).ok();
+            return Err(SnapshotError::Io(e));
+        }
+        std::fs::rename(&tmp, &path).map_err(SnapshotError::Io)?;
+        Ok(total + m.len() as u64)
+    }
+
+    /// Load a sharded snapshot directory written by
+    /// [`ShardedIndex::save_dir`]. The loaded index routes and serves
+    /// bit-identically to the saved one. Returns the [`SnapshotMeta`]
+    /// recorded with shard 0.
+    pub fn load_dir(dir: &Path) -> Result<(ShardedIndex, SnapshotMeta), SnapshotError> {
+        let m = std::fs::read(dir.join(MANIFEST_NAME)).map_err(SnapshotError::Io)?;
+        if m.len() < 8 || m[..8] != MANIFEST_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        if m.len() < 12 {
+            return Err(SnapshotError::Truncated("shard manifest".into()));
+        }
+        let body = &m[..m.len() - 4];
+        let stored = u32::from_le_bytes(m[m.len() - 4..].try_into().unwrap());
+        if crc32(body) != stored {
+            return Err(SnapshotError::ChecksumMismatch {
+                section: "shard manifest".into(),
+            });
+        }
+        let mut cur = bin::Cursor::new(&body[8..]);
+        let version = cur.get_u32()?;
+        if version == 0 || version > MANIFEST_VERSION {
+            return Err(SnapshotError::UnsupportedVersion {
+                found: version,
+                supported: MANIFEST_VERSION,
+            });
+        }
+        let kind = cur.get_u8()?;
+        if kind > 1 {
+            return Err(corrupt(format!("unknown shard kind {kind}")));
+        }
+        let count = cur.get_u32()? as usize;
+        if count == 0 {
+            return Err(corrupt("shard manifest lists zero shards"));
+        }
+        let hash_seed = cur.get_u64()?;
+        let mut entries: Vec<(PathBuf, u32, u64)> = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_bytes = cur.get_bytes()?;
+            let name = String::from_utf8(name_bytes)
+                .map_err(|_| corrupt("shard file name is not UTF-8"))?;
+            let crc = cur.get_u32()?;
+            let n = cur.get_u64()?;
+            entries.push((dir.join(name), crc, n));
+        }
+        if cur.remaining() != 0 {
+            return Err(corrupt("trailing bytes in shard manifest"));
+        }
+        let spec = ShardSpec {
+            shards: count,
+            hash_seed,
+        };
+
+        // verify every shard file against its manifest CRC up front, so
+        // a mixed-generation directory fails before anything is served
+        for (path, crc, _) in &entries {
+            let bytes = std::fs::read(path).map_err(SnapshotError::Io)?;
+            if crc32(&bytes) != *crc {
+                return Err(SnapshotError::ChecksumMismatch {
+                    section: path
+                        .file_name()
+                        .map(|n| n.to_string_lossy().into_owned())
+                        .unwrap_or_else(|| "shard file".into()),
+                });
+            }
+        }
+
+        let mut meta0: Option<SnapshotMeta> = None;
+        if kind == 0 {
+            let mut parts = Vec::with_capacity(count);
+            for (path, _, rows) in &entries {
+                let (index, ext_of, meta) = load_frozen_shard(path)?;
+                if index.len() as u64 != *rows {
+                    return Err(corrupt(format!(
+                        "shard holds {} rows, manifest says {rows}",
+                        index.len()
+                    )));
+                }
+                if meta0.is_none() {
+                    meta0 = Some(meta);
+                }
+                parts.push((index, ext_of));
+            }
+            Ok((
+                ShardedIndex::from_frozen_parts(parts, spec),
+                meta0.unwrap_or_default(),
+            ))
+        } else {
+            let mut shards = Vec::with_capacity(count);
+            for (path, _, rows) in &entries {
+                let (live, meta) = LiveIndex::load(path)?;
+                if live.total_slots() as u64 != *rows {
+                    return Err(corrupt(format!(
+                        "shard holds {} slots, manifest says {rows}",
+                        live.total_slots()
+                    )));
+                }
+                if meta0.is_none() {
+                    meta0 = Some(meta);
+                }
+                shards.push(Arc::new(live));
+            }
+            Ok((
+                ShardedIndex::from_live_shards(shards, spec),
+                meta0.unwrap_or_default(),
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, ProjectionKind, Similarity};
+    use crate::index::builder::IndexBuilder;
+    use crate::index::query::{Query, VectorIndex};
+    use crate::util::rng::Rng;
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    fn configure(b: IndexBuilder) -> IndexBuilder {
+        let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+        gp.max_degree = 12;
+        gp.build_window = 30;
+        b.projection(ProjectionKind::Id).target_dim(8).graph_params(gp)
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "leanvec-shard-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    #[test]
+    fn frozen_dir_roundtrip_serves_bit_identically() {
+        let x = rows(500, 16, 21);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(4),
+            1,
+            configure,
+        );
+        let dir = tmp_dir("frozen");
+        ix.save_dir(&dir, &SnapshotMeta::default()).unwrap();
+        let (back, _meta) = ShardedIndex::load_dir(&dir).unwrap();
+        assert_eq!(back.shards(), 4);
+        assert_eq!(back.spec(), ix.spec());
+        for probe in 0..10usize {
+            let q = Query::new(&x[probe * 50]).k(10).window(40);
+            let a = ix.search_one(&q);
+            let b = back.search_one(&q);
+            assert_eq!(a, b, "loaded sharded index must serve bit-identically");
+        }
+        // byte-determinism: re-saving the loaded index reproduces every
+        // file, manifest included
+        let dir2 = tmp_dir("frozen2");
+        back.save_dir(&dir2, &SnapshotMeta::default()).unwrap();
+        for i in 0..4 {
+            let f1 = std::fs::read(dir.join(shard_file_name(i))).unwrap();
+            let f2 = std::fs::read(dir2.join(shard_file_name(i))).unwrap();
+            assert_eq!(f1, f2, "shard {i} re-save must be byte-identical");
+        }
+        assert_eq!(
+            std::fs::read(dir.join(MANIFEST_NAME)).unwrap(),
+            std::fs::read(dir2.join(MANIFEST_NAME)).unwrap()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn live_dir_roundtrip_preserves_mutation_state() {
+        let x = rows(300, 16, 22);
+        let ix = ShardedIndex::build_live(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(3),
+            1,
+            configure,
+        );
+        for id in 0..30u32 {
+            ix.delete(id).unwrap();
+        }
+        let v = rows(1, 16, 23).pop().unwrap();
+        ix.insert(900, &v).unwrap();
+        let dir = tmp_dir("live");
+        ix.save_dir(&dir, &SnapshotMeta::default()).unwrap();
+        let (back, _meta) = ShardedIndex::load_dir(&dir).unwrap();
+        assert!(back.is_live());
+        assert_eq!(back.spec(), ix.spec());
+        assert_eq!(VectorIndex::len(&back), 271);
+        assert!(!back.contains(5), "deleted id must stay deleted after reload");
+        assert!(back.contains(900), "inserted id must survive reload");
+        for probe in [40usize, 120, 280] {
+            let q = Query::new(&x[probe]).k(10).window(60);
+            assert_eq!(ix.search_one(&q), back.search_one(&q));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_corruption_and_skew() {
+        let x = rows(200, 16, 24);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(2),
+            1,
+            configure,
+        );
+        let dir = tmp_dir("corrupt");
+        ix.save_dir(&dir, &SnapshotMeta::default()).unwrap();
+
+        // flip a manifest byte -> checksum mismatch
+        let mpath = dir.join(MANIFEST_NAME);
+        let good = std::fs::read(&mpath).unwrap();
+        let mut bad = good.clone();
+        bad[10] ^= 0xFF;
+        std::fs::write(&mpath, &bad).unwrap();
+        assert!(matches!(
+            ShardedIndex::load_dir(&dir),
+            Err(SnapshotError::ChecksumMismatch { .. }) | Err(SnapshotError::UnsupportedVersion { .. })
+        ));
+        std::fs::write(&mpath, &good).unwrap();
+
+        // flip a shard-file byte -> per-file CRC catches it before parse
+        let spath = dir.join(shard_file_name(1));
+        let sgood = std::fs::read(&spath).unwrap();
+        let mut sbad = sgood.clone();
+        let last = sbad.len() - 1;
+        sbad[last] ^= 0xFF;
+        std::fs::write(&spath, &sbad).unwrap();
+        assert!(matches!(
+            ShardedIndex::load_dir(&dir),
+            Err(SnapshotError::ChecksumMismatch { .. })
+        ));
+        std::fs::write(&spath, &sgood).unwrap();
+
+        // wrong magic -> BadMagic
+        let mut nomagic = good.clone();
+        nomagic[0] = b'X';
+        std::fs::write(&mpath, &nomagic).unwrap();
+        assert!(matches!(
+            ShardedIndex::load_dir(&dir),
+            Err(SnapshotError::BadMagic)
+        ));
+        std::fs::write(&mpath, &good).unwrap();
+
+        // a missing shard file fails with Io
+        std::fs::remove_file(&spath).unwrap();
+        assert!(matches!(
+            ShardedIndex::load_dir(&dir),
+            Err(SnapshotError::Io(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn frozen_reader_rejects_id_mapped_shard_file() {
+        // a sharded (non-identity) shard file is stamped with the live
+        // format version, so the frozen-only reader must refuse it
+        let x = rows(200, 16, 25);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(2),
+            1,
+            configure,
+        );
+        let dir = tmp_dir("reject");
+        ix.save_dir(&dir, &SnapshotMeta::default()).unwrap();
+        let err = LeanVecIndex::load(&dir.join(shard_file_name(0))).unwrap_err();
+        assert!(
+            matches!(err, SnapshotError::UnsupportedVersion { found: 2, .. }),
+            "got {err:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn single_identity_shard_writes_plain_v1_snapshot() {
+        let x = rows(150, 16, 26);
+        let single = Arc::new(configure(IndexBuilder::new()).build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+        ));
+        let dir = tmp_dir("single");
+        // direct save of the same index for byte comparison
+        std::fs::create_dir_all(&dir).unwrap();
+        let direct = dir.join("direct.leanvec");
+        single.save(&direct, &SnapshotMeta::default()).unwrap();
+        let ix = ShardedIndex::from_single(single);
+        ix.save_dir(&dir, &SnapshotMeta::default()).unwrap();
+        assert_eq!(
+            std::fs::read(dir.join(shard_file_name(0))).unwrap(),
+            std::fs::read(&direct).unwrap(),
+            "identity single shard must be byte-identical to LeanVecIndex::save"
+        );
+        // and the frozen-only reader accepts it
+        assert!(LeanVecIndex::load(&dir.join(shard_file_name(0))).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

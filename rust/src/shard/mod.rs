@@ -1,0 +1,32 @@
+//! Sharded, multi-collection serving: the scale-out layer.
+//!
+//! One node stops being "one engine, one index" here. The layer stacks
+//! three pieces:
+//!
+//! * [`sharded`] — [`ShardedIndex`]: external ids hash-partitioned
+//!   across N shards (each a frozen [`LeanVecIndex`] or a live
+//!   [`LiveIndex`]), searched by concurrent scatter-gather with a
+//!   stats-merging top-k reduce, mutated by per-id hash routing with
+//!   consolidation staggered one shard at a time. One projection model
+//!   is trained over the full corpus and shared by every shard, so the
+//!   engine's single batched query projection serves all of them.
+//! * [`collection`] — [`Collection`] / [`CollectionRegistry`]: named
+//!   tenants, each a `ShardedIndex` plus per-collection search defaults
+//!   and admission quotas. The serving engine routes requests by
+//!   collection name instead of holding one index.
+//! * [`manifest`] — per-shard snapshot files plus a CRC'd routing
+//!   manifest; [`ShardedIndex::save_dir`] / [`ShardedIndex::load_dir`]
+//!   round-trip the whole layout bit-identically.
+//!
+//! [`LeanVecIndex`]: crate::index::LeanVecIndex
+//! [`LiveIndex`]: crate::mutate::LiveIndex
+
+pub mod collection;
+pub mod manifest;
+pub mod sharded;
+
+pub use collection::{
+    AdmissionCounters, Collection, CollectionRegistry, TenantQuota, DEFAULT_COLLECTION,
+};
+pub use manifest::{MANIFEST_MAGIC, MANIFEST_NAME, MANIFEST_VERSION};
+pub use sharded::{merge_top_k, shard_of, ShardSpec, ShardedIndex, DEFAULT_HASH_SEED};

@@ -1,0 +1,869 @@
+//! [`ShardedIndex`]: hash-partitioned scatter-gather over N shards.
+//!
+//! External ids are routed to shards by a seeded splitmix hash
+//! ([`shard_of`]); each shard is a complete index over its slice of the
+//! corpus — a frozen [`LeanVecIndex`] or a mutable [`LiveIndex`] — and
+//! a query fans out to every shard, takes per-shard top-k, and merges
+//! by score ([`merge_top_k`]), summing the per-shard [`QueryStats`].
+//! Because the partition is a uniform random sample of the corpus, each
+//! shard's graph is smaller *and* needs a smaller search window for the
+//! same merged recall — the scatter-gather batch-QPS win the e2e bench
+//! records.
+//!
+//! All shards share ONE projection model: [`ShardedIndex::build`]
+//! trains it over the full corpus ([`IndexBuilder::train_model`]) and
+//! hands a clone to every per-shard build, so the serving engine's
+//! single batched query projection `A q` stays valid across shards.
+
+use crate::config::Similarity;
+use crate::graph::beam::{CtxPool, SearchCtx};
+use crate::index::builder::IndexBuilder;
+use crate::index::leanvec_index::LeanVecIndex;
+use crate::index::query::{Query, SearchResult, VectorIndex};
+use crate::leanvec::model::LeanVecModel;
+use crate::mutate::{ConsolidateReport, LiveIndex, MutateError};
+use std::sync::Arc;
+
+/// Default shard-routing hash seed (persisted in the shard manifest).
+pub const DEFAULT_HASH_SEED: u64 = 0x51AB_5EED;
+
+/// Shard topology: how many shards and the routing-hash seed. Persisted
+/// in the manifest so a reloaded index routes identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// number of shards (>= 1)
+    pub shards: usize,
+    /// seed for the external-id routing hash
+    pub hash_seed: u64,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize) -> ShardSpec {
+        ShardSpec {
+            shards,
+            hash_seed: DEFAULT_HASH_SEED,
+        }
+    }
+}
+
+impl Default for ShardSpec {
+    fn default() -> Self {
+        ShardSpec::new(1)
+    }
+}
+
+/// Which shard an external id lives on: a seeded splitmix64 finalizer
+/// over the id, reduced modulo the shard count. Deterministic across
+/// processes (no `std` hasher randomness), cheap enough for the
+/// per-mutation routing path, and well-spread even for the sequential
+/// ids synthetic corpora use.
+pub fn shard_of(ext_id: u32, hash_seed: u64, shards: usize) -> usize {
+    assert!(shards > 0, "shard count must be >= 1");
+    if shards == 1 {
+        return 0;
+    }
+    let mut z = (ext_id as u64) ^ hash_seed;
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % shards as u64) as usize
+}
+
+/// One frozen shard: the index plus its local-slot -> external-id map.
+/// `ext_of` is empty when the map is the identity (the single-shard
+/// wrap of a whole index), so that hot path skips translation entirely.
+pub(crate) struct FrozenShard {
+    pub(crate) index: Arc<LeanVecIndex>,
+    pub(crate) ext_of: Vec<u32>,
+}
+
+impl FrozenShard {
+    fn identity(&self) -> bool {
+        self.ext_of.is_empty()
+    }
+}
+
+/// The shard set: all-frozen or all-live (mixing would give mutation
+/// routing dead targets).
+pub(crate) enum ShardSet {
+    Frozen(Vec<FrozenShard>),
+    Live(Vec<Arc<LiveIndex>>),
+}
+
+/// Hash-partitioned scatter-gather index over N shards; implements
+/// [`VectorIndex`], so every consumer of the one query API (engine,
+/// CLI, benches) can serve a sharded corpus unchanged. See the module
+/// docs for the partition/merge contract.
+pub struct ShardedIndex {
+    spec: ShardSpec,
+    set: ShardSet,
+    /// the shared projection model (clone of every shard's)
+    model: LeanVecModel,
+    sim: Similarity,
+    /// per-shard context pools for the concurrent scatter path — sized
+    /// to the core count, so up to that many in-flight queries fan out
+    /// without blocking on a context
+    pools: Vec<CtxPool>,
+}
+
+fn make_pools(shards: usize) -> Vec<CtxPool> {
+    let per_shard = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    // size 0: graph searches grow their visited arrays lazily
+    (0..shards).map(|_| CtxPool::new(per_shard, 0)).collect()
+}
+
+/// Merge per-shard [`SearchResult`]s into the global top-`k`:
+/// concatenate `(score, id)` pairs, stable-sort by score descending
+/// (NaN-safe `total_cmp`; ties keep shard order), truncate to `k`, and
+/// sum the per-shard [`QueryStats`](crate::index::query::QueryStats)
+/// via `QueryStats::merge`. A single-shard merge returns that shard's
+/// result unchanged — the shards=1 serve path is bit-identical to the
+/// unsharded one.
+pub fn merge_top_k(results: Vec<SearchResult>, k: usize) -> SearchResult {
+    let mut iter = results.into_iter();
+    let Some(mut first) = iter.next() else {
+        return SearchResult::default();
+    };
+    let rest: Vec<SearchResult> = iter.collect();
+    if rest.is_empty() {
+        first.ids.truncate(k);
+        first.scores.truncate(k);
+        return first;
+    }
+    let mut stats = first.stats;
+    let mut pairs: Vec<(f32, u32)> = first
+        .scores
+        .iter()
+        .copied()
+        .zip(first.ids.iter().copied())
+        .collect();
+    for r in rest {
+        stats.merge(&r.stats);
+        pairs.extend(r.scores.iter().copied().zip(r.ids.iter().copied()));
+    }
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
+    pairs.truncate(k);
+    SearchResult {
+        ids: pairs.iter().map(|&(_, id)| id).collect(),
+        scores: pairs.iter().map(|&(s, _)| s).collect(),
+        stats,
+    }
+}
+
+/// External ids `0..n` partitioned by the routing hash: one id list per
+/// shard, each in ascending order.
+fn partition(n: usize, spec: &ShardSpec) -> Vec<Vec<u32>> {
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); spec.shards];
+    for id in 0..n as u32 {
+        parts[shard_of(id, spec.hash_seed, spec.shards)].push(id);
+    }
+    parts
+}
+
+impl ShardedIndex {
+    /// Wrap a whole frozen index as one shard (identity id map). The
+    /// serve path through this wrapper is bit-identical to serving the
+    /// index directly.
+    pub fn from_single(index: Arc<LeanVecIndex>) -> ShardedIndex {
+        let model = index.model.clone();
+        let sim = index.sim;
+        ShardedIndex {
+            spec: ShardSpec::new(1),
+            set: ShardSet::Frozen(vec![FrozenShard {
+                index,
+                ext_of: Vec::new(),
+            }]),
+            model,
+            sim,
+            pools: make_pools(1),
+        }
+    }
+
+    /// Wrap a whole live index as one shard (it already owns its
+    /// external-id map).
+    pub fn from_live(live: Arc<LiveIndex>) -> ShardedIndex {
+        let model = live.model().clone();
+        let sim = live.similarity();
+        ShardedIndex {
+            spec: ShardSpec::new(1),
+            set: ShardSet::Live(vec![live]),
+            model,
+            sim,
+            pools: make_pools(1),
+        }
+    }
+
+    /// Assemble a sharded index from pre-built live shards (the live
+    /// loader and the live builder both end here). Shard `i` must hold
+    /// exactly the external ids that hash to `i` under `spec`.
+    pub fn from_live_shards(shards: Vec<Arc<LiveIndex>>, spec: ShardSpec) -> ShardedIndex {
+        assert_eq!(shards.len(), spec.shards, "shard count disagrees with spec");
+        assert!(!shards.is_empty(), "at least one shard required");
+        let model = shards[0].model().clone();
+        let sim = shards[0].similarity();
+        let pools = make_pools(shards.len());
+        ShardedIndex {
+            spec,
+            set: ShardSet::Live(shards),
+            model,
+            sim,
+            pools,
+        }
+    }
+
+    /// Assemble from pre-built frozen shards plus their external-id
+    /// maps (the manifest loader ends here).
+    pub(crate) fn from_frozen_parts(
+        parts: Vec<(Arc<LeanVecIndex>, Vec<u32>)>,
+        spec: ShardSpec,
+    ) -> ShardedIndex {
+        assert_eq!(parts.len(), spec.shards, "shard count disagrees with spec");
+        assert!(!parts.is_empty(), "at least one shard required");
+        let model = parts[0].0.model.clone();
+        let sim = parts[0].0.sim;
+        let pools = make_pools(parts.len());
+        let shards = parts
+            .into_iter()
+            .map(|(index, ext_of)| {
+                assert!(
+                    ext_of.is_empty() || ext_of.len() == index.len(),
+                    "external-id map must cover every row"
+                );
+                FrozenShard { index, ext_of }
+            })
+            .collect();
+        ShardedIndex {
+            spec,
+            set: ShardSet::Frozen(shards),
+            model,
+            sim,
+            pools,
+        }
+    }
+
+    /// Build the per-shard indexes: train the shared model once over the
+    /// full corpus, partition rows by the routing hash, and run the
+    /// per-shard builds embarrassingly parallel — one thread per shard,
+    /// each an [`IndexBuilder::build`] with `build_threads / shards`
+    /// inner workers (`build_threads` 0 = all cores).
+    fn build_parts<F>(
+        rows: &[Vec<f32>],
+        learn_queries: Option<&[Vec<f32>]>,
+        sim: Similarity,
+        spec: ShardSpec,
+        build_threads: usize,
+        configure: &F,
+    ) -> (Vec<(LeanVecIndex, Vec<u32>)>, LeanVecModel)
+    where
+        F: Fn(IndexBuilder) -> IndexBuilder + Sync,
+    {
+        assert!(!rows.is_empty(), "cannot shard an empty corpus");
+        assert!(spec.shards >= 1, "shard count must be >= 1");
+        let parts = partition(rows.len(), &spec);
+        for (s, ids) in parts.iter().enumerate() {
+            assert!(
+                !ids.is_empty(),
+                "hash partition left shard {s} empty; use fewer shards for {} vectors",
+                rows.len()
+            );
+        }
+        let model = configure(IndexBuilder::new()).train_model(rows, learn_queries, sim);
+        let threads = crate::util::threadpool::resolve_threads(build_threads);
+        let inner = (threads / spec.shards).max(1);
+        let outer = threads.min(spec.shards);
+        let built: Vec<LeanVecIndex> =
+            crate::util::threadpool::parallel_map(spec.shards, outer, |s| {
+                let shard_rows: Vec<Vec<f32>> = parts[s]
+                    .iter()
+                    .map(|&id| rows[id as usize].clone())
+                    .collect();
+                // the shared model short-circuits training; learn
+                // queries are therefore not needed per shard
+                configure(IndexBuilder::new())
+                    .model(model.clone())
+                    .build_threads(inner)
+                    .build(&shard_rows, None, sim)
+            });
+        (built.into_iter().zip(parts).collect(), model)
+    }
+
+    /// Build a frozen sharded index over `rows` (external ids = row
+    /// positions). `configure` customizes each per-shard
+    /// [`IndexBuilder`] (projection, compression, graph params); the
+    /// projection model is trained ONCE over the full corpus and shared
+    /// across shards, and per-shard builds run in parallel across
+    /// `build_threads` workers (0 = all cores).
+    pub fn build<F>(
+        rows: &[Vec<f32>],
+        learn_queries: Option<&[Vec<f32>]>,
+        sim: Similarity,
+        spec: ShardSpec,
+        build_threads: usize,
+        configure: F,
+    ) -> ShardedIndex
+    where
+        F: Fn(IndexBuilder) -> IndexBuilder + Sync,
+    {
+        let (parts, model) =
+            Self::build_parts(rows, learn_queries, sim, spec, build_threads, &configure);
+        let pools = make_pools(spec.shards);
+        let shards = parts
+            .into_iter()
+            .map(|(index, ext_of)| FrozenShard {
+                index: Arc::new(index),
+                ext_of,
+            })
+            .collect();
+        ShardedIndex {
+            spec,
+            set: ShardSet::Frozen(shards),
+            model,
+            sim: if sim == Similarity::Cosine {
+                Similarity::InnerProduct
+            } else {
+                sim
+            },
+            pools,
+        }
+    }
+
+    /// [`ShardedIndex::build`], thawed: every shard becomes a
+    /// [`LiveIndex`] speaking the global external ids of the rows it was
+    /// built over, so streaming inserts/deletes route by shard hash.
+    pub fn build_live<F>(
+        rows: &[Vec<f32>],
+        learn_queries: Option<&[Vec<f32>]>,
+        sim: Similarity,
+        spec: ShardSpec,
+        build_threads: usize,
+        configure: F,
+    ) -> ShardedIndex
+    where
+        F: Fn(IndexBuilder) -> IndexBuilder + Sync,
+    {
+        let (parts, _model) =
+            Self::build_parts(rows, learn_queries, sim, spec, build_threads, &configure);
+        let shards: Vec<Arc<LiveIndex>> = parts
+            .into_iter()
+            .map(|(index, ext_of)| Arc::new(LiveIndex::from_index_with_ids(index, ext_of)))
+            .collect();
+        ShardedIndex::from_live_shards(shards, spec)
+    }
+
+    /// The shard topology.
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.spec.shards
+    }
+
+    /// The shared projection model (the engine's batcher projects whole
+    /// batches through `model().a` once, for all shards).
+    pub fn model(&self) -> &LeanVecModel {
+        &self.model
+    }
+
+    /// Whether the shards are mutable [`LiveIndex`]es.
+    pub fn is_live(&self) -> bool {
+        matches!(self.set, ShardSet::Live(_))
+    }
+
+    /// The live shards (empty slice when frozen).
+    pub fn live_shards(&self) -> &[Arc<LiveIndex>] {
+        match &self.set {
+            ShardSet::Live(shards) => shards,
+            ShardSet::Frozen(_) => &[],
+        }
+    }
+
+    pub(crate) fn set(&self) -> &ShardSet {
+        &self.set
+    }
+
+    /// Which shard `ext_id` routes to.
+    pub fn shard_for(&self, ext_id: u32) -> usize {
+        shard_of(ext_id, self.spec.hash_seed, self.spec.shards)
+    }
+
+    /// Total slots across shards (live + tombstoned for live shards).
+    pub fn total_slots(&self) -> usize {
+        match &self.set {
+            ShardSet::Frozen(shards) => shards.iter().map(|s| s.index.len()).sum(),
+            ShardSet::Live(shards) => shards.iter().map(|s| s.total_slots()).sum(),
+        }
+    }
+
+    /// The worst (maximum) per-shard tombstone fraction — what the
+    /// ingest lane's staggered consolidation trigger watches.
+    pub fn max_tombstone_fraction(&self) -> f64 {
+        self.live_shards()
+            .iter()
+            .map(|s| s.tombstone_fraction())
+            .fold(0.0, f64::max)
+    }
+
+    /// Pending (un-consolidated) inserts summed across shards.
+    pub fn pending_inserts(&self) -> usize {
+        self.live_shards().iter().map(|s| s.pending_inserts()).sum()
+    }
+
+    /// Is `ext_id` currently live? (False on frozen shard sets — frozen
+    /// shards track no external liveness.)
+    pub fn contains(&self, ext_id: u32) -> bool {
+        match &self.set {
+            ShardSet::Live(shards) => shards[self.shard_for(ext_id)].contains(ext_id),
+            ShardSet::Frozen(_) => false,
+        }
+    }
+
+    /// Route an insert to its shard by external-id hash (live shard
+    /// sets only).
+    pub fn insert(&self, ext_id: u32, vector: &[f32]) -> Result<u32, MutateError> {
+        match &self.set {
+            ShardSet::Live(shards) => shards[self.shard_for(ext_id)].insert(ext_id, vector),
+            ShardSet::Frozen(_) => Err(MutateError::Frozen),
+        }
+    }
+
+    /// Route a delete to its shard by external-id hash (live shard sets
+    /// only).
+    pub fn delete(&self, ext_id: u32) -> Result<u32, MutateError> {
+        match &self.set {
+            ShardSet::Live(shards) => shards[self.shard_for(ext_id)].delete(ext_id),
+            ShardSet::Frozen(_) => Err(MutateError::Frozen),
+        }
+    }
+
+    /// Staggered consolidation: consolidate AT MOST ONE shard — the one
+    /// with the highest tombstone fraction among those due (fraction >=
+    /// `threshold`, or pending insert log >= `pending_fold`). The ingest
+    /// lane calls this after every applied mutation, so shard
+    /// consolidations spread out over the mutation stream instead of
+    /// stalling every shard at once — the p99 stays flat while each
+    /// shard still gets compacted. Returns the consolidated shard's
+    /// position and report, or `None` when nothing was due (or the set
+    /// is frozen). `threshold <= 0` disables the fraction trigger.
+    pub fn consolidate_one(
+        &self,
+        threshold: f64,
+        pending_fold: usize,
+    ) -> Option<(usize, ConsolidateReport)> {
+        let ShardSet::Live(shards) = &self.set else {
+            return None;
+        };
+        let mut pick: Option<(usize, f64)> = None;
+        for (s, live) in shards.iter().enumerate() {
+            let frac = live.tombstone_fraction();
+            let due = (threshold > 0.0 && frac >= threshold)
+                || live.pending_inserts() >= pending_fold;
+            if due && pick.map_or(true, |(_, best)| frac > best) {
+                pick = Some((s, frac));
+            }
+        }
+        pick.map(|(s, _)| (s, shards[s].consolidate()))
+    }
+
+    /// Search one shard, translating ids and the filter predicate
+    /// between the global external namespace and the shard's local one.
+    fn search_shard(
+        &self,
+        s: usize,
+        ctx: &mut SearchCtx,
+        q_proj: &[f32],
+        query: &Query,
+    ) -> SearchResult {
+        match &self.set {
+            // live shards already speak external ids (filter included)
+            ShardSet::Live(shards) => shards[s].search_prepared(ctx, q_proj, query),
+            ShardSet::Frozen(shards) => {
+                let sh = &shards[s];
+                if sh.identity() {
+                    return sh.index.search_prepared(ctx, q_proj, query);
+                }
+                let ext_of = &sh.ext_of;
+                let mut r = match query.filter_fn() {
+                    Some(user) => {
+                        // the caller's predicate sees external ids; the
+                        // shard's traversal sees local slots
+                        let local = |id: u32| user(ext_of[id as usize]);
+                        sh.index
+                            .search_prepared(ctx, q_proj, &query.replace_filter(Some(&local)))
+                    }
+                    None => sh.index.search_prepared(ctx, q_proj, query),
+                };
+                for id in r.ids.iter_mut() {
+                    *id = ext_of[*id as usize];
+                }
+                r
+            }
+        }
+    }
+
+    /// Sequential scatter-gather with a caller-provided context: search
+    /// every shard in turn, then [`merge_top_k`]. The engine's
+    /// batch-projected entry point ([`LeanVecIndex::search_prepared`]
+    /// contract: `q_proj` is the projected query, `query.vector()` the
+    /// original full-D vector).
+    pub fn search_prepared(
+        &self,
+        ctx: &mut SearchCtx,
+        q_proj: &[f32],
+        query: &Query,
+    ) -> SearchResult {
+        let n = self.shards();
+        if n == 1 {
+            return self.search_shard(0, ctx, q_proj, query);
+        }
+        let results: Vec<SearchResult> = (0..n)
+            .map(|s| self.search_shard(s, ctx, q_proj, query))
+            .collect();
+        merge_top_k(results, query.top_k())
+    }
+
+    /// Concurrent scatter-gather: every shard searched on its own
+    /// thread, each drawing a context from that shard's [`CtxPool`];
+    /// shard 0 runs on the calling thread. Single-shard sets skip the
+    /// fan-out entirely (one pooled context, no spawn), so the shards=1
+    /// serve path stays identical to the unsharded engine's.
+    pub fn search_scatter(&self, q_proj: &[f32], query: &Query) -> SearchResult {
+        let n = self.shards();
+        if n == 1 {
+            let mut ctx = self.pools[0].acquire();
+            return self.search_shard(0, &mut ctx, q_proj, query);
+        }
+        let results: Vec<SearchResult> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (1..n)
+                .map(|s| {
+                    scope.spawn(move || {
+                        let mut ctx = self.pools[s].acquire();
+                        self.search_shard(s, &mut ctx, q_proj, query)
+                    })
+                })
+                .collect();
+            let mut results = Vec::with_capacity(n);
+            {
+                let mut ctx = self.pools[0].acquire();
+                results.push(self.search_shard(0, &mut ctx, q_proj, query));
+            }
+            for h in handles {
+                results.push(h.join().expect("shard search thread panicked"));
+            }
+            results
+        });
+        merge_top_k(results, query.top_k())
+    }
+}
+
+impl VectorIndex for ShardedIndex {
+    /// Project once (`A q` through the shared model), then sequential
+    /// scatter-gather with the caller's context.
+    fn search(&self, ctx: &mut SearchCtx, query: &Query) -> SearchResult {
+        let q_proj = self.model.project_query(query.vector());
+        self.search_prepared(ctx, &q_proj, query)
+    }
+
+    /// Searchable vectors across shards (live shards count live rows
+    /// only, matching [`LiveIndex`]'s trait impl).
+    fn len(&self) -> usize {
+        match &self.set {
+            ShardSet::Frozen(shards) => shards.iter().map(|s| s.index.len()).sum(),
+            ShardSet::Live(shards) => shards.iter().map(|s| s.live_len()).sum(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.model.input_dim()
+    }
+
+    fn sim(&self) -> Similarity {
+        self.sim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GraphParams, ProjectionKind};
+    use crate::index::query::QueryStats;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routing_is_deterministic_and_spread() {
+        let n = 10_000u32;
+        let shards = 4;
+        let mut counts = vec![0usize; shards];
+        for id in 0..n {
+            let s = shard_of(id, DEFAULT_HASH_SEED, shards);
+            assert_eq!(s, shard_of(id, DEFAULT_HASH_SEED, shards), "deterministic");
+            counts[s] += 1;
+        }
+        let expected = n as usize / shards;
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                c > expected / 2 && c < expected * 2,
+                "shard {s} got {c} of {n} ids (expected ~{expected})"
+            );
+        }
+        // a different seed produces a different partition
+        let moved = (0..n)
+            .filter(|&id| {
+                shard_of(id, DEFAULT_HASH_SEED, shards) != shard_of(id, 12345, shards)
+            })
+            .count();
+        assert!(moved > 0, "seed must matter");
+    }
+
+    #[test]
+    fn single_shard_routes_everything_to_zero() {
+        for id in [0u32, 1, 99, u32::MAX] {
+            assert_eq!(shard_of(id, DEFAULT_HASH_SEED, 1), 0);
+        }
+    }
+
+    #[test]
+    fn partition_covers_every_id_once() {
+        let spec = ShardSpec {
+            shards: 3,
+            hash_seed: 7,
+        };
+        let parts = partition(1000, &spec);
+        let mut seen = vec![false; 1000];
+        for (s, ids) in parts.iter().enumerate() {
+            for &id in ids {
+                assert_eq!(shard_of(id, 7, 3), s);
+                assert!(!seen[id as usize], "id {id} in two shards");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "every id assigned");
+    }
+
+    fn result(ids: Vec<u32>, scores: Vec<f32>, hops: usize) -> SearchResult {
+        SearchResult {
+            ids,
+            scores,
+            stats: QueryStats {
+                hops,
+                primary_scored: hops * 2,
+                ..QueryStats::default()
+            },
+        }
+    }
+
+    #[test]
+    fn merge_orders_by_score_and_sums_stats() {
+        let a = result(vec![1, 2], vec![0.9, 0.5], 10);
+        let b = result(vec![3, 4], vec![0.7, 0.6], 20);
+        let m = merge_top_k(vec![a, b], 3);
+        assert_eq!(m.ids, vec![1, 3, 4]);
+        assert_eq!(m.scores, vec![0.9, 0.7, 0.6]);
+        assert_eq!(m.stats.hops, 30);
+        assert_eq!(m.stats.primary_scored, 60);
+    }
+
+    #[test]
+    fn merge_single_shard_is_identity() {
+        let a = result(vec![5, 6, 7], vec![0.3, 0.2, 0.1], 4);
+        let m = merge_top_k(vec![a.clone()], 3);
+        assert_eq!(m, a, "single-shard merge must be bit-identical");
+        // and an empty merge is empty
+        assert_eq!(merge_top_k(Vec::new(), 5), SearchResult::default());
+    }
+
+    #[test]
+    fn merge_ties_keep_shard_order() {
+        let a = result(vec![1], vec![0.5], 1);
+        let b = result(vec![2], vec![0.5], 1);
+        let m = merge_top_k(vec![a, b], 2);
+        assert_eq!(m.ids, vec![1, 2], "stable sort: earlier shard wins ties");
+    }
+
+    fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    fn configure(b: IndexBuilder) -> IndexBuilder {
+        let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+        gp.max_degree = 12;
+        gp.build_window = 30;
+        b.projection(ProjectionKind::Id).target_dim(8).graph_params(gp)
+    }
+
+    #[test]
+    fn sharded_build_shares_one_model() {
+        let x = rows(400, 16, 3);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(3),
+            1,
+            configure,
+        );
+        assert_eq!(ix.shards(), 3);
+        assert_eq!(VectorIndex::len(&ix), 400);
+        let ShardSet::Frozen(shards) = ix.set() else {
+            panic!("frozen build")
+        };
+        for sh in shards {
+            assert_eq!(sh.index.model.a.data, ix.model().a.data, "shared model");
+        }
+    }
+
+    #[test]
+    fn sharded_search_returns_external_ids() {
+        let x = rows(500, 16, 4);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(4),
+            1,
+            configure,
+        );
+        // a self-query's own id must come back under its external number
+        let mut hits = 0;
+        for probe in [0u32, 17, 333, 499] {
+            let r = ix.search_one(&Query::new(&x[probe as usize]).k(5).window(40));
+            assert_eq!(r.ids.len(), 5);
+            assert!(r.ids.iter().all(|&id| (id as usize) < x.len()));
+            if r.ids.contains(&probe) {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 3, "self-recall through id translation: {hits}/4");
+    }
+
+    #[test]
+    fn scatter_matches_sequential_scatter() {
+        let x = rows(600, 16, 5);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(4),
+            0,
+            configure,
+        );
+        for probe in 0..8usize {
+            let q = Query::new(&x[probe * 70]).k(10).window(30);
+            let q_proj = ix.model().project_query(q.vector());
+            let seq = {
+                let mut ctx = SearchCtx::new(0);
+                ix.search_prepared(&mut ctx, &q_proj, &q)
+            };
+            let scat = ix.search_scatter(&q_proj, &q);
+            assert_eq!(seq, scat, "concurrent scatter must equal sequential");
+        }
+    }
+
+    #[test]
+    fn sharded_filter_sees_external_ids() {
+        let x = rows(400, 16, 6);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(4),
+            1,
+            configure,
+        );
+        let pred = |id: u32| id % 2 == 0;
+        let r = ix.search_one(&Query::new(&x[0]).k(10).window(60).filter(&pred));
+        assert!(!r.ids.is_empty());
+        assert!(
+            r.ids.iter().all(|&id| id % 2 == 0),
+            "filter must apply to external ids: {:?}",
+            r.ids
+        );
+        assert!(r.stats.filtered > 0, "filter skips counted across shards");
+    }
+
+    #[test]
+    fn live_sharded_mutations_route_by_hash() {
+        let x = rows(300, 16, 7);
+        let ix = ShardedIndex::build_live(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(3),
+            1,
+            configure,
+        );
+        assert!(ix.is_live());
+        assert_eq!(VectorIndex::len(&ix), 300);
+        // delete routes to the owning shard
+        assert!(ix.contains(42));
+        ix.delete(42).unwrap();
+        assert!(!ix.contains(42));
+        assert_eq!(ix.delete(42), Err(MutateError::UnknownId(42)));
+        // insert routes a fresh id
+        let v = rows(1, 16, 99).pop().unwrap();
+        ix.insert(1000, &v).unwrap();
+        assert!(ix.contains(1000));
+        let shard = ix.shard_for(1000);
+        assert!(ix.live_shards()[shard].contains(1000), "landed on its hash shard");
+        assert_eq!(VectorIndex::len(&ix), 300);
+        // deleted id never comes back from search
+        let r = ix.search_one(&Query::new(&x[42]).k(10).window(80));
+        assert!(!r.ids.contains(&42), "tombstoned id served: {:?}", r.ids);
+    }
+
+    #[test]
+    fn frozen_set_rejects_mutations() {
+        let x = rows(200, 16, 8);
+        let ix = ShardedIndex::build(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(2),
+            1,
+            configure,
+        );
+        assert_eq!(ix.insert(999, &x[0]), Err(MutateError::Frozen));
+        assert_eq!(ix.delete(0), Err(MutateError::Frozen));
+        assert!(ix.consolidate_one(0.01, 1).is_none());
+    }
+
+    #[test]
+    fn consolidate_one_staggers_across_shards() {
+        let x = rows(400, 16, 9);
+        let ix = ShardedIndex::build_live(
+            &x,
+            None,
+            Similarity::InnerProduct,
+            ShardSpec::new(4),
+            1,
+            configure,
+        );
+        // tombstone ~20% of every shard
+        for id in 0..80u32 {
+            ix.delete(id).unwrap();
+        }
+        assert!(ix.max_tombstone_fraction() > 0.0);
+        // each call consolidates exactly one shard; after at most 4
+        // passes nothing is due any more
+        let mut consolidated = Vec::new();
+        while let Some((s, report)) = ix.consolidate_one(0.05, usize::MAX) {
+            assert!(report.remaining > 0);
+            consolidated.push(s);
+            assert!(consolidated.len() <= 4, "more passes than shards");
+        }
+        assert!(!consolidated.is_empty());
+        let mut unique = consolidated.clone();
+        unique.sort_unstable();
+        unique.dedup();
+        assert_eq!(unique.len(), consolidated.len(), "no shard consolidated twice");
+        assert_eq!(ix.max_tombstone_fraction(), 0.0);
+        assert_eq!(VectorIndex::len(&ix), 320);
+    }
+}

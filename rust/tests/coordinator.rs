@@ -75,7 +75,7 @@ fn batches_form_under_load() {
     // submit a burst before workers can drain -> batches > 1
     let engine = Engine::start(index, cfg);
     for q in ds.test_queries.iter().take(64) {
-        engine.submit(q.clone(), 5);
+        engine.submit(q.clone(), 5).unwrap();
     }
     let responses = engine.drain(64);
     engine.shutdown();
@@ -98,7 +98,7 @@ fn single_request_not_starved_by_batcher() {
     };
     let engine = Engine::start(index, cfg);
     let t0 = std::time::Instant::now();
-    engine.submit(ds.test_queries[0].clone(), 5);
+    engine.submit(ds.test_queries[0].clone(), 5).unwrap();
     let r = engine.drain(1);
     engine.shutdown();
     assert_eq!(r.len(), 1);
@@ -133,7 +133,7 @@ fn zero_k_requests_return_empty() {
     let ds = dataset(500);
     let index = build(&ds);
     let engine = Engine::start(index, EngineConfig::default());
-    engine.submit(ds.test_queries[0].clone(), 0);
+    engine.submit(ds.test_queries[0].clone(), 0).unwrap();
     let r = engine.drain(1);
     engine.shutdown();
     assert!(r[0].ids.is_empty());

@@ -116,21 +116,21 @@ fn soak_interleaved_mutations_and_searches() {
     for round in 0..20u32 {
         for j in 0..8u32 {
             let v: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect();
-            engine.submit_insert(10_000 + round * 8 + j, v);
+            engine.submit_insert(10_000 + round * 8 + j, v).unwrap();
         }
         for j in 0..4u32 {
-            engine.submit_delete(40 + round * 4 + j);
+            engine.submit_delete(40 + round * 4 + j).unwrap();
         }
         for _ in 0..10 {
             let q: Vec<f32> = (0..dim).map(|_| rng.gaussian_f32() * 2.0).collect();
-            engine.submit(q, 10);
+            engine.submit(q, 10).unwrap();
         }
         submitted += 10;
     }
     // poisoned mutations mid-churn: both must be rejected (counted),
     // never panic the ingest lane or the engine
-    engine.submit_insert(99_999, vec![f32::NAN; dim]);
-    engine.submit_delete(0); // already deleted before the engine started
+    engine.submit_insert(99_999, vec![f32::NAN; dim]).unwrap();
+    engine.submit_delete(0).unwrap(); // already deleted before the engine started
     let responses = engine.drain(submitted);
     assert_eq!(responses.len(), submitted);
     for r in &responses {

@@ -255,10 +255,12 @@ fn engine_honors_per_request_params_over_defaults() {
         },
     );
     for q in &qs {
-        engine.submit_spec(
-            q.clone(),
-            QuerySpec::top_k(K).with_window(80).with_rerank_window(160),
-        );
+        engine
+            .submit_spec(
+                q.clone(),
+                QuerySpec::top_k(K).with_window(80).with_rerank_window(160),
+            )
+            .unwrap();
     }
     let mut responses = engine.drain(qs.len());
     responses.sort_by_key(|r| r.id);
@@ -281,12 +283,14 @@ fn engine_filtered_query_returns_only_allowed_ids_with_accounting() {
         ..EngineConfig::default()
     });
     for q in &qs {
-        engine.submit_spec(
-            q.clone(),
-            QuerySpec::top_k(K)
-                .with_window(80)
-                .with_allow_list(allow_ids.clone()),
-        );
+        engine
+            .submit_spec(
+                q.clone(),
+                QuerySpec::top_k(K)
+                    .with_window(80)
+                    .with_allow_list(allow_ids.clone()),
+            )
+            .unwrap();
     }
     let mut responses = engine.drain(qs.len());
     responses.sort_by_key(|r| r.id);
@@ -320,9 +324,13 @@ fn mixed_specs_in_one_engine_batch_each_honored() {
     // same query, three different specs, submitted back to back (they
     // may batch together; the batcher is spec-heterogeneous by design)
     let q = qs[0].clone();
-    engine.submit_spec(q.clone(), QuerySpec::top_k(3));
-    engine.submit_spec(q.clone(), QuerySpec::top_k(7).with_window(100));
-    engine.submit_spec(q.clone(), QuerySpec::top_k(5).with_allow_list(vec![]));
+    engine.submit_spec(q.clone(), QuerySpec::top_k(3)).unwrap();
+    engine
+        .submit_spec(q.clone(), QuerySpec::top_k(7).with_window(100))
+        .unwrap();
+    engine
+        .submit_spec(q.clone(), QuerySpec::top_k(5).with_allow_list(vec![]))
+        .unwrap();
     let mut responses = engine.drain(3);
     responses.sort_by_key(|r| r.id);
     engine.shutdown();

@@ -1,0 +1,412 @@
+//! Sharded serving integration: scatter-gather equivalence against the
+//! exact oracle, sharded-vs-unsharded recall parity, shard-directory
+//! snapshot round trips, mutation routing under churn, and a
+//! multi-collection multi-tenant soak through the engine.
+
+use leanvec::config::{BuildParams, Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, EngineError, QuerySpec};
+use leanvec::data::gt::ground_truth;
+use leanvec::data::synth::{generate, QueryDist, SynthSpec};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use leanvec::index::persist::SnapshotMeta;
+use leanvec::index::query::{Query, SearchResult, VectorIndex};
+use leanvec::index::FlatIndex;
+use leanvec::shard::{
+    merge_top_k, shard_of, Collection, CollectionRegistry, ShardSpec, ShardedIndex, TenantQuota,
+    DEFAULT_HASH_SEED, MANIFEST_NAME,
+};
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("leanvec-shard-{}-{name}", std::process::id()))
+}
+
+fn dataset(name: &str, n: usize, dim: usize, seed: u64) -> leanvec::data::synth::Dataset {
+    generate(&SynthSpec {
+        name: name.into(),
+        dim,
+        n,
+        n_learn_queries: 200,
+        n_test_queries: 60,
+        similarity: Similarity::InnerProduct,
+        queries: QueryDist::OutOfDistribution(0.6),
+        decay: 0.6,
+        seed,
+    })
+}
+
+fn configure(b: IndexBuilder) -> IndexBuilder {
+    let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+    gp.max_degree = 24;
+    gp.build_window = 60;
+    b.projection(ProjectionKind::OodEigSearch)
+        .target_dim(24)
+        .primary(Compression::Lvq8)
+        .secondary(Compression::F16)
+        .graph_params(gp)
+}
+
+fn recall_at_k(results: &[SearchResult], truth: &[Vec<u32>], k: usize) -> f64 {
+    let mut hits = 0usize;
+    for (r, t) in results.iter().zip(truth) {
+        let tk = &t[..k.min(t.len())];
+        hits += r.ids.iter().take(k).filter(|id| tk.contains(id)).count();
+    }
+    hits as f64 / (results.len() * k) as f64
+}
+
+/// The scatter-gather merge against the exact oracle: hash-partition the
+/// corpus, run the exact flat scan per partition, merge with the same
+/// `merge_top_k` the serving path uses, and the result must be
+/// IDENTICAL to the unsharded flat top-k — sharding cannot change exact
+/// answers, only partition the work.
+#[test]
+fn flat_oracle_sharded_merge_matches_unsharded_exactly() {
+    let ds = dataset("shard-oracle", 1_500, 48, 11);
+    let shards = 4;
+    let k = 10;
+    // partition external ids exactly as ShardSpec routing would
+    let mut parts: Vec<Vec<u32>> = vec![Vec::new(); shards];
+    for id in 0..ds.database.len() as u32 {
+        parts[shard_of(id, DEFAULT_HASH_SEED, shards)].push(id);
+    }
+    let flats: Vec<(FlatIndex, Vec<u32>)> = parts
+        .into_iter()
+        .map(|ext_of| {
+            let rows: Vec<Vec<f32>> = ext_of
+                .iter()
+                .map(|&id| ds.database[id as usize].clone())
+                .collect();
+            (FlatIndex::new(&rows, ds.similarity), ext_of)
+        })
+        .collect();
+    let oracle = FlatIndex::new(&ds.database, ds.similarity);
+    for q in &ds.test_queries {
+        let per_shard: Vec<SearchResult> = flats
+            .iter()
+            .map(|(flat, ext_of)| {
+                let mut r = flat.search_one(&Query::new(q).k(k));
+                for id in r.ids.iter_mut() {
+                    *id = ext_of[*id as usize];
+                }
+                r
+            })
+            .collect();
+        let merged = merge_top_k(per_shard, k);
+        let exact = oracle.search_one(&Query::new(q).k(k));
+        assert_eq!(merged.ids, exact.ids, "sharded exact != unsharded exact");
+        assert_eq!(merged.scores, exact.scores);
+    }
+}
+
+/// shards=1 through `ShardedIndex` is the unsharded index: same single
+/// graph, same traversal, so recall matches a direct build; shards=4
+/// holds recall@10 within a point of shards=1 at the same window (each
+/// shard searches its whole sub-corpus with the full window, so the
+/// union can only widen the candidate set).
+#[test]
+fn sharded_recall_within_one_point_of_unsharded() {
+    let ds = dataset("shard-recall", 2_400, 64, 12);
+    let k = 10;
+    let truth = ground_truth(&ds.database, &ds.test_queries, k, ds.similarity);
+    let run = |ix: &ShardedIndex| -> Vec<SearchResult> {
+        ds.test_queries
+            .iter()
+            .map(|v| {
+                let q = Query::new(v).k(k).window(100).rerank_window(120);
+                let q_proj = ix.model().project_query(v);
+                ix.search_scatter(&q_proj, &q)
+            })
+            .collect()
+    };
+    let one = ShardedIndex::build(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(1),
+        0,
+        configure,
+    );
+    let four = ShardedIndex::build(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(4),
+        0,
+        configure,
+    );
+    let r1 = recall_at_k(&run(&one), &truth, k);
+    let r4 = recall_at_k(&run(&four), &truth, k);
+    assert!(r1 >= 0.85, "unsharded recall too low to compare: {r1}");
+    assert!(
+        r4 >= r1 - 0.01,
+        "shards=4 recall {r4} dropped more than a point below shards=1 {r1}"
+    );
+}
+
+/// Shard-directory persistence: save_dir -> load_dir round-trips the
+/// manifest + per-shard snapshots and the loaded index serves
+/// bit-identical results (ids AND scores) to the in-memory build.
+#[test]
+fn shard_dir_round_trip_serves_bit_identically() {
+    let ds = dataset("shard-persist", 900, 48, 13);
+    let ix = ShardedIndex::build(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(3),
+        1,
+        configure,
+    );
+    let dir = tmp_dir("roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    let meta = SnapshotMeta {
+        dataset: ds.name.clone(),
+        seed: 13,
+        scale: 1.0,
+        build: BuildParams { build_threads: 1 },
+        search_defaults: SearchParams {
+            window: 64,
+            rerank_window: 80,
+        },
+    };
+    let bytes = ix.save_dir(&dir, &meta).expect("save_dir");
+    assert!(bytes > 0);
+    assert!(dir.join(MANIFEST_NAME).is_file(), "manifest written");
+    let (loaded, meta2) = ShardedIndex::load_dir(&dir).expect("load_dir");
+    assert_eq!(meta2.dataset, meta.dataset);
+    assert_eq!(meta2.seed, meta.seed);
+    assert_eq!(meta2.search_defaults.window, 64);
+    assert_eq!(loaded.shards(), 3);
+    assert_eq!(VectorIndex::len(&loaded), VectorIndex::len(&ix));
+    assert_eq!(loaded.spec().hash_seed, ix.spec().hash_seed);
+    for v in ds.test_queries.iter().take(30) {
+        let q = Query::new(v).k(10).window(64);
+        let q_proj = ix.model().project_query(v);
+        let a = ix.search_scatter(&q_proj, &q);
+        let b = loaded.search_scatter(&loaded.model().project_query(v), &q);
+        assert_eq!(a, b, "round-tripped shard set must serve identically");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Mutation churn across a live shard set: every delete routes to its
+/// hash shard, and no deleted external id is ever served afterwards —
+/// across every shard, with inserts landing in between.
+#[test]
+fn churn_across_shards_never_serves_a_deleted_id() {
+    let ds = dataset("shard-churn", 1_200, 48, 14);
+    let ix = ShardedIndex::build_live(
+        &ds.database,
+        Some(&ds.learn_queries),
+        ds.similarity,
+        ShardSpec::new(3),
+        1,
+        configure,
+    );
+    let n = ds.database.len() as u32;
+    // interleave deletes of every 5th id with re-inserts under new ids
+    let mut deleted = Vec::new();
+    for (step, id) in (0..n).step_by(5).enumerate() {
+        ix.delete(id).expect("delete routed to its shard");
+        deleted.push(id);
+        if step % 3 == 0 {
+            let fresh = n + step as u32;
+            ix.insert(fresh, &ds.database[id as usize])
+                .expect("insert routed to its shard");
+            assert!(ix.contains(fresh));
+        }
+    }
+    for &id in &deleted {
+        assert!(!ix.contains(id), "deleted id {id} still live");
+    }
+    let deleted_set: std::collections::HashSet<u32> = deleted.iter().copied().collect();
+    for v in ds.test_queries.iter().take(40) {
+        let q = Query::new(v).k(10).window(100);
+        let r = ix.search_scatter(&ix.model().project_query(v), &q);
+        assert!(!r.ids.is_empty());
+        for id in &r.ids {
+            assert!(
+                !deleted_set.contains(id),
+                "deleted id {id} served from shard {}",
+                ix.shard_for(*id)
+            );
+        }
+    }
+}
+
+/// Multi-collection, multi-tenant soak through the engine: a frozen
+/// 2-shard collection and a live 3-shard collection served together,
+/// with searches racing the ingest lane's churn + staggered
+/// consolidation on the live tenant. Checks routing isolation, quota
+/// bookkeeping, and that tombstoned ids never escape.
+#[test]
+fn multi_tenant_churn_soak_across_collections() {
+    let ds_a = dataset("soak-a", 900, 48, 15);
+    let ds_b = dataset("soak-b", 900, 48, 16);
+    let frozen = ShardedIndex::build(
+        &ds_a.database,
+        Some(&ds_a.learn_queries),
+        ds_a.similarity,
+        ShardSpec::new(2),
+        1,
+        configure,
+    );
+    let live = ShardedIndex::build_live(
+        &ds_b.database,
+        Some(&ds_b.learn_queries),
+        ds_b.similarity,
+        ShardSpec::new(3),
+        1,
+        configure,
+    );
+    let mut registry = CollectionRegistry::new();
+    registry.register(
+        Collection::new("tenant-a", frozen).with_defaults(SearchParams {
+            window: 80,
+            rerank_window: 80,
+        }),
+    );
+    registry.register(
+        Collection::new("tenant-b", live)
+            .with_defaults(SearchParams {
+                window: 80,
+                rerank_window: 80,
+            })
+            .with_quota(TenantQuota {
+                max_inflight: 0, // unlimited searches
+                max_pending_mutations: 4_096,
+            }),
+    );
+    let mut engine = Engine::start_collections(
+        registry,
+        EngineConfig {
+            workers: 2,
+            batch: BatchPolicy {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+            },
+            consolidate_threshold: 0.05,
+            ..EngineConfig::default()
+        },
+    );
+
+    // interleave: churn tenant-b while searching both tenants
+    let n_rounds = 60;
+    let mut submitted = 0usize;
+    let mut deleted = Vec::new();
+    for round in 0..n_rounds {
+        let del = (round * 7) as u32 % 900;
+        if engine.submit_delete_to("tenant-b", del).is_ok() {
+            deleted.push(del);
+        }
+        engine
+            .submit_insert_to("tenant-b", 10_000 + round as u32, ds_b.database[del as usize].clone())
+            .expect("insert admitted");
+        let qa = &ds_a.test_queries[round % ds_a.test_queries.len()];
+        let qb = &ds_b.test_queries[round % ds_b.test_queries.len()];
+        engine
+            .submit_spec(qa.clone(), QuerySpec::top_k(10).with_collection("tenant-a"))
+            .unwrap();
+        engine
+            .submit_spec(qb.clone(), QuerySpec::top_k(10).with_collection("tenant-b"))
+            .unwrap();
+        submitted += 2;
+    }
+    let responses = engine.drain(submitted);
+    assert_eq!(responses.len(), submitted);
+    for r in &responses {
+        assert_eq!(r.ids.len(), 10);
+    }
+    // unknown collections stay unknown even mid-soak
+    assert_eq!(
+        engine.submit_spec(ds_a.test_queries[0].clone(), QuerySpec::top_k(5)),
+        Err(EngineError::UnknownCollection("default".into()))
+    );
+    // settle the ingest lane, then verify the churn landed
+    engine.quiesce_mutations();
+    let ingest = engine.ingest_stats().snapshot();
+    assert_eq!(ingest.inserts, n_rounds);
+    assert!(ingest.deletes >= deleted.len() - 5, "most deletes applied");
+    let b = engine.collection("tenant-b").expect("registered").clone();
+    let deleted_set: std::collections::HashSet<u32> =
+        deleted.iter().copied().filter(|id| !b.index.contains(*id)).collect();
+    // post-quiesce searches still work and never serve a tombstoned id
+    for v in ds_b.test_queries.iter().take(20) {
+        let q = Query::new(v).k(10).window(100);
+        let r = b.index.search_scatter(&b.index.model().project_query(v), &q);
+        for id in &r.ids {
+            assert!(!deleted_set.contains(id), "tombstoned id {id} served");
+        }
+    }
+    // admission bookkeeping: all searches drained -> nothing in flight
+    let a = engine.collection("tenant-a").expect("registered");
+    assert_eq!(
+        a.admission().inflight.load(std::sync::atomic::Ordering::Acquire),
+        0
+    );
+    assert_eq!(
+        b.admission().pending_mutations.load(std::sync::atomic::Ordering::Acquire),
+        0
+    );
+    assert!(b.admission().mutations.load(std::sync::atomic::Ordering::Relaxed) >= n_rounds as u64);
+    let leftovers = engine.shutdown();
+    assert!(leftovers.is_empty(), "everything drained before shutdown");
+}
+
+/// Per-tenant quota isolation through the engine: a tiny mutation quota
+/// on one collection rejects with `QuotaExceeded` without touching the
+/// other collection's admission.
+#[test]
+fn quota_exceeded_isolated_per_collection() {
+    let ds = dataset("shard-quota", 600, 48, 17);
+    let mk_live = || {
+        ShardedIndex::build_live(
+            &ds.database,
+            Some(&ds.learn_queries),
+            ds.similarity,
+            ShardSpec::new(2),
+            1,
+            configure,
+        )
+    };
+    let mut registry = CollectionRegistry::new();
+    registry.register(Collection::new("small", mk_live()).with_quota(TenantQuota {
+        max_inflight: 0,
+        max_pending_mutations: 1,
+    }));
+    registry.register(Collection::new("big", mk_live()));
+    let mut engine = Engine::start_collections(
+        registry,
+        EngineConfig {
+            workers: 1,
+            ..EngineConfig::default()
+        },
+    );
+    // backlog the single ingest lane with "big" mutations, then submit
+    // two to "small": the first fills its 1-deep pending quota, and the
+    // second must reject because the lane is still chewing the backlog.
+    for i in 0..400u32 {
+        engine.submit_delete_to("big", i % 600).expect("big unbounded");
+    }
+    let mut rejected = 0usize;
+    for i in 0..8u32 {
+        match engine.submit_delete_to("small", i) {
+            Ok(()) => {}
+            Err(EngineError::QuotaExceeded { collection }) => {
+                assert_eq!(collection, "small");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(rejected > 0, "a 1-deep mutation quota never rejected behind a 400-deep backlog");
+    let small = engine.collection("small").expect("registered");
+    assert!(small.admission().rejected.load(std::sync::atomic::Ordering::Relaxed) >= rejected as u64);
+    let big = engine.collection("big").expect("registered");
+    assert_eq!(big.admission().rejected.load(std::sync::atomic::Ordering::Relaxed), 0);
+    engine.quiesce_mutations();
+    engine.shutdown();
+}
