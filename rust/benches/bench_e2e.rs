@@ -242,12 +242,122 @@ fn bench_sharded(
     ])
 }
 
+/// Bigger-than-RAM serving arm: the same index served three ways —
+/// fully owned in RAM, mmap-backed with a warm page cache, and
+/// mmap-backed under an emulated memory cap of file_bytes/4 (every
+/// query batch is followed by `evict_mapped`, which drops the mapping's
+/// resident pages, so ~each pass refaults from disk the way a process
+/// whose resident set is capped at a quarter of the index would).
+/// Recall must be identical across all three — mmap changes where bytes
+/// live, never what they say. Resident-set numbers come from
+/// /proc/self/status. Returns the JSON fragment embedded under `"mmap"`
+/// in BENCH_search.json.
+fn bench_mmap(
+    ds: &leanvec::data::synth::Dataset,
+    gp: GraphParams,
+    truth: &[Vec<u32>],
+    k: usize,
+) -> Json {
+    use leanvec::graph::beam::SearchCtx;
+
+    const WINDOW: usize = 60;
+    let status_kib = |key: &str| -> f64 {
+        std::fs::read_to_string("/proc/self/status")
+            .ok()
+            .and_then(|s| {
+                s.lines()
+                    .find(|l| l.starts_with(key))
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|v| v.parse::<f64>().ok())
+            })
+            .unwrap_or(0.0)
+    };
+
+    let index = IndexBuilder::new()
+        .projection(ProjectionKind::OodEigSearch)
+        .target_dim(160)
+        .primary(Compression::Lvq8)
+        .secondary(Compression::F16)
+        .graph_params(gp)
+        .build(&ds.database, Some(&ds.learn_queries), ds.similarity);
+    let path = std::env::temp_dir().join(format!("leanvec-bench-mmap-{}.leanvec", std::process::id()));
+    let file_bytes = index.save(&path, &SnapshotMeta::default()).expect("snapshot save");
+    let mem_cap = file_bytes / 4;
+    println!(
+        "\n== mmap serving ({:.1} MiB snapshot, emulated cap {:.1} MiB) ==",
+        file_bytes as f64 / (1024.0 * 1024.0),
+        mem_cap as f64 / (1024.0 * 1024.0)
+    );
+
+    let reqs: Vec<Query> = ds
+        .test_queries
+        .iter()
+        .map(|q| Query::new(q).k(k).window(WINDOW))
+        .collect();
+    // closed loop, one reused ctx, best of `passes`; `evict` drops the
+    // mapping's pages after every 64-query batch
+    let run = |ix: &LeanVecIndex, evict: bool, passes: usize| -> (f64, f64) {
+        let mut ctx = SearchCtx::new(ix.len());
+        let mut got: Vec<Vec<u32>> = Vec::new();
+        let mut best = f64::INFINITY;
+        for _ in 0..passes {
+            if evict {
+                ix.evict_mapped();
+            }
+            let t0 = std::time::Instant::now();
+            got.clear();
+            for (i, q) in reqs.iter().enumerate() {
+                if evict && i % 64 == 63 {
+                    ix.evict_mapped();
+                }
+                got.push(ix.search(&mut ctx, q).ids);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        (reqs.len() as f64 / best.max(1e-9), recall_at_k(&got, truth, k))
+    };
+
+    let (qps_owned, recall_owned) = run(&index, false, 3);
+    let rss_before = status_kib("VmRSS:");
+    let (mapped, _) = LeanVecIndex::load_mmap(&path).expect("mmap load");
+    assert!(mapped.is_mapped());
+    let (qps_warm, recall_warm) = run(&mapped, false, 3);
+    let rss_warm = status_kib("VmRSS:");
+    let (qps_capped, recall_capped) = run(&mapped, true, 2);
+    let vm_hwm = status_kib("VmHWM:");
+    println!(
+        "owned  : {qps_owned:>8.0} QPS  recall@{k} {recall_owned:.3}\n\
+         mmap   : {qps_warm:>8.0} QPS  recall@{k} {recall_warm:.3}  (warm cache)\n\
+         capped : {qps_capped:>8.0} QPS  recall@{k} {recall_capped:.3}  (evict every 64 queries)\n\
+         rss: {:.1} -> {:.1} MiB mapped-warm, peak {:.1} MiB",
+        rss_before / 1024.0,
+        rss_warm / 1024.0,
+        vm_hwm / 1024.0
+    );
+    assert_eq!(recall_owned, recall_warm, "mmap serving changed recall");
+    assert_eq!(recall_warm, recall_capped, "eviction changed recall");
+    std::fs::remove_file(&path).ok();
+    Json::obj(vec![
+        ("snapshot_bytes", Json::num(file_bytes as f64)),
+        ("emulated_cap_bytes", Json::num(mem_cap as f64)),
+        ("window", Json::num(WINDOW as f64)),
+        ("k", Json::num(k as f64)),
+        ("qps_owned", Json::num(qps_owned)),
+        ("qps_mmap_warm", Json::num(qps_warm)),
+        ("qps_mmap_capped", Json::num(qps_capped)),
+        ("recall_at_k", Json::num(recall_capped)),
+        ("vm_rss_warm_kib", Json::num(rss_warm)),
+        ("vm_hwm_kib", Json::num(vm_hwm)),
+    ])
+}
+
 fn bench_search_baseline(
     ds: &leanvec::data::synth::Dataset,
     gp: GraphParams,
     truth: &[Vec<u32>],
     k: usize,
     sharded: Json,
+    mmap: Json,
 ) {
     use leanvec::graph::beam::SearchCtx;
     use leanvec::index::flat::FlatIndex;
@@ -322,6 +432,7 @@ fn bench_search_baseline(
         ("recall_at_k_batch", Json::num(recall_batch)),
         ("flat_scan_qps", Json::num(flat_qps)),
         ("sharded", sharded),
+        ("mmap", mmap),
     ]);
     match std::fs::write("BENCH_search.json", out.to_pretty()) {
         Ok(()) => println!("[saved BENCH_search.json]"),
@@ -518,8 +629,11 @@ fn main() {
     // sharded scatter-gather arm (embedded into BENCH_search.json)
     let sharded = bench_sharded(&ds, gp, &truth, k);
 
+    // bigger-than-RAM mmap serving arm (embedded into BENCH_search.json)
+    let mmap = bench_mmap(&ds, gp, &truth, k);
+
     // fixed-window search QPS + recall anchor -> BENCH_search.json
-    bench_search_baseline(&ds, gp, &truth, k, sharded);
+    bench_search_baseline(&ds, gp, &truth, k, sharded, mmap);
 
     // parallel build speedup trajectory -> BENCH_build.json
     bench_build_trajectory(&ds, gp, &truth, k);
@@ -601,6 +715,18 @@ fn roll_history() {
         (
             "sharded_speedup_at_matched_recall",
             Json::num(pick(&search, &["sharded", "speedup_at_matched_recall"])),
+        ),
+        (
+            "mmap_qps_warm",
+            Json::num(pick(&search, &["mmap", "qps_mmap_warm"])),
+        ),
+        (
+            "mmap_qps_capped",
+            Json::num(pick(&search, &["mmap", "qps_mmap_capped"])),
+        ),
+        (
+            "mmap_vm_hwm_kib",
+            Json::num(pick(&search, &["mmap", "vm_hwm_kib"])),
         ),
         ("build_best_total_seconds", Json::num(best_build)),
         (

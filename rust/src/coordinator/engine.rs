@@ -195,7 +195,26 @@ impl Engine {
     where
         F: FnOnce(&crate::index::persist::SnapshotMeta) -> EngineConfig,
     {
-        let (index, meta) = LeanVecIndex::load(path)?;
+        Engine::start_from_snapshot_with(path, None, cfg)
+    }
+
+    /// [`Engine::start_from_snapshot`] with an explicit residency
+    /// choice: `Some(policy)` serves straight off a memory map of the
+    /// snapshot file ([`LeanVecIndex::load_mmap_with`]) so an index
+    /// larger than RAM can serve; `None` decodes into owned memory
+    /// (honoring `LEANVEC_FORCE_MMAP`, like [`LeanVecIndex::load`]).
+    pub fn start_from_snapshot_with<F>(
+        path: &std::path::Path,
+        mmap: Option<crate::index::persist::MmapPolicy>,
+        cfg: F,
+    ) -> Result<(Engine, crate::index::persist::SnapshotMeta), crate::index::persist::SnapshotError>
+    where
+        F: FnOnce(&crate::index::persist::SnapshotMeta) -> EngineConfig,
+    {
+        let (index, meta) = match mmap {
+            Some(policy) => LeanVecIndex::load_mmap_with(path, policy)?,
+            None => LeanVecIndex::load(path)?,
+        };
         let cfg = cfg(&meta);
         Ok((Engine::start(Arc::new(index), cfg), meta))
     }

@@ -122,6 +122,13 @@ pub mod bin {
             self.buf.len() - self.pos
         }
 
+        /// Absolute position within the underlying buffer. Zero-copy
+        /// section views use this to translate cursor-relative reads
+        /// into offsets inside a memory-mapped snapshot.
+        pub fn pos(&self) -> usize {
+            self.pos
+        }
+
         /// Take `n` raw bytes.
         pub fn take(&mut self, n: usize) -> std::io::Result<&'a [u8]> {
             if self.remaining() < n {
@@ -157,7 +164,7 @@ pub mod bin {
         }
 
         /// Sanity-checked length prefix: must fit in the bytes left.
-        fn get_len(&mut self, elem_bytes: usize) -> std::io::Result<usize> {
+        pub(crate) fn get_len(&mut self, elem_bytes: usize) -> std::io::Result<usize> {
             let n = self.get_u64()? as usize;
             match n.checked_mul(elem_bytes) {
                 Some(b) if b <= self.remaining() => Ok(n),

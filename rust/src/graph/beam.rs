@@ -314,12 +314,50 @@ pub fn greedy_search_ext<'a, S, N>(
     window: usize,
     capacity: usize,
     filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
-    mut score_block_fn: S,
-    mut neighbors_fn: N,
+    score_block_fn: S,
+    neighbors_fn: N,
 ) -> &'a [Candidate]
 where
     S: FnMut(&[u32], &mut Vec<f32>),
     N: FnMut(u32, &mut Vec<u32>),
+{
+    greedy_search_prefetch(
+        ctx,
+        entries,
+        window,
+        capacity,
+        filter,
+        score_block_fn,
+        neighbors_fn,
+        |_| {},
+    )
+}
+
+/// [`greedy_search_ext`] plus a *next-hop prefetch hook*: right before
+/// each hop's neighbor block is scored, `prefetch_fn(next)` is called
+/// with the id of the best still-unexpanded candidate — the node most
+/// likely to be expanded next. The serving path passes a hook that
+/// issues software prefetch for that node's adjacency row and its
+/// neighbors' code rows, so the memory traffic of hop `h+1` (cache
+/// lines, and on an mmap-served index resident page-cache fills)
+/// overlaps the scoring kernels of hop `h`. The hook is purely a hint:
+/// traversal order, scores, and stats are bit-identical to
+/// [`greedy_search_ext`] for every hook, including the no-op.
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_search_prefetch<'a, S, N, P>(
+    ctx: &'a mut SearchCtx,
+    entries: &[u32],
+    window: usize,
+    capacity: usize,
+    filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
+    mut score_block_fn: S,
+    mut neighbors_fn: N,
+    mut prefetch_fn: P,
+) -> &'a [Candidate]
+where
+    S: FnMut(&[u32], &mut Vec<f32>),
+    N: FnMut(u32, &mut Vec<u32>),
+    P: FnMut(u32),
 {
     ctx.begin();
     let capacity = capacity.max(window);
@@ -360,6 +398,12 @@ where
             if ctx.mark_visited(nb) {
                 batch.push(nb);
             }
+        }
+        // the current node is already marked expanded, so this names
+        // the best remaining candidate — the likely next hop. Start
+        // pulling its rows in while the current block's kernels run.
+        if let Some(next) = ctx.next_unexpanded(window) {
+            prefetch_fn(ctx.buffer[next].id);
         }
         scores.clear();
         score_block_fn(&batch, &mut scores);

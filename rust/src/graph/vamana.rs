@@ -9,7 +9,7 @@
 
 use crate::config::{GraphParams, Similarity};
 use crate::data::io::bin;
-use crate::graph::beam::{greedy_search_ext, CtxPool, SearchCtx};
+use crate::graph::beam::{greedy_search_ext, greedy_search_prefetch, CtxPool, SearchCtx};
 use crate::linalg::matrix::l2_sq;
 use crate::quant::ScoreStore;
 use crate::util::threadpool::{parallel_map, resolve_threads};
@@ -20,12 +20,31 @@ use crate::util::threadpool::{parallel_map, resolve_threads};
 /// the same frozen snapshot regardless of how many workers execute them.
 const PARALLEL_ROUND: usize = 128;
 
-/// Fixed-max-degree adjacency stored as one flat u32 block per node.
+/// Adjacency storage: the mutable build/serve path keeps one flat
+/// fixed-max-degree u32 slab per node; an mmap-loaded graph keeps the
+/// snapshot's packed CSR lists *borrowed* from the mapping (offsets
+/// owned, neighbor block zero-copy). Any mutation of a CSR graph
+/// transparently re-pads it into a slab first.
+enum AdjRepr {
+    Slab {
+        flat: Vec<u32>,
+        len: Vec<u32>,
+    },
+    Csr {
+        /// n+1 prefix sums over the per-node degrees
+        offsets: Vec<u64>,
+        /// every neighbor list concatenated, typically mmap-borrowed
+        nbrs: crate::util::mmap::Arr<u32>,
+    },
+}
+
+/// Fixed-max-degree adjacency stored as one flat u32 block per node
+/// (or, for a frozen mmap-served graph, as borrowed CSR lists — see
+/// [`AdjRepr`]; the accessor API is identical either way).
 pub struct Adjacency {
     n: usize,
     max_degree: usize,
-    flat: Vec<u32>,
-    len: Vec<u32>,
+    repr: AdjRepr,
 }
 
 impl Adjacency {
@@ -33,38 +52,111 @@ impl Adjacency {
         Adjacency {
             n,
             max_degree,
-            flat: vec![0; n * max_degree],
-            len: vec![0; n],
+            repr: AdjRepr::Slab {
+                flat: vec![0; n * max_degree],
+                len: vec![0; n],
+            },
+        }
+    }
+
+    /// Wrap already-validated CSR lists (degree prefix sums + packed
+    /// neighbor block, typically borrowed from a mapped snapshot).
+    pub(crate) fn from_csr(
+        n: usize,
+        max_degree: usize,
+        offsets: Vec<u64>,
+        nbrs: crate::util::mmap::Arr<u32>,
+    ) -> Adjacency {
+        debug_assert_eq!(offsets.len(), n + 1);
+        debug_assert_eq!(*offsets.last().unwrap_or(&0) as usize, nbrs.len());
+        Adjacency {
+            n,
+            max_degree,
+            repr: AdjRepr::Csr { offsets, nbrs },
+        }
+    }
+
+    /// True when the neighbor lists are served from the frozen CSR
+    /// (i.e. this graph came through `load_mmap` and was not mutated).
+    pub fn is_csr(&self) -> bool {
+        matches!(self.repr, AdjRepr::Csr { .. })
+    }
+
+    /// Re-pad the CSR lists into the mutable slab layout. No-op when
+    /// already a slab; copies the borrowed neighbor block exactly once.
+    fn make_slab(&mut self) {
+        if let AdjRepr::Csr { offsets, nbrs } = &self.repr {
+            let mut flat = vec![0u32; self.n * self.max_degree];
+            let mut len = vec![0u32; self.n];
+            for i in 0..self.n {
+                let (a, b) = (offsets[i] as usize, offsets[i + 1] as usize);
+                let deg = b - a;
+                flat[i * self.max_degree..i * self.max_degree + deg]
+                    .copy_from_slice(&nbrs[a..b]);
+                len[i] = deg as u32;
+            }
+            self.repr = AdjRepr::Slab { flat, len };
         }
     }
 
     #[inline]
     pub fn neighbors(&self, id: u32) -> &[u32] {
         let i = id as usize;
-        &self.flat[i * self.max_degree..i * self.max_degree + self.len[i] as usize]
+        match &self.repr {
+            AdjRepr::Slab { flat, len } => {
+                &flat[i * self.max_degree..i * self.max_degree + len[i] as usize]
+            }
+            AdjRepr::Csr { offsets, nbrs } => {
+                &nbrs[offsets[i] as usize..offsets[i + 1] as usize]
+            }
+        }
     }
 
     pub fn set_neighbors(&mut self, id: u32, list: &[u32]) {
+        self.make_slab();
         let i = id as usize;
         let k = list.len().min(self.max_degree);
-        self.flat[i * self.max_degree..i * self.max_degree + k].copy_from_slice(&list[..k]);
-        self.len[i] = k as u32;
+        match &mut self.repr {
+            AdjRepr::Slab { flat, len } => {
+                flat[i * self.max_degree..i * self.max_degree + k].copy_from_slice(&list[..k]);
+                len[i] = k as u32;
+            }
+            AdjRepr::Csr { .. } => unreachable!("make_slab just ran"),
+        }
     }
 
     /// Append one neighbor; returns false when full.
     pub fn push_neighbor(&mut self, id: u32, nb: u32) -> bool {
+        self.make_slab();
         let i = id as usize;
-        let l = self.len[i] as usize;
-        if l >= self.max_degree {
-            return false;
+        match &mut self.repr {
+            AdjRepr::Slab { flat, len } => {
+                let l = len[i] as usize;
+                if l >= self.max_degree {
+                    return false;
+                }
+                flat[i * self.max_degree + l] = nb;
+                len[i] = (l + 1) as u32;
+                true
+            }
+            AdjRepr::Csr { .. } => unreachable!("make_slab just ran"),
         }
-        self.flat[i * self.max_degree + l] = nb;
-        self.len[i] = (l + 1) as u32;
-        true
     }
 
     pub fn degree(&self, id: u32) -> usize {
-        self.len[id as usize] as usize
+        match &self.repr {
+            AdjRepr::Slab { len, .. } => len[id as usize] as usize,
+            AdjRepr::Csr { offsets, .. } => {
+                let i = id as usize;
+                (offsets[i + 1] - offsets[i]) as usize
+            }
+        }
+    }
+
+    /// Per-node degrees as a fresh vector (the snapshot writer's CSR
+    /// difference form).
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.n as u32).map(|i| self.degree(i) as u32).collect()
     }
 
     pub fn len_nodes(&self) -> usize {
@@ -76,7 +168,8 @@ impl Adjacency {
     }
 
     pub fn avg_degree(&self) -> f64 {
-        self.len.iter().map(|&l| l as f64).sum::<f64>() / self.n.max(1) as f64
+        let total: f64 = (0..self.n as u32).map(|i| self.degree(i) as f64).sum();
+        total / self.n.max(1) as f64
     }
 }
 
@@ -96,7 +189,13 @@ impl VamanaGraph {
     /// difference form), then every neighbor list concatenated without
     /// the fixed-degree padding [`Adjacency`] keeps in memory. Byte
     /// layout: `docs/SNAPSHOT_FORMAT.md`.
-    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+    ///
+    /// Returns the alignment anchor: the offset within `out` of the
+    /// raw degree-array data. The packed neighbor block follows at
+    /// `anchor + 4n + 8`, so anchoring the degrees on a 64-byte
+    /// boundary makes the neighbor block 4-aligned too — both arrays
+    /// then borrow cleanly under `load_mmap`.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) -> usize {
         let n = self.adj.len_nodes();
         bin::put_u64(out, n as u64);
         bin::put_u32(out, self.adj.max_degree() as u32);
@@ -106,20 +205,36 @@ impl VamanaGraph {
         bin::put_u8(out, self.sim.code());
         bin::put_u32(out, self.medoid);
         bin::put_f64(out, self.build_seconds);
-        bin::put_u32s(out, &self.adj.len);
-        let total: usize = self.adj.len.iter().map(|&l| l as usize).sum();
+        let degrees = self.adj.degrees();
+        let anchor = out.len() + 8; // degree u32 data after the u64 count
+        bin::put_u32s(out, &degrees);
+        let total: usize = degrees.iter().map(|&l| l as usize).sum();
         bin::put_u64(out, total as u64);
         for id in 0..n as u32 {
             for &nb in self.adj.neighbors(id) {
                 out.extend_from_slice(&nb.to_le_bytes());
             }
         }
+        anchor
     }
 
     /// Inverse of [`VamanaGraph::write_bytes`], re-padding the CSR lists
     /// into the fixed-max-degree layout. Validates every degree and
     /// neighbor id so a corrupted section errors instead of panicking.
     pub fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<VamanaGraph> {
+        Self::read_bytes_src(cur, None)
+    }
+
+    /// [`VamanaGraph::read_bytes`] with an optional mmap backing: when
+    /// `src` is given the packed neighbor block stays *borrowed* from
+    /// the mapping as frozen CSR lists (the owned path re-pads into
+    /// the mutable slab exactly as before). Every validation — degree
+    /// bounds, neighbor-id range, edge-count cross-check, the anti-OOM
+    /// slab guard — runs identically on both paths.
+    pub fn read_bytes_src(
+        cur: &mut bin::Cursor,
+        src: Option<&crate::util::mmap::SectionSrc>,
+    ) -> std::io::Result<VamanaGraph> {
         let bad = |what: &str| {
             std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
@@ -158,24 +273,65 @@ impl VamanaGraph {
             Some(slots) if max_degree <= (1 << 20) && (slots as u64) <= (1u64 << 33) => {}
             _ => return Err(bad("adjacency slab implausibly large")),
         }
-        let mut adj = Adjacency::new(n, max_degree);
-        let mut list = Vec::with_capacity(max_degree);
-        for (i, &deg) in degrees.iter().enumerate() {
-            let deg = deg as usize;
-            if deg > max_degree {
-                return Err(bad("degree exceeds max_degree"));
+        let adj = if let Some(s) = src {
+            // mmap path: validate the whole packed block, then borrow
+            // it (falling back to an owned copy if misaligned) behind
+            // owned prefix-sum offsets
+            let mut offsets = Vec::with_capacity(n + 1);
+            let mut acc = 0u64;
+            offsets.push(0);
+            for &deg in &degrees {
+                if deg as usize > max_degree {
+                    return Err(bad("degree exceeds max_degree"));
+                }
+                acc += deg as u64;
+                offsets.push(acc);
             }
-            let raw = cur.take(deg * 4)?;
-            list.clear();
+            let block_off = cur.pos();
+            let raw = cur.take(total * 4)?;
             for c in raw.chunks_exact(4) {
                 let nb = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
                 if nb as usize >= n {
                     return Err(bad("neighbor id out of range"));
                 }
-                list.push(nb);
             }
-            adj.set_neighbors(i as u32, &list);
-        }
+            let nbrs = match crate::util::mmap::Arr::<u32>::from_map(
+                &s.map,
+                s.base + block_off,
+                total,
+            ) {
+                Some(arr) => arr,
+                None => {
+                    s.note_fallback();
+                    crate::util::mmap::Arr::Owned(
+                        raw.chunks_exact(4)
+                            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                            .collect(),
+                    )
+                }
+            };
+            Adjacency::from_csr(n, max_degree, offsets, nbrs)
+        } else {
+            let mut adj = Adjacency::new(n, max_degree);
+            let mut list = Vec::with_capacity(max_degree);
+            for (i, &deg) in degrees.iter().enumerate() {
+                let deg = deg as usize;
+                if deg > max_degree {
+                    return Err(bad("degree exceeds max_degree"));
+                }
+                let raw = cur.take(deg * 4)?;
+                list.clear();
+                for c in raw.chunks_exact(4) {
+                    let nb = u32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                    if nb as usize >= n {
+                        return Err(bad("neighbor id out of range"));
+                    }
+                    list.push(nb);
+                }
+                adj.set_neighbors(i as u32, &list);
+            }
+            adj
+        };
         Ok(VamanaGraph {
             adj,
             medoid,
@@ -214,7 +370,7 @@ impl VamanaGraph {
         filter: Option<&(dyn Fn(u32) -> bool + Sync)>,
     ) -> &'c [crate::graph::beam::Candidate] {
         ctx.ensure(self.adj.len_nodes());
-        greedy_search_ext(
+        greedy_search_prefetch(
             ctx,
             &[self.medoid],
             window,
@@ -224,6 +380,15 @@ impl VamanaGraph {
             |id, out| {
                 out.clear();
                 out.extend_from_slice(self.adj.neighbors(id));
+            },
+            // next-hop hint: pull the likely next node's adjacency row
+            // and its neighbors' code rows toward the caches while the
+            // current hop's block scores (cold-page/cold-line overlap
+            // for mmap-served indexes)
+            |next| {
+                let nbrs = self.adj.neighbors(next);
+                crate::simd::prefetch_row(nbrs);
+                store.prefetch_rows(nbrs);
             },
         )
     }

@@ -267,6 +267,7 @@ impl IndexBuilder {
             primary_compression: self.primary,
             secondary_compression: self.secondary,
             build_breakdown: breakdown,
+            backing: None,
         }
     }
 }

@@ -88,6 +88,11 @@ pub struct LeanVecIndex {
     /// wall-clock seconds: projection training + database projection +
     /// quantization + graph build (Fig. 6 decomposition)
     pub build_breakdown: BuildBreakdown,
+    /// The memory map backing any borrowed arrays when the index came
+    /// from [`LeanVecIndex::load_mmap`]; `None` for built or
+    /// conventionally loaded indexes. Holding it here keeps the mapping
+    /// alive exactly as long as the views into it.
+    pub backing: Option<std::sync::Arc<crate::util::mmap::Mmap>>,
 }
 
 /// Wall-clock decomposition of one index build (Fig. 6). Persisted in
@@ -217,6 +222,33 @@ impl LeanVecIndex {
     pub fn primary_compression_vs_fp16(&self) -> f64 {
         let full_fp16 = self.model.input_dim() * 2;
         full_fp16 as f64 / self.primary.bytes_per_vector() as f64
+    }
+
+    /// Is this index serving any arrays directly off a memory-mapped
+    /// snapshot (see [`LeanVecIndex::load_mmap`])?
+    pub fn is_mapped(&self) -> bool {
+        self.backing.is_some()
+    }
+
+    /// Bytes of the snapshot file backing this index's mapped arrays
+    /// (0 when not mapped). An upper bound on what the mapping can pin
+    /// in page cache; the resident portion at any instant is whatever
+    /// the kernel has kept.
+    pub fn mapped_bytes(&self) -> usize {
+        self.backing.as_ref().map(|m| m.len()).unwrap_or(0)
+    }
+
+    /// Ask the kernel to drop any resident pages of the backing mapping
+    /// (`madvise(MADV_DONTNEED)`). Purely advisory and always safe —
+    /// the mapping is a read-only file view, so dropped pages refault
+    /// from disk on next touch. The memory-capped benchmark arm calls
+    /// this between batches to emulate serving under page-cache
+    /// pressure; a no-op for non-mapped indexes.
+    pub fn evict_mapped(&self) {
+        if let Some(m) = &self.backing {
+            m.advise(crate::util::mmap::Advice::DontNeed);
+            m.advise(crate::util::mmap::Advice::Random);
+        }
     }
 }
 

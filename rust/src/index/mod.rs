@@ -17,5 +17,5 @@ pub use builder::{IndexBuilder, SearchIndex};
 pub use flat::FlatIndex;
 pub use ivfpq::{IvfPqIndex, IvfPqParams};
 pub use leanvec_index::{LeanVecIndex, SearchParams};
-pub use persist::{SnapshotError, SnapshotMeta};
+pub use persist::{MmapPolicy, SnapshotError, SnapshotMeta, Tier};
 pub use query::{Query, QueryStats, SearchResult, VectorIndex};

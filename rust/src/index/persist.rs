@@ -33,14 +33,17 @@
 
 use std::fmt;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::config::{BuildParams, Compression, ProjectionKind, Similarity};
 use crate::data::io::{bin, crc32};
 use crate::graph::vamana::VamanaGraph;
 use crate::index::leanvec_index::{BuildBreakdown, LeanVecIndex, SearchParams};
 use crate::leanvec::model::LeanVecModel;
-use crate::quant::read_store;
+use crate::quant::read_store_src;
 use crate::util::json::Json;
+use crate::util::mmap::{Advice, Mmap, SectionSrc};
 
 /// First 8 bytes of every snapshot.
 pub const MAGIC: [u8; 8] = *b"LEANVEC\0";
@@ -96,6 +99,13 @@ pub enum SnapshotError {
     MissingSection(String),
     /// A payload passed its checksum but is internally inconsistent.
     Corrupt(String),
+    /// An error loading one shard of a sharded collection, tagged with
+    /// the shard file's name so the operator knows *which* file to
+    /// restore.
+    Shard {
+        file: String,
+        source: Box<SnapshotError>,
+    },
 }
 
 impl fmt::Display for SnapshotError {
@@ -115,6 +125,9 @@ impl fmt::Display for SnapshotError {
                 write!(f, "snapshot is missing required section '{tag}'")
             }
             SnapshotError::Corrupt(what) => write!(f, "snapshot corrupt: {what}"),
+            SnapshotError::Shard { file, source } => {
+                write!(f, "shard '{file}': {source}")
+            }
         }
     }
 }
@@ -123,6 +136,7 @@ impl std::error::Error for SnapshotError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             SnapshotError::Io(e) => Some(e),
+            SnapshotError::Shard { source, .. } => Some(source.as_ref()),
             _ => None,
         }
     }
@@ -143,15 +157,32 @@ impl From<std::io::Error> for SnapshotError {
 /// rewrite snapshots without understanding every payload.
 ///
 /// Payloads are owned (`Vec<u8>`) rather than borrowed from the file
-/// buffer so sections can be edited and re-written; the cost is a
-/// transient ~2x snapshot size in memory during load. If that ever
-/// bites at scale, the parse layer can grow a borrowing variant (or
-/// mmap) without changing the on-disk format.
+/// buffer so sections can be edited and re-written; the zero-copy
+/// serve path ([`LeanVecIndex::load_mmap`]) bypasses this type and
+/// borrows section windows straight from the mapping instead.
 pub struct RawSection {
     /// 8-byte tag, NUL-padded ASCII (e.g. [`SECTION_META`]).
     pub tag: [u8; 8],
     /// The section payload, exactly as stored.
     pub bytes: Vec<u8>,
+    /// Alignment anchor: byte offset *within the payload* of the
+    /// section's dominant typed array. The writer pads the section's
+    /// file offset so `file_offset + anchor` is 64-byte aligned,
+    /// letting `load_mmap` reinterpret that array in place. `0` (align
+    /// the payload start) is always safe — sections read back from a
+    /// file or written by pre-alignment callers use it.
+    pub anchor: usize,
+}
+
+impl RawSection {
+    /// A section with the default anchor (payload start aligned).
+    pub fn new(tag: [u8; 8], bytes: Vec<u8>) -> RawSection {
+        RawSection {
+            tag,
+            bytes,
+            anchor: 0,
+        }
+    }
 }
 
 /// Printable form of a section tag (trailing NULs stripped).
@@ -160,8 +191,21 @@ pub fn tag_str(tag: &[u8; 8]) -> String {
     String::from_utf8_lossy(&tag[..end]).into_owned()
 }
 
+/// Alignment the writer guarantees for every section's anchor byte
+/// (see [`RawSection::anchor`]): one cache line, and a multiple of
+/// every scalar alignment the stores use, so `load_mmap` can
+/// reinterpret the anchored arrays in place.
+pub const SECTION_ALIGN: u64 = 64;
+
 /// Serialize `sections` to `path` with the snapshot header and section
 /// table. Returns the number of bytes written.
+///
+/// Each section's payload is placed so that `offset + anchor` is
+/// [`SECTION_ALIGN`]-aligned, with zero bytes padding the gap before
+/// it. Readers never see the padding — the section table records exact
+/// offsets, and the parser has always tolerated gaps between payloads,
+/// so pre-alignment readers parse aligned files unchanged (no format
+/// version bump).
 ///
 /// The write is atomic-by-rename: everything is streamed to
 /// `<path>.tmp` and renamed over `path` only once complete, so a crash
@@ -188,7 +232,15 @@ pub fn write_sections_versioned(
     bin::put_u32(&mut header, version);
     bin::put_u32(&mut header, sections.len() as u32);
     let mut offset = header_len as u64;
+    // zero padding before each payload so its anchor lands on a
+    // SECTION_ALIGN boundary; deterministic (pure function of the
+    // sections), so byte-determinism of snapshots is preserved
+    let mut pads = Vec::with_capacity(sections.len());
     for s in sections {
+        let anchored = offset + s.anchor as u64;
+        let pad = (SECTION_ALIGN - anchored % SECTION_ALIGN) % SECTION_ALIGN;
+        pads.push(pad as usize);
+        offset += pad;
         header.extend_from_slice(&s.tag);
         bin::put_u64(&mut header, offset);
         bin::put_u64(&mut header, s.bytes.len() as u64);
@@ -201,10 +253,12 @@ pub fn write_sections_versioned(
         os.push(".tmp");
         std::path::PathBuf::from(os)
     };
+    let zeros = [0u8; SECTION_ALIGN as usize];
     let write_all = || -> std::io::Result<()> {
         let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
         w.write_all(&header)?;
-        for s in sections {
+        for (s, &pad) in sections.iter().zip(&pads) {
+            w.write_all(&zeros[..pad])?;
             w.write_all(&s.bytes)?;
         }
         w.flush()?;
@@ -248,12 +302,21 @@ pub fn parse_sections(buf: &[u8]) -> Result<Vec<RawSection>, SnapshotError> {
     Ok(sections)
 }
 
-/// Parse header + section table + checksummed payloads, accepting any
-/// format version up to `max_version`.
-fn parse_sections_any(
-    buf: &[u8],
-    max_version: u32,
-) -> Result<(u32, Vec<RawSection>), SnapshotError> {
+/// Location of one verified section within a snapshot buffer — the
+/// borrowed core of [`parse_sections_any`], shared with the zero-copy
+/// mmap load path (which must not materialize payload copies).
+struct SectionLoc {
+    tag: [u8; 8],
+    offset: usize,
+    len: usize,
+}
+
+/// Parse header + section table, bounds-check every entry, and verify
+/// every payload's CRC-32 **in place** (no copies). Every byte of every
+/// payload is checksummed before this returns, which is what lets the
+/// mmap path hand out borrowed views afterwards: no mapped section is
+/// trusted before its checksum passes.
+fn parse_locs(buf: &[u8], max_version: u32) -> Result<(u32, Vec<SectionLoc>), SnapshotError> {
     if buf.len() >= 8 && buf[..8] != MAGIC {
         return Err(SnapshotError::BadMagic);
     }
@@ -273,7 +336,7 @@ fn parse_sections_any(
         Some(e) if e <= buf.len() => e,
         _ => return Err(SnapshotError::Truncated("section table".into())),
     };
-    let mut sections = Vec::with_capacity(count);
+    let mut locs = Vec::with_capacity(count);
     for i in 0..count {
         let e = 16 + i * ENTRY;
         let mut tag = [0u8; 8];
@@ -290,14 +353,32 @@ fn parse_sections_any(
                 )))
             }
         };
-        let bytes = buf[offset as usize..end as usize].to_vec();
-        if crc32(&bytes) != crc {
+        let bytes = &buf[offset as usize..end as usize];
+        if crc32(bytes) != crc {
             return Err(SnapshotError::ChecksumMismatch {
                 section: tag_str(&tag),
             });
         }
-        sections.push(RawSection { tag, bytes });
+        locs.push(SectionLoc {
+            tag,
+            offset: offset as usize,
+            len: len as usize,
+        });
     }
+    Ok((version, locs))
+}
+
+/// Parse header + section table + checksummed payloads, accepting any
+/// format version up to `max_version`.
+fn parse_sections_any(
+    buf: &[u8],
+    max_version: u32,
+) -> Result<(u32, Vec<RawSection>), SnapshotError> {
+    let (version, locs) = parse_locs(buf, max_version)?;
+    let sections = locs
+        .into_iter()
+        .map(|l| RawSection::new(l.tag, buf[l.offset..l.offset + l.len].to_vec()))
+        .collect();
     Ok((version, sections))
 }
 
@@ -414,6 +495,64 @@ fn meta_from_json(j: &Json) -> (SnapshotMeta, BuildBreakdown, Option<Similarity>
     (meta, breakdown, sim)
 }
 
+/// How one tier of a mapped index is backed (see [`MmapPolicy`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Borrow the tier's arrays straight from the mapping: resident
+    /// only while the kernel keeps the pages cached, evictable under
+    /// memory pressure.
+    Mapped,
+    /// Decode the tier into owned heap memory at load time — always
+    /// resident, immune to page-cache eviction, costs RAM.
+    Resident,
+}
+
+/// Per-tier residency policy for [`LeanVecIndex::load_mmap_with`].
+///
+/// `codes` covers the hot traversal state (primary store + graph
+/// adjacency); `rerank` covers the secondary (re-ranking) store, which
+/// is usually the bulk of the bytes and the natural candidate to leave
+/// on disk. The projection model and metadata are always resident
+/// (small, touched every query).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MmapPolicy {
+    /// Primary store + graph adjacency.
+    pub codes: Tier,
+    /// Secondary (re-ranking) store.
+    pub rerank: Tier,
+}
+
+impl Default for MmapPolicy {
+    /// Everything mapped — minimum resident set.
+    fn default() -> MmapPolicy {
+        MmapPolicy {
+            codes: Tier::Mapped,
+            rerank: Tier::Mapped,
+        }
+    }
+}
+
+impl MmapPolicy {
+    /// Hot tiers resident, re-rank tier mapped: the "big vectors on
+    /// disk, small codes in RAM" serving split from the paper.
+    pub fn resident_codes() -> MmapPolicy {
+        MmapPolicy {
+            codes: Tier::Resident,
+            rerank: Tier::Mapped,
+        }
+    }
+}
+
+/// Was `LEANVEC_FORCE_MMAP` set (to anything but `0`/empty)? Checked
+/// per call — tests toggle it — unlike the once-per-process
+/// `LEANVEC_FORCE_SCALAR` pin.
+pub(crate) fn force_mmap_requested() -> bool {
+    match std::env::var("LEANVEC_FORCE_MMAP") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
 impl LeanVecIndex {
     /// Write the whole index to `path` as a versioned snapshot (see the
     /// [`crate::index::persist`] module docs for the format). Returns
@@ -453,9 +592,125 @@ impl LeanVecIndex {
     /// format version, truncation, checksum mismatch, or an internally
     /// inconsistent payload.
     pub fn load(path: &Path) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
+        if force_mmap_requested() {
+            return Self::load_mmap(path);
+        }
         let sections = read_sections(path)?;
         load_core_sections(&sections)
     }
+
+    /// [`LeanVecIndex::load`] off a read-only memory map with the
+    /// default policy (everything mapped; see [`MmapPolicy`]).
+    pub fn load_mmap(path: &Path) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
+        Self::load_mmap_with(path, MmapPolicy::default())
+    }
+
+    /// Load a snapshot by memory-mapping it and borrowing the large
+    /// arrays (codes, adjacency, per-vector constants) directly from
+    /// the mapping — startup does no bulk decode and the resident set
+    /// is whatever the kernel keeps cached, so an index larger than RAM
+    /// can serve.
+    ///
+    /// Semantics are identical to [`LeanVecIndex::load`]: same ids,
+    /// same score bits, same [`crate::index::query::QueryStats`], same
+    /// typed errors on damaged files. Every section's CRC-32 is
+    /// verified (one sequential pass over the file) **before** any
+    /// mapped bytes are trusted. Arrays whose mapped position is
+    /// misaligned for their element type — pre-alignment snapshots, or
+    /// the occasional small tail array — are decoded into owned memory
+    /// instead, with a warning to stderr; correctness is unaffected.
+    pub fn load_mmap_with(
+        path: &Path,
+        policy: MmapPolicy,
+    ) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
+        let snap = load_mmap_any(path, policy, FORMAT_VERSION)?;
+        Ok((snap.index, snap.meta))
+    }
+}
+
+/// A snapshot loaded off a memory map: the core index (with its
+/// `backing` set), plus owned copies of any non-core sections — the
+/// shard loader reads its small live-layout extras (TOMBS/IDMAP/MUTLOG)
+/// from there.
+pub(crate) struct MappedSnapshot {
+    pub version: u32,
+    pub index: LeanVecIndex,
+    pub meta: SnapshotMeta,
+    /// Sections other than the five core ones, owned (they are small).
+    pub extra: Vec<RawSection>,
+}
+
+/// The shared body of [`LeanVecIndex::load_mmap_with`] and the sharded
+/// directory loader, which must also accept pristine live-stamped shard
+/// files (`max_version = FORMAT_VERSION_LIVE`).
+pub(crate) fn load_mmap_any(
+    path: &Path,
+    policy: MmapPolicy,
+    max_version: u32,
+) -> Result<MappedSnapshot, SnapshotError> {
+    let map = Arc::new(Mmap::open(path).map_err(SnapshotError::Io)?);
+    // one sequential pass: table parse + every section's CRC — no
+    // mapped byte is trusted before its checksum passes
+    map.advise(Advice::Sequential);
+    let (version, locs) = parse_locs(map.as_slice(), max_version)?;
+    // serving touches rows in graph order, not file order
+    map.advise(Advice::Random);
+    let fallbacks = Arc::new(AtomicUsize::new(0));
+    let views: Vec<SectionView<'_>> = locs
+        .iter()
+        .map(|l| {
+            let tier = if l.tag == SECTION_PRIMARY || l.tag == SECTION_GRAPH {
+                policy.codes
+            } else if l.tag == SECTION_SECONDARY {
+                policy.rerank
+            } else {
+                Tier::Resident
+            };
+            let src = match tier {
+                Tier::Mapped => Some(SectionSrc {
+                    map: Arc::clone(&map),
+                    base: l.offset,
+                    fallbacks: Arc::clone(&fallbacks),
+                }),
+                Tier::Resident => None,
+            };
+            SectionView {
+                tag: l.tag,
+                bytes: &map.as_slice()[l.offset..l.offset + l.len],
+                src,
+            }
+        })
+        .collect();
+    let (mut index, meta) = load_core_views(&views)?;
+    drop(views);
+    let fell = fallbacks.load(Ordering::Relaxed);
+    if fell > 0 {
+        eprintln!(
+            "leanvec: load_mmap({}): {fell} array(s) decoded to owned memory \
+             (misaligned in file — pre-alignment snapshot or small tail array); \
+             results are unaffected",
+            path.display()
+        );
+    }
+    const CORE: [[u8; 8]; 5] = [
+        SECTION_META,
+        SECTION_MODEL,
+        SECTION_PRIMARY,
+        SECTION_SECONDARY,
+        SECTION_GRAPH,
+    ];
+    let extra = locs
+        .iter()
+        .filter(|l| !CORE.contains(&l.tag))
+        .map(|l| RawSection::new(l.tag, map.as_slice()[l.offset..l.offset + l.len].to_vec()))
+        .collect();
+    index.backing = Some(map);
+    Ok(MappedSnapshot {
+        version,
+        index,
+        meta,
+        extra,
+    })
 }
 
 /// Serialize the five core sections shared by frozen and live
@@ -471,33 +726,42 @@ pub(crate) fn core_sections(
     let mut model_bytes = Vec::new();
     model.write_bytes(&mut model_bytes);
     let mut primary_bytes = Vec::new();
-    primary.write_bytes(&mut primary_bytes);
+    let primary_anchor = primary.write_bytes(&mut primary_bytes);
     let mut secondary_bytes = Vec::new();
-    secondary.write_bytes(&mut secondary_bytes);
+    let secondary_anchor = secondary.write_bytes(&mut secondary_bytes);
     let mut graph_bytes = Vec::new();
-    graph.write_bytes(&mut graph_bytes);
+    let graph_anchor = graph.write_bytes(&mut graph_bytes);
     vec![
-        RawSection {
-            tag: SECTION_META,
-            bytes: meta_to_json(meta, facts).to_pretty().into_bytes(),
-        },
-        RawSection {
-            tag: SECTION_MODEL,
-            bytes: model_bytes,
-        },
+        RawSection::new(
+            SECTION_META,
+            meta_to_json(meta, facts).to_pretty().into_bytes(),
+        ),
+        RawSection::new(SECTION_MODEL, model_bytes),
         RawSection {
             tag: SECTION_PRIMARY,
             bytes: primary_bytes,
+            anchor: primary_anchor,
         },
         RawSection {
             tag: SECTION_SECONDARY,
             bytes: secondary_bytes,
+            anchor: secondary_anchor,
         },
         RawSection {
             tag: SECTION_GRAPH,
             bytes: graph_bytes,
+            anchor: graph_anchor,
         },
     ]
+}
+
+/// One section of a snapshot as the core loader consumes it: the
+/// payload bytes plus, when the bytes live in a memory map the loaded
+/// index may borrow from, the mapping context for zero-copy views.
+pub(crate) struct SectionView<'a> {
+    pub tag: [u8; 8],
+    pub bytes: &'a [u8],
+    pub src: Option<SectionSrc>,
 }
 
 /// Parse + cross-validate the five core sections into a
@@ -507,29 +771,47 @@ pub(crate) fn core_sections(
 pub(crate) fn load_core_sections(
     sections: &[RawSection],
 ) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
+    let views: Vec<SectionView<'_>> = sections
+        .iter()
+        .map(|s| SectionView {
+            tag: s.tag,
+            bytes: s.bytes.as_slice(),
+            src: None,
+        })
+        .collect();
+    load_core_views(&views)
+}
+
+/// [`load_core_sections`] over borrowed section windows: the owned path
+/// passes `src: None` everywhere (every array decoded to heap), the
+/// mmap path attaches a [`SectionSrc`] to the sections whose tier the
+/// [`MmapPolicy`] maps, and the store/graph readers borrow any suitably
+/// aligned array in place.
+pub(crate) fn load_core_views(
+    sections: &[SectionView<'_>],
+) -> Result<(LeanVecIndex, SnapshotMeta), SnapshotError> {
     {
-        let find = |tag: [u8; 8]| -> Result<&[u8], SnapshotError> {
+        let find = |tag: [u8; 8]| -> Result<&SectionView<'_>, SnapshotError> {
             sections
                 .iter()
                 .find(|s| s.tag == tag)
-                .map(|s| s.bytes.as_slice())
                 .ok_or_else(|| SnapshotError::MissingSection(tag_str(&tag)))
         };
 
         // META: JSON, parsed leniently (the extensible section)
-        let meta_bytes = find(SECTION_META)?;
+        let meta_bytes = find(SECTION_META)?.bytes;
         let meta_text = std::str::from_utf8(meta_bytes)
             .map_err(|_| SnapshotError::Corrupt("META is not UTF-8".into()))?;
         let meta_json = Json::parse(meta_text)
             .map_err(|e| SnapshotError::Corrupt(format!("META json: {e}")))?;
         let (meta, breakdown, meta_sim) = meta_from_json(&meta_json);
 
-        // MODEL
-        let model = LeanVecModel::read_bytes(&mut bin::Cursor::new(find(SECTION_MODEL)?))?;
+        // MODEL (always resident: small, touched every query)
+        let model = LeanVecModel::read_bytes(&mut bin::Cursor::new(find(SECTION_MODEL)?.bytes))?;
 
         // stores: payloads are self-describing (leading compression code)
-        let primary_bytes = find(SECTION_PRIMARY)?;
-        let secondary_bytes = find(SECTION_SECONDARY)?;
+        let primary_view = find(SECTION_PRIMARY)?;
+        let secondary_view = find(SECTION_SECONDARY)?;
         let store_kind = |bytes: &[u8], which: &str| -> Result<Compression, SnapshotError> {
             bytes
                 .first()
@@ -537,13 +819,23 @@ pub(crate) fn load_core_sections(
                 .and_then(Compression::from_code)
                 .ok_or_else(|| SnapshotError::Corrupt(format!("{which} store kind byte")))
         };
-        let primary_compression = store_kind(primary_bytes, "primary")?;
-        let secondary_compression = store_kind(secondary_bytes, "secondary")?;
-        let primary = read_store(&mut bin::Cursor::new(primary_bytes))?;
-        let secondary = read_store(&mut bin::Cursor::new(secondary_bytes))?;
+        let primary_compression = store_kind(primary_view.bytes, "primary")?;
+        let secondary_compression = store_kind(secondary_view.bytes, "secondary")?;
+        let primary = read_store_src(
+            &mut bin::Cursor::new(primary_view.bytes),
+            primary_view.src.as_ref(),
+        )?;
+        let secondary = read_store_src(
+            &mut bin::Cursor::new(secondary_view.bytes),
+            secondary_view.src.as_ref(),
+        )?;
 
         // GRAPH
-        let graph = VamanaGraph::read_bytes(&mut bin::Cursor::new(find(SECTION_GRAPH)?))?;
+        let graph_view = find(SECTION_GRAPH)?;
+        let graph = VamanaGraph::read_bytes_src(
+            &mut bin::Cursor::new(graph_view.bytes),
+            graph_view.src.as_ref(),
+        )?;
 
         // cross-section consistency: every section describes the same
         // collection or the snapshot is rejected
@@ -583,6 +875,7 @@ pub(crate) fn load_core_sections(
                 primary_compression,
                 secondary_compression,
                 build_breakdown: breakdown,
+                backing: None,
             },
             meta,
         ))
@@ -598,14 +891,8 @@ mod tests {
         let dir = std::env::temp_dir();
         let path = dir.join(format!("leanvec-persist-raw-{}.snap", std::process::id()));
         let sections = [
-            RawSection {
-                tag: SECTION_META,
-                bytes: b"{}".to_vec(),
-            },
-            RawSection {
-                tag: *b"FUTURE\0\0",
-                bytes: vec![1, 2, 3, 4, 5],
-            },
+            RawSection::new(SECTION_META, b"{}".to_vec()),
+            RawSection::new(*b"FUTURE\0\0", vec![1, 2, 3, 4, 5]),
         ];
         write_sections(&path, &sections).unwrap();
         let back = read_sections(&path).unwrap();
@@ -659,5 +946,64 @@ mod tests {
     fn tag_str_strips_padding() {
         assert_eq!(tag_str(&SECTION_META), "META");
         assert_eq!(tag_str(&SECTION_SECONDARY), "SECSTORE");
+    }
+
+    #[test]
+    fn writer_aligns_every_anchor_to_64() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("leanvec-persist-align-{}.snap", std::process::id()));
+        // awkward lengths and anchors on purpose
+        let sections = [
+            RawSection::new(SECTION_META, b"{\"k\":1}".to_vec()),
+            RawSection {
+                tag: *b"A\0\0\0\0\0\0\0",
+                bytes: vec![7u8; 129],
+                anchor: 13,
+            },
+            RawSection {
+                tag: *b"B\0\0\0\0\0\0\0",
+                bytes: vec![9u8; 65],
+                anchor: 61,
+            },
+        ];
+        write_sections(&path, &sections).unwrap();
+        let buf = std::fs::read(&path).unwrap();
+        let (_v, locs) = parse_locs(&buf, FORMAT_VERSION).unwrap();
+        assert_eq!(locs.len(), 3);
+        for (loc, s) in locs.iter().zip(&sections) {
+            assert_eq!(
+                (loc.offset + s.anchor) as u64 % SECTION_ALIGN,
+                0,
+                "section '{}' anchor not aligned",
+                tag_str(&loc.tag)
+            );
+            assert_eq!(&buf[loc.offset..loc.offset + loc.len], &s.bytes[..]);
+        }
+        // and the owned reader sees identical payloads through the padding
+        let back = read_sections(&path).unwrap();
+        for (b, s) in back.iter().zip(&sections) {
+            assert_eq!(b.bytes, s.bytes);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn aligned_writer_is_deterministic() {
+        let dir = std::env::temp_dir();
+        let p1 = dir.join(format!("leanvec-persist-det1-{}.snap", std::process::id()));
+        let p2 = dir.join(format!("leanvec-persist-det2-{}.snap", std::process::id()));
+        let sections = [
+            RawSection::new(SECTION_META, b"{}".to_vec()),
+            RawSection {
+                tag: SECTION_PRIMARY,
+                bytes: vec![3u8; 100],
+                anchor: 21,
+            },
+        ];
+        write_sections(&p1, &sections).unwrap();
+        write_sections(&p2, &sections).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
     }
 }

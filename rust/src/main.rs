@@ -78,6 +78,7 @@ fn print_usage() {
          repro build --dataset rqa-768 --shards 4 --threads 0 --index rqa-768.lvshards\n\
          repro search --index rqa-768.leanvec --window 50 --rerank-window 150\n\
          repro serve --index rqa-768.leanvec --queries 2000 --workers 2 --rerank-window 100\n\
+         repro serve --index rqa-768.leanvec --mmap   (serve off a memory map; bigger-than-RAM)\n\
          repro serve --index rqa-768.lvshards --collection tenant-a --workers 4\n\
          repro serve --dataset wit-512 --shards 4   (ad hoc sharded build + serve)\n\
          repro mutate --index rqa-768.leanvec --insert-rate 0.2 --delete-rate 0.1\n\
@@ -195,16 +196,29 @@ fn build_index(
 }
 
 /// Load a snapshot, printing what was loaded and how long it took.
-fn load_snapshot(path: &str) -> anyhow::Result<(LeanVecIndex, SnapshotMeta)> {
+/// With `mmap` the index serves straight off a read-only memory map of
+/// the file (codes, adjacency and re-rank vectors stay on disk until
+/// touched), so an index larger than RAM can serve.
+fn load_snapshot(path: &str, mmap: bool) -> anyhow::Result<(LeanVecIndex, SnapshotMeta)> {
     let t0 = std::time::Instant::now();
-    let (index, meta) = LeanVecIndex::load(std::path::Path::new(path))?;
+    let p = std::path::Path::new(path);
+    let (index, meta) = if mmap {
+        LeanVecIndex::load_mmap(p)?
+    } else {
+        LeanVecIndex::load(p)?
+    };
     println!(
-        "loaded snapshot {path}: {} vectors, {} -> {} dims, {}/{} stores, in {:.3}s",
+        "loaded snapshot {path}: {} vectors, {} -> {} dims, {}/{} stores{}, in {:.3}s",
         index.len(),
         index.model.input_dim(),
         index.model.target_dim(),
         index.primary_compression.name(),
         index.secondary_compression.name(),
+        if index.is_mapped() {
+            format!(", mmap-backed ({} MiB file)", index.mapped_bytes() >> 20)
+        } else {
+            String::new()
+        },
         t0.elapsed().as_secs_f64()
     );
     Ok((index, meta))
@@ -436,7 +450,7 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     let (index, ds, params) = match args.opt_str("index") {
         // serve path: read the snapshot, never touch the training path
         Some(path) => {
-            let (index, meta) = load_snapshot(&path)?;
+            let (index, meta) = load_snapshot(&path, args.switch("mmap"))?;
             let ds = dataset_for_snapshot(
                 args,
                 &ctx,
@@ -593,15 +607,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         // layout; a plain file loads as a single-shard collection.
         Some(path) => {
             let p = std::path::Path::new(&path);
+            let use_mmap = args.switch("mmap");
             if p.join(MANIFEST_NAME).is_file() {
                 let t0 = std::time::Instant::now();
-                let (sharded, meta) = ShardedIndex::load_dir(p)?;
+                let policy = if use_mmap {
+                    Some(leanvec::index::MmapPolicy::default())
+                } else {
+                    None
+                };
+                let (sharded, meta) = ShardedIndex::load_dir_with(p, policy)?;
                 println!(
-                    "loaded shard dir {path}: {} shards, {} vectors, {} -> {} dims, in {:.3}s",
+                    "loaded shard dir {path}: {} shards, {} vectors, {} -> {} dims{}, in {:.3}s",
                     sharded.shards(),
                     sharded.len(),
                     sharded.model().input_dim(),
                     sharded.model().target_dim(),
+                    if use_mmap { ", mmap-backed" } else { "" },
                     t0.elapsed().as_secs_f64()
                 );
                 let expect_n = if sharded.is_live() {
@@ -618,7 +639,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 )?;
                 (sharded, ds, meta.search_defaults)
             } else {
-                let (index, meta) = load_snapshot(&path)?;
+                let (index, meta) = load_snapshot(&path, use_mmap)?;
                 let ds = dataset_for_snapshot(
                     args,
                     &ctx,

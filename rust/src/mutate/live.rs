@@ -166,6 +166,9 @@ impl LiveIndex {
             primary_compression,
             secondary_compression,
             build_breakdown,
+            // safe to drop: each mapped array holds its own handle on
+            // the mapping, and mutation converts arrays to owned
+            backing: _,
         } = index;
         let n = primary.len();
         LiveIndex {

@@ -115,18 +115,9 @@ impl LiveIndex {
             bin::put_f32s(&mut log, vec);
         }
 
-        sections.push(RawSection {
-            tag: SECTION_TOMBS,
-            bytes: tombs,
-        });
-        sections.push(RawSection {
-            tag: SECTION_IDMAP,
-            bytes: idmap,
-        });
-        sections.push(RawSection {
-            tag: SECTION_MUTLOG,
-            bytes: log,
-        });
+        sections.push(RawSection::new(SECTION_TOMBS, tombs));
+        sections.push(RawSection::new(SECTION_IDMAP, idmap));
+        sections.push(RawSection::new(SECTION_MUTLOG, log));
         write_sections_versioned(path, &sections, FORMAT_VERSION_LIVE)
     }
 

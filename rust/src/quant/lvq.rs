@@ -25,18 +25,24 @@ use super::{compact_flat, compact_scalars, corrupt, finish_score, PreparedQuery,
 use crate::config::{Compression, Similarity};
 use crate::data::io::bin;
 use crate::linalg::matrix::dot;
+use crate::util::mmap::{self, Arr, SectionSrc};
 use crate::util::threadpool::parallel_chunked;
 
 /// Single-level LVQ store with B in {4, 8} bits per component.
+///
+/// Arrays are [`Arr`]-backed: owned on the heap path, borrowed from
+/// the mapped snapshot on the `load_mmap` path (the mean and the code
+/// bytes always borrow; the per-vector f32 constants borrow when the
+/// file offset happens to be 4-aligned and decode otherwise).
 pub struct LvqStore {
     dim: usize,
     bits: u8,
-    mean: Vec<f32>,
+    mean: Arr<f32>,
     /// B=8: one byte per component; B=4: two components per byte
-    codes: Vec<u8>,
-    delta: Vec<f32>,
-    lo: Vec<f32>,
-    norms_sq: Vec<f32>,
+    codes: Arr<u8>,
+    delta: Arr<f32>,
+    lo: Arr<f32>,
+    norms_sq: Arr<f32>,
     bytes_per_vec: usize,
 }
 
@@ -168,11 +174,11 @@ impl LvqStore {
         LvqStore {
             dim,
             bits,
-            mean,
-            codes,
-            delta,
-            lo,
-            norms_sq,
+            mean: mean.into(),
+            codes: codes.into(),
+            delta: delta.into(),
+            lo: lo.into(),
+            norms_sq: norms_sq.into(),
             bytes_per_vec,
         }
     }
@@ -214,28 +220,33 @@ impl LvqStore {
 
     /// Serialize every field (shared by the one- and two-level wire
     /// formats; the caller writes the compression code byte first).
-    fn write_fields(&self, out: &mut Vec<u8>) {
+    /// Returns the alignment anchor: the offset of the raw mean f32
+    /// data within `out` (the code bytes that follow are u8 and
+    /// alignment-free, so the mean is the widest array to anchor on).
+    fn write_fields(&self, out: &mut Vec<u8>) -> usize {
         bin::put_u32(out, self.dim as u32);
         bin::put_u8(out, self.bits);
+        let anchor = out.len() + 8; // mean f32 data after the u64 count
         bin::put_f32s(out, &self.mean);
         bin::put_bytes(out, &self.codes);
         bin::put_f32s(out, &self.delta);
         bin::put_f32s(out, &self.lo);
         bin::put_f32s(out, &self.norms_sq);
+        anchor
     }
 
     /// Inverse of [`LvqStore::write_fields`], with size cross-checks.
-    fn read_fields(cur: &mut bin::Cursor) -> std::io::Result<LvqStore> {
+    fn read_fields(cur: &mut bin::Cursor, src: Option<&SectionSrc>) -> std::io::Result<LvqStore> {
         let dim = cur.get_u32()? as usize;
         let bits = cur.get_u8()?;
         if bits != 4 && bits != 8 {
             return Err(corrupt("lvq store: bits not 4 or 8"));
         }
-        let mean = cur.get_f32s()?;
-        let codes = cur.get_bytes()?;
-        let delta = cur.get_f32s()?;
-        let lo = cur.get_f32s()?;
-        let norms_sq = cur.get_f32s()?;
+        let mean = mmap::get_f32s_arr(cur, src)?;
+        let codes = mmap::get_bytes_arr(cur, src)?;
+        let delta = mmap::get_f32s_arr(cur, src)?;
+        let lo = mmap::get_f32s_arr(cur, src)?;
+        let norms_sq = mmap::get_f32s_arr(cur, src)?;
         let stride = if bits == 8 { dim } else { dim.div_ceil(2) };
         let n = delta.len();
         if mean.len() != dim
@@ -261,7 +272,17 @@ impl LvqStore {
     /// [`ScoreStore::write_bytes`] (after the compression code byte);
     /// `kind` is that code, used to cross-check the stored bit width.
     pub(crate) fn read_bytes(cur: &mut bin::Cursor, kind: Compression) -> std::io::Result<LvqStore> {
-        let store = Self::read_fields(cur)?;
+        Self::read_bytes_src(cur, kind, None)
+    }
+
+    /// [`LvqStore::read_bytes`], borrowing arrays from a mapped
+    /// snapshot when `src` is given.
+    pub(crate) fn read_bytes_src(
+        cur: &mut bin::Cursor,
+        kind: Compression,
+        src: Option<&SectionSrc>,
+    ) -> std::io::Result<LvqStore> {
+        let store = Self::read_fields(cur, src)?;
         let want_bits = if kind == Compression::Lvq8 { 8 } else { 4 };
         if store.bits != want_bits {
             return Err(corrupt("lvq store: bit width disagrees with compression code"));
@@ -315,6 +336,12 @@ impl ScoreStore for LvqStore {
         self.score_block(pq, ids, out);
     }
 
+    fn prefetch_rows(&self, ids: &[u32]) {
+        for &id in ids {
+            crate::simd::prefetch_row(self.code_slice(id));
+        }
+    }
+
     fn decode(&self, id: u32) -> Vec<f32> {
         let i = id as usize;
         let (d, l) = (self.delta[i], self.lo[i]);
@@ -336,14 +363,14 @@ impl ScoreStore for LvqStore {
         out
     }
 
-    fn write_bytes(&self, out: &mut Vec<u8>) {
+    fn write_bytes(&self, out: &mut Vec<u8>) -> usize {
         let kind = if self.bits == 8 {
             Compression::Lvq8
         } else {
             Compression::Lvq4
         };
         bin::put_u8(out, kind.code());
-        self.write_fields(out);
+        self.write_fields(out)
     }
 
     fn append_row(&mut self, row: &[f32]) {
@@ -352,17 +379,18 @@ impl ScoreStore for LvqStore {
         // the learned representation, so existing codes stay valid
         let one = [row.to_vec()];
         let chunk = encode_rows(&one, &self.mean, self.bits, self.stride());
-        self.codes.extend_from_slice(&chunk.codes);
-        self.delta.extend_from_slice(&chunk.delta);
-        self.lo.extend_from_slice(&chunk.lo);
-        self.norms_sq.extend_from_slice(&chunk.norms_sq);
+        self.codes.make_owned().extend_from_slice(&chunk.codes);
+        self.delta.make_owned().extend_from_slice(&chunk.delta);
+        self.lo.make_owned().extend_from_slice(&chunk.lo);
+        self.norms_sq.make_owned().extend_from_slice(&chunk.norms_sq);
     }
 
     fn compact(&mut self, keep: &[u32]) {
-        compact_flat(&mut self.codes, self.stride(), keep);
-        compact_scalars(&mut self.delta, keep);
-        compact_scalars(&mut self.lo, keep);
-        compact_scalars(&mut self.norms_sq, keep);
+        let stride = self.stride();
+        compact_flat(self.codes.make_owned(), stride, keep);
+        compact_scalars(self.delta.make_owned(), keep);
+        compact_scalars(self.lo.make_owned(), keep);
+        compact_scalars(self.norms_sq.make_owned(), keep);
     }
 }
 
@@ -372,10 +400,10 @@ impl ScoreStore for LvqStore {
 pub struct Lvq4x8Store {
     first: LvqStore,
     /// residual codes, 1 byte per component
-    res_codes: Vec<u8>,
-    res_delta: Vec<f32>,
-    res_lo: Vec<f32>,
-    full_norms_sq: Vec<f32>,
+    res_codes: Arr<u8>,
+    res_delta: Arr<f32>,
+    res_lo: Arr<f32>,
+    full_norms_sq: Arr<f32>,
 }
 
 impl Lvq4x8Store {
@@ -430,24 +458,33 @@ impl Lvq4x8Store {
         }
         Lvq4x8Store {
             first,
-            res_codes,
-            res_delta,
-            res_lo,
-            full_norms_sq,
+            res_codes: res_codes.into(),
+            res_delta: res_delta.into(),
+            res_lo: res_lo.into(),
+            full_norms_sq: full_norms_sq.into(),
         }
     }
 
     /// Deserialize a two-level payload written by this store's
     /// [`ScoreStore::write_bytes`] (after the compression code byte).
     pub(crate) fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<Lvq4x8Store> {
-        let first = LvqStore::read_fields(cur)?;
+        Self::read_bytes_src(cur, None)
+    }
+
+    /// [`Lvq4x8Store::read_bytes`], borrowing arrays from a mapped
+    /// snapshot when `src` is given.
+    pub(crate) fn read_bytes_src(
+        cur: &mut bin::Cursor,
+        src: Option<&SectionSrc>,
+    ) -> std::io::Result<Lvq4x8Store> {
+        let first = LvqStore::read_fields(cur, src)?;
         if first.bits != 4 {
             return Err(corrupt("lvq4x8 store: first level is not 4-bit"));
         }
-        let res_codes = cur.get_bytes()?;
-        let res_delta = cur.get_f32s()?;
-        let res_lo = cur.get_f32s()?;
-        let full_norms_sq = cur.get_f32s()?;
+        let res_codes = mmap::get_bytes_arr(cur, src)?;
+        let res_delta = mmap::get_f32s_arr(cur, src)?;
+        let res_lo = mmap::get_f32s_arr(cur, src)?;
+        let full_norms_sq = mmap::get_f32s_arr(cur, src)?;
         let (n, dim) = (first.len(), first.dim());
         if res_codes.len() != n * dim
             || res_delta.len() != n
@@ -516,6 +553,12 @@ impl ScoreStore for Lvq4x8Store {
         self.first.score_block(pq, ids, out);
     }
 
+    /// Traversal touches only the first level, so only its code rows
+    /// are worth prefetching ahead of a hop.
+    fn prefetch_rows(&self, ids: &[u32]) {
+        self.first.prefetch_rows(ids);
+    }
+
     /// Re-ranking reads both levels.
     fn score_rerank(&self, pq: &PreparedQuery, id: u32) -> f32 {
         self.score_full(pq, id)
@@ -550,13 +593,14 @@ impl ScoreStore for Lvq4x8Store {
         out
     }
 
-    fn write_bytes(&self, out: &mut Vec<u8>) {
+    fn write_bytes(&self, out: &mut Vec<u8>) -> usize {
         bin::put_u8(out, Compression::Lvq4x8.code());
-        self.first.write_fields(out);
+        let anchor = self.first.write_fields(out);
         bin::put_bytes(out, &self.res_codes);
         bin::put_f32s(out, &self.res_delta);
         bin::put_f32s(out, &self.res_lo);
         bin::put_f32s(out, &self.full_norms_sq);
+        anchor
     }
 
     fn append_row(&mut self, row: &[f32]) {
@@ -574,19 +618,19 @@ impl ScoreStore for Lvq4x8Store {
             ns += v * v;
         }
         debug_assert_eq!(c.len(), dim);
-        self.res_codes.extend_from_slice(&c);
-        self.res_delta.push(d);
-        self.res_lo.push(l);
-        self.full_norms_sq.push(ns);
+        self.res_codes.make_owned().extend_from_slice(&c);
+        self.res_delta.make_owned().push(d);
+        self.res_lo.make_owned().push(l);
+        self.full_norms_sq.make_owned().push(ns);
     }
 
     fn compact(&mut self, keep: &[u32]) {
         let dim = self.first.dim();
         self.first.compact(keep);
-        compact_flat(&mut self.res_codes, dim, keep);
-        compact_scalars(&mut self.res_delta, keep);
-        compact_scalars(&mut self.res_lo, keep);
-        compact_scalars(&mut self.full_norms_sq, keep);
+        compact_flat(self.res_codes.make_owned(), dim, keep);
+        compact_scalars(self.res_delta.make_owned(), keep);
+        compact_scalars(self.res_lo.make_owned(), keep);
+        compact_scalars(self.full_norms_sq.make_owned(), keep);
     }
 }
 

@@ -94,7 +94,24 @@ pub trait ScoreStore: Send + Sync {
     /// read back by [`read_store`] scores bit-identically to this one.
     /// The payload is self-describing: it starts with the store's
     /// [`Compression`] wire code. Byte layout: `docs/SNAPSHOT_FORMAT.md`.
-    fn write_bytes(&self, out: &mut Vec<u8>);
+    ///
+    /// Returns the *alignment anchor*: the byte offset (relative to
+    /// where this store's payload begins in `out`) of the raw element
+    /// data of the store's dominant typed array. The aligned snapshot
+    /// writer pads the section start so this anchor lands on a 64-byte
+    /// boundary, which is what lets `load_mmap` borrow that array
+    /// straight out of the page cache.
+    fn write_bytes(&self, out: &mut Vec<u8>) -> usize;
+
+    /// Issue software prefetch for the code rows of `ids` (the bytes
+    /// `score_block` will touch). Beam search calls this for the *next*
+    /// hop's neighborhood while the current block computes, so cold
+    /// cache lines — and, for mmap-served stores, already-resident page
+    /// cache lines — overlap compute. Purely a hint: the default no-op
+    /// is always correct.
+    fn prefetch_rows(&self, ids: &[u32]) {
+        let _ = ids;
+    }
 
     /// Append one vector; its id is the store's previous `len()`.
     ///
@@ -157,6 +174,18 @@ pub(crate) fn compact_scalars<T: Copy>(data: &mut Vec<T>, keep: &[u32]) {
 /// concrete type). Errors with `InvalidData` on an unknown code or
 /// internally inconsistent payload, `UnexpectedEof` on truncation.
 pub fn read_store(cur: &mut bin::Cursor) -> std::io::Result<Box<dyn ScoreStore>> {
+    read_store_src(cur, None)
+}
+
+/// [`read_store`] with an optional mmap backing: when `src` is given
+/// (and the cursor is iterating the section payload slice of
+/// `src.map`), the store's large arrays are *borrowed* from the
+/// mapping instead of decoded into owned heap buffers — falling back
+/// per array when the file bytes are misaligned for the element type.
+pub fn read_store_src(
+    cur: &mut bin::Cursor,
+    src: Option<&crate::util::mmap::SectionSrc>,
+) -> std::io::Result<Box<dyn ScoreStore>> {
     let code = cur.get_u8()?;
     let kind = Compression::from_code(code).ok_or_else(|| {
         std::io::Error::new(
@@ -165,10 +194,12 @@ pub fn read_store(cur: &mut bin::Cursor) -> std::io::Result<Box<dyn ScoreStore>>
         )
     })?;
     match kind {
-        Compression::F32 => Ok(Box::new(F32Store::read_bytes(cur)?)),
-        Compression::F16 => Ok(Box::new(F16Store::read_bytes(cur)?)),
-        Compression::Lvq4 | Compression::Lvq8 => Ok(Box::new(LvqStore::read_bytes(cur, kind)?)),
-        Compression::Lvq4x8 => Ok(Box::new(Lvq4x8Store::read_bytes(cur)?)),
+        Compression::F32 => Ok(Box::new(F32Store::read_bytes_src(cur, src)?)),
+        Compression::F16 => Ok(Box::new(F16Store::read_bytes_src(cur, src)?)),
+        Compression::Lvq4 | Compression::Lvq8 => {
+            Ok(Box::new(LvqStore::read_bytes_src(cur, kind, src)?))
+        }
+        Compression::Lvq4x8 => Ok(Box::new(Lvq4x8Store::read_bytes_src(cur, src)?)),
     }
 }
 

@@ -5,13 +5,17 @@ use crate::config::{Compression, Similarity};
 use crate::data::io::bin;
 use crate::linalg::matrix::dot;
 use crate::util::f16;
+use crate::util::mmap::{self, Arr, SectionSrc};
 use crate::util::threadpool::parallel_chunked;
 
 /// Plain f32 store — the accuracy reference and the FP32 baseline.
+///
+/// The arrays are [`Arr`]-backed: owned vectors on the heap path,
+/// windows borrowed from a mapped snapshot on the `load_mmap` path.
 pub struct F32Store {
     dim: usize,
-    data: Vec<f32>,
-    norms_sq: Vec<f32>,
+    data: Arr<f32>,
+    norms_sq: Arr<f32>,
 }
 
 impl F32Store {
@@ -26,19 +30,19 @@ impl F32Store {
         }
         F32Store {
             dim,
-            data,
-            norms_sq,
+            data: data.into(),
+            norms_sq: norms_sq.into(),
         }
     }
 
     /// Build from a flat row-major buffer.
     pub fn from_flat(dim: usize, data: Vec<f32>) -> F32Store {
         assert_eq!(data.len() % dim.max(1), 0);
-        let norms_sq = data.chunks(dim).map(|r| dot(r, r)).collect();
+        let norms_sq: Vec<f32> = data.chunks(dim).map(|r| dot(r, r)).collect();
         F32Store {
             dim,
-            data,
-            norms_sq,
+            data: data.into(),
+            norms_sq: norms_sq.into(),
         }
     }
 
@@ -51,9 +55,18 @@ impl F32Store {
     /// Deserialize a payload written by this store's
     /// [`ScoreStore::write_bytes`] (after the compression code byte).
     pub(crate) fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<F32Store> {
+        Self::read_bytes_src(cur, None)
+    }
+
+    /// [`F32Store::read_bytes`], borrowing the arrays from a mapped
+    /// snapshot when `src` is given and the bytes are aligned.
+    pub(crate) fn read_bytes_src(
+        cur: &mut bin::Cursor,
+        src: Option<&SectionSrc>,
+    ) -> std::io::Result<F32Store> {
         let dim = cur.get_u32()? as usize;
-        let data = cur.get_f32s()?;
-        let norms_sq = cur.get_f32s()?;
+        let data = mmap::get_f32s_arr(cur, src)?;
+        let norms_sq = mmap::get_f32s_arr(cur, src)?;
         if data.len() != norms_sq.len() * dim {
             return Err(corrupt("f32 store: data/norms length mismatch"));
         }
@@ -107,26 +120,35 @@ impl ScoreStore for F32Store {
         self.score_block(pq, ids, out);
     }
 
+    fn prefetch_rows(&self, ids: &[u32]) {
+        for &id in ids {
+            let i = id as usize * self.dim;
+            crate::simd::prefetch_row(&self.data[i..i + self.dim]);
+        }
+    }
+
     fn decode(&self, id: u32) -> Vec<f32> {
         self.vector(id).to_vec()
     }
 
-    fn write_bytes(&self, out: &mut Vec<u8>) {
+    fn write_bytes(&self, out: &mut Vec<u8>) -> usize {
         bin::put_u8(out, Compression::F32.code());
         bin::put_u32(out, self.dim as u32);
+        let anchor = out.len() + 8; // f32 data begins after the u64 count
         bin::put_f32s(out, &self.data);
         bin::put_f32s(out, &self.norms_sq);
+        anchor
     }
 
     fn append_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.dim);
-        self.norms_sq.push(dot(row, row));
-        self.data.extend_from_slice(row);
+        self.norms_sq.make_owned().push(dot(row, row));
+        self.data.make_owned().extend_from_slice(row);
     }
 
     fn compact(&mut self, keep: &[u32]) {
-        compact_flat(&mut self.data, self.dim, keep);
-        compact_scalars(&mut self.norms_sq, keep);
+        compact_flat(self.data.make_owned(), self.dim, keep);
+        compact_scalars(self.norms_sq.make_owned(), keep);
     }
 }
 
@@ -134,8 +156,8 @@ impl ScoreStore for F32Store {
 /// secondary (re-ranking) representation.
 pub struct F16Store {
     dim: usize,
-    data: Vec<u16>,
-    norms_sq: Vec<f32>,
+    data: Arr<u16>,
+    norms_sq: Arr<f32>,
 }
 
 impl F16Store {
@@ -170,8 +192,8 @@ impl F16Store {
         }
         F16Store {
             dim,
-            data,
-            norms_sq,
+            data: data.into(),
+            norms_sq: norms_sq.into(),
         }
     }
 
@@ -184,9 +206,18 @@ impl F16Store {
     /// Deserialize a payload written by this store's
     /// [`ScoreStore::write_bytes`] (after the compression code byte).
     pub(crate) fn read_bytes(cur: &mut bin::Cursor) -> std::io::Result<F16Store> {
+        Self::read_bytes_src(cur, None)
+    }
+
+    /// [`F16Store::read_bytes`], borrowing the arrays from a mapped
+    /// snapshot when `src` is given and the bytes are aligned.
+    pub(crate) fn read_bytes_src(
+        cur: &mut bin::Cursor,
+        src: Option<&SectionSrc>,
+    ) -> std::io::Result<F16Store> {
         let dim = cur.get_u32()? as usize;
-        let data = cur.get_u16s()?;
-        let norms_sq = cur.get_f32s()?;
+        let data = mmap::get_u16s_arr(cur, src)?;
+        let norms_sq = mmap::get_f32s_arr(cur, src)?;
         if data.len() != norms_sq.len() * dim {
             return Err(corrupt("f16 store: data/norms length mismatch"));
         }
@@ -243,15 +274,24 @@ impl ScoreStore for F16Store {
         self.score_block(pq, ids, out);
     }
 
+    fn prefetch_rows(&self, ids: &[u32]) {
+        for &id in ids {
+            let i = id as usize * self.dim;
+            crate::simd::prefetch_row(&self.data[i..i + self.dim]);
+        }
+    }
+
     fn decode(&self, id: u32) -> Vec<f32> {
         f16::decode_slice(self.codes(id))
     }
 
-    fn write_bytes(&self, out: &mut Vec<u8>) {
+    fn write_bytes(&self, out: &mut Vec<u8>) -> usize {
         bin::put_u8(out, Compression::F16.code());
         bin::put_u32(out, self.dim as u32);
+        let anchor = out.len() + 8; // u16 data begins after the u64 count
         bin::put_u16s(out, &self.data);
         bin::put_f32s(out, &self.norms_sq);
+        anchor
     }
 
     fn append_row(&mut self, row: &[f32]) {
@@ -259,13 +299,13 @@ impl ScoreStore for F16Store {
         let enc = f16::encode_slice(row);
         // norm of the *encoded* vector, same as the batch constructor
         let dec = f16::decode_slice(&enc);
-        self.norms_sq.push(dot(&dec, &dec));
-        self.data.extend_from_slice(&enc);
+        self.norms_sq.make_owned().push(dot(&dec, &dec));
+        self.data.make_owned().extend_from_slice(&enc);
     }
 
     fn compact(&mut self, keep: &[u32]) {
-        compact_flat(&mut self.data, self.dim, keep);
-        compact_scalars(&mut self.norms_sq, keep);
+        compact_flat(self.data.make_owned(), self.dim, keep);
+        compact_scalars(self.norms_sq.make_owned(), keep);
     }
 }
 

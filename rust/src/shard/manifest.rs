@@ -48,9 +48,9 @@
 
 use crate::data::io::{bin, crc32};
 use crate::index::persist::{
-    core_sections, load_core_sections, read_sections_any, tag_str, write_sections_versioned,
-    MetaFacts, RawSection, SnapshotError, SnapshotMeta, FORMAT_VERSION_LIVE, SECTION_IDMAP,
-    SECTION_MUTLOG, SECTION_TOMBS,
+    core_sections, force_mmap_requested, load_core_sections, load_mmap_any, read_sections_any,
+    tag_str, write_sections_versioned, MetaFacts, MmapPolicy, RawSection, SnapshotError,
+    SnapshotMeta, FORMAT_VERSION_LIVE, SECTION_IDMAP, SECTION_MUTLOG, SECTION_TOMBS,
 };
 use crate::index::leanvec_index::LeanVecIndex;
 use crate::mutate::LiveIndex;
@@ -122,27 +122,35 @@ fn save_frozen_shard(
     bin::put_u64(&mut log, 0);
     bin::put_u64(&mut log, 0);
     bin::put_u64(&mut log, 0);
-    sections.push(RawSection {
-        tag: SECTION_TOMBS,
-        bytes: tombs,
-    });
-    sections.push(RawSection {
-        tag: SECTION_IDMAP,
-        bytes: idmap,
-    });
-    sections.push(RawSection {
-        tag: SECTION_MUTLOG,
-        bytes: log,
-    });
+    sections.push(RawSection::new(SECTION_TOMBS, tombs));
+    sections.push(RawSection::new(SECTION_IDMAP, idmap));
+    sections.push(RawSection::new(SECTION_MUTLOG, log));
     write_sections_versioned(path, &sections, FORMAT_VERSION_LIVE)
 }
 
 /// Load one frozen shard: a version-1 file is an identity-mapped shard;
 /// a live-stamped file must be pristine (all-zero tombstones) and
-/// contributes its `IDMAP` as the shard's external-id map.
-fn load_frozen_shard(path: &Path) -> Result<(Arc<LeanVecIndex>, Vec<u32>, SnapshotMeta), SnapshotError> {
-    let (version, sections) = read_sections_any(path)?;
-    let (index, meta) = load_core_sections(&sections)?;
+/// contributes its `IDMAP` as the shard's external-id map. With
+/// `mmap: Some(policy)` the shard's stores and graph serve straight off
+/// a memory map of its file per the policy.
+fn load_frozen_shard(
+    path: &Path,
+    mmap: Option<MmapPolicy>,
+) -> Result<(Arc<LeanVecIndex>, Vec<u32>, SnapshotMeta), SnapshotError> {
+    let (version, sections, index, meta) = match mmap {
+        None => {
+            let (version, sections) = read_sections_any(path)?;
+            let (index, meta) = load_core_sections(&sections)?;
+            (version, sections, index, meta)
+        }
+        Some(policy) => {
+            // sections here are only the small live-layout extras
+            // (TOMBS/IDMAP/MUTLOG) as owned copies; the core tiers stay
+            // in the mapping
+            let snap = load_mmap_any(path, policy, FORMAT_VERSION_LIVE)?;
+            (snap.version, snap.extra, snap.index, snap.meta)
+        }
+    };
     if version < FORMAT_VERSION_LIVE {
         return Ok((Arc::new(index), Vec::new(), meta));
     }
@@ -244,8 +252,28 @@ impl ShardedIndex {
     /// Load a sharded snapshot directory written by
     /// [`ShardedIndex::save_dir`]. The loaded index routes and serves
     /// bit-identically to the saved one. Returns the [`SnapshotMeta`]
-    /// recorded with shard 0.
+    /// recorded with shard 0. Honors `LEANVEC_FORCE_MMAP` for frozen
+    /// shard sets (same contract as [`LeanVecIndex::load`]).
     pub fn load_dir(dir: &Path) -> Result<(ShardedIndex, SnapshotMeta), SnapshotError> {
+        let mmap = if force_mmap_requested() {
+            Some(MmapPolicy::default())
+        } else {
+            None
+        };
+        Self::load_dir_with(dir, mmap)
+    }
+
+    /// [`ShardedIndex::load_dir`] with each frozen shard served off a
+    /// memory map of its file per `policy` (see
+    /// [`LeanVecIndex::load_mmap_with`]); `None` decodes everything to
+    /// owned memory. Live shard sets always load owned — their arrays
+    /// must be mutable — so the policy only applies to frozen
+    /// directories. Any per-shard failure is wrapped in
+    /// [`SnapshotError::Shard`] carrying the shard file's name.
+    pub fn load_dir_with(
+        dir: &Path,
+        mmap: Option<MmapPolicy>,
+    ) -> Result<(ShardedIndex, SnapshotMeta), SnapshotError> {
         let m = std::fs::read(dir.join(MANIFEST_NAME)).map_err(SnapshotError::Io)?;
         if m.len() < 8 || m[..8] != MANIFEST_MAGIC {
             return Err(SnapshotError::BadMagic);
@@ -308,16 +336,31 @@ impl ShardedIndex {
             }
         }
 
+        // any failure past the manifest itself names the shard file it
+        // came from — a 32-shard directory with one rotten file should
+        // say which one to restore
+        let shard_err = |path: &Path, e: SnapshotError| SnapshotError::Shard {
+            file: path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string()),
+            source: Box::new(e),
+        };
+
         let mut meta0: Option<SnapshotMeta> = None;
         if kind == 0 {
             let mut parts = Vec::with_capacity(count);
             for (path, _, rows) in &entries {
-                let (index, ext_of, meta) = load_frozen_shard(path)?;
+                let (index, ext_of, meta) =
+                    load_frozen_shard(path, mmap).map_err(|e| shard_err(path, e))?;
                 if index.len() as u64 != *rows {
-                    return Err(corrupt(format!(
-                        "shard holds {} rows, manifest says {rows}",
-                        index.len()
-                    )));
+                    return Err(shard_err(
+                        path,
+                        corrupt(format!(
+                            "shard holds {} rows, manifest says {rows}",
+                            index.len()
+                        )),
+                    ));
                 }
                 if meta0.is_none() {
                     meta0 = Some(meta);
@@ -331,12 +374,15 @@ impl ShardedIndex {
         } else {
             let mut shards = Vec::with_capacity(count);
             for (path, _, rows) in &entries {
-                let (live, meta) = LiveIndex::load(path)?;
+                let (live, meta) = LiveIndex::load(path).map_err(|e| shard_err(path, e))?;
                 if live.total_slots() as u64 != *rows {
-                    return Err(corrupt(format!(
-                        "shard holds {} slots, manifest says {rows}",
-                        live.total_slots()
-                    )));
+                    return Err(shard_err(
+                        path,
+                        corrupt(format!(
+                            "shard holds {} slots, manifest says {rows}",
+                            live.total_slots()
+                        )),
+                    ));
                 }
                 if meta0.is_none() {
                     meta0 = Some(meta);

@@ -152,6 +152,29 @@ pub fn prefetch<T>(data: &[T]) {
     let _ = data;
 }
 
+/// [`prefetch`] for a whole bounded row: one prefetch per 64-byte
+/// cache line over the slice, so a multi-line code row (e.g. a
+/// 768-dim f16 row is 24 lines) is fully in flight before the scoring
+/// kernel touches it. Beam search uses this for the *next hop's*
+/// neighbor rows, which on an mmap-served index overlaps resident
+/// page-cache line fills with the current hop's compute.
+#[inline]
+pub fn prefetch_row<T>(data: &[T]) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        let bytes = std::mem::size_of_val(data);
+        let ptr = data.as_ptr() as *const i8;
+        let mut off = 0usize;
+        while off < bytes {
+            _mm_prefetch::<{ _MM_HINT_T0 }>(ptr.add(off));
+            off += 64;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = data;
+}
+
 #[cfg(test)]
 mod tests {
     // Scalar-vs-dispatched numeric parity lives in ONE place —
@@ -176,5 +199,15 @@ mod tests {
         prefetch(&f);
         let empty: &[u16] = &[];
         prefetch(empty);
+    }
+
+    #[test]
+    fn prefetch_row_spans_lines_and_accepts_empty() {
+        let big = vec![0u8; 1000]; // 16 cache lines
+        prefetch_row(&big);
+        let f = vec![1.0f32; 200];
+        prefetch_row(&f);
+        let empty: &[u32] = &[];
+        prefetch_row(empty);
     }
 }

@@ -1,0 +1,510 @@
+//! Read-only memory mapping and Cow-style array backing for
+//! mmap-served snapshots.
+//!
+//! The offline build vendors no `libc`, so [`Mmap`] binds the three
+//! syscalls it needs (`mmap`/`munmap`/`madvise`) directly via
+//! `extern "C"` on unix; every other platform falls back to reading
+//! the file into an owned buffer, which keeps the API total.
+//!
+//! [`Arr`] is the backing abstraction threaded through the score
+//! stores and the graph CSR: either an owned `Vec<T>` (the historical
+//! heap path) or a typed window borrowed straight out of an
+//! `Arc<Mmap>`. Borrowing only happens when the bytes in the file are
+//! correctly aligned for `T` *and* the host is little-endian (the
+//! snapshot wire format is LE); otherwise readers decode into owned
+//! memory exactly as before and bump a fallback counter so
+//! `load_mmap` can warn. `Deref<Target = [T]>` means all existing
+//! slice-consuming code (scoring kernels, section writers) compiles
+//! unchanged against either backing.
+
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::data::io::bin;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// Access-pattern hints forwarded to `madvise`. Best-effort: a kernel
+/// that ignores them only loses the prefetch/eviction optimization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// Default kernel readahead.
+    Normal,
+    /// Random access: disable readahead (graph traversal).
+    Random,
+    /// Sequential scan: aggressive readahead (CRC verification pass).
+    Sequential,
+    /// Expect access soon: start faulting pages in.
+    WillNeed,
+    /// Drop the resident pages; they reload from disk on next touch.
+    /// This is how the bigger-than-RAM bench arm caps its resident set.
+    DontNeed,
+}
+
+impl Advice {
+    #[cfg(unix)]
+    fn code(self) -> i32 {
+        match self {
+            Advice::Normal => 0,
+            Advice::Random => 1,
+            Advice::Sequential => 2,
+            Advice::WillNeed => 3,
+            Advice::DontNeed => 4,
+        }
+    }
+}
+
+/// A read-only, private, whole-file memory mapping.
+///
+/// On unix the pages are faulted in lazily by the OS and never copied
+/// into the heap; elsewhere the constructor silently degrades to an
+/// owned read of the file so callers need no platform branches.
+pub struct Mmap {
+    #[cfg(unix)]
+    ptr: *mut u8,
+    #[cfg(not(unix))]
+    buf: Vec<u8>,
+    len: usize,
+}
+
+// Safety: the mapping is PROT_READ/MAP_PRIVATE and never mutated or
+// remapped after construction, so concurrent shared reads are fine.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. Empty files map to an empty slice without
+    /// touching `mmap` (a zero-length mapping is EINVAL on Linux).
+    pub fn open(path: &Path) -> std::io::Result<Mmap> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len() as usize;
+            if len == 0 {
+                return Ok(Mmap {
+                    ptr: std::ptr::null_mut(),
+                    len: 0,
+                });
+            }
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED {
+                return Err(std::io::Error::last_os_error());
+            }
+            // `file` closes here; the mapping keeps the pages alive.
+            Ok(Mmap {
+                ptr: ptr as *mut u8,
+                len,
+            })
+        }
+        #[cfg(not(unix))]
+        {
+            let buf = std::fs::read(path)?;
+            let len = buf.len();
+            Ok(Mmap { buf, len })
+        }
+    }
+
+    /// The mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return &[];
+            }
+            return unsafe { std::slice::from_raw_parts(self.ptr, self.len) };
+        }
+        #[cfg(not(unix))]
+        {
+            return &self.buf;
+        }
+    }
+
+    /// Length of the mapping in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Hint the kernel about the upcoming access pattern over the
+    /// whole mapping. Errors are ignored: advice is an optimization,
+    /// never a correctness requirement.
+    pub fn advise(&self, advice: Advice) {
+        #[cfg(unix)]
+        {
+            if self.len > 0 {
+                unsafe {
+                    sys::madvise(self.ptr as *mut _, self.len, advice.code());
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = advice;
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        {
+            if self.len > 0 {
+                unsafe {
+                    sys::munmap(self.ptr as *mut _, self.len);
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len).finish()
+    }
+}
+
+/// Cow-style backing for a typed array: an owned `Vec<T>` or a window
+/// borrowed from a shared [`Mmap`]. Dereferences to `&[T]` either way.
+pub enum Arr<T: Copy> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        /// Byte offset of the first element within the mapping.
+        off: usize,
+        /// Element (not byte) count.
+        len: usize,
+    },
+}
+
+impl<T: Copy> Arr<T> {
+    /// Borrow `len` elements of `T` starting `off` bytes into `map`.
+    /// Returns `None` (caller decodes into owned memory instead) when
+    /// the window is out of bounds, the bytes are misaligned for `T`,
+    /// or the host is big-endian (the wire format is little-endian, so
+    /// reinterpreting raw bytes would be wrong there).
+    pub fn from_map(map: &Arc<Mmap>, off: usize, len: usize) -> Option<Arr<T>> {
+        if !cfg!(target_endian = "little") {
+            return None;
+        }
+        if len == 0 {
+            return Some(Arr::Owned(Vec::new()));
+        }
+        let bytes = len.checked_mul(std::mem::size_of::<T>())?;
+        let end = off.checked_add(bytes)?;
+        if end > map.len() {
+            return None;
+        }
+        let addr = map.as_slice().as_ptr() as usize + off;
+        if addr % std::mem::align_of::<T>() != 0 {
+            return None;
+        }
+        Some(Arr::Mapped {
+            map: Arc::clone(map),
+            off,
+            len,
+        })
+    }
+
+    /// True when the data lives in the page cache, not the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Arr::Mapped { .. })
+    }
+
+    /// Convert to the owned representation in place (copying the
+    /// mapped bytes once) and return the vector for mutation. Mutable
+    /// paths — live inserts, compaction — call this so a mapped index
+    /// transparently upgrades to heap backing when it must change.
+    pub fn make_owned(&mut self) -> &mut Vec<T> {
+        if self.is_mapped() {
+            *self = Arr::Owned(self.to_vec());
+        }
+        match self {
+            Arr::Owned(v) => v,
+            Arr::Mapped { .. } => unreachable!("just converted to owned"),
+        }
+    }
+}
+
+impl<T: Copy> Deref for Arr<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            Arr::Owned(v) => v,
+            Arr::Mapped { map, off, len } => unsafe {
+                // Safety: `from_map` validated bounds and alignment,
+                // and the mapping is immutable for its whole lifetime.
+                std::slice::from_raw_parts(
+                    map.as_slice().as_ptr().add(*off) as *const T,
+                    *len,
+                )
+            },
+        }
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for Arr<T> {
+    fn from(v: Vec<T>) -> Arr<T> {
+        Arr::Owned(v)
+    }
+}
+
+impl<T: Copy> Default for Arr<T> {
+    fn default() -> Arr<T> {
+        Arr::Owned(Vec::new())
+    }
+}
+
+impl<T: Copy> Clone for Arr<T> {
+    fn clone(&self) -> Arr<T> {
+        match self {
+            Arr::Owned(v) => Arr::Owned(v.clone()),
+            Arr::Mapped { map, off, len } => Arr::Mapped {
+                map: Arc::clone(map),
+                off: *off,
+                len: *len,
+            },
+        }
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for Arr<T> {
+    fn eq(&self, other: &Arr<T>) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for Arr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = if self.is_mapped() { "mapped" } else { "owned" };
+        write!(f, "Arr<{kind}>({:?})", &**self)
+    }
+}
+
+/// Where a section payload lives inside a mapped snapshot, plus the
+/// shared counter of arrays that had to fall back to owned decoding.
+#[derive(Clone)]
+pub struct SectionSrc {
+    pub map: Arc<Mmap>,
+    /// Absolute byte offset of the section payload within the map.
+    pub base: usize,
+    pub fallbacks: Arc<AtomicUsize>,
+}
+
+impl SectionSrc {
+    pub fn note_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+macro_rules! get_arr {
+    ($name:ident, $ty:ty, $elem:expr, $decode:expr) => {
+        /// Read a length-prefixed array: borrowed from the map when a
+        /// `SectionSrc` is given and the data is aligned, owned
+        /// (decoded, exactly like the historical reader) otherwise.
+        /// The cursor MUST be iterating the section payload slice of
+        /// `src.map` itself, so `src.base + cur.pos()` addresses the
+        /// raw element bytes inside the mapping.
+        pub fn $name(
+            cur: &mut bin::Cursor,
+            src: Option<&SectionSrc>,
+        ) -> std::io::Result<Arr<$ty>> {
+            let n = cur.get_len($elem)?;
+            let data_off = cur.pos();
+            let bytes = cur.take(n * $elem)?;
+            if let Some(s) = src {
+                if let Some(arr) = Arr::<$ty>::from_map(&s.map, s.base + data_off, n) {
+                    return Ok(arr);
+                }
+                s.note_fallback();
+            }
+            #[allow(clippy::redundant_closure_call)]
+            Ok(Arr::Owned(($decode)(bytes)))
+        }
+    };
+}
+
+get_arr!(get_bytes_arr, u8, 1, |b: &[u8]| b.to_vec());
+get_arr!(get_u16s_arr, u16, 2, |b: &[u8]| b
+    .chunks_exact(2)
+    .map(|c| u16::from_le_bytes([c[0], c[1]]))
+    .collect::<Vec<u16>>());
+get_arr!(get_u32s_arr, u32, 4, |b: &[u8]| b
+    .chunks_exact(4)
+    .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+    .collect::<Vec<u32>>());
+get_arr!(get_f32s_arr, f32, 4, |b: &[u8]| b
+    .chunks_exact(4)
+    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+    .collect::<Vec<f32>>());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("leanvec-mmap-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn map_reads_file_bytes() {
+        let p = tmp("a.bin");
+        let data: Vec<u8> = (0..=255).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.len(), 256);
+        assert_eq!(m.as_slice(), &data[..]);
+        m.advise(Advice::Sequential);
+        m.advise(Advice::Random);
+        m.advise(Advice::DontNeed);
+        assert_eq!(m.as_slice(), &data[..]);
+        drop(m);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_empty() {
+        let p = tmp("b.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.as_slice(), b"");
+        m.advise(Advice::WillNeed);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open(&tmp("definitely-missing.bin")).is_err());
+    }
+
+    #[test]
+    fn arr_borrows_aligned_and_falls_back_misaligned() {
+        let p = tmp("c.bin");
+        let vals = [1.0f32, -2.5, 3.25, 0.0];
+        let mut raw = Vec::new();
+        for v in vals {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        // one leading pad byte => offset 1 is misaligned, offset 4 ok
+        let mut file = vec![0u8; 4];
+        file.extend_from_slice(&raw);
+        std::fs::write(&p, &file).unwrap();
+        let map = Arc::new(Mmap::open(&p).unwrap());
+
+        let ok = Arr::<f32>::from_map(&map, 4, 4).expect("aligned window borrows");
+        assert!(ok.is_mapped());
+        assert_eq!(&*ok, &vals[..]);
+
+        assert!(Arr::<f32>::from_map(&map, 1, 4).is_none(), "misaligned");
+        assert!(Arr::<f32>::from_map(&map, 4, 5).is_none(), "out of bounds");
+
+        // clone shares the map; make_owned copies out
+        let mut c = ok.clone();
+        assert!(c.is_mapped());
+        c.make_owned().push(9.0);
+        assert!(!c.is_mapped());
+        assert_eq!(c.len(), 5);
+        assert_eq!(&ok[..], &vals[..], "original untouched");
+
+        drop((ok, c, map));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cursor_arr_helpers_borrow_or_decode() {
+        let p = tmp("d.bin");
+        // payload: 8 pad bytes, then a length-prefixed f32 slice whose
+        // data lands at absolute offset 8 + 8 = 16 (aligned)
+        let mut payload = vec![0u8; 8];
+        bin::put_f32s(&mut payload, &[5.0, 6.0, 7.0]);
+        bin::put_u32s(&mut payload, &[10, 20]);
+        std::fs::write(&p, &payload).unwrap();
+        let map = Arc::new(Mmap::open(&p).unwrap());
+        let src = SectionSrc {
+            map: Arc::clone(&map),
+            base: 0,
+            fallbacks: Arc::new(AtomicUsize::new(0)),
+        };
+
+        let mut cur = bin::Cursor::new(map.as_slice());
+        cur.take(8).unwrap();
+        let f = get_f32s_arr(&mut cur, Some(&src)).unwrap();
+        assert!(f.is_mapped());
+        assert_eq!(&*f, &[5.0, 6.0, 7.0]);
+        // after 3 f32s the u32 data offset is 16+12+8 = 36: aligned too
+        let u = get_u32s_arr(&mut cur, Some(&src)).unwrap();
+        assert_eq!(&*u, &[10, 20]);
+        assert_eq!(src.fallbacks.load(Ordering::Relaxed), 0);
+
+        // without a src everything is owned
+        let mut cur = bin::Cursor::new(map.as_slice());
+        cur.take(8).unwrap();
+        let f = get_f32s_arr(&mut cur, None).unwrap();
+        assert!(!f.is_mapped());
+        assert_eq!(&*f, &[5.0, 6.0, 7.0]);
+
+        drop((f, u, src, map));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn misaligned_cursor_read_counts_fallback() {
+        let p = tmp("e.bin");
+        // 1 pad byte: f32 data starts at 1 + 8 = 9, misaligned
+        let mut payload = vec![0u8; 1];
+        bin::put_f32s(&mut payload, &[1.0, 2.0]);
+        std::fs::write(&p, &payload).unwrap();
+        let map = Arc::new(Mmap::open(&p).unwrap());
+        let src = SectionSrc {
+            map: Arc::clone(&map),
+            base: 0,
+            fallbacks: Arc::new(AtomicUsize::new(0)),
+        };
+        let mut cur = bin::Cursor::new(map.as_slice());
+        cur.take(1).unwrap();
+        let f = get_f32s_arr(&mut cur, Some(&src)).unwrap();
+        assert!(!f.is_mapped());
+        assert_eq!(&*f, &[1.0, 2.0]);
+        assert_eq!(src.fallbacks.load(Ordering::Relaxed), 1);
+        drop((f, src, map));
+        std::fs::remove_file(&p).ok();
+    }
+}

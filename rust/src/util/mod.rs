@@ -8,6 +8,7 @@
 pub mod cli;
 pub mod f16;
 pub mod json;
+pub mod mmap;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,238 @@
+//! Mmap serving conformance: for every store kind and similarity, an
+//! index served off a memory map (`load_mmap`) must answer
+//! bit-identically — ids, score bits, `QueryStats` — to the same
+//! snapshot decoded into owned memory (`load`), including filtered
+//! queries and the batch path. Also covers the resident-codes policy,
+//! shard-directory mmap round trips with per-shard error naming, and
+//! the `LEANVEC_FORCE_MMAP` escape hatch.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::graph::beam::SearchCtx;
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::LeanVecIndex;
+use leanvec::index::persist::{SnapshotError, SnapshotMeta};
+use leanvec::index::query::{Query, VectorIndex};
+use leanvec::index::MmapPolicy;
+use leanvec::shard::{ShardSpec, ShardedIndex};
+use leanvec::util::rng::Rng;
+use std::path::PathBuf;
+
+fn rows(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..d).map(|_| rng.gaussian_f32()).collect())
+        .collect()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("leanvec-mmap-{}-{name}", std::process::id()))
+}
+
+fn build(primary: Compression, sim: Similarity, seed: u64) -> LeanVecIndex {
+    let x = rows(300, 16, seed);
+    let q = rows(60, 16, seed + 1);
+    let mut gp = GraphParams::for_similarity(sim);
+    gp.max_degree = 16;
+    gp.build_window = 40;
+    IndexBuilder::new()
+        .projection(ProjectionKind::Id)
+        .target_dim(6)
+        .primary(primary)
+        .secondary(Compression::F16)
+        .graph_params(gp)
+        .seed(91)
+        .build(&x, Some(&q), sim)
+}
+
+/// `a` and `b` must be indistinguishable to a caller: same ids, same
+/// score bits, same `QueryStats`, on plain, filtered, and batch
+/// searches.
+fn assert_serving_identical(a: &LeanVecIndex, b: &LeanVecIndex, seed: u64) {
+    assert_eq!(a.len(), b.len());
+    let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+    let mut rng = Rng::new(seed);
+    let dd = a.model.input_dim();
+    let mut ctx_a = SearchCtx::new(a.len());
+    let mut ctx_b = SearchCtx::new(b.len());
+    let queries: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..dd).map(|_| rng.gaussian_f32()).collect())
+        .collect();
+    let keep_even = |id: u32| id % 2 == 0;
+    for v in &queries {
+        for filtered in [false, true] {
+            let mut q = Query::new(v).k(10).window(30);
+            if filtered {
+                q = q.filter(&keep_even);
+            }
+            let ra = a.search(&mut ctx_a, &q);
+            let rb = b.search(&mut ctx_b, &q);
+            assert_eq!(ra.ids, rb.ids, "ids diverged (filtered={filtered})");
+            assert_eq!(bits(&ra.scores), bits(&rb.scores), "score bits diverged");
+            assert_eq!(ra.stats, rb.stats, "QueryStats diverged");
+            if filtered {
+                assert!(ra.ids.iter().all(|&id| keep_even(id)));
+            }
+        }
+    }
+    // the batch path (thread fan-out) over the same queries
+    let reqs: Vec<Query> = queries.iter().map(|v| Query::new(v).k(10).window(30)).collect();
+    for threads in [1, 3] {
+        let ba = a.search_batch(&reqs, threads);
+        let bb = b.search_batch(&reqs, threads);
+        for (ra, rb) in ba.iter().zip(&bb) {
+            assert_eq!(ra.ids, rb.ids, "batch ids diverged at threads={threads}");
+            assert_eq!(bits(&ra.scores), bits(&rb.scores));
+            assert_eq!(ra.stats, rb.stats);
+        }
+    }
+}
+
+/// Every primary store kind × both similarities: owned and mapped
+/// serving are bit-identical.
+#[test]
+fn all_store_kinds_serve_identically_owned_vs_mapped() {
+    let kinds = [
+        Compression::F32,
+        Compression::F16,
+        Compression::Lvq4,
+        Compression::Lvq8,
+        Compression::Lvq4x8,
+    ];
+    let sims = [Similarity::InnerProduct, Similarity::L2];
+    for (i, &primary) in kinds.iter().enumerate() {
+        for (j, &sim) in sims.iter().enumerate() {
+            let seed = 100 + (i * 2 + j) as u64;
+            let built = build(primary, sim, seed);
+            let path = tmp(&format!("conf-{i}-{j}.leanvec"));
+            built.save(&path, &SnapshotMeta::default()).unwrap();
+            let (owned, _) = LeanVecIndex::load(&path).unwrap();
+            let (mapped, _) = LeanVecIndex::load_mmap(&path).unwrap();
+            assert!(mapped.is_mapped(), "{primary:?}/{sim:?} not mapped");
+            assert_serving_identical(&built, &owned, seed + 1000);
+            assert_serving_identical(&owned, &mapped, seed + 1000);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+}
+
+/// `MmapPolicy::resident_codes()` (hot codes decoded to RAM, rerank
+/// store left on the map) serves the same bits as the all-mapped
+/// default.
+#[test]
+fn resident_codes_policy_matches_fully_mapped() {
+    let built = build(Compression::Lvq4x8, Similarity::InnerProduct, 31);
+    let path = tmp("policy.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    let (mapped, _) = LeanVecIndex::load_mmap(&path).unwrap();
+    let (resident, _) = LeanVecIndex::load_mmap_with(&path, MmapPolicy::resident_codes()).unwrap();
+    assert!(resident.is_mapped(), "rerank tier still maps the file");
+    assert_serving_identical(&mapped, &resident, 4100);
+    std::fs::remove_file(&path).ok();
+}
+
+fn sharded_fixture(seed: u64) -> (ShardedIndex, Vec<Vec<f32>>) {
+    let x = rows(700, 24, seed);
+    let learn = rows(80, 24, seed + 1);
+    let configure = |b: IndexBuilder| {
+        let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+        gp.max_degree = 16;
+        gp.build_window = 40;
+        b.projection(ProjectionKind::Id)
+            .target_dim(8)
+            .primary(Compression::Lvq8)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+    };
+    let ix = ShardedIndex::build(
+        &x,
+        Some(&learn),
+        Similarity::InnerProduct,
+        ShardSpec::new(3),
+        1,
+        configure,
+    );
+    let queries = rows(20, 24, seed + 2);
+    (ix, queries)
+}
+
+/// A shard directory loaded with an mmap policy serves scatter-gather
+/// results identical to the same directory decoded into owned memory.
+#[test]
+fn shard_dir_mmap_round_trip_serves_identically() {
+    let (ix, queries) = sharded_fixture(41);
+    let dir = tmp("shard-dir");
+    let _ = std::fs::remove_dir_all(&dir);
+    ix.save_dir(&dir, &SnapshotMeta::default()).expect("save_dir");
+    let (owned, _) = ShardedIndex::load_dir_with(&dir, None).expect("owned load");
+    let (mapped, _) =
+        ShardedIndex::load_dir_with(&dir, Some(MmapPolicy::default())).expect("mmap load");
+    assert_eq!(VectorIndex::len(&mapped), VectorIndex::len(&ix));
+    for v in &queries {
+        let q = Query::new(v).k(10).window(40);
+        let a = owned.search_scatter(&owned.model().project_query(v), &q);
+        let b = mapped.search_scatter(&mapped.model().project_query(v), &q);
+        assert_eq!(a, b, "mapped shard set diverged from owned");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard that parses cleanly but disagrees with the manifest's row
+/// count fails with `SnapshotError::Shard` naming the offending file —
+/// under both owned and mapped loads.
+#[test]
+fn shard_load_failure_names_the_shard_file() {
+    let (ix, _) = sharded_fixture(43);
+    let dir = tmp("shard-err");
+    let _ = std::fs::remove_dir_all(&dir);
+    ix.save_dir(&dir, &SnapshotMeta::default()).expect("save_dir");
+    // corrupt entry 0's row count in the manifest and re-seal the
+    // trailer CRC, so the per-file CRC gate passes and the failure
+    // surfaces from the shard loader itself.
+    // layout: magic(8) version(4) kind(1) count(4) seed(8),
+    // entry = name_len(4) + "shard-000.leanvec"(17) + crc(4) + rows(8)
+    let mpath = dir.join(leanvec::shard::MANIFEST_NAME);
+    let mut m = std::fs::read(&mpath).unwrap();
+    let rows_at = 8 + 4 + 1 + 4 + 8 + 4 + "shard-000.leanvec".len() + 4;
+    m[rows_at..rows_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+    let body_len = m.len() - 4;
+    let crc = leanvec::data::io::crc32(&m[..body_len]);
+    m[body_len..].copy_from_slice(&crc.to_le_bytes());
+    std::fs::write(&mpath, &m).unwrap();
+    for mmap in [None, Some(MmapPolicy::default())] {
+        let err = ShardedIndex::load_dir_with(&dir, mmap)
+            .err()
+            .expect("row-count skew must fail the load");
+        match err {
+            SnapshotError::Shard { file, source } => {
+                assert_eq!(file, "shard-000.leanvec");
+                let _ = format!("{source}");
+            }
+            other => panic!("expected Shard error, got {other:?}"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `LEANVEC_FORCE_MMAP=1` reroutes the plain owned loader onto the
+/// mapped path (same contract as `LEANVEC_FORCE_SCALAR` for kernels);
+/// empty or "0" restores the default. Results stay bit-identical
+/// either way.
+#[test]
+fn force_mmap_env_reroutes_plain_load() {
+    let built = build(Compression::Lvq8, Similarity::InnerProduct, 53);
+    let path = tmp("force.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+
+    std::env::set_var("LEANVEC_FORCE_MMAP", "1");
+    let (forced, _) = LeanVecIndex::load(&path).unwrap();
+    assert!(forced.is_mapped(), "FORCE_MMAP=1 must map the plain load");
+    assert_serving_identical(&built, &forced, 6200);
+
+    std::env::set_var("LEANVEC_FORCE_MMAP", "0");
+    let (plain, _) = LeanVecIndex::load(&path).unwrap();
+    assert!(!plain.is_mapped(), "FORCE_MMAP=0 must decode owned");
+    assert_serving_identical(&built, &plain, 6200);
+
+    std::env::remove_var("LEANVEC_FORCE_MMAP");
+    std::fs::remove_file(&path).ok();
+}

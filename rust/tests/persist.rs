@@ -236,10 +236,7 @@ fn unknown_sections_are_ignored_forward_compatibly() {
     built.save(&path, &SnapshotMeta::default()).unwrap();
     // a "newer writer" appends a section this reader does not know
     let mut sections = persist::read_sections(&path).unwrap();
-    sections.push(RawSection {
-        tag: *b"SHARDMAP",
-        bytes: vec![0xAB; 64],
-    });
+    sections.push(RawSection::new(*b"SHARDMAP", vec![0xAB; 64]));
     persist::write_sections(&path, &sections).unwrap();
     let (loaded, _) = LeanVecIndex::load(&path).expect("unknown section must not break loading");
     assert_search_identical(&built, &loaded, 10, 900);
@@ -268,6 +265,196 @@ fn missing_required_section_fails_loudly() {
         Err(other) => panic!("expected MissingSection, got {other:?}"),
         Ok(_) => panic!("snapshot without GRAPH must not load"),
     }
+    std::fs::remove_file(&path).ok();
+}
+
+/// The mutation contract for both load paths: a damaged snapshot either
+/// fails with a typed [`SnapshotError`] or — when the mutation landed in
+/// bytes no reader consumes, e.g. alignment padding — loads an index
+/// that answers bit-identically to the pristine one. Never a panic,
+/// never silently-wrong results.
+fn assert_mutation_contract(
+    path: &std::path::Path,
+    mutated: &[u8],
+    baseline: &LeanVecIndex,
+    what: &str,
+    seed: u64,
+) {
+    std::fs::write(path, mutated).unwrap();
+    for mmap in [false, true] {
+        let result = if mmap {
+            LeanVecIndex::load_mmap(path)
+        } else {
+            LeanVecIndex::load(path)
+        };
+        match result {
+            Err(e) => {
+                // every variant renders; the error chain must not panic
+                let _ = format!("{what} (mmap={mmap}): {e} / {e:?}");
+                let _ = std::error::Error::source(&e);
+            }
+            Ok((idx, _)) => assert_search_identical(baseline, &idx, 3, seed),
+        }
+    }
+}
+
+#[test]
+fn corruption_fuzz_battery_typed_error_or_bit_identical() {
+    let built = build(
+        Compression::Lvq8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        18,
+    );
+    let scratch = tmp("fuzz.leanvec");
+    built.save(&scratch, &SnapshotMeta::default()).unwrap();
+    let bytes = std::fs::read(&scratch).unwrap();
+    let (baseline, _) = LeanVecIndex::load(&scratch).unwrap();
+
+    // deterministic seed: every CI run fuzzes the same mutations
+    let mut rng = Rng::new(0xF00D_5EED);
+
+    // single-bit flips spread over the whole file (header, table,
+    // payloads, padding)
+    for trial in 0..60u64 {
+        let mut m = bytes.clone();
+        let pos = rng.below(m.len());
+        m[pos] ^= 1u8 << rng.below(8);
+        assert_mutation_contract(&scratch, &m, &baseline, "bit flip", 2000 + trial);
+    }
+
+    // multi-byte stomp: overwrite a random short run with garbage
+    for trial in 0..20u64 {
+        let mut m = bytes.clone();
+        let pos = rng.below(m.len());
+        let run = 1 + rng.below(32.min(m.len() - pos));
+        for b in &mut m[pos..pos + run] {
+            *b = rng.next_u64() as u8;
+        }
+        assert_mutation_contract(&scratch, &m, &baseline, "stomp", 3000 + trial);
+    }
+
+    // truncations at random lengths
+    for trial in 0..20u64 {
+        let cut = rng.below(bytes.len());
+        assert_mutation_contract(&scratch, &bytes[..cut], &baseline, "truncate", 4000 + trial);
+    }
+
+    // section-table surgery: swap the (offset, len) of two entries while
+    // keeping their tags and CRCs — each tag now points at the other's
+    // payload, which the per-section checksum must catch
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    assert!(count >= 5, "core snapshot has five sections");
+    const ENTRY: usize = 28;
+    for (i, j) in [(0usize, 2usize), (2, 4), (1, 3)] {
+        let mut m = bytes.clone();
+        let (ei, ej) = (16 + i * ENTRY, 16 + j * ENTRY);
+        let a: Vec<u8> = m[ei + 8..ei + 24].to_vec(); // offset + len
+        let b: Vec<u8> = m[ej + 8..ej + 24].to_vec();
+        m[ei + 8..ei + 24].copy_from_slice(&b);
+        m[ej + 8..ej + 24].copy_from_slice(&a);
+        assert_mutation_contract(&scratch, &m, &baseline, "table swap", 5000 + i as u64);
+    }
+
+    std::fs::remove_file(&scratch).ok();
+}
+
+/// Emulate the pre-alignment writer: identical header and table layout
+/// but payloads packed back-to-back with no padding, as every snapshot
+/// written before the 64-byte-anchor revision was.
+fn write_unpadded(path: &std::path::Path, sections: &[RawSection]) {
+    use leanvec::data::io::{bin, crc32};
+    let mut out = Vec::new();
+    out.extend_from_slice(&persist::MAGIC);
+    bin::put_u32(&mut out, persist::FORMAT_VERSION);
+    bin::put_u32(&mut out, sections.len() as u32);
+    let mut offset = (16 + sections.len() * 28) as u64;
+    for s in sections {
+        out.extend_from_slice(&s.tag);
+        bin::put_u64(&mut out, offset);
+        bin::put_u64(&mut out, s.bytes.len() as u64);
+        bin::put_u32(&mut out, crc32(&s.bytes));
+        offset += s.bytes.len() as u64;
+    }
+    for s in sections {
+        out.extend_from_slice(&s.bytes);
+    }
+    std::fs::write(path, &out).unwrap();
+}
+
+#[test]
+fn aligned_snapshot_round_trips_through_owned_and_mmap_paths() {
+    let built = build(
+        Compression::Lvq4x8,
+        Compression::F16,
+        Similarity::L2,
+        ProjectionKind::Id,
+        19,
+    );
+    let path = tmp("aligned.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    // the owned reader parses the aligned layout unchanged
+    let (owned, _) = LeanVecIndex::load(&path).unwrap();
+    assert!(!owned.is_mapped());
+    assert_search_identical(&built, &owned, 10, 6000);
+    // and the mapped reader borrows it in place
+    let (mapped, _) = LeanVecIndex::load_mmap(&path).unwrap();
+    assert!(mapped.is_mapped());
+    assert!(mapped.mapped_bytes() > 0);
+    assert_search_identical(&built, &mapped, 10, 6000);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pre_alignment_snapshot_loads_via_both_paths() {
+    let built = build(
+        Compression::Lvq8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        20,
+    );
+    let path = tmp("prealign.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    let sections = persist::read_sections(&path).unwrap();
+    // rewrite with the legacy back-to-back layout
+    write_unpadded(&path, &sections);
+    let (owned, _) = LeanVecIndex::load(&path).expect("legacy layout loads");
+    assert_search_identical(&built, &owned, 10, 7000);
+    // load_mmap accepts it too: misaligned arrays silently decode to
+    // owned memory (with a stderr note), results stay bit-identical
+    let (mapped, _) = LeanVecIndex::load_mmap(&path).expect("legacy layout maps");
+    assert_search_identical(&built, &mapped, 10, 7000);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn evict_mapped_is_safe_and_results_survive_eviction() {
+    let built = build(
+        Compression::Lvq8,
+        Compression::F16,
+        Similarity::InnerProduct,
+        ProjectionKind::Id,
+        21,
+    );
+    let path = tmp("evict.leanvec");
+    built.save(&path, &SnapshotMeta::default()).unwrap();
+    let (mapped, _) = LeanVecIndex::load_mmap(&path).unwrap();
+    let mut ctx = SearchCtx::new(mapped.len());
+    let q = rows(1, 16, 22).pop().unwrap();
+    let query = Query::new(&q).k(10).window(30);
+    let before = mapped.search(&mut ctx, &query);
+    // drop every resident page; the next search refaults from disk and
+    // must produce the same bits
+    mapped.evict_mapped();
+    let after = mapped.search(&mut ctx, &query);
+    assert_eq!(before.ids, after.ids);
+    let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&before.scores), bits(&after.scores));
+    // owned indexes: a no-op, not a crash
+    built.evict_mapped();
+    assert_eq!(built.mapped_bytes(), 0);
     std::fs::remove_file(&path).ok();
 }
 
