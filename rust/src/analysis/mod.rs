@@ -1,0 +1,702 @@
+//! In-repo static analysis: the `leanvec-lint` rule engine.
+//!
+//! A deliberately small line/token scanner — no external parser, no
+//! proc-macro machinery (the offline build vendors only `anyhow` and
+//! the `xla` stub) — that enforces the repo's correctness conventions
+//! over `rust/src` as CI-gated diagnostics:
+//!
+//! * every `unsafe` block/fn/impl is preceded by a `// SAFETY:`
+//!   comment arguing why its preconditions hold;
+//! * no `.unwrap()` / `.expect(` / `panic!` on the serve path
+//!   (`coordinator/`, `shard/`, `index/`, `graph/`, `quant/`,
+//!   `simd/`, `mutate/`, `util/mmap.rs`) outside `#[cfg(test)]`;
+//! * float score ordering uses `total_cmp` — `partial_cmp` is banned
+//!   on the serve path (NaN-poisoned comparators panic or, worse,
+//!   silently misorder);
+//! * every `Ordering::Relaxed` carries a `// ORDERING:` justification;
+//! * no `std::time::Instant` inside the SIMD kernels (timing belongs
+//!   in the harness, not per-call in a scoring loop) and no `println!`
+//!   outside `main.rs` / `bin/` (library output goes through returned
+//!   values; stray stdout corrupts machine-readable CLI output).
+//!
+//! The scanner is token-ish, not a full lexer: it strips comments,
+//! string/char literals, and tracks `#[cfg(test)]` regions by brace
+//! depth, which is exactly enough to make the five rules above
+//! reliable on this codebase. Suppression is explicit and auditable:
+//! a repo-level allowlist file (rule + path per line) for whole-file
+//! waivers, and inline `lint:allow(rule-name)` markers in a comment on
+//! or immediately above the flagged line for per-site waivers — both
+//! are expected to carry a reason.
+
+use std::collections::HashSet;
+use std::fmt;
+use std::path::Path;
+
+/// The enforced rule set. `name()` is the stable identifier used in
+/// diagnostics, allowlist entries, and inline `lint:allow(...)`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Rule {
+    /// `unsafe` without a preceding `// SAFETY:` argument.
+    UnsafeNeedsSafety,
+    /// `.unwrap()` / `.expect(` / `panic!` on the serve path.
+    ServePathPanic,
+    /// `partial_cmp` on the serve path (use `total_cmp`).
+    ServePathPartialCmp,
+    /// `Ordering::Relaxed` without a `// ORDERING:` justification.
+    RelaxedNeedsOrdering,
+    /// `std::time::Instant` inside the SIMD kernel layer.
+    InstantInKernel,
+    /// `println!` outside `main.rs` / `bin/`.
+    PrintlnOutsideCli,
+}
+
+pub const ALL_RULES: [Rule; 6] = [
+    Rule::UnsafeNeedsSafety,
+    Rule::ServePathPanic,
+    Rule::ServePathPartialCmp,
+    Rule::RelaxedNeedsOrdering,
+    Rule::InstantInKernel,
+    Rule::PrintlnOutsideCli,
+];
+
+impl Rule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::UnsafeNeedsSafety => "unsafe-safety-comment",
+            Rule::ServePathPanic => "serve-path-panic",
+            Rule::ServePathPartialCmp => "serve-path-partial-cmp",
+            Rule::RelaxedNeedsOrdering => "relaxed-ordering-comment",
+            Rule::InstantInKernel => "instant-in-kernel",
+            Rule::PrintlnOutsideCli => "println-outside-cli",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        ALL_RULES.iter().copied().find(|r| r.name() == name)
+    }
+}
+
+/// One finding: repo-relative path, 1-based line, rule, message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub path: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// Serve-path module prefixes (relative to `rust/src/`): the modules a
+/// production request or mutation flows through, where a panic is an
+/// outage rather than a bug report.
+const SERVE_PREFIXES: [&str; 7] = [
+    "coordinator/",
+    "shard/",
+    "index/",
+    "graph/",
+    "quant/",
+    "simd/",
+    "mutate/",
+];
+
+fn is_serve_path(rel: &str) -> bool {
+    SERVE_PREFIXES.iter().any(|p| rel.starts_with(p)) || rel == "util/mmap.rs"
+}
+
+fn is_kernel_path(rel: &str) -> bool {
+    rel.starts_with("simd/")
+}
+
+/// `main.rs` and `bin/` entry points own stdout; everything else must
+/// not print to it.
+fn println_allowed(rel: &str) -> bool {
+    rel == "main.rs" || rel.starts_with("bin/")
+}
+
+/// One source line after lexical stripping: `code` has comments and
+/// string/char-literal *contents* blanked to spaces (delimiters kept),
+/// `comment` holds the text of any comment on the line, and `is_test`
+/// marks lines inside a `#[cfg(test)]`-gated item.
+struct ScanLine {
+    code: String,
+    comment: String,
+    is_test: bool,
+}
+
+/// Lexical state carried across lines: nesting block comments, and
+/// (rare but legal) string literals that span lines.
+struct Lexer {
+    block_depth: usize,
+    in_str: bool,
+    raw_hashes: Option<usize>,
+}
+
+impl Lexer {
+    fn new() -> Lexer {
+        Lexer {
+            block_depth: 0,
+            in_str: false,
+            raw_hashes: None,
+        }
+    }
+
+    /// Split one raw line into blanked code text + comment text.
+    fn strip(&mut self, raw: &str) -> (String, String) {
+        let b = raw.as_bytes();
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let mut i = 0;
+        while i < b.len() {
+            if self.block_depth > 0 {
+                if b[i..].starts_with(b"*/") {
+                    self.block_depth -= 1;
+                    i += 2;
+                } else if b[i..].starts_with(b"/*") {
+                    self.block_depth += 1;
+                    i += 2;
+                } else {
+                    comment.push(b[i] as char);
+                    i += 1;
+                }
+                code.push(' ');
+                continue;
+            }
+            if let Some(h) = self.raw_hashes {
+                if b[i] == b'"' && b[i + 1..].len() >= h && b[i + 1..i + 1 + h].iter().all(|&c| c == b'#') {
+                    self.raw_hashes = None;
+                    code.push('"');
+                    i += 1 + h;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if self.in_str {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    code.push_str("  ");
+                    i += 2;
+                } else if b[i] == b'"' {
+                    self.in_str = false;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            match b[i] {
+                b'/' if b[i..].starts_with(b"//") => {
+                    comment.push_str(&raw[i..]);
+                    break;
+                }
+                b'/' if b[i..].starts_with(b"/*") => {
+                    self.block_depth += 1;
+                    code.push(' ');
+                    i += 2;
+                }
+                b'"' => {
+                    self.in_str = true;
+                    code.push('"');
+                    i += 1;
+                }
+                b'r' | b'b' if raw_string_hashes(&b[i..]).is_some() => {
+                    let (skip, hashes) = raw_string_hashes(&b[i..]).unwrap_or((1, 0));
+                    self.raw_hashes = Some(hashes);
+                    code.push('"');
+                    i += skip;
+                }
+                b'b' if b[i + 1..].first() == Some(&b'"') => {
+                    self.in_str = true;
+                    code.push('"');
+                    i += 2;
+                }
+                b'\'' => {
+                    // char literal vs lifetime: 'x' / '\n' are literals,
+                    // 'a in `&'a T` is a lifetime marker.
+                    if let Some(adv) = char_literal_len(&b[i..]) {
+                        code.push('\'');
+                        for _ in 1..adv {
+                            code.push(' ');
+                        }
+                        i += adv;
+                    } else {
+                        code.push('\'');
+                        i += 1;
+                    }
+                }
+                c => {
+                    code.push(c as char);
+                    i += 1;
+                }
+            }
+        }
+        (code, comment)
+    }
+}
+
+/// If `b` starts a raw (possibly byte) string literal `r"`, `r#"`,
+/// `br#"`…, return (bytes to skip to reach content, hash count).
+fn raw_string_hashes(b: &[u8]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    if b.first() == Some(&b'b') {
+        i += 1;
+    }
+    if b.get(i) != Some(&b'r') {
+        return None;
+    }
+    i += 1;
+    let mut hashes = 0;
+    while b.get(i + hashes) == Some(&b'#') {
+        hashes += 1;
+    }
+    if b.get(i + hashes) == Some(&b'"') {
+        Some((i + hashes + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Length in bytes of a char literal starting at a `'`, or `None` when
+/// the quote starts a lifetime instead.
+fn char_literal_len(b: &[u8]) -> Option<usize> {
+    debug_assert_eq!(b.first(), Some(&b'\''));
+    if b.get(1) == Some(&b'\\') {
+        // escaped: scan to the closing quote (handles '\n', '\u{..}')
+        let mut i = 2;
+        while i < b.len() && i < 16 {
+            if b[i] == b'\'' {
+                return Some(i + 1);
+            }
+            i += 1;
+        }
+        return None;
+    }
+    // unescaped: one (possibly multi-byte) char then a closing quote
+    let mut i = 2;
+    while i < b.len() && i < 6 {
+        if b[i] == b'\'' && i > 1 {
+            // 'x' → 3 bytes; lifetimes ('a followed by non-quote) fall out
+            return Some(i + 1);
+        }
+        if (b[i - 1] as char).is_ascii_whitespace() {
+            return None;
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Track `#[cfg(test)]`-gated regions by brace depth. The attribute
+/// arms `pending`; the next `{` opens a test region that closes when
+/// the depth returns to its opening level. A `;` before any `{`
+/// disarms (attribute on a brace-less item).
+struct TestTracker {
+    depth: isize,
+    pending: bool,
+    regions: Vec<isize>,
+}
+
+impl TestTracker {
+    fn new() -> TestTracker {
+        TestTracker {
+            depth: 0,
+            pending: false,
+            regions: Vec::new(),
+        }
+    }
+
+    /// Feed one blanked code line; returns whether the line belongs to
+    /// a test region.
+    fn feed(&mut self, code: &str) -> bool {
+        let has_attr = code.contains("#[cfg(test)]")
+            || (code.contains("#[cfg(all(") && code.contains("test"));
+        if has_attr {
+            self.pending = true;
+        }
+        let started_inside = !self.regions.is_empty();
+        for ch in code.chars() {
+            match ch {
+                '{' => {
+                    if self.pending {
+                        self.regions.push(self.depth);
+                        self.pending = false;
+                    }
+                    self.depth += 1;
+                }
+                '}' => {
+                    self.depth -= 1;
+                    if let Some(&open) = self.regions.last() {
+                        if self.depth <= open {
+                            self.regions.pop();
+                        }
+                    }
+                }
+                ';' => {
+                    if self.pending && self.regions.is_empty() {
+                        self.pending = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        started_inside || !self.regions.is_empty() || has_attr || self.pending
+    }
+}
+
+/// True when `tok` occurs in `code` as a standalone token (not a
+/// substring of a longer identifier, e.g. `println!` inside
+/// `eprintln!`).
+fn has_token(code: &str, tok: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = at + tok.len();
+        let after_ok = !tok
+            .chars()
+            .next_back()
+            .is_some_and(|c| c.is_alphanumeric() || c == '_')
+            || !code[after..]
+                .chars()
+                .next()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = after;
+    }
+    false
+}
+
+/// Does the comment on line `i`, or a comment in the contiguous run of
+/// comment-only / attribute-only lines directly above it, contain
+/// `needle`? This is how `// SAFETY:` / `// ORDERING:` /
+/// `lint:allow(...)` attach to a flagged line.
+fn nearby_comment_contains(lines: &[ScanLine], i: usize, needle: &str) -> bool {
+    if lines[i].comment.contains(needle) {
+        return true;
+    }
+    let mut j = i;
+    let mut budget = 40; // arbitrary sanity bound on the walk-up
+    while j > 0 && budget > 0 {
+        j -= 1;
+        budget -= 1;
+        let t = lines[j].code.trim();
+        let passthrough = t.is_empty() || t.starts_with("#[") || t.starts_with("#!");
+        if lines[j].comment.contains(needle) {
+            return true;
+        }
+        if !passthrough {
+            return false;
+        }
+    }
+    false
+}
+
+fn allow_marker(rule: Rule) -> String {
+    // assembled at runtime so the scanner never matches its own source
+    format!("lint:allow({})", rule.name())
+}
+
+/// Scan one file's source. `rel` is the path relative to the scan root
+/// (`rust/src`), with forward slashes.
+pub fn scan_file(rel: &str, source: &str) -> Vec<Diagnostic> {
+    let serve = is_serve_path(rel);
+    let kernel = is_kernel_path(rel);
+    let cli = println_allowed(rel);
+
+    let mut lexer = Lexer::new();
+    let mut tracker = TestTracker::new();
+    let mut lines: Vec<ScanLine> = Vec::new();
+    for raw in source.lines() {
+        let (code, comment) = lexer.strip(raw);
+        let is_test = tracker.feed(&code);
+        lines.push(ScanLine {
+            code,
+            comment,
+            is_test,
+        });
+    }
+
+    let mut out = Vec::new();
+    let mut push = |lines: &[ScanLine], i: usize, rule: Rule, msg: String| {
+        if !nearby_comment_contains(lines, i, &allow_marker(rule)) {
+            out.push(Diagnostic {
+                path: rel.to_string(),
+                line: i + 1,
+                rule,
+                message: msg,
+            });
+        }
+    };
+
+    for i in 0..lines.len() {
+        let code = lines[i].code.as_str();
+        if lines[i].is_test {
+            continue;
+        }
+        if has_token(code, "unsafe") && !nearby_comment_contains(&lines, i, "SAFETY:") {
+            push(
+                &lines,
+                i,
+                Rule::UnsafeNeedsSafety,
+                "`unsafe` without a `// SAFETY:` comment arguing its preconditions".into(),
+            );
+        }
+        if serve {
+            for pat in [".unwrap()", ".expect(", "panic!"] {
+                if code.contains(pat) {
+                    push(
+                        &lines,
+                        i,
+                        Rule::ServePathPanic,
+                        format!("`{pat}` on the serve path — return a typed error instead"),
+                    );
+                }
+            }
+            if code.contains("partial_cmp") {
+                push(
+                    &lines,
+                    i,
+                    Rule::ServePathPartialCmp,
+                    "`partial_cmp` on the serve path — use `total_cmp` for float ordering".into(),
+                );
+            }
+        }
+        if code.contains("Ordering::Relaxed")
+            && !nearby_comment_contains(&lines, i, "ORDERING:")
+        {
+            push(
+                &lines,
+                i,
+                Rule::RelaxedNeedsOrdering,
+                "`Ordering::Relaxed` without a `// ORDERING:` justification".into(),
+            );
+        }
+        if kernel && has_token(code, "Instant") {
+            push(
+                &lines,
+                i,
+                Rule::InstantInKernel,
+                "`Instant` inside the kernel layer — time in the harness, not per call".into(),
+            );
+        }
+        if !cli && has_token(code, "println!") {
+            push(
+                &lines,
+                i,
+                Rule::PrintlnOutsideCli,
+                "`println!` outside main.rs/bin — stray stdout corrupts CLI output".into(),
+            );
+        }
+    }
+    out
+}
+
+/// Whole-file waivers: `<rule-name> <path> [reason…]` per line, `#`
+/// comments and blank lines ignored. Paths are relative to the scan
+/// root (`rust/src`), forward slashes.
+pub struct Allowlist {
+    entries: HashSet<(String, String)>,
+}
+
+impl Allowlist {
+    pub fn empty() -> Allowlist {
+        Allowlist {
+            entries: HashSet::new(),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Allowlist, String> {
+        let mut entries = HashSet::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (rule, path) = match (it.next(), it.next()) {
+                (Some(r), Some(p)) => (r, p),
+                _ => {
+                    return Err(format!(
+                        "allowlist line {}: expected `<rule> <path> [reason]`, got `{line}`",
+                        ln + 1
+                    ))
+                }
+            };
+            if Rule::from_name(rule).is_none() {
+                return Err(format!("allowlist line {}: unknown rule `{rule}`", ln + 1));
+            }
+            entries.insert((rule.to_string(), path.to_string()));
+        }
+        Ok(Allowlist { entries })
+    }
+
+    pub fn allows(&self, d: &Diagnostic) -> bool {
+        self.entries
+            .contains(&(d.rule.name().to_string(), d.path.clone()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, returning
+/// (relative-path, absolute-path) pairs sorted by relative path.
+pub fn collect_sources(root: &Path) -> std::io::Result<Vec<(String, std::path::PathBuf)>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push((rel, p));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Scan every `.rs` file under `root` (the repo's `rust/src`),
+/// returning diagnostics sorted by (path, line).
+pub fn scan_tree(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    for (rel, abs) in collect_sources(root)? {
+        let source = std::fs::read_to_string(&abs)?;
+        diags.extend(scan_file(&rel, &source));
+    }
+    diags.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+    Ok(diags)
+}
+
+/// Split diagnostics into (kept, allowlisted-count).
+pub fn apply_allowlist(diags: Vec<Diagnostic>, allow: &Allowlist) -> (Vec<Diagnostic>, usize) {
+    let before = diags.len();
+    let kept: Vec<Diagnostic> = diags.into_iter().filter(|d| !allow.allows(d)).collect();
+    let suppressed = before - kept.len();
+    (kept, suppressed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_strings_and_comments() {
+        let mut lx = Lexer::new();
+        let (code, comment) = lx.strip(r#"let s = ".unwrap()"; // real comment"#);
+        assert!(!code.contains(".unwrap()"));
+        assert!(comment.contains("real comment"));
+        assert!(code.contains("let s ="));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let mut lx = Lexer::new();
+        let (c1, _) = lx.strip("let a = 1; /* start");
+        let (c2, m2) = lx.strip("still comment .unwrap()");
+        let (c3, _) = lx.strip("end */ let b = 2;");
+        assert!(c1.contains("let a"));
+        assert!(!c2.contains(".unwrap()"));
+        assert!(m2.contains(".unwrap()"));
+        assert!(c3.contains("let b"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let mut lx = Lexer::new();
+        let (code, _) = lx.strip("fn f<'a>(x: &'a str) { let c = 'u'; }");
+        assert!(code.contains("<'a>"));
+        assert!(!code.contains('u'), "char literal contents blanked: {code}");
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("println!(\"x\")", "println!"));
+        assert!(!has_token("eprintln!(\"x\")", "println!"));
+        assert!(has_token("unsafe {", "unsafe"));
+        assert!(!has_token("unsafety", "unsafe"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracking() {
+        let src = "fn live() { x.unwrap(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn t() { y.unwrap(); }\n\
+                   }\n\
+                   fn live2() { z.unwrap(); }\n";
+        let d = scan_file("index/foo.rs", src);
+        let lines: Vec<usize> = d.iter().map(|d| d.line).collect();
+        assert_eq!(lines, vec![1, 6], "only non-test unwraps flagged: {d:?}");
+    }
+
+    #[test]
+    fn safety_comment_walkup_through_attributes() {
+        let ok = "// SAFETY: pointer is valid for len elements\n\
+                  #[inline]\n\
+                  unsafe fn f() {}\n";
+        assert!(scan_file("util/x.rs", ok).is_empty());
+        let bad = "#[inline]\nunsafe fn f() {}\n";
+        let d = scan_file("util/x.rs", bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::UnsafeNeedsSafety);
+    }
+
+    #[test]
+    fn relaxed_needs_ordering_comment() {
+        let bad = "fn f(c: &AtomicUsize) { c.fetch_add(1, Ordering::Relaxed); }\n";
+        assert_eq!(scan_file("util/x.rs", bad).len(), 1);
+        let ok =
+            "fn f(c: &AtomicUsize) { c.fetch_add(1, Ordering::Relaxed); // ORDERING: stat only\n}\n";
+        assert!(scan_file("util/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn allowlist_roundtrip() {
+        let a = Allowlist::parse(
+            "# comment\nserve-path-panic index/foo.rs lock poisoning is unreachable\n",
+        )
+        .unwrap();
+        let d = Diagnostic {
+            path: "index/foo.rs".into(),
+            line: 3,
+            rule: Rule::ServePathPanic,
+            message: String::new(),
+        };
+        assert!(a.allows(&d));
+        assert!(Allowlist::parse("bogus-rule x.rs\n").is_err());
+    }
+}

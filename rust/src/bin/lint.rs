@@ -1,0 +1,102 @@
+//! `leanvec-lint` — the repo's CI-gated static-analysis pass.
+//!
+//! Walks `rust/src` with the [`leanvec::analysis`] scanner and prints
+//! one `path:line: [rule] message` diagnostic per finding. Exit code 0
+//! when the tree is clean, 1 when any non-allowlisted finding remains,
+//! 2 on usage/IO errors. See `docs/CORRECTNESS.md` for the rule
+//! catalog and suppression format.
+//!
+//! ```text
+//! leanvec-lint [--root DIR] [--allowlist FILE] [--list-rules]
+//! ```
+//!
+//! Defaults resolve against the crate manifest directory, so
+//! `cargo run --bin leanvec-lint` works from any CWD.
+
+use leanvec::analysis::{self, Allowlist, ALL_RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ! {
+    eprintln!("usage: leanvec-lint [--root DIR] [--allowlist FILE] [--list-rules]");
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut root = manifest.join("rust/src");
+    let mut allow_path = manifest.join("rust/lint-allow.txt");
+
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = PathBuf::from(args.next().unwrap_or_else(|| usage())),
+            "--allowlist" => allow_path = PathBuf::from(args.next().unwrap_or_else(|| usage())),
+            "--list-rules" => {
+                for r in ALL_RULES {
+                    println!("{}", r.name());
+                }
+                return ExitCode::SUCCESS;
+            }
+            _ => usage(),
+        }
+    }
+
+    let allow = if allow_path.is_file() {
+        match std::fs::read_to_string(&allow_path) {
+            Ok(text) => match Allowlist::parse(&text) {
+                Ok(a) => a,
+                Err(e) => {
+                    eprintln!("leanvec-lint: bad allowlist {}: {e}", allow_path.display());
+                    return ExitCode::from(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("leanvec-lint: read {}: {e}", allow_path.display());
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        Allowlist::empty()
+    };
+
+    let (n_files, diags) = match analysis::collect_sources(&root) {
+        Ok(files) => {
+            let mut diags = Vec::new();
+            for (rel, abs) in &files {
+                match std::fs::read_to_string(abs) {
+                    Ok(src) => diags.extend(analysis::scan_file(rel, &src)),
+                    Err(e) => {
+                        eprintln!("leanvec-lint: read {}: {e}", abs.display());
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            diags.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)));
+            (files.len(), diags)
+        }
+        Err(e) => {
+            eprintln!("leanvec-lint: walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let (kept, suppressed) = analysis::apply_allowlist(diags, &allow);
+    for d in &kept {
+        println!("rust/src/{d}");
+    }
+    if kept.is_empty() {
+        println!(
+            "leanvec-lint: clean ({n_files} files scanned, {suppressed} allowlisted suppression{})",
+            if suppressed == 1 { "" } else { "s" }
+        );
+        ExitCode::SUCCESS
+    } else {
+        println!(
+            "leanvec-lint: {} finding{} ({suppressed} allowlisted)",
+            kept.len(),
+            if kept.len() == 1 { "" } else { "s" }
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -72,6 +72,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn full_batch_returned_immediately() {
         let (tx, rx) = mpsc::channel();
         for i in 0..10 {
@@ -87,6 +89,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn timeout_flushes_partial_batch() {
         let (tx, rx) = mpsc::channel();
         tx.send(req(1)).unwrap();
@@ -102,6 +106,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn closed_empty_channel_yields_none() {
         let (tx, rx) = mpsc::channel::<Request>();
         drop(tx);
@@ -110,6 +116,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn disconnect_mid_wait_flushes() {
         let (tx, rx) = mpsc::channel();
         tx.send(req(1)).unwrap();

@@ -60,6 +60,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn self_queries_have_perfect_recall_l2() {
         let db = rows(100, 8, 1);
         let gt = ground_truth(&db, &db[..10].to_vec(), 1, Similarity::L2);
@@ -69,6 +71,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn recall_metric_boundaries() {
         let truth = vec![vec![0u32, 1, 2], vec![3, 4, 5]];
         assert_eq!(recall_at_k(&truth, &truth, 3), 1.0);
@@ -79,6 +83,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn cosine_gt_ignores_scale() {
         let mut db = rows(50, 8, 2);
         // duplicate vector 0 scaled by 100 at slot 1
@@ -90,6 +96,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn recall_with_k_smaller_than_lists() {
         let truth = vec![vec![0u32, 1, 2, 3, 4]];
         let got = vec![vec![0u32, 9, 9, 9, 9]];

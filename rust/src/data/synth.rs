@@ -276,6 +276,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn shapes_and_splits() {
         let ds = generate(&small_spec(QueryDist::InDistribution));
         assert_eq!(ds.database.len(), 400);
@@ -285,6 +287,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn deterministic_given_seed() {
         let a = generate(&small_spec(QueryDist::InDistribution));
         let b = generate(&small_spec(QueryDist::InDistribution));
@@ -293,6 +297,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn database_spectrum_decays() {
         let ds = generate(&small_spec(QueryDist::InDistribution));
         let kx = rows_to_matrix(&ds.database).second_moment();
@@ -301,6 +307,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn ood_moments_mismatch_id_moments_match() {
         let id = generate(&small_spec(QueryDist::InDistribution));
         let ood = generate(&small_spec(QueryDist::OutOfDistribution(0.9)));
@@ -317,6 +325,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn cosine_datasets_are_normalized() {
         let mut spec = small_spec(QueryDist::InDistribution);
         spec.similarity = Similarity::Cosine;
@@ -328,6 +338,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn roster_matches_table1_signature() {
         let specs = paper_datasets(0.05);
         assert_eq!(specs.len(), 7);

@@ -287,6 +287,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn curve_is_monotone_in_recall() {
         let ctx = tiny_ctx();
         let ds = tiny_ds();
@@ -307,6 +309,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn qps_at_recall_interpolates() {
         let curve = vec![
             CurvePoint {
@@ -328,6 +332,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn save_writes_json() {
         let ctx = tiny_ctx();
         ctx.save("unit", &Json::obj(vec![("x", Json::num(1.0))]))

@@ -171,6 +171,130 @@ impl Adjacency {
         let total: f64 = (0..self.n as u32).map(|i| self.degree(i) as f64).sum();
         total / self.n.max(1) as f64
     }
+
+    /// Test-battery hook: overwrite one node's stored degree so the
+    /// fsck checkers have a bound-violating corruption to detect (the
+    /// accessor API clamps degrees on every write, so this state is
+    /// otherwise unreachable).
+    #[doc(hidden)]
+    pub fn corrupt_degree_for_fsck(&mut self, id: u32, fake_len: u32) {
+        self.make_slab();
+        match &mut self.repr {
+            AdjRepr::Slab { len, .. } => len[id as usize] = fake_len,
+            AdjRepr::Csr { .. } => unreachable!("make_slab just ran"),
+        }
+    }
+
+    /// Deep structural check for the fsck layer: every neighbor id in
+    /// `[0, n)`, no self-loops, every degree within `max_degree`, and
+    /// (for a CSR graph) monotone offsets that cover the packed
+    /// neighbor block exactly. Never panics on corrupt state — degrees
+    /// are validated *before* any neighbor slice is formed, and
+    /// scanning stops after 16 violations so a wholly corrupt graph
+    /// reports a bounded sample rather than one entry per node.
+    pub fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::Violation;
+        let start = out.len();
+        let full = |out: &Vec<Violation>| out.len() - start >= 16;
+        match &self.repr {
+            AdjRepr::Slab { flat, len } => {
+                if len.len() != self.n || flat.len() != self.n * self.max_degree {
+                    out.push(Violation::new(
+                        "graph",
+                        "payload-size-mismatch",
+                        format!(
+                            "slab arrays {}x{} disagree with {} nodes x {} max degree",
+                            len.len(),
+                            flat.len(),
+                            self.n,
+                            self.max_degree
+                        ),
+                    ));
+                    return;
+                }
+                for i in 0..self.n {
+                    if full(out) {
+                        return;
+                    }
+                    let deg = len[i] as usize;
+                    if deg > self.max_degree {
+                        out.push(Violation::new(
+                            "graph",
+                            "degree-overflow",
+                            format!("node {i}: degree {deg} > max {}", self.max_degree),
+                        ));
+                        continue; // the slice past max_degree is not valid to form
+                    }
+                    let base = i * self.max_degree;
+                    self.check_list(i, &flat[base..base + deg], out);
+                }
+            }
+            AdjRepr::Csr { offsets, nbrs } => {
+                if offsets.len() != self.n + 1 {
+                    out.push(Violation::new(
+                        "graph",
+                        "csr-offsets",
+                        format!("{} offsets for {} nodes (want n + 1)", offsets.len(), self.n),
+                    ));
+                    return;
+                }
+                if offsets.first() != Some(&0)
+                    || offsets.windows(2).any(|w| w[0] > w[1])
+                    || *offsets.last().unwrap_or(&0) as usize != nbrs.len()
+                {
+                    out.push(Violation::new(
+                        "graph",
+                        "csr-offsets",
+                        format!(
+                            "offsets not a monotone cover of the {}-edge block",
+                            nbrs.len()
+                        ),
+                    ));
+                    return;
+                }
+                for i in 0..self.n {
+                    if full(out) {
+                        return;
+                    }
+                    let (a, b) = (offsets[i] as usize, offsets[i + 1] as usize);
+                    if b - a > self.max_degree {
+                        out.push(Violation::new(
+                            "graph",
+                            "degree-overflow",
+                            format!("node {i}: degree {} > max {}", b - a, self.max_degree),
+                        ));
+                        continue;
+                    }
+                    self.check_list(i, &nbrs[a..b], out);
+                }
+            }
+        }
+    }
+
+    /// One node's neighbor list: in-range ids, no self-loop. At most
+    /// one violation of each kind per node keeps reports readable.
+    fn check_list(
+        &self,
+        node: usize,
+        list: &[u32],
+        out: &mut Vec<crate::util::invariants::Violation>,
+    ) {
+        use crate::util::invariants::Violation;
+        if let Some(&nb) = list.iter().find(|&&nb| nb as usize >= self.n) {
+            out.push(Violation::new(
+                "graph",
+                "neighbor-out-of-range",
+                format!("node {node}: neighbor {nb} >= {} nodes", self.n),
+            ));
+        }
+        if list.iter().any(|&nb| nb as usize == node) {
+            out.push(Violation::new(
+                "graph",
+                "self-loop",
+                format!("node {node} lists itself"),
+            ));
+        }
+    }
 }
 
 /// A built Vamana graph: adjacency + entry point.
@@ -184,6 +308,23 @@ pub struct VamanaGraph {
 }
 
 impl VamanaGraph {
+    /// Deep structural check for the fsck layer: the adjacency
+    /// invariants ([`Adjacency::check_invariants`]) plus a valid entry
+    /// point — the medoid must name a real node whenever the graph has
+    /// any.
+    pub fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::Violation;
+        let n = self.adj.len_nodes();
+        if n > 0 && self.medoid as usize >= n {
+            out.push(Violation::new(
+                "graph",
+                "medoid-out-of-range",
+                format!("medoid {} >= {n} nodes", self.medoid),
+            ));
+        }
+        self.adj.check_invariants(out);
+    }
+
     /// Serialize the graph as a CSR-packed snapshot section: scalar
     /// parameters, the per-node degree array (the CSR offsets in
     /// difference form), then every neighbor list concatenated without
@@ -800,6 +941,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn adjacency_basics() {
         let mut adj = Adjacency::new(4, 3);
         adj.set_neighbors(0, &[1, 2, 3]);
@@ -811,6 +954,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn degrees_bounded_by_r() {
         let rows = clustered_rows(300, 8, 1);
         let (g, _) = build_graph(&rows, Similarity::L2);
@@ -821,6 +966,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn high_recall_l2() {
         let rows = clustered_rows(400, 8, 2);
         let (g, store) = build_graph(&rows, Similarity::L2);
@@ -844,6 +991,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn high_recall_inner_product() {
         let rows = clustered_rows(400, 8, 3);
         let (g, store) = build_graph(&rows, Similarity::InnerProduct);
@@ -864,6 +1013,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn no_self_loops() {
         let rows = clustered_rows(200, 6, 4);
         let (g, _) = build_graph(&rows, Similarity::L2);
@@ -873,6 +1024,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn build_records_time() {
         let rows = clustered_rows(100, 6, 5);
         let (g, _) = build_graph(&rows, Similarity::L2);
@@ -886,6 +1039,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn parallel_build_is_deterministic_and_thread_count_independent() {
         let rows = clustered_rows(500, 8, 21);
         let store = F32Store::from_rows(&rows);
@@ -910,6 +1065,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn parallel_build_invariants_hold() {
         let rows = clustered_rows(400, 8, 22);
         let store = F32Store::from_rows(&rows);
@@ -941,6 +1098,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn parallel_build_recall_matches_serial() {
         let rows = clustered_rows(500, 8, 23);
         let store = F32Store::from_rows(&rows);
@@ -979,6 +1138,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn threads_one_reproduces_serial_build_exactly() {
         let rows = clustered_rows(300, 8, 24);
         let store = F32Store::from_rows(&rows);
@@ -994,6 +1155,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn graph_write_read_roundtrip() {
         let rows = clustered_rows(250, 8, 31);
         let (g, _) = build_graph(&rows, Similarity::L2);
@@ -1012,6 +1175,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn graph_read_rejects_corruption() {
         let rows = clustered_rows(100, 6, 32);
         let (g, _) = build_graph(&rows, Similarity::L2);
@@ -1029,6 +1194,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn medoid_is_central() {
         // one tight blob: the medoid must be near the mean
         let mut rng = Rng::new(6);

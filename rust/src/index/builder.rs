@@ -381,6 +381,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn builds_all_projection_kinds() {
         let x = rows(250, 16, 1);
         let q = rows(50, 16, 2);
@@ -401,6 +403,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn build_breakdown_accounted() {
         let x = rows(200, 12, 3);
         let ix = IndexBuilder::new()
@@ -413,6 +417,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn threaded_build_quantization_identical_and_recall_close() {
         let x = rows(800, 16, 9);
         let build = |threads: usize| {
@@ -445,6 +451,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn build_threads_one_reproduces_default_build() {
         let x = rows(400, 12, 10);
         let a = IndexBuilder::new()
@@ -466,6 +474,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn cosine_normalizes() {
         let x = rows(150, 8, 4);
         let ix = IndexBuilder::new()
@@ -479,6 +489,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn unified_enum_search_shapes() {
         let x = rows(300, 16, 5);
         let lv = IndexBuilder::new()

@@ -83,8 +83,8 @@ fn kmeans(rows: &[Vec<f32>], k: usize, iters: usize, seed: u64) -> Vec<Vec<f32>>
             }
             idx
         };
-        centroids.push(rows[pick].clone());
-        let c = centroids.last().unwrap().clone();
+        let c = rows[pick].clone();
+        centroids.push(c.clone());
         for (i, r) in rows.iter().enumerate() {
             let d = l2_sq(r, &c);
             if d < d2[i] {
@@ -416,6 +416,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn kmeans_reduces_distortion() {
         let rows = clustered_rows(200, 8, 1);
         let cents = kmeans(&rows, 8, 12, 7);
@@ -435,6 +437,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn recall_reasonable_l2() {
         let rows = clustered_rows(600, 16, 2);
         let idx = IvfPqIndex::build(
@@ -453,6 +457,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn more_probes_more_recall() {
         let rows = clustered_rows(600, 16, 4);
         let idx = IvfPqIndex::build(
@@ -472,6 +478,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn ip_search_runs() {
         let rows = clustered_rows(300, 8, 6);
         let idx = IvfPqIndex::build(
@@ -490,6 +498,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn every_vector_in_exactly_one_list() {
         let rows = clustered_rows(200, 8, 8);
         let idx = IvfPqIndex::build(&rows, IvfPqParams::default(), Similarity::L2, 9);

@@ -116,6 +116,73 @@ impl BuildBreakdown {
 }
 
 impl LeanVecIndex {
+    /// Deep consistency check for the fsck layer: cross-layer size
+    /// relations (both stores and the graph agree on the row count,
+    /// store dims match the projection model), the graph's structural
+    /// invariants, and both stores' internal invariants. Returns a
+    /// typed report instead of panicking — `repro fsck` and the
+    /// corruption test battery consume the same entry point.
+    pub fn check_invariants(&self) -> crate::util::invariants::FsckReport {
+        use crate::util::invariants::{FsckReport, Violation};
+        let mut report = FsckReport::default();
+        let n = self.primary.len();
+        if self.secondary.len() != n || self.graph.adj.len_nodes() != n {
+            report.violations.push(Violation::new(
+                "index",
+                "store-len-mismatch",
+                format!(
+                    "primary {} / secondary {} / graph {} row counts disagree",
+                    n,
+                    self.secondary.len(),
+                    self.graph.adj.len_nodes()
+                ),
+            ));
+        }
+        if self.primary.dim() != self.model.target_dim() {
+            report.violations.push(Violation::new(
+                "index",
+                "dim-mismatch",
+                format!(
+                    "primary store dim {} != model target dim {}",
+                    self.primary.dim(),
+                    self.model.target_dim()
+                ),
+            ));
+        }
+        if self.secondary.dim() != self.model.input_dim() {
+            report.violations.push(Violation::new(
+                "index",
+                "dim-mismatch",
+                format!(
+                    "secondary store dim {} != model input dim {}",
+                    self.secondary.dim(),
+                    self.model.input_dim()
+                ),
+            ));
+        }
+        self.graph.check_invariants(&mut report.violations);
+        for (layer, store) in [
+            ("primary-store", &self.primary),
+            ("secondary-store", &self.secondary),
+        ] {
+            let mut tmp = Vec::new();
+            store.check_invariants(&mut tmp);
+            for mut v in tmp {
+                v.layer = layer;
+                report.violations.push(v);
+            }
+            report
+                .checked
+                .push(format!("{layer}: {} rows x {} dims", store.len(), store.dim()));
+        }
+        report.checked.push(format!(
+            "graph: {n} nodes, max degree {}, medoid {}",
+            self.graph.adj.max_degree(),
+            self.graph.medoid
+        ));
+        report
+    }
+
     pub fn len(&self) -> usize {
         self.primary.len()
     }
@@ -345,6 +412,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn recall_with_rerank_beats_no_rerank() {
         let rows = lowrank_rows(500, 32, 6, 1);
         let index = build_small(&rows, 8);
@@ -372,6 +441,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn stats_populate() {
         let rows = lowrank_rows(200, 16, 4, 2);
         let index = build_small(&rows, 6);
@@ -387,6 +458,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn bytes_touched_counts_residual_for_two_level_secondary() {
         let rows = lowrank_rows(200, 16, 4, 7);
         let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
@@ -423,6 +496,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn search_batch_matches_sequential_search() {
         let rows = lowrank_rows(300, 16, 4, 8);
         let index = build_small(&rows, 6);
@@ -445,6 +520,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn compression_ratio_reported() {
         let rows = lowrank_rows(150, 32, 4, 3);
         let index = build_small(&rows, 8);
@@ -453,6 +530,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn scores_descend() {
         let rows = lowrank_rows(150, 16, 4, 4);
         let index = build_small(&rows, 6);
@@ -463,6 +542,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn split_buffer_retains_more_than_the_window() {
         let rows = lowrank_rows(400, 16, 4, 9);
         let index = build_small(&rows, 6);

@@ -181,6 +181,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn loss_decreases_monotonically_enough() {
         let (kq, kx, a0, b0) = ood_problem(1, 24, 8);
         let init = ood_loss(&a0, &b0, &kq, &kx);
@@ -203,6 +205,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn early_termination_fires() {
         let (kq, kx, a0, b0) = ood_problem(2, 16, 6);
         let res = frank_wolfe(
@@ -222,6 +226,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn iterates_stay_in_spectral_ball() {
         let (kq, kx, a0, b0) = ood_problem(3, 16, 6);
         let res = frank_wolfe(
@@ -241,6 +247,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     #[should_panic(expected = "zero init")]
     fn zero_init_rejected() {
         let (kq, kx, _, _) = ood_problem(4, 12, 4);
@@ -255,6 +263,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn fw_beats_pca_on_ood_data() {
         let (kq, kx, _, _) = ood_problem(5, 24, 8);
         let p = crate::leanvec::pca::pca(&kx, 8);

@@ -300,6 +300,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn projection_shapes() {
         let x = gaussian_rows(200, 16, 1);
         let mut b = TrainBackends::default();
@@ -311,6 +313,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn all_kinds_train() {
         let x = gaussian_rows(150, 12, 2);
         let q = gaussian_rows(100, 12, 3);
@@ -339,6 +343,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn ood_learners_not_worse_than_pca_by_loss() {
         let x = gaussian_rows(300, 16, 4);
         let q = gaussian_rows(200, 16, 5);
@@ -351,6 +357,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn threaded_projection_matches_serial() {
         let x = gaussian_rows(300, 16, 9);
         let mut b = TrainBackends::default();
@@ -359,6 +367,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn identity_model_is_identity() {
         let m = LeanVecModel::identity(8);
         let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
@@ -367,6 +377,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn binary_roundtrip_bit_exact() {
         let x = gaussian_rows(120, 10, 7);
         let q = gaussian_rows(80, 10, 8);
@@ -392,6 +404,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn json_roundtrip() {
         let x = gaussian_rows(100, 10, 6);
         let mut b = TrainBackends::default();

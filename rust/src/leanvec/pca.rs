@@ -17,6 +17,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn pca_recovers_planted_subspace() {
         // data concentrated in a planted 3-dim subspace + small noise
         let mut rng = Rng::new(1);
@@ -34,6 +36,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn pca_projection_is_orthonormal() {
         let mut rng = Rng::new(2);
         let x = Matrix::randn(200, 24, &mut rng);
@@ -43,6 +47,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn more_dims_capture_more_energy() {
         let mut rng = Rng::new(3);
         let x = Matrix::randn(300, 20, &mut rng);

@@ -87,6 +87,7 @@
 //! assert!(filtered.stats.filtered > 0);
 //! ```
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -59,6 +59,11 @@ pub struct AdjacencyReader {
     max_degree: usize,
 }
 
+// Lock poisoning throughout this module is recovered with
+// `PoisonError::into_inner`: every critical section leaves the shard in
+// a consistent state line-by-line (flat writes precede the len store
+// that publishes them), so a peer's panic cannot expose a torn list —
+// aborting every future search over a healthy graph would be worse.
 impl AdjacencyReader {
     /// Copy `id`'s neighbor list into `out` (cleared first). Ids beyond
     /// the snapshot read as empty.
@@ -66,7 +71,7 @@ impl AdjacencyReader {
         out.clear();
         let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
         if let Some(shard) = self.table.get(s) {
-            let guard = shard.read().unwrap();
+            let guard = shard.read().unwrap_or_else(std::sync::PoisonError::into_inner);
             let l = guard.len[i] as usize;
             let base = i * self.max_degree;
             out.extend_from_slice(&guard.flat[base..base + l]);
@@ -77,7 +82,7 @@ impl AdjacencyReader {
     pub fn degree(&self, id: u32) -> usize {
         let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
         match self.table.get(s) {
-            Some(shard) => shard.read().unwrap().len[i] as usize,
+            Some(shard) => shard.read().unwrap_or_else(std::sync::PoisonError::into_inner).len[i] as usize,
             None => 0,
         }
     }
@@ -106,6 +111,75 @@ impl LiveAdjacency {
         self.len() == 0
     }
 
+    /// Deep structural check for the fsck layer, mirroring
+    /// [`Adjacency::check_invariants`] over the sharded live layout:
+    /// the shard table covers every published node, degrees respect the
+    /// bound, neighbor ids stay inside the published node count, and no
+    /// node lists itself. Degrees are validated before any slice is
+    /// formed, and scanning stops after 16 violations.
+    pub fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::Violation;
+        let n = self.len();
+        let table = Arc::clone(
+            &self
+                .table
+                .read()
+                .unwrap_or_else(std::sync::PoisonError::into_inner),
+        );
+        if table.len() * SHARD_NODES < n {
+            out.push(Violation::new(
+                "graph",
+                "payload-size-mismatch",
+                format!(
+                    "{} shards cover {} slots but {n} nodes are published",
+                    table.len(),
+                    table.len() * SHARD_NODES
+                ),
+            ));
+            return;
+        }
+        let start = out.len();
+        'shards: for (s, shard) in table.iter().enumerate() {
+            let guard = shard
+                .read()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            for j in 0..SHARD_NODES {
+                let i = s * SHARD_NODES + j;
+                if i >= n {
+                    break 'shards;
+                }
+                if out.len() - start >= 16 {
+                    break 'shards;
+                }
+                let deg = guard.len[j] as usize;
+                if deg > self.max_degree {
+                    out.push(Violation::new(
+                        "graph",
+                        "degree-overflow",
+                        format!("node {i}: degree {deg} > max {}", self.max_degree),
+                    ));
+                    continue;
+                }
+                let base = j * self.max_degree;
+                let list = &guard.flat[base..base + deg];
+                if let Some(&nb) = list.iter().find(|&&nb| nb as usize >= n) {
+                    out.push(Violation::new(
+                        "graph",
+                        "neighbor-out-of-range",
+                        format!("node {i}: neighbor {nb} >= {n} nodes"),
+                    ));
+                }
+                if list.iter().any(|&nb| nb as usize == i) {
+                    out.push(Violation::new(
+                        "graph",
+                        "self-loop",
+                        format!("node {i} lists itself"),
+                    ));
+                }
+            }
+        }
+    }
+
     pub fn max_degree(&self) -> usize {
         self.max_degree
     }
@@ -113,7 +187,7 @@ impl LiveAdjacency {
     /// Snapshot for one query (or one mutation's link phase).
     pub fn reader(&self) -> AdjacencyReader {
         AdjacencyReader {
-            table: Arc::clone(&self.table.read().unwrap()),
+            table: Arc::clone(&self.table.read().unwrap_or_else(std::sync::PoisonError::into_inner)),
             max_degree: self.max_degree,
         }
     }
@@ -122,8 +196,8 @@ impl LiveAdjacency {
     pub fn set_neighbors(&self, id: u32, list: &[u32]) {
         debug_assert!((id as usize) < self.len());
         let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
-        let table = Arc::clone(&self.table.read().unwrap());
-        let mut shard = table[s].write().unwrap();
+        let table = Arc::clone(&self.table.read().unwrap_or_else(std::sync::PoisonError::into_inner));
+        let mut shard = table[s].write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let k = list.len().min(self.max_degree);
         let base = i * self.max_degree;
         shard.flat[base..base + k].copy_from_slice(&list[..k]);
@@ -137,7 +211,7 @@ impl LiveAdjacency {
         let id = self.nodes.load(Ordering::Acquire);
         let needed_shards = (id + 1).div_ceil(SHARD_NODES);
         {
-            let mut guard = self.table.write().unwrap();
+            let mut guard = self.table.write().unwrap_or_else(std::sync::PoisonError::into_inner);
             if guard.len() < needed_shards {
                 let mut grown: Vec<Arc<RwLock<Shard>>> = guard.iter().map(Arc::clone).collect();
                 while grown.len() < needed_shards {
@@ -176,7 +250,7 @@ impl LiveAdjacency {
         }
         for id in 0..n as u32 {
             let (s, i) = (id as usize / SHARD_NODES, id as usize % SHARD_NODES);
-            let mut shard = table[s].write().unwrap();
+            let mut shard = table[s].write().unwrap_or_else(std::sync::PoisonError::into_inner);
             let list = adj.neighbors(id);
             let base = i * self.max_degree;
             shard.flat[base..base + list.len()].copy_from_slice(list);
@@ -185,7 +259,7 @@ impl LiveAdjacency {
         // order: shrink the published count first so a racing reader
         // never addresses a node the new table does not cover
         self.nodes.store(0, Ordering::Release);
-        *self.table.write().unwrap() = Arc::new(table);
+        *self.table.write().unwrap_or_else(std::sync::PoisonError::into_inner) = Arc::new(table);
         self.nodes.store(n, Ordering::Release);
     }
 

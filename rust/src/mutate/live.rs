@@ -224,17 +224,219 @@ impl LiveIndex {
         live
     }
 
+    // Poisoned locks are recovered (`PoisonError::into_inner`) rather
+    // than propagated: the core/writer/link-ctx critical sections keep
+    // their data structurally valid at every line, so a panicking peer
+    // leaves consistent state behind and searches should keep serving.
     pub(crate) fn core_read(&self) -> RwLockReadGuard<'_, Core> {
-        self.core.read().unwrap()
+        self.core.read().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     pub(crate) fn core_write(&self) -> RwLockWriteGuard<'_, Core> {
-        self.core.write().unwrap()
+        self.core.write().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
     /// Total node slots (live + tombstoned).
     pub fn total_slots(&self) -> usize {
         self.graph.len()
+    }
+
+    /// Test-battery hook: plant a bogus external→internal mapping so
+    /// the fsck bijection checker has an idmap corruption (unreachable
+    /// through `insert`/`delete`, which keep the two maps in lockstep
+    /// under the writer lock) to detect.
+    #[doc(hidden)]
+    pub fn corrupt_idmap_for_fsck(&self, ext_id: u32, bogus_slot: u32) {
+        self.core_write().int_of.insert(ext_id, bogus_slot);
+    }
+
+    /// Deep consistency check for the fsck layer: store/graph/idmap
+    /// row counts agree, both stores' internal invariants hold, store
+    /// dims match the projection model, the live adjacency is
+    /// structurally sound, the medoid names a real slot, the tombstone
+    /// bitmap covers every slot with its deleted counter in agreement,
+    /// the ext↔int id maps are a bijection over the live slots, and the
+    /// insert log stays within bounds. Returns a typed report instead
+    /// of panicking; `repro fsck` and the corruption battery share it.
+    pub fn check_invariants(&self) -> crate::util::invariants::FsckReport {
+        use crate::util::invariants::{FsckReport, Violation};
+        let mut report = FsckReport::default();
+        let _writer = self.writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let core = self.core_read();
+        let total = self.graph.len();
+        if core.primary.len() != total
+            || core.secondary.len() != total
+            || core.ext_of.len() != total
+        {
+            report.violations.push(Violation::new(
+                "live-index",
+                "store-len-mismatch",
+                format!(
+                    "primary {} / secondary {} / ext_of {} disagree with {total} graph slots",
+                    core.primary.len(),
+                    core.secondary.len(),
+                    core.ext_of.len()
+                ),
+            ));
+        }
+        if core.primary.dim() != self.model.target_dim() {
+            report.violations.push(Violation::new(
+                "live-index",
+                "dim-mismatch",
+                format!(
+                    "primary store dim {} != model target dim {}",
+                    core.primary.dim(),
+                    self.model.target_dim()
+                ),
+            ));
+        }
+        if core.secondary.dim() != self.model.input_dim() {
+            report.violations.push(Violation::new(
+                "live-index",
+                "dim-mismatch",
+                format!(
+                    "secondary store dim {} != model input dim {}",
+                    core.secondary.dim(),
+                    self.model.input_dim()
+                ),
+            ));
+        }
+        for (layer, store) in [
+            ("primary-store", &core.primary),
+            ("secondary-store", &core.secondary),
+        ] {
+            let mut tmp = Vec::new();
+            store.check_invariants(&mut tmp);
+            for mut v in tmp {
+                v.layer = layer;
+                report.violations.push(v);
+            }
+            report
+                .checked
+                .push(format!("{layer}: {} rows x {} dims", store.len(), store.dim()));
+        }
+        self.graph.check_invariants(&mut report.violations);
+        let medoid = self.medoid.load(Ordering::Acquire);
+        if total > 0 && medoid as usize >= total {
+            report.violations.push(Violation::new(
+                "graph",
+                "medoid-out-of-range",
+                format!("medoid {medoid} >= {total} slots"),
+            ));
+        }
+
+        // tombstone bitmap: covers every slot, no bits past the end,
+        // and the O(1) deleted counter agrees with the actual bits
+        let words = self.tombs.to_words();
+        let deleted = self.tombs.deleted();
+        if words.len() * 64 < total {
+            report.violations.push(Violation::new(
+                "live-index",
+                "tombstone-bitmap",
+                format!("bitmap covers {} ids, {total} slots exist", words.len() * 64),
+            ));
+        } else {
+            let mut popcount = 0usize;
+            let mut stray = false;
+            for (w, &word) in words.iter().enumerate() {
+                for b in 0..64 {
+                    if (word >> b) & 1 == 1 {
+                        if w * 64 + b < total {
+                            popcount += 1;
+                        } else {
+                            stray = true;
+                        }
+                    }
+                }
+            }
+            if stray {
+                report.violations.push(Violation::new(
+                    "live-index",
+                    "tombstone-bitmap",
+                    format!("bit set past the last slot ({total} slots)"),
+                ));
+            }
+            if popcount != deleted {
+                report.violations.push(Violation::new(
+                    "live-index",
+                    "tombstone-bitmap",
+                    format!("{popcount} bits set, deleted counter says {deleted}"),
+                ));
+            }
+        }
+
+        // ext↔int bijection over the live slots, both directions
+        let tomb = self.tombs.reader();
+        let live_slots = total.saturating_sub(deleted);
+        if core.int_of.len() != live_slots {
+            report.violations.push(Violation::new(
+                "live-index",
+                "idmap-not-bijective",
+                format!(
+                    "{} forward mappings for {live_slots} live slots",
+                    core.int_of.len()
+                ),
+            ));
+        }
+        let mut samples = 0;
+        for (&ext, &int) in core.int_of.iter() {
+            let bad = match core.ext_of.get(int as usize) {
+                None => Some(format!("ext {ext} -> slot {int} out of range")),
+                Some(&back) if back != ext => Some(format!(
+                    "ext {ext} -> slot {int}, but slot maps back to ext {back}"
+                )),
+                Some(_) if tomb.is_deleted(int) => {
+                    Some(format!("ext {ext} -> slot {int}, which is tombstoned"))
+                }
+                Some(_) => None,
+            };
+            if let Some(detail) = bad {
+                report.violations.push(Violation::new(
+                    "live-index",
+                    "idmap-not-bijective",
+                    detail,
+                ));
+                samples += 1;
+                if samples >= 16 {
+                    break;
+                }
+            }
+        }
+
+        // insert log: bounded by the slots consumed since the last
+        // consolidation, every logged vector full-dimensional
+        if core.insert_log.len() > total {
+            report.violations.push(Violation::new(
+                "live-index",
+                "insert-log-bounds",
+                format!(
+                    "{} logged inserts for {total} total slots",
+                    core.insert_log.len()
+                ),
+            ));
+        }
+        if let Some((ext, v)) = core
+            .insert_log
+            .iter()
+            .find(|(_, v)| v.len() != self.model.input_dim())
+        {
+            report.violations.push(Violation::new(
+                "live-index",
+                "insert-log-bounds",
+                format!(
+                    "logged insert {ext} has {} dims, model wants {}",
+                    v.len(),
+                    self.model.input_dim()
+                ),
+            ));
+        }
+        report.checked.push(format!(
+            "live graph: {total} slots ({live_slots} live, {deleted} tombstoned), \
+             max degree {}, insert log {}",
+            self.graph.max_degree(),
+            core.insert_log.len()
+        ));
+        report
     }
 
     /// Number of live (searchable) vectors.
@@ -319,7 +521,7 @@ impl LiveIndex {
         if !vector.iter().all(|v| v.is_finite()) {
             return Err(MutateError::NonFinite);
         }
-        let _writer = self.writer.lock().unwrap();
+        let _writer = self.writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         // duplicate check before the projection matmul: only mutators
         // (serialized by the writer lock we hold) touch `int_of`, so a
         // cheap read here is authoritative and rejected replays never
@@ -361,7 +563,7 @@ impl LiveIndex {
         let pq = store.prepare(proj, self.sim);
         let reader = self.graph.reader();
         let tomb = self.tombs.reader();
-        let mut ctx = self.link_ctx.lock().unwrap();
+        let mut ctx = self.link_ctx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         ctx.ensure(store.len());
         let cands = greedy_search_ext(
             &mut *ctx,
@@ -449,7 +651,7 @@ impl LiveIndex {
     /// Tombstone the vector with external id `ext_id`: O(1), honored by
     /// every search from this call on. Returns the internal slot.
     pub fn delete(&self, ext_id: u32) -> Result<u32, MutateError> {
-        let _writer = self.writer.lock().unwrap();
+        let _writer = self.writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut core = self.core_write();
         let id = match core.int_of.remove(&ext_id) {
             Some(id) => id,
@@ -468,7 +670,7 @@ impl LiveIndex {
     /// holds the exclusive guard. No-op when nothing is deleted.
     pub fn consolidate(&self) -> ConsolidateReport {
         let t0 = std::time::Instant::now();
-        let _writer = self.writer.lock().unwrap();
+        let _writer = self.writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let removed = self.tombs.deleted();
         if removed == 0 {
             // nothing to compact — but still fold any pending insert
@@ -629,6 +831,8 @@ impl LiveIndex {
         // stay valid across consolidations.
         let pred = |id: u32| {
             if tomb.is_deleted(id) {
+                // ORDERING: Relaxed — per-query stat counter read back
+                // on this same thread after the traversal returns.
                 deleted_hits.fetch_add(1, Ordering::Relaxed);
                 return false;
             }
@@ -660,6 +864,7 @@ impl LiveIndex {
                 .map(|c| core.ext_of[c.id as usize])
                 .collect();
             let scores: Vec<f32> = cands[..take_k].iter().map(|c| c.score).collect();
+            // ORDERING: Relaxed — same-thread read of the counter above.
             let deleted_skipped = deleted_hits.load(Ordering::Relaxed);
             return SearchResult {
                 ids,
@@ -675,6 +880,7 @@ impl LiveIndex {
             };
         }
         let internal: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
+        // ORDERING: Relaxed — same-thread read of the counter above.
         let deleted_skipped = deleted_hits.load(Ordering::Relaxed);
         let stats = QueryStats {
             primary_scored: ctx.stats.scored,
@@ -753,6 +959,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn pristine_live_index_matches_frozen_search_exactly() {
         let rs = rows(300, 16, 1);
         let frozen = build(&rs, 8, Similarity::L2);
@@ -772,6 +980,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn inserted_vectors_are_found() {
         let rs = rows(200, 12, 2);
         let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
@@ -795,6 +1005,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn insert_validates() {
         let rs = rows(50, 8, 3);
         let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));
@@ -816,6 +1028,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn deleted_ids_are_never_returned_but_routed_through() {
         let rs = rows(300, 12, 4);
         let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
@@ -843,6 +1057,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn user_filter_composes_with_tombstones() {
         let rs = rows(200, 12, 5);
         let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
@@ -864,6 +1080,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn consolidate_compacts_and_keeps_external_ids() {
         let rs = rows(400, 12, 6);
         let live = LiveIndex::from_index(build(&rs, 6, Similarity::L2));
@@ -908,6 +1126,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn delete_everything_then_reinsert() {
         let rs = rows(60, 8, 7);
         let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));
@@ -930,6 +1150,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn insert_after_deleting_everything_without_consolidation() {
         // the whole greedy candidate pool is tombstoned: the insert
         // must still end up reachable (medoid re-anchors to it)
@@ -949,6 +1171,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn insert_into_fully_deleted_cluster_links_through_tombstones() {
         // a dense far-away cluster is inserted then fully deleted; a new
         // vector landing there must link *through* the tombstoned
@@ -971,6 +1195,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn reinsert_after_delete_uses_fresh_slot() {
         let rs = rows(100, 8, 8);
         let live = LiveIndex::from_index(build(&rs, 4, Similarity::L2));

@@ -52,7 +52,9 @@ impl LiveIndex {
     /// any mutation history produces a [`FORMAT_VERSION_LIVE`] file
     /// with the `TOMBS`/`IDMAP`/`MUTLOG` sections appended.
     pub fn save(&self, path: &Path, meta: &SnapshotMeta) -> Result<u64, SnapshotError> {
-        let _writer = self.writer.lock().unwrap();
+        // recover a poisoned writer lock: the snapshot only needs the
+        // core read guard below for consistency (see live.rs)
+        let _writer = self.writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let core = self.core_read();
         let n = core.primary.len();
         let graph = VamanaGraph {

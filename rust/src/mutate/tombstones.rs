@@ -33,6 +33,10 @@ impl TombstoneReader {
     pub fn is_deleted(&self, id: u32) -> bool {
         let w = id as usize / 64;
         match self.words.get(w) {
+            // ORDERING: Relaxed — the bit itself is the entire payload;
+            // traversal tolerates observing a delete late (the row is
+            // filtered on a later query) and there is no other data
+            // whose visibility this load must order.
             Some(word) => (word.load(Ordering::Relaxed) >> (id % 64)) & 1 == 1,
             None => false,
         }
@@ -57,6 +61,9 @@ impl Tombstones {
         let vec = new_words(capacity.max(words.len() * 64));
         let mut deleted = 0usize;
         for (slot, &w) in vec.iter().zip(words.iter()) {
+            // ORDERING: Relaxed — single-threaded construction; the
+            // value is published to other threads by moving the whole
+            // struct afterwards.
             slot.store(w, Ordering::Relaxed);
             deleted += w.count_ones() as usize;
         }
@@ -69,7 +76,15 @@ impl Tombstones {
     /// Snapshot for one query's traversal.
     pub fn reader(&self) -> TombstoneReader {
         TombstoneReader {
-            words: Arc::clone(&self.words.read().unwrap()),
+            // a poisoned lock only means another thread panicked while
+            // holding it; the bitmap itself is atomics and stays valid,
+            // so serve traffic reads through the poison
+            words: Arc::clone(
+                &self
+                    .words
+                    .read()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner),
+            ),
         }
     }
 
@@ -77,18 +92,28 @@ impl Tombstones {
     pub fn ensure(&self, n: usize) {
         let need = n.div_ceil(64);
         {
-            let cur = self.words.read().unwrap();
+            let cur = self
+                .words
+                .read()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             if cur.len() >= need {
                 return;
             }
         }
-        let mut guard = self.words.write().unwrap();
+        let mut guard = self
+            .words
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         if guard.len() >= need {
             return;
         }
         // grow with slack so the copy amortizes across inserts
         let grown = new_words((need * 64).max(guard.len() * 2 * 64));
         for (dst, src) in grown.iter().zip(guard.iter()) {
+            // ORDERING: Relaxed — the copy runs under the exclusive
+            // write lock (mutators are also serialized by the writer
+            // lock above this layer); readers see the grown array only
+            // through the RwLock's release/acquire on the Arc swap.
             dst.store(src.load(Ordering::Relaxed), Ordering::Relaxed);
         }
         *guard = Arc::new(grown);
@@ -97,11 +122,19 @@ impl Tombstones {
     /// Tombstone `id`; returns false if it was already set. The caller
     /// must have `ensure`d capacity (every insert does).
     pub fn set(&self, id: u32) -> bool {
-        let guard = self.words.read().unwrap();
+        let guard = self
+            .words
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let w = id as usize / 64;
         let bit = 1u64 << (id % 64);
+        // ORDERING: Relaxed — the bit is the payload (see `is_deleted`);
+        // the RMW's atomicity alone guarantees exactly one caller wins
+        // a concurrent double-delete race.
         let prev = guard[w].fetch_or(bit, Ordering::Relaxed);
         if prev & bit == 0 {
+            // ORDERING: Relaxed — statistics counter; read for consolidation
+            // scheduling and reporting, never to guard data.
             self.deleted.fetch_add(1, Ordering::Relaxed);
             true
         } else {
@@ -116,13 +149,19 @@ impl Tombstones {
 
     /// Number of tombstoned ids.
     pub fn deleted(&self) -> usize {
+        // ORDERING: Relaxed — statistics counter (see `set`).
         self.deleted.load(Ordering::Relaxed)
     }
 
     /// Reset to all-alive over `capacity` ids (after consolidation).
     pub fn reset(&self, capacity: usize) {
-        let mut guard = self.words.write().unwrap();
+        let mut guard = self
+            .words
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         *guard = Arc::new(new_words(capacity));
+        // ORDERING: Relaxed — statistics counter; the fresh bitmap is
+        // published by the RwLock release above it.
         self.deleted.store(0, Ordering::Relaxed);
     }
 
@@ -130,8 +169,12 @@ impl Tombstones {
     pub fn to_words(&self) -> Vec<u64> {
         self.words
             .read()
-            .unwrap()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
             .iter()
+            // ORDERING: Relaxed — persistence runs on the writer path
+            // with mutators quiesced by the writer lock; bits only ever
+            // set monotonically, so a racing reader image is still a
+            // valid (slightly stale) snapshot.
             .map(|w| w.load(Ordering::Relaxed))
             .collect()
     }

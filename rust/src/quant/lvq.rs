@@ -289,6 +289,68 @@ impl LvqStore {
         }
         Ok(store)
     }
+
+    /// Test-battery hook: overwrite one per-vector scale so the fsck
+    /// checkers have a value-level corruption (one `read_fields` cannot
+    /// reject — it validates lengths, not signs) to detect.
+    #[doc(hidden)]
+    pub fn corrupt_delta_for_fsck(&mut self, id: usize, value: f32) {
+        self.delta.make_owned()[id] = value;
+    }
+
+    /// Shared by the one- and two-level checkers: every size relation
+    /// and derived-constant invariant of one LVQ level, reported with
+    /// `what` naming the level ("lvq" / "lvq4x8 first level").
+    fn check_level(&self, what: &str, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::{check_finite, Violation};
+        let n = self.delta.len();
+        let stride = self.stride();
+        if self.mean.len() != self.dim {
+            out.push(Violation::new(
+                "store",
+                "payload-size-mismatch",
+                format!("{what}: mean has {} dims, store dim {}", self.mean.len(), self.dim),
+            ));
+        }
+        if self.codes.len() != n * stride {
+            out.push(Violation::new(
+                "store",
+                "payload-size-mismatch",
+                format!(
+                    "{what}: {} code bytes, want {n} rows x {stride} stride",
+                    self.codes.len()
+                ),
+            ));
+        }
+        if self.lo.len() != n || self.norms_sq.len() != n {
+            out.push(Violation::new(
+                "store",
+                "payload-size-mismatch",
+                format!(
+                    "{what}: lo/norms rows {}/{} disagree with {n} deltas",
+                    self.lo.len(),
+                    self.norms_sq.len()
+                ),
+            ));
+        }
+        // delta is range / (levels - 1) with range clamped >= 1e-12 at
+        // encode time, so a non-positive scale can only mean corruption
+        if let Some((i, d)) = self
+            .delta
+            .iter()
+            .enumerate()
+            .find(|(_, d)| !d.is_finite() || **d <= 0.0)
+        {
+            out.push(Violation::new(
+                "store",
+                "scale-not-positive",
+                format!("{what}: delta[{i}] = {d}"),
+            ));
+        }
+        check_finite(out, "store", "lo", &self.lo);
+        check_finite(out, "store", "norms_sq", &self.norms_sq);
+        check_finite(out, "store", "mean", &self.mean);
+    }
 }
 
 impl ScoreStore for LvqStore {
@@ -391,6 +453,10 @@ impl ScoreStore for LvqStore {
         compact_scalars(self.delta.make_owned(), keep);
         compact_scalars(self.lo.make_owned(), keep);
         compact_scalars(self.norms_sq.make_owned(), keep);
+    }
+
+    fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        self.check_level("lvq", out);
     }
 }
 
@@ -631,6 +697,44 @@ impl ScoreStore for Lvq4x8Store {
         compact_scalars(self.res_delta.make_owned(), keep);
         compact_scalars(self.res_lo.make_owned(), keep);
         compact_scalars(self.full_norms_sq.make_owned(), keep);
+    }
+
+    fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::{check_finite, Violation};
+        self.first.check_level("lvq4x8 first level", out);
+        let (n, dim) = (self.first.len(), self.first.dim());
+        if self.res_codes.len() != n * dim
+            || self.res_delta.len() != n
+            || self.res_lo.len() != n
+            || self.full_norms_sq.len() != n
+        {
+            out.push(Violation::new(
+                "store",
+                "payload-size-mismatch",
+                format!(
+                    "lvq4x8 residual: codes/delta/lo/norms lengths \
+                     {}/{}/{}/{} disagree with {n} rows x {dim} dims",
+                    self.res_codes.len(),
+                    self.res_delta.len(),
+                    self.res_lo.len(),
+                    self.full_norms_sq.len()
+                ),
+            ));
+        }
+        if let Some((i, d)) = self
+            .res_delta
+            .iter()
+            .enumerate()
+            .find(|(_, d)| !d.is_finite() || **d <= 0.0)
+        {
+            out.push(Violation::new(
+                "store",
+                "scale-not-positive",
+                format!("lvq4x8 residual: delta[{i}] = {d}"),
+            ));
+        }
+        check_finite(out, "store", "res_lo", &self.res_lo);
+        check_finite(out, "store", "full_norms_sq", &self.full_norms_sq);
     }
 }
 

@@ -130,6 +130,17 @@ pub trait ScoreStore: Send + Sync {
     /// surviving rows' bytes are moved, never re-encoded, so scores are
     /// bit-identical across a compaction.
     fn compact(&mut self, keep: &[u32]);
+
+    /// Deep self-check for the fsck layer: verify every internal size
+    /// relation (row count × stride vs payload lengths) and the
+    /// validity of per-vector derived constants (finite norms, strictly
+    /// positive LVQ scales), pushing one [`Violation`] per broken
+    /// invariant. Must never panic on corrupt state — checkers
+    /// re-derive offsets from lengths before touching any array. The
+    /// `repro fsck` CLI and the corruption test battery both call this.
+    ///
+    /// [`Violation`]: crate::util::invariants::Violation
+    fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>);
 }
 
 /// THE blocked-scoring loop shape shared by every store's

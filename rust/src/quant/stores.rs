@@ -150,6 +150,23 @@ impl ScoreStore for F32Store {
         compact_flat(self.data.make_owned(), self.dim, keep);
         compact_scalars(self.norms_sq.make_owned(), keep);
     }
+
+    fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::{check_finite, Violation};
+        let n = self.norms_sq.len();
+        if self.data.len() != n * self.dim {
+            out.push(Violation::new(
+                "store",
+                "payload-size-mismatch",
+                format!(
+                    "f32 data has {} elements, want {n} rows x {} dims",
+                    self.data.len(),
+                    self.dim
+                ),
+            ));
+        }
+        check_finite(out, "store", "norms_sq", &self.norms_sq);
+    }
 }
 
 /// FP16 store — the paper's uncompressed baseline and the default
@@ -306,6 +323,23 @@ impl ScoreStore for F16Store {
     fn compact(&mut self, keep: &[u32]) {
         compact_flat(self.data.make_owned(), self.dim, keep);
         compact_scalars(self.norms_sq.make_owned(), keep);
+    }
+
+    fn check_invariants(&self, out: &mut Vec<crate::util::invariants::Violation>) {
+        use crate::util::invariants::{check_finite, Violation};
+        let n = self.norms_sq.len();
+        if self.data.len() != n * self.dim {
+            out.push(Violation::new(
+                "store",
+                "payload-size-mismatch",
+                format!(
+                    "f16 data has {} elements, want {n} rows x {} dims",
+                    self.data.len(),
+                    self.dim
+                ),
+            ));
+        }
+        check_finite(out, "store", "norms_sq", &self.norms_sq);
     }
 }
 

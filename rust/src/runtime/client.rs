@@ -100,6 +100,10 @@ impl PjrtRuntime {
 
 /// f32 matrix (row-major) -> 2-D literal.
 pub fn lit_from_matrix(m: &Matrix) -> Result<xla::Literal> {
+    // SAFETY: viewing an f32 slice as bytes: the pointer is valid for
+    // `len * 4` bytes (size_of::<f32>() == 4), u8 has alignment 1, and
+    // the borrow of `m` outlives `bytes`, which is consumed before
+    // return. Every f32 bit pattern is a valid byte sequence.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(m.data.as_ptr() as *const u8, m.data.len() * 4)
     };
@@ -114,6 +118,9 @@ pub fn lit_from_matrix(m: &Matrix) -> Result<xla::Literal> {
 /// f32 slice -> 1-D literal.
 pub fn lit_from_f32s(v: &[f32]) -> Result<xla::Literal> {
     let bytes: &[u8] =
+        // SAFETY: same argument as `lit_from_matrix` — an f32 slice
+        // viewed as `len * 4` bytes, alignment-1 target, borrow
+        // consumed before return.
         unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &[v.len()], bytes)
         .map_err(|e| anyhow!("f32 vec literal: {e:?}"))

@@ -112,10 +112,13 @@ impl Collection {
                 })
                 .is_ok();
             if !admitted {
+                // ORDERING: Relaxed — stat counter; admission itself is
+                // decided by the AcqRel CAS above.
                 self.admission.rejected.fetch_add(1, Ordering::Relaxed);
                 return false;
             }
         }
+        // ORDERING: Relaxed — stat counter (reporting only).
         self.admission.submitted.fetch_add(1, Ordering::Relaxed);
         true
     }
@@ -140,10 +143,13 @@ impl Collection {
                 })
                 .is_ok();
             if !admitted {
+                // ORDERING: Relaxed — stat counter; admission itself is
+                // decided by the AcqRel CAS above.
                 self.admission.rejected.fetch_add(1, Ordering::Relaxed);
                 return false;
             }
         }
+        // ORDERING: Relaxed — stat counter (reporting only).
         self.admission.mutations.fetch_add(1, Ordering::Relaxed);
         true
     }

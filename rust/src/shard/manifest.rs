@@ -282,7 +282,10 @@ impl ShardedIndex {
             return Err(SnapshotError::Truncated("shard manifest".into()));
         }
         let body = &m[..m.len() - 4];
-        let stored = u32::from_le_bytes(m[m.len() - 4..].try_into().unwrap());
+        // fixed-width copy (the >= 12 length check above covers it)
+        let mut w4 = [0u8; 4];
+        w4.copy_from_slice(&m[m.len() - 4..]);
+        let stored = u32::from_le_bytes(w4);
         if crc32(body) != stored {
             return Err(SnapshotError::ChecksumMismatch {
                 section: "shard manifest".into(),

@@ -391,6 +391,101 @@ impl ShardedIndex {
         shard_of(ext_id, self.spec.hash_seed, self.spec.shards)
     }
 
+    /// Deep consistency check for the fsck layer: the spec's shard
+    /// count matches the actual set, every shard's own invariants hold
+    /// ([`LeanVecIndex::check_invariants`] /
+    /// [`LiveIndex::check_invariants`]), every external id lives on the
+    /// shard the routing hash assigns it to (a seed or shard-count
+    /// mismatch after a partial restore shows up here), and no external
+    /// id is owned by two shards. Returns a typed report instead of
+    /// panicking; `repro fsck` and the corruption battery share it.
+    pub fn check_invariants(&self) -> crate::util::invariants::FsckReport {
+        use crate::util::invariants::{FsckReport, Violation};
+        use std::collections::HashMap;
+        let mut report = FsckReport::default();
+        let actual = match &self.set {
+            ShardSet::Frozen(shards) => shards.len(),
+            ShardSet::Live(shards) => shards.len(),
+        };
+        if actual != self.spec.shards {
+            report.violations.push(Violation::new(
+                "sharded-index",
+                "shard-count",
+                format!("spec says {} shards, set holds {actual}", self.spec.shards),
+            ));
+        }
+        // per-shard external ids: a frozen shard's identity mapping
+        // (single-shard case) owns ids 0..len implicitly and is skipped
+        // by the routing check — nothing was hash-partitioned.
+        let mut owned: Vec<(usize, Vec<u32>)> = Vec::new();
+        match &self.set {
+            ShardSet::Frozen(shards) => {
+                for (s, shard) in shards.iter().enumerate() {
+                    report.absorb(&format!("shard {s}"), shard.index.check_invariants());
+                    if !shard.identity() {
+                        if shard.ext_of.len() != shard.index.len() {
+                            report.violations.push(Violation::new(
+                                "sharded-index",
+                                "store-len-mismatch",
+                                format!(
+                                    "shard {s}: {} ext ids for {} rows",
+                                    shard.ext_of.len(),
+                                    shard.index.len()
+                                ),
+                            ));
+                        }
+                        owned.push((s, shard.ext_of.clone()));
+                    }
+                }
+            }
+            ShardSet::Live(shards) => {
+                for (s, live) in shards.iter().enumerate() {
+                    report.absorb(&format!("shard {s}"), live.check_invariants());
+                    owned.push((s, live.live_ids()));
+                }
+            }
+        }
+        let mut seen: HashMap<u32, usize> = HashMap::new();
+        let mut routing_samples = 0;
+        let mut overlap_samples = 0;
+        for (s, ids) in &owned {
+            for &ext in ids {
+                if actual > 1 || self.spec.shards > 1 {
+                    let want = shard_of(ext, self.spec.hash_seed, self.spec.shards.max(1));
+                    if want != *s && routing_samples < 16 {
+                        report.violations.push(Violation::new(
+                            "sharded-index",
+                            "routing-seed",
+                            format!(
+                                "ext id {ext} lives on shard {s} but routes to {want} \
+                                 (seed {:#x}, {} shards)",
+                                self.spec.hash_seed, self.spec.shards
+                            ),
+                        ));
+                        routing_samples += 1;
+                    }
+                }
+                if let Some(prev) = seen.insert(ext, *s) {
+                    if overlap_samples < 16 {
+                        report.violations.push(Violation::new(
+                            "sharded-index",
+                            "ext-id-overlap",
+                            format!("ext id {ext} owned by both shard {prev} and shard {s}"),
+                        ));
+                        overlap_samples += 1;
+                    }
+                }
+            }
+        }
+        report.checked.push(format!(
+            "sharded index: {actual} {} shard(s), seed {:#x}, {} external ids",
+            if self.is_live() { "live" } else { "frozen" },
+            self.spec.hash_seed,
+            seen.len()
+        ));
+        report
+    }
+
     /// Total slots across shards (live + tombstoned for live shards).
     pub fn total_slots(&self) -> usize {
         match &self.set {
@@ -552,7 +647,13 @@ impl ShardedIndex {
                 results.push(self.search_shard(0, &mut ctx, q_proj, query));
             }
             for h in handles {
-                results.push(h.join().expect("shard search thread panicked"));
+                match h.join() {
+                    Ok(r) => results.push(r),
+                    // re-raise the shard's own panic payload on the
+                    // caller thread instead of a generic expect: the
+                    // root cause stays in the backtrace
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
             }
             results
         });
@@ -594,6 +695,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn routing_is_deterministic_and_spread() {
         let n = 10_000u32;
         let shards = 4;
@@ -620,6 +723,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn single_shard_routes_everything_to_zero() {
         for id in [0u32, 1, 99, u32::MAX] {
             assert_eq!(shard_of(id, DEFAULT_HASH_SEED, 1), 0);
@@ -627,6 +732,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn partition_covers_every_id_once() {
         let spec = ShardSpec {
             shards: 3,
@@ -657,6 +764,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn merge_orders_by_score_and_sums_stats() {
         let a = result(vec![1, 2], vec![0.9, 0.5], 10);
         let b = result(vec![3, 4], vec![0.7, 0.6], 20);
@@ -668,6 +777,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn merge_single_shard_is_identity() {
         let a = result(vec![5, 6, 7], vec![0.3, 0.2, 0.1], 4);
         let m = merge_top_k(vec![a.clone()], 3);
@@ -677,6 +788,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn merge_ties_keep_shard_order() {
         let a = result(vec![1], vec![0.5], 1);
         let b = result(vec![2], vec![0.5], 1);
@@ -699,6 +812,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn sharded_build_shares_one_model() {
         let x = rows(400, 16, 3);
         let ix = ShardedIndex::build(
@@ -720,6 +835,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn sharded_search_returns_external_ids() {
         let x = rows(500, 16, 4);
         let ix = ShardedIndex::build(
@@ -744,6 +861,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn scatter_matches_sequential_scatter() {
         let x = rows(600, 16, 5);
         let ix = ShardedIndex::build(
@@ -767,6 +886,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn sharded_filter_sees_external_ids() {
         let x = rows(400, 16, 6);
         let ix = ShardedIndex::build(
@@ -789,6 +910,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn live_sharded_mutations_route_by_hash() {
         let x = rows(300, 16, 7);
         let ix = ShardedIndex::build_live(
@@ -819,6 +942,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn frozen_set_rejects_mutations() {
         let x = rows(200, 16, 8);
         let ix = ShardedIndex::build(
@@ -835,6 +960,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn consolidate_one_staggers_across_shards() {
         let x = rows(400, 16, 9);
         let ix = ShardedIndex::build_live(

@@ -143,6 +143,9 @@ pub fn dot_u4_u8(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
 /// (prefetch is a hint; it never faults).
 #[inline(always)]
 pub fn prefetch<T>(data: &[T]) {
+    // SAFETY: `_mm_prefetch` is a pure cache hint in x86-64's baseline
+    // (SSE) set: it never faults, even on a dangling empty-slice base
+    // pointer, and reads or writes no memory architecturally.
     #[cfg(target_arch = "x86_64")]
     unsafe {
         use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
@@ -160,6 +163,10 @@ pub fn prefetch<T>(data: &[T]) {
 /// page-cache line fills with the current hop's compute.
 #[inline]
 pub fn prefetch_row<T>(data: &[T]) {
+    // SAFETY: prefetch is a non-faulting hint (see `prefetch`); the
+    // `ptr.add(off)` addresses stay within `size_of_val(data)` bytes of
+    // the slice base by the loop bound, and even a stale address could
+    // at worst warm the wrong line.
     #[cfg(target_arch = "x86_64")]
     unsafe {
         use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
@@ -184,6 +191,8 @@ mod tests {
     use super::*;
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn dispatch_is_stable_and_named() {
         let a = active_features();
         let b = active_features();
@@ -192,6 +201,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn prefetch_accepts_any_slice() {
         let v = vec![1u8, 2, 3];
         prefetch(&v);
@@ -202,6 +213,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn prefetch_row_spans_lines_and_accepts_empty() {
         let big = vec![0u8; 1000]; // 16 cache lines
         prefetch_row(&big);

@@ -18,8 +18,13 @@ use core::arch::x86_64::*;
 
 /// Horizontal sum of one AVX register (SSE2-only shuffle sequence).
 #[inline]
+// SAFETY: `#[target_feature(enable = "avx2")]` makes this fn unsafe to
+// call; the only callers are the kernels below, themselves gated on the
+// same feature set by the dispatcher's runtime detection.
 #[target_feature(enable = "avx2")]
 unsafe fn hsum256(v: __m256) -> f32 {
+    // SAFETY: register-only shuffles/adds — no memory access; AVX2 is
+    // guaranteed by this fn's own `#[target_feature]` contract.
     unsafe {
         let lo = _mm256_castps256_ps128(v);
         let hi = _mm256_extractf128_ps::<1>(v);
@@ -30,11 +35,18 @@ unsafe fn hsum256(v: __m256) -> f32 {
     }
 }
 
+// SAFETY: unsafe-to-call by `#[target_feature]` contract only; callers
+// (the wrappers below) run strictly behind avx2+fma runtime detection.
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    // SAFETY: every `loadu` reads 8 f32s at `p.add(i)` with
+    // `i + 8 <= n` enforced by the loop bounds, so all reads stay
+    // inside the borrowed slices (valid for `n` elements for the whole
+    // call); `loadu` tolerates any alignment; the scalar tail uses
+    // checked slice indexing.
     unsafe {
         let mut acc0 = _mm256_setzero_ps();
         let mut acc1 = _mm256_setzero_ps();
@@ -61,11 +73,20 @@ unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
     }
 }
 
+// SAFETY: unsafe-to-call by `#[target_feature]` contract only; the
+// dispatcher installs `dot_f16` solely when avx2+fma+f16c were all
+// detected at startup.
 #[target_feature(enable = "avx2", enable = "fma", enable = "f16c")]
 unsafe fn dot_f16_f16c(codes: &[u16], q: &[f32]) -> f32 {
     debug_assert_eq!(codes.len(), q.len());
     let n = codes.len();
     let (pc, pq) = (codes.as_ptr(), q.as_ptr());
+    // SAFETY: each 128-bit load reads 8 u16 half floats at
+    // `pc.add(i)` and each 256-bit load reads 8 f32s at `pq.add(i)`,
+    // with `i + 8 <= n` (resp. `i + 16 <= n` for the unrolled pair)
+    // enforced by the loop bounds — all reads stay inside the borrowed
+    // slices; `loadu` variants have no alignment requirement; the tail
+    // decodes with checked indexing.
     unsafe {
         let mut acc0 = _mm256_setzero_ps();
         let mut acc1 = _mm256_setzero_ps();
@@ -91,11 +112,18 @@ unsafe fn dot_f16_f16c(codes: &[u16], q: &[f32]) -> f32 {
     }
 }
 
+// SAFETY: unsafe-to-call by `#[target_feature]` contract only; callers
+// run strictly behind avx2+fma runtime detection.
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn dot_u8_avx2(codes: &[u8], q: &[f32]) -> f32 {
     debug_assert_eq!(codes.len(), q.len());
     let n = q.len();
     let (pc, pq) = (codes.as_ptr(), q.as_ptr());
+    // SAFETY: the 16-wide body loads 16 code bytes + 16 f32s at offset
+    // `i` with `i + 16 <= n`; the 8-wide body loads 8 bytes (64-bit
+    // `loadl`) + 8 f32s with `i + 8 <= n`. `codes.len() == q.len() == n`
+    // (debug-asserted, guaranteed by every store's row layout), so all
+    // reads stay inside the borrowed slices; unaligned loads throughout.
     unsafe {
         let mut acc0 = _mm256_setzero_ps();
         let mut acc1 = _mm256_setzero_ps();
@@ -124,6 +152,8 @@ unsafe fn dot_u8_avx2(codes: &[u8], q: &[f32]) -> f32 {
     }
 }
 
+// SAFETY: unsafe-to-call by `#[target_feature]` contract only; callers
+// run strictly behind avx2+fma runtime detection.
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn dot_u4_avx2(codes: &[u8], q: &[f32]) -> f32 {
     // two components per byte, low nibble first: byte j holds
@@ -131,6 +161,11 @@ unsafe fn dot_u4_avx2(codes: &[u8], q: &[f32]) -> f32 {
     let n = q.len();
     debug_assert_eq!(codes.len(), n.div_ceil(2));
     let (pc, pq) = (codes.as_ptr(), q.as_ptr());
+    // SAFETY: the body consumes 16 components per iteration: an 8-byte
+    // `loadl` at `pc.add(i / 2)` (bytes i/2 .. i/2 + 8, in bounds since
+    // `i + 16 <= n` implies `i/2 + 8 <= ceil(n/2) == codes.len()`) and
+    // two 8-f32 `loadu`s at `pq.add(i)` / `pq.add(i + 8)`, in bounds by
+    // the same loop guard. The nibble tail uses checked indexing.
     unsafe {
         let mut acc0 = _mm256_setzero_ps();
         let mut acc1 = _mm256_setzero_ps();
@@ -160,33 +195,49 @@ unsafe fn dot_u4_avx2(codes: &[u8], q: &[f32]) -> f32 {
     }
 }
 
+// SAFETY: unsafe-to-call by `#[target_feature]` contract only; callers
+// run strictly behind avx2+fma runtime detection.
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn dot_u4_u8_avx2(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
+    // SAFETY: both callees carry the same `#[target_feature]` set as
+    // this fn, so the features are already guaranteed here; their slice
+    // preconditions are forwarded unchanged.
     unsafe { (dot_u4_avx2(codes4, q), dot_u8_avx2(codes8, q)) }
 }
 
 // ---- dispatcher-facing wrappers -----------------------------------------
 //
-// SAFETY (all five): only ever installed into the kernel table by
-// `simd::select_kernels` after `is_x86_feature_detected!` confirmed
-// avx2+fma (and f16c for `dot_f16`) on this host. Never call directly.
+// All five wrappers exist to concentrate the feature-detection safety
+// argument in one place: they are installed into the kernel table by
+// `simd::select_kernels` only after `is_x86_feature_detected!`
+// confirmed the required features on this host. Never call directly.
 
 pub(super) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: installed by the dispatcher only after avx2+fma were
+    // detected at startup (see module header); never called directly.
     unsafe { dot_f32_avx2(a, b) }
 }
 
 pub(super) fn dot_f16(codes: &[u16], q: &[f32]) -> f32 {
+    // SAFETY: installed by the dispatcher only after avx2+fma+f16c
+    // were detected at startup; never called directly.
     unsafe { dot_f16_f16c(codes, q) }
 }
 
 pub(super) fn dot_u8(codes: &[u8], q: &[f32]) -> f32 {
+    // SAFETY: installed by the dispatcher only after avx2+fma were
+    // detected at startup; never called directly.
     unsafe { dot_u8_avx2(codes, q) }
 }
 
 pub(super) fn dot_u4(codes: &[u8], q: &[f32]) -> f32 {
+    // SAFETY: installed by the dispatcher only after avx2+fma were
+    // detected at startup; never called directly.
     unsafe { dot_u4_avx2(codes, q) }
 }
 
 pub(super) fn dot_u4_u8(codes4: &[u8], codes8: &[u8], q: &[f32]) -> (f32, f32) {
+    // SAFETY: installed by the dispatcher only after avx2+fma were
+    // detected at startup; never called directly.
     unsafe { dot_u4_u8_avx2(codes4, codes8, q) }
 }

@@ -1,0 +1,172 @@
+//! Typed consistency violations for the deep fsck layer.
+//!
+//! Every structural checker in the crate — the Vamana/CSR graph, the
+//! five [`crate::quant::ScoreStore`] kinds, [`crate::index::LeanVecIndex`],
+//! [`crate::mutate::LiveIndex`], and [`crate::shard::ShardedIndex`] —
+//! reports breakage by pushing [`Violation`]s into a shared vector
+//! instead of panicking or printing. One checker, three consumers: the
+//! `repro fsck` CLI, the `rust/tests/fsck.rs` corruption battery, and
+//! the snapshot-corruption tests all call the same `check_invariants`
+//! entry points, so what the CLI can detect is exactly what the tests
+//! prove is detectable.
+//!
+//! Checkers must never panic on corrupt input: a checker that indexes
+//! past a bound it was about to report would turn diagnosis into a
+//! crash. They therefore re-derive every offset from first principles
+//! (lengths, strides) before dereferencing anything.
+
+use std::fmt;
+
+/// One detected breakage: which layer found it, a stable machine-
+/// checkable code, and a human-readable locator.
+///
+/// Codes are part of the tool's contract (tests assert on them):
+/// `neighbor-out-of-range`, `self-loop`, `degree-overflow`,
+/// `medoid-out-of-range`, `csr-offsets`, `payload-size-mismatch`,
+/// `scale-not-positive`, `constant-not-finite`, `store-len-mismatch`,
+/// `dim-mismatch`, `idmap-not-bijective`, `tombstone-bitmap`,
+/// `insert-log-bounds`, `routing-seed`, `ext-id-overlap`,
+/// `shard-count`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// which structure was being checked ("graph", "primary-store", ...)
+    pub layer: &'static str,
+    /// stable kebab-case code naming the broken invariant
+    pub code: &'static str,
+    /// where / how it is broken, with the offending values
+    pub detail: String,
+}
+
+impl Violation {
+    pub fn new(layer: &'static str, code: &'static str, detail: impl Into<String>) -> Violation {
+        Violation {
+            layer,
+            code,
+            detail: detail.into(),
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.layer, self.code, self.detail)
+    }
+}
+
+/// The result of one deep check: every violation found plus a short
+/// summary of what was covered (so a clean report still shows the
+/// check did real work).
+#[derive(Debug, Default)]
+pub struct FsckReport {
+    pub violations: Vec<Violation>,
+    /// one line per structure covered, e.g. "graph: 1000 nodes"
+    pub checked: Vec<String>,
+}
+
+impl FsckReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Does the report contain a violation with this code (any layer)?
+    pub fn has_code(&self, code: &str) -> bool {
+        self.violations.iter().any(|v| v.code == code)
+    }
+
+    /// Merge `other` into `self`, re-tagging each of its violations
+    /// and coverage lines with a sub-structure prefix (e.g. the shard
+    /// ordinal) so multi-part reports stay attributable.
+    pub fn absorb(&mut self, prefix: &str, other: FsckReport) {
+        for mut v in other.violations {
+            v.detail = format!("{prefix}: {}", v.detail);
+            self.violations.push(v);
+        }
+        for line in other.checked {
+            self.checked.push(format!("{prefix}: {line}"));
+        }
+    }
+}
+
+impl fmt::Display for FsckReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for line in &self.checked {
+            writeln!(f, "checked {line}")?;
+        }
+        if self.violations.is_empty() {
+            write!(f, "fsck: clean")
+        } else {
+            for v in &self.violations {
+                writeln!(f, "{v}")?;
+            }
+            write!(f, "fsck: {} violation(s)", self.violations.len())
+        }
+    }
+}
+
+/// Shared guard for the per-vector f32 constant arrays (norms, offsets):
+/// pushes at most one `constant-not-finite` for the whole array, naming
+/// the first offending row — corrupt stores can have millions.
+pub fn check_finite(
+    out: &mut Vec<Violation>,
+    layer: &'static str,
+    what: &str,
+    values: &[f32],
+) {
+    if let Some((i, v)) = values
+        .iter()
+        .enumerate()
+        .find(|(_, v)| !v.is_finite())
+    {
+        out.push(Violation::new(
+            layer,
+            "constant-not-finite",
+            format!("{what}[{i}] = {v}"),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_display_and_codes() {
+        let mut r = FsckReport::default();
+        r.checked.push("graph: 10 nodes".into());
+        assert!(r.is_clean());
+        assert!(format!("{r}").contains("clean"));
+        r.violations
+            .push(Violation::new("graph", "self-loop", "node 3"));
+        assert!(!r.is_clean());
+        assert!(r.has_code("self-loop"));
+        assert!(!r.has_code("degree-overflow"));
+        let shown = format!("{r}");
+        assert!(shown.contains("[graph] self-loop: node 3"));
+        assert!(shown.contains("1 violation"));
+    }
+
+    #[test]
+    fn absorb_prefixes_details() {
+        let mut outer = FsckReport::default();
+        let mut inner = FsckReport::default();
+        inner
+            .violations
+            .push(Violation::new("store", "scale-not-positive", "delta[0]"));
+        inner.checked.push("store: 5 rows".into());
+        outer.absorb("shard 2", inner);
+        assert_eq!(outer.violations.len(), 1);
+        assert!(outer.violations[0].detail.starts_with("shard 2: "));
+        assert!(outer.checked[0].starts_with("shard 2: "));
+    }
+
+    #[test]
+    fn check_finite_reports_first_bad_row_only() {
+        let mut out = Vec::new();
+        check_finite(&mut out, "store", "norms", &[1.0, f32::NAN, f32::INFINITY]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].detail.contains("norms[1]"));
+        out.clear();
+        check_finite(&mut out, "store", "norms", &[0.0, -3.5]);
+        assert!(out.is_empty());
+    }
+}

@@ -89,9 +89,12 @@ pub struct Mmap {
     len: usize,
 }
 
-// Safety: the mapping is PROT_READ/MAP_PRIVATE and never mutated or
-// remapped after construction, so concurrent shared reads are fine.
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE and never mutated or
+// remapped after construction, so concurrent shared reads from any
+// thread are fine; the raw pointer is only freed in Drop, which takes
+// `&mut self` and therefore exclusive access.
 unsafe impl Send for Mmap {}
+// SAFETY: see the Send argument above — read-only shared state.
 unsafe impl Sync for Mmap {}
 
 impl Mmap {
@@ -109,6 +112,12 @@ impl Mmap {
                     len: 0,
                 });
             }
+            // SAFETY: plain FFI syscall with no pointer preconditions:
+            // addr is null (kernel chooses placement), `len > 0` was
+            // just checked (zero-length mappings are EINVAL), and `fd`
+            // is a live descriptor borrowed from `file`, which outlives
+            // the call. The result is validated against MAP_FAILED
+            // before use.
             let ptr = unsafe {
                 sys::mmap(
                     std::ptr::null_mut(),
@@ -143,6 +152,11 @@ impl Mmap {
             if self.len == 0 {
                 return &[];
             }
+            // SAFETY: `ptr` came from a successful PROT_READ mmap of
+            // exactly `len` bytes, is non-null (len > 0 checked above),
+            // stays valid until Drop unmaps it, and the pages are never
+            // written — so a shared `&[u8]` view for `&self`'s lifetime
+            // is sound.
             return unsafe { std::slice::from_raw_parts(self.ptr, self.len) };
         }
         #[cfg(not(unix))]
@@ -167,6 +181,11 @@ impl Mmap {
         #[cfg(unix)]
         {
             if self.len > 0 {
+                // SAFETY: `(ptr, len)` is exactly the live mapping
+                // created in `open`; madvise only attaches a hint to
+                // those pages and cannot invalidate the mapping. The
+                // return value is deliberately ignored (advice is
+                // best-effort).
                 unsafe {
                     sys::madvise(self.ptr as *mut _, self.len, advice.code());
                 }
@@ -184,6 +203,11 @@ impl Drop for Mmap {
         #[cfg(unix)]
         {
             if self.len > 0 {
+                // SAFETY: `(ptr, len)` is the exact region returned by
+                // mmap in `open` and this Drop is the only unmap; no
+                // `&[u8]` view can outlive it because every view
+                // borrows `&self` (direct slices) or holds the owning
+                // `Arc<Mmap>` (Arr::Mapped), keeping the value alive.
                 unsafe {
                     sys::munmap(self.ptr as *mut _, self.len);
                 }
@@ -266,9 +290,14 @@ impl<T: Copy> Deref for Arr<T> {
     fn deref(&self) -> &[T] {
         match self {
             Arr::Owned(v) => v,
+            // SAFETY: `from_map` is the only constructor of this
+            // variant and validated at creation that `off + len *
+            // size_of::<T>()` lies inside the mapping, that the base
+            // address is aligned for `T`, and that the host is little-
+            // endian (matching the wire format). The window stays valid
+            // because this variant holds the `Arc<Mmap>` that owns the
+            // pages, and the mapping is immutable for its whole life.
             Arr::Mapped { map, off, len } => unsafe {
-                // Safety: `from_map` validated bounds and alignment,
-                // and the mapping is immutable for its whole lifetime.
                 std::slice::from_raw_parts(
                     map.as_slice().as_ptr().add(*off) as *const T,
                     *len,
@@ -328,6 +357,9 @@ pub struct SectionSrc {
 
 impl SectionSrc {
     pub fn note_fallback(&self) {
+        // ORDERING: Relaxed — a monotonically increasing diagnostic
+        // counter read once after loading finishes; it guards no data
+        // and needs no happens-before edge.
         self.fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -384,6 +416,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn map_reads_file_bytes() {
         let p = tmp("a.bin");
         let data: Vec<u8> = (0..=255).collect();
@@ -400,6 +434,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn empty_file_maps_empty() {
         let p = tmp("b.bin");
         std::fs::write(&p, b"").unwrap();
@@ -411,11 +447,15 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn missing_file_errors() {
         assert!(Mmap::open(&tmp("definitely-missing.bin")).is_err());
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn arr_borrows_aligned_and_falls_back_misaligned() {
         let p = tmp("c.bin");
         let vals = [1.0f32, -2.5, 3.25, 0.0];
@@ -449,6 +489,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn cursor_arr_helpers_borrow_or_decode() {
         let p = tmp("d.bin");
         // payload: 8 pad bytes, then a length-prefixed f32 slice whose
@@ -486,6 +528,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn misaligned_cursor_read_counts_fallback() {
         let p = tmp("e.bin");
         // 1 pad byte: f32 data starts at 1 + 8 = 9, misaligned

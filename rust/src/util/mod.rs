@@ -7,6 +7,7 @@
 
 pub mod cli;
 pub mod f16;
+pub mod invariants;
 pub mod json;
 pub mod mmap;
 pub mod prop;

@@ -108,6 +108,8 @@ mod tests {
     use super::*;
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn passing_property_runs_all_cases() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         let count = AtomicUsize::new(0);
@@ -120,6 +122,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     #[should_panic(expected = "property 'always-false' failed")]
     fn failing_property_panics_with_seed() {
         check("always-false", Config::default(), |_| {
@@ -128,6 +132,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn generators_respect_bounds() {
         check("bounds", Config::default(), |g| {
             let n = g.usize_in(3, 9);
@@ -147,6 +153,8 @@ mod tests {
     }
 
     #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
     fn size_ramps_up() {
         let seen = std::sync::Mutex::new(Vec::new());
         check("sizes", Config { cases: 16, ..Config::default() }, |g| {

@@ -92,6 +92,9 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, threads: usize, chunk: usize,
     thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // ORDERING: Relaxed — the RMW's atomicity alone makes
+                // chunk claims disjoint; workers share no other state
+                // through the cursor, and scope join publishes results.
                 let start = cursor.fetch_add(chunk, Ordering::Relaxed);
                 if start >= n {
                     break;

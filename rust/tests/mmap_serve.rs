@@ -108,6 +108,12 @@ fn all_store_kinds_serve_identically_owned_vs_mapped() {
             let (owned, _) = LeanVecIndex::load(&path).unwrap();
             let (mapped, _) = LeanVecIndex::load_mmap(&path).unwrap();
             assert!(mapped.is_mapped(), "{primary:?}/{sim:?} not mapped");
+            // the deep-fsck checkers must pass over every store kind,
+            // owned and mapped alike — same code path as `repro fsck`
+            let fo = owned.check_invariants();
+            assert!(fo.is_clean(), "{primary:?}/{sim:?} owned fsck:\n{fo}");
+            let fm = mapped.check_invariants();
+            assert!(fm.is_clean(), "{primary:?}/{sim:?} mapped fsck:\n{fm}");
             assert_serving_identical(&built, &owned, seed + 1000);
             assert_serving_identical(&owned, &mapped, seed + 1000);
             std::fs::remove_file(&path).ok();
@@ -167,6 +173,11 @@ fn shard_dir_mmap_round_trip_serves_identically() {
     let (mapped, _) =
         ShardedIndex::load_dir_with(&dir, Some(MmapPolicy::default())).expect("mmap load");
     assert_eq!(VectorIndex::len(&mapped), VectorIndex::len(&ix));
+    // a round-tripped shard directory must fsck clean in both modes
+    let fo = owned.check_invariants();
+    assert!(fo.is_clean(), "owned shard dir fsck:\n{fo}");
+    let fm = mapped.check_invariants();
+    assert!(fm.is_clean(), "mapped shard dir fsck:\n{fm}");
     for v in &queries {
         let q = Query::new(v).k(10).window(40);
         let a = owned.search_scatter(&owned.model().project_query(v), &q);
