@@ -358,6 +358,7 @@ fn bench_search_baseline(
     k: usize,
     sharded: Json,
     mmap: Json,
+    engine: Json,
 ) {
     use leanvec::graph::beam::SearchCtx;
     use leanvec::index::flat::FlatIndex;
@@ -433,11 +434,81 @@ fn bench_search_baseline(
         ("flat_scan_qps", Json::num(flat_qps)),
         ("sharded", sharded),
         ("mmap", mmap),
+        ("engine", engine),
     ]);
     match std::fs::write("BENCH_search.json", out.to_pretty()) {
         Ok(()) => println!("[saved BENCH_search.json]"),
         Err(e) => eprintln!("could not write BENCH_search.json: {e}"),
     }
+}
+
+/// Serving-engine closed loop, run twice: once with the telemetry
+/// registry disabled (`LEANVEC_NO_TELEMETRY`-equivalent) and once with
+/// it enabled. The gap between the two is the whole-path cost of the
+/// observability layer — stage timers, histograms, flight recorder —
+/// and is the number the acceptance gate bounds (<= 3% QPS).
+/// Per-stage and e2e tail latencies come from the enabled arm.
+fn bench_engine(ds: &leanvec::data::synth::Dataset, gp: GraphParams, k: usize) -> Json {
+    println!("\n== serving engine + telemetry A/B ==");
+    let index = Arc::new(
+        IndexBuilder::new()
+            .projection(ProjectionKind::OodEigSearch)
+            .target_dim(160)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity),
+    );
+    let queries: Vec<Vec<f32>> = (0..2_000)
+        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
+        .collect();
+    let cfg = EngineConfig {
+        workers: 1,
+        batch: BatchPolicy::default(),
+        search: SearchParams {
+            window: 60,
+            rerank_window: 60,
+        },
+        ..Default::default()
+    };
+
+    // telemetry-off arm first so the warm-up run is the one we don't
+    // report latencies from
+    leanvec::obs::set_enabled(false);
+    let (_r, report_off) =
+        Engine::run_workload(Arc::clone(&index), cfg.clone(), &queries, k, None);
+    let qps_off = report_off.metrics.qps;
+
+    leanvec::obs::set_enabled(true);
+    let (_r, report) = Engine::run_workload(index, cfg, &queries, k, None);
+    let m = &report.metrics;
+
+    let overhead_pct = if qps_off > 0.0 {
+        (1.0 - m.qps / qps_off) * 100.0
+    } else {
+        0.0
+    };
+    println!("serving engine (telemetry on): {}", m);
+    println!(
+        "telemetry overhead: {qps_off:.0} QPS off vs {:.0} QPS on ({overhead_pct:+.1}%)",
+        m.qps
+    );
+
+    Json::obj(vec![
+        ("queries", Json::num(queries.len() as f64)),
+        ("qps", Json::num(m.qps)),
+        ("qps_telemetry_off", Json::num(qps_off)),
+        ("telemetry_overhead_pct", Json::num(overhead_pct)),
+        ("e2e_p50_ms", Json::num(m.latency_p50_ms)),
+        ("e2e_p99_ms", Json::num(m.latency_p99_ms)),
+        ("e2e_p999_ms", Json::num(m.latency_p999_ms)),
+        ("queue_p50_ms", Json::num(m.stages.queue.p50)),
+        ("queue_p99_ms", Json::num(m.stages.queue.p99)),
+        ("project_p50_ms", Json::num(m.stages.project.p50)),
+        ("project_p99_ms", Json::num(m.stages.project.p99)),
+        ("search_p50_ms", Json::num(m.stages.search.p50)),
+        ("search_p99_ms", Json::num(m.stages.search.p99)),
+        ("merge_p50_ms", Json::num(m.stages.merge.p50)),
+        ("merge_p99_ms", Json::num(m.stages.merge.p99)),
+    ])
 }
 
 /// Churn phase: streaming mutation throughput on a live index, search
@@ -603,28 +674,9 @@ fn main() {
         }
     }
 
-    // serving engine throughput (closed loop)
-    let index = Arc::new(
-        IndexBuilder::new()
-            .projection(ProjectionKind::OodEigSearch)
-            .target_dim(160)
-            .graph_params(gp)
-            .build(&ds.database, Some(&ds.learn_queries), ds.similarity),
-    );
-    let queries: Vec<Vec<f32>> = (0..2_000)
-        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
-        .collect();
-    let cfg = EngineConfig {
-        workers: 1,
-        batch: BatchPolicy::default(),
-        search: SearchParams {
-            window: 60,
-            rerank_window: 60,
-        },
-        ..Default::default()
-    };
-    let (_r, report) = Engine::run_workload(index, cfg, &queries, k, None);
-    println!("\nserving engine: {}", report.metrics);
+    // serving engine closed loop + telemetry overhead A/B (embedded
+    // into BENCH_search.json)
+    let engine_arm = bench_engine(&ds, gp, k);
 
     // sharded scatter-gather arm (embedded into BENCH_search.json)
     let sharded = bench_sharded(&ds, gp, &truth, k);
@@ -633,7 +685,7 @@ fn main() {
     let mmap = bench_mmap(&ds, gp, &truth, k);
 
     // fixed-window search QPS + recall anchor -> BENCH_search.json
-    bench_search_baseline(&ds, gp, &truth, k, sharded, mmap);
+    bench_search_baseline(&ds, gp, &truth, k, sharded, mmap, engine_arm);
 
     // parallel build speedup trajectory -> BENCH_build.json
     bench_build_trajectory(&ds, gp, &truth, k);
@@ -727,6 +779,15 @@ fn roll_history() {
         (
             "mmap_vm_hwm_kib",
             Json::num(pick(&search, &["mmap", "vm_hwm_kib"])),
+        ),
+        ("engine_qps", Json::num(pick(&search, &["engine", "qps"]))),
+        (
+            "telemetry_overhead_pct",
+            Json::num(pick(&search, &["engine", "telemetry_overhead_pct"])),
+        ),
+        (
+            "engine_e2e_p99_ms",
+            Json::num(pick(&search, &["engine", "e2e_p99_ms"])),
         ),
         ("build_best_total_seconds", Json::num(best_build)),
         (

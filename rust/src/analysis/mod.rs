@@ -17,11 +17,14 @@
 //! * no `std::time::Instant` inside the SIMD kernels (timing belongs
 //!   in the harness, not per-call in a scoring loop) and no `println!`
 //!   outside `main.rs` / `bin/` (library output goes through returned
-//!   values; stray stdout corrupts machine-readable CLI output).
+//!   values; stray stdout corrupts machine-readable CLI output);
+//! * metric names registered in `obs/` follow
+//!   `leanvec_<subsystem>_<name>_<unit>` ([`metric_name_ok`]), so the
+//!   exposition stays greppable and Prometheus-conventional.
 //!
 //! The scanner is token-ish, not a full lexer: it strips comments,
 //! string/char literals, and tracks `#[cfg(test)]` regions by brace
-//! depth, which is exactly enough to make the five rules above
+//! depth, which is exactly enough to make the rules above
 //! reliable on this codebase. Suppression is explicit and auditable:
 //! a repo-level allowlist file (rule + path per line) for whole-file
 //! waivers, and inline `lint:allow(rule-name)` markers in a comment on
@@ -48,15 +51,19 @@ pub enum Rule {
     InstantInKernel,
     /// `println!` outside `main.rs` / `bin/`.
     PrintlnOutsideCli,
+    /// Metric registered in `obs/` whose name breaks the
+    /// `leanvec_<subsystem>_<name>_<unit>` convention.
+    ObsMetricName,
 }
 
-pub const ALL_RULES: [Rule; 6] = [
+pub const ALL_RULES: [Rule; 7] = [
     Rule::UnsafeNeedsSafety,
     Rule::ServePathPanic,
     Rule::ServePathPartialCmp,
     Rule::RelaxedNeedsOrdering,
     Rule::InstantInKernel,
     Rule::PrintlnOutsideCli,
+    Rule::ObsMetricName,
 ];
 
 impl Rule {
@@ -68,6 +75,7 @@ impl Rule {
             Rule::RelaxedNeedsOrdering => "relaxed-ordering-comment",
             Rule::InstantInKernel => "instant-in-kernel",
             Rule::PrintlnOutsideCli => "println-outside-cli",
+            Rule::ObsMetricName => "obs-metric-name",
         }
     }
 
@@ -123,6 +131,47 @@ fn is_kernel_path(rel: &str) -> bool {
 /// not print to it.
 fn println_allowed(rel: &str) -> bool {
     rel == "main.rs" || rel.starts_with("bin/")
+}
+
+/// The metric-name convention the exposition layer promises:
+/// `leanvec_<subsystem>_<name…>_<unit>` — all-lowercase alnum segments,
+/// at least three of them, ending in a recognized unit. Shared by the
+/// `obs-metric-name` lint rule and the obs catalog's own tests.
+pub fn metric_name_ok(name: &str) -> bool {
+    const UNITS: [&str; 6] = ["total", "seconds", "bytes", "ratio", "count", "info"];
+    let segs: Vec<&str> = name.split('_').collect();
+    segs.len() >= 3
+        && segs[0] == "leanvec"
+        && segs
+            .iter()
+            .all(|s| !s.is_empty() && s.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()))
+        && segs.last().is_some_and(|u| UNITS.contains(u))
+}
+
+/// Registration call sites the `obs-metric-name` rule inspects (leading
+/// dot: method calls only, never the `Registry` definitions themselves).
+const REGISTER_TOKENS: [&str; 6] = [
+    ".register_counter(",
+    ".register_gauge(",
+    ".register_histogram(",
+    ".register_counter_family(",
+    ".register_gauge_family(",
+    ".register_histogram_family(",
+];
+
+/// First plain `"…"` literal in a window of RAW source lines (the
+/// lexer blanks string contents, so the rule reads the original text;
+/// rustfmt often puts the name argument on the line after the call).
+fn first_string_literal(raw_lines: &[&str]) -> Option<String> {
+    for l in raw_lines {
+        if let Some(start) = l.find('"') {
+            let rest = &l[start + 1..];
+            if let Some(end) = rest.find('"') {
+                return Some(rest[..end].to_string());
+            }
+        }
+    }
+    None
 }
 
 /// One source line after lexical stripping: `code` has comments and
@@ -422,6 +471,8 @@ pub fn scan_file(rel: &str, source: &str) -> Vec<Diagnostic> {
     let serve = is_serve_path(rel);
     let kernel = is_kernel_path(rel);
     let cli = println_allowed(rel);
+    let obs = rel.starts_with("obs/");
+    let raw_lines: Vec<&str> = source.lines().collect();
 
     let mut lexer = Lexer::new();
     let mut tracker = TestTracker::new();
@@ -506,6 +557,27 @@ pub fn scan_file(rel: &str, source: &str) -> Vec<Diagnostic> {
                 Rule::PrintlnOutsideCli,
                 "`println!` outside main.rs/bin — stray stdout corrupts CLI output".into(),
             );
+        }
+        if obs && REGISTER_TOKENS.iter().any(|t| code.contains(t)) {
+            let window = &raw_lines[i..raw_lines.len().min(i + 4)];
+            match first_string_literal(window) {
+                Some(name) if metric_name_ok(&name) => {}
+                Some(name) => push(
+                    &lines,
+                    i,
+                    Rule::ObsMetricName,
+                    format!(
+                        "metric name `{name}` breaks `leanvec_<subsystem>_<name>_<unit>` \
+                         (unit: total|seconds|bytes|ratio|count|info)"
+                    ),
+                ),
+                None => push(
+                    &lines,
+                    i,
+                    Rule::ObsMetricName,
+                    "metric registration without a string-literal name near the call".into(),
+                ),
+            }
         }
     }
     out
@@ -682,6 +754,39 @@ mod tests {
         let ok =
             "fn f(c: &AtomicUsize) { c.fetch_add(1, Ordering::Relaxed); // ORDERING: stat only\n}\n";
         assert!(scan_file("util/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn metric_name_convention() {
+        assert!(metric_name_ok("leanvec_engine_queries_total"));
+        assert!(metric_name_ok("leanvec_batcher_queue_wait_seconds"));
+        assert!(metric_name_ok("leanvec_ingest_tombstone_ratio"));
+        assert!(!metric_name_ok("engine_queries_total"), "missing prefix");
+        assert!(!metric_name_ok("leanvec_queries"), "too few segments");
+        assert!(!metric_name_ok("leanvec_engine_queries"), "bad unit");
+        assert!(!metric_name_ok("leanvec_Engine_queries_total"), "case");
+        assert!(!metric_name_ok("leanvec__queries_total"), "empty segment");
+    }
+
+    #[test]
+    fn obs_metric_name_rule_fires_and_stays_quiet() {
+        let bad = "fn f(r: &Registry) { let c = r.register_counter(\"bad_name\", \"h\"); }\n";
+        let d = scan_file("obs/metrics.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, Rule::ObsMetricName);
+
+        let ok = "fn f(r: &Registry) {\n    let c = r.register_counter(\n        \"leanvec_engine_queries_total\",\n        \"h\",\n    );\n}\n";
+        assert!(
+            scan_file("obs/metrics.rs", ok).is_empty(),
+            "name on the rustfmt'd next line is found"
+        );
+
+        // same source outside obs/ is not this rule's business
+        assert!(scan_file("coordinator/x.rs", bad).is_empty());
+
+        // definitions (no leading dot) are not registrations
+        let def = "impl Registry { pub fn register_counter(&self, name: &str) {} }\n";
+        assert!(scan_file("obs/registry.rs", def).is_empty());
     }
 
     #[test]

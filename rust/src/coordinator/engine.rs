@@ -12,13 +12,15 @@
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::{Metrics, ServeReport};
-use super::protocol::{Mutation, QuerySpec, Request, Response};
+use super::protocol::{Mutation, QuerySpec, Request, Response, StageTimes};
 use crate::index::leanvec_index::{LeanVecIndex, SearchParams};
 use crate::index::query::Query;
 use crate::leanvec::model::rows_to_matrix;
 use crate::linalg::Matrix;
 use crate::mutate::LiveIndex;
+use crate::obs::{self, CaptureKind, FlightRecord, FlightRecorder};
 use crate::shard::{Collection, CollectionRegistry, ShardedIndex, DEFAULT_COLLECTION};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -166,6 +168,41 @@ pub struct Engine {
     live: Option<Arc<LiveIndex>>,
     next_id: AtomicU64,
     started: Instant,
+    /// slow-query flight recorder, fed by the worker pool
+    flight: Arc<FlightRecorder>,
+    /// per-collection metric handles, resolved once at start so the
+    /// hot path never does a label lookup
+    coll_metrics: Arc<HashMap<String, Arc<CollHandles>>>,
+}
+
+/// Telemetry handles for one collection's labeled series, resolved
+/// once at engine start ([`obs::handles()`] family lookups) so workers
+/// record through plain `Arc` derefs on the hot path.
+struct CollHandles {
+    queries: obs::Counter,
+    rejected: obs::Counter,
+    e2e: obs::Histogram,
+    search: obs::Histogram,
+    hops: obs::Histogram,
+    touched: obs::Histogram,
+    deleted_skipped: obs::Counter,
+    filtered: obs::Counter,
+}
+
+impl CollHandles {
+    fn resolve(name: &str) -> CollHandles {
+        let h = obs::handles();
+        CollHandles {
+            queries: h.engine_queries.with(name),
+            rejected: h.engine_rejected.with(name),
+            e2e: h.engine_e2e.with(name),
+            search: h.engine_search.with(name),
+            hops: h.query_hops.with(name),
+            touched: h.query_touched.with(name),
+            deleted_skipped: h.query_deleted_skipped.with(name),
+            filtered: h.query_filtered.with(name),
+        }
+    }
 }
 
 /// Work item: one request, its projected query, and the collection that
@@ -175,6 +212,13 @@ struct WorkItem {
     q_proj: Vec<f32>,
     batch_size: usize,
     collection: Arc<Collection>,
+    /// time this request waited in the batcher queue (0 when telemetry
+    /// is off — the batcher skips the clock reads)
+    queue_s: f64,
+    /// this request's share of its group's projection matmul
+    project_s: f64,
+    /// the collection's resolved metric handles
+    obs: Arc<CollHandles>,
 }
 
 impl Engine {
@@ -272,13 +316,28 @@ impl Engine {
         let (resp_tx, resp_rx) = channel::<Response>();
         let work_rx = Arc::new(Mutex::new(work_rx));
 
+        // resolve every collection's labeled metric handles up front;
+        // workers and the batcher then record without label lookups
+        let coll_metrics: Arc<HashMap<String, Arc<CollHandles>>> = Arc::new(
+            registry
+                .names()
+                .into_iter()
+                .map(|n| {
+                    let handles = Arc::new(CollHandles::resolve(&n));
+                    (n, handles)
+                })
+                .collect(),
+        );
+        let flight = Arc::new(FlightRecorder::default());
+
         // --- batcher thread: batch, group by collection, project, fan out
         let bregistry = Arc::clone(&registry);
         let bcfg = cfg.clone();
+        let bmetrics = Arc::clone(&coll_metrics);
         let batcher = std::thread::Builder::new()
             .name("leanvec-batcher".into())
             .spawn(move || {
-                batcher_loop(bregistry, bcfg, req_rx, work_tx);
+                batcher_loop(bregistry, bcfg, req_rx, work_tx, bmetrics);
             })
             // lint:allow(serve-path-panic): engine construction, not the
             // request path — an engine without its batcher cannot exist,
@@ -290,6 +349,7 @@ impl Engine {
             .map(|w| {
                 let wrx = Arc::clone(&work_rx);
                 let wtx = resp_tx.clone();
+                let wflight = Arc::clone(&flight);
                 std::thread::Builder::new()
                     .name(format!("leanvec-search-{w}"))
                     .spawn(move || {
@@ -309,25 +369,27 @@ impl Engine {
                             // per-request spec wins over the collection's
                             // defaults; the allow-list becomes a filter
                             // predicate pushed into traversal
-                            let result = {
-                                let coll = &item.collection;
-                                let spec = &item.req.spec;
-                                let params = resolve_spec(spec, coll.defaults);
-                                let base = Query::new(&item.req.query)
-                                    .k(spec.k)
-                                    .window(params.window)
-                                    .rerank_window(params.rerank_window);
-                                match spec.allow.as_ref() {
-                                    // the set was built once at spec
-                                    // construction; here it is only read
-                                    Some(allow) => {
-                                        let pred = |id: u32| allow.contains(&id);
-                                        coll.index
-                                            .search_scatter(&item.q_proj, &base.filter(&pred))
-                                    }
-                                    None => coll.index.search_scatter(&item.q_proj, &base),
+                            let telem = obs::enabled();
+                            let coll = &item.collection;
+                            let spec = &item.req.spec;
+                            let params = resolve_spec(spec, coll.defaults);
+                            let base = Query::new(&item.req.query)
+                                .k(spec.k)
+                                .window(params.window)
+                                .rerank_window(params.rerank_window);
+                            let t_search = if telem { Some(Instant::now()) } else { None };
+                            let (result, scatter) = match spec.allow.as_ref() {
+                                // the set was built once at spec
+                                // construction; here it is only read
+                                Some(allow) => {
+                                    let pred = |id: u32| allow.contains(&id);
+                                    coll.index
+                                        .search_scatter_timed(&item.q_proj, &base.filter(&pred))
                                 }
+                                None => coll.index.search_scatter_timed(&item.q_proj, &base),
                             };
+                            let search_s =
+                                t_search.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
                             // release the admission slot before the send:
                             // once the caller drains this response the
                             // quota capacity is observably free
@@ -337,6 +399,39 @@ impl Engine {
                                 .submitted
                                 .map(|t| t.elapsed().as_secs_f64())
                                 .unwrap_or(0.0);
+                            let (merge_s, shard_seconds) = match scatter {
+                                Some(t) => (t.merge_seconds, t.per_shard_seconds),
+                                None => (0.0, Vec::new()),
+                            };
+                            if telem {
+                                let m = &item.obs;
+                                m.queries.inc();
+                                m.e2e.record_seconds(latency_s);
+                                m.search.record_seconds(search_s);
+                                m.hops.record(result.stats.hops as u64);
+                                m.touched.record(result.stats.bytes_touched as u64);
+                                if result.stats.deleted_skipped > 0 {
+                                    m.deleted_skipped.add(result.stats.deleted_skipped as u64);
+                                }
+                                if result.stats.filtered > 0 {
+                                    m.filtered.add(result.stats.filtered as u64);
+                                }
+                                wflight.capture_with(latency_s, || FlightRecord {
+                                    id: item.req.id,
+                                    collection: item.collection.name().to_string(),
+                                    kind: CaptureKind::Slow,
+                                    e2e_seconds: latency_s,
+                                    queue_seconds: item.queue_s,
+                                    project_seconds: item.project_s,
+                                    search_seconds: search_s,
+                                    merge_seconds: merge_s,
+                                    shard_seconds,
+                                    stats: result.stats,
+                                    params,
+                                    k: spec.k,
+                                    batch_size: item.batch_size,
+                                });
+                            }
                             let _ = wtx.send(Response {
                                 id: item.req.id,
                                 ids: result.ids,
@@ -344,6 +439,12 @@ impl Engine {
                                 stats: result.stats,
                                 latency_s,
                                 batch_size: item.batch_size,
+                                stages: StageTimes {
+                                    queue_s: item.queue_s,
+                                    project_s: item.project_s,
+                                    search_s,
+                                    merge_s,
+                                },
                             });
                         }
                     })
@@ -384,6 +485,8 @@ impl Engine {
             live: None,
             next_id: AtomicU64::new(0),
             started: Instant::now(),
+            flight,
+            coll_metrics,
         }
     }
 
@@ -408,12 +511,21 @@ impl Engine {
     /// id, or the reason the request was not admitted.
     pub fn submit_spec(&self, query: Vec<f32>, spec: QuerySpec) -> Result<u64, EngineError> {
         let name = spec.collection_name();
-        let coll = self
-            .registry
-            .get(name)
-            .ok_or_else(|| EngineError::UnknownCollection(name.to_string()))?;
+        let coll = match self.registry.get(name) {
+            Some(c) => c,
+            None => {
+                // unknown names go through the family lookup (its
+                // cardinality cap folds hostile name floods into the
+                // overflow child) rather than a pre-resolved handle
+                obs::handles().engine_rejected.with(name).inc();
+                return Err(EngineError::UnknownCollection(name.to_string()));
+            }
+        };
         let tx = self.req_tx.as_ref().ok_or(EngineError::Stopped)?;
         if !coll.admit_search() {
+            if let Some(m) = self.coll_metrics.get(name) {
+                m.rejected.inc();
+            }
             return Err(EngineError::QuotaExceeded {
                 collection: name.to_string(),
             });
@@ -536,6 +648,34 @@ impl Engine {
         self.started.elapsed().as_secs_f64()
     }
 
+    /// Prometheus text exposition (v0.0.4) of the process metric
+    /// registry. Refreshes the uptime gauge first. The output parses
+    /// cleanly back through [`crate::obs::expo::parse_text`] — CI
+    /// scrapes and validates every dump with exactly that parser.
+    pub fn metrics_text(&self) -> String {
+        obs::handles().engine_uptime.set(self.uptime());
+        obs::expo::render_text(&obs::registry().snapshot())
+    }
+
+    /// JSON rendering of the same registry snapshot as
+    /// [`Engine::metrics_text`], with raw histogram buckets included.
+    pub fn metrics_json(&self) -> String {
+        obs::handles().engine_uptime.set(self.uptime());
+        obs::expo::render_json(&obs::registry().snapshot()).to_pretty()
+    }
+
+    /// Everything the flight recorder currently holds, slowest first:
+    /// the per-stage breakdowns of the slowest queries seen (plus a
+    /// small periodic sample of ordinary traffic).
+    pub fn flight_records(&self) -> Vec<FlightRecord> {
+        self.flight.records()
+    }
+
+    /// The engine's flight recorder (e.g. to check [`FlightRecorder::seen`]).
+    pub fn flight_recorder(&self) -> &Arc<FlightRecorder> {
+        &self.flight
+    }
+
     /// Direct parallel batch path (no channels): project the whole
     /// batch as ONE matmul on the calling thread — the same
     /// amortization the batcher thread performs — then fan the searches
@@ -618,6 +758,7 @@ fn batcher_loop(
     cfg: EngineConfig,
     req_rx: Receiver<Request>,
     work_tx: Sender<WorkItem>,
+    metrics: Arc<HashMap<String, Arc<CollHandles>>>,
 ) {
     let batcher = Batcher::new(cfg.batch);
     // PJRT runtime (if requested) must be constructed on this thread.
@@ -634,6 +775,15 @@ fn batcher_loop(
 
     while let Some(batch) = batcher.next_batch(&req_rx) {
         let bs = batch.len();
+        // telemetry checked per batch: the disabled path skips every
+        // clock read below, not just the record() calls
+        let telem = obs::enabled();
+        let dequeued = if telem {
+            obs::handles().batcher_batch_size.record(bs as u64);
+            Some(Instant::now())
+        } else {
+            None
+        };
         // group the batch by collection: one projection matmul per
         // collection (each has its own model), insertion order kept so
         // single-collection batches stay one contiguous matmul
@@ -655,6 +805,7 @@ fn batcher_loop(
             // The projection model is frozen even on live shards, so
             // batching is mutation-oblivious.
             let queries: Vec<Vec<f32>> = reqs.iter().map(|r| r.query.clone()).collect();
+            let t_proj = if telem { Some(Instant::now()) } else { None };
             let projected: Vec<Vec<f32>> = match pjrt.as_mut() {
                 Some(p) => {
                     use crate::index::builder::BatchProjector;
@@ -666,13 +817,33 @@ fn batcher_loop(
                     (0..queries.len()).map(|i| proj.row(i).to_vec()).collect()
                 }
             };
+            let project_s = t_proj.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+            if telem {
+                obs::handles().batcher_project.record_seconds(project_s);
+            }
+            // a request's share of its group's one matmul
+            let project_share = project_s / reqs.len().max(1) as f64;
+            let ch = metrics
+                .get(coll.name())
+                .cloned()
+                .unwrap_or_else(|| Arc::new(CollHandles::resolve(coll.name())));
             for (req, q_proj) in reqs.into_iter().zip(projected.into_iter()) {
+                let queue_s = match (dequeued, req.submitted) {
+                    (Some(d), Some(t)) => d.duration_since(t).as_secs_f64(),
+                    _ => 0.0,
+                };
+                if telem {
+                    obs::handles().batcher_queue_wait.record_seconds(queue_s);
+                }
                 if work_tx
                     .send(WorkItem {
                         req,
                         q_proj,
                         batch_size: bs,
                         collection: Arc::clone(&coll),
+                        queue_s,
+                        project_s: project_share,
+                        obs: Arc::clone(&ch),
                     })
                     .is_err()
                 {
@@ -704,11 +875,13 @@ fn ingest_loop(
     consolidate_threshold: f64,
 ) {
     while let Ok((coll, m)) = mut_rx.recv() {
+        let telem = obs::enabled();
         let applied = match m {
             Mutation::Insert { ext_id, vector } => match coll.index.insert(ext_id, &vector) {
                 Ok(_) => {
                     // ORDERING: Relaxed — stat counter (reporting only).
                     stats.inserts.fetch_add(1, Ordering::Relaxed);
+                    obs::handles().ingest_inserts.inc();
                     true
                 }
                 Err(e) => {
@@ -720,6 +893,7 @@ fn ingest_loop(
                 Ok(_) => {
                     // ORDERING: Relaxed — stat counter (reporting only).
                     stats.deletes.fetch_add(1, Ordering::Relaxed);
+                    obs::handles().ingest_deletes.inc();
                     true
                 }
                 Err(e) => {
@@ -732,6 +906,7 @@ fn ingest_loop(
         if !applied {
             // ORDERING: Relaxed — stat counter (reporting only).
             stats.errors.fetch_add(1, Ordering::Relaxed);
+            obs::handles().ingest_errors.inc();
             continue;
         }
         // the log-size bound is independent of the tombstone trigger: a
@@ -744,6 +919,16 @@ fn ingest_loop(
             stats.consolidations.fetch_add(1, Ordering::Relaxed);
             // ORDERING: Relaxed — stat counter (reporting only).
             stats.consolidate_nanos.fetch_add(nanos, Ordering::Relaxed);
+            let h = obs::handles();
+            h.ingest_consolidations.inc();
+            h.ingest_consolidate.record_seconds(report.seconds);
+        }
+        if telem {
+            // worst live-shard tombstone fraction, after the (possible)
+            // consolidation — this is the gauge operators alert on
+            obs::handles()
+                .ingest_tombstone
+                .set(coll.index.max_tombstone_fraction());
         }
     }
 }

@@ -3,11 +3,20 @@
 //! filtered, tombstones routed through) aggregated as p50/p99 instead
 //! of being dropped after the response echo.
 //!
+//! Percentiles come from the SAME histogram code path the live
+//! telemetry registry uses ([`crate::obs::hist`], via detached
+//! instruments): post-hoc reports and `metrics_text()` exposition can
+//! never disagree about what "p99" means. Quantiles therefore carry
+//! the log-linear buckets' bounded relative error (< ~2%) instead of
+//! being exact order statistics.
+//!
 //! [`QueryStats`]: crate::index::query::QueryStats
 
 use super::protocol::Response;
 use crate::index::query::QueryStats;
-use crate::util::stats::Summary;
+use crate::obs::hist::HistSnapshot;
+use crate::obs::metrics::NANOS;
+use crate::obs::registry::Histogram;
 
 /// p50/p99 of one per-query counter.
 #[derive(Clone, Copy, Debug, Default)]
@@ -17,15 +26,34 @@ pub struct StatsPercentiles {
 }
 
 impl StatsPercentiles {
-    fn of(s: &Summary) -> StatsPercentiles {
-        if s.is_empty() {
-            return StatsPercentiles::default();
-        }
+    fn of(s: &HistSnapshot) -> StatsPercentiles {
         StatsPercentiles {
             p50: s.p50(),
             p99: s.p99(),
         }
     }
+
+    /// Same, scaled seconds -> milliseconds.
+    fn of_ms(s: &HistSnapshot) -> StatsPercentiles {
+        StatsPercentiles {
+            p50: s.p50() * 1e3,
+            p99: s.p99() * 1e3,
+        }
+    }
+}
+
+/// p50/p99 of each per-stage latency, milliseconds (zeros when the
+/// engine ran with telemetry disabled — the stages weren't timed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageSummary {
+    /// batcher queue wait
+    pub queue: StatsPercentiles,
+    /// per-request share of the batched projection matmul
+    pub project: StatsPercentiles,
+    /// worker-side search (scatter + merge + rerank)
+    pub search: StatsPercentiles,
+    /// scatter-gather top-k merge
+    pub merge: StatsPercentiles,
 }
 
 /// The served [`QueryStats`] distribution across one run.
@@ -51,25 +79,29 @@ pub struct QueryStatsSummary {
 
 impl QueryStatsSummary {
     pub fn from_responses(responses: &[Response]) -> QueryStatsSummary {
-        let mut hops = Summary::new();
-        let mut bytes = Summary::new();
-        let mut filtered = Summary::new();
-        let mut deleted = Summary::new();
+        // detached instruments: the registry's histogram math without
+        // the registry (always-on, never exposed)
+        let hops = Histogram::detached(1.0);
+        let bytes = Histogram::detached(1.0);
+        let filtered = Histogram::detached(1.0);
+        let deleted = Histogram::detached(1.0);
         let mut deleted_total = 0usize;
         let mut totals = QueryStats::default();
         for r in responses {
-            hops.push(r.stats.hops as f64);
-            bytes.push(r.stats.bytes_touched as f64);
-            filtered.push(r.stats.filtered as f64);
-            deleted.push(r.stats.deleted_skipped as f64);
-            deleted_total += r.stats.deleted_skipped;
+            hops.record(r.stats.hops as u64);
+            bytes.record(r.stats.bytes_touched as u64);
+            filtered.record(r.stats.filtered as u64);
+            deleted.record(r.stats.deleted_skipped as u64);
+            // saturating: a soak's running total pins at usize::MAX
+            // instead of wrapping into a nonsense small number
+            deleted_total = deleted_total.saturating_add(r.stats.deleted_skipped);
             totals.merge(&r.stats);
         }
         QueryStatsSummary {
-            hops: StatsPercentiles::of(&hops),
-            bytes_touched: StatsPercentiles::of(&bytes),
-            filtered: StatsPercentiles::of(&filtered),
-            deleted_skipped: StatsPercentiles::of(&deleted),
+            hops: StatsPercentiles::of(&hops.snapshot()),
+            bytes_touched: StatsPercentiles::of(&bytes.snapshot()),
+            filtered: StatsPercentiles::of(&filtered.snapshot()),
+            deleted_skipped: StatsPercentiles::of(&deleted.snapshot()),
             deleted_skipped_total: deleted_total,
             totals,
         }
@@ -84,21 +116,34 @@ pub struct Metrics {
     pub qps: f64,
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
+    pub latency_p999_ms: f64,
     pub latency_mean_ms: f64,
     pub mean_batch: f64,
+    /// where the latency went, stage by stage (zeros when telemetry
+    /// was off during the run)
+    pub stages: StageSummary,
     /// per-query traversal accounting, aggregated (not dropped)
     pub query_stats: QueryStatsSummary,
 }
 
 impl Metrics {
     pub fn from_responses(responses: &[Response], wall_seconds: f64) -> Metrics {
-        let mut lat = Summary::new();
+        let lat = Histogram::detached(NANOS);
+        let queue = Histogram::detached(NANOS);
+        let project = Histogram::detached(NANOS);
+        let search = Histogram::detached(NANOS);
+        let merge = Histogram::detached(NANOS);
         let mut batch = 0.0f64;
         for r in responses {
-            lat.push(r.latency_s * 1e3);
+            lat.record_seconds(r.latency_s);
+            queue.record_seconds(r.stages.queue_s);
+            project.record_seconds(r.stages.project_s);
+            search.record_seconds(r.stages.search_s);
+            merge.record_seconds(r.stages.merge_s);
             batch += r.batch_size as f64;
         }
         let n = responses.len();
+        let ls = lat.snapshot();
         Metrics {
             queries: n,
             wall_seconds,
@@ -107,10 +152,17 @@ impl Metrics {
             } else {
                 0.0
             },
-            latency_p50_ms: lat.p50(),
-            latency_p99_ms: lat.p99(),
-            latency_mean_ms: lat.mean(),
+            latency_p50_ms: ls.p50() * 1e3,
+            latency_p99_ms: ls.p99() * 1e3,
+            latency_p999_ms: ls.p999() * 1e3,
+            latency_mean_ms: ls.mean() * 1e3,
             mean_batch: if n > 0 { batch / n as f64 } else { 0.0 },
+            stages: StageSummary {
+                queue: StatsPercentiles::of_ms(&queue.snapshot()),
+                project: StatsPercentiles::of_ms(&project.snapshot()),
+                search: StatsPercentiles::of_ms(&search.snapshot()),
+                merge: StatsPercentiles::of_ms(&merge.snapshot()),
+            },
             query_stats: QueryStatsSummary::from_responses(responses),
         }
     }
@@ -119,9 +171,13 @@ impl Metrics {
 impl std::fmt::Display for Metrics {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let qs = &self.query_stats;
+        let st = &self.stages;
         write!(
             f,
-            "{} queries in {:.3}s -> {:.0} QPS | lat p50 {:.3} ms p99 {:.3} ms | mean batch {:.1}\n\
+            "{} queries in {:.3}s -> {:.0} QPS | lat p50 {:.3} ms p99 {:.3} ms p999 {:.3} ms \
+             | mean batch {:.1}\n\
+             stages ms p50/p99: queue {:.3}/{:.3} project {:.3}/{:.3} search {:.3}/{:.3} \
+             merge {:.3}/{:.3}\n\
              per-query: hops p50 {:.0} p99 {:.0} | bytes p50 {:.0} p99 {:.0} | \
              filtered p50 {:.0} p99 {:.0} | deleted-skipped p50 {:.0} p99 {:.0} (total {})",
             self.queries,
@@ -129,7 +185,16 @@ impl std::fmt::Display for Metrics {
             self.qps,
             self.latency_p50_ms,
             self.latency_p99_ms,
+            self.latency_p999_ms,
             self.mean_batch,
+            st.queue.p50,
+            st.queue.p99,
+            st.project.p50,
+            st.project.p99,
+            st.search.p50,
+            st.search.p99,
+            st.merge.p50,
+            st.merge.p99,
             qs.hops.p50,
             qs.hops.p99,
             qs.bytes_touched.p50,
@@ -187,6 +252,12 @@ mod tests {
             stats: crate::index::query::QueryStats::default(),
             latency_s: lat,
             batch_size: batch,
+            stages: crate::coordinator::protocol::StageTimes {
+                queue_s: lat * 0.25,
+                project_s: lat * 0.05,
+                search_s: lat * 0.6,
+                merge_s: lat * 0.1,
+            },
         }
     }
 
@@ -230,8 +301,38 @@ mod tests {
         let m = Metrics::from_responses(&rs, 0.5);
         assert_eq!(m.queries, 3);
         assert!((m.qps - 6.0).abs() < 1e-9);
-        assert!((m.latency_p50_ms - 2.0).abs() < 1e-9);
+        // histogram quantiles carry the buckets' ~2% relative error
+        assert!((m.latency_p50_ms - 2.0).abs() < 0.05, "{}", m.latency_p50_ms);
+        assert!((m.latency_p99_ms - 3.0).abs() < 0.08, "{}", m.latency_p99_ms);
+        // p999 of 3 samples is the max
+        assert!((m.latency_p999_ms - 3.0).abs() < 0.08, "{}", m.latency_p999_ms);
+        // the mean uses the exact recorded sum, not bucket midpoints
+        assert!((m.latency_mean_ms - 2.0).abs() < 1e-3, "{}", m.latency_mean_ms);
         assert!((m.mean_batch - 8.0 / 3.0).abs() < 1e-9);
+        // stage percentiles ride the same histogram path (search =
+        // 60% of e2e in the fixture)
+        assert!(
+            (m.stages.search.p50 - 1.2).abs() < 0.05,
+            "{:?}",
+            m.stages.search
+        );
+        assert!(m.stages.queue.p99 > m.stages.queue.p50 - 1e-9);
+        let text = format!("{m}");
+        assert!(text.contains("stages ms"), "{text}");
+        assert!(text.contains("p999"), "{text}");
+    }
+
+    #[test]
+    fn deleted_skipped_total_saturates() {
+        // regression: two huge per-response counts must pin at
+        // usize::MAX, not wrap around into a small number
+        let mut a = resp(0, vec![1], 0.001, 1);
+        a.stats.deleted_skipped = usize::MAX - 5;
+        let mut b = resp(1, vec![2], 0.001, 1);
+        b.stats.deleted_skipped = 100;
+        let qs = QueryStatsSummary::from_responses(&[a, b]);
+        assert_eq!(qs.deleted_skipped_total, usize::MAX);
+        assert_eq!(qs.totals.deleted_skipped, usize::MAX, "merge saturates too");
     }
 
     #[test]

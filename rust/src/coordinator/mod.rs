@@ -33,5 +33,5 @@ pub mod protocol;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{Engine, EngineConfig, EngineError, IngestSnapshot, IngestStats, QueryProjectorKind};
-pub use metrics::{Metrics, QueryStatsSummary, ServeReport, StatsPercentiles};
-pub use protocol::{Mutation, QuerySpec, Request, Response};
+pub use metrics::{Metrics, QueryStatsSummary, ServeReport, StageSummary, StatsPercentiles};
+pub use protocol::{Mutation, QuerySpec, Request, Response, StageTimes};

@@ -117,6 +117,21 @@ impl Request {
     }
 }
 
+/// Per-stage wall times for one request's trip through the engine,
+/// seconds. All zeros when telemetry is disabled
+/// (`LEANVEC_NO_TELEMETRY=1`) — the engine skips the clock reads.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimes {
+    /// waiting in the batcher queue (submit -> dequeue)
+    pub queue_s: f64,
+    /// this request's share of its batch group's projection matmul
+    pub project_s: f64,
+    /// worker-side search (scatter + merge + rerank)
+    pub search_s: f64,
+    /// the top-k merge step of the scatter-gather (0 when unsharded)
+    pub merge_s: f64,
+}
+
 /// The engine's answer.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -130,6 +145,8 @@ pub struct Response {
     pub latency_s: f64,
     /// batch this request was served in (observability)
     pub batch_size: usize,
+    /// where the latency went (observability; zeros when telemetry off)
+    pub stages: StageTimes,
 }
 
 #[cfg(test)]

@@ -207,6 +207,14 @@ impl LeanVecIndex {
         let k = query.top_k();
         let params = query.effective(SearchParams::default());
         let pq = self.primary.prepare(q_proj, self.sim);
+        // stage timers live here, not in simd/: the kernels stay
+        // branch-free while the index layer owns the clock reads
+        let telem = crate::obs::enabled();
+        let t_trav = if telem {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         // graph traversal over primaries: retain up to rerank_window
         // candidates (split buffer) while expanding only the window
         let capacity = params.rerank_window.max(k);
@@ -218,6 +226,11 @@ impl LeanVecIndex {
             capacity,
             query.filter_fn(),
         );
+        if let Some(t) = t_trav {
+            crate::obs::handles()
+                .index_traversal
+                .record_seconds(t.elapsed().as_secs_f64());
+        }
         let take = params.rerank_window.max(k).min(cands.len());
         if !query.wants_rerank() {
             // primary-only ablation arm: top-k straight off the traversal
@@ -250,7 +263,17 @@ impl LeanVecIndex {
             deleted_skipped: 0,
         };
         // re-rank with secondary vectors in the original space
+        let t_rerank = if telem {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         let (ids, scores) = self.rerank(query.vector(), &ids, k);
+        if let Some(t) = t_rerank {
+            crate::obs::handles()
+                .index_rerank
+                .record_seconds(t.elapsed().as_secs_f64());
+        }
         SearchResult { ids, scores, stats }
     }
 
@@ -313,6 +336,7 @@ impl LeanVecIndex {
     /// pressure; a no-op for non-mapped indexes.
     pub fn evict_mapped(&self) {
         if let Some(m) = &self.backing {
+            crate::obs::handles().mmap_evictions.inc();
             m.advise(crate::util::mmap::Advice::DontNeed);
             m.advise(crate::util::mmap::Advice::Random);
         }

@@ -227,14 +227,16 @@ impl QueryStats {
     /// Accumulate another query's counters into this one. The sharded
     /// scatter-gather merge sums per-shard stats with this, so a fanned-
     /// out query reports the *total* traffic it caused across shards;
-    /// the metrics layer uses it to aggregate run totals.
+    /// the metrics layer uses it to aggregate run totals. Saturating:
+    /// a long soak's running totals pin at `usize::MAX` instead of
+    /// silently wrapping back toward zero.
     pub fn merge(&mut self, other: &QueryStats) {
-        self.primary_scored += other.primary_scored;
-        self.reranked += other.reranked;
-        self.bytes_touched += other.bytes_touched;
-        self.hops += other.hops;
-        self.filtered += other.filtered;
-        self.deleted_skipped += other.deleted_skipped;
+        self.primary_scored = self.primary_scored.saturating_add(other.primary_scored);
+        self.reranked = self.reranked.saturating_add(other.reranked);
+        self.bytes_touched = self.bytes_touched.saturating_add(other.bytes_touched);
+        self.hops = self.hops.saturating_add(other.hops);
+        self.filtered = self.filtered.saturating_add(other.filtered);
+        self.deleted_skipped = self.deleted_skipped.saturating_add(other.deleted_skipped);
     }
 }
 
@@ -396,6 +398,34 @@ mod tests {
         assert_eq!(total.hops, 4 * unit.hops);
         assert_eq!(total.filtered, 4 * unit.filtered);
         assert_eq!(total.deleted_skipped, 4 * unit.deleted_skipped);
+    }
+
+    #[test]
+    fn stats_merge_saturates_instead_of_wrapping() {
+        // regression: long-soak totals used to wrap via `+=`
+        let mut a = QueryStats {
+            primary_scored: usize::MAX - 1,
+            reranked: usize::MAX,
+            bytes_touched: usize::MAX - 100,
+            hops: 5,
+            filtered: usize::MAX,
+            deleted_skipped: usize::MAX - 3,
+        };
+        let b = QueryStats {
+            primary_scored: 10,
+            reranked: 1,
+            bytes_touched: 200,
+            hops: 1,
+            filtered: usize::MAX,
+            deleted_skipped: 7,
+        };
+        a.merge(&b);
+        assert_eq!(a.primary_scored, usize::MAX);
+        assert_eq!(a.reranked, usize::MAX);
+        assert_eq!(a.bytes_touched, usize::MAX);
+        assert_eq!(a.hops, 6, "unsaturated fields still add exactly");
+        assert_eq!(a.filtered, usize::MAX);
+        assert_eq!(a.deleted_skipped, usize::MAX);
     }
 
     #[test]

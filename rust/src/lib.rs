@@ -35,6 +35,15 @@
 //! state through versioned live snapshots. The serving engine feeds it
 //! through an ingest lane ([`coordinator::Engine::start_live`]).
 //!
+//! The serving stack is observable while it runs: the [`obs`] layer
+//! keeps lock-free counters and log-linear latency histograms for every
+//! query stage (batcher queue wait, projection, per-shard scatter,
+//! merge, rerank, end-to-end) plus ingest and mmap health, exposed as
+//! Prometheus text or JSON via [`coordinator::Engine::metrics_text`] /
+//! [`coordinator::Engine::metrics_json`], with a slow-query flight
+//! recorder ([`obs::FlightRecorder`]) capturing per-stage breakdowns of
+//! the slowest requests. `docs/OBSERVABILITY.md` has the catalog.
+//!
 //! Scoring bottoms out in the [`simd`] kernel layer: explicit
 //! AVX2/FMA/F16C kernels selected once at startup by runtime CPU
 //! detection, with a portable scalar fallback that is bit-identical to
@@ -97,6 +106,7 @@ pub mod index;
 pub mod leanvec;
 pub mod linalg;
 pub mod mutate;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod shard;

@@ -7,6 +7,8 @@
 //!   serve             run the batching engine (from --index snapshot, or build)
 //!   mutate            churn driver: streaming inserts/deletes + search
 //!                     on a snapshot-loaded live index
+//!   metrics           run a short workload and print the telemetry
+//!                     exposition (Prometheus text, or --json)
 //!   artifacts         verify the PJRT artifacts load + execute
 //!
 //! The build/serve split: `build` constructs the index once and
@@ -56,6 +58,7 @@ fn main() {
         Some("search") => cmd_search(&args),
         Some("serve") => cmd_serve(&args),
         Some("mutate") => cmd_mutate(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("fsck") => cmd_fsck(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
@@ -71,7 +74,7 @@ fn main() {
 
 fn print_usage() {
     println!(
-        "usage: repro <experiment|build|search|serve|mutate|fsck|artifacts> [flags]\n\
+        "usage: repro <experiment|build|search|serve|mutate|metrics|fsck|artifacts> [flags]\n\
          \n\
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
@@ -83,6 +86,9 @@ fn print_usage() {
          repro serve --index rqa-768.lvshards --collection tenant-a --workers 4\n\
          repro serve --dataset wit-512 --shards 4   (ad hoc sharded build + serve)\n\
          repro mutate --index rqa-768.leanvec --insert-rate 0.2 --delete-rate 0.1\n\
+         repro metrics --index rqa-768.leanvec --queries 500   (scrape after a workload)\n\
+         repro metrics --index rqa-768.leanvec --json\n\
+         repro serve --index rqa-768.leanvec --metrics-every 500   (periodic exposition)\n\
          repro fsck --index rqa-768.leanvec   (deep consistency check; exit 2 on violations)\n\
          repro fsck --index rqa-768.lvshards  (checks every shard + routing/ownership)\n\
          repro search --dataset wit-512 --projection ood-es   (ad hoc, no snapshot)\n\
@@ -97,7 +103,11 @@ fn print_usage() {
          fraction triggering compaction; 0 disables that trigger), --queries N\n\
          shard knobs: --shards N (hash-partition the corpus across N shards;\n\
          build writes a shard directory + manifest, serve scatter-gathers),\n\
-         --collection NAME (serve: register/route under this collection name)"
+         --collection NAME (serve: register/route under this collection name)\n\
+         telemetry: repro metrics --index F [--queries N] [--json] scrapes the\n\
+         registry after a workload; serve --metrics-every N dumps a validated\n\
+         exposition every N responses and prints the slow-query flight\n\
+         recorder on exit (LEANVEC_NO_TELEMETRY=1 disables the whole layer)"
     );
 }
 
@@ -726,6 +736,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let n_shards = sharded.shards();
     let mut registry = CollectionRegistry::new();
     registry.register(Collection::new(collection.clone(), sharded).with_defaults(params));
+    let metrics_every = checked_usize_flag(args, "metrics-every", 0)?;
     let engine = Engine::start_collections(registry, cfg);
     println!("serving collection {collection:?} ({n_shards} shards)");
     let t0 = std::time::Instant::now();
@@ -734,14 +745,105 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .submit_spec(q.clone(), QuerySpec::top_k(k).with_collection(&collection))
             .map_err(|e| anyhow::anyhow!("{e}"))?;
     }
-    let mut responses = engine.drain(n_queries);
+    // drain in chunks so a periodic exposition can interleave with the
+    // workload; each dump round-trips through the strict in-repo parser
+    // before printing, so a malformed exposition fails the run loudly
+    let mut responses = Vec::with_capacity(n_queries);
+    let mut drained = 0usize;
+    while drained < n_queries {
+        let step = if metrics_every > 0 {
+            metrics_every.min(n_queries - drained)
+        } else {
+            n_queries - drained
+        };
+        let mut chunk = engine.drain(step);
+        drained += chunk.len();
+        let short = chunk.len() < step;
+        responses.append(&mut chunk);
+        if metrics_every > 0 {
+            let text = engine.metrics_text();
+            let families = leanvec::obs::expo::parse_text(&text)
+                .map_err(|e| anyhow::anyhow!("metrics exposition failed validation: {e}"))?;
+            println!(
+                "-- metrics after {drained}/{n_queries} responses \
+                 ({} families, exposition validated) --",
+                families.len()
+            );
+            print!("{text}");
+        }
+        if short {
+            break; // engine went away; leftovers are collected below
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
+    // the engine is consumed by shutdown; scrape forensics first
+    let flights = engine.flight_records();
     let mut leftovers = engine.shutdown();
     responses.append(&mut leftovers);
     responses.sort_by_key(|r| r.id);
     let report = ServeReport::new(&responses, &truth_rep, k, wall);
     println!("{}", report.metrics);
     println!("recall@{k}: {:.3}", report.recall_at_k);
+    if !flights.is_empty() {
+        println!("flight recorder ({} records, slowest first):", flights.len());
+        for r in &flights {
+            println!("  {r}");
+        }
+    }
+    Ok(())
+}
+
+/// `repro metrics --index F [--queries N] [--json]`: run a short
+/// closed-loop workload against a snapshot, then print the telemetry
+/// exposition — Prometheus text v0.0.4 by default (round-tripped
+/// through the strict in-repo parser first), or the JSON form with
+/// `--json`. The flight recorder's slowest queries follow.
+fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args)?;
+    let k = positive_usize(args, "k", 10)?;
+    let n_queries = positive_usize(args, "queries", 500)?;
+    let path = args.opt_str("index").ok_or_else(|| {
+        anyhow::anyhow!("repro metrics needs --index SNAPSHOT; run `repro` for usage")
+    })?;
+    let (index, meta) = load_snapshot(&path, args.switch("mmap"))?;
+    let ds = dataset_for_snapshot(args, &ctx, &meta, Some(index.len()), index.model.input_dim())?;
+    let params = search_params_from(args, meta.search_defaults)?;
+    let cfg = EngineConfig {
+        workers: checked_usize_flag(args, "workers", 0)?.max(1),
+        batch: BatchPolicy::default(),
+        search: params,
+        ..EngineConfig::default()
+    };
+    let engine = Engine::start(Arc::new(index), cfg);
+    for i in 0..n_queries {
+        engine
+            .submit(ds.test_queries[i % ds.test_queries.len()].clone(), k)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
+    let responses = engine.drain(n_queries);
+    anyhow::ensure!(
+        responses.len() == n_queries,
+        "engine answered {}/{} queries",
+        responses.len(),
+        n_queries
+    );
+    if args.switch("json") {
+        println!("{}", engine.metrics_json());
+    } else {
+        let text = engine.metrics_text();
+        let families = leanvec::obs::expo::parse_text(&text)
+            .map_err(|e| anyhow::anyhow!("metrics exposition failed validation: {e}"))?;
+        print!("{text}");
+        eprintln!("exposition OK ({} families)", families.len());
+    }
+    let flights = engine.flight_records();
+    engine.shutdown();
+    if !flights.is_empty() {
+        eprintln!("flight recorder ({} records, slowest first):", flights.len());
+        for r in flights.iter().take(8) {
+            eprintln!("  {r}");
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,578 @@
+//! Exposition: render a registry snapshot as Prometheus text format
+//! v0.0.4 or JSON, plus a **strict** text-format parser used by the
+//! unit tests and the CI scrape smoke to prove every dump round-trips.
+//!
+//! Histograms are exposed as Prometheus `summary` families (pre-
+//! computed `quantile` children + `_sum`/`_count`): a single process
+//! has no cross-instance aggregation to preserve, and quantiles keep
+//! the dump readable next to the log-linear bucket array (the JSON
+//! exposition carries the raw non-zero buckets for tooling that wants
+//! them).
+
+use super::registry::{FamilySnapshot, Kind, ValueSnap};
+use crate::util::json::Json;
+
+/// Quantiles every histogram exposes.
+pub const QUANTILES: [f64; 4] = [0.5, 0.9, 0.99, 0.999];
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn label_str(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn base_labels(child: &Option<(String, String)>) -> Vec<(String, String)> {
+    match child {
+        Some((k, v)) => vec![(k.clone(), v.clone())],
+        None => Vec::new(),
+    }
+}
+
+/// Render snapshots as Prometheus text exposition format v0.0.4.
+pub fn render_text(snaps: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for fam in snaps {
+        out.push_str(&format!("# HELP {} {}\n", fam.name, escape_help(&fam.help)));
+        out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind.as_str()));
+        for (labels, value) in &fam.children {
+            let base = base_labels(labels);
+            match value {
+                ValueSnap::Counter(v) => {
+                    out.push_str(&format!("{}{} {}\n", fam.name, label_str(&base), v));
+                }
+                ValueSnap::Gauge(v) => {
+                    out.push_str(&format!("{}{} {}\n", fam.name, label_str(&base), v));
+                }
+                ValueSnap::Hist(h) => {
+                    for q in QUANTILES {
+                        let mut ls = base.clone();
+                        ls.push(("quantile".to_string(), format!("{q}")));
+                        out.push_str(&format!(
+                            "{}{} {}\n",
+                            fam.name,
+                            label_str(&ls),
+                            h.quantile(q)
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        fam.name,
+                        label_str(&base),
+                        h.sum()
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        fam.name,
+                        label_str(&base),
+                        h.count()
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Render snapshots as a JSON document (`util::json`), carrying the
+/// same quantiles plus the raw non-zero buckets.
+pub fn render_json(snaps: &[FamilySnapshot]) -> Json {
+    let families: Vec<Json> = snaps
+        .iter()
+        .map(|fam| {
+            let samples: Vec<Json> = fam
+                .children
+                .iter()
+                .map(|(labels, value)| {
+                    let label_obj = Json::obj(
+                        base_labels(labels)
+                            .iter()
+                            .map(|(k, v)| (k.as_str(), Json::str(v)))
+                            .collect::<Vec<_>>(),
+                    );
+                    let mut fields = vec![("labels", label_obj)];
+                    match value {
+                        ValueSnap::Counter(v) => fields.push(("value", Json::num(*v as f64))),
+                        ValueSnap::Gauge(v) => fields.push(("value", Json::num(*v))),
+                        ValueSnap::Hist(h) => {
+                            fields.push(("count", Json::num(h.count() as f64)));
+                            fields.push(("sum", Json::num(h.sum())));
+                            fields.push(("mean", Json::num(h.mean())));
+                            fields.push(("p50", Json::num(h.quantile(0.5))));
+                            fields.push(("p90", Json::num(h.quantile(0.9))));
+                            fields.push(("p99", Json::num(h.quantile(0.99))));
+                            fields.push(("p999", Json::num(h.quantile(0.999))));
+                            let buckets: Vec<Json> = h
+                                .nonzero_buckets()
+                                .iter()
+                                .map(|(lo, c)| {
+                                    Json::arr(vec![Json::num(*lo), Json::num(*c as f64)])
+                                })
+                                .collect();
+                            fields.push(("buckets", Json::arr(buckets)));
+                        }
+                    }
+                    Json::obj(fields)
+                })
+                .collect();
+            Json::obj(vec![
+                ("name", Json::str(&fam.name)),
+                ("type", Json::str(fam.kind.as_str())),
+                ("help", Json::str(&fam.help)),
+                ("samples", Json::arr(samples)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("families", Json::arr(families))])
+}
+
+// ---------------------------------------------------------------------
+// strict text-format parser
+// ---------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParsedSample {
+    /// Full sample name as written (`foo_seconds_count` etc.).
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One parsed metric family with its samples.
+#[derive(Clone, Debug)]
+pub struct ParsedFamily {
+    pub name: String,
+    pub kind: String,
+    pub help: Option<String>,
+    pub samples: Vec<ParsedSample>,
+}
+
+fn is_name_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_' || c == ':'
+}
+
+fn is_name_char(c: char) -> bool {
+    is_name_start(c) || c.is_ascii_digit()
+}
+
+fn valid_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if is_name_start(c) => {}
+        _ => return false,
+    }
+    chars.all(is_name_char)
+}
+
+fn is_label_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if is_label_start(c) => {}
+        _ => return false,
+    }
+    chars.all(|c| is_label_start(c) || c.is_ascii_digit())
+}
+
+/// Parse `{k="v",...}`; `rest` starts at `{`. Returns labels and the
+/// remainder after the closing `}`.
+fn parse_labels(rest: &str, lno: usize) -> Result<(Vec<(String, String)>, &str), String> {
+    let body = &rest[1..];
+    let mut labels = Vec::new();
+    let mut chars = body.char_indices().peekable();
+    loop {
+        // closing brace (also accepts `{}` and a trailing comma)
+        if let Some(&(i, c)) = chars.peek() {
+            if c == '}' {
+                return Ok((labels, &body[i + 1..]));
+            }
+        } else {
+            return Err(format!("line {lno}: unterminated label set"));
+        }
+        // label name
+        let start = match chars.peek() {
+            Some(&(i, _)) => i,
+            None => return Err(format!("line {lno}: unterminated label set")),
+        };
+        let mut eq = None;
+        for (i, c) in chars.by_ref() {
+            if c == '=' {
+                eq = Some(i);
+                break;
+            }
+            if !(is_label_start(c) || c.is_ascii_digit()) {
+                return Err(format!("line {lno}: bad character {c:?} in label name"));
+            }
+        }
+        let eq = eq.ok_or_else(|| format!("line {lno}: label without '='"))?;
+        let name = &body[start..eq];
+        if !valid_label_name(name) {
+            return Err(format!("line {lno}: invalid label name {name:?}"));
+        }
+        // opening quote
+        match chars.next() {
+            Some((_, '"')) => {}
+            _ => return Err(format!("line {lno}: label value must be quoted")),
+        }
+        // value with escapes
+        let mut value = String::new();
+        let mut closed = false;
+        while let Some((_, c)) = chars.next() {
+            match c {
+                '"' => {
+                    closed = true;
+                    break;
+                }
+                '\\' => match chars.next() {
+                    Some((_, '\\')) => value.push('\\'),
+                    Some((_, '"')) => value.push('"'),
+                    Some((_, 'n')) => value.push('\n'),
+                    other => {
+                        return Err(format!(
+                            "line {lno}: bad escape {:?} in label value",
+                            other.map(|(_, c)| c)
+                        ))
+                    }
+                },
+                '\n' => return Err(format!("line {lno}: raw newline in label value")),
+                c => value.push(c),
+            }
+        }
+        if !closed {
+            return Err(format!("line {lno}: unterminated label value"));
+        }
+        labels.push((name.to_string(), value));
+        // separator: ',' or '}'
+        match chars.peek() {
+            Some(&(_, ',')) => {
+                chars.next();
+            }
+            Some(&(_, '}')) => {}
+            _ => return Err(format!("line {lno}: expected ',' or '}}' after label")),
+        }
+    }
+}
+
+fn parse_value(s: &str, lno: usize) -> Result<f64, String> {
+    match s {
+        "+Inf" => return Ok(f64::INFINITY),
+        "-Inf" => return Ok(f64::NEG_INFINITY),
+        "NaN" => return Ok(f64::NAN),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map_err(|_| format!("line {lno}: invalid sample value {s:?}"))
+}
+
+/// Strictly parse Prometheus text exposition format v0.0.4 as this
+/// crate emits it. Enforces: final newline; `# HELP`/`# TYPE` at most
+/// once per family, TYPE before any of its samples; known TYPE values;
+/// valid metric/label names; quoted+escaped label values; no
+/// timestamps; every sample belongs to a declared family (`_sum`/
+/// `_count` suffixes only on summary/histogram families, `quantile`
+/// labels in [0,1], counter values finite and non-negative); no
+/// duplicate sample (name + label set).
+pub fn parse_text(text: &str) -> Result<Vec<ParsedFamily>, String> {
+    if text.is_empty() {
+        return Ok(Vec::new());
+    }
+    if !text.ends_with('\n') {
+        return Err("exposition must end with a newline".to_string());
+    }
+    let mut families: Vec<ParsedFamily> = Vec::new();
+    let mut seen: Vec<(String, Vec<(String, String)>)> = Vec::new();
+
+    for (idx, line) in text.lines().enumerate() {
+        let lno = idx + 1;
+        if line.is_empty() {
+            return Err(format!("line {lno}: empty line"));
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let (tag, rest) = match rest.split_once(' ') {
+                Some(parts) => parts,
+                None => return Err(format!("line {lno}: malformed comment line")),
+            };
+            let (name, payload) = match rest.split_once(' ') {
+                Some((n, p)) => (n, Some(p)),
+                None => (rest, None),
+            };
+            if !valid_name(name) {
+                return Err(format!("line {lno}: invalid metric name {name:?}"));
+            }
+            match tag {
+                "HELP" => {
+                    if families.iter().any(|f| f.name == name) {
+                        return Err(format!(
+                            "line {lno}: HELP for {name} after TYPE or duplicate"
+                        ));
+                    }
+                    families.push(ParsedFamily {
+                        name: name.to_string(),
+                        kind: String::new(),
+                        help: Some(payload.unwrap_or("").to_string()),
+                        samples: Vec::new(),
+                    });
+                }
+                "TYPE" => {
+                    let kind = payload
+                        .ok_or_else(|| format!("line {lno}: TYPE without a value"))?;
+                    if !matches!(kind, "counter" | "gauge" | "summary" | "histogram" | "untyped")
+                    {
+                        return Err(format!("line {lno}: unknown TYPE {kind:?}"));
+                    }
+                    if let Some(f) = families.iter_mut().find(|f| f.name == name) {
+                        if !f.kind.is_empty() {
+                            return Err(format!("line {lno}: duplicate TYPE for {name}"));
+                        }
+                        if !f.samples.is_empty() {
+                            return Err(format!("line {lno}: TYPE for {name} after samples"));
+                        }
+                        f.kind = kind.to_string();
+                    } else {
+                        families.push(ParsedFamily {
+                            name: name.to_string(),
+                            kind: kind.to_string(),
+                            help: None,
+                            samples: Vec::new(),
+                        });
+                    }
+                }
+                other => return Err(format!("line {lno}: unknown comment tag {other:?}")),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(format!("line {lno}: bare comment lines are not emitted"));
+        }
+
+        // sample line: name[{labels}] value
+        let name_end = line
+            .char_indices()
+            .find(|(_, c)| !is_name_char(*c))
+            .map(|(i, _)| i)
+            .unwrap_or(line.len());
+        let name = &line[..name_end];
+        if !valid_name(name) {
+            return Err(format!("line {lno}: invalid sample name {name:?}"));
+        }
+        let rest = &line[name_end..];
+        let (labels, rest) = if rest.starts_with('{') {
+            parse_labels(rest, lno)?
+        } else {
+            (Vec::new(), rest)
+        };
+        let rest = rest
+            .strip_prefix(' ')
+            .ok_or_else(|| format!("line {lno}: expected single space before value"))?;
+        if rest.contains(' ') {
+            return Err(format!(
+                "line {lno}: timestamps / trailing fields are not emitted"
+            ));
+        }
+        let value = parse_value(rest, lno)?;
+
+        // resolve the owning family
+        let owner = families
+            .iter_mut()
+            .rev()
+            .find(|f| {
+                name == f.name
+                    || ((name == format!("{}_sum", f.name) || name == format!("{}_count", f.name))
+                        && matches!(f.kind.as_str(), "summary" | "histogram"))
+            })
+            .ok_or_else(|| format!("line {lno}: sample {name} has no declared family"))?;
+        if owner.kind.is_empty() {
+            return Err(format!("line {lno}: sample {name} before its TYPE line"));
+        }
+        match owner.kind.as_str() {
+            "counter" => {
+                if !(value.is_finite() && value >= 0.0) {
+                    return Err(format!("line {lno}: counter value must be finite and >= 0"));
+                }
+                if labels.iter().any(|(k, _)| k == "quantile") {
+                    return Err(format!("line {lno}: counter with quantile label"));
+                }
+            }
+            "summary" => {
+                if name == owner.name {
+                    let q = labels
+                        .iter()
+                        .find(|(k, _)| k == "quantile")
+                        .ok_or_else(|| {
+                            format!("line {lno}: summary sample without quantile label")
+                        })?;
+                    let qv = q.1.parse::<f64>().map_err(|_| {
+                        format!("line {lno}: quantile {:?} is not a number", q.1)
+                    })?;
+                    if !(0.0..=1.0).contains(&qv) {
+                        return Err(format!("line {lno}: quantile {qv} outside [0, 1]"));
+                    }
+                } else if name.ends_with("_count") && !(value.is_finite() && value >= 0.0) {
+                    return Err(format!("line {lno}: _count must be finite and >= 0"));
+                }
+            }
+            _ => {}
+        }
+        let key = (name.to_string(), {
+            let mut l = labels.clone();
+            l.sort();
+            l
+        });
+        if seen.contains(&key) {
+            return Err(format!("line {lno}: duplicate sample {name} {labels:?}"));
+        }
+        seen.push(key);
+        owner.samples.push(ParsedSample {
+            name: name.to_string(),
+            labels,
+            value,
+        });
+    }
+
+    for f in &families {
+        if f.kind.is_empty() {
+            return Err(format!("family {} has HELP but no TYPE", f.name));
+        }
+    }
+    Ok(families)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    fn demo_registry() -> Registry {
+        let r = Registry::new(true);
+        let c = r.register_counter_family("leanvec_test_queries_total", "Queries answered.", "collection");
+        c.with("default").add(42);
+        c.with("tenant\"x\\y").inc();
+        let g = r.register_gauge("leanvec_test_tombstone_ratio", "Live tombstone fraction.");
+        g.set(0.125);
+        let h = r.register_histogram("leanvec_test_e2e_seconds", "End-to-end latency.", 1e-9);
+        for i in 1..=1000u64 {
+            h.record(i * 1_000); // 1..=1000 µs
+        }
+        r
+    }
+
+    #[test]
+    fn text_round_trips_through_parser() {
+        let r = demo_registry();
+        let text = render_text(&r.snapshot());
+        let families = parse_text(&text).expect("round trip");
+        assert_eq!(families.len(), 3);
+        let q = &families[0];
+        assert_eq!(q.name, "leanvec_test_queries_total");
+        assert_eq!(q.kind, "counter");
+        assert_eq!(q.help.as_deref(), Some("Queries answered."));
+        assert_eq!(q.samples.len(), 2);
+        assert_eq!(q.samples[0].labels[0].1, "default");
+        assert_eq!(q.samples[0].value, 42.0);
+        // escaped label value survives the round trip
+        assert_eq!(q.samples[1].labels[0].1, "tenant\"x\\y");
+        let h = &families[2];
+        assert_eq!(h.kind, "summary");
+        // 4 quantiles + sum + count
+        assert_eq!(h.samples.len(), 6);
+        let p50 = h
+            .samples
+            .iter()
+            .find(|s| s.labels.iter().any(|(k, v)| k == "quantile" && v == "0.5"))
+            .expect("p50 present");
+        assert!((p50.value - 0.0005).abs() / 0.0005 < 0.05, "p50={}", p50.value);
+        let count = h
+            .samples
+            .iter()
+            .find(|s| s.name.ends_with("_count"))
+            .expect("count present");
+        assert_eq!(count.value, 1000.0);
+    }
+
+    #[test]
+    fn json_exposition_carries_quantiles() {
+        let r = demo_registry();
+        let json = render_json(&r.snapshot());
+        let fams = json.get("families").and_then(|f| f.as_arr()).expect("families");
+        assert_eq!(fams.len(), 3);
+        let hist = &fams[2];
+        let sample = hist
+            .get("samples")
+            .and_then(|s| s.as_arr())
+            .and_then(|s| s.first())
+            .expect("sample");
+        assert_eq!(sample.get("count").and_then(|c| c.as_f64()), Some(1000.0));
+        assert!(sample.get("p999").and_then(|p| p.as_f64()).expect("p999") > 0.0);
+        assert!(!sample
+            .get("buckets")
+            .and_then(|b| b.as_arr())
+            .expect("buckets")
+            .is_empty());
+    }
+
+    #[test]
+    fn parser_rejects_malformed_input() {
+        // no trailing newline
+        assert!(parse_text("# TYPE a counter\na 1").is_err());
+        // sample with no declared family
+        assert!(parse_text("a 1\n").is_err());
+        // sample before TYPE
+        assert!(parse_text("# HELP a h\na 1\n# TYPE a counter\n").is_err());
+        // unknown type
+        assert!(parse_text("# TYPE a widget\na 1\n").is_err());
+        // duplicate TYPE
+        assert!(parse_text("# TYPE a counter\n# TYPE a counter\na 1\n").is_err());
+        // negative counter
+        assert!(parse_text("# TYPE a counter\na -1\n").is_err());
+        // timestamp / trailing field
+        assert!(parse_text("# TYPE a counter\na 1 123456\n").is_err());
+        // bad label syntax
+        assert!(parse_text("# TYPE a counter\na{x=1} 1\n").is_err());
+        // unterminated label value
+        assert!(parse_text("# TYPE a counter\na{x=\"y} 1\n").is_err());
+        // duplicate sample
+        assert!(parse_text("# TYPE a counter\na 1\na 1\n").is_err());
+        // quantile outside [0,1]
+        assert!(parse_text("# TYPE s summary\ns{quantile=\"1.5\"} 1\n").is_err());
+        // summary sample missing quantile
+        assert!(parse_text("# TYPE s summary\ns 1\n").is_err());
+        // _sum on a counter family
+        assert!(parse_text("# TYPE a counter\na_sum 1\n").is_err());
+        // HELP without TYPE
+        assert!(parse_text("# HELP a h\n").is_err());
+        // bad metric name
+        assert!(parse_text("# TYPE 9a counter\n9a 1\n").is_err());
+        // empty line
+        assert!(parse_text("# TYPE a counter\n\na 1\n").is_err());
+    }
+
+    #[test]
+    fn parser_accepts_edge_values() {
+        let ok = parse_text("# TYPE g gauge\ng{s=\"0\"} +Inf\ng NaN\ng{s=\"1\"} -0.5\n")
+            .expect("gauges accept any float");
+        assert_eq!(ok[0].samples.len(), 3);
+        assert!(ok[0].samples[0].value.is_infinite());
+        assert!(ok[0].samples[1].value.is_nan());
+    }
+
+    #[test]
+    fn empty_input_parses_to_nothing() {
+        assert!(parse_text("").expect("empty ok").is_empty());
+    }
+}

@@ -1,0 +1,334 @@
+//! The slow-query flight recorder: a fixed-size ring that keeps the
+//! slowest queries seen so far (plus a small round-robin sample of
+//! ordinary ones) with their full per-stage breakdown, so "why was
+//! that query slow?" is answerable after the fact without tracing.
+//!
+//! Capture is non-blocking: every slot pairs an atomic latency tag
+//! with a `try_lock`-only mutex, so a worker thread never waits — if
+//! two workers race for the same victim slot, one record is dropped
+//! (latency observations still land in the histograms; the recorder is
+//! a forensic sample, not an accounting source). Deciding *whether* to
+//! capture costs one atomic scan of the ring; building the record (a
+//! few small allocations) happens only for queries that qualify.
+
+use crate::index::leanvec_index::SearchParams;
+use crate::index::query::QueryStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Why a record was kept.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CaptureKind {
+    /// Among the slowest queries seen so far.
+    Slow,
+    /// Periodic sample of ordinary traffic (every Nth query).
+    Sampled,
+}
+
+/// Everything the worker knew about one recorded query.
+#[derive(Clone, Debug)]
+pub struct FlightRecord {
+    /// Request id from the serving protocol.
+    pub id: u64,
+    pub collection: String,
+    pub kind: CaptureKind,
+    /// End-to-end latency (submit -> response), seconds.
+    pub e2e_seconds: f64,
+    /// Time spent waiting in the batcher queue.
+    pub queue_seconds: f64,
+    /// This request's share of its batch's projection matmul.
+    pub project_seconds: f64,
+    /// Worker-side search (scatter + merge + rerank), seconds.
+    pub search_seconds: f64,
+    /// Merge step of the scatter-gather, seconds (0 for single shard).
+    pub merge_seconds: f64,
+    /// Per-shard scatter latency, indexed by shard (empty when the
+    /// index is unsharded or telemetry timing was off).
+    pub shard_seconds: Vec<f64>,
+    /// Traversal accounting from the search itself.
+    pub stats: QueryStats,
+    /// The resolved (post-default) search knobs this query ran with.
+    pub params: SearchParams,
+    pub k: usize,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+impl std::fmt::Display for FlightRecord {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "req {} [{}] {:?} e2e {:.3}ms = queue {:.3} + project {:.3} + search {:.3} \
+             (merge {:.3}) ms | window {} rerank {} k {} batch {} | hops {} bytes {}",
+            self.id,
+            self.collection,
+            self.kind,
+            self.e2e_seconds * 1e3,
+            self.queue_seconds * 1e3,
+            self.project_seconds * 1e3,
+            self.search_seconds * 1e3,
+            self.merge_seconds * 1e3,
+            self.params.window,
+            self.params.rerank_window,
+            self.k,
+            self.batch_size,
+            self.stats.hops,
+            self.stats.bytes_touched,
+        )?;
+        if !self.shard_seconds.is_empty() {
+            let per: Vec<String> = self
+                .shard_seconds
+                .iter()
+                .map(|s| format!("{:.3}", s * 1e3))
+                .collect();
+            write!(f, " | shards ms [{}]", per.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+struct Slot {
+    /// Latency tag of the record held (nanos; 0 = empty). Read without
+    /// the lock to pick a victim cheaply.
+    e2e_nanos: AtomicU64,
+    data: Mutex<Option<FlightRecord>>,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            e2e_nanos: AtomicU64::new(0),
+            data: Mutex::new(None),
+        }
+    }
+}
+
+/// Default capacity of the slowest-queries ring.
+pub const DEFAULT_SLOW_SLOTS: usize = 48;
+/// Default capacity of the periodic-sample ring.
+pub const DEFAULT_SAMPLED_SLOTS: usize = 16;
+/// Default sampling period (every Nth query lands in the sample ring).
+pub const DEFAULT_SAMPLE_EVERY: u64 = 256;
+
+/// The recorder itself; one per [`Engine`].
+///
+/// [`Engine`]: crate::coordinator::Engine
+pub struct FlightRecorder {
+    slow: Vec<Slot>,
+    sampled: Vec<Slot>,
+    seq: AtomicU64,
+    sample_every: u64,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new(
+            DEFAULT_SLOW_SLOTS,
+            DEFAULT_SAMPLED_SLOTS,
+            DEFAULT_SAMPLE_EVERY,
+        )
+    }
+}
+
+impl FlightRecorder {
+    pub fn new(slow_slots: usize, sampled_slots: usize, sample_every: u64) -> FlightRecorder {
+        FlightRecorder {
+            slow: (0..slow_slots.max(1)).map(|_| Slot::new()).collect(),
+            sampled: (0..sampled_slots).map(|_| Slot::new()).collect(),
+            seq: AtomicU64::new(0),
+            sample_every,
+        }
+    }
+
+    /// Offer one finished query. `build` runs only when the query
+    /// qualifies for the slow ring (slower than the current fastest
+    /// kept record, or the ring has room) or for the periodic sample.
+    pub fn capture_with<F: FnOnce() -> FlightRecord>(&self, e2e_seconds: f64, build: F) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        // tag 0 means "empty", so clamp real latencies to >= 1ns
+        let nanos = if e2e_seconds.is_finite() && e2e_seconds > 0.0 {
+            ((e2e_seconds * 1e9) as u64).max(1)
+        } else {
+            1
+        };
+        // ORDERING: Relaxed — sequence number only drives sampling
+        // cadence; no memory is published through it.
+        let n = self.seq.fetch_add(1, Ordering::Relaxed);
+        let sample_due =
+            !self.sampled.is_empty() && self.sample_every > 0 && n % self.sample_every == 0;
+
+        // cheapest-victim scan of the slow ring
+        let mut victim = 0usize;
+        let mut victim_nanos = u64::MAX;
+        for (i, slot) in self.slow.iter().enumerate() {
+            // ORDERING: Relaxed — advisory victim pick; the slot lock
+            // re-checks before replacing.
+            let v = slot.e2e_nanos.load(Ordering::Relaxed);
+            if v < victim_nanos {
+                victim_nanos = v;
+                victim = i;
+            }
+        }
+        let slow_due = nanos > victim_nanos;
+        if !slow_due && !sample_due {
+            return;
+        }
+
+        let mut record = build();
+        if slow_due {
+            record.kind = CaptureKind::Slow;
+            if let Ok(mut guard) = self.slow[victim].data.try_lock() {
+                // re-check under the lock: a racing writer may have
+                // installed something slower in this slot already
+                // ORDERING: Relaxed — tag re-read; lock owns the data.
+                if nanos > self.slow[victim].e2e_nanos.load(Ordering::Relaxed) {
+                    *guard = Some(record.clone());
+                    // ORDERING: Relaxed — tag write while holding the
+                    // slot lock; readers treat it as advisory only.
+                    self.slow[victim].e2e_nanos.store(nanos, Ordering::Relaxed);
+                }
+            }
+            // contended or out-raced: drop the record, by design
+        }
+        if sample_due {
+            record.kind = CaptureKind::Sampled;
+            let idx = ((n / self.sample_every.max(1)) % self.sampled.len() as u64) as usize;
+            if let Ok(mut guard) = self.sampled[idx].data.try_lock() {
+                *guard = Some(record);
+                // ORDERING: Relaxed — advisory tag, see above.
+                self.sampled[idx].e2e_nanos.store(nanos, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Every record currently held, slowest first (sampled records
+    /// follow their latency order like any other).
+    pub fn records(&self) -> Vec<FlightRecord> {
+        let mut out = Vec::new();
+        for slot in self.slow.iter().chain(self.sampled.iter()) {
+            if let Ok(guard) = slot.data.try_lock() {
+                if let Some(r) = guard.as_ref() {
+                    out.push(r.clone());
+                }
+            }
+        }
+        out.sort_by(|a, b| b.e2e_seconds.total_cmp(&a.e2e_seconds));
+        out
+    }
+
+    /// Total queries offered to the recorder.
+    pub fn seen(&self) -> u64 {
+        // ORDERING: Relaxed — reporting only.
+        self.seq.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, e2e: f64) -> FlightRecord {
+        FlightRecord {
+            id,
+            collection: "default".to_string(),
+            kind: CaptureKind::Slow,
+            e2e_seconds: e2e,
+            queue_seconds: 0.0,
+            project_seconds: 0.0,
+            search_seconds: e2e,
+            merge_seconds: 0.0,
+            shard_seconds: Vec::new(),
+            stats: QueryStats::default(),
+            params: SearchParams::default(),
+            k: 10,
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn keeps_the_slowest() {
+        crate::obs::set_enabled(true);
+        let fr = FlightRecorder::new(4, 0, 0);
+        for i in 0..100u64 {
+            let e2e = (i + 1) as f64 * 1e-4;
+            fr.capture_with(e2e, || rec(i, e2e));
+        }
+        let records = fr.records();
+        assert_eq!(records.len(), 4);
+        let ids: Vec<u64> = records.iter().map(|r| r.id).collect();
+        assert_eq!(ids, [99, 98, 97, 96], "slowest four, slowest first");
+    }
+
+    #[test]
+    fn sampling_captures_ordinary_queries() {
+        crate::obs::set_enabled(true);
+        let fr = FlightRecorder::new(2, 4, 10);
+        // all queries identical latency: never "slow" after the ring
+        // fills, but every 10th lands in the sample ring
+        for i in 0..100u64 {
+            fr.capture_with(1e-3, || rec(i, 1e-3));
+        }
+        let sampled: Vec<u64> = fr
+            .records()
+            .iter()
+            .filter(|r| r.kind == CaptureKind::Sampled)
+            .map(|r| r.id)
+            .collect();
+        assert!(!sampled.is_empty());
+        for id in &sampled {
+            assert_eq!(id % 10, 0, "only every 10th query is sampled");
+        }
+        assert_eq!(fr.seen(), 100);
+    }
+
+    #[test]
+    fn build_skipped_for_boring_queries() {
+        crate::obs::set_enabled(true);
+        let fr = FlightRecorder::new(2, 0, 0);
+        fr.capture_with(1.0, || rec(0, 1.0));
+        fr.capture_with(0.9, || rec(1, 0.9));
+        let mut built = false;
+        // ring holds 1.0 and 0.9; a 0.5s query is not slow enough
+        fr.capture_with(0.5, || {
+            built = true;
+            rec(2, 0.5)
+        });
+        assert!(!built, "builder must not run for non-qualifying queries");
+        assert_eq!(fr.records().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_capture_soak() {
+        crate::obs::set_enabled(true);
+        let fr = FlightRecorder::new(8, 4, 32);
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let fr = &fr;
+                s.spawn(move || {
+                    for i in 0..5_000u64 {
+                        let e2e = ((t * 5_000 + i) % 997 + 1) as f64 * 1e-6;
+                        fr.capture_with(e2e, || rec(i, e2e));
+                    }
+                });
+            }
+        });
+        let records = fr.records();
+        assert!(!records.is_empty());
+        // slow-ring records are all near the top of the latency range
+        for r in records.iter().filter(|r| r.kind == CaptureKind::Slow) {
+            assert!(r.e2e_seconds > 900e-6, "kept {}s", r.e2e_seconds);
+        }
+        assert_eq!(fr.seen(), 20_000);
+    }
+
+    #[test]
+    fn display_is_compact_and_total() {
+        let mut r = rec(7, 0.0123);
+        r.shard_seconds = vec![0.001, 0.002];
+        let s = format!("{r}");
+        assert!(s.contains("req 7"));
+        assert!(s.contains("shards ms"));
+    }
+}

@@ -1,0 +1,334 @@
+//! Fixed-bucket log-linear histograms (HDR-style): `record()` is a
+//! single relaxed `fetch_add` into a pre-sized atomic bucket array —
+//! allocation-free, lock-free, wait-free on the hot path.
+//!
+//! Bucket layout: values below [`SUBBUCKETS`] land in exact unit-wide
+//! buckets; above that, each power-of-two octave is split into
+//! [`SUBBUCKETS`] equal sub-buckets, so the worst-case relative
+//! quantization error is bounded by `1 / SUBBUCKETS` (3.125% at 32),
+//! and in practice ~1.6% because quantiles report bucket midpoints.
+//! The full `u64` range is trackable — no clamping, no saturation.
+//!
+//! Values are recorded as raw `u64`s (nanoseconds for time series,
+//! plain counts/bytes for size series); a per-histogram `scale` is
+//! applied only at snapshot/exposition time so the hot path never
+//! touches floating point.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-bucket resolution: 2^5 = 32 sub-buckets per octave.
+pub const SUB_BITS: u32 = 5;
+/// Sub-buckets per octave (and width of the exact linear region).
+pub const SUBBUCKETS: usize = 1 << SUB_BITS;
+/// Octaves above the linear region needed to span all of `u64`.
+const OCTAVES: usize = 64 - SUB_BITS as usize;
+/// Total bucket count (linear region + every octave).
+pub const N_BUCKETS: usize = (OCTAVES + 1) * SUBBUCKETS;
+
+/// Map a value to its bucket index. Total and monotone over `u64`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUBBUCKETS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS here
+    let octave = (msb - SUB_BITS) as usize;
+    let offset = ((v >> (msb - SUB_BITS)) - SUBBUCKETS as u64) as usize;
+    (octave + 1) * SUBBUCKETS + offset
+}
+
+/// Inclusive lower bound of bucket `idx`'s value range.
+pub fn bucket_lower(idx: usize) -> u64 {
+    if idx < SUBBUCKETS {
+        return idx as u64;
+    }
+    let octave = idx / SUBBUCKETS - 1;
+    let offset = (idx % SUBBUCKETS) as u64;
+    (SUBBUCKETS as u64 + offset) << octave
+}
+
+/// Width (number of distinct values) of bucket `idx`.
+pub fn bucket_width(idx: usize) -> u64 {
+    if idx < SUBBUCKETS {
+        1
+    } else {
+        1u64 << (idx / SUBBUCKETS - 1)
+    }
+}
+
+/// Representative value reported for bucket `idx` (its midpoint; exact
+/// for the unit-wide linear region).
+pub fn bucket_mid(idx: usize) -> f64 {
+    bucket_lower(idx) as f64 + (bucket_width(idx) - 1) as f64 / 2.0
+}
+
+/// The shared atomic core of one histogram. Handles (`obs::Histogram`)
+/// wrap this in an `Arc`; detached cores back the post-hoc metrics
+/// aggregation so live and offline reporting share one quantile path.
+pub struct HistCore {
+    counts: Vec<AtomicU64>,
+    /// Sum of raw recorded values (wraps after ~584 years of nanos).
+    sum: AtomicU64,
+    count: AtomicU64,
+    /// Multiplier raw -> exposed units (1e-9 for nanos -> seconds).
+    scale: f64,
+}
+
+impl HistCore {
+    pub fn new(scale: f64) -> HistCore {
+        let mut counts = Vec::with_capacity(N_BUCKETS);
+        for _ in 0..N_BUCKETS {
+            counts.push(AtomicU64::new(0));
+        }
+        HistCore {
+            counts,
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            scale,
+        }
+    }
+
+    /// Record one raw observation. Allocation-free; three relaxed RMWs.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        // ORDERING: Relaxed — independent statistical counters; readers
+        // only ever see a slightly stale snapshot, never torn values.
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        // ORDERING: Relaxed — as above; sum/count may momentarily
+        // disagree with the buckets, which snapshotting tolerates.
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        // ORDERING: Relaxed — as above.
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Copy the current counts out. Concurrent `record()`s may land in
+    /// buckets after their sum/count increment (or vice versa); the
+    /// snapshot normalizes by recomputing count from the buckets.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            // ORDERING: Relaxed — statistical snapshot; tearing across
+            // buckets only misplaces in-flight observations.
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let count = counts.iter().sum();
+        HistSnapshot {
+            counts,
+            // ORDERING: Relaxed — reporting only.
+            sum: self.sum.load(Ordering::Relaxed),
+            count,
+            scale: self.scale,
+        }
+    }
+}
+
+/// An owned point-in-time copy of a histogram, mergeable and queryable.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    sum: u64,
+    count: u64,
+    scale: f64,
+}
+
+impl HistSnapshot {
+    pub fn empty(scale: f64) -> HistSnapshot {
+        HistSnapshot {
+            counts: vec![0; N_BUCKETS],
+            sum: 0,
+            count: 0,
+            scale,
+        }
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of observations in exposed units (`raw_sum * scale`).
+    pub fn sum(&self) -> f64 {
+        self.sum as f64 * self.scale
+    }
+
+    /// Mean in exposed units; 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum() / self.count as f64
+        }
+    }
+
+    /// Fold another snapshot's buckets into this one (exposition-side
+    /// aggregation across labeled children). Scales must match.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.sum = self.sum.wrapping_add(other.sum);
+        self.count = self.count.saturating_add(other.count);
+    }
+
+    /// Quantile `q` in [0, 1], in exposed units (bucket midpoint of the
+    /// observation at ceil(q * count); 0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let rank = target.clamp(1, self.count);
+        let mut acc = 0u64;
+        let mut last_nonempty = 0usize;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            acc += c;
+            last_nonempty = i;
+            if acc >= rank {
+                return bucket_mid(i) * self.scale;
+            }
+        }
+        bucket_mid(last_nonempty) * self.scale
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Non-empty buckets as `(lower_bound_scaled, count)`, low to high
+    /// (the JSON exposition emits these; text exposition uses
+    /// quantiles).
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (bucket_lower(i) as f64 * self.scale, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_region_is_exact() {
+        for v in 0..SUBBUCKETS as u64 {
+            let idx = bucket_index(v);
+            assert_eq!(idx, v as usize);
+            assert_eq!(bucket_lower(idx), v);
+            assert_eq!(bucket_width(idx), 1);
+            assert_eq!(bucket_mid(idx), v as f64);
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_total() {
+        let mut prev = 0usize;
+        let mut v = 0u64;
+        while v < u64::MAX / 2 {
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "monotonicity broke at {v}");
+            assert!(idx < N_BUCKETS);
+            let lo = bucket_lower(idx);
+            let w = bucket_width(idx);
+            assert!(lo <= v && v - lo < w, "v={v} idx={idx} lo={lo} w={w}");
+            prev = idx;
+            v = v * 2 + 1;
+        }
+        assert!(bucket_index(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn octave_boundaries_round_trip() {
+        for msb in SUB_BITS..63 {
+            for v in [1u64 << msb, (1u64 << msb) + 1, (1u64 << (msb + 1)) - 1] {
+                let idx = bucket_index(v);
+                let lo = bucket_lower(idx);
+                let w = bucket_width(idx);
+                assert!(lo <= v && v < lo + w, "v={v} lo={lo} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bound_holds() {
+        // every value maps to a bucket whose midpoint is within
+        // 1/SUBBUCKETS of the value
+        let mut v = SUBBUCKETS as u64;
+        while v < 1 << 50 {
+            for probe in [v, v + v / 3, v * 2 - 1] {
+                let mid = bucket_mid(bucket_index(probe));
+                let rel = (mid - probe as f64).abs() / probe as f64;
+                assert!(rel <= 1.0 / SUBBUCKETS as f64, "v={probe} rel={rel}");
+            }
+            v *= 2;
+        }
+    }
+
+    #[test]
+    fn quantiles_of_known_sample() {
+        let h = HistCore::new(1.0);
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 100);
+        // values <= 31 are exact; 50 lands in [48,50) bucket mid 48.5..
+        let p50 = s.quantile(0.5);
+        assert!((p50 - 50.0).abs() / 50.0 < 0.05, "p50={p50}");
+        let p99 = s.quantile(0.99);
+        assert!((p99 - 99.0).abs() / 99.0 < 0.05, "p99={p99}");
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroes() {
+        let s = HistCore::new(1e-9).snapshot();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.sum(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let a = HistCore::new(1.0);
+        let b = HistCore::new(1.0);
+        for v in 0..50u64 {
+            a.record(v);
+            b.record(v + 50);
+        }
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count(), 100);
+        let p50 = s.quantile(0.5);
+        assert!((p50 - 49.0).abs() / 49.0 < 0.07, "p50={p50}");
+    }
+
+    #[test]
+    fn scale_applies_to_outputs() {
+        let h = HistCore::new(1e-9);
+        h.record(1_000_000); // 1ms in nanos
+        let s = h.snapshot();
+        let p50 = s.quantile(0.5);
+        assert!((p50 - 1e-3).abs() / 1e-3 < 0.05, "p50={p50}");
+        assert!((s.sum() - 1e-3).abs() < 1e-12);
+    }
+}

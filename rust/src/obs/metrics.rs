@@ -1,0 +1,241 @@
+//! The crate's metric catalog: every series the serving stack records,
+//! registered once into the process registry and reachable as static
+//! handles via [`handles()`]. Names follow the
+//! `leanvec_<subsystem>_<name>_<unit>` convention, enforced by the
+//! `obs-metric-name` lint rule (units: `total`, `seconds`, `bytes`,
+//! `ratio`, `count`, `info`) — see docs/OBSERVABILITY.md for the
+//! catalog with semantics.
+
+use super::registry::{
+    registry, Counter, CounterFamily, Gauge, Histogram, HistogramFamily, Registry,
+};
+
+/// Scale for histograms recorded in nanoseconds, exposed in seconds.
+pub const NANOS: f64 = 1e-9;
+
+/// Every static metric handle the crate records through.
+pub struct Handles {
+    // -- engine / coordinator (labeled by collection) ------------------
+    /// Queries answered, per collection.
+    pub engine_queries: CounterFamily,
+    /// Requests rejected at admission (quota / unknown collection).
+    pub engine_rejected: CounterFamily,
+    /// End-to-end latency (submit -> response), per collection.
+    pub engine_e2e: HistogramFamily,
+    /// Worker-side search time (scatter + merge + rerank), per
+    /// collection.
+    pub engine_search: HistogramFamily,
+    /// Engine uptime, set at exposition time.
+    pub engine_uptime: Gauge,
+
+    // -- batcher -------------------------------------------------------
+    /// Time each request waited in the batcher queue.
+    pub batcher_queue_wait: Histogram,
+    /// Formed batch sizes.
+    pub batcher_batch_size: Histogram,
+    /// Per-group query projection (matmul / PJRT) time.
+    pub batcher_project: Histogram,
+
+    // -- shard scatter-gather (labeled by shard index) -----------------
+    /// Per-shard scatter search latency.
+    pub shard_scatter: HistogramFamily,
+    /// Top-k merge time across shards.
+    pub shard_merge: Histogram,
+
+    // -- index stage timers (unlabeled; inside one shard's search) -----
+    /// Primary graph/scan traversal time.
+    pub index_traversal: Histogram,
+    /// Secondary-store rerank time.
+    pub index_rerank: Histogram,
+
+    // -- per-query traversal accounting (labeled by collection) --------
+    /// Graph hops per query.
+    pub query_hops: HistogramFamily,
+    /// Bytes of vector data read per query.
+    pub query_touched: HistogramFamily,
+    /// Tombstoned ids routed through (never returned), total.
+    pub query_deleted_skipped: CounterFamily,
+    /// Ids excluded by filter predicates, total.
+    pub query_filtered: CounterFamily,
+
+    // -- ingest lane ---------------------------------------------------
+    pub ingest_inserts: Counter,
+    pub ingest_deletes: Counter,
+    pub ingest_errors: Counter,
+    pub ingest_consolidations: Counter,
+    /// Wall time of each consolidation pass.
+    pub ingest_consolidate: Histogram,
+    /// Worst live-shard tombstone fraction, updated after mutations.
+    pub ingest_tombstone: Gauge,
+
+    // -- mmap health ---------------------------------------------------
+    /// Misaligned mapped sections that fell back to owned copies.
+    pub mmap_fallbacks: Counter,
+    /// `evict_mapped` calls (page-cache DONTNEED advisories).
+    pub mmap_evictions: Counter,
+}
+
+impl Handles {
+    fn register(r: &Registry) -> Handles {
+        Handles {
+            engine_queries: r.register_counter_family(
+                "leanvec_engine_queries_total",
+                "Queries answered, per collection.",
+                "collection",
+            ),
+            engine_rejected: r.register_counter_family(
+                "leanvec_engine_rejected_total",
+                "Requests rejected at admission (quota or unknown collection).",
+                "collection",
+            ),
+            engine_e2e: r.register_histogram_family(
+                "leanvec_engine_e2e_seconds",
+                "End-to-end request latency: submit to response.",
+                "collection",
+                NANOS,
+            ),
+            engine_search: r.register_histogram_family(
+                "leanvec_engine_search_seconds",
+                "Worker-side search time: scatter, merge and rerank.",
+                "collection",
+                NANOS,
+            ),
+            engine_uptime: r.register_gauge(
+                "leanvec_engine_uptime_seconds",
+                "Engine uptime, set at exposition time.",
+            ),
+            batcher_queue_wait: r.register_histogram(
+                "leanvec_batcher_queue_wait_seconds",
+                "Time requests spent waiting in the batcher queue.",
+                NANOS,
+            ),
+            batcher_batch_size: r.register_histogram(
+                "leanvec_batcher_batch_size_count",
+                "Formed batch sizes.",
+                1.0,
+            ),
+            batcher_project: r.register_histogram(
+                "leanvec_batcher_project_seconds",
+                "Per-group query projection (matmul / PJRT) time.",
+                NANOS,
+            ),
+            shard_scatter: r.register_histogram_family(
+                "leanvec_shard_scatter_seconds",
+                "Per-shard scatter search latency.",
+                "shard",
+                NANOS,
+            ),
+            shard_merge: r.register_histogram(
+                "leanvec_shard_merge_seconds",
+                "Top-k merge time across shard results.",
+                NANOS,
+            ),
+            index_traversal: r.register_histogram(
+                "leanvec_index_traversal_seconds",
+                "Primary traversal (graph beam search / scan) time.",
+                NANOS,
+            ),
+            index_rerank: r.register_histogram(
+                "leanvec_index_rerank_seconds",
+                "Secondary-store rerank time.",
+                NANOS,
+            ),
+            query_hops: r.register_histogram_family(
+                "leanvec_query_hops_count",
+                "Graph hops (nodes expanded) per query.",
+                "collection",
+                1.0,
+            ),
+            query_touched: r.register_histogram_family(
+                "leanvec_query_touched_bytes",
+                "Bytes of vector data read per query.",
+                "collection",
+                1.0,
+            ),
+            query_deleted_skipped: r.register_counter_family(
+                "leanvec_query_deleted_skipped_total",
+                "Tombstoned ids traversals routed through without returning.",
+                "collection",
+            ),
+            query_filtered: r.register_counter_family(
+                "leanvec_query_filtered_total",
+                "Ids excluded by query filter predicates.",
+                "collection",
+            ),
+            ingest_inserts: r.register_counter(
+                "leanvec_ingest_inserts_total",
+                "Insert mutations applied by the ingest lane.",
+            ),
+            ingest_deletes: r.register_counter(
+                "leanvec_ingest_deletes_total",
+                "Delete mutations applied by the ingest lane.",
+            ),
+            ingest_errors: r.register_counter(
+                "leanvec_ingest_errors_total",
+                "Mutations the ingest lane rejected (bad input, unknown id).",
+            ),
+            ingest_consolidations: r.register_counter(
+                "leanvec_ingest_consolidations_total",
+                "Consolidation passes triggered on the ingest lane.",
+            ),
+            ingest_consolidate: r.register_histogram(
+                "leanvec_ingest_consolidate_seconds",
+                "Wall time of each consolidation pass.",
+                NANOS,
+            ),
+            ingest_tombstone: r.register_gauge(
+                "leanvec_ingest_tombstone_ratio",
+                "Worst per-shard live tombstone fraction after mutations.",
+            ),
+            mmap_fallbacks: r.register_counter(
+                "leanvec_mmap_fallbacks_total",
+                "Mapped sections copied to owned memory due to misalignment.",
+            ),
+            mmap_evictions: r.register_counter(
+                "leanvec_mmap_evictions_total",
+                "evict_mapped calls advising the kernel to drop cached pages.",
+            ),
+        }
+    }
+}
+
+/// The process-wide handle set (registers on first use).
+pub fn handles() -> &'static Handles {
+    use std::sync::OnceLock;
+    static HANDLES: OnceLock<Handles> = OnceLock::new();
+    HANDLES.get_or_init(|| Handles::register(registry()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::metric_name_ok;
+
+    #[test]
+    fn every_catalog_name_follows_the_convention() {
+        // exercise handles() so the catalog is registered, then walk
+        // the registry: every leanvec_* family must pass the same
+        // validator the lint rule applies to obs/ source
+        let _ = handles();
+        let snap = registry().snapshot();
+        let mut seen = 0;
+        for fam in snap.iter().filter(|f| !f.name.contains("_test_")) {
+            assert!(
+                metric_name_ok(&fam.name),
+                "catalog name breaks convention: {}",
+                fam.name
+            );
+            seen += 1;
+        }
+        assert!(seen >= 20, "expected the full catalog, saw {seen}");
+    }
+
+    #[test]
+    fn handles_are_usable_and_shared() {
+        let h = handles();
+        let before = h.mmap_evictions.get();
+        h.mmap_evictions.inc();
+        // same static instance from a second call
+        assert!(handles().mmap_evictions.get() >= before + 1 || !registry().is_enabled());
+    }
+}

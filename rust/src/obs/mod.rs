@@ -1,0 +1,34 @@
+//! Live telemetry: a dependency-free, lock-free metrics layer plus a
+//! slow-query flight recorder, giving the serving stack eyes while it
+//! runs instead of only post-hoc summaries.
+//!
+//! - [`mod@registry`]: sharded atomic counters, gauges, and log-linear
+//!   histograms behind one process [`Registry`]; labeled families for
+//!   `{collection}` / `{shard}` with a hard cardinality cap.
+//! - [`hist`]: the HDR-style bucket math (allocation-free `record()`,
+//!   snapshot/merge, midpoint quantiles with a bounded relative error).
+//! - [`expo`]: Prometheus text exposition v0.0.4 + JSON rendering and
+//!   the strict text parser CI uses to validate every scrape.
+//! - [`flight`]: a fixed-size non-blocking ring of the slowest (and
+//!   periodically sampled) queries with per-stage breakdowns.
+//! - [`metrics`]: the static handle catalog every subsystem records
+//!   through (`obs::handles().engine_queries.with("default").inc()`).
+//!
+//! Set `LEANVEC_NO_TELEMETRY=1` to disable all recording; call sites
+//! that pay for extra `Instant::now()` reads guard on [`enabled()`]
+//! so the disabled path skips the clock reads too (the bench harness
+//! A/Bs this to bound telemetry overhead).
+
+pub mod expo;
+pub mod flight;
+pub mod hist;
+pub mod metrics;
+pub mod registry;
+
+pub use flight::{CaptureKind, FlightRecord, FlightRecorder};
+pub use hist::HistSnapshot;
+pub use metrics::{handles, Handles};
+pub use registry::{
+    enabled, registry, set_enabled, Counter, CounterFamily, FamilySnapshot, Gauge, GaugeFamily,
+    Histogram, HistogramFamily, Kind, Registry, ValueSnap, MAX_CHILDREN, OVERFLOW_LABEL,
+};

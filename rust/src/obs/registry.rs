@@ -1,0 +1,726 @@
+//! The process-wide metric [`Registry`]: registration is idempotent and
+//! mutex-guarded (startup only); the handles it returns — [`Counter`],
+//! [`Gauge`], [`Histogram`] — are cheap clones around shared atomics,
+//! and recording through them is lock-free. Labeled families
+//! ([`CounterFamily`], [`GaugeFamily`], [`HistogramFamily`]) resolve a
+//! `{label="value"}` child once (read-write lock, startup) into the
+//! same lock-free handle types; child cardinality is capped at
+//! [`MAX_CHILDREN`], beyond which every new label value collapses into
+//! a shared `"_overflow"` child so a label-cardinality bug can never
+//! OOM the registry.
+//!
+//! The whole layer is disabled by `LEANVEC_NO_TELEMETRY=1` (checked
+//! once at registry construction, overridable via [`set_enabled`] for
+//! A/B overhead benches): disabled handles no-op on a single relaxed
+//! boolean load.
+
+use super::hist::{HistCore, HistSnapshot};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError, RwLock};
+
+/// Stripes for sharded counters: spreads hot counters across cache
+/// lines so concurrent workers don't serialize on one `fetch_add`.
+const STRIPES: usize = 8;
+
+/// Per-family child cap; the next distinct label value after this maps
+/// to the shared `"_overflow"` child.
+pub const MAX_CHILDREN: usize = 32;
+
+/// Label value that absorbs children past [`MAX_CHILDREN`].
+pub const OVERFLOW_LABEL: &str = "_overflow";
+
+#[repr(align(64))]
+struct PaddedU64(AtomicU64);
+
+fn stripe_id() -> usize {
+    use std::cell::Cell;
+    static NEXT_STRIPE: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: Cell<usize> = Cell::new(usize::MAX);
+    }
+    STRIPE.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            // ORDERING: Relaxed — ticket dispenser assigning each thread
+            // a stripe; no ordering with any other memory required.
+            v = NEXT_STRIPE.fetch_add(1, Ordering::Relaxed) % STRIPES;
+            s.set(v);
+        }
+        v
+    })
+}
+
+/// Shared core of a sharded monotonic counter.
+pub struct CounterCore {
+    stripes: [PaddedU64; STRIPES],
+}
+
+impl CounterCore {
+    fn new() -> CounterCore {
+        CounterCore {
+            stripes: std::array::from_fn(|_| PaddedU64(AtomicU64::new(0))),
+        }
+    }
+
+    #[inline]
+    fn add(&self, n: u64) {
+        // ORDERING: Relaxed — monotonic stat counter; exposition sums
+        // the stripes and tolerates momentarily missing increments.
+        self.stripes[stripe_id()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    fn get(&self) -> u64 {
+        self.stripes
+            .iter()
+            // ORDERING: Relaxed — reporting-only read of each stripe.
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .fold(0u64, |a, b| a.wrapping_add(b))
+    }
+}
+
+/// Shared core of a gauge: an `f64` stored as bits so `set` stays a
+/// single atomic store.
+pub struct GaugeCore {
+    bits: AtomicU64,
+}
+
+impl GaugeCore {
+    fn new() -> GaugeCore {
+        GaugeCore {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    #[inline]
+    fn set(&self, v: f64) {
+        // ORDERING: Relaxed — last-writer-wins instantaneous reading;
+        // no other memory is published alongside it.
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn add(&self, delta: f64) {
+        // ORDERING: Relaxed — lone CAS loop over the gauge's own bits;
+        // statistical value, no cross-location ordering needed.
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + delta).to_bits();
+            // ORDERING: Relaxed — see above; retry supplies the fresh value.
+            match self
+                .bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn get(&self) -> f64 {
+        // ORDERING: Relaxed — reporting-only read.
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free monotonic counter handle.
+#[derive(Clone)]
+pub struct Counter {
+    core: Arc<CounterCore>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Counter {
+    /// A counter attached to nothing — records are kept (always
+    /// enabled) but never exported. For tests and detached aggregation.
+    pub fn detached() -> Counter {
+        Counter {
+            core: Arc::new(CounterCore::new()),
+            enabled: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        // ORDERING: Relaxed — gate flag only suppresses stat recording;
+        // nothing is ordered against it.
+        if self.enabled.load(Ordering::Relaxed) {
+            self.core.add(n);
+        }
+    }
+
+    /// Current total (sum over stripes).
+    pub fn get(&self) -> u64 {
+        self.core.get()
+    }
+}
+
+/// Lock-free gauge handle (f64; `set` for levels, `add`/`sub` for
+/// up-down counts).
+#[derive(Clone)]
+pub struct Gauge {
+    core: Arc<GaugeCore>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Gauge {
+    pub fn detached() -> Gauge {
+        Gauge {
+            core: Arc::new(GaugeCore::new()),
+            enabled: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        // ORDERING: Relaxed — gate flag, see Counter::add.
+        if self.enabled.load(Ordering::Relaxed) {
+            self.core.set(v);
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, delta: f64) {
+        // ORDERING: Relaxed — gate flag, see Counter::add.
+        if self.enabled.load(Ordering::Relaxed) {
+            self.core.add(delta);
+        }
+    }
+
+    #[inline]
+    pub fn sub(&self, delta: f64) {
+        self.add(-delta);
+    }
+
+    pub fn get(&self) -> f64 {
+        self.core.get()
+    }
+}
+
+/// Lock-free histogram handle; see [`super::hist`] for bucket math.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistCore>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Histogram {
+    /// A histogram attached to no registry — always records. The
+    /// post-hoc metrics aggregation uses these so offline summaries run
+    /// through the exact same bucket/quantile code as live exposition.
+    pub fn detached(scale: f64) -> Histogram {
+        Histogram {
+            core: Arc::new(HistCore::new(scale)),
+            enabled: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    /// Record a raw observation (nanos for `*_seconds` series).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        // ORDERING: Relaxed — gate flag, see Counter::add.
+        if self.enabled.load(Ordering::Relaxed) {
+            self.core.record(v);
+        }
+    }
+
+    /// Record a duration in seconds into a nanosecond-based series.
+    #[inline]
+    pub fn record_seconds(&self, s: f64) {
+        if s.is_finite() && s >= 0.0 {
+            self.record((s * 1e9) as u64);
+        }
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        self.core.snapshot()
+    }
+}
+
+/// What kind of instrument a family holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            // histograms expose as quantile summaries — see expo.rs
+            Kind::Histogram => "summary",
+        }
+    }
+}
+
+enum Child {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// One named metric family: either a single unlabeled instrument or a
+/// set of children keyed by the value of `label_key`.
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    /// Histogram raw-value multiplier at exposition (1e-9: nanos->s).
+    scale: f64,
+    /// `None` = unlabeled singleton; `Some(key)` = one label dimension.
+    label_key: Option<String>,
+    children: RwLock<Vec<(String, Child)>>,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Family {
+    fn make_child(&self) -> Child {
+        match self.kind {
+            Kind::Counter => Child::Counter(Counter {
+                core: Arc::new(CounterCore::new()),
+                enabled: Arc::clone(&self.enabled),
+            }),
+            Kind::Gauge => Child::Gauge(Gauge {
+                core: Arc::new(GaugeCore::new()),
+                enabled: Arc::clone(&self.enabled),
+            }),
+            Kind::Histogram => Child::Histogram(Histogram {
+                core: Arc::new(HistCore::new(self.scale)),
+                enabled: Arc::clone(&self.enabled),
+            }),
+        }
+    }
+
+    /// Get or create the child for `value`, applying the cardinality
+    /// cap. The singleton (unlabeled) child uses `value = ""`.
+    fn child(&self, value: &str) -> Child {
+        {
+            let kids = self
+                .children
+                .read()
+                .unwrap_or_else(PoisonError::into_inner);
+            if let Some((_, c)) = kids.iter().find(|(v, _)| v == value) {
+                return clone_child(c);
+            }
+        }
+        let mut kids = self
+            .children
+            .write()
+            .unwrap_or_else(PoisonError::into_inner);
+        // racing creator may have won between the locks
+        if let Some((_, c)) = kids.iter().find(|(v, _)| v == value) {
+            return clone_child(c);
+        }
+        let effective = if self.label_key.is_some() && kids.len() >= MAX_CHILDREN {
+            OVERFLOW_LABEL
+        } else {
+            value
+        };
+        if let Some((_, c)) = kids.iter().find(|(v, _)| v == effective) {
+            return clone_child(c);
+        }
+        let child = self.make_child();
+        let out = clone_child(&child);
+        kids.push((effective.to_string(), child));
+        out
+    }
+}
+
+fn clone_child(c: &Child) -> Child {
+    match c {
+        Child::Counter(h) => Child::Counter(h.clone()),
+        Child::Gauge(h) => Child::Gauge(h.clone()),
+        Child::Histogram(h) => Child::Histogram(h.clone()),
+    }
+}
+
+/// A labeled counter family; resolve children with [`CounterFamily::with`].
+#[derive(Clone)]
+pub struct CounterFamily {
+    family: Arc<Family>,
+}
+
+impl CounterFamily {
+    /// The child counter for `{label_key="value"}` (resolve once,
+    /// record lock-free forever after).
+    pub fn with(&self, value: &str) -> Counter {
+        match self.family.child(value) {
+            Child::Counter(c) => c,
+            // registration guarantees kind; unreachable by construction
+            _ => Counter::detached(),
+        }
+    }
+}
+
+/// A labeled gauge family.
+#[derive(Clone)]
+pub struct GaugeFamily {
+    family: Arc<Family>,
+}
+
+impl GaugeFamily {
+    pub fn with(&self, value: &str) -> Gauge {
+        match self.family.child(value) {
+            Child::Gauge(g) => g,
+            _ => Gauge::detached(),
+        }
+    }
+}
+
+/// A labeled histogram family.
+#[derive(Clone)]
+pub struct HistogramFamily {
+    family: Arc<Family>,
+}
+
+impl HistogramFamily {
+    pub fn with(&self, value: &str) -> Histogram {
+        match self.family.child(value) {
+            Child::Histogram(h) => h,
+            _ => Histogram::detached(1.0),
+        }
+    }
+}
+
+/// Point-in-time value of one family child.
+#[derive(Clone, Debug)]
+pub enum ValueSnap {
+    Counter(u64),
+    Gauge(f64),
+    Hist(HistSnapshot),
+}
+
+/// Point-in-time copy of one family for exposition.
+#[derive(Clone)]
+pub struct FamilySnapshot {
+    pub name: String,
+    pub help: String,
+    pub kind: Kind,
+    /// `(Some((label_key, label_value)) | None, value)` per child,
+    /// label values sorted.
+    pub children: Vec<(Option<(String, String)>, ValueSnap)>,
+}
+
+/// The metric registry. One global instance serves the process (see
+/// [`registry`]); tests may build private ones.
+pub struct Registry {
+    enabled: Arc<AtomicBool>,
+    families: Mutex<Vec<Arc<Family>>>,
+}
+
+impl Registry {
+    pub fn new(enabled: bool) -> Registry {
+        Registry {
+            enabled: Arc::new(AtomicBool::new(enabled)),
+            families: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        // ORDERING: Relaxed — gate flag read, nothing ordered on it.
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Flip recording on/off at runtime (bench A/B harness).
+    pub fn set_enabled(&self, on: bool) {
+        // ORDERING: Relaxed — gate flag write, takes effect eventually.
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    fn family(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        scale: f64,
+        label_key: Option<&str>,
+    ) -> Arc<Family> {
+        let mut fams = self
+            .families
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        if let Some(f) = fams.iter().find(|f| f.name == name) {
+            return Arc::clone(f);
+        }
+        let f = Arc::new(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            scale,
+            label_key: label_key.map(str::to_string),
+            children: RwLock::new(Vec::new()),
+            enabled: Arc::clone(&self.enabled),
+        });
+        fams.push(Arc::clone(&f));
+        f
+    }
+
+    /// Register (idempotently) an unlabeled counter.
+    pub fn register_counter(&self, name: &str, help: &str) -> Counter {
+        let f = self.family(name, help, Kind::Counter, 1.0, None);
+        match f.child("") {
+            Child::Counter(c) => c,
+            _ => Counter::detached(),
+        }
+    }
+
+    /// Register an unlabeled gauge.
+    pub fn register_gauge(&self, name: &str, help: &str) -> Gauge {
+        let f = self.family(name, help, Kind::Gauge, 1.0, None);
+        match f.child("") {
+            Child::Gauge(g) => g,
+            _ => Gauge::detached(),
+        }
+    }
+
+    /// Register an unlabeled histogram; `scale` converts raw recorded
+    /// values to exposed units (1e-9 for nanosecond recordings exposed
+    /// as seconds).
+    pub fn register_histogram(&self, name: &str, help: &str, scale: f64) -> Histogram {
+        let f = self.family(name, help, Kind::Histogram, scale, None);
+        match f.child("") {
+            Child::Histogram(h) => h,
+            _ => Histogram::detached(scale),
+        }
+    }
+
+    /// Register a counter family labeled by `label`.
+    pub fn register_counter_family(&self, name: &str, help: &str, label: &str) -> CounterFamily {
+        CounterFamily {
+            family: self.family(name, help, Kind::Counter, 1.0, Some(label)),
+        }
+    }
+
+    /// Register a gauge family labeled by `label`.
+    pub fn register_gauge_family(&self, name: &str, help: &str, label: &str) -> GaugeFamily {
+        GaugeFamily {
+            family: self.family(name, help, Kind::Gauge, 1.0, Some(label)),
+        }
+    }
+
+    /// Register a histogram family labeled by `label`.
+    pub fn register_histogram_family(
+        &self,
+        name: &str,
+        help: &str,
+        label: &str,
+        scale: f64,
+    ) -> HistogramFamily {
+        HistogramFamily {
+            family: self.family(name, help, Kind::Histogram, scale, Some(label)),
+        }
+    }
+
+    /// Snapshot every family for exposition, registration order, label
+    /// values sorted within a family.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams: Vec<Arc<Family>> = {
+            let guard = self
+                .families
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            guard.iter().map(Arc::clone).collect()
+        };
+        fams.iter()
+            .map(|f| {
+                let kids = f.children.read().unwrap_or_else(PoisonError::into_inner);
+                let mut children: Vec<(Option<(String, String)>, ValueSnap)> = kids
+                    .iter()
+                    .map(|(value, child)| {
+                        let labels = f
+                            .label_key
+                            .as_ref()
+                            .map(|k| (k.clone(), value.clone()));
+                        let snap = match child {
+                            Child::Counter(c) => ValueSnap::Counter(c.get()),
+                            Child::Gauge(g) => ValueSnap::Gauge(g.get()),
+                            Child::Histogram(h) => ValueSnap::Hist(h.snapshot()),
+                        };
+                        (labels, snap)
+                    })
+                    .collect();
+                children.sort_by(|a, b| a.0.cmp(&b.0));
+                FamilySnapshot {
+                    name: f.name.clone(),
+                    help: f.help.clone(),
+                    kind: f.kind,
+                    children,
+                }
+            })
+            .collect()
+    }
+
+    /// Number of children currently held by family `name` (tests).
+    pub fn child_count(&self, name: &str) -> usize {
+        let fams = self
+            .families
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        fams.iter()
+            .find(|f| f.name == name)
+            .map(|f| {
+                f.children
+                    .read()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .len()
+            })
+            .unwrap_or(0)
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry every static handle registers into.
+/// Telemetry starts disabled when `LEANVEC_NO_TELEMETRY=1`.
+pub fn registry() -> &'static Registry {
+    GLOBAL.get_or_init(|| {
+        let off = std::env::var("LEANVEC_NO_TELEMETRY").map(|v| v == "1") == Ok(true);
+        Registry::new(!off)
+    })
+}
+
+/// Is process-wide telemetry recording on? Instrumented call sites use
+/// this to skip `Instant::now()` pairs entirely when it's off.
+#[inline]
+pub fn enabled() -> bool {
+    registry().is_enabled()
+}
+
+/// Flip process-wide telemetry (bench overhead A/B).
+pub fn set_enabled(on: bool) {
+    registry().set_enabled(on);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts_across_threads() {
+        let r = Registry::new(true);
+        let c = r.register_counter("leanvec_test_items_total", "test");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 40_000);
+    }
+
+    #[test]
+    fn gauge_set_add_sub() {
+        let g = Gauge::detached();
+        g.set(5.5);
+        assert_eq!(g.get(), 5.5);
+        g.add(1.5);
+        g.sub(3.0);
+        assert!((g.get() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_registry_drops_records() {
+        let r = Registry::new(false);
+        let c = r.register_counter("leanvec_test_off_total", "test");
+        let h = r.register_histogram("leanvec_test_off_seconds", "test", 1e-9);
+        c.inc();
+        h.record(123);
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.snapshot().count(), 0);
+        r.set_enabled(true);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+
+    #[test]
+    fn registration_is_idempotent() {
+        let r = Registry::new(true);
+        let a = r.register_counter("leanvec_test_same_total", "test");
+        let b = r.register_counter("leanvec_test_same_total", "test");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same name must share one core");
+        assert_eq!(r.snapshot().iter().filter(|f| f.name == "leanvec_test_same_total").count(), 1);
+    }
+
+    #[test]
+    fn family_children_are_distinct_and_shared() {
+        let r = Registry::new(true);
+        let fam = r.register_counter_family("leanvec_test_fam_total", "test", "collection");
+        fam.with("a").inc();
+        fam.with("a").inc();
+        fam.with("b").inc();
+        assert_eq!(fam.with("a").get(), 2);
+        assert_eq!(fam.with("b").get(), 1);
+    }
+
+    #[test]
+    fn cardinality_cap_folds_into_overflow() {
+        let r = Registry::new(true);
+        let fam = r.register_counter_family("leanvec_test_cap_total", "test", "collection");
+        for i in 0..(MAX_CHILDREN + 10) {
+            fam.with(&format!("tenant-{i}")).inc();
+        }
+        // cap + the shared overflow child
+        assert_eq!(r.child_count("leanvec_test_cap_total"), MAX_CHILDREN + 1);
+        // the 10 overflowing tenants all landed on one child
+        assert_eq!(fam.with(OVERFLOW_LABEL).get(), 10);
+        // existing children still resolve to themselves
+        fam.with("tenant-0").inc();
+        assert_eq!(fam.with("tenant-0").get(), 2);
+    }
+
+    #[test]
+    fn snapshot_orders_label_values() {
+        let r = Registry::new(true);
+        let fam = r.register_gauge_family("leanvec_test_order_ratio", "test", "shard");
+        fam.with("2").set(2.0);
+        fam.with("0").set(0.5);
+        fam.with("1").set(1.0);
+        let snap = r.snapshot();
+        let f = snap.iter().find(|f| f.name == "leanvec_test_order_ratio");
+        let f = f.expect("family present");
+        let vals: Vec<&str> = f
+            .children
+            .iter()
+            .filter_map(|(l, _)| l.as_ref().map(|(_, v)| v.as_str()))
+            .collect();
+        assert_eq!(vals, ["0", "1", "2"]);
+    }
+
+    #[test]
+    fn histogram_record_snapshot_race_soak() {
+        // TSan target: concurrent record() against snapshot()
+        let r = Registry::new(true);
+        let h = r.register_histogram("leanvec_test_race_seconds", "test", 1.0);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = h.clone();
+                s.spawn(move || {
+                    for i in 0..25_000u64 {
+                        h.record(i % 1_000 + t);
+                    }
+                });
+            }
+            let h2 = h.clone();
+            s.spawn(move || {
+                for _ in 0..50 {
+                    let _ = h2.snapshot();
+                }
+            });
+        });
+        assert_eq!(h.snapshot().count(), 100_000);
+    }
+}

@@ -29,4 +29,6 @@ pub use collection::{
     AdmissionCounters, Collection, CollectionRegistry, TenantQuota, DEFAULT_COLLECTION,
 };
 pub use manifest::{MANIFEST_MAGIC, MANIFEST_NAME, MANIFEST_VERSION};
-pub use sharded::{merge_top_k, shard_of, ShardSpec, ShardedIndex, DEFAULT_HASH_SEED};
+pub use sharded::{
+    merge_top_k, shard_of, ScatterTiming, ShardSpec, ShardedIndex, DEFAULT_HASH_SEED,
+};

@@ -23,6 +23,7 @@ use crate::index::query::{Query, SearchResult, VectorIndex};
 use crate::leanvec::model::LeanVecModel;
 use crate::mutate::{ConsolidateReport, LiveIndex, MutateError};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Default shard-routing hash seed (persisted in the shard manifest).
 pub const DEFAULT_HASH_SEED: u64 = 0x51AB_5EED;
@@ -659,6 +660,97 @@ impl ShardedIndex {
         });
         merge_top_k(results, query.top_k())
     }
+
+    /// [`ShardedIndex::search_scatter`] plus per-stage timing: each
+    /// shard's wall time and the merge step land in the returned
+    /// [`ScatterTiming`] *and* in the `leanvec_shard_scatter_seconds` /
+    /// `leanvec_shard_merge_seconds` histograms. When telemetry is
+    /// disabled the untimed path runs instead (returning `None`), so
+    /// the hot path pays no extra clock reads.
+    pub fn search_scatter_timed(
+        &self,
+        q_proj: &[f32],
+        query: &Query,
+    ) -> (SearchResult, Option<ScatterTiming>) {
+        if !crate::obs::enabled() {
+            return (self.search_scatter(q_proj, query), None);
+        }
+        let h = crate::obs::handles();
+        let n = self.shards();
+        if n == 1 {
+            let t = Instant::now();
+            let mut ctx = self.pools[0].acquire();
+            let r = self.search_shard(0, &mut ctx, q_proj, query);
+            let dt = t.elapsed().as_secs_f64();
+            h.shard_scatter.with("0").record_seconds(dt);
+            return (
+                r,
+                Some(ScatterTiming {
+                    per_shard_seconds: vec![dt],
+                    merge_seconds: 0.0,
+                }),
+            );
+        }
+        // same fan-out shape as search_scatter (shard 0 on the calling
+        // thread), each shard timed individually
+        let mut timed: Vec<(SearchResult, f64)> = std::thread::scope(|scope| {
+            let spawned: Vec<_> = (1..n)
+                .map(|s| {
+                    scope.spawn(move || {
+                        let t = Instant::now();
+                        let mut ctx = self.pools[s].acquire();
+                        let r = self.search_shard(s, &mut ctx, q_proj, query);
+                        (r, t.elapsed().as_secs_f64())
+                    })
+                })
+                .collect();
+            let mut results = Vec::with_capacity(n);
+            {
+                let t = Instant::now();
+                let mut ctx = self.pools[0].acquire();
+                let r = self.search_shard(0, &mut ctx, q_proj, query);
+                results.push((r, t.elapsed().as_secs_f64()));
+            }
+            for handle in spawned {
+                match handle.join() {
+                    Ok(r) => results.push(r),
+                    Err(payload) => std::panic::resume_unwind(payload),
+                }
+            }
+            results
+        });
+        let mut per_shard_seconds = Vec::with_capacity(n);
+        let mut results = Vec::with_capacity(n);
+        for (s, (r, dt)) in timed.drain(..).enumerate() {
+            h.shard_scatter.with(&s.to_string()).record_seconds(dt);
+            per_shard_seconds.push(dt);
+            results.push(r);
+        }
+        let t = Instant::now();
+        let merged = merge_top_k(results, query.top_k());
+        let merge_seconds = t.elapsed().as_secs_f64();
+        h.shard_merge.record_seconds(merge_seconds);
+        (
+            merged,
+            Some(ScatterTiming {
+                per_shard_seconds,
+                merge_seconds,
+            }),
+        )
+    }
+}
+
+/// Per-stage timing of one scatter-gather search, produced by
+/// [`ShardedIndex::search_scatter_timed`] and surfaced in the engine's
+/// [`StageTimes`] / flight records.
+///
+/// [`StageTimes`]: crate::coordinator::StageTimes
+#[derive(Clone, Debug, Default)]
+pub struct ScatterTiming {
+    /// wall time of each shard's search, indexed by shard position
+    pub per_shard_seconds: Vec<f64>,
+    /// wall time of the final top-k merge (0 for single-shard sets)
+    pub merge_seconds: f64,
 }
 
 impl VectorIndex for ShardedIndex {

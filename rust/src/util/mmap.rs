@@ -361,6 +361,8 @@ impl SectionSrc {
         // counter read once after loading finishes; it guards no data
         // and needs no happens-before edge.
         self.fallbacks.fetch_add(1, Ordering::Relaxed);
+        // mirrored process-wide for the metrics exposition
+        crate::obs::handles().mmap_fallbacks.inc();
     }
 }
 

@@ -1,0 +1,366 @@
+//! Observability integration: histogram accuracy against exact
+//! percentiles, concurrent record/snapshot soak, label cardinality
+//! caps, the engine's metrics exposition round-tripping through the
+//! strict parser, and the flight recorder catching deliberately slow
+//! queries under load.
+
+use leanvec::config::{Compression, GraphParams, ProjectionKind, Similarity};
+use leanvec::coordinator::{BatchPolicy, Engine, EngineConfig, QuerySpec};
+use leanvec::data::synth::{generate, QueryDist, SynthSpec};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::SearchParams;
+use leanvec::obs::{self, Registry, ValueSnap, MAX_CHILDREN, OVERFLOW_LABEL};
+use leanvec::util::rng::Rng;
+use leanvec::util::stats::Summary;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// histogram accuracy
+// ---------------------------------------------------------------------
+
+/// The histogram's quantile convention: rank = ceil(q * n), clamped to
+/// [1, n], value at that rank. Comparing against this isolates pure
+/// bucket-resolution error from rank-convention differences.
+fn rank_quantile(sorted: &[u64], q: f64) -> f64 {
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1] as f64
+}
+
+/// Record `vals` into a detached histogram and assert every quantile
+/// lands within `tol` relative error of the exact rank quantile, and
+/// that the sum is exact.
+fn check_accuracy(vals: &[u64], tol: f64, what: &str) {
+    let h = obs::Histogram::detached(1.0);
+    let mut sorted = vals.to_vec();
+    for &v in vals {
+        h.record(v);
+    }
+    sorted.sort_unstable();
+    let snap = h.snapshot();
+    assert_eq!(snap.count(), vals.len() as u64, "{what}: count");
+    let sum_exact: f64 = vals.iter().map(|&v| v as f64).sum();
+    assert!(
+        (snap.sum() - sum_exact).abs() <= 1e-9 * sum_exact.max(1.0),
+        "{what}: sum {} want {sum_exact}",
+        snap.sum()
+    );
+    for q in [0.5, 0.9, 0.99, 0.999] {
+        let exact = rank_quantile(&sorted, q);
+        let got = snap.quantile(q);
+        let rel = (got - exact).abs() / exact.max(1.0);
+        assert!(
+            rel <= tol,
+            "{what}: q={q} got {got} want {exact} (rel {rel:.4} > {tol})"
+        );
+    }
+}
+
+#[test]
+fn histogram_accuracy_on_adversarial_distributions() {
+    let mut rng = Rng::new(0x0B5);
+
+    // uniform over three decades
+    let uniform: Vec<u64> = (0..20_000).map(|_| 100 + rng.below(999_900) as u64).collect();
+    check_accuracy(&uniform, 0.025, "uniform");
+
+    // heavy power-law tail: exact bucket mids must track huge jumps
+    let powers: Vec<u64> = (0..20_000).map(|i| 1u64 << (7 + (i * 7919) % 20)).collect();
+    check_accuracy(&powers, 0.025, "powers-of-two");
+
+    // bimodal with a 1000x gap between modes (30% fast / 70% slow)
+    let bimodal: Vec<u64> = (0..10_000)
+        .map(|i| if i % 10 < 3 { 1_000 + (i as u64 % 97) } else { 1_000_000 + (i as u64 % 9973) })
+        .collect();
+    check_accuracy(&bimodal, 0.025, "bimodal");
+
+    // constant stream (every quantile is the one value)
+    check_accuracy(&vec![123_456u64; 5_000], 0.025, "constant");
+
+    // tiny values sit in exact width-1 buckets: absolute error <= 0.5
+    let small: Vec<u64> = (0..5_000).map(|_| rng.below(32) as u64).collect();
+    let h = obs::Histogram::detached(1.0);
+    let mut sorted = small.clone();
+    for &v in &small {
+        h.record(v);
+    }
+    sorted.sort_unstable();
+    let snap = h.snapshot();
+    for q in [0.5, 0.99] {
+        let exact = rank_quantile(&sorted, q);
+        let got = snap.quantile(q);
+        assert!(
+            (got - exact).abs() <= 0.5 + 1e-9,
+            "small values: q={q} got {got} want {exact}"
+        );
+    }
+}
+
+#[test]
+fn histogram_tracks_summary_on_smooth_distributions() {
+    // against the interpolating reference implementation the bench
+    // reports used before the registry existed: on smooth, dense
+    // distributions the two quantile code paths must agree closely
+    let mut rng = Rng::new(0x57A7);
+    let h = obs::Histogram::detached(1.0);
+    let mut s = Summary::new();
+    for _ in 0..50_000 {
+        // folded-gaussian latency shape, mean ~1ms in ns, >= 100us
+        let v = 100_000.0 + (rng.gaussian().abs() * 900_000.0);
+        h.record(v as u64);
+        s.push(v.trunc());
+    }
+    let snap = h.snapshot();
+    for (q, exact) in [(0.5, s.p50()), (0.99, s.p99())] {
+        let got = snap.quantile(q);
+        let rel = (got - exact).abs() / exact;
+        assert!(rel <= 0.05, "q={q} got {got} want {exact} (rel {rel:.4})");
+    }
+    assert!((snap.mean() - s.mean()).abs() / s.mean() <= 1e-3);
+}
+
+// ---------------------------------------------------------------------
+// registry concurrency + cardinality
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_record_and_snapshot_soak() {
+    const WRITERS: u64 = 4;
+    const PER_WRITER: u64 = 50_000;
+    let r = Registry::new(true);
+    let h = r.register_histogram("leanvec_test_soak_seconds", "race soak", 1.0);
+    let c = r.register_counter("leanvec_test_soak_total", "race soak");
+    std::thread::scope(|s| {
+        for t in 0..WRITERS {
+            let h = h.clone();
+            let c = c.clone();
+            s.spawn(move || {
+                for i in 0..PER_WRITER {
+                    // values in [1, 1000]: snapshots can bound the sum
+                    h.record((t * PER_WRITER + i) % 1_000 + 1);
+                    c.inc();
+                }
+            });
+        }
+        // reader races the writers: every observed snapshot must be
+        // internally consistent (no torn counts, monotone growth)
+        let reader = &r;
+        s.spawn(move || {
+            let mut last_count = 0u64;
+            for _ in 0..300 {
+                for fam in reader.snapshot() {
+                    if fam.name != "leanvec_test_soak_seconds" {
+                        continue;
+                    }
+                    for (_, v) in &fam.children {
+                        if let ValueSnap::Hist(snap) = v {
+                            let n = snap.count();
+                            assert!(n <= WRITERS * PER_WRITER, "count overshot: {n}");
+                            assert!(n >= last_count, "count went backwards");
+                            last_count = n;
+                            // sum and buckets are separate relaxed
+                            // atomics: up to one in-flight sample per
+                            // writer may straddle the snapshot
+                            let slack = WRITERS as f64 * 1_000.0;
+                            assert!(snap.sum() >= n as f64 - slack, "sum below count*min");
+                            assert!(
+                                snap.sum() <= n as f64 * 1_000.0 + slack,
+                                "sum above count*max"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    });
+    assert_eq!(h.snapshot().count(), WRITERS * PER_WRITER);
+    assert_eq!(c.get(), WRITERS * PER_WRITER);
+}
+
+#[test]
+fn label_cardinality_is_capped() {
+    let r = Registry::new(true);
+    let fam = r.register_counter_family("leanvec_test_tenants_total", "cap", "collection");
+    for i in 0..200 {
+        fam.with(&format!("tenant-{i}")).inc();
+    }
+    // distinct children never exceed the cap (+1 for the overflow
+    // child) no matter how many label values a hostile client sends
+    let kids = r.child_count("leanvec_test_tenants_total");
+    assert!(kids <= MAX_CHILDREN + 1, "cardinality leak: {kids} children");
+    let snap = r.snapshot();
+    let f = snap
+        .iter()
+        .find(|f| f.name == "leanvec_test_tenants_total")
+        .expect("family snapshotted");
+    let mut total = 0u64;
+    let mut overflow = 0u64;
+    for (labels, v) in &f.children {
+        if let ValueSnap::Counter(n) = v {
+            total += n;
+            if matches!(labels, Some((_, value)) if value == OVERFLOW_LABEL) {
+                overflow += n;
+            }
+        }
+    }
+    assert_eq!(total, 200, "no increment may be dropped");
+    assert!(
+        overflow >= 200 - MAX_CHILDREN as u64,
+        "overflow child absorbed only {overflow}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// engine-level: exposition round-trip + flight recorder
+// ---------------------------------------------------------------------
+
+fn dataset(n: usize) -> leanvec::data::synth::Dataset {
+    generate(&SynthSpec {
+        name: "obs".into(),
+        dim: 64,
+        n,
+        n_learn_queries: 150,
+        n_test_queries: 80,
+        similarity: Similarity::InnerProduct,
+        queries: QueryDist::OutOfDistribution(0.6),
+        decay: 0.6,
+        seed: 0x0B5,
+    })
+}
+
+fn build(ds: &leanvec::data::synth::Dataset) -> Arc<leanvec::index::leanvec_index::LeanVecIndex> {
+    let mut gp = GraphParams::for_similarity(ds.similarity);
+    gp.max_degree = 16;
+    gp.build_window = 32;
+    Arc::new(
+        IndexBuilder::new()
+            .projection(ProjectionKind::OodEigSearch)
+            .target_dim(24)
+            .primary(Compression::Lvq8)
+            .secondary(Compression::F16)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity),
+    )
+}
+
+#[test]
+fn engine_exposition_round_trips_and_names_conform() {
+    leanvec::obs::set_enabled(true);
+    let ds = dataset(1_200);
+    let index = build(&ds);
+    let engine = Engine::start(
+        index,
+        EngineConfig {
+            workers: 1,
+            ..Default::default()
+        },
+    );
+    let n = 120;
+    for i in 0..n {
+        engine
+            .submit(ds.test_queries[i % ds.test_queries.len()].clone(), 5)
+            .expect("engine running");
+    }
+    let responses = engine.drain(n);
+    assert_eq!(responses.len(), n);
+
+    let text = engine.metrics_text();
+    let families = leanvec::obs::expo::parse_text(&text).expect("strict parse of our own dump");
+    assert!(families.len() >= 20, "catalog missing: {} families", families.len());
+    // every exposed family obeys the naming convention the lint rule
+    // enforces at the source level (test registries excepted)
+    for f in families.iter().filter(|f| !f.name.contains("_test_")) {
+        assert!(
+            leanvec::analysis::metric_name_ok(&f.name),
+            "exposed name breaks convention: {}",
+            f.name
+        );
+    }
+    // the counters moved: this engine answered at least n queries
+    let q = families
+        .iter()
+        .find(|f| f.name == "leanvec_engine_queries_total")
+        .expect("queries counter exposed");
+    let served: f64 = q.samples.iter().map(|s| s.value).sum();
+    assert!(served >= n as f64, "served {served} < {n}");
+    // e2e summary carries quantiles + sum + count for the collection
+    let e2e = families
+        .iter()
+        .find(|f| f.name == "leanvec_engine_e2e_seconds")
+        .expect("e2e histogram exposed");
+    assert_eq!(e2e.kind, "summary");
+    assert!(e2e.samples.iter().any(|s| s.name.ends_with("_count") && s.value >= n as f64));
+
+    // the JSON exposition parses as JSON and carries the same families
+    let json = leanvec::util::json::Json::parse(&engine.metrics_json()).expect("valid json");
+    let fams = json.get("families").and_then(|f| f.as_arr()).expect("families array");
+    assert!(fams.len() >= 20);
+    engine.shutdown();
+}
+
+#[test]
+fn flight_recorder_captures_artificially_slow_queries() {
+    leanvec::obs::set_enabled(true);
+    let ds = dataset(1_500);
+    let index = build(&ds);
+    let engine = Engine::start(
+        index,
+        EngineConfig {
+            workers: 1,
+            batch: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(100),
+            },
+            search: SearchParams {
+                window: 10,
+                rerank_window: 10,
+            },
+            ..Default::default()
+        },
+    );
+    // closed loop (drain each response before the next submit) so queue
+    // wait stays flat and e2e differences come from the search itself:
+    // every 11th query runs with a ~60x wider window -> reliably slow
+    const SLOW_WINDOW: usize = 600;
+    let mut submitted_slow = 0u64;
+    for i in 0..220usize {
+        let q = ds.test_queries[i % ds.test_queries.len()].clone();
+        let spec = if i % 11 == 0 {
+            submitted_slow += 1;
+            QuerySpec::top_k(5)
+                .with_window(SLOW_WINDOW)
+                .with_rerank_window(SLOW_WINDOW)
+        } else {
+            QuerySpec::top_k(5)
+        };
+        engine.submit_spec(q, spec).expect("engine running");
+        assert_eq!(engine.drain(1).len(), 1);
+    }
+    let records = engine.flight_records();
+    engine.shutdown();
+    assert!(!records.is_empty(), "flight recorder stayed empty");
+    // the deliberately slowed queries dominate the slow ring: the ring
+    // has 48 slow slots and only 20 queries were slowed, so (nearly)
+    // all of them must have been kept
+    let slow_kept = records
+        .iter()
+        .filter(|r| r.params.window == SLOW_WINDOW)
+        .count() as u64;
+    assert!(
+        slow_kept >= submitted_slow / 2,
+        "kept {slow_kept} of {submitted_slow} slowed queries"
+    );
+    // records carry a usable per-stage breakdown
+    for r in &records {
+        assert!(r.e2e_seconds > 0.0);
+        assert!(r.search_seconds <= r.e2e_seconds + 1e-9);
+        assert!(!r.collection.is_empty());
+        // Display stays total (no panics, mentions the request id)
+        assert!(format!("{r}").contains(&format!("req {}", r.id)));
+    }
+    // slowest-first ordering
+    for pair in records.windows(2) {
+        assert!(pair[0].e2e_seconds >= pair[1].e2e_seconds);
+    }
+}
