@@ -359,6 +359,7 @@ fn bench_search_baseline(
     sharded: Json,
     mmap: Json,
     engine: Json,
+    overload: Json,
 ) {
     use leanvec::graph::beam::SearchCtx;
     use leanvec::index::flat::FlatIndex;
@@ -435,6 +436,7 @@ fn bench_search_baseline(
         ("sharded", sharded),
         ("mmap", mmap),
         ("engine", engine),
+        ("overload", overload),
     ]);
     match std::fs::write("BENCH_search.json", out.to_pretty()) {
         Ok(()) => println!("[saved BENCH_search.json]"),
@@ -508,6 +510,152 @@ fn bench_engine(ds: &leanvec::data::synth::Dataset, gp: GraphParams, k: usize) -
         ("search_p99_ms", Json::num(m.stages.search.p99)),
         ("merge_p50_ms", Json::num(m.stages.merge.p50)),
         ("merge_p99_ms", Json::num(m.stages.merge.p99)),
+    ])
+}
+
+/// Overload arm: measure closed-loop capacity, then offer 3x that
+/// rate open-loop with shedding off vs on. Overload handling is judged
+/// on goodput (deadline-met answers per second of wall time), shed
+/// rate, timeout rate, and the latency p99 of the *survivors* — under
+/// overload what matters is the answers you did serve, not the ones
+/// you refused at the door. Returns the JSON fragment embedded under
+/// `"overload"` in BENCH_search.json.
+fn bench_overload(ds: &leanvec::data::synth::Dataset, gp: GraphParams, k: usize) -> Json {
+    use leanvec::coordinator::{EngineError, QuerySpec, ShedPolicy};
+
+    println!("\n== overload shedding (3x capacity, open loop) ==");
+    let index = Arc::new(
+        IndexBuilder::new()
+            .projection(ProjectionKind::OodEigSearch)
+            .target_dim(160)
+            .graph_params(gp)
+            .build(&ds.database, Some(&ds.learn_queries), ds.similarity),
+    );
+    let search = SearchParams {
+        window: 60,
+        rerank_window: 60,
+    };
+    let workers = 2usize;
+
+    // 1. capacity calibration: closed loop, the drain is the back-pressure
+    let calib: Vec<Vec<f32>> = (0..2_000)
+        .map(|i| ds.test_queries[i % ds.test_queries.len()].clone())
+        .collect();
+    let (_r, report) = Engine::run_workload(
+        Arc::clone(&index),
+        EngineConfig {
+            workers,
+            search,
+            ..Default::default()
+        },
+        &calib,
+        k,
+        None,
+    );
+    let capacity_qps = report.metrics.qps.max(1.0);
+    let deadline_ms = (4.0 * report.metrics.latency_p99_ms).clamp(20.0, 250.0) as u64;
+    let offered_qps = 3.0 * capacity_qps;
+    println!(
+        "capacity {capacity_qps:.0} QPS closed-loop (p99 {:.2} ms) -> \
+         offering {offered_qps:.0} QPS, deadline {deadline_ms} ms",
+        report.metrics.latency_p99_ms
+    );
+
+    // the depth bound is the backlog that can still make its deadline
+    // (capacity x deadline); the wait bound trips at half the deadline
+    // so survivors still have search budget left after queueing
+    let shed_on = ShedPolicy {
+        max_queue_depth: ((capacity_qps * deadline_ms as f64 / 1000.0) as usize).max(8),
+        max_queue_wait_ms: (deadline_ms / 2).max(1),
+    };
+
+    // 2. open-loop arms: the arrival clock never waits for the engine
+    // (that is the whole point of open-loop overload)
+    let run_open = |label: &str, shed: ShedPolicy| -> (Json, f64) {
+        let engine = Engine::start(
+            Arc::clone(&index),
+            EngineConfig {
+                workers,
+                search,
+                shed,
+                ..Default::default()
+            },
+        );
+        let n = (offered_qps * 2.0) as usize; // ~2 s of offered load
+        let interval = 1.0 / offered_qps;
+        let (mut admitted, mut shed_count) = (0usize, 0usize);
+        let t0 = std::time::Instant::now();
+        for i in 0..n {
+            let target = i as f64 * interval;
+            let mut now = t0.elapsed().as_secs_f64();
+            while now < target {
+                if target - now > 500e-6 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+                } else {
+                    std::hint::spin_loop();
+                }
+                now = t0.elapsed().as_secs_f64();
+            }
+            let q = ds.test_queries[i % ds.test_queries.len()].clone();
+            match engine.submit_spec(q, QuerySpec::top_k(k).with_timeout_ms(deadline_ms)) {
+                Ok(_) => admitted += 1,
+                Err(EngineError::Overloaded { .. }) => shed_count += 1,
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        let responses = engine.drain(admitted);
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        engine.shutdown();
+        assert_eq!(responses.len(), admitted, "every admitted request resolves");
+        let mut survivor_ms: Vec<f64> = responses
+            .iter()
+            .filter(|r| r.is_ok())
+            .map(|r| r.latency_s * 1_000.0)
+            .collect();
+        survivor_ms.sort_by(f64::total_cmp);
+        let timeouts = admitted - survivor_ms.len();
+        let goodput = survivor_ms.len() as f64 / wall;
+        let p99 = if survivor_ms.is_empty() {
+            0.0
+        } else {
+            survivor_ms[((survivor_ms.len() as f64 * 0.99) as usize).min(survivor_ms.len() - 1)]
+        };
+        println!(
+            "{label:<8}: offered {n}, shed {shed_count} ({:.0}%), timed out {timeouts} ({:.0}%), \
+             goodput {goodput:.0} QPS ({:.2}x capacity), survivor p99 {p99:.2} ms",
+            100.0 * shed_count as f64 / n.max(1) as f64,
+            100.0 * timeouts as f64 / n.max(1) as f64,
+            goodput / capacity_qps
+        );
+        let frag = Json::obj(vec![
+            ("offered", Json::num(n as f64)),
+            ("admitted", Json::num(admitted as f64)),
+            ("shed", Json::num(shed_count as f64)),
+            ("timed_out", Json::num(timeouts as f64)),
+            ("shed_rate", Json::num(shed_count as f64 / n.max(1) as f64)),
+            ("timeout_rate", Json::num(timeouts as f64 / n.max(1) as f64)),
+            ("goodput_qps", Json::num(goodput)),
+            ("survivor_p99_ms", Json::num(p99)),
+            ("wall_seconds", Json::num(wall)),
+        ]);
+        (frag, goodput)
+    };
+
+    let (off, goodput_off) = run_open("shed off", ShedPolicy::default());
+    let (on, goodput_on) = run_open("shed on", shed_on);
+    let ratio = goodput_on / goodput_off.max(1e-9);
+    println!("shedding goodput ratio at 3x offered load: {ratio:.2}x");
+
+    Json::obj(vec![
+        ("capacity_qps", Json::num(capacity_qps)),
+        ("offered_qps", Json::num(offered_qps)),
+        ("overload_factor", Json::num(3.0)),
+        ("deadline_ms", Json::num(deadline_ms as f64)),
+        ("max_queue_depth", Json::num(shed_on.max_queue_depth as f64)),
+        ("max_queue_wait_ms", Json::num(shed_on.max_queue_wait_ms as f64)),
+        ("goodput_ratio_on_vs_off", Json::num(ratio)),
+        ("shed_off", off),
+        ("shed_on", on),
     ])
 }
 
@@ -678,6 +826,9 @@ fn main() {
     // into BENCH_search.json)
     let engine_arm = bench_engine(&ds, gp, k);
 
+    // overload shedding at 3x capacity (embedded into BENCH_search.json)
+    let overload_arm = bench_overload(&ds, gp, k);
+
     // sharded scatter-gather arm (embedded into BENCH_search.json)
     let sharded = bench_sharded(&ds, gp, &truth, k);
 
@@ -685,7 +836,7 @@ fn main() {
     let mmap = bench_mmap(&ds, gp, &truth, k);
 
     // fixed-window search QPS + recall anchor -> BENCH_search.json
-    bench_search_baseline(&ds, gp, &truth, k, sharded, mmap, engine_arm);
+    bench_search_baseline(&ds, gp, &truth, k, sharded, mmap, engine_arm, overload_arm);
 
     // parallel build speedup trajectory -> BENCH_build.json
     bench_build_trajectory(&ds, gp, &truth, k);
@@ -788,6 +939,22 @@ fn roll_history() {
         (
             "engine_e2e_p99_ms",
             Json::num(pick(&search, &["engine", "e2e_p99_ms"])),
+        ),
+        (
+            "overload_goodput_ratio_on_vs_off",
+            Json::num(pick(&search, &["overload", "goodput_ratio_on_vs_off"])),
+        ),
+        (
+            "overload_goodput_shed_on_qps",
+            Json::num(pick(&search, &["overload", "shed_on", "goodput_qps"])),
+        ),
+        (
+            "overload_shed_rate",
+            Json::num(pick(&search, &["overload", "shed_on", "shed_rate"])),
+        ),
+        (
+            "overload_survivor_p99_ms",
+            Json::num(pick(&search, &["overload", "shed_on", "survivor_p99_ms"])),
         ),
         ("build_best_total_seconds", Json::num(best_build)),
         (

@@ -20,7 +20,13 @@
 //!   values; stray stdout corrupts machine-readable CLI output);
 //! * metric names registered in `obs/` follow
 //!   `leanvec_<subsystem>_<name>_<unit>` ([`metric_name_ok`]), so the
-//!   exposition stays greppable and Prometheus-conventional.
+//!   exposition stays greppable and Prometheus-conventional;
+//! * blocking waits on the request loop (`coordinator/`, `shard/`) —
+//!   `.recv()`, `.lock(`, `.join()`, `.wait(` — either use the
+//!   timeout-aware form (`recv_timeout`, `try_lock`, `wait_timeout`)
+//!   or carry a `// DEADLINE:` comment arguing why the wait is
+//!   bounded; an unannotated indefinite wait on that path is how a
+//!   single stuck shard turns into a whole-engine hang.
 //!
 //! The scanner is token-ish, not a full lexer: it strips comments,
 //! string/char literals, and tracks `#[cfg(test)]` regions by brace
@@ -54,9 +60,13 @@ pub enum Rule {
     /// Metric registered in `obs/` whose name breaks the
     /// `leanvec_<subsystem>_<name>_<unit>` convention.
     ObsMetricName,
+    /// Blocking wait (`.recv()` / `.lock(` / `.join()` / `.wait(`) on
+    /// the request loop without a timeout-aware form or a
+    /// `// DEADLINE:` justification that the wait is bounded.
+    UnboundedWaitOnServePath,
 }
 
-pub const ALL_RULES: [Rule; 7] = [
+pub const ALL_RULES: [Rule; 8] = [
     Rule::UnsafeNeedsSafety,
     Rule::ServePathPanic,
     Rule::ServePathPartialCmp,
@@ -64,6 +74,7 @@ pub const ALL_RULES: [Rule; 7] = [
     Rule::InstantInKernel,
     Rule::PrintlnOutsideCli,
     Rule::ObsMetricName,
+    Rule::UnboundedWaitOnServePath,
 ];
 
 impl Rule {
@@ -76,6 +87,7 @@ impl Rule {
             Rule::InstantInKernel => "instant-in-kernel",
             Rule::PrintlnOutsideCli => "println-outside-cli",
             Rule::ObsMetricName => "obs-metric-name",
+            Rule::UnboundedWaitOnServePath => "serve-path-unbounded-wait",
         }
     }
 
@@ -126,6 +138,24 @@ fn is_serve_path(rel: &str) -> bool {
 fn is_kernel_path(rel: &str) -> bool {
     rel.starts_with("simd/")
 }
+
+/// The request loop proper: the threads that hold a live query or
+/// mutation while they wait. A blocking primitive here must be
+/// timeout-aware or carry a `// DEADLINE:` argument — these are the
+/// only modules where an indefinite wait wedges client requests
+/// rather than a background job.
+fn is_request_loop_path(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel.starts_with("shard/")
+}
+
+/// Blocking call sites the `serve-path-unbounded-wait` rule inspects.
+/// Plain-substring matched (the leading dot rules out free functions;
+/// `has_token` would reject method receivers). The timeout-aware
+/// forms — `recv_timeout`, `try_lock`, `wait_timeout` — don't contain
+/// these spellings, so they pass without annotation. `.join()` is
+/// matched with empty parens so `Path::join(arg)` stays exempt:
+/// thread joins are always zero-arg.
+const BLOCKING_TOKENS: [&str; 4] = [".recv()", ".lock(", ".join()", ".wait("];
 
 /// `main.rs` and `bin/` entry points own stdout; everything else must
 /// not print to it.
@@ -472,6 +502,7 @@ pub fn scan_file(rel: &str, source: &str) -> Vec<Diagnostic> {
     let kernel = is_kernel_path(rel);
     let cli = println_allowed(rel);
     let obs = rel.starts_with("obs/");
+    let req_loop = is_request_loop_path(rel);
     let raw_lines: Vec<&str> = source.lines().collect();
 
     let mut lexer = Lexer::new();
@@ -530,6 +561,21 @@ pub fn scan_file(rel: &str, source: &str) -> Vec<Diagnostic> {
                     Rule::ServePathPartialCmp,
                     "`partial_cmp` on the serve path — use `total_cmp` for float ordering".into(),
                 );
+            }
+        }
+        if req_loop {
+            for pat in BLOCKING_TOKENS {
+                if code.contains(pat) && !nearby_comment_contains(&lines, i, "DEADLINE:") {
+                    push(
+                        &lines,
+                        i,
+                        Rule::UnboundedWaitOnServePath,
+                        format!(
+                            "`{pat}` blocks the request loop without a bound — use the \
+                             timeout-aware form or justify with a `// DEADLINE:` comment"
+                        ),
+                    );
+                }
             }
         }
         if code.contains("Ordering::Relaxed")
@@ -787,6 +833,37 @@ mod tests {
         // definitions (no leading dot) are not registrations
         let def = "impl Registry { pub fn register_counter(&self, name: &str) {} }\n";
         assert!(scan_file("obs/registry.rs", def).is_empty());
+    }
+
+    #[test]
+    fn unbounded_wait_rule_fires_and_stays_quiet() {
+        let bad = "fn f(rx: &Receiver<u32>) { let v = rx.recv(); }\n";
+        let d = scan_file("coordinator/x.rs", bad);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, Rule::UnboundedWaitOnServePath);
+
+        let ok =
+            "fn f(rx: &Receiver<u32>) { let v = rx.recv(); // DEADLINE: shutdown closes tx\n}\n";
+        assert!(scan_file("coordinator/x.rs", ok).is_empty());
+
+        let above = "fn f(h: JoinHandle<()>) {\n\
+                     // DEADLINE: worker exits once its channel closes\n\
+                     h.join();\n\
+                     }\n";
+        assert!(scan_file("shard/x.rs", above).is_empty());
+
+        let timed = "fn f(rx: &Receiver<u32>) { let v = rx.recv_timeout(d); }\n";
+        assert!(scan_file("coordinator/x.rs", timed).is_empty());
+
+        let path_join = "fn f(p: &Path) -> PathBuf { p.join(\"m\") }\n";
+        assert!(
+            scan_file("shard/x.rs", path_join).is_empty(),
+            "Path::join takes an argument; thread joins are zero-arg"
+        );
+
+        // the rule polices only the request loop, not background jobs
+        assert!(scan_file("util/x.rs", bad).is_empty());
+        assert!(scan_file("mutate/x.rs", bad).is_empty());
     }
 
     #[test]

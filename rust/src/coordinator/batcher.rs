@@ -44,6 +44,9 @@ impl Batcher {
     /// closed and drained (shutdown).
     pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
         // block for the first request
+        // DEADLINE: this is the batcher's idle state — there is nothing
+        // to do until a request exists; shutdown closes the channel,
+        // which wakes this with Err.
         let first = rx.recv().ok()?;
         let deadline = Instant::now() + self.policy.max_wait;
         let mut batch = vec![first];

@@ -18,19 +18,25 @@ use crate::index::query::Query;
 use crate::leanvec::model::rows_to_matrix;
 use crate::linalg::Matrix;
 use crate::mutate::LiveIndex;
-use crate::obs::{self, CaptureKind, FlightRecord, FlightRecorder};
-use crate::shard::{Collection, CollectionRegistry, ShardedIndex, DEFAULT_COLLECTION};
+use crate::obs::{self, CaptureKind, FlightRecord, FlightRecorder, Outcome};
+use crate::shard::{Collection, CollectionRegistry, ShardedIndex, DEFAULT_COLLECTION, MANIFEST_NAME};
+use crate::util::cancel::CancelToken;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// Everything `Engine::submit*` can reject instead of panicking: a
-/// stopped (or mutation-quiesced) engine, an unregistered collection, a
-/// tenant over its admission quota, or a mutation aimed at a frozen
-/// collection.
+/// Everything the engine can reject or fail a request with instead of
+/// panicking: a stopped (or mutation-quiesced) engine, an unregistered
+/// collection, a tenant over its admission quota, a mutation aimed at a
+/// frozen collection, a missed deadline, overload shedding, or a failed
+/// snapshot hot-swap.
+///
+/// Display messages are stable: the CLI prints them verbatim and maps
+/// each variant to a distinct exit code ([`EngineError::exit_code`]),
+/// so scripts can branch on the failure class.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineError {
     /// The engine (or its ingest lane) no longer accepts submissions —
@@ -44,6 +50,34 @@ pub enum EngineError {
     QuotaExceeded { collection: String },
     /// Mutation submitted to a collection whose shards are frozen.
     NotLive { collection: String },
+    /// The request's deadline ([`QuerySpec::timeout_ms`]) expired
+    /// before a full answer was produced — shed in the batcher queue or
+    /// cancelled mid-search.
+    ///
+    /// [`QuerySpec::timeout_ms`]: super::protocol::QuerySpec::timeout_ms
+    DeadlineExceeded,
+    /// Overload protection ([`ShedPolicy`]) rejected the request at
+    /// admission; retry after roughly this many milliseconds.
+    Overloaded { retry_after_ms: u64 },
+    /// A snapshot hot-swap ([`Engine::swap_collection`]) failed; the
+    /// previous index is untouched and still serving.
+    SwapFailed { collection: String, reason: String },
+}
+
+impl EngineError {
+    /// Distinct process exit code for each failure class (the CLI's
+    /// contract with scripts; 1 stays the generic failure code).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            EngineError::Stopped => 10,
+            EngineError::UnknownCollection(_) => 11,
+            EngineError::QuotaExceeded { .. } => 12,
+            EngineError::NotLive { .. } => 13,
+            EngineError::DeadlineExceeded => 14,
+            EngineError::Overloaded { .. } => 15,
+            EngineError::SwapFailed { .. } => 16,
+        }
+    }
 }
 
 impl std::fmt::Display for EngineError {
@@ -60,6 +94,22 @@ impl std::fmt::Display for EngineError {
                 write!(
                     f,
                     "collection {collection:?} is frozen (mutations need live shards)"
+                )
+            }
+            EngineError::DeadlineExceeded => {
+                write!(f, "request deadline exceeded")
+            }
+            EngineError::Overloaded { retry_after_ms } => {
+                write!(
+                    f,
+                    "engine overloaded, retry after {retry_after_ms} ms"
+                )
+            }
+            EngineError::SwapFailed { collection, reason } => {
+                write!(
+                    f,
+                    "collection {collection:?}: snapshot swap failed ({reason}); \
+                     previous index still serving"
                 )
             }
         }
@@ -117,11 +167,68 @@ pub enum QueryProjectorKind {
     Pjrt(std::path::PathBuf),
 }
 
+/// Overload-shedding policy: reject requests **at admission** (with
+/// [`EngineError::Overloaded`] and a retry hint) once the batcher queue
+/// is measurably behind, so goodput holds under offered load well past
+/// capacity instead of every request timing out in the queue. Both
+/// knobs default to 0 = disabled: an unconfigured engine behaves
+/// exactly as before.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShedPolicy {
+    /// Shed when this many requests are already waiting between submit
+    /// and batcher dequeue (0 = no depth bound).
+    pub max_queue_depth: usize,
+    /// Shed when the most recently measured batcher queue wait exceeds
+    /// this budget while the queue is non-empty (0 = no wait bound).
+    pub max_queue_wait_ms: u64,
+}
+
+impl ShedPolicy {
+    pub fn enabled(&self) -> bool {
+        self.max_queue_depth > 0 || self.max_queue_wait_ms > 0
+    }
+
+    /// Admission check: `Some(retry_after_ms)` when the request should
+    /// be shed.
+    fn should_shed(&self, p: &QueuePressure) -> Option<u64> {
+        // ORDERING: Acquire pairs with the Release sides of the
+        // depth/wait updates; stale-by-one reads only shift the shed
+        // boundary by one request, never corrupt it.
+        let depth = p.depth.load(Ordering::Acquire);
+        let wait_ms = p.wait_nanos.load(Ordering::Acquire) / 1_000_000;
+        let over_depth = self.max_queue_depth > 0 && depth >= self.max_queue_depth;
+        let over_wait =
+            self.max_queue_wait_ms > 0 && depth > 0 && wait_ms > self.max_queue_wait_ms;
+        if over_depth || over_wait {
+            // hint: the backlog should clear in about one measured
+            // queue wait; never advertise 0 (that reads as "now")
+            Some(wait_ms.max(1))
+        } else {
+            None
+        }
+    }
+}
+
+/// Shared submit-side/batcher-side view of the request queue: how many
+/// requests are between `submit` and batcher dequeue, and the last
+/// queue wait the batcher measured. This is what [`ShedPolicy`] reads
+/// at admission.
+#[derive(Debug, Default)]
+struct QueuePressure {
+    /// requests submitted and not yet dequeued by the batcher
+    depth: AtomicUsize,
+    /// most recently measured queue wait (oldest request of the last
+    /// batch), nanoseconds
+    wait_nanos: AtomicU64,
+}
+
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub workers: usize,
     pub batch: BatchPolicy,
+    /// overload shedding at admission (default: disabled)
+    pub shed: ShedPolicy,
     /// engine-wide search defaults; collections registered through
     /// [`Engine::start`]/[`Engine::start_live`] adopt these as their
     /// per-collection defaults ([`Engine::start_collections`] callers
@@ -144,6 +251,7 @@ impl Default for EngineConfig {
                 .map(|n| n.get())
                 .unwrap_or(1),
             batch: BatchPolicy::default(),
+            shed: ShedPolicy::default(),
             search: SearchParams::default(),
             projector: QueryProjectorKind::Native,
             consolidate_threshold: 0.2,
@@ -158,7 +266,9 @@ impl Default for EngineConfig {
 pub struct Engine {
     registry: Arc<CollectionRegistry>,
     req_tx: Option<Sender<Request>>,
-    resp_rx: Receiver<Response>,
+    /// Mutex-wrapped so the engine is `Sync`: submissions may fan out
+    /// from many threads while one drainer collects responses.
+    resp_rx: Mutex<Receiver<Response>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     // ingest lane (engines with live collections only)
@@ -173,6 +283,10 @@ pub struct Engine {
     /// per-collection metric handles, resolved once at start so the
     /// hot path never does a label lookup
     coll_metrics: Arc<HashMap<String, Arc<CollHandles>>>,
+    /// queue-depth / queue-wait view shared with the batcher; read by
+    /// `shed` at admission
+    pressure: Arc<QueuePressure>,
+    shed: ShedPolicy,
 }
 
 /// Telemetry handles for one collection's labeled series, resolved
@@ -187,6 +301,9 @@ struct CollHandles {
     touched: obs::Histogram,
     deleted_skipped: obs::Counter,
     filtered: obs::Counter,
+    deadline_exceeded: obs::Counter,
+    shed: obs::Counter,
+    degraded: obs::Counter,
 }
 
 impl CollHandles {
@@ -201,6 +318,9 @@ impl CollHandles {
             touched: h.query_touched.with(name),
             deleted_skipped: h.query_deleted_skipped.with(name),
             filtered: h.query_filtered.with(name),
+            deadline_exceeded: h.engine_deadline_exceeded.with(name),
+            shed: h.engine_shed.with(name),
+            degraded: h.engine_degraded.with(name),
         }
     }
 }
@@ -212,6 +332,14 @@ struct WorkItem {
     q_proj: Vec<f32>,
     batch_size: usize,
     collection: Arc<Collection>,
+    /// the serve-index snapshot the batcher projected `q_proj` against.
+    /// The worker MUST search this exact index: a hot-swap between
+    /// projection and search would otherwise pair a query projected
+    /// with the old model against the new index.
+    index: Arc<ShardedIndex>,
+    /// absolute deadline derived from the spec's `timeout_ms` at
+    /// submission (`None` = no deadline)
+    deadline: Option<Instant>,
     /// time this request waited in the batcher queue (0 when telemetry
     /// is off — the batcher skips the clock reads)
     queue_s: f64,
@@ -330,14 +458,19 @@ impl Engine {
         );
         let flight = Arc::new(FlightRecorder::default());
 
+        let pressure = Arc::new(QueuePressure::default());
+
         // --- batcher thread: batch, group by collection, project, fan out
         let bregistry = Arc::clone(&registry);
         let bcfg = cfg.clone();
         let bmetrics = Arc::clone(&coll_metrics);
+        let bpressure = Arc::clone(&pressure);
+        let bflight = Arc::clone(&flight);
+        let bresp = resp_tx.clone();
         let batcher = std::thread::Builder::new()
             .name("leanvec-batcher".into())
             .spawn(move || {
-                batcher_loop(bregistry, bcfg, req_rx, work_tx, bmetrics);
+                batcher_loop(bregistry, bcfg, req_rx, work_tx, bresp, bmetrics, bpressure, bflight);
             })
             // lint:allow(serve-path-panic): engine construction, not the
             // request path — an engine without its batcher cannot exist,
@@ -357,10 +490,13 @@ impl Engine {
                             // a poisoned lock only means a sibling
                             // worker panicked while holding it; the
                             // receiver inside is still intact
+                            // DEADLINE: blocking recv is the worker's
+                            // idle state; shutdown closes the channel,
+                            // which wakes this with Err.
                             let item = {
-                                wrx.lock()
+                                wrx.lock() // DEADLINE: held only for one recv, never across a search
                                     .unwrap_or_else(std::sync::PoisonError::into_inner)
-                                    .recv()
+                                    .recv() // DEADLINE: worker idle state; shutdown closes the channel
                             };
                             let item = match item {
                                 Ok(i) => i,
@@ -373,6 +509,26 @@ impl Engine {
                             let coll = &item.collection;
                             let spec = &item.req.spec;
                             let params = resolve_spec(spec, coll.defaults);
+                            // already past the deadline and not allowed
+                            // to return partials: answer with the typed
+                            // error instead of burning a worker on a
+                            // dead request
+                            if let Some(d) = item.deadline {
+                                if !spec.allow_partial && Instant::now() >= d {
+                                    send_deadline_failure(
+                                        &wtx, &wflight, &item, telem,
+                                    );
+                                    continue;
+                                }
+                            }
+                            // the cancel token polls the deadline inside
+                            // per-shard traversal; an allow_partial
+                            // request that is already expired still runs
+                            // and returns whatever the first poll
+                            // interval accumulates
+                            let cancel = item
+                                .deadline
+                                .map(|d| Arc::new(CancelToken::with_deadline(d)));
                             let base = Query::new(&item.req.query)
                                 .k(spec.k)
                                 .window(params.window)
@@ -383,10 +539,17 @@ impl Engine {
                                 // construction; here it is only read
                                 Some(allow) => {
                                     let pred = |id: u32| allow.contains(&id);
-                                    coll.index
-                                        .search_scatter_timed(&item.q_proj, &base.filter(&pred))
+                                    item.index.search_scatter_timed_cancel(
+                                        &item.q_proj,
+                                        &base.filter(&pred),
+                                        cancel.as_ref(),
+                                    )
                                 }
-                                None => coll.index.search_scatter_timed(&item.q_proj, &base),
+                                None => item.index.search_scatter_timed_cancel(
+                                    &item.q_proj,
+                                    &base,
+                                    cancel.as_ref(),
+                                ),
                             };
                             let search_s =
                                 t_search.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -403,20 +566,40 @@ impl Engine {
                                 Some(t) => (t.merge_seconds, t.per_shard_seconds),
                                 None => (0.0, Vec::new()),
                             };
+                            let timed_out =
+                                cancel.as_ref().is_some_and(|t| t.is_cancelled());
+                            let degraded = result.degraded;
+                            let shards_failed = result.shards_failed;
+                            let stats = result.stats;
+                            let outcome = if timed_out && !spec.allow_partial {
+                                Outcome::DeadlineExceeded
+                            } else if timed_out {
+                                Outcome::Partial
+                            } else if degraded {
+                                Outcome::Degraded
+                            } else {
+                                Outcome::Ok
+                            };
                             if telem {
                                 let m = &item.obs;
                                 m.queries.inc();
                                 m.e2e.record_seconds(latency_s);
                                 m.search.record_seconds(search_s);
-                                m.hops.record(result.stats.hops as u64);
-                                m.touched.record(result.stats.bytes_touched as u64);
-                                if result.stats.deleted_skipped > 0 {
-                                    m.deleted_skipped.add(result.stats.deleted_skipped as u64);
+                                m.hops.record(stats.hops as u64);
+                                m.touched.record(stats.bytes_touched as u64);
+                                if stats.deleted_skipped > 0 {
+                                    m.deleted_skipped.add(stats.deleted_skipped as u64);
                                 }
-                                if result.stats.filtered > 0 {
-                                    m.filtered.add(result.stats.filtered as u64);
+                                if stats.filtered > 0 {
+                                    m.filtered.add(stats.filtered as u64);
                                 }
-                                wflight.capture_with(latency_s, || FlightRecord {
+                                if timed_out {
+                                    m.deadline_exceeded.inc();
+                                }
+                                if degraded {
+                                    m.degraded.inc();
+                                }
+                                let build = || FlightRecord {
                                     id: item.req.id,
                                     collection: item.collection.name().to_string(),
                                     kind: CaptureKind::Slow,
@@ -426,17 +609,36 @@ impl Engine {
                                     search_seconds: search_s,
                                     merge_seconds: merge_s,
                                     shard_seconds,
-                                    stats: result.stats,
+                                    stats,
                                     params,
                                     k: spec.k,
                                     batch_size: item.batch_size,
-                                });
+                                    outcome,
+                                };
+                                if outcome == Outcome::Ok {
+                                    wflight.capture_with(latency_s, build);
+                                } else {
+                                    // abnormal outcomes always land in
+                                    // the failure ring, however fast
+                                    wflight.capture_failure(build());
+                                }
                             }
+                            let (error, partial, ids, scores) =
+                                if timed_out && !spec.allow_partial {
+                                    (
+                                        Some(EngineError::DeadlineExceeded),
+                                        false,
+                                        Vec::new(),
+                                        Vec::new(),
+                                    )
+                                } else {
+                                    (None, timed_out, result.ids, result.scores)
+                                };
                             let _ = wtx.send(Response {
                                 id: item.req.id,
-                                ids: result.ids,
-                                scores: result.scores,
-                                stats: result.stats,
+                                ids,
+                                scores,
+                                stats,
                                 latency_s,
                                 batch_size: item.batch_size,
                                 stages: StageTimes {
@@ -445,6 +647,10 @@ impl Engine {
                                     search_s,
                                     merge_s,
                                 },
+                                error,
+                                degraded,
+                                shards_failed,
+                                partial,
                             });
                         }
                     })
@@ -476,7 +682,7 @@ impl Engine {
         Engine {
             registry,
             req_tx: Some(req_tx),
-            resp_rx,
+            resp_rx: Mutex::new(resp_rx),
             batcher: Some(batcher),
             workers,
             mut_tx,
@@ -487,6 +693,8 @@ impl Engine {
             started: Instant::now(),
             flight,
             coll_metrics,
+            pressure,
+            shed: cfg.shed,
         }
     }
 
@@ -522,6 +730,36 @@ impl Engine {
             }
         };
         let tx = self.req_tx.as_ref().ok_or(EngineError::Stopped)?;
+        // overload shedding: engine-global queue pressure, checked
+        // before the per-tenant quota so an overloaded engine rejects
+        // in O(two atomic loads) without touching collection state
+        if let Some(retry_after_ms) = self.shed.should_shed(&self.pressure) {
+            if let Some(m) = self.coll_metrics.get(name) {
+                m.shed.inc();
+                m.rejected.inc();
+            }
+            if obs::enabled() {
+                // shed requests never drew a ticket: id u64::MAX marks
+                // "rejected at admission" in the failure ring
+                self.flight.capture_failure(FlightRecord {
+                    id: u64::MAX,
+                    collection: name.to_string(),
+                    kind: CaptureKind::Failure,
+                    e2e_seconds: 0.0,
+                    queue_seconds: 0.0,
+                    project_seconds: 0.0,
+                    search_seconds: 0.0,
+                    merge_seconds: 0.0,
+                    shard_seconds: Vec::new(),
+                    stats: Default::default(),
+                    params: SearchParams::default(),
+                    k: spec.k,
+                    batch_size: 0,
+                    outcome: Outcome::Shed,
+                });
+            }
+            return Err(EngineError::Overloaded { retry_after_ms });
+        }
         if !coll.admit_search() {
             if let Some(m) = self.coll_metrics.get(name) {
                 m.rejected.inc();
@@ -536,7 +774,13 @@ impl Engine {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let mut req = Request::with_spec(id, query, spec);
         req.submitted = Some(Instant::now());
+        // ORDERING: AcqRel — depth is incremented before the send so
+        // the batcher's decrement (after dequeue) can never underflow;
+        // pairs with should_shed's Acquire read.
+        self.pressure.depth.fetch_add(1, Ordering::AcqRel);
         if tx.send(req).is_err() {
+            // ORDERING: AcqRel — roll back the increment above.
+            self.pressure.depth.fetch_sub(1, Ordering::AcqRel);
             coll.finish_search();
             return Err(EngineError::Stopped);
         }
@@ -576,7 +820,7 @@ impl Engine {
             .registry
             .get(name)
             .ok_or_else(|| EngineError::UnknownCollection(name.to_string()))?;
-        if !coll.index.is_live() {
+        if !coll.index().is_live() {
             return Err(EngineError::NotLive {
                 collection: name.to_string(),
             });
@@ -612,6 +856,8 @@ impl Engine {
     pub fn quiesce_mutations(&mut self) {
         drop(self.mut_tx.take());
         if let Some(h) = self.ingest.take() {
+            // DEADLINE: the ingest worker exits as soon as its (just
+            // dropped) channel drains — bounded by the pending backlog.
             let _ = h.join();
         }
     }
@@ -620,8 +866,20 @@ impl Engine {
     /// first (engine failure mid-drain), returns the responses that
     /// did arrive rather than panicking the caller.
     pub fn drain(&self, n: usize) -> Vec<Response> {
+        // a poisoned response lane only means another drainer panicked
+        // between recvs; the receiver itself is still intact
+        let rx = self
+            .resp_rx
+            // DEADLINE: held by the (single) drainer; contention here
+            // is a caller bug, not a serve-path wait
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         (0..n)
-            .map_while(|_| self.resp_rx.recv().ok())
+            // DEADLINE: every admitted request yields exactly one
+            // response (shed/expired ones are answered at admission or
+            // by the batcher), so recv waits at most one in-flight
+            // search; worker death surfaces as Err and ends the drain.
+            .map_while(|_| rx.recv().ok())
             .collect()
     }
 
@@ -631,14 +889,24 @@ impl Engine {
         self.quiesce_mutations();
         drop(self.req_tx.take());
         if let Some(b) = self.batcher.take() {
+            // DEADLINE: the batcher exits once the (just dropped)
+            // request channel drains — bounded by the queued backlog.
             let _ = b.join();
         }
         for w in self.workers.drain(..) {
+            // DEADLINE: workers exit when the batcher closes the work
+            // channel; each finishes at most one in-flight search.
             let _ = w.join();
         }
         // collect any leftover responses
+        let rx = self
+            .resp_rx
+            // DEADLINE: all threads are joined; nothing else can hold
+            // or contend for the response lane now
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut rest = Vec::new();
-        while let Ok(r) = self.resp_rx.try_recv() {
+        while let Ok(r) = rx.try_recv() {
             rest.push(r);
         }
         rest
@@ -674,6 +942,120 @@ impl Engine {
     /// The engine's flight recorder (e.g. to check [`FlightRecorder::seen`]).
     pub fn flight_recorder(&self) -> &Arc<FlightRecorder> {
         &self.flight
+    }
+
+    /// Graceful snapshot hot-swap: replace `name`'s serve index with
+    /// the snapshot at `path` **without dropping a single in-flight
+    /// query**. The protocol:
+    ///
+    /// 1. load the new snapshot on a spawned thread (a load panic
+    ///    becomes [`EngineError::SwapFailed`], never an engine abort);
+    /// 2. gate it behind the same deep-invariant fsck the `fsck`
+    ///    subcommand runs, plus an input-dimension compatibility check
+    ///    against the index currently serving;
+    /// 3. atomically swap the collection's serve slot (queries admitted
+    ///    after this point search the new index; queries already in
+    ///    flight keep their `Arc` snapshot of the old one);
+    /// 4. drain: wait for the old index's refcount to fall to one
+    ///    before dropping it, bounded by [`SWAP_DRAIN_TIMEOUT`].
+    ///
+    /// On any failure the old index is untouched and still serving.
+    /// Live (mutable) collections refuse to hot-swap: their mutation
+    /// journal would be silently discarded.
+    pub fn swap_collection(
+        &self,
+        name: &str,
+        path: &std::path::Path,
+    ) -> Result<SwapReport, EngineError> {
+        let fail = |reason: String| EngineError::SwapFailed {
+            collection: name.to_string(),
+            reason,
+        };
+        let coll = self
+            .registry
+            .get(name)
+            .ok_or_else(|| EngineError::UnknownCollection(name.to_string()))?;
+        if coll.index().is_live() {
+            return Err(fail(
+                "live collections cannot hot-swap (their mutation journal would be lost); \
+                 quiesce and restart instead"
+                    .to_string(),
+            ));
+        }
+        // 1. load off-thread: isolates load panics from the caller
+        let snap = path.to_path_buf();
+        let loader = std::thread::Builder::new()
+            .name("leanvec-swap-load".into())
+            .spawn(move || -> Result<ShardedIndex, String> {
+                #[cfg(any(test, feature = "failpoints"))]
+                if crate::util::failpoints::hit("io_error_on_load", None).is_some() {
+                    return Err("injected i/o error (failpoint io_error_on_load)".to_string());
+                }
+                if snap.join(MANIFEST_NAME).is_file() {
+                    ShardedIndex::load_dir(&snap)
+                        .map(|(ix, _meta)| ix)
+                        .map_err(|e| e.to_string())
+                } else {
+                    LeanVecIndex::load(&snap)
+                        .map(|(ix, _meta)| ShardedIndex::from_single(Arc::new(ix)))
+                        .map_err(|e| e.to_string())
+                }
+            })
+            .map_err(|e| fail(format!("spawn loader: {e}")))?;
+        let new_index = loader
+            // DEADLINE: bounded by one snapshot read + decode on the
+            // loader thread; this is the swap control path, not the
+            // query path.
+            .join()
+            .map_err(|_| fail("snapshot loader panicked".to_string()))?
+            .map_err(fail)?;
+        // 2. fsck gate: never swap in a corrupt index
+        let report = new_index.check_invariants();
+        if !report.is_clean() {
+            let first = &report.violations[0];
+            return Err(fail(format!(
+                "fsck found {} violation(s); first: [{}/{}] {}",
+                report.violations.len(),
+                first.layer,
+                first.code,
+                first.detail
+            )));
+        }
+        let old_probe = coll.index();
+        let (old_dim, new_dim) = (
+            old_probe.model().input_dim(),
+            new_index.model().input_dim(),
+        );
+        drop(old_probe); // must not hold an extra refcount into the drain
+        if old_dim != new_dim {
+            return Err(fail(format!(
+                "query dimension mismatch: serving {old_dim}, snapshot {new_dim}"
+            )));
+        }
+        // 3. atomic swap: a pointer exchange under the collection's lock
+        let shards = new_index.shards();
+        let old = coll.swap_index(Arc::new(new_index));
+        // 4. drain: every in-flight query holds an `Arc` snapshot of
+        // the old index (workers via WorkItem, the batcher via its
+        // per-group snapshot); when the refcount falls to one, `old`
+        // here is the last holder and the drop below frees it.
+        // DEADLINE: poll loop bounded by SWAP_DRAIN_TIMEOUT.
+        let t0 = Instant::now();
+        while Arc::strong_count(&old) > 1 && t0.elapsed() < SWAP_DRAIN_TIMEOUT {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let drained = Arc::strong_count(&old) == 1;
+        let drain_seconds = t0.elapsed().as_secs_f64();
+        drop(old);
+        if obs::enabled() {
+            obs::handles().engine_swaps.inc();
+        }
+        Ok(SwapReport {
+            collection: name.to_string(),
+            shards,
+            drained,
+            drain_seconds,
+        })
     }
 
     /// Direct parallel batch path (no channels): project the whole
@@ -741,6 +1123,24 @@ impl Engine {
     }
 }
 
+/// How long [`Engine::swap_collection`] waits for in-flight queries
+/// against the old index to finish before dropping its handle anyway
+/// (the index memory is then freed by whichever straggler drops last).
+pub const SWAP_DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What one [`Engine::swap_collection`] hot-swap did.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    pub collection: String,
+    /// shards in the incoming index
+    pub shards: usize,
+    /// the old index's refcount reached one (every in-flight query
+    /// finished) before the swap call returned
+    pub drained: bool,
+    /// seconds spent waiting for in-flight queries on the old index
+    pub drain_seconds: f64,
+}
+
 /// Resolve a request's [`QuerySpec`] against its collection's defaults
 /// via the one shared rule ([`crate::index::query::resolve_params`]).
 /// The results are clamped to >= 1 so a malformed spec degrades
@@ -753,12 +1153,72 @@ fn resolve_spec(spec: &QuerySpec, defaults: SearchParams) -> SearchParams {
     }
 }
 
+/// Resolve an admitted request whose deadline expired before its search
+/// ran (shed in the batcher queue, or caught at the worker): release
+/// the admission slot, count it, record the failure, and send exactly
+/// ONE typed-error response so drain bookkeeping never hangs.
+fn send_deadline_failure(
+    resp_tx: &Sender<Response>,
+    flight: &FlightRecorder,
+    item: &WorkItem,
+    telem: bool,
+) {
+    // release the admission slot before the send (same discipline as
+    // the success path)
+    item.collection.finish_search();
+    let latency_s = item
+        .req
+        .submitted
+        .map(|t| t.elapsed().as_secs_f64())
+        .unwrap_or(0.0);
+    if telem {
+        item.obs.deadline_exceeded.inc();
+        flight.capture_failure(FlightRecord {
+            id: item.req.id,
+            collection: item.collection.name().to_string(),
+            kind: CaptureKind::Failure,
+            e2e_seconds: latency_s,
+            queue_seconds: item.queue_s,
+            project_seconds: item.project_s,
+            search_seconds: 0.0,
+            merge_seconds: 0.0,
+            shard_seconds: Vec::new(),
+            stats: Default::default(),
+            params: SearchParams::default(),
+            k: item.req.spec.k,
+            batch_size: item.batch_size,
+            outcome: Outcome::DeadlineExceeded,
+        });
+    }
+    let _ = resp_tx.send(Response {
+        id: item.req.id,
+        ids: Vec::new(),
+        scores: Vec::new(),
+        stats: Default::default(),
+        latency_s,
+        batch_size: item.batch_size,
+        stages: StageTimes {
+            queue_s: item.queue_s,
+            project_s: item.project_s,
+            ..StageTimes::default()
+        },
+        error: Some(EngineError::DeadlineExceeded),
+        degraded: false,
+        shards_failed: 0,
+        partial: false,
+    });
+}
+
+#[allow(clippy::too_many_arguments)] // one call site, spawned at start
 fn batcher_loop(
     registry: Arc<CollectionRegistry>,
     cfg: EngineConfig,
     req_rx: Receiver<Request>,
     work_tx: Sender<WorkItem>,
+    resp_tx: Sender<Response>,
     metrics: Arc<HashMap<String, Arc<CollHandles>>>,
+    pressure: Arc<QueuePressure>,
+    flight: Arc<FlightRecorder>,
 ) {
     let batcher = Batcher::new(cfg.batch);
     // PJRT runtime (if requested) must be constructed on this thread.
@@ -775,32 +1235,98 @@ fn batcher_loop(
 
     while let Some(batch) = batcher.next_batch(&req_rx) {
         let bs = batch.len();
+        // ORDERING: AcqRel — every request in this batch left the
+        // queue; pairs with submit's pre-send increment, so this can
+        // never underflow.
+        pressure.depth.fetch_sub(bs, Ordering::AcqRel);
         // telemetry checked per batch: the disabled path skips every
-        // clock read below, not just the record() calls
+        // clock read below (unless shedding or deadlines need one),
+        // not just the record() calls
         let telem = obs::enabled();
-        let dequeued = if telem {
+        if telem {
             obs::handles().batcher_batch_size.record(bs as u64);
-            Some(Instant::now())
-        } else {
-            None
-        };
+        }
+        let need_clock = telem
+            || cfg.shed.enabled()
+            || batch.iter().any(|r| r.spec.timeout_ms.is_some());
+        let dequeued = if need_clock { Some(Instant::now()) } else { None };
+        // feed the shed policy the oldest queue wait in this batch:
+        // that is what the NEXT admitted request is signing up for
+        if cfg.shed.enabled() {
+            if let Some(d) = dequeued {
+                let oldest = batch
+                    .iter()
+                    .filter_map(|r| r.submitted)
+                    .map(|t| d.duration_since(t))
+                    .max()
+                    .unwrap_or_default();
+                // ORDERING: Release pairs with should_shed's Acquire.
+                pressure
+                    .wait_nanos
+                    .store(oldest.as_nanos() as u64, Ordering::Release);
+            }
+        }
         // group the batch by collection: one projection matmul per
         // collection (each has its own model), insertion order kept so
-        // single-collection batches stay one contiguous matmul
+        // single-collection batches stay one contiguous matmul.
+        // Requests that already missed their deadline are shed here —
+        // before paying for their share of the projection — and resolve
+        // to a typed-error response (allow_partial requests continue:
+        // the worker gives them whatever traversal can still gather).
         let mut groups: Vec<(Arc<Collection>, Vec<Request>)> = Vec::new();
         for req in batch {
             let name = req.spec.collection_name();
-            match groups.iter_mut().find(|(c, _)| c.name() == name) {
-                Some((_, reqs)) => reqs.push(req),
+            let coll = match registry.get(name) {
+                Some(c) => c,
                 // submit_spec validated the name; a miss here means the
                 // registry changed under us, which it never does
-                None => match registry.get(name) {
-                    Some(c) => groups.push((Arc::clone(c), vec![req])),
-                    None => {}
-                },
+                None => continue,
+            };
+            let expired = match (dequeued, req.submitted, req.spec.timeout_ms) {
+                (Some(now), Some(t0), Some(ms)) => {
+                    !req.spec.allow_partial
+                        && now.duration_since(t0) >= Duration::from_millis(ms)
+                }
+                _ => false,
+            };
+            if expired {
+                let queue_s = match (dequeued, req.submitted) {
+                    (Some(d), Some(t)) => d.duration_since(t).as_secs_f64(),
+                    _ => 0.0,
+                };
+                let ch = metrics
+                    .get(name)
+                    .cloned()
+                    .unwrap_or_else(|| Arc::new(CollHandles::resolve(name)));
+                send_deadline_failure(
+                    &resp_tx,
+                    &flight,
+                    &WorkItem {
+                        req,
+                        q_proj: Vec::new(),
+                        batch_size: bs,
+                        collection: Arc::clone(coll),
+                        index: coll.index(),
+                        deadline: None,
+                        queue_s,
+                        project_s: 0.0,
+                        obs: ch,
+                    },
+                    telem,
+                );
+                continue;
+            }
+            match groups.iter_mut().find(|(c, _)| c.name() == name) {
+                Some((_, reqs)) => reqs.push(req),
+                None => groups.push((Arc::clone(coll), vec![req])),
             }
         }
         for (coll, reqs) in groups {
+            // ONE serve-index snapshot per group: the projection below
+            // uses this snapshot's model, and the same `Arc` ships in
+            // every WorkItem, so a concurrent hot-swap can never pair
+            // an old-model projection with a new index
+            let index = coll.index();
             // project the group as one matmul: Q (B, D) x A^T -> (B, d).
             // The projection model is frozen even on live shards, so
             // batching is mutation-oblivious.
@@ -809,11 +1335,11 @@ fn batcher_loop(
             let projected: Vec<Vec<f32>> = match pjrt.as_mut() {
                 Some(p) => {
                     use crate::index::builder::BatchProjector;
-                    p.project(&coll.index.model().a, &queries)
+                    p.project(&index.model().a, &queries)
                 }
                 None => {
                     let qm = rows_to_matrix(&queries);
-                    let proj: Matrix = qm.matmul_nt(&coll.index.model().a); // (B, d)
+                    let proj: Matrix = qm.matmul_nt(&index.model().a); // (B, d)
                     (0..queries.len()).map(|i| proj.row(i).to_vec()).collect()
                 }
             };
@@ -835,12 +1361,18 @@ fn batcher_loop(
                 if telem {
                     obs::handles().batcher_queue_wait.record_seconds(queue_s);
                 }
+                let deadline = match (req.submitted, req.spec.timeout_ms) {
+                    (Some(t0), Some(ms)) => Some(t0 + Duration::from_millis(ms)),
+                    _ => None,
+                };
                 if work_tx
                     .send(WorkItem {
                         req,
                         q_proj,
                         batch_size: bs,
                         collection: Arc::clone(&coll),
+                        index: Arc::clone(&index),
+                        deadline,
                         queue_s,
                         project_s: project_share,
                         obs: Arc::clone(&ch),
@@ -874,10 +1406,16 @@ fn ingest_loop(
     stats: Arc<IngestStats>,
     consolidate_threshold: f64,
 ) {
+    // DEADLINE: blocking recv is the ingest lane's idle state;
+    // quiesce/shutdown drop the sender, which ends the loop with Err.
     while let Ok((coll, m)) = mut_rx.recv() {
         let telem = obs::enabled();
+        // snapshot the serve index once per mutation: a concurrent
+        // hot-swap must not move the index between the apply and the
+        // consolidation bookkeeping below
+        let index = coll.index();
         let applied = match m {
-            Mutation::Insert { ext_id, vector } => match coll.index.insert(ext_id, &vector) {
+            Mutation::Insert { ext_id, vector } => match index.insert(ext_id, &vector) {
                 Ok(_) => {
                     // ORDERING: Relaxed — stat counter (reporting only).
                     stats.inserts.fetch_add(1, Ordering::Relaxed);
@@ -889,7 +1427,7 @@ fn ingest_loop(
                     false
                 }
             },
-            Mutation::Delete { ext_id } => match coll.index.delete(ext_id) {
+            Mutation::Delete { ext_id } => match index.delete(ext_id) {
                 Ok(_) => {
                     // ORDERING: Relaxed — stat counter (reporting only).
                     stats.deletes.fetch_add(1, Ordering::Relaxed);
@@ -912,7 +1450,7 @@ fn ingest_loop(
         // the log-size bound is independent of the tombstone trigger: a
         // disabled threshold must not disable the memory bound
         if let Some((_shard, report)) =
-            coll.index.consolidate_one(consolidate_threshold, INGEST_LOG_FOLD)
+            index.consolidate_one(consolidate_threshold, INGEST_LOG_FOLD)
         {
             let nanos = (report.seconds * 1e9) as u64;
             // ORDERING: Relaxed — stat counters (reporting only).
@@ -928,7 +1466,7 @@ fn ingest_loop(
             // consolidation — this is the gauge operators alert on
             obs::handles()
                 .ingest_tombstone
-                .set(coll.index.max_tombstone_fraction());
+                .set(index.max_tombstone_fraction());
         }
     }
 }
@@ -1440,9 +1978,324 @@ mod tests {
         // threshold (one due shard compacts per mutation, so the final
         // mutation may leave at most one shard marginally over it), and
         // no deleted id is ever served
-        assert!(coll.index.max_tombstone_fraction() < 0.10, "shards kept compacted");
-        let r = coll.index.search_one(&Query::new(&rows[0]).k(10).window(60));
+        let ix = coll.index();
+        assert!(ix.max_tombstone_fraction() < 0.10, "shards kept compacted");
+        let r = ix.search_one(&Query::new(&rows[0]).k(10).window(60));
         assert!(r.ids.iter().all(|&id| id >= 80), "deleted id served: {:?}", r.ids);
         engine.shutdown();
+    }
+
+    #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
+    fn expired_deadline_resolves_to_exactly_one_error_response() {
+        let index = build_index(200, 16, 8);
+        let engine = Engine::start(
+            index,
+            EngineConfig {
+                workers: 1,
+                ..EngineConfig::default()
+            },
+        );
+        let q = vec![0.5f32; 16];
+        // a 0 ms deadline has always expired by the time the batcher
+        // (or worker) looks: deterministic deadline failure
+        let id = engine
+            .submit_spec(q.clone(), QuerySpec::top_k(5).with_timeout_ms(0))
+            .unwrap();
+        let responses = engine.drain(1);
+        assert_eq!(responses.len(), 1, "expired requests still respond");
+        let r = &responses[0];
+        assert_eq!(r.id, id);
+        assert_eq!(r.error, Some(EngineError::DeadlineExceeded));
+        assert!(!r.is_ok());
+        assert!(r.ids.is_empty() && r.scores.is_empty());
+        // the engine is healthy afterwards: normal requests still serve
+        engine.submit(q.clone(), 5).unwrap();
+        let ok = engine.drain(1);
+        assert_eq!(ok.len(), 1);
+        assert!(ok[0].is_ok());
+        assert_eq!(ok[0].ids.len(), 5);
+        // and with allow_partial the same expired deadline yields a
+        // usable (partial) answer instead of an error
+        engine
+            .submit_spec(
+                q.clone(),
+                QuerySpec::top_k(5).with_timeout_ms(0).with_allow_partial(),
+            )
+            .unwrap();
+        let partial = engine.drain(1);
+        assert_eq!(partial.len(), 1);
+        assert!(partial[0].is_ok(), "{:?}", partial[0].error);
+        assert!(partial[0].partial, "deadline tripped mid-search");
+        // admission bookkeeping: every path released its slot
+        let adm = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+        assert_eq!(adm.inflight.load(Ordering::Acquire), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shed_policy_trips_on_depth_and_wait() {
+        let p = QueuePressure::default();
+        let off = ShedPolicy::default();
+        assert!(!off.enabled());
+        assert_eq!(off.should_shed(&p), None, "disabled policy never sheds");
+
+        let by_depth = ShedPolicy {
+            max_queue_depth: 4,
+            max_queue_wait_ms: 0,
+        };
+        assert!(by_depth.enabled());
+        p.depth.store(3, Ordering::Release);
+        assert_eq!(by_depth.should_shed(&p), None, "under the bound");
+        p.depth.store(4, Ordering::Release);
+        assert!(by_depth.should_shed(&p).is_some(), "at the bound");
+
+        let by_wait = ShedPolicy {
+            max_queue_depth: 0,
+            max_queue_wait_ms: 10,
+        };
+        p.depth.store(0, Ordering::Release);
+        p.wait_nanos.store(50_000_000, Ordering::Release); // 50 ms
+        assert_eq!(
+            by_wait.should_shed(&p),
+            None,
+            "stale wait with an empty queue never sheds"
+        );
+        p.depth.store(1, Ordering::Release);
+        let hint = by_wait.should_shed(&p).expect("over the wait budget");
+        assert_eq!(hint, 50, "retry hint is the measured wait");
+        p.wait_nanos.store(0, Ordering::Release);
+        assert_eq!(by_wait.should_shed(&p), None, "wait cleared");
+        // the hint is never 0 even when the measured wait rounds to it
+        p.wait_nanos.store(100, Ordering::Release); // 100 ns
+        p.depth.store(100, Ordering::Release);
+        let both = ShedPolicy {
+            max_queue_depth: 4,
+            max_queue_wait_ms: 0,
+        };
+        assert_eq!(both.should_shed(&p), Some(1));
+    }
+
+    #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
+    fn overload_shedding_rejects_at_admission_with_retry_hint() {
+        let index = build_index(150, 16, 8);
+        let engine = Engine::start(
+            index,
+            EngineConfig {
+                workers: 1,
+                shed: ShedPolicy {
+                    max_queue_depth: 2,
+                    max_queue_wait_ms: 0,
+                },
+                ..EngineConfig::default()
+            },
+        );
+        let q = vec![0.5f32; 16];
+        // simulate a backed-up queue (the depth gauge is exactly what
+        // submit_spec consults)
+        engine.pressure.depth.fetch_add(5, Ordering::AcqRel);
+        match engine.submit(q.clone(), 3) {
+            Err(EngineError::Overloaded { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1, "hint never reads as 'now'");
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        // shed before quota: no admission slot was consumed
+        let adm = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+        assert_eq!(adm.inflight.load(Ordering::Acquire), 0);
+        assert_eq!(adm.submitted.load(Ordering::Relaxed), 0);
+        // pressure released -> admission recovers
+        engine.pressure.depth.fetch_sub(5, Ordering::AcqRel);
+        engine.submit(q, 3).unwrap();
+        assert_eq!(engine.drain(1).len(), 1);
+        engine.shutdown();
+    }
+
+    #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
+    fn swap_collection_replaces_serve_index_without_dropping_queries() {
+        // two indexes over DIFFERENT data, same dimensionality
+        let index_a = build_index(150, 16, 8);
+        let index_b = {
+            let mut rng = Rng::new(77);
+            let rows: Vec<Vec<f32>> = (0..150)
+                .map(|_| (0..16).map(|_| rng.gaussian_f32()).collect())
+                .collect();
+            let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+            gp.max_degree = 12;
+            gp.build_window = 30;
+            Arc::new(
+                IndexBuilder::new()
+                    .projection(ProjectionKind::Id)
+                    .target_dim(8)
+                    .graph_params(gp)
+                    .build(&rows, None, Similarity::InnerProduct),
+            )
+        };
+        let path = std::env::temp_dir().join(format!(
+            "leanvec-swap-test-{}.leanvec",
+            std::process::id()
+        ));
+        index_b
+            .save(&path, &crate::index::persist::SnapshotMeta::default())
+            .unwrap();
+        let engine = Engine::start(
+            Arc::clone(&index_a),
+            EngineConfig {
+                workers: 2,
+                ..EngineConfig::default()
+            },
+        );
+        let q = vec![0.5f32; 16];
+        engine.submit(q.clone(), 5).unwrap();
+        let before = engine.drain(1);
+        assert_eq!(before[0].ids, index_a.search_one(&Query::new(&q).k(5)).ids);
+
+        let report = engine.swap_collection(DEFAULT_COLLECTION, &path).unwrap();
+        assert_eq!(report.collection, DEFAULT_COLLECTION);
+        assert_eq!(report.shards, 1);
+        assert!(report.drained, "no queries in flight -> immediate drain");
+
+        // queries submitted after the swap are answered by the NEW data
+        engine.submit(q.clone(), 5).unwrap();
+        let after = engine.drain(1);
+        assert_eq!(after[0].ids, index_b.search_one(&Query::new(&q).k(5)).ids);
+        assert_ne!(before[0].ids, after[0].ids, "snapshots hold different data");
+
+        // a dimension-incompatible snapshot is refused and the engine
+        // keeps serving the current index
+        let bad = build_index(100, 12, 6);
+        let bad_path = std::env::temp_dir().join(format!(
+            "leanvec-swap-bad-{}.leanvec",
+            std::process::id()
+        ));
+        bad.save(&bad_path, &crate::index::persist::SnapshotMeta::default())
+            .unwrap();
+        match engine.swap_collection(DEFAULT_COLLECTION, &bad_path) {
+            Err(EngineError::SwapFailed { collection, reason }) => {
+                assert_eq!(collection, DEFAULT_COLLECTION);
+                assert!(reason.contains("dimension"), "{reason}");
+            }
+            other => panic!("expected SwapFailed, got {other:?}"),
+        }
+        engine.submit(q.clone(), 5).unwrap();
+        assert!(engine.drain(1)[0].is_ok(), "old index still serving");
+        // unknown collections are their own error class, not SwapFailed
+        assert_eq!(
+            engine.swap_collection("ghost", &path),
+            Err(EngineError::UnknownCollection("ghost".to_string()))
+        );
+        engine.shutdown();
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&bad_path).ok();
+    }
+
+    #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
+    fn live_collections_refuse_to_hot_swap() {
+        let index = build_index(120, 8, 4);
+        let live = Arc::new(crate::mutate::LiveIndex::from_index(
+            Arc::try_unwrap(index).expect("sole owner"),
+        ));
+        let engine = Engine::start_live(live, EngineConfig::default());
+        let path = std::env::temp_dir().join("leanvec-swap-never-read.leanvec");
+        match engine.swap_collection(DEFAULT_COLLECTION, &path) {
+            Err(EngineError::SwapFailed { reason, .. }) => {
+                assert!(reason.contains("live"), "{reason}");
+            }
+            other => panic!("expected SwapFailed, got {other:?}"),
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+
+    #[cfg_attr(miri, ignore)] // mmap/threads/index-build: unsupported or too slow under Miri
+    fn admission_counters_never_leak_under_concurrent_error_storm() {
+        // satellite invariant: whatever mix of success, quota rejection,
+        // and deadline failure a submission storm produces, every
+        // admitted request resolves exactly once and the in-flight gauge
+        // returns to zero — no slot leaks on any error path.
+        let index = build_index(200, 16, 8);
+        let mut registry = CollectionRegistry::new();
+        registry.register(
+            Collection::new(DEFAULT_COLLECTION, ShardedIndex::from_single(index))
+                .with_quota(TenantQuota {
+                    max_inflight: 4,
+                    max_pending_mutations: 0,
+                }),
+        );
+        let engine = Engine::start_collections(
+            registry,
+            EngineConfig {
+                workers: 2,
+                ..EngineConfig::default()
+            },
+        );
+        let admitted = AtomicUsize::new(0);
+        let quota_rejected = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let engine = &engine;
+                let admitted = &admitted;
+                let quota_rejected = &quota_rejected;
+                scope.spawn(move || {
+                    let q = vec![0.25f32 * (t + 1) as f32; 16];
+                    for i in 0..50 {
+                        // every third request carries an already-expired
+                        // deadline: the failure path runs under load too
+                        let spec = if i % 3 == 0 {
+                            QuerySpec::top_k(3).with_timeout_ms(0)
+                        } else {
+                            QuerySpec::top_k(3)
+                        };
+                        match engine.submit_spec(q.clone(), spec) {
+                            Ok(_) => {
+                                admitted.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(EngineError::QuotaExceeded { .. }) => {
+                                quota_rejected.fetch_add(1, Ordering::Relaxed);
+                                std::thread::yield_now();
+                            }
+                            Err(e) => panic!("unexpected error: {e}"),
+                        }
+                    }
+                });
+            }
+        });
+        let n = admitted.load(Ordering::Relaxed);
+        assert!(n > 0, "storm admitted nothing");
+        let responses = engine.drain(n);
+        assert_eq!(responses.len(), n, "every admitted request resolves once");
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no duplicate resolutions");
+        let adm = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+        assert_eq!(adm.inflight.load(Ordering::Acquire), 0, "slots all released");
+        assert_eq!(adm.submitted.load(Ordering::Relaxed) as usize, n);
+        assert_eq!(
+            adm.rejected.load(Ordering::Relaxed) as usize,
+            quota_rejected.load(Ordering::Relaxed)
+        );
+        // the storm's deadline failures are visible as typed errors
+        assert!(
+            responses.iter().any(|r| !r.is_ok()),
+            "some 0 ms deadlines must have expired"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        // concurrent submitters share &Engine across threads (and the
+        // chaos battery leans on it); losing Sync is an API break
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
     }
 }

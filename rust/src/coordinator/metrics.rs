@@ -258,6 +258,10 @@ mod tests {
                 search_s: lat * 0.6,
                 merge_s: lat * 0.1,
             },
+            error: None,
+            degraded: false,
+            shards_failed: 0,
+            partial: false,
         }
     }
 

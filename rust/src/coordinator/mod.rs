@@ -32,6 +32,9 @@ pub mod metrics;
 pub mod protocol;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use engine::{Engine, EngineConfig, EngineError, IngestSnapshot, IngestStats, QueryProjectorKind};
+pub use engine::{
+    Engine, EngineConfig, EngineError, IngestSnapshot, IngestStats, QueryProjectorKind,
+    ShedPolicy, SwapReport, SWAP_DRAIN_TIMEOUT,
+};
 pub use metrics::{Metrics, QueryStatsSummary, ServeReport, StageSummary, StatsPercentiles};
 pub use protocol::{Mutation, QuerySpec, Request, Response, StageTimes};

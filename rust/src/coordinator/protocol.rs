@@ -1,5 +1,6 @@
 //! Request/response types for the serving engine.
 
+use super::engine::EngineError;
 use crate::index::query::QueryStats;
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -28,6 +29,17 @@ pub struct QuerySpec {
     /// [`DEFAULT_COLLECTION`](crate::shard::DEFAULT_COLLECTION).
     /// `Arc` so a tenant's requests share one allocation of the name.
     pub collection: Option<Arc<str>>,
+    /// request deadline, milliseconds from submission. `None` (the
+    /// default) means no deadline. An expired request is shed in the
+    /// batcher queue or cancelled mid-search; either way it resolves to
+    /// [`EngineError::DeadlineExceeded`] — or, with
+    /// [`QuerySpec::allow_partial`], to whatever results traversal had
+    /// accumulated when the deadline tripped.
+    pub timeout_ms: Option<u64>,
+    /// when the deadline trips mid-search, return the partial results
+    /// gathered so far (marked [`Response::partial`]) instead of
+    /// [`EngineError::DeadlineExceeded`]
+    pub allow_partial: bool,
 }
 
 impl QuerySpec {
@@ -59,6 +71,21 @@ impl QuerySpec {
     /// Restrict results to a pre-built shared allow-set.
     pub fn with_allow_set(mut self, ids: Arc<HashSet<u32>>) -> QuerySpec {
         self.allow = Some(ids);
+        self
+    }
+
+    /// Give this request `ms` milliseconds from submission; past that
+    /// it resolves to [`EngineError::DeadlineExceeded`] (or a partial
+    /// answer under [`QuerySpec::with_allow_partial`]).
+    pub fn with_timeout_ms(mut self, ms: u64) -> QuerySpec {
+        self.timeout_ms = Some(ms);
+        self
+    }
+
+    /// On a mid-search deadline miss, return the partial results
+    /// accumulated so far instead of an error.
+    pub fn with_allow_partial(mut self) -> QuerySpec {
+        self.allow_partial = true;
         self
     }
 
@@ -132,7 +159,11 @@ pub struct StageTimes {
     pub merge_s: f64,
 }
 
-/// The engine's answer.
+/// The engine's answer. Every admitted request produces exactly one
+/// `Response` — including requests that fail after admission (deadline
+/// missed in queue or mid-search), which arrive with [`Response::error`]
+/// set and empty results, so a drain loop never hangs counting
+/// responses that will not come.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
@@ -147,6 +178,24 @@ pub struct Response {
     pub batch_size: usize,
     /// where the latency went (observability; zeros when telemetry off)
     pub stages: StageTimes,
+    /// why the request failed after admission (`None` on success; a
+    /// degraded or partial answer is a success with its flag set)
+    pub error: Option<EngineError>,
+    /// one or more shards failed to contribute to this answer
+    pub degraded: bool,
+    /// how many shards failed to contribute (0 on a clean answer)
+    pub shards_failed: usize,
+    /// results are partial: the deadline tripped mid-search and the
+    /// request opted into [`QuerySpec::allow_partial`]
+    pub partial: bool,
+}
+
+impl Response {
+    /// Whether this response carries usable results (possibly degraded
+    /// or partial, never an error).
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
 }
 
 #[cfg(test)]
@@ -177,5 +226,15 @@ mod tests {
         assert_eq!(s.collection_name(), crate::shard::DEFAULT_COLLECTION);
         let s = s.with_collection("tenant-b");
         assert_eq!(s.collection_name(), "tenant-b");
+    }
+
+    #[test]
+    fn deadline_knobs_default_off_and_accumulate() {
+        let s = QuerySpec::top_k(3);
+        assert_eq!(s.timeout_ms, None, "no deadline unless asked for");
+        assert!(!s.allow_partial);
+        let s = s.with_timeout_ms(25).with_allow_partial();
+        assert_eq!(s.timeout_ms, Some(25));
+        assert!(s.allow_partial);
     }
 }

@@ -15,6 +15,9 @@
 //! visit order, dedup, and buffer semantics are identical to scoring
 //! one id at a time.
 
+use crate::util::cancel::CancelToken;
+use std::sync::Arc;
+
 /// One search-buffer entry.
 #[derive(Clone, Copy, Debug)]
 pub struct Candidate {
@@ -22,6 +25,13 @@ pub struct Candidate {
     pub score: f32,
     pub expanded: bool,
 }
+
+/// Expansions between cancellation polls: the traversal loop checks the
+/// installed [`CancelToken`] every this-many hops, so a deadline is
+/// honored within ~32 expansions (tens of microseconds) while the
+/// fault-free path pays one branch per hop and at most one relaxed
+/// atomic load (plus a clock read while a deadline is armed) per poll.
+pub const CANCEL_POLL_HOPS: usize = 32;
 
 /// Reusable search state.
 pub struct SearchCtx {
@@ -42,6 +52,10 @@ pub struct SearchCtx {
     scratch_nbuf: Vec<u32>,
     scratch_batch: Vec<u32>,
     scratch_scores: Vec<f32>,
+    /// cooperative cancellation: when installed, the traversal loop
+    /// polls this every [`CANCEL_POLL_HOPS`] expansions and stops
+    /// early, leaving the buffers holding a valid partial result
+    cancel: Option<Arc<CancelToken>>,
 }
 
 /// Per-search counters (hops, score evaluations) — these drive the
@@ -65,7 +79,23 @@ impl SearchCtx {
             scratch_nbuf: Vec::new(),
             scratch_batch: Vec::new(),
             scratch_scores: Vec::new(),
+            cancel: None,
         }
+    }
+
+    /// Install (or clear, with `None`) the cancellation token the next
+    /// traversal polls. The scatter path installs the request's token
+    /// into each per-shard context before searching and clears it after
+    /// — pooled contexts also drop it when returned to their pool, so a
+    /// stale token can never cut a later request short.
+    pub fn set_cancel(&mut self, token: Option<Arc<CancelToken>>) {
+        self.cancel = token;
+    }
+
+    /// True once the installed token (if any) reports cancelled.
+    #[inline]
+    fn cancel_tripped(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|t| t.is_cancelled())
     }
 
     /// Grow the visited array if the graph grew.
@@ -189,7 +219,11 @@ impl std::ops::DerefMut for PooledCtx<'_> {
 
 impl Drop for PooledCtx<'_> {
     fn drop(&mut self) {
-        if let Some(ctx) = self.ctx.take() {
+        if let Some(mut ctx) = self.ctx.take() {
+            // never return a context with a live cancel token: the next
+            // borrower is a different request (and this drop may be
+            // running on a panic-unwind path after an injected fault)
+            ctx.set_cancel(None);
             // a poisoned lock means another searcher panicked while
             // pushing/popping; the Vec inside is still a valid free
             // list, and returning the ctx keeps the pool from leaking
@@ -407,6 +441,13 @@ where
         ctx.buffer[pos].expanded = true;
         let node = ctx.buffer[pos].id;
         ctx.stats.hops += 1;
+        // cancellation checkpoint: bounded staleness (the deadline is
+        // honored within CANCEL_POLL_HOPS expansions), near-zero cost
+        // when no token is installed. Breaking here leaves the buffers
+        // sorted and consistent — the caller reads a partial result.
+        if ctx.stats.hops % CANCEL_POLL_HOPS == 0 && ctx.cancel_tripped() {
+            break;
+        }
         neighbors_fn(node, &mut nbuf);
         // gather the unvisited neighbors (marking them visited, in
         // neighbor order), block-score them, bulk-insert
@@ -733,6 +774,71 @@ mod tests {
         released.store(true, Ordering::SeqCst);
         drop(held);
         waiter.join().unwrap();
+    }
+
+    #[test]
+    fn cancelled_token_stops_traversal_within_poll_interval() {
+        // long path so an uncancelled traversal needs hundreds of hops
+        let n = 400usize;
+        let adj: Vec<Vec<u32>> = (0..n)
+            .map(|i| {
+                let mut v = Vec::new();
+                if i > 0 {
+                    v.push((i - 1) as u32);
+                }
+                if i + 1 < n {
+                    v.push((i + 1) as u32);
+                }
+                v
+            })
+            .collect();
+        // monotone scores pull the beam down the whole path
+        let run = |cancel: Option<Arc<CancelToken>>| {
+            let mut ctx = SearchCtx::new(n);
+            ctx.set_cancel(cancel);
+            let first = greedy_search(
+                &mut ctx,
+                &[0],
+                4,
+                |id| id as f32,
+                |id, out| {
+                    out.clear();
+                    out.extend_from_slice(&adj[id as usize]);
+                },
+            )
+            .first()
+            .copied();
+            (ctx.stats.hops, first)
+        };
+        let (full_hops, full_best) = run(None);
+        assert!(full_hops > 2 * CANCEL_POLL_HOPS, "graph too small to test");
+        assert_eq!(full_best.unwrap().id, (n - 1) as u32);
+
+        let token = Arc::new(CancelToken::new());
+        token.cancel();
+        let (cut_hops, cut_best) = run(Some(token));
+        assert!(
+            cut_hops <= CANCEL_POLL_HOPS,
+            "cancelled traversal ran {cut_hops} hops"
+        );
+        // partial results are still valid, sorted candidates
+        assert!(cut_best.is_some(), "partial result retained");
+    }
+
+    #[test]
+    fn pooled_ctx_drop_clears_cancel_token() {
+        let pool = CtxPool::new(1, 8);
+        {
+            let mut ctx = pool.acquire();
+            let token = Arc::new(CancelToken::new());
+            token.cancel();
+            ctx.set_cancel(Some(token));
+        } // returned to the pool here
+        let ctx = pool.acquire();
+        assert!(
+            !ctx.cancel_tripped(),
+            "stale token survived the pool round-trip"
+        );
     }
 
     #[test]

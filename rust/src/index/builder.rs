@@ -323,6 +323,7 @@ impl VectorIndex for SearchIndex {
                         filtered: ctx.stats.filtered,
                         deleted_skipped: 0,
                     },
+                    ..SearchResult::default()
                 }
             }
         }

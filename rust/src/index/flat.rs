@@ -109,6 +109,7 @@ impl VectorIndex for FlatIndex {
                 filtered,
                 deleted_skipped: 0,
             },
+            ..SearchResult::default()
         }
     }
 

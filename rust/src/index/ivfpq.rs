@@ -353,6 +353,7 @@ impl VectorIndex for IvfPqIndex {
                 filtered,
                 deleted_skipped: 0,
             },
+            ..SearchResult::default()
         }
     }
 

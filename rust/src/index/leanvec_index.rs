@@ -248,6 +248,7 @@ impl LeanVecIndex {
                     filtered: ctx.stats.filtered,
                     deleted_skipped: 0,
                 },
+                ..SearchResult::default()
             };
         }
         let ids: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
@@ -274,7 +275,12 @@ impl LeanVecIndex {
                 .index_rerank
                 .record_seconds(t.elapsed().as_secs_f64());
         }
-        SearchResult { ids, scores, stats }
+        SearchResult {
+            ids,
+            scores,
+            stats,
+            ..SearchResult::default()
+        }
     }
 
     /// Re-score `ids` with the secondary store and return the top-k.

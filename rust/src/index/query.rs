@@ -251,6 +251,13 @@ pub struct SearchResult {
     pub scores: Vec<f32>,
     /// per-query accounting
     pub stats: QueryStats,
+    /// true when the answer is missing contributions it should have
+    /// had: one or more scatter shards failed (panic, poisoned state)
+    /// and the merge proceeded over the survivors. Degraded results are
+    /// valid, best-first answers over the shards that responded.
+    pub degraded: bool,
+    /// how many shards failed to contribute (0 on a clean query)
+    pub shards_failed: usize,
 }
 
 /// The uniform search interface every index implements. `Sync` is a

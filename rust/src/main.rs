@@ -33,7 +33,8 @@
 
 use leanvec::config::{BuildParams, Compression, ProjectionKind};
 use leanvec::coordinator::{
-    BatchPolicy, Engine, EngineConfig, Metrics, QueryProjectorKind, QuerySpec, ServeReport,
+    BatchPolicy, Engine, EngineConfig, EngineError, Metrics, QueryProjectorKind, QuerySpec,
+    ServeReport, ShedPolicy,
 };
 use leanvec::data::synth::{generate, paper_datasets, paper_target_dim};
 use leanvec::experiments::harness::ExpContext;
@@ -60,6 +61,7 @@ fn main() {
         Some("mutate") => cmd_mutate(&args),
         Some("metrics") => cmd_metrics(&args),
         Some("fsck") => cmd_fsck(&args),
+        Some("swap") => cmd_swap(&args),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             print_usage();
@@ -68,13 +70,20 @@ fn main() {
     };
     if let Err(e) = result {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // engine failures carry a distinct exit code per class (10-16)
+        // so scripts can branch on WHAT failed; everything else stays
+        // the generic 1
+        let code = e
+            .downcast_ref::<EngineError>()
+            .map(EngineError::exit_code)
+            .unwrap_or(1);
+        std::process::exit(code);
     }
 }
 
 fn print_usage() {
     println!(
-        "usage: repro <experiment|build|search|serve|mutate|metrics|fsck|artifacts> [flags]\n\
+        "usage: repro <experiment|build|search|serve|mutate|metrics|fsck|swap|artifacts> [flags]\n\
          \n\
          repro experiment all --out results --scale 0.35\n\
          repro experiment fig5 --pjrt\n\
@@ -91,6 +100,8 @@ fn print_usage() {
          repro serve --index rqa-768.leanvec --metrics-every 500   (periodic exposition)\n\
          repro fsck --index rqa-768.leanvec   (deep consistency check; exit 2 on violations)\n\
          repro fsck --index rqa-768.lvshards  (checks every shard + routing/ownership)\n\
+         repro swap --index a.leanvec --next b.leanvec   (hot-swap under load, 0 dropped)\n\
+         repro serve --index rqa-768.leanvec --watch-snapshot   (hot-swap on file change)\n\
          repro search --dataset wit-512 --projection ood-es   (ad hoc, no snapshot)\n\
          repro search --dataset deep-256 --baseline ivfpq --nprobe 16\n\
          repro artifacts\n\
@@ -107,7 +118,11 @@ fn print_usage() {
          telemetry: repro metrics --index F [--queries N] [--json] scrapes the\n\
          registry after a workload; serve --metrics-every N dumps a validated\n\
          exposition every N responses and prints the slow-query flight\n\
-         recorder on exit (LEANVEC_NO_TELEMETRY=1 disables the whole layer)"
+         recorder on exit (LEANVEC_NO_TELEMETRY=1 disables the whole layer)\n\
+         robustness: --timeout-ms MS (per-request deadline; expired requests\n\
+         resolve to a typed error, exit code 14), --allow-partial (partial\n\
+         results instead), --max-queue-depth N / --max-queue-wait-ms MS\n\
+         (overload shedding at admission, exit code 15; see docs/ROBUSTNESS.md)"
     );
 }
 
@@ -725,6 +740,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_batch: positive_usize(args, "batch", 64)?,
             max_wait: std::time::Duration::from_micros(wait_us),
         },
+        shed: ShedPolicy {
+            max_queue_depth: checked_usize_flag(args, "max-queue-depth", 0)?,
+            max_queue_wait_ms: checked_usize_flag(args, "max-queue-wait-ms", 0)? as u64,
+        },
         search: params,
         projector: if ctx.use_pjrt {
             QueryProjectorKind::Pjrt(leanvec::runtime::default_artifacts_dir())
@@ -733,6 +752,25 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         },
         ..EngineConfig::default()
     };
+    let timeout_ms = args
+        .opt_str("timeout-ms")
+        .map(|s| {
+            s.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--timeout-ms must be an integer, got {s:?}"))
+        })
+        .transpose()?;
+    let allow_partial = args.switch("allow-partial");
+    // --watch-snapshot: poll the snapshot file while draining and
+    // hot-swap the serving index when it changes (requires --index)
+    let watch = if args.switch("watch-snapshot") {
+        let p = args.opt_str("index").ok_or_else(|| {
+            anyhow::anyhow!("--watch-snapshot needs --index SNAPSHOT to watch")
+        })?;
+        Some(std::path::PathBuf::from(p))
+    } else {
+        None
+    };
+    let mut last_mtime = watch.as_deref().and_then(snapshot_mtime);
     let n_shards = sharded.shards();
     let mut registry = CollectionRegistry::new();
     registry.register(Collection::new(collection.clone(), sharded).with_defaults(params));
@@ -740,21 +778,37 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let engine = Engine::start_collections(registry, cfg);
     println!("serving collection {collection:?} ({n_shards} shards)");
     let t0 = std::time::Instant::now();
+    let mut admitted = 0usize;
+    let mut shed = 0usize;
     for q in &queries {
-        engine
-            .submit_spec(q.clone(), QuerySpec::top_k(k).with_collection(&collection))
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut spec = QuerySpec::top_k(k).with_collection(&collection);
+        if let Some(ms) = timeout_ms {
+            spec = spec.with_timeout_ms(ms);
+        }
+        if allow_partial {
+            spec = spec.with_allow_partial();
+        }
+        match engine.submit_spec(q.clone(), spec) {
+            Ok(_) => admitted += 1,
+            // shed requests are the overload policy working as designed:
+            // count them and keep offering load
+            Err(EngineError::Overloaded { .. }) => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
     }
-    // drain in chunks so a periodic exposition can interleave with the
-    // workload; each dump round-trips through the strict in-repo parser
-    // before printing, so a malformed exposition fails the run loudly
-    let mut responses = Vec::with_capacity(n_queries);
+    // drain in chunks so a periodic exposition (and the snapshot watch)
+    // can interleave with the workload; each dump round-trips through
+    // the strict in-repo parser before printing, so a malformed
+    // exposition fails the run loudly
+    let mut responses = Vec::with_capacity(admitted);
     let mut drained = 0usize;
-    while drained < n_queries {
+    while drained < admitted {
         let step = if metrics_every > 0 {
-            metrics_every.min(n_queries - drained)
+            metrics_every.min(admitted - drained)
+        } else if watch.is_some() {
+            256.min(admitted - drained)
         } else {
-            n_queries - drained
+            admitted - drained
         };
         let mut chunk = engine.drain(step);
         drained += chunk.len();
@@ -771,6 +825,22 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             );
             print!("{text}");
         }
+        if let Some(p) = watch.as_deref() {
+            let mtime = snapshot_mtime(p);
+            if mtime.is_some() && mtime != last_mtime {
+                last_mtime = mtime;
+                match engine.swap_collection(&collection, p) {
+                    Ok(rep) => println!(
+                        "-- snapshot changed: hot-swapped {:?} ({} shards in, \
+                         drained={} in {:.3}s) --",
+                        rep.collection, rep.shards, rep.drained, rep.drain_seconds
+                    ),
+                    // the old index keeps serving on any swap failure;
+                    // the watch loop just reports and carries on
+                    Err(e) => eprintln!("-- snapshot swap failed: {e} --"),
+                }
+            }
+        }
         if short {
             break; // engine went away; leftovers are collected below
         }
@@ -784,12 +854,94 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let report = ServeReport::new(&responses, &truth_rep, k, wall);
     println!("{}", report.metrics);
     println!("recall@{k}: {:.3}", report.recall_at_k);
+    let timeouts = responses.iter().filter(|r| !r.is_ok()).count();
+    let partials = responses.iter().filter(|r| r.partial).count();
+    let degraded = responses.iter().filter(|r| r.degraded).count();
+    if shed + timeouts + partials + degraded > 0 {
+        println!(
+            "robustness: {shed} shed at admission, {timeouts} deadline-failed, \
+             {partials} partial, {degraded} degraded (recall counts survivors only)"
+        );
+    }
     if !flights.is_empty() {
         println!("flight recorder ({} records, slowest first):", flights.len());
         for r in &flights {
             println!("  {r}");
         }
     }
+    Ok(())
+}
+
+/// Modification time of a snapshot path (file or shard directory —
+/// for directories the manifest's mtime is the signal, since a rebuild
+/// rewrites it last).
+fn snapshot_mtime(p: &std::path::Path) -> Option<std::time::SystemTime> {
+    let target = if p.is_dir() { p.join(MANIFEST_NAME) } else { p.to_path_buf() };
+    std::fs::metadata(target).and_then(|m| m.modified()).ok()
+}
+
+/// `repro swap --index A --next B`: the hot-swap demo. Serve a workload
+/// from snapshot A and, mid-drain, atomically swap the collection to
+/// snapshot B ([`Engine::swap_collection`]) — every query submitted
+/// before, during, and after the swap must resolve (the zero-dropped
+/// invariant the chaos soak enforces).
+fn cmd_swap(args: &Args) -> anyhow::Result<()> {
+    let ctx = ctx_from(args)?;
+    let k = positive_usize(args, "k", 10)?;
+    let n_queries = positive_usize(args, "queries", 2000)?;
+    let collection = args.str("collection", DEFAULT_COLLECTION);
+    let path = args.opt_str("index").ok_or_else(|| {
+        anyhow::anyhow!("repro swap needs --index SNAPSHOT; run `repro` for usage")
+    })?;
+    // default --next to the same snapshot: still a full load + fsck +
+    // swap + drain cycle, just with identical data
+    let next = args.str("next", &path);
+    let (index, meta) = load_snapshot(&path, args.switch("mmap"))?;
+    let ds = dataset_for_snapshot(args, &ctx, &meta, Some(index.len()), index.model.input_dim())?;
+    let params = search_params_from(args, meta.search_defaults)?;
+    let mut registry = CollectionRegistry::new();
+    registry.register(
+        Collection::new(collection.clone(), ShardedIndex::from_single(Arc::new(index)))
+            .with_defaults(params),
+    );
+    let engine = Engine::start_collections(
+        registry,
+        EngineConfig {
+            workers: checked_usize_flag(args, "workers", 0)?.max(1),
+            search: params,
+            ..EngineConfig::default()
+        },
+    );
+    let t0 = std::time::Instant::now();
+    for i in 0..n_queries {
+        let q = ds.test_queries[i % ds.test_queries.len()].clone();
+        engine.submit_spec(q, QuerySpec::top_k(k).with_collection(&collection))?;
+    }
+    // swap while roughly half the workload is still in flight
+    let mut responses = engine.drain(n_queries / 2);
+    let report = engine.swap_collection(&collection, std::path::Path::new(&next))?;
+    println!(
+        "hot-swap: collection {:?} now serving {} ({} shard(s)); \
+         old index drained={} in {:.3}s",
+        report.collection, next, report.shards, report.drained, report.drain_seconds
+    );
+    responses.extend(engine.drain(n_queries - responses.len()));
+    let wall = t0.elapsed().as_secs_f64();
+    let mut leftovers = engine.shutdown();
+    responses.append(&mut leftovers);
+    anyhow::ensure!(
+        responses.len() == n_queries,
+        "hot-swap dropped queries: {}/{} resolved",
+        responses.len(),
+        n_queries
+    );
+    let failed = responses.iter().filter(|r| !r.is_ok()).count();
+    println!(
+        "swap-under-load: {n_queries} submitted, {} resolved ({failed} failed), \
+         0 dropped, {:.1} qps",
+        responses.len(),
+        n_queries as f64 / wall
+    );
     Ok(())
 }
 
@@ -818,7 +970,7 @@ fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
     for i in 0..n_queries {
         engine
             .submit(ds.test_queries[i % ds.test_queries.len()].clone(), k)
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            .map_err(anyhow::Error::new)?;
     }
     let responses = engine.drain(n_queries);
     anyhow::ensure!(
@@ -918,31 +1070,31 @@ fn cmd_mutate(args: &Args) -> anyhow::Result<()> {
         if ins * steps <= i * n_inserts && ins < n_inserts {
             engine
                 .submit_insert(ext_base + ins as u32, inserts[ins].clone())
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .map_err(anyhow::Error::new)?;
             ins += 1;
         }
         if del * steps <= i * n_deletes && del < n_deletes {
             engine
                 .submit_delete(delete_ids[del])
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .map_err(anyhow::Error::new)?;
             del += 1;
         }
         if i < n_queries {
             engine
                 .submit(ds.test_queries[i % ds.test_queries.len()].clone(), k)
-                .map_err(|e| anyhow::anyhow!("{e}"))?;
+                .map_err(anyhow::Error::new)?;
         }
     }
     while ins < n_inserts {
         engine
             .submit_insert(ext_base + ins as u32, inserts[ins].clone())
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            .map_err(anyhow::Error::new)?;
         ins += 1;
     }
     while del < n_deletes {
         engine
             .submit_delete(delete_ids[del])
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            .map_err(anyhow::Error::new)?;
         del += 1;
     }
     let responses = engine.drain(n_queries);

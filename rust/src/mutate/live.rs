@@ -877,6 +877,7 @@ impl LiveIndex {
                     filtered: ctx.stats.filtered - deleted_skipped,
                     deleted_skipped,
                 },
+                ..SearchResult::default()
             };
         }
         let internal: Vec<u32> = cands[..take].iter().map(|c| c.id).collect();
@@ -907,6 +908,7 @@ impl LiveIndex {
                 .collect(),
             scores: scored.iter().map(|&(s, _)| s).collect(),
             stats,
+            ..SearchResult::default()
         }
     }
 }

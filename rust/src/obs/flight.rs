@@ -23,6 +23,42 @@ pub enum CaptureKind {
     Slow,
     /// Periodic sample of ordinary traffic (every Nth query).
     Sampled,
+    /// The request did not complete normally (shed, deadline miss,
+    /// degraded answer): kept in the failure ring regardless of
+    /// latency.
+    Failure,
+}
+
+/// How the request resolved. Every admitted request resolves to exactly
+/// one outcome; anything except [`Outcome::Ok`] also lands in the
+/// recorder's failure ring via [`FlightRecorder::capture_failure`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Outcome {
+    /// Full answer from every shard, inside the deadline.
+    #[default]
+    Ok,
+    /// Answer returned, but one or more shards failed to contribute.
+    Degraded,
+    /// The request ran out of deadline (shed expired in queue, or
+    /// cancelled mid-search without `allow_partial`).
+    DeadlineExceeded,
+    /// Partial results returned after a deadline miss (`allow_partial`).
+    Partial,
+    /// Rejected at admission by overload protection.
+    Shed,
+}
+
+impl std::fmt::Display for Outcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Outcome::Ok => "ok",
+            Outcome::Degraded => "degraded",
+            Outcome::DeadlineExceeded => "deadline-exceeded",
+            Outcome::Partial => "partial",
+            Outcome::Shed => "shed",
+        };
+        f.write_str(s)
+    }
 }
 
 /// Everything the worker knew about one recorded query.
@@ -52,17 +88,20 @@ pub struct FlightRecord {
     pub k: usize,
     /// Size of the batch this request rode in.
     pub batch_size: usize,
+    /// How the request resolved (ok / degraded / deadline / shed).
+    pub outcome: Outcome,
 }
 
 impl std::fmt::Display for FlightRecord {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "req {} [{}] {:?} e2e {:.3}ms = queue {:.3} + project {:.3} + search {:.3} \
+            "req {} [{}] {:?} {} e2e {:.3}ms = queue {:.3} + project {:.3} + search {:.3} \
              (merge {:.3}) ms | window {} rerank {} k {} batch {} | hops {} bytes {}",
             self.id,
             self.collection,
             self.kind,
+            self.outcome,
             self.e2e_seconds * 1e3,
             self.queue_seconds * 1e3,
             self.project_seconds * 1e3,
@@ -109,6 +148,9 @@ pub const DEFAULT_SLOW_SLOTS: usize = 48;
 pub const DEFAULT_SAMPLED_SLOTS: usize = 16;
 /// Default sampling period (every Nth query lands in the sample ring).
 pub const DEFAULT_SAMPLE_EVERY: u64 = 256;
+/// Capacity of the failure ring (shed / deadline-exceeded / degraded
+/// requests, kept round-robin regardless of latency).
+pub const FAILURE_SLOTS: usize = 16;
 
 /// The recorder itself; one per [`Engine`].
 ///
@@ -116,7 +158,12 @@ pub const DEFAULT_SAMPLE_EVERY: u64 = 256;
 pub struct FlightRecorder {
     slow: Vec<Slot>,
     sampled: Vec<Slot>,
+    /// Round-robin ring of abnormal outcomes: unlike the slow ring,
+    /// admission here is by outcome, not latency — a 50µs shed request
+    /// is forensic evidence, however fast it failed.
+    failures: Vec<Slot>,
     seq: AtomicU64,
+    fail_seq: AtomicU64,
     sample_every: u64,
 }
 
@@ -135,9 +182,42 @@ impl FlightRecorder {
         FlightRecorder {
             slow: (0..slow_slots.max(1)).map(|_| Slot::new()).collect(),
             sampled: (0..sampled_slots).map(|_| Slot::new()).collect(),
+            failures: (0..FAILURE_SLOTS).map(|_| Slot::new()).collect(),
             seq: AtomicU64::new(0),
+            fail_seq: AtomicU64::new(0),
             sample_every,
         }
+    }
+
+    /// Record an abnormal outcome (shed / deadline-exceeded / degraded)
+    /// into the failure ring, round-robin, regardless of how fast the
+    /// request failed. Non-blocking like every other capture: a
+    /// contended slot drops the record.
+    pub fn capture_failure(&self, mut record: FlightRecord) {
+        if !crate::obs::enabled() || self.failures.is_empty() {
+            return;
+        }
+        record.kind = CaptureKind::Failure;
+        // ORDERING: Relaxed — ring cursor only; the slot lock owns the
+        // data it points at.
+        let n = self.fail_seq.fetch_add(1, Ordering::Relaxed);
+        let idx = (n % self.failures.len() as u64) as usize;
+        let nanos = if record.e2e_seconds.is_finite() && record.e2e_seconds > 0.0 {
+            ((record.e2e_seconds * 1e9) as u64).max(1)
+        } else {
+            1
+        };
+        if let Ok(mut guard) = self.failures[idx].data.try_lock() {
+            *guard = Some(record);
+            // ORDERING: Relaxed — advisory tag, see above.
+            self.failures[idx].e2e_nanos.store(nanos, Ordering::Relaxed);
+        }
+    }
+
+    /// Total abnormal outcomes offered to the failure ring.
+    pub fn failures_seen(&self) -> u64 {
+        // ORDERING: Relaxed — reporting only.
+        self.fail_seq.load(Ordering::Relaxed)
     }
 
     /// Offer one finished query. `build` runs only when the query
@@ -207,7 +287,12 @@ impl FlightRecorder {
     /// follow their latency order like any other).
     pub fn records(&self) -> Vec<FlightRecord> {
         let mut out = Vec::new();
-        for slot in self.slow.iter().chain(self.sampled.iter()) {
+        for slot in self
+            .slow
+            .iter()
+            .chain(self.sampled.iter())
+            .chain(self.failures.iter())
+        {
             if let Ok(guard) = slot.data.try_lock() {
                 if let Some(r) = guard.as_ref() {
                     out.push(r.clone());
@@ -244,7 +329,56 @@ mod tests {
             params: SearchParams::default(),
             k: 10,
             batch_size: 1,
+            outcome: Outcome::Ok,
         }
+    }
+
+    #[test]
+    fn failure_ring_keeps_fast_failures() {
+        crate::obs::set_enabled(true);
+        let fr = FlightRecorder::new(2, 0, 0);
+        // saturate the slow ring with genuinely slow queries
+        fr.capture_with(1.0, || rec(0, 1.0));
+        fr.capture_with(0.9, || rec(1, 0.9));
+        // a 50µs shed request would never qualify as slow...
+        let mut shed = rec(2, 50e-6);
+        shed.outcome = Outcome::Shed;
+        fr.capture_failure(shed);
+        let records = fr.records();
+        let failure: Vec<_> = records
+            .iter()
+            .filter(|r| r.kind == CaptureKind::Failure)
+            .collect();
+        assert_eq!(failure.len(), 1, "...but the failure ring keeps it");
+        assert_eq!(failure[0].id, 2);
+        assert_eq!(failure[0].outcome, Outcome::Shed);
+        assert_eq!(fr.failures_seen(), 1);
+        // the Display line carries the outcome tag
+        let line = format!("{}", failure[0]);
+        assert!(line.contains("shed"), "{line}");
+    }
+
+    #[test]
+    fn failure_ring_is_round_robin() {
+        crate::obs::set_enabled(true);
+        let fr = FlightRecorder::new(1, 0, 0);
+        for i in 0..(FAILURE_SLOTS as u64 * 2) {
+            let mut r = rec(i, 1e-5);
+            r.outcome = Outcome::DeadlineExceeded;
+            fr.capture_failure(r);
+        }
+        let kept: Vec<u64> = fr
+            .records()
+            .iter()
+            .filter(|r| r.kind == CaptureKind::Failure)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(kept.len(), FAILURE_SLOTS);
+        // the second lap overwrote the first: only recent ids remain
+        assert!(
+            kept.iter().all(|&id| id >= FAILURE_SLOTS as u64),
+            "{kept:?}"
+        );
     }
 
     #[test]

@@ -27,6 +27,17 @@ pub struct Handles {
     pub engine_search: HistogramFamily,
     /// Engine uptime, set at exposition time.
     pub engine_uptime: Gauge,
+    /// Requests that missed their deadline (shed in queue or cancelled
+    /// mid-search), per collection.
+    pub engine_deadline_exceeded: CounterFamily,
+    /// Requests shed at admission by overload protection, per
+    /// collection.
+    pub engine_shed: CounterFamily,
+    /// Queries answered degraded (one or more shards failed to
+    /// contribute), per collection.
+    pub engine_degraded: CounterFamily,
+    /// Serve-index hot-swaps completed.
+    pub engine_swaps: Counter,
 
     // -- batcher -------------------------------------------------------
     /// Time each request waited in the batcher queue.
@@ -41,6 +52,9 @@ pub struct Handles {
     pub shard_scatter: HistogramFamily,
     /// Top-k merge time across shards.
     pub shard_merge: Histogram,
+    /// Shards that failed to contribute to a scatter (panic, poisoned
+    /// lock, join failure); the query degrades instead of aborting.
+    pub shard_failures: Counter,
 
     // -- index stage timers (unlabeled; inside one shard's search) -----
     /// Primary graph/scan traversal time.
@@ -104,6 +118,25 @@ impl Handles {
                 "leanvec_engine_uptime_seconds",
                 "Engine uptime, set at exposition time.",
             ),
+            engine_deadline_exceeded: r.register_counter_family(
+                "leanvec_engine_deadline_exceeded_total",
+                "Requests that missed their deadline (shed or cancelled mid-search).",
+                "collection",
+            ),
+            engine_shed: r.register_counter_family(
+                "leanvec_engine_shed_total",
+                "Requests shed at admission by overload protection.",
+                "collection",
+            ),
+            engine_degraded: r.register_counter_family(
+                "leanvec_engine_degraded_total",
+                "Queries answered degraded: one or more shards failed to contribute.",
+                "collection",
+            ),
+            engine_swaps: r.register_counter(
+                "leanvec_engine_swaps_total",
+                "Serve-index hot-swaps completed.",
+            ),
             batcher_queue_wait: r.register_histogram(
                 "leanvec_batcher_queue_wait_seconds",
                 "Time requests spent waiting in the batcher queue.",
@@ -129,6 +162,10 @@ impl Handles {
                 "leanvec_shard_merge_seconds",
                 "Top-k merge time across shard results.",
                 NANOS,
+            ),
+            shard_failures: r.register_counter(
+                "leanvec_shard_failures_total",
+                "Shards that failed to contribute to a scatter (panic or join failure).",
             ),
             index_traversal: r.register_histogram(
                 "leanvec_index_traversal_seconds",

@@ -25,7 +25,7 @@ pub mod hist;
 pub mod metrics;
 pub mod registry;
 
-pub use flight::{CaptureKind, FlightRecord, FlightRecorder};
+pub use flight::{CaptureKind, FlightRecord, FlightRecorder, Outcome};
 pub use hist::HistSnapshot;
 pub use metrics::{handles, Handles};
 pub use registry::{

@@ -13,7 +13,7 @@ use crate::index::leanvec_index::SearchParams;
 use crate::shard::sharded::ShardedIndex;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// The collection single-index engines serve under
 /// ([`Engine::start`](crate::coordinator::Engine::start) wraps its
@@ -49,8 +49,11 @@ pub struct AdmissionCounters {
 /// One named, sharded, quota-governed index.
 pub struct Collection {
     name: String,
-    /// the sharded index this collection serves
-    pub index: ShardedIndex,
+    /// The sharded index this collection serves. Behind an `RwLock` so a
+    /// hot-swap can atomically replace the serve index while queries keep
+    /// their own `Arc` snapshot; readers never block on a swap for longer
+    /// than the pointer exchange.
+    index: RwLock<Arc<ShardedIndex>>,
     /// per-collection serving defaults (window / rerank window) applied
     /// when a request's `QuerySpec` leaves them unset
     pub defaults: SearchParams,
@@ -63,11 +66,33 @@ impl Collection {
     pub fn new(name: impl Into<String>, index: ShardedIndex) -> Collection {
         Collection {
             name: name.into(),
-            index,
+            index: RwLock::new(Arc::new(index)),
             defaults: SearchParams::default(),
             quota: TenantQuota::default(),
             admission: AdmissionCounters::default(),
         }
+    }
+
+    /// Snapshot the current serve index. Callers hold the returned `Arc`
+    /// for the duration of one query (or one batch group), so a
+    /// concurrent [`Collection::swap_index`] never invalidates an
+    /// in-flight search — the old index stays alive until the last
+    /// snapshot drops.
+    pub fn index(&self) -> Arc<ShardedIndex> {
+        // DEADLINE: read lock held only for the Arc clone (no I/O, no
+        // allocation beyond the refcount bump); cannot block the serve
+        // path measurably. Poisoning is impossible to observe here in a
+        // harmful way — the lock only guards a pointer swap — so recover.
+        Arc::clone(&self.index.read().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Atomically replace the serve index, returning the previous one so
+    /// the caller can drain it (wait for its refcount to reach one)
+    /// before dropping heavy resources.
+    pub fn swap_index(&self, new: Arc<ShardedIndex>) -> Arc<ShardedIndex> {
+        // DEADLINE: write lock held only for the pointer exchange.
+        let mut slot = self.index.write().unwrap_or_else(|e| e.into_inner());
+        std::mem::replace(&mut *slot, new)
     }
 
     /// Replace the per-collection search defaults.
@@ -206,7 +231,7 @@ impl CollectionRegistry {
     /// Whether any registered collection has live (mutable) shards —
     /// decides if the engine starts an ingest lane.
     pub fn any_live(&self) -> bool {
-        self.by_name.values().any(|c| c.index.is_live())
+        self.by_name.values().any(|c| c.index().is_live())
     }
 }
 
@@ -278,6 +303,31 @@ mod tests {
         c.finish_search();
         assert!(c.admit_search(), "capacity freed by completion");
         assert_eq!(c.admission().inflight.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn swap_index_keeps_old_snapshot_alive_until_dropped() {
+        let c = Collection::new("t", tiny_index());
+        let before = c.index();
+        let replacement = Arc::new(tiny_index());
+        let old = c.swap_index(Arc::clone(&replacement));
+        assert!(
+            Arc::ptr_eq(&before, &old),
+            "swap must return the previous serve index"
+        );
+        assert!(
+            Arc::ptr_eq(&c.index(), &replacement),
+            "post-swap snapshots must see the new index"
+        );
+        // The pre-swap snapshot is still usable: old index stays alive.
+        assert_eq!(before.shards(), 2);
+        drop(before);
+        drop(old);
+        assert_eq!(
+            Arc::strong_count(&replacement),
+            2,
+            "replacement held by collection + this test only"
+        );
     }
 
     #[test]

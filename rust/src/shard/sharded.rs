@@ -22,6 +22,7 @@ use crate::index::leanvec_index::LeanVecIndex;
 use crate::index::query::{Query, SearchResult, VectorIndex};
 use crate::leanvec::model::LeanVecModel;
 use crate::mutate::{ConsolidateReport, LiveIndex, MutateError};
+use crate::util::cancel::CancelToken;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -135,6 +136,8 @@ pub fn merge_top_k(results: Vec<SearchResult>, k: usize) -> SearchResult {
         return first;
     }
     let mut stats = first.stats;
+    let mut degraded = first.degraded;
+    let mut shards_failed = first.shards_failed;
     let mut pairs: Vec<(f32, u32)> = first
         .scores
         .iter()
@@ -143,6 +146,8 @@ pub fn merge_top_k(results: Vec<SearchResult>, k: usize) -> SearchResult {
         .collect();
     for r in rest {
         stats.merge(&r.stats);
+        degraded |= r.degraded;
+        shards_failed += r.shards_failed;
         pairs.extend(r.scores.iter().copied().zip(r.ids.iter().copied()));
     }
     pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
@@ -151,6 +156,8 @@ pub fn merge_top_k(results: Vec<SearchResult>, k: usize) -> SearchResult {
         ids: pairs.iter().map(|&(_, id)| id).collect(),
         scores: pairs.iter().map(|&(s, _)| s).collect(),
         stats,
+        degraded,
+        shards_failed,
     }
 }
 
@@ -622,43 +629,115 @@ impl ShardedIndex {
         merge_top_k(results, query.top_k())
     }
 
+    /// Search one shard for the concurrent scatter path: install the
+    /// request's cancellation token into the pooled context (cleared
+    /// again before the context returns to the pool), consult the chaos
+    /// failpoints, and absorb a panic — from a poisoned shard, a
+    /// panicking filter predicate, or an injected fault — into `None`.
+    /// One failing participant degrades the query instead of owning it:
+    /// the merge proceeds over the survivors.
+    fn scatter_shard(
+        &self,
+        s: usize,
+        q_proj: &[f32],
+        query: &Query,
+        cancel: Option<&Arc<CancelToken>>,
+    ) -> Option<SearchResult> {
+        let searched = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            #[cfg(any(test, feature = "failpoints"))]
+            {
+                crate::util::failpoints::hit("slow_shard", Some(s));
+                crate::util::failpoints::hit("panic_shard", Some(s));
+            }
+            let mut ctx = self.pools[s].acquire();
+            ctx.set_cancel(cancel.cloned());
+            let r = self.search_shard(s, &mut ctx, q_proj, query);
+            ctx.set_cancel(None);
+            r
+        }));
+        match searched {
+            Ok(r) => Some(r),
+            Err(_payload) => {
+                // the panic payload is intentionally dropped: the
+                // request must survive, and the failure is visible
+                // through the counter, the degraded flag, and the
+                // panic hook's own stderr report
+                if crate::obs::enabled() {
+                    crate::obs::handles().shard_failures.inc();
+                }
+                None
+            }
+        }
+    }
+
+    /// Merge scatter outcomes: failed shards (None) degrade the result
+    /// instead of failing the query; an all-shards-failed query yields
+    /// an empty, fully degraded result (the worker layers a typed error
+    /// or partial-result decision on top).
+    fn merge_scatter(results: Vec<Option<SearchResult>>, k: usize) -> SearchResult {
+        let n = results.len();
+        let ok: Vec<SearchResult> = results.into_iter().flatten().collect();
+        let failed = n - ok.len();
+        let mut merged = merge_top_k(ok, k);
+        if failed > 0 {
+            merged.degraded = true;
+            merged.shards_failed += failed;
+        }
+        merged
+    }
+
     /// Concurrent scatter-gather: every shard searched on its own
     /// thread, each drawing a context from that shard's [`CtxPool`];
     /// shard 0 runs on the calling thread. Single-shard sets skip the
     /// fan-out entirely (one pooled context, no spawn), so the shards=1
     /// serve path stays identical to the unsharded engine's.
     pub fn search_scatter(&self, q_proj: &[f32], query: &Query) -> SearchResult {
+        self.search_scatter_cancel(q_proj, query, None)
+    }
+
+    /// [`ShardedIndex::search_scatter`] with a shared [`CancelToken`]
+    /// threaded into every per-shard traversal, which polls it every
+    /// [`CANCEL_POLL_HOPS`](crate::graph::beam::CANCEL_POLL_HOPS)
+    /// expansions: a tripped token (explicit or deadline) stops each
+    /// shard within microseconds and the merge returns whatever the
+    /// shards had found — the partial-results contract.
+    pub fn search_scatter_cancel(
+        &self,
+        q_proj: &[f32],
+        query: &Query,
+        cancel: Option<&Arc<CancelToken>>,
+    ) -> SearchResult {
         let n = self.shards();
         if n == 1 {
-            let mut ctx = self.pools[0].acquire();
-            return self.search_shard(0, &mut ctx, q_proj, query);
+            return Self::merge_scatter(
+                vec![self.scatter_shard(0, q_proj, query, cancel)],
+                query.top_k(),
+            );
         }
-        let results: Vec<SearchResult> = std::thread::scope(|scope| {
+        let results: Vec<Option<SearchResult>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (1..n)
-                .map(|s| {
-                    scope.spawn(move || {
-                        let mut ctx = self.pools[s].acquire();
-                        self.search_shard(s, &mut ctx, q_proj, query)
-                    })
-                })
+                .map(|s| scope.spawn(move || self.scatter_shard(s, q_proj, query, cancel)))
                 .collect();
             let mut results = Vec::with_capacity(n);
-            {
-                let mut ctx = self.pools[0].acquire();
-                results.push(self.search_shard(0, &mut ctx, q_proj, query));
-            }
+            results.push(self.scatter_shard(0, q_proj, query, cancel));
             for h in handles {
-                match h.join() {
-                    Ok(r) => results.push(r),
-                    // re-raise the shard's own panic payload on the
-                    // caller thread instead of a generic expect: the
-                    // root cause stays in the backtrace
-                    Err(payload) => std::panic::resume_unwind(payload),
-                }
+                // DEADLINE: scoped join on a shard search that is
+                // itself deadline-bounded via the shared cancel token
+                // (and panic-proofed by scatter_shard) — it cannot
+                // outlive the request by more than one poll interval.
+                results.push(h.join().unwrap_or_else(|_| {
+                    // unreachable in practice: scatter_shard catches
+                    // shard panics; treat a join failure as one more
+                    // failed shard rather than killing the request
+                    if crate::obs::enabled() {
+                        crate::obs::handles().shard_failures.inc();
+                    }
+                    None
+                }));
             }
             results
         });
-        merge_top_k(results, query.top_k())
+        Self::merge_scatter(results, query.top_k())
     }
 
     /// [`ShardedIndex::search_scatter`] plus per-stage timing: each
@@ -672,15 +751,28 @@ impl ShardedIndex {
         q_proj: &[f32],
         query: &Query,
     ) -> (SearchResult, Option<ScatterTiming>) {
+        self.search_scatter_timed_cancel(q_proj, query, None)
+    }
+
+    /// [`ShardedIndex::search_scatter_timed`] with the request's
+    /// [`CancelToken`] threaded down — the engine worker's entry point.
+    pub fn search_scatter_timed_cancel(
+        &self,
+        q_proj: &[f32],
+        query: &Query,
+        cancel: Option<&Arc<CancelToken>>,
+    ) -> (SearchResult, Option<ScatterTiming>) {
         if !crate::obs::enabled() {
-            return (self.search_scatter(q_proj, query), None);
+            return (self.search_scatter_cancel(q_proj, query, cancel), None);
         }
         let h = crate::obs::handles();
         let n = self.shards();
         if n == 1 {
             let t = Instant::now();
-            let mut ctx = self.pools[0].acquire();
-            let r = self.search_shard(0, &mut ctx, q_proj, query);
+            let r = Self::merge_scatter(
+                vec![self.scatter_shard(0, q_proj, query, cancel)],
+                query.top_k(),
+            );
             let dt = t.elapsed().as_secs_f64();
             h.shard_scatter.with("0").record_seconds(dt);
             return (
@@ -692,14 +784,14 @@ impl ShardedIndex {
             );
         }
         // same fan-out shape as search_scatter (shard 0 on the calling
-        // thread), each shard timed individually
-        let mut timed: Vec<(SearchResult, f64)> = std::thread::scope(|scope| {
+        // thread), each shard timed individually; a failed shard still
+        // reports its wall time (how long the failure took to surface)
+        let mut timed: Vec<(Option<SearchResult>, f64)> = std::thread::scope(|scope| {
             let spawned: Vec<_> = (1..n)
                 .map(|s| {
                     scope.spawn(move || {
                         let t = Instant::now();
-                        let mut ctx = self.pools[s].acquire();
-                        let r = self.search_shard(s, &mut ctx, q_proj, query);
+                        let r = self.scatter_shard(s, q_proj, query, cancel);
                         (r, t.elapsed().as_secs_f64())
                     })
                 })
@@ -707,15 +799,18 @@ impl ShardedIndex {
             let mut results = Vec::with_capacity(n);
             {
                 let t = Instant::now();
-                let mut ctx = self.pools[0].acquire();
-                let r = self.search_shard(0, &mut ctx, q_proj, query);
+                let r = self.scatter_shard(0, q_proj, query, cancel);
                 results.push((r, t.elapsed().as_secs_f64()));
             }
             for handle in spawned {
-                match handle.join() {
-                    Ok(r) => results.push(r),
-                    Err(payload) => std::panic::resume_unwind(payload),
-                }
+                // DEADLINE: scoped join on a deadline-bounded,
+                // panic-proofed shard search — see search_scatter_cancel.
+                results.push(handle.join().unwrap_or_else(|_| {
+                    if crate::obs::enabled() {
+                        crate::obs::handles().shard_failures.inc();
+                    }
+                    (None, 0.0)
+                }));
             }
             results
         });
@@ -727,7 +822,7 @@ impl ShardedIndex {
             results.push(r);
         }
         let t = Instant::now();
-        let merged = merge_top_k(results, query.top_k());
+        let merged = Self::merge_scatter(results, query.top_k());
         let merge_seconds = t.elapsed().as_secs_f64();
         h.shard_merge.record_seconds(merge_seconds);
         (
@@ -852,6 +947,7 @@ mod tests {
                 primary_scored: hops * 2,
                 ..QueryStats::default()
             },
+            ..SearchResult::default()
         }
     }
 

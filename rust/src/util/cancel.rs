@@ -1,0 +1,129 @@
+//! Cooperative cancellation for in-flight searches.
+//!
+//! A [`CancelToken`] is a poll-only flag shared between the engine
+//! worker that owns a request and the per-shard traversals answering
+//! it: the coordinator arms it with the request's deadline (or trips
+//! it explicitly), and the beam search polls it every few dozen
+//! expansions. There is no wakeup machinery — traversal loops are
+//! short and hot, so polling an atomic (plus an occasional clock read)
+//! is both cheap and sufficient to bound a request's latency.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Shared cancellation flag with an optional absolute deadline.
+///
+/// `is_cancelled` latches: once the flag is observed set (explicitly or
+/// because the deadline passed), every later poll — on any thread —
+/// reports cancelled without reading the clock again.
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only trips when [`cancel`](Self::cancel) is called.
+    pub fn new() -> Self {
+        CancelToken {
+            cancelled: AtomicBool::new(false),
+            deadline: None,
+        }
+    }
+
+    /// A token that trips itself once `deadline` passes.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        CancelToken {
+            cancelled: AtomicBool::new(false),
+            deadline: Some(deadline),
+        }
+    }
+
+    /// A token whose deadline is `timeout` from now.
+    pub fn after(timeout: Duration) -> Self {
+        Self::with_deadline(Instant::now() + timeout)
+    }
+
+    /// Trip the token explicitly (idempotent).
+    pub fn cancel(&self) {
+        // ORDERING: Relaxed — the flag is advisory; pollers only use it
+        // to stop early, never to synchronize reads of other data.
+        self.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    /// The absolute deadline, if one was armed.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// Poll: true once the token is tripped or its deadline has passed.
+    ///
+    /// The fast path is a single relaxed load; the clock is only read
+    /// while the flag is still clear *and* a deadline is armed. Callers
+    /// on hot loops should further fold this under an every-N-iterations
+    /// check so the clock read amortizes.
+    pub fn is_cancelled(&self) -> bool {
+        // ORDERING: Relaxed — see `cancel`; a slightly stale read only
+        // delays the stop by one poll interval.
+        if self.cancelled.load(Ordering::Relaxed) {
+            return true;
+        }
+        match self.deadline {
+            Some(d) if Instant::now() >= d => {
+                self.cancel(); // latch so later polls skip the clock
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Time left until the deadline (None when no deadline is armed;
+    /// zero once it has passed).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_cancel_latches() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert!(t.is_cancelled(), "stays tripped");
+    }
+
+    #[test]
+    fn deadline_in_the_past_trips_immediately() {
+        let t = CancelToken::after(Duration::ZERO);
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn far_deadline_does_not_trip() {
+        let t = CancelToken::after(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+        assert!(t.remaining().unwrap() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn no_deadline_means_no_remaining() {
+        assert_eq!(CancelToken::new().remaining(), None);
+        assert_eq!(CancelToken::new().deadline(), None);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let t = Arc::new(CancelToken::new());
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || t2.cancel());
+        h.join().unwrap();
+        assert!(t.is_cancelled());
+    }
+}

@@ -1,0 +1,276 @@
+//! Deterministic fault injection for chaos tests and the CI soak.
+//!
+//! A failpoint is a named site in the serve path (`slow_shard`,
+//! `panic_shard`, `io_error_on_load`) that tests arm with an [`Action`]
+//! — sleep, panic, or injected error — optionally scoped to one shard
+//! index and/or a bounded number of firings. Production builds compile
+//! none of this: the module and every call site are gated behind
+//! `cfg(any(test, feature = "failpoints"))`.
+//!
+//! Arming is programmatic ([`set`]/[`clear`]/[`clear_all`]) or via the
+//! `LEANVEC_FAILPOINTS` environment variable, parsed once on first use:
+//!
+//! ```text
+//! LEANVEC_FAILPOINTS=slow_shard=sleep:50@1,panic_shard=panic@2#3
+//! ```
+//!
+//! grammar per entry: `name=action[:arg][@shard][#hits]` where action is
+//! `sleep:<ms>`, `panic`, or `error`; `@shard` restricts to one shard
+//! index; `#hits` fires at most that many times.
+//!
+//! The catalog of sites the serve path consults lives in
+//! docs/ROBUSTNESS.md. Because the registry is process-global, tests
+//! that arm failpoints must serialize on a shared lock and `clear_all`
+//! when done.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+/// What an armed failpoint does when its site is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Sleep this many milliseconds, then continue normally.
+    Sleep(u64),
+    /// Panic with a recognizable `failpoint <name> fired` message.
+    Panic,
+    /// Report an injected error to the call site (only sites that can
+    /// fail check for this; others ignore it).
+    Error,
+}
+
+/// An armed failpoint: the action plus its scope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Failpoint {
+    pub action: Action,
+    /// Fire only when the site reports this shard index (None = all).
+    pub shard: Option<usize>,
+    /// Remaining firings before the point disarms (None = unlimited).
+    pub hits: Option<u64>,
+}
+
+impl Failpoint {
+    pub fn new(action: Action) -> Failpoint {
+        Failpoint {
+            action,
+            shard: None,
+            hits: None,
+        }
+    }
+
+    pub fn on_shard(mut self, shard: usize) -> Failpoint {
+        self.shard = Some(shard);
+        self
+    }
+
+    pub fn times(mut self, hits: u64) -> Failpoint {
+        self.hits = Some(hits);
+        self
+    }
+}
+
+fn registry() -> &'static Mutex<HashMap<String, Failpoint>> {
+    static REG: OnceLock<Mutex<HashMap<String, Failpoint>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(parse_env(&std::env::var("LEANVEC_FAILPOINTS").unwrap_or_default())))
+}
+
+fn lock() -> std::sync::MutexGuard<'static, HashMap<String, Failpoint>> {
+    // a panic while holding this lock only poisons test bookkeeping;
+    // the map itself is always in a consistent state between operations
+    registry().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Parse the `LEANVEC_FAILPOINTS` grammar; malformed entries are
+/// dropped (fault injection must never take down a production start).
+fn parse_env(spec: &str) -> HashMap<String, Failpoint> {
+    let mut map = HashMap::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        if let Some((name, rest)) = entry.split_once('=') {
+            if let Some(fp) = parse_one(rest) {
+                map.insert(name.trim().to_string(), fp);
+            }
+        }
+    }
+    map
+}
+
+fn parse_one(rest: &str) -> Option<Failpoint> {
+    // peel `#hits` then `@shard` suffixes, leaving `action[:arg]`
+    let (rest, hits) = match rest.rsplit_once('#') {
+        Some((head, h)) => (head, Some(h.parse::<u64>().ok()?)),
+        None => (rest, None),
+    };
+    let (rest, shard) = match rest.rsplit_once('@') {
+        Some((head, s)) => (head, Some(s.parse::<usize>().ok()?)),
+        None => (rest, None),
+    };
+    let action = match rest.split_once(':') {
+        Some(("sleep", ms)) => Action::Sleep(ms.parse().ok()?),
+        None if rest == "panic" => Action::Panic,
+        None if rest == "error" => Action::Error,
+        _ => return None,
+    };
+    Some(Failpoint {
+        action,
+        shard,
+        hits,
+    })
+}
+
+/// Arm (or re-arm) a failpoint programmatically.
+pub fn set(name: &str, fp: Failpoint) {
+    lock().insert(name.to_string(), fp);
+}
+
+/// Disarm one failpoint.
+pub fn clear(name: &str) {
+    lock().remove(name);
+}
+
+/// Disarm everything (tests call this on exit so state never leaks
+/// across the process-global registry).
+pub fn clear_all() {
+    lock().clear();
+}
+
+/// Evaluate the named failpoint at a call site.
+///
+/// `shard` is the caller's shard index when it has one. Sleeps happen
+/// here; panics are raised here (the degraded-scatter machinery is
+/// exactly what they exercise); an armed [`Action::Error`] is returned
+/// for the caller to convert into its own error type. Returns `None`
+/// when the point is unarmed, scoped to a different shard, or out of
+/// hits.
+pub fn hit(name: &str, shard: Option<usize>) -> Option<Action> {
+    let action = {
+        let mut map = lock();
+        let fp = map.get_mut(name)?;
+        if let (Some(want), Some(got)) = (fp.shard, shard) {
+            if want != got {
+                return None;
+            }
+        } else if fp.shard.is_some() && shard.is_none() {
+            return None;
+        }
+        if let Some(hits) = &mut fp.hits {
+            if *hits == 0 {
+                return None;
+            }
+            *hits -= 1;
+        }
+        fp.action
+    }; // registry lock released before sleeping/panicking
+    match action {
+        Action::Sleep(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            None
+        }
+        Action::Panic => panic!("failpoint {name} fired"),
+        Action::Error => Some(Action::Error),
+    }
+}
+
+/// Serialize tests that arm failpoints: the registry is process-global,
+/// so concurrent tests would observe each other's points. Acquiring the
+/// guard clears every armed point; callers should `clear_all()` (or
+/// just drop the guard and let the next acquirer clear) when done.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let g = LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    clear_all();
+    g
+}
+
+/// Poison a mutex from a helper thread (the `poison_lock` failpoint):
+/// the serve path must tolerate a poisoned lock without losing queries,
+/// and this gives chaos tests a deterministic way to produce one.
+pub fn poison_mutex<T: Send>(lock: &std::sync::Mutex<T>) {
+    let _ = std::thread::scope(|scope| {
+        scope
+            .spawn(|| {
+                let _guard = lock.lock();
+                panic!("failpoint poison_lock fired");
+            })
+            .join()
+    });
+    debug_assert!(lock.is_poisoned());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    #[test]
+    fn env_grammar_parses_every_form() {
+        let map = parse_env("slow_shard=sleep:50@1, panic_shard=panic@2#3,load=error,bad=nope");
+        assert_eq!(
+            map.get("slow_shard"),
+            Some(&Failpoint::new(Action::Sleep(50)).on_shard(1))
+        );
+        assert_eq!(
+            map.get("panic_shard"),
+            Some(&Failpoint::new(Action::Panic).on_shard(2).times(3))
+        );
+        assert_eq!(map.get("load"), Some(&Failpoint::new(Action::Error)));
+        assert!(!map.contains_key("bad"), "malformed entries are dropped");
+    }
+
+    #[test]
+    fn unarmed_points_are_free() {
+        let _g = guard();
+        assert_eq!(hit("never_armed", None), None);
+        assert_eq!(hit("never_armed", Some(3)), None);
+    }
+
+    #[test]
+    fn shard_scope_restricts_firing() {
+        let _g = guard();
+        set("err", Failpoint::new(Action::Error).on_shard(1));
+        assert_eq!(hit("err", Some(0)), None);
+        assert_eq!(hit("err", None), None, "scoped points need a shard");
+        assert_eq!(hit("err", Some(1)), Some(Action::Error));
+        clear_all();
+    }
+
+    #[test]
+    fn hit_budget_disarms() {
+        let _g = guard();
+        set("err", Failpoint::new(Action::Error).times(2));
+        assert_eq!(hit("err", None), Some(Action::Error));
+        assert_eq!(hit("err", Some(7)), Some(Action::Error));
+        assert_eq!(hit("err", None), None, "out of hits");
+        clear_all();
+    }
+
+    #[test]
+    fn sleep_fires_inline_and_returns_none() {
+        let _g = guard();
+        set("nap", Failpoint::new(Action::Sleep(5)));
+        let t0 = std::time::Instant::now();
+        assert_eq!(hit("nap", None), None);
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
+        clear_all();
+    }
+
+    #[test]
+    fn panic_action_panics_with_recognizable_message() {
+        let _g = guard();
+        set("boom", Failpoint::new(Action::Panic));
+        let err = std::panic::catch_unwind(|| hit("boom", None)).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("failpoint boom fired"), "got: {msg}");
+        clear_all();
+    }
+
+    #[test]
+    fn poison_mutex_poisons() {
+        let m = Mutex::new(17);
+        poison_mutex(&m);
+        assert!(m.is_poisoned());
+        // the data stays reachable through the poison
+        assert_eq!(*m.lock().unwrap_or_else(PoisonError::into_inner), 17);
+    }
+}

@@ -5,8 +5,15 @@
 //! JSON, half-precision floats, RNG, a thread pool, CLI parsing, a
 //! property-testing harness, and bench statistics — is implemented here.
 
+pub mod cancel;
 pub mod cli;
 pub mod f16;
+// Deterministic fault injection for the chaos tests and CI soak. Only
+// compiled into test builds (lib unit tests) or when the `failpoints`
+// feature is on (integration chaos tests, release soak binaries) — the
+// production serve path carries zero failpoint branches otherwise.
+#[cfg(any(test, feature = "failpoints"))]
+pub mod failpoints;
 pub mod invariants;
 pub mod json;
 pub mod mmap;

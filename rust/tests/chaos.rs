@@ -1,0 +1,307 @@
+//! Chaos battery: the request-lifecycle invariants under injected
+//! faults (`--features failpoints`; see docs/ROBUSTNESS.md for the
+//! failpoint catalog).
+//!
+//! The invariants every test here defends:
+//!
+//! 1. **Every admitted query resolves exactly once** — as a result, a
+//!    typed error, a partial, or a degraded answer — never zero times
+//!    (a hang) and never twice.
+//! 2. **A misbehaving shard degrades the query, it does not fail it**
+//!    (and never takes the engine down).
+//! 3. **A hot-swap drops zero in-flight queries**, and a failed swap
+//!    leaves the old index serving.
+//!
+//! The failpoint registry is process-global, so every test serializes
+//! on [`failpoints::test_guard`] (which clears all armed points on
+//! acquire) and clears its own points before asserting recovery.
+
+use leanvec::config::{GraphParams, ProjectionKind, Similarity};
+use leanvec::coordinator::{Engine, EngineConfig, EngineError, QuerySpec};
+use leanvec::index::builder::IndexBuilder;
+use leanvec::index::leanvec_index::LeanVecIndex;
+use leanvec::index::persist::SnapshotMeta;
+use leanvec::shard::{Collection, CollectionRegistry, ShardSpec, ShardedIndex, DEFAULT_COLLECTION};
+use leanvec::util::failpoints::{self, Action, Failpoint};
+use leanvec::util::rng::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const DIM: usize = 16;
+
+fn rows(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..DIM).map(|_| rng.gaussian_f32()).collect())
+        .collect()
+}
+
+fn configure(b: IndexBuilder) -> IndexBuilder {
+    let mut gp = GraphParams::for_similarity(Similarity::InnerProduct);
+    gp.max_degree = 12;
+    gp.build_window = 30;
+    b.projection(ProjectionKind::Id).target_dim(8).graph_params(gp)
+}
+
+fn build_single(n: usize, seed: u64) -> Arc<LeanVecIndex> {
+    Arc::new(configure(IndexBuilder::new()).build(&rows(n, seed), None, Similarity::InnerProduct))
+}
+
+fn sharded_engine(n: usize, shards: usize, workers: usize) -> Engine {
+    let sharded = ShardedIndex::build(
+        &rows(n, 11),
+        None,
+        Similarity::InnerProduct,
+        ShardSpec::new(shards),
+        1,
+        configure,
+    );
+    let mut registry = CollectionRegistry::new();
+    registry.register(Collection::new(DEFAULT_COLLECTION, sharded));
+    Engine::start_collections(
+        registry,
+        EngineConfig {
+            workers,
+            ..EngineConfig::default()
+        },
+    )
+}
+
+#[test]
+fn slow_shard_trips_the_deadline_and_partials_resolve() {
+    let _g = failpoints::test_guard();
+    let engine = sharded_engine(240, 2, 2);
+    let q = vec![0.5f32; DIM];
+
+    // shard 1 stalls well past the request budget: the deadline must
+    // fire and resolve the query as a typed error, not a hang
+    failpoints::set("slow_shard", Failpoint::new(Action::Sleep(80)).on_shard(1));
+    let t0 = Instant::now();
+    engine
+        .submit_spec(q.clone(), QuerySpec::top_k(5).with_timeout_ms(15))
+        .unwrap();
+    let r = engine.drain(1);
+    assert_eq!(r.len(), 1, "expired request still resolves");
+    assert_eq!(r[0].error, Some(EngineError::DeadlineExceeded));
+    assert!(!r[0].is_ok());
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "deadline failure is prompt, not a hang"
+    );
+
+    // the same stall under allow_partial yields a usable answer
+    engine
+        .submit_spec(
+            q.clone(),
+            QuerySpec::top_k(5).with_timeout_ms(15).with_allow_partial(),
+        )
+        .unwrap();
+    let p = engine.drain(1);
+    assert_eq!(p.len(), 1);
+    assert!(p[0].is_ok(), "{:?}", p[0].error);
+    assert!(p[0].partial, "deadline tripped mid-search");
+
+    // disarmed, the engine serves normally again
+    failpoints::clear_all();
+    engine.submit(q, 5).unwrap();
+    let ok = engine.drain(1);
+    assert!(ok[0].is_ok() && !ok[0].partial && !ok[0].degraded);
+    let adm = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+    assert_eq!(adm.inflight.load(Ordering::Acquire), 0, "no slot leaked");
+    engine.shutdown();
+}
+
+#[test]
+fn panicking_shard_degrades_queries_instead_of_failing_them() {
+    let _g = failpoints::test_guard();
+    let engine = sharded_engine(360, 3, 2);
+    let q = vec![0.5f32; DIM];
+
+    failpoints::set("panic_shard", Failpoint::new(Action::Panic).on_shard(1));
+    for _ in 0..8 {
+        engine.submit(q.clone(), 5).unwrap();
+    }
+    let responses = engine.drain(8);
+    assert_eq!(responses.len(), 8, "every query resolved despite panics");
+    for r in &responses {
+        assert!(r.is_ok(), "shard panic degrades, never fails: {:?}", r.error);
+        assert!(r.degraded, "failed shard is visible on the response");
+        assert!(r.shards_failed >= 1);
+        assert!(!r.ids.is_empty(), "surviving shards still answer");
+    }
+
+    // disarmed, service is whole again on the same engine
+    failpoints::clear_all();
+    engine.submit(q, 5).unwrap();
+    let healed = engine.drain(1);
+    assert!(healed[0].is_ok() && !healed[0].degraded);
+    assert_eq!(healed[0].shards_failed, 0);
+    engine.shutdown();
+}
+
+#[test]
+fn injected_load_error_fails_the_swap_and_keeps_the_old_index() {
+    let _g = failpoints::test_guard();
+    let index_a = build_single(150, 3);
+    let index_b = build_single(150, 77);
+    let path = std::env::temp_dir().join(format!(
+        "leanvec-chaos-swap-{}.leanvec",
+        std::process::id()
+    ));
+    index_b.save(&path, &SnapshotMeta::default()).unwrap();
+
+    let engine = Engine::start(Arc::clone(&index_a), EngineConfig::default());
+    let q = vec![0.5f32; DIM];
+
+    failpoints::set("io_error_on_load", Failpoint::new(Action::Error));
+    match engine.swap_collection(DEFAULT_COLLECTION, &path) {
+        Err(EngineError::SwapFailed { collection, reason }) => {
+            assert_eq!(collection, DEFAULT_COLLECTION);
+            assert!(reason.contains("injected"), "{reason}");
+        }
+        other => panic!("expected SwapFailed, got {other:?}"),
+    }
+    // the failed swap left the old index serving
+    engine.submit(q.clone(), 5).unwrap();
+    assert!(engine.drain(1)[0].is_ok());
+
+    // disarmed, the same swap succeeds and the new data serves
+    failpoints::clear_all();
+    let report = engine.swap_collection(DEFAULT_COLLECTION, &path).unwrap();
+    assert!(report.drained);
+    engine.submit(q, 5).unwrap();
+    assert!(engine.drain(1)[0].is_ok());
+    engine.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn hot_swap_under_load_drops_no_queries() {
+    let _g = failpoints::test_guard();
+    let index_a = build_single(200, 3);
+    let index_b = build_single(200, 77);
+    let pid = std::process::id();
+    let path_a = std::env::temp_dir().join(format!("leanvec-chaos-soak-a-{pid}.leanvec"));
+    let path_b = std::env::temp_dir().join(format!("leanvec-chaos-soak-b-{pid}.leanvec"));
+    index_a.save(&path_a, &SnapshotMeta::default()).unwrap();
+    index_b.save(&path_b, &SnapshotMeta::default()).unwrap();
+
+    let engine = Engine::start(
+        index_a,
+        EngineConfig {
+            workers: 2,
+            ..EngineConfig::default()
+        },
+    );
+    let submitted = AtomicUsize::new(0);
+    let mut swaps = 0usize;
+    std::thread::scope(|scope| {
+        for t in 0..2u64 {
+            let engine = &engine;
+            let submitted = &submitted;
+            scope.spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..150 {
+                    let q: Vec<f32> = (0..DIM).map(|_| rng.gaussian_f32()).collect();
+                    engine.submit(q, 5).unwrap();
+                    submitted.fetch_add(1, Ordering::Relaxed);
+                    if submitted.load(Ordering::Relaxed) % 16 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        // swap back and forth while the submitters hammer the engine
+        for i in 0..6 {
+            let next = if i % 2 == 0 { &path_b } else { &path_a };
+            let report = engine
+                .swap_collection(DEFAULT_COLLECTION, next)
+                .unwrap_or_else(|e| panic!("swap {i} failed: {e}"));
+            assert_eq!(report.shards, 1);
+            swaps += 1;
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
+    assert_eq!(swaps, 6);
+
+    let n = submitted.load(Ordering::Relaxed);
+    let responses = engine.drain(n);
+    assert_eq!(responses.len(), n, "hot-swap dropped queries: {} of {n}", responses.len());
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "a query resolved more than once");
+    for r in &responses {
+        assert!(r.is_ok(), "swap must not fail queries: {:?}", r.error);
+        assert_eq!(r.ids.len(), 5, "every answer is complete");
+    }
+    let adm = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+    assert_eq!(adm.inflight.load(Ordering::Acquire), 0);
+    engine.shutdown();
+    std::fs::remove_file(&path_a).ok();
+    std::fs::remove_file(&path_b).ok();
+}
+
+#[test]
+fn every_query_resolves_exactly_once_under_a_fault_mix() {
+    let _g = failpoints::test_guard();
+    let engine = sharded_engine(240, 2, 2);
+
+    // a stalling shard AND an intermittently panicking shard at once;
+    // the panic budget runs dry mid-storm so late queries see a
+    // healthy index again
+    failpoints::set("slow_shard", Failpoint::new(Action::Sleep(3)).on_shard(0));
+    failpoints::set(
+        "panic_shard",
+        Failpoint::new(Action::Panic).on_shard(1).times(20),
+    );
+
+    let mut rng = Rng::new(5);
+    let total = 60usize;
+    for i in 0..total {
+        let q: Vec<f32> = (0..DIM).map(|_| rng.gaussian_f32()).collect();
+        let spec = match i % 4 {
+            0 => QuerySpec::top_k(5),
+            1 => QuerySpec::top_k(5).with_timeout_ms(10),
+            2 => QuerySpec::top_k(5).with_timeout_ms(0),
+            _ => QuerySpec::top_k(5).with_timeout_ms(0).with_allow_partial(),
+        };
+        engine.submit_spec(q, spec).unwrap();
+    }
+    let t0 = Instant::now();
+    let responses = engine.drain(total);
+    assert_eq!(
+        responses.len(),
+        total,
+        "every submitted query resolves exactly once under faults"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "fault mix must not wedge the drain"
+    );
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), total, "no duplicate resolutions");
+    // the mix produced each outcome class at least once
+    assert!(responses.iter().any(|r| r.is_ok()), "some queries succeed");
+    assert!(
+        responses
+            .iter()
+            .any(|r| r.error == Some(EngineError::DeadlineExceeded)),
+        "0 ms deadlines surface as typed errors"
+    );
+    assert!(
+        responses.iter().any(|r| r.is_ok() && r.partial),
+        "allow_partial deadlines surface as partials"
+    );
+    assert!(
+        responses.iter().any(|r| r.degraded),
+        "the panicking shard surfaced as degradation"
+    );
+    let adm = engine.collection(DEFAULT_COLLECTION).unwrap().admission();
+    assert_eq!(adm.inflight.load(Ordering::Acquire), 0, "no slot leaked");
+    failpoints::clear_all();
+    engine.shutdown();
+}

@@ -299,6 +299,26 @@ fn lint_println_outside_cli() {
 }
 
 #[test]
+fn lint_unbounded_wait_on_request_loop() {
+    let bad = "fn f(rx: &std::sync::mpsc::Receiver<u32>) {\n    let _ = rx.recv();\n}\n";
+    assert_eq!(
+        codes("coordinator/engine.rs", bad),
+        vec!["serve-path-unbounded-wait"]
+    );
+    // a DEADLINE: justification on or immediately above the line quiets it
+    let justified = "fn f(rx: &std::sync::mpsc::Receiver<u32>) {\n    // DEADLINE: idle state; shutdown closes the sender.\n    let _ = rx.recv();\n}\n";
+    assert!(codes("coordinator/engine.rs", justified).is_empty());
+    // timeout-aware forms need no annotation
+    let timed = "fn f(rx: &std::sync::mpsc::Receiver<u32>, d: std::time::Duration) {\n    let _ = rx.recv_timeout(d);\n}\n";
+    assert!(codes("coordinator/engine.rs", timed).is_empty());
+    // Path::join takes an argument — only zero-arg thread joins match
+    let path_join = "fn f(p: &std::path::Path) -> std::path::PathBuf {\n    p.join(\"manifest.json\")\n}\n";
+    assert!(codes("shard/manifest.rs", path_join).is_empty());
+    // the rule polices the request loop only, not background modules
+    assert!(codes("util/threadpool.rs", bad).is_empty());
+}
+
+#[test]
 fn lint_allowlist_parses_and_matches() {
     let allow = Allowlist::parse(
         "# comment line\n\nprintln-outside-cli experiments/harness.rs prints tables by design\n",

@@ -331,12 +331,13 @@ fn multi_tenant_churn_soak_across_collections() {
     assert_eq!(ingest.inserts, n_rounds);
     assert!(ingest.deletes >= deleted.len() - 5, "most deletes applied");
     let b = engine.collection("tenant-b").expect("registered").clone();
+    let bix = b.index();
     let deleted_set: std::collections::HashSet<u32> =
-        deleted.iter().copied().filter(|id| !b.index.contains(*id)).collect();
+        deleted.iter().copied().filter(|id| !bix.contains(*id)).collect();
     // post-quiesce searches still work and never serve a tombstoned id
     for v in ds_b.test_queries.iter().take(20) {
         let q = Query::new(v).k(10).window(100);
-        let r = b.index.search_scatter(&b.index.model().project_query(v), &q);
+        let r = bix.search_scatter(&bix.model().project_query(v), &q);
         for id in &r.ids {
             assert!(!deleted_set.contains(id), "tombstoned id {id} served");
         }
